@@ -1,0 +1,68 @@
+//! Cache format tour (paper Appendix D.1): build a small cache under each
+//! probability codec, inspect storage cost and quantization error, and show
+//! the byte-level slot layout.
+//!
+//! ```sh
+//! cargo run --release --example cache_inspect
+//! ```
+
+use anyhow::Result;
+use rskd::cache::quant::{self, ProbCodec};
+use rskd::cache::{CacheReader, CacheWriter, SparseTarget};
+use rskd::report::Report;
+use rskd::sampling::{random_sampling, topk};
+use rskd::sampling::zipf::zipf;
+use rskd::util::rng::Pcg;
+
+fn main() -> Result<()> {
+    let mut report = Report::new("cache_inspect", "Sparse-logit cache internals (Appendix D.1)");
+
+    report.line("--- slot layout: 24 bits = 17-bit token id + 7-bit probability ---");
+    let slot = quant::pack_slot(99_999, 77);
+    report.line(format!("pack(id=99999, code=77) -> bytes {slot:?} -> {:?}", quant::unpack_slot(slot)));
+
+    let p = zipf(512, 1.0);
+    let mut rng = Pcg::new(0);
+    let t_topk = topk(&p, 32, false);
+    let t_rs = random_sampling(&p, 50, 1.0, &mut rng);
+
+    report.line("--- quantization error per codec (L1 of decode vs original) ---");
+    let mut rows = Vec::new();
+    for (name, target, codec) in [
+        ("Top-32 / interval", &t_topk, ProbCodec::Interval),
+        ("Top-32 / ratio (sorted)", &t_topk, ProbCodec::Ratio),
+        ("RS-50 / count (exact)", &t_rs, ProbCodec::Count { rounds: 50 }),
+    ] {
+        let err = quant::roundtrip_l1(&target.ids, &target.probs, codec);
+        rows.push(vec![name.to_string(), format!("{} slots", target.k()), format!("{err:.5}")]);
+    }
+    report.table(&["codec", "size", "roundtrip L1"], &rows);
+
+    report.line("--- on-disk shards via the async ring-buffer writer ---");
+    let dir = std::env::temp_dir().join("rskd-cache-inspect");
+    let _ = std::fs::remove_dir_all(&dir);
+    let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 512, 64)?;
+    let mut rng = Pcg::new(1);
+    let n_positions = 2048u64;
+    for pos in 0..n_positions {
+        w.push(pos, random_sampling(&p, 50, 1.0, &mut rng));
+    }
+    let stats = w.finish()?;
+    report.line(format!(
+        "{} positions -> {} shards, {} bytes ({:.1} B/position, {:.2} B/slot)",
+        stats.positions, stats.shards, stats.bytes,
+        stats.bytes as f64 / stats.positions as f64,
+        stats.bytes as f64 / stats.slots as f64
+    ));
+    let dense_bytes = n_positions as f64 * 512.0 * 4.0;
+    report.line(format!(
+        "vs dense fp32 distributions: {dense_bytes:.0} bytes -> {:.0}x compression",
+        dense_bytes / stats.bytes as f64
+    ));
+    let r = CacheReader::open(&dir)?;
+    let t = r.get(123).unwrap();
+    report.line(format!("position 123 decodes to {} tokens, mass {:.3}", t.k(), t.mass()));
+    let _ = std::fs::remove_dir_all(&dir);
+    report.finish();
+    Ok(())
+}

@@ -1,0 +1,77 @@
+//! Quickstart: load the AOT artifacts, initialize a teacher and a student,
+//! run one RS-KD training step end to end (teacher fwd -> L1 sampler ->
+//! sparse train step), and print the losses.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example quickstart
+//! ```
+
+use anyhow::Result;
+use rskd::model::ModelState;
+use rskd::runtime::{Engine, HostTensor};
+use rskd::util::rng::Pcg;
+
+fn main() -> Result<()> {
+    let engine = Engine::load(std::path::Path::new("artifacts/small"))?;
+    let m = engine.manifest();
+    let (b, s, v, k, n) = (m.batch, m.seq, m.vocab, m.k_slots, m.n_rounds);
+    println!("loaded config {:?}: batch {b}, seq {s}, vocab {v}", m.config);
+
+    let teacher = ModelState::init(&engine, "teacher", 0)?;
+    let mut student = ModelState::init(&engine, "student", 1)?;
+    println!("teacher {} params, student {} params", teacher.param_count(), student.param_count());
+
+    // a toy batch
+    let mut rng = Pcg::new(42);
+    let tokens: Vec<i32> = (0..b * s).map(|_| rng.below(v as u64) as i32).collect();
+    let labels: Vec<i32> = (0..b * s).map(|_| rng.below(v as u64) as i32).collect();
+    let toks_t = HostTensor::i32(tokens, &[b, s]);
+    let labels_t = HostTensor::i32(labels, &[b, s]);
+
+    // 1. teacher forward
+    let probs = engine.call("fwd_teacher", &[teacher.params_tensor(), toks_t.clone()])?.remove(0);
+
+    // 2. L1 Pallas importance sampler: 50 draws from q = p
+    let mut unif = vec![0.0f32; b * s * n];
+    rng.fill_f32(&mut unif);
+    let mut sampled = engine.call(
+        "sample_rs",
+        &[probs, HostTensor::f32(unif, &[b, s, n]), HostTensor::scalar_f32(1.0)],
+    )?;
+    let weights = sampled.remove(1);
+    let ids = sampled.remove(0);
+    println!("sampled sparse targets: {} slots/position", n);
+
+    // 3. student sparse-KD train step (pad N slots into the K-slot block)
+    let ids_i = ids.as_i32()?;
+    let w_f = weights.as_f32()?;
+    let mut idx = vec![0i32; b * s * k];
+    let mut val = vec![0.0f32; b * s * k];
+    for r in 0..b * s {
+        for j in 0..n.min(k) {
+            idx[r * k + j] = ids_i[r * n + j];
+            val[r * k + j] = w_f[r * n + j];
+        }
+    }
+    let [p, mm, vv, st] = student.opt_inputs();
+    let mut outs = engine.call(
+        "train_sparse_student",
+        &[
+            p, mm, vv, st,
+            HostTensor::scalar_f32(4e-4),
+            toks_t,
+            labels_t,
+            HostTensor::i32(idx, &[b, s, k]),
+            HostTensor::f32(val, &[b, s, k]),
+            HostTensor::scalar_f32(0.0),                 // alpha (CE weight)
+            HostTensor::f32(vec![0.0; b * s], &[b, s]),  // smoothing
+            HostTensor::scalar_f32(0.0),                 // ghost token off
+            HostTensor::f32(vec![1.0; b * s], &[b, s]),  // per-token LR scale
+        ],
+    )?;
+    student.absorb(&mut outs)?;
+    println!("one RS-KD step done: loss {:.4}, kd loss {:.4}, student step {}",
+             outs[0].scalar()?, outs[1].scalar()?, student.step);
+    println!("quickstart OK");
+    Ok(())
+}

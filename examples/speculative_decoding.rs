@@ -1,0 +1,86 @@
+//! Speculative decoding demo (paper §5 metric): train a small student
+//! quickly with RS-KD, then simulate the draft-verify loop against the
+//! teacher and compare with the analytic acceptance rate.
+//!
+//! ```sh
+//! make artifacts && cargo run --release --example speculative_decoding
+//! ```
+
+use anyhow::Result;
+use rskd::coordinator::{CacheKind, Pipeline, PipelineConfig, StudentMethod};
+use rskd::coordinator::trainer::SparseVariant;
+use rskd::report::Report;
+use rskd::runtime::HostTensor;
+use rskd::specdecode::{analytic_accept, simulate};
+use rskd::util::rng::Pcg;
+
+fn main() -> Result<()> {
+    let cfg = PipelineConfig {
+        target_tokens: 100_000,
+        teacher_steps: 150,
+        student_steps: 100,
+        eval_batches: 3,
+        work_dir: "target/specdemo".into(),
+        ..Default::default()
+    };
+    let pipe = Pipeline::prepare(cfg)?;
+    let m = pipe.engine.manifest();
+    let (b, s, v) = (m.batch, m.seq, m.vocab);
+
+    let (cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 50, temp: 1.0 }, "spec", 1)?;
+    let rs = StudentMethod::Sparse { variant: SparseVariant::Rs, alpha: 0.0, adaptive: None };
+    let (student, _, _) = pipe.run_student(&rs, Some(&cache), 3)?;
+    let (student_ce, _, _) = pipe.run_student(&StudentMethod::Ce, None, 3)?;
+
+    // gather aligned draft/target prob rows on an eval batch
+    let batch = pipe.eval_loader().next_batch_for_demo();
+    let toks = HostTensor::i32(batch.0, &[b, s]);
+    let t_rows = rows_of(&pipe, &pipe.teacher, &toks, v)?;
+
+    let mut report = Report::new("speculative_decoding", "Draft-verify simulation (paper §5 metric)");
+    let mut rows = Vec::new();
+    for (name, model) in [("RS-KD student", &student), ("CE student", &student_ce)] {
+        let d_rows = rows_of(&pipe, model, &toks, v)?;
+        let analytic: f64 = d_rows
+            .iter()
+            .zip(t_rows.iter())
+            .map(|(d, t)| analytic_accept(d, t))
+            .sum::<f64>()
+            / d_rows.len() as f64;
+        let mut rng = Pcg::new(7);
+        let sim = simulate(&d_rows, &t_rows, 4, &mut rng);
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.1}%", 100.0 * analytic),
+            format!("{:.1}%", 100.0 * sim.accept_rate()),
+            format!("{:.2}", sim.tokens_per_verify),
+        ]);
+    }
+    report.table(&["draft model", "analytic accept", "simulated accept", "tokens/verify"], &rows);
+    report.finish();
+    Ok(())
+}
+
+fn rows_of(
+    pipe: &Pipeline,
+    model: &rskd::model::ModelState,
+    toks: &HostTensor,
+    v: usize,
+) -> Result<Vec<Vec<f32>>> {
+    let probs = pipe
+        .engine
+        .call(&format!("fwd_{}", model.role), &[model.params_tensor(), toks.clone()])?
+        .remove(0);
+    Ok(probs.as_f32()?.chunks(v).map(|c| c.to_vec()).collect())
+}
+
+trait DemoLoader {
+    fn next_batch_for_demo(&self) -> (Vec<i32>, Vec<i32>);
+}
+
+impl DemoLoader for rskd::data::loader::Loader {
+    fn next_batch_for_demo(&self) -> (Vec<i32>, Vec<i32>) {
+        let b = self.iter_eval().next().expect("eval loader empty");
+        (b.tokens, b.labels)
+    }
+}

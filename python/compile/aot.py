@@ -1,0 +1,100 @@
+"""AOT export: lower every graph to HLO *text* + write manifest.json.
+
+HLO text (NOT `lowered.compile()` / proto `.serialize()`) is the interchange
+format: jax >= 0.5 emits HloModuleProtos with 64-bit instruction ids which the
+xla crate's xla_extension 0.5.1 rejects (`proto.id() <= INT_MAX`); the text
+parser reassigns ids and round-trips cleanly. See /opt/xla-example/README.md.
+
+Usage:  cd python && python -m compile.aot --config small --out ../artifacts
+"""
+
+import argparse
+import json
+import os
+import sys
+import time
+
+import jax
+from jax._src.lib import xla_client as xc
+
+from . import model
+from .configs import CONFIGS
+
+
+def to_hlo_text(lowered) -> str:
+    mlir_mod = lowered.compiler_ir("stablehlo")
+    comp = xc._xla.mlir.mlir_module_to_xla_computation(
+        str(mlir_mod), use_tuple_args=False, return_tuple=True
+    )
+    return comp.as_hlo_text()
+
+
+def _sds_json(sds):
+    dt = str(sds.dtype)
+    return {"shape": list(sds.shape), "dtype": {"float32": "f32", "int32": "i32"}[dt]}
+
+
+def export_config(cfg_name: str, out_root: str) -> None:
+    cfg = CONFIGS[cfg_name]
+    out_dir = os.path.join(out_root, cfg_name)
+    os.makedirs(out_dir, exist_ok=True)
+
+    all_graphs = {}
+    roles = {"teacher": cfg.teacher, **cfg.students}
+    for role, dims in roles.items():
+        all_graphs.update(model.make_graphs(cfg, role, dims))
+    all_graphs.update(model.make_sampler_graphs(cfg))
+
+    manifest = {
+        "config": cfg_name,
+        "batch": cfg.batch,
+        "seq": cfg.seq,
+        "vocab": cfg.vocab,
+        "k_slots": cfg.k_slots,
+        "n_rounds": cfg.n_rounds,
+        "roles": {
+            role: {
+                "d_model": dims.d_model,
+                "n_layers": dims.n_layers,
+                "n_heads": dims.n_heads,
+                "n_kv_heads": dims.n_kv_heads,
+                "d_ff": dims.d_ff,
+                "param_count": model.param_count(dims),
+            }
+            for role, dims in roles.items()
+        },
+        "graphs": {},
+    }
+
+    for name, (fn, args) in sorted(all_graphs.items()):
+        t0 = time.time()
+        lowered = jax.jit(fn).lower(*args)
+        text = to_hlo_text(lowered)
+        path = os.path.join(out_dir, f"{name}.hlo.txt")
+        with open(path, "w") as f:
+            f.write(text)
+        outs = jax.eval_shape(fn, *args)
+        if not isinstance(outs, (tuple, list)):
+            outs = (outs,)
+        manifest["graphs"][name] = {
+            "file": f"{name}.hlo.txt",
+            "args": [_sds_json(a) for a in args],
+            "outputs": [_sds_json(o) for o in outs],
+        }
+        print(f"  {name}: {len(text)} chars ({time.time() - t0:.1f}s)", flush=True)
+
+    with open(os.path.join(out_dir, "manifest.json"), "w") as f:
+        json.dump(manifest, f, indent=1)
+    print(f"wrote {out_dir}/manifest.json ({len(all_graphs)} graphs)")
+
+
+def main() -> None:
+    ap = argparse.ArgumentParser()
+    ap.add_argument("--config", default="small", choices=sorted(CONFIGS))
+    ap.add_argument("--out", default="../artifacts")
+    args = ap.parse_args()
+    export_config(args.config, args.out)
+
+
+if __name__ == "__main__":
+    main()

@@ -1,0 +1,88 @@
+"""Model / export configurations for the RS-KD reproduction.
+
+Dims are scaled to CPU-PJRT (see DESIGN.md §4): every claim under test is
+distribution-level, so we keep the LLaMA-style architecture (RMSNorm, SwiGLU,
+RoPE, GQA) but shrink widths. A config names a *teacher→student pair* plus the
+batch geometry shared by every exported graph.
+"""
+
+from dataclasses import dataclass, field
+from typing import Dict
+
+
+@dataclass(frozen=True)
+class ModelDims:
+    vocab: int
+    d_model: int
+    n_layers: int
+    n_heads: int
+    n_kv_heads: int
+    d_ff: int
+
+    @property
+    def d_head(self) -> int:
+        assert self.d_model % self.n_heads == 0
+        return self.d_model // self.n_heads
+
+    def param_count(self) -> int:
+        d, v, ff = self.d_model, self.vocab, self.d_ff
+        dh = self.d_head
+        per_layer = (
+            d  # attn norm
+            + d * self.n_heads * dh  # wq
+            + 2 * d * self.n_kv_heads * dh  # wk, wv
+            + self.n_heads * dh * d  # wo
+            + d  # ffn norm
+            + 3 * d * ff  # w1, w3, w2
+        )
+        return v * d + self.n_layers * per_layer + d + d * v  # emb + layers + final norm + head
+
+
+@dataclass(frozen=True)
+class ExportConfig:
+    name: str
+    teacher: ModelDims
+    students: Dict[str, ModelDims]  # role name -> dims ("student" is the main one)
+    batch: int = 8
+    seq: int = 64
+    k_slots: int = 64  # static sparse-target slot count (covers Top-K<=64 and N<=64 RS rounds)
+    n_rounds: int = 50  # RS sampling slots in the sampler graph
+    rope_theta: float = 10000.0
+
+    @property
+    def vocab(self) -> int:
+        return self.teacher.vocab
+
+
+def _dims(vocab, d, layers, heads, kv, ff) -> ModelDims:
+    return ModelDims(vocab=vocab, d_model=d, n_layers=layers, n_heads=heads,
+                     n_kv_heads=kv, d_ff=ff)
+
+
+V = 512
+
+CONFIGS: Dict[str, ExportConfig] = {
+    # main working config: "3B teacher -> 300M student" analogue
+    "small": ExportConfig(
+        name="small",
+        teacher=_dims(V, 128, 4, 4, 2, 256),
+        students={"student": _dims(V, 64, 2, 4, 2, 128)},
+    ),
+    # "8B teacher -> 3B student" analogue (Tables 7, 8)
+    "large": ExportConfig(
+        name="large",
+        teacher=_dims(V, 256, 4, 8, 4, 512),
+        students={"student": _dims(V, 128, 4, 4, 2, 256)},
+    ),
+    # Figure 4 student-size sweep (shared teacher = small's teacher)
+    "sizes": ExportConfig(
+        name="sizes",
+        teacher=_dims(V, 128, 4, 4, 2, 256),
+        students={
+            "s0": _dims(V, 32, 2, 2, 1, 64),
+            "s1": _dims(V, 48, 2, 2, 1, 96),
+            "s2": _dims(V, 64, 2, 4, 2, 128),
+            "s3": _dims(V, 96, 3, 4, 2, 192),
+        },
+    ),
+}

@@ -1,0 +1,108 @@
+"""Pure-jnp oracles for the Pallas kernels.
+
+These are the correctness ground truth: pytest + hypothesis assert the
+interpret-mode Pallas kernels match these (allclose), and the L2 `*_jnp`
+graph variants (used for the L1-vs-L2 perf ablation) call these directly.
+
+Shapes use R = number of rows (= batch * seq after flattening), V = vocab,
+K = sparse slots, N = sampling rounds.
+"""
+
+import jax
+import jax.numpy as jnp
+
+EPS = 1e-20
+
+
+def scatter_targets(idx: jnp.ndarray, val: jnp.ndarray, vocab: int) -> jnp.ndarray:
+    """Dense targets [R, V] from sparse (idx, val) [R, K]; duplicate ids add."""
+    r, _k = idx.shape
+    out = jnp.zeros((r, vocab), dtype=val.dtype)
+    return out.at[jnp.arange(r)[:, None], idx].add(val)
+
+
+def sparse_kld_ref(
+    logits: jnp.ndarray,  # [R, V] student logits
+    idx: jnp.ndarray,  # [R, K] int32 target token ids
+    val: jnp.ndarray,  # [R, K] target probabilities (slots with val=0 are padding)
+    smooth_c: jnp.ndarray,  # [R] uniform-smoothing constant added to every class
+    ghost_on: jnp.ndarray,  # [R] 0/1: add the ghost-token residual term (Appendix A.5)
+    weight: jnp.ndarray,  # [R] per-token loss scale (Table 9 adaptive LR)
+) -> jnp.ndarray:
+    """Generalized sparse softmax-KLD loss per row (paper Eq. 3 restricted to
+    the sparse support, Appendix A.4/A.5). Returns [R] losses."""
+    vocab = logits.shape[-1]
+    t = scatter_targets(idx, val, vocab) + smooth_c[:, None]
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    kld = jnp.sum(jnp.where(t > 0, t * (jnp.log(jnp.maximum(t, EPS)) - logp), 0.0), axis=-1)
+
+    # ghost token: one pseudo-class holding the residual mass for both sides
+    p = jax.nn.softmax(logits, axis=-1)
+    support = scatter_targets(idx, (val > 0).astype(val.dtype), vocab) > 0
+    s_t = jnp.sum(jnp.where(support, t, 0.0), axis=-1)
+    # residual student mass summed directly over non-support tokens: stable
+    # even when the support covers nearly all of the vocabulary
+    rt = jnp.maximum(1.0 - s_t, EPS)
+    rp = jnp.maximum(jnp.sum(jnp.where(support, 0.0, p), axis=-1), EPS)
+    ghost = rt * (jnp.log(rt) - jnp.log(rp))
+    return weight * (kld + ghost_on * ghost)
+
+
+def sparse_kld_grad_ref(logits, idx, val, smooth_c, ghost_on, weight, cotangent):
+    """Hand-derived gradient wrt logits (paper Appendix A.4 + A.5):
+        base:   (sum_t) * p_j - t_j
+        ghost:  + (1 - s_t)/(1 - s_p) * (p_j * 1{j in K} - s_p * p_j)
+    Returns [R, V]."""
+    vocab = logits.shape[-1]
+    t = scatter_targets(idx, val, vocab) + smooth_c[:, None]
+    p = jax.nn.softmax(logits, axis=-1)
+    sum_t = jnp.sum(t, axis=-1, keepdims=True)
+    g = sum_t * p - t
+
+    support = scatter_targets(idx, (val > 0).astype(val.dtype), vocab) > 0
+    s_t = jnp.sum(jnp.where(support, t, 0.0), axis=-1, keepdims=True)
+    s_p = jnp.sum(jnp.where(support, p, 0.0), axis=-1, keepdims=True)
+    rp = jnp.maximum(jnp.sum(jnp.where(support, 0.0, p), axis=-1, keepdims=True), EPS)
+    ratio = jnp.maximum(1.0 - s_t, EPS) / rp
+    g_ghost = ratio * (p * support.astype(p.dtype) - s_p * p)
+    g = g + ghost_on[:, None] * g_ghost
+    return g * (weight * cotangent)[:, None]
+
+
+def sample_rs_ref(probs: jnp.ndarray, unif: jnp.ndarray, temp: jnp.ndarray):
+    """Importance sampling from proposal q ∝ p^temp via inverse-transform
+    sampling (paper §3.4 + Appendix K). Returns (ids [R,N] int32,
+    weights [R,N] f32) with per-row weights summing to 1; duplicate draws keep
+    separate slots and merge when scattered."""
+    vocab = probs.shape[-1]
+    q = jnp.power(jnp.maximum(probs, EPS), temp[:, None])
+    q = q / jnp.sum(q, axis=-1, keepdims=True)
+    cq = jnp.cumsum(q, axis=-1)
+    # searchsorted-right, branch-free: id = #{v : u > cq_v}
+    ids = jnp.sum((unif[:, :, None] > cq[:, None, :]).astype(jnp.int32), axis=-1)
+    ids = jnp.clip(ids, 0, vocab - 1).astype(jnp.int32)
+    p_at = jnp.take_along_axis(probs, ids, axis=-1)
+    q_at = jnp.take_along_axis(q, ids, axis=-1)
+    ratio = p_at / jnp.maximum(q_at, EPS)
+    weights = ratio / jnp.maximum(jnp.sum(ratio, axis=-1, keepdims=True), EPS)
+    return ids, weights.astype(probs.dtype)
+
+
+def dense_losses_ref(logits, tprobs, kind: str):
+    """Dense-target losses for the Table 12 ablation. Returns [R]."""
+    logp = jax.nn.log_softmax(logits, axis=-1)
+    p = jnp.exp(logp)
+    t = tprobs
+    if kind == "kld":  # forward KLD
+        return jnp.sum(jnp.where(t > 0, t * (jnp.log(jnp.maximum(t, EPS)) - logp), 0.0), axis=-1)
+    if kind == "rkl":  # reverse KLD
+        return jnp.sum(p * (logp - jnp.log(jnp.maximum(t, EPS))), axis=-1)
+    if kind == "frkl":
+        return 0.5 * dense_losses_ref(logits, tprobs, "kld") + 0.5 * dense_losses_ref(
+            logits, tprobs, "rkl"
+        )
+    if kind == "mse":
+        return jnp.sum((p - t) ** 2, axis=-1) * t.shape[-1]
+    if kind == "l1":
+        return jnp.sum(jnp.abs(p - t), axis=-1) * t.shape[-1]
+    raise ValueError(kind)

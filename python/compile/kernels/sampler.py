@@ -1,0 +1,73 @@
+"""L1 Pallas kernel: inverse-transform importance sampler over the vocab axis.
+
+Implements the paper's Random Sampling KD draw (§3.4 + Appendix K): sample N
+tokens per row from the proposal q ∝ p^temp, weight each draw by the
+likelihood ratio p/q, normalize. For temp=1 this degenerates to counts/N
+exactly (ratio = 1), matching the paper's pseudocode.
+
+Formulated branch-free for the VPU: cumsum over the vocab row, then
+searchsorted of the N uniforms as a compare-and-sum over lane tiles rather
+than a serial binary search. interpret=True on CPU (see sparse_kld.py).
+"""
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-20
+
+
+def _sampler_kernel(probs_ref, unif_ref, temp_ref, ids_ref, w_ref):
+    p = probs_ref[...]  # [RB, V]
+    u = unif_ref[...]  # [RB, N]
+    t = temp_ref[...]  # [RB]
+    vocab = p.shape[-1]
+
+    q = jnp.power(jnp.maximum(p, EPS), t[:, None])
+    q = q / jnp.sum(q, axis=-1, keepdims=True)
+    cq = jnp.cumsum(q, axis=-1)
+
+    # searchsorted-right: id = #{v : u > cq_v}; branch-free compare-and-sum
+    ids = jnp.sum((u[:, :, None] > cq[:, None, :]).astype(jnp.int32), axis=-1)
+    ids = jnp.clip(ids, 0, vocab - 1).astype(jnp.int32)
+
+    p_at = jnp.take_along_axis(p, ids, axis=-1)
+    q_at = jnp.take_along_axis(q, ids, axis=-1)
+    ratio = p_at / jnp.maximum(q_at, EPS)
+    w = ratio / jnp.maximum(jnp.sum(ratio, axis=-1, keepdims=True), EPS)
+
+    ids_ref[...] = ids
+    w_ref[...] = w.astype(p.dtype)
+
+
+def _block_rows(r: int) -> int:
+    for rb in (64, 32, 16, 8, 4, 2, 1):
+        if r % rb == 0:
+            return rb
+    return 1
+
+
+def sample_rs(probs, unif, temp):
+    """[R,V] probs, [R,N] uniforms, [R] temperature -> (ids [R,N] i32, w [R,N])."""
+    r, v = probs.shape
+    n = unif.shape[-1]
+    rb = _block_rows(r)
+    ids, w = pl.pallas_call(
+        _sampler_kernel,
+        grid=(r // rb,),
+        in_specs=[
+            pl.BlockSpec((rb, v), lambda i: (i, 0)),
+            pl.BlockSpec((rb, n), lambda i: (i, 0)),
+            pl.BlockSpec((rb,), lambda i: (i,)),
+        ],
+        out_specs=[
+            pl.BlockSpec((rb, n), lambda i: (i, 0)),
+            pl.BlockSpec((rb, n), lambda i: (i, 0)),
+        ],
+        out_shape=[
+            jax.ShapeDtypeStruct((r, n), jnp.int32),
+            jax.ShapeDtypeStruct((r, n), probs.dtype),
+        ],
+        interpret=True,
+    )(probs, unif, temp)
+    return ids, w

@@ -1,0 +1,146 @@
+"""L1 Pallas kernel: fused sparse softmax-KLD loss with hand-derived backward.
+
+This is the paper's compute hot-spot (Appendix D.2: "Manual backward and
+forward for the softmax KLD needed to be implemented"). The kernel fuses:
+
+    scatter(idx, val) -> dense target  +  log-softmax  +  generalized KLD
+    (+ optional uniform smoothing constant, + optional ghost-token residual)
+
+into a single pass over the vocabulary axis, never materializing the dense
+[R, V] target in HBM. The backward kernel emits the paper's closed-form
+gradient (Appendix A.4/A.5):
+
+    base:   g_j = (sum_i t_i) * p_j - t_j
+    ghost: +      (1 - s_t)/(1 - s_p) * (p_j * 1{j in support} - s_p * p_j)
+
+TPU mapping (DESIGN.md §6): grid over row-tiles; each grid step holds one
+row-block of logits plus the K-slot sparse target in VMEM. On CPU we must run
+interpret=True (real lowering emits a Mosaic custom-call the CPU PJRT plugin
+cannot execute); numerics are identical and validated against ref.py.
+"""
+
+import functools
+
+import jax
+import jax.numpy as jnp
+from jax.experimental import pallas as pl
+
+EPS = 1e-20
+
+
+def _dense_from_sparse(idx, val, vocab):
+    """In-VMEM scatter: one-hot contraction over the K slot axis.
+
+    [RB, K] x [RB, K, V] -> [RB, V]. On TPU this is a K-step VPU loop over
+    lane tiles; under interpret it is a plain einsum. Duplicate ids add."""
+    onehot = (idx[:, :, None] == jax.lax.iota(jnp.int32, vocab)[None, None, :]).astype(val.dtype)
+    dense = jnp.einsum("rk,rkv->rv", val, onehot)
+    support = jnp.einsum("rk,rkv->rv", (val > 0).astype(val.dtype), onehot) > 0
+    return dense, support
+
+
+def _fwd_kernel(logits_ref, idx_ref, val_ref, smooth_ref, ghost_ref, w_ref, loss_ref):
+    x = logits_ref[...]
+    vocab = x.shape[-1]
+    t, support = _dense_from_sparse(idx_ref[...], val_ref[...], vocab)
+    t = t + smooth_ref[...][:, None]
+
+    m = jnp.max(x, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(x - m), axis=-1, keepdims=True)) + m
+    logp = x - lse
+    kld = jnp.sum(jnp.where(t > 0, t * (jnp.log(jnp.maximum(t, EPS)) - logp), 0.0), axis=-1)
+
+    p = jnp.exp(logp)
+    s_t = jnp.sum(jnp.where(support, t, 0.0), axis=-1)
+    # residual student mass summed directly over non-support tokens (stable
+    # when the support covers nearly the whole vocab row)
+    rt = jnp.maximum(1.0 - s_t, EPS)
+    rp = jnp.maximum(jnp.sum(jnp.where(support, 0.0, p), axis=-1), EPS)
+    ghost = rt * (jnp.log(rt) - jnp.log(rp))
+
+    loss_ref[...] = w_ref[...] * (kld + ghost_ref[...] * ghost)
+
+
+def _bwd_kernel(logits_ref, idx_ref, val_ref, smooth_ref, ghost_ref, w_ref, ct_ref, gx_ref):
+    x = logits_ref[...]
+    vocab = x.shape[-1]
+    t, support = _dense_from_sparse(idx_ref[...], val_ref[...], vocab)
+    t = t + smooth_ref[...][:, None]
+
+    # shared recomputation with fwd: row max + logsumexp
+    m = jnp.max(x, axis=-1, keepdims=True)
+    lse = jnp.log(jnp.sum(jnp.exp(x - m), axis=-1, keepdims=True)) + m
+    p = jnp.exp(x - lse)
+
+    sum_t = jnp.sum(t, axis=-1, keepdims=True)
+    g = sum_t * p - t
+
+    s_t = jnp.sum(jnp.where(support, t, 0.0), axis=-1, keepdims=True)
+    s_p = jnp.sum(jnp.where(support, p, 0.0), axis=-1, keepdims=True)
+    rp = jnp.maximum(jnp.sum(jnp.where(support, 0.0, p), axis=-1, keepdims=True), EPS)
+    ratio = jnp.maximum(1.0 - s_t, EPS) / rp
+    g_ghost = ratio * (p * support.astype(p.dtype) - s_p * p)
+
+    g = g + ghost_ref[...][:, None] * g_ghost
+    gx_ref[...] = g * (w_ref[...] * ct_ref[...])[:, None]
+
+
+def _block_rows(r: int) -> int:
+    for rb in (64, 32, 16, 8, 4, 2, 1):
+        if r % rb == 0:
+            return rb
+    return 1
+
+
+def _row_specs(rb, v, k):
+    return [
+        pl.BlockSpec((rb, v), lambda i: (i, 0)),  # logits
+        pl.BlockSpec((rb, k), lambda i: (i, 0)),  # idx
+        pl.BlockSpec((rb, k), lambda i: (i, 0)),  # val
+        pl.BlockSpec((rb,), lambda i: (i,)),  # smooth
+        pl.BlockSpec((rb,), lambda i: (i,)),  # ghost
+        pl.BlockSpec((rb,), lambda i: (i,)),  # weight
+    ]
+
+
+@functools.partial(jax.custom_vjp, nondiff_argnums=())
+def sparse_kld(logits, idx, val, smooth_c, ghost_on, weight):
+    """Fused sparse softmax-KLD loss. [R,V],[R,K],[R,K],[R],[R],[R] -> [R]."""
+    return _sparse_kld_fwd(logits, idx, val, smooth_c, ghost_on, weight)[0]
+
+
+def _sparse_kld_fwd(logits, idx, val, smooth_c, ghost_on, weight):
+    r, v = logits.shape
+    k = idx.shape[-1]
+    rb = _block_rows(r)
+    loss = pl.pallas_call(
+        _fwd_kernel,
+        grid=(r // rb,),
+        in_specs=_row_specs(rb, v, k),
+        out_specs=pl.BlockSpec((rb,), lambda i: (i,)),
+        out_shape=jax.ShapeDtypeStruct((r,), logits.dtype),
+        interpret=True,
+    )(logits, idx, val, smooth_c, ghost_on, weight)
+    return loss, (logits, idx, val, smooth_c, ghost_on, weight)
+
+
+def _sparse_kld_bwd(res, ct):
+    logits, idx, val, smooth_c, ghost_on, weight = res
+    r, v = logits.shape
+    k = idx.shape[-1]
+    rb = _block_rows(r)
+    specs = _row_specs(rb, v, k)
+    specs.append(pl.BlockSpec((rb,), lambda i: (i,)))  # cotangent
+    gx = pl.pallas_call(
+        _bwd_kernel,
+        grid=(r // rb,),
+        in_specs=specs,
+        out_specs=pl.BlockSpec((rb, v), lambda i: (i, 0)),
+        out_shape=jax.ShapeDtypeStruct((r, v), logits.dtype),
+        interpret=True,
+    )(logits, idx, val, smooth_c, ghost_on, weight, ct)
+    # only the logits receive a gradient; sparse targets and knobs are data
+    return gx, None, None, None, None, None
+
+
+sparse_kld.defvjp(_sparse_kld_fwd, _sparse_kld_bwd)

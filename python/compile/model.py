@@ -1,0 +1,365 @@
+"""L2: LLaMA-style transformer + training/eval graphs in JAX.
+
+Every exported graph works on a *flat f32 parameter vector*; the unflatten is
+pure reshapes, free for XLA, and lets the rust coordinator manage exactly four
+arrays per model (params, adam m, adam v, step). The sparse-KD loss calls the
+L1 Pallas kernel (kernels/sparse_kld.py) so it lowers into the same HLO
+module; `*_jnp` variants call the pure-jnp oracle for the L1-vs-L2 perf
+ablation.
+
+Architecture (paper Appendix F): RMSNorm, SwiGLU FFN, rotary embeddings,
+grouped-query attention, untied output head, Adam(b1=0.9, b2=0.95) with
+global-norm gradient clipping at 1.0.
+"""
+
+from typing import Dict, List, Tuple
+
+import jax
+import jax.numpy as jnp
+
+from .configs import ExportConfig, ModelDims
+from .kernels import ref
+from .kernels.sparse_kld import sparse_kld
+from .kernels.sampler import sample_rs
+
+ADAM_B1 = 0.9
+ADAM_B2 = 0.95
+ADAM_EPS = 1e-8
+GRAD_CLIP = 1.0
+EPS = 1e-20
+
+
+# --------------------------------------------------------------------------
+# parameter layout
+# --------------------------------------------------------------------------
+
+def param_shapes(dims: ModelDims) -> List[Tuple[str, Tuple[int, ...]]]:
+    """Ordered (name, shape) list defining the flat layout."""
+    d, v, ff, dh = dims.d_model, dims.vocab, dims.d_ff, dims.d_head
+    shapes: List[Tuple[str, Tuple[int, ...]]] = [("tok_emb", (v, d))]
+    for i in range(dims.n_layers):
+        shapes += [
+            (f"l{i}.attn_norm", (d,)),
+            (f"l{i}.wq", (d, dims.n_heads * dh)),
+            (f"l{i}.wk", (d, dims.n_kv_heads * dh)),
+            (f"l{i}.wv", (d, dims.n_kv_heads * dh)),
+            (f"l{i}.wo", (dims.n_heads * dh, d)),
+            (f"l{i}.ffn_norm", (d,)),
+            (f"l{i}.w1", (d, ff)),
+            (f"l{i}.w3", (d, ff)),
+            (f"l{i}.w2", (ff, d)),
+        ]
+    shapes += [("final_norm", (d,)), ("out_head", (d, v))]
+    return shapes
+
+
+def param_count(dims: ModelDims) -> int:
+    total = 0
+    for _, s in param_shapes(dims):
+        n = 1
+        for x in s:
+            n *= x
+        total += n
+    return total
+
+
+def unflatten(flat: jnp.ndarray, dims: ModelDims) -> Dict[str, jnp.ndarray]:
+    params = {}
+    off = 0
+    for name, shape in param_shapes(dims):
+        n = 1
+        for x in shape:
+            n *= x
+        params[name] = flat[off : off + n].reshape(shape)
+        off += n
+    return params
+
+
+def init_flat(seed: jnp.ndarray, dims: ModelDims) -> jnp.ndarray:
+    """Initial flat parameter vector from an int32 seed scalar (a graph!)."""
+    key = jax.random.PRNGKey(seed.astype(jnp.uint32))
+    chunks = []
+    for name, shape in param_shapes(dims):
+        key, sub = jax.random.split(key)
+        if name.endswith("norm"):
+            chunks.append(jnp.ones(shape, jnp.float32).reshape(-1))
+        else:
+            std = 0.02
+            if name.endswith(("wo", "w2")):  # residual-branch scaling
+                std = 0.02 / jnp.sqrt(2.0 * dims.n_layers)
+            chunks.append((jax.random.normal(sub, shape, jnp.float32) * std).reshape(-1))
+    return jnp.concatenate(chunks)
+
+
+# --------------------------------------------------------------------------
+# forward
+# --------------------------------------------------------------------------
+
+def _rmsnorm(x, g):
+    return x * jax.lax.rsqrt(jnp.mean(x * x, axis=-1, keepdims=True) + 1e-5) * g
+
+
+def _rope(x, theta: float):
+    # x: [B, S, H, Dh] with Dh even
+    b, s, h, dh = x.shape
+    half = dh // 2
+    freqs = jnp.power(theta, -jnp.arange(0, half, dtype=jnp.float32) / half)
+    ang = jnp.arange(s, dtype=jnp.float32)[:, None] * freqs[None, :]  # [S, half]
+    cos = jnp.cos(ang)[None, :, None, :]
+    sin = jnp.sin(ang)[None, :, None, :]
+    x1, x2 = x[..., :half], x[..., half:]
+    return jnp.concatenate([x1 * cos - x2 * sin, x1 * sin + x2 * cos], axis=-1)
+
+
+def forward_logits(flat: jnp.ndarray, tokens: jnp.ndarray, dims: ModelDims,
+                   rope_theta: float = 10000.0) -> jnp.ndarray:
+    """[P], [B,S] int32 -> logits [B,S,V]."""
+    p = unflatten(flat, dims)
+    b, s = tokens.shape
+    h, kv, dh = dims.n_heads, dims.n_kv_heads, dims.d_head
+    x = p["tok_emb"][tokens]  # [B,S,D]
+    mask = jnp.tril(jnp.ones((s, s), jnp.float32))
+    neg = jnp.finfo(jnp.float32).min
+    for i in range(dims.n_layers):
+        xa = _rmsnorm(x, p[f"l{i}.attn_norm"])
+        q = (xa @ p[f"l{i}.wq"]).reshape(b, s, h, dh)
+        k = (xa @ p[f"l{i}.wk"]).reshape(b, s, kv, dh)
+        v = (xa @ p[f"l{i}.wv"]).reshape(b, s, kv, dh)
+        q, k = _rope(q, rope_theta), _rope(k, rope_theta)
+        rep = h // kv
+        k = jnp.repeat(k, rep, axis=2)
+        v = jnp.repeat(v, rep, axis=2)
+        att = jnp.einsum("bqhd,bkhd->bhqk", q, k) / jnp.sqrt(float(dh))
+        att = jnp.where(mask[None, None, :, :] > 0, att, neg)
+        att = jax.nn.softmax(att, axis=-1)
+        o = jnp.einsum("bhqk,bkhd->bqhd", att, v).reshape(b, s, h * dh)
+        x = x + o @ p[f"l{i}.wo"]
+        xf = _rmsnorm(x, p[f"l{i}.ffn_norm"])
+        x = x + (jax.nn.silu(xf @ p[f"l{i}.w1"]) * (xf @ p[f"l{i}.w3"])) @ p[f"l{i}.w2"]
+    x = _rmsnorm(x, p["final_norm"])
+    return x @ p["out_head"]
+
+
+def forward_probs(flat, tokens, dims, rope_theta=10000.0):
+    return jax.nn.softmax(forward_logits(flat, tokens, dims, rope_theta), axis=-1)
+
+
+# --------------------------------------------------------------------------
+# losses (per-token mean over B*S rows)
+# --------------------------------------------------------------------------
+
+def _ce_rows(logits2d, labels1d):
+    logp = jax.nn.log_softmax(logits2d, axis=-1)
+    return -jnp.take_along_axis(logp, labels1d[:, None], axis=-1)[:, 0]
+
+
+def loss_ce(flat, tokens, labels, dims, cfg):
+    logits = forward_logits(flat, tokens, dims, cfg.rope_theta)
+    rows = _ce_rows(logits.reshape(-1, dims.vocab), labels.reshape(-1))
+    return jnp.mean(rows)
+
+
+def loss_dense(flat, tokens, labels, tprobs, alpha, dims, cfg, kind="kld"):
+    logits = forward_logits(flat, tokens, dims, cfg.rope_theta).reshape(-1, dims.vocab)
+    labels1 = labels.reshape(-1)
+    kd = ref.dense_losses_ref(logits, tprobs.reshape(-1, dims.vocab), kind)
+    ce = _ce_rows(logits, labels1)
+    loss = alpha * jnp.mean(ce) + (1.0 - alpha) * jnp.mean(kd)
+    return loss, jnp.mean(kd)
+
+
+def loss_sparse(flat, tokens, labels, idx, val, alpha, smooth_c, ghost_on, lr_scale,
+                dims, cfg, use_pallas=True):
+    logits = forward_logits(flat, tokens, dims, cfg.rope_theta).reshape(-1, dims.vocab)
+    r = logits.shape[0]
+    labels1 = labels.reshape(-1)
+    smooth = smooth_c.reshape(-1)  # per-row smoothing residual [B*S]
+    ghost = jnp.broadcast_to(ghost_on, (r,))
+    w = lr_scale.reshape(-1)
+    fn = sparse_kld if use_pallas else ref.sparse_kld_ref
+    kd = fn(logits, idx.reshape(r, -1), val.reshape(r, -1), smooth, ghost, w)
+    ce = _ce_rows(logits, labels1) * w
+    loss = alpha * jnp.mean(ce) + (1.0 - alpha) * jnp.mean(kd)
+    return loss, jnp.mean(kd)
+
+
+# --------------------------------------------------------------------------
+# Adam-in-graph train step
+# --------------------------------------------------------------------------
+
+def adam_step(flat, m, v, step, lr, grads):
+    gnorm = jnp.sqrt(jnp.sum(grads * grads))
+    scale = jnp.minimum(1.0, GRAD_CLIP / jnp.maximum(gnorm, 1e-12))
+    g = grads * scale
+    step1 = step + 1
+    m1 = ADAM_B1 * m + (1 - ADAM_B1) * g
+    v1 = ADAM_B2 * v + (1 - ADAM_B2) * g * g
+    t = step1.astype(jnp.float32)
+    mhat = m1 / (1 - jnp.power(ADAM_B1, t))
+    vhat = v1 / (1 - jnp.power(ADAM_B2, t))
+    flat1 = flat - lr * mhat / (jnp.sqrt(vhat) + ADAM_EPS)
+    return flat1, m1, v1, step1
+
+
+def make_graphs(cfg: ExportConfig, role: str, dims: ModelDims):
+    """Returns {graph_name: (fn, arg_shape_dtype_structs)} for one model."""
+    b, s, v, k, n = cfg.batch, cfg.seq, dims.vocab, cfg.k_slots, cfg.n_rounds
+    pcount = param_count(dims)
+    f32, i32 = jnp.float32, jnp.int32
+
+    def sds(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    P = sds((pcount,))
+    TOK = sds((b, s), i32)
+    SCALAR = sds(())
+    STEP = sds((), i32)
+    TPROBS = sds((b, s, v))
+    IDX = sds((b, s, k), i32)
+    VAL = sds((b, s, k))
+    LRS = sds((b, s))
+
+    graphs = {}
+
+    def init_fn(seed):
+        return (init_flat(seed, dims),)
+
+    graphs[f"init_{role}"] = (init_fn, [STEP])
+
+    def fwd_fn(flat, tokens):
+        return (forward_probs(flat, tokens, dims, cfg.rope_theta),)
+
+    graphs[f"fwd_{role}"] = (fwd_fn, [P, TOK])
+
+    def next_probs_fn(flat, tokens, pos):
+        probs = forward_probs(flat, tokens, dims, cfg.rope_theta)
+        return (jax.lax.dynamic_slice_in_dim(probs, pos, 1, axis=1)[:, 0, :],)
+
+    graphs[f"next_probs_{role}"] = (next_probs_fn, [P, TOK, STEP])
+
+    def train_ce_fn(flat, m, vv, step, lr, tokens, labels):
+        loss, grads = jax.value_and_grad(loss_ce)(flat, tokens, labels, dims, cfg)
+        flat1, m1, v1, step1 = adam_step(flat, m, vv, step, lr, grads)
+        return flat1, m1, v1, step1, loss
+
+    graphs[f"train_ce_{role}"] = (train_ce_fn, [P, P, P, STEP, SCALAR, TOK, TOK])
+
+    def mk_train_dense(kind):
+        def fn(flat, m, vv, step, lr, tokens, labels, tprobs, alpha):
+            (loss, kd), grads = jax.value_and_grad(
+                lambda f: loss_dense(f, tokens, labels, tprobs, alpha, dims, cfg, kind),
+                has_aux=True,
+            )(flat)
+            flat1, m1, v1, step1 = adam_step(flat, m, vv, step, lr, grads)
+            return flat1, m1, v1, step1, loss, kd
+
+        return fn
+
+    graphs[f"train_dense_{role}"] = (
+        mk_train_dense("kld"), [P, P, P, STEP, SCALAR, TOK, TOK, TPROBS, SCALAR])
+    if role == "student":
+        for kind in ("rkl", "frkl", "mse", "l1"):
+            graphs[f"train_dense_{kind}_{role}"] = (
+                mk_train_dense(kind), [P, P, P, STEP, SCALAR, TOK, TOK, TPROBS, SCALAR])
+
+    def mk_train_sparse(use_pallas):
+        def fn(flat, m, vv, step, lr, tokens, labels, idx, val, alpha, smooth_c,
+               ghost_on, lr_scale):
+            (loss, kd), grads = jax.value_and_grad(
+                lambda f: loss_sparse(f, tokens, labels, idx, val, alpha, smooth_c,
+                                      ghost_on, lr_scale, dims, cfg, use_pallas),
+                has_aux=True,
+            )(flat)
+            flat1, m1, v1, step1 = adam_step(flat, m, vv, step, lr, grads)
+            return flat1, m1, v1, step1, loss, kd
+
+        return fn
+
+    sparse_args = [P, P, P, STEP, SCALAR, TOK, TOK, IDX, VAL, SCALAR, LRS, SCALAR, LRS]
+    graphs[f"train_sparse_{role}"] = (mk_train_sparse(True), sparse_args)
+    if role == "student":
+        graphs[f"train_sparse_jnp_{role}"] = (mk_train_sparse(False), sparse_args)
+
+    if role == "student":
+        # gradient-only graphs for Table 3
+        def grad_ce_fn(flat, tokens, labels):
+            loss, grads = jax.value_and_grad(loss_ce)(flat, tokens, labels, dims, cfg)
+            return grads, loss
+
+        graphs[f"grad_ce_{role}"] = (grad_ce_fn, [P, TOK, TOK])
+
+        def grad_dense_fn(flat, tokens, labels, tprobs, alpha):
+            (loss, _), grads = jax.value_and_grad(
+                lambda f: loss_dense(f, tokens, labels, tprobs, alpha, dims, cfg, "kld"),
+                has_aux=True,
+            )(flat)
+            return grads, loss
+
+        graphs[f"grad_dense_{role}"] = (grad_dense_fn, [P, TOK, TOK, TPROBS, SCALAR])
+
+        def grad_sparse_fn(flat, tokens, labels, idx, val, alpha, smooth_c, ghost_on,
+                           lr_scale):
+            (loss, _), grads = jax.value_and_grad(
+                lambda f: loss_sparse(f, tokens, labels, idx, val, alpha, smooth_c,
+                                      ghost_on, lr_scale, dims, cfg, True),
+                has_aux=True,
+            )(flat)
+            return grads, loss
+
+        graphs[f"grad_sparse_{role}"] = (
+            grad_sparse_fn, [P, TOK, TOK, IDX, VAL, SCALAR, LRS, SCALAR, LRS])
+
+    def eval_fn(flat, tokens, labels):
+        logits = forward_logits(flat, tokens, dims, cfg.rope_theta)
+        logits2 = logits.reshape(-1, v)
+        labels1 = labels.reshape(-1)
+        logp = jax.nn.log_softmax(logits2, axis=-1)
+        probs = jnp.exp(logp)
+        loss_sum = -jnp.sum(jnp.take_along_axis(logp, labels1[:, None], axis=-1))
+        conf = jnp.max(probs, axis=-1).reshape(b, s)
+        correct = (jnp.argmax(probs, axis=-1) == labels1).astype(f32).reshape(b, s)
+        label_prob = jnp.take_along_axis(probs, labels1[:, None], axis=-1)[:, 0].reshape(b, s)
+        return loss_sum, conf, correct, label_prob
+
+    graphs[f"eval_{role}"] = (eval_fn, [P, TOK, TOK])
+
+    def agree_fn(flat, tokens, tprobs):
+        sp_ = forward_probs(flat, tokens, dims, cfg.rope_theta)
+        accept = jnp.sum(jnp.minimum(sp_, tprobs), axis=-1)  # spec-decode accept prob
+        agree = (jnp.argmax(sp_, axis=-1) == jnp.argmax(tprobs, axis=-1)).astype(f32)
+        return accept, agree
+
+    graphs[f"agree_{role}"] = (agree_fn, [P, TOK, TPROBS])
+
+    return graphs
+
+
+def make_sampler_graphs(cfg: ExportConfig):
+    b, s, v, k, n = cfg.batch, cfg.seq, cfg.vocab, cfg.k_slots, cfg.n_rounds
+    f32, i32 = jnp.float32, jnp.int32
+
+    def sds(shape, dt=f32):
+        return jax.ShapeDtypeStruct(shape, dt)
+
+    graphs = {}
+
+    def sample_rs_fn(probs, unif, temp):
+        r = b * s
+        ids, w = sample_rs(probs.reshape(r, v), unif.reshape(r, n),
+                           jnp.broadcast_to(temp, (r,)))
+        return ids.reshape(b, s, n), w.reshape(b, s, n)
+
+    graphs["sample_rs"] = (sample_rs_fn, [sds((b, s, v)), sds((b, s, n)), sds(())])
+
+    def sample_topk_fn(probs):
+        # NOTE: jax.lax.top_k lowers to the `topk(..., largest=true)` HLO op,
+        # which xla_extension 0.5.1's text parser rejects; a full sort lowers
+        # to the classic variadic `sort` op and round-trips cleanly.
+        p2 = probs.reshape(-1, v)
+        order = jnp.argsort(-p2, axis=-1)[:, :k]
+        vals = jnp.take_along_axis(p2, order, axis=-1)
+        return order.astype(i32).reshape(b, s, k), vals.reshape(b, s, k)
+
+    graphs["sample_topk"] = (sample_topk_fn, [sds((b, s, v))])
+
+    return graphs

@@ -1,0 +1,87 @@
+"""Export smoke tests: manifest consistency + HLO text sanity.
+
+Runs against artifacts/small if present (`make artifacts`); otherwise exports
+a throwaway config into a temp dir.
+"""
+
+import json
+import os
+
+import jax
+import pytest
+
+from compile import aot, model
+from compile.configs import CONFIGS
+
+ART = os.path.join(os.path.dirname(__file__), "..", "..", "artifacts", "small")
+
+
+@pytest.fixture(scope="module")
+def manifest_dir(tmp_path_factory):
+    if os.path.exists(os.path.join(ART, "manifest.json")):
+        return ART
+    out = tmp_path_factory.mktemp("artifacts")
+    aot.export_config("small", str(out))
+    return os.path.join(str(out), "small")
+
+
+@pytest.fixture(scope="module")
+def manifest(manifest_dir):
+    with open(os.path.join(manifest_dir, "manifest.json")) as f:
+        return json.load(f)
+
+
+def test_manifest_lists_all_core_graphs(manifest):
+    names = set(manifest["graphs"])
+    for must in [
+        "init_teacher", "init_student", "fwd_teacher", "fwd_student",
+        "train_ce_student", "train_ce_teacher", "train_dense_student",
+        "train_sparse_student", "train_sparse_jnp_student",
+        "grad_ce_student", "grad_dense_student", "grad_sparse_student",
+        "eval_student", "eval_teacher", "agree_student",
+        "sample_rs", "sample_topk",
+        "train_dense_rkl_student", "train_dense_mse_student",
+        "train_dense_l1_student", "train_dense_frkl_student",
+    ]:
+        assert must in names, must
+
+
+def test_files_exist_and_parse(manifest, manifest_dir):
+    for name, g in manifest["graphs"].items():
+        path = os.path.join(manifest_dir, g["file"])
+        assert os.path.exists(path), path
+        text = open(path).read()
+        assert "ENTRY" in text and "ROOT" in text, name
+
+
+def test_param_counts_match_model(manifest):
+    cfg = CONFIGS["small"]
+    roles = {"teacher": cfg.teacher, **cfg.students}
+    for role, dims in roles.items():
+        assert manifest["roles"][role]["param_count"] == model.param_count(dims)
+
+
+def test_graph_arg_shapes(manifest):
+    cfg = CONFIGS["small"]
+    b, s, v = cfg.batch, cfg.seq, cfg.vocab
+    g = manifest["graphs"]["train_sparse_student"]
+    p = manifest["roles"]["student"]["param_count"]
+    shapes = [tuple(a["shape"]) for a in g["args"]]
+    assert shapes[0] == (p,) and shapes[1] == (p,) and shapes[2] == (p,)
+    assert shapes[5] == (b, s) and shapes[7] == (b, s, cfg.k_slots)
+    outs = [tuple(o["shape"]) for o in g["outputs"]]
+    assert outs[0] == (p,) and outs[4] == ()
+
+
+def test_sampler_graph_shapes(manifest):
+    cfg = CONFIGS["small"]
+    g = manifest["graphs"]["sample_rs"]
+    assert tuple(g["args"][0]["shape"]) == (cfg.batch, cfg.seq, cfg.vocab)
+    assert tuple(g["outputs"][0]["shape"]) == (cfg.batch, cfg.seq, cfg.n_rounds)
+    assert g["outputs"][0]["dtype"] == "i32"
+
+
+def test_dtypes_are_declared(manifest):
+    for name, g in manifest["graphs"].items():
+        for a in g["args"] + g["outputs"]:
+            assert a["dtype"] in ("f32", "i32"), name

@@ -1,0 +1,196 @@
+"""L2 correctness: model shapes, flat-param layout, training dynamics."""
+
+import numpy as np
+import jax
+import jax.numpy as jnp
+import pytest
+
+from compile import model
+from compile.configs import CONFIGS, ExportConfig, ModelDims
+
+TINY = ModelDims(vocab=64, d_model=32, n_layers=2, n_heads=2, n_kv_heads=1, d_ff=64)
+TINY_CFG = ExportConfig(name="tiny", teacher=TINY, students={"student": TINY},
+                        batch=2, seq=16, k_slots=8, n_rounds=8)
+
+
+def _init(seed=0):
+    return model.init_flat(jnp.int32(seed), TINY)
+
+
+class TestLayout:
+    def test_param_count_matches_configs(self):
+        for cfg in CONFIGS.values():
+            for dims in [cfg.teacher, *cfg.students.values()]:
+                assert model.param_count(dims) == dims.param_count()
+
+    def test_init_length(self):
+        flat = _init()
+        assert flat.shape == (model.param_count(TINY),)
+        assert bool(jnp.all(jnp.isfinite(flat)))
+
+    def test_unflatten_roundtrip(self):
+        flat = _init()
+        params = model.unflatten(flat, TINY)
+        names = [n for n, _ in model.param_shapes(TINY)]
+        assert list(params) == names
+        re_flat = jnp.concatenate([params[n].reshape(-1) for n in names])
+        np.testing.assert_array_equal(np.asarray(flat), np.asarray(re_flat))
+
+    def test_norms_init_to_one(self):
+        params = model.unflatten(_init(), TINY)
+        np.testing.assert_array_equal(np.asarray(params["l0.attn_norm"]), 1.0)
+        np.testing.assert_array_equal(np.asarray(params["final_norm"]), 1.0)
+
+    def test_different_seeds_differ(self):
+        assert not np.allclose(np.asarray(_init(0)), np.asarray(_init(1)))
+
+
+class TestForward:
+    def test_shapes_and_normalization(self):
+        flat = _init()
+        toks = jnp.zeros((2, 16), jnp.int32)
+        probs = model.forward_probs(flat, toks, TINY)
+        assert probs.shape == (2, 16, 64)
+        np.testing.assert_allclose(np.asarray(probs).sum(-1), 1.0, rtol=1e-5)
+
+    def test_causality(self):
+        """Changing a future token must not affect past positions."""
+        flat = _init()
+        rng = np.random.default_rng(0)
+        toks = jnp.array(rng.integers(0, 64, size=(1, 16)), jnp.int32)
+        toks2 = toks.at[0, 10].set((toks[0, 10] + 1) % 64)
+        a = model.forward_logits(flat, toks, TINY)
+        b = model.forward_logits(flat, toks2, TINY)
+        np.testing.assert_allclose(np.asarray(a)[0, :10], np.asarray(b)[0, :10],
+                                   rtol=1e-4, atol=1e-5)
+        assert not np.allclose(np.asarray(a)[0, 10:], np.asarray(b)[0, 10:])
+
+
+def _batch(rng, b=2, s=16, v=64):
+    toks = jnp.array(rng.integers(0, v, size=(b, s)), jnp.int32)
+    labels = jnp.array(rng.integers(0, v, size=(b, s)), jnp.int32)
+    return toks, labels
+
+
+class TestTraining:
+    def test_ce_loss_decreases(self):
+        graphs = model.make_graphs(TINY_CFG, "student", TINY)
+        train, _ = graphs["train_ce_student"]
+        rng = np.random.default_rng(0)
+        toks, labels = _batch(rng)
+        flat = _init()
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        step = jnp.int32(0)
+        first = None
+        fn = jax.jit(train)
+        for _ in range(30):
+            flat, m, v, step, loss = fn(flat, m, v, step, jnp.float32(1e-2), toks, labels)
+            if first is None:
+                first = float(loss)
+        assert float(loss) < first - 0.5
+
+    def test_sparse_pallas_equals_jnp_graph(self):
+        graphs = model.make_graphs(TINY_CFG, "student", TINY)
+        tp, _ = graphs["train_sparse_student"]
+        tj, _ = graphs["train_sparse_jnp_student"]
+        rng = np.random.default_rng(1)
+        toks, labels = _batch(rng)
+        k = TINY_CFG.k_slots
+        idx = jnp.array(rng.integers(0, 64, size=(2, 16, k)), jnp.int32)
+        raw = rng.random(size=(2, 16, k)).astype(np.float32)
+        val = jnp.array(raw / raw.sum(-1, keepdims=True), jnp.float32)
+        flat = _init()
+        m = jnp.zeros_like(flat)
+        v = jnp.zeros_like(flat)
+        args = (flat, m, v, jnp.int32(0), jnp.float32(1e-3), toks, labels, idx, val,
+                jnp.float32(0.0), jnp.zeros((2, 16), jnp.float32), jnp.float32(0.0),
+                jnp.ones((2, 16), jnp.float32))
+        out_p = tp(*args)
+        out_j = tj(*args)
+        for a, b in zip(out_p, out_j):
+            np.testing.assert_allclose(np.asarray(a), np.asarray(b), rtol=2e-4, atol=1e-6)
+
+    def test_fullkd_as_sparse_equals_dense(self):
+        """Feeding the complete distribution through the sparse path must match
+        the dense FullKD loss (sanity: sparse graph generalizes FullKD)."""
+        tiny = ModelDims(vocab=16, d_model=32, n_layers=1, n_heads=2, n_kv_heads=1, d_ff=32)
+        cfg = ExportConfig(name="t", teacher=tiny, students={"student": tiny},
+                           batch=2, seq=4, k_slots=16, n_rounds=8)
+        rng = np.random.default_rng(2)
+        toks = jnp.array(rng.integers(0, 16, size=(2, 4)), jnp.int32)
+        labels = jnp.array(rng.integers(0, 16, size=(2, 4)), jnp.int32)
+        tprobs = jax.nn.softmax(jnp.array(rng.normal(size=(2, 4, 16)), jnp.float32))
+        flat = model.init_flat(jnp.int32(0), tiny)
+        idx = jnp.broadcast_to(jnp.arange(16, dtype=jnp.int32), (2, 4, 16))
+        _, kd_sparse = model.loss_sparse(
+            flat, toks, labels, idx, tprobs, jnp.float32(0.0), jnp.zeros((2, 4), jnp.float32),
+            jnp.float32(0.0), jnp.ones((2, 4), jnp.float32), tiny, cfg)
+        _, kd_dense = model.loss_dense(
+            flat, toks, labels, tprobs, jnp.float32(0.0), tiny, cfg, "kld")
+        np.testing.assert_allclose(float(kd_sparse), float(kd_dense), rtol=1e-4)
+
+    def test_grad_clip(self):
+        g = jnp.full((10,), 100.0)
+        flat = jnp.zeros((10,))
+        m = jnp.zeros((10,))
+        v = jnp.zeros((10,))
+        _, m1, _, _ = model.adam_step(flat, m, v, jnp.int32(0), jnp.float32(1e-3), g)
+        # after clipping to norm 1, m = 0.1 * g_clipped
+        clipped = g / jnp.sqrt(jnp.sum(g * g))
+        np.testing.assert_allclose(np.asarray(m1), 0.1 * np.asarray(clipped), rtol=1e-5)
+
+    def test_adam_bias_correction_first_step(self):
+        g = jnp.full((4,), 0.5)
+        flat = jnp.zeros((4,))
+        out, _, _, step1 = model.adam_step(flat, jnp.zeros((4,)), jnp.zeros((4,)),
+                                           jnp.int32(0), jnp.float32(1e-3), g)
+        assert int(step1) == 1
+        # bias-corrected first step is ~ -lr * sign(g)
+        np.testing.assert_allclose(np.asarray(out), -1e-3, rtol=1e-3)
+
+
+class TestEvalGraphs:
+    def test_eval_outputs(self):
+        graphs = model.make_graphs(TINY_CFG, "student", TINY)
+        ev, _ = graphs["eval_student"]
+        rng = np.random.default_rng(3)
+        toks, labels = _batch(rng)
+        loss_sum, conf, correct, label_prob = ev(_init(), toks, labels)
+        assert conf.shape == (2, 16)
+        c = np.asarray(conf)
+        lp = np.asarray(label_prob)
+        assert (c >= lp - 1e-6).all()  # max prob >= prob of the label
+        assert ((np.asarray(correct) == 0) | (np.asarray(correct) == 1)).all()
+        assert float(loss_sum) > 0
+
+    def test_agree_bounds(self):
+        graphs = model.make_graphs(TINY_CFG, "student", TINY)
+        ag, _ = graphs["agree_student"]
+        rng = np.random.default_rng(4)
+        toks, _ = _batch(rng)
+        tprobs = jax.nn.softmax(jnp.array(rng.normal(size=(2, 16, 64)), jnp.float32))
+        accept, agree = ag(_init(), toks, tprobs)
+        a = np.asarray(accept)
+        assert (a > 0).all() and (a <= 1 + 1e-5).all()
+
+    def test_agree_with_self_is_one(self):
+        graphs = model.make_graphs(TINY_CFG, "student", TINY)
+        ag, _ = graphs["agree_student"]
+        rng = np.random.default_rng(5)
+        toks, _ = _batch(rng)
+        flat = _init()
+        tprobs = model.forward_probs(flat, toks, TINY)
+        accept, agree = ag(flat, toks, tprobs)
+        np.testing.assert_allclose(np.asarray(accept), 1.0, rtol=1e-5)
+        np.testing.assert_array_equal(np.asarray(agree), 1.0)
+
+    def test_next_probs_matches_fwd(self):
+        graphs = model.make_graphs(TINY_CFG, "student", TINY)
+        npf, _ = graphs["next_probs_student"]
+        rng = np.random.default_rng(6)
+        toks, _ = _batch(rng)
+        flat = _init()
+        probs = model.forward_probs(flat, toks, TINY)
+        out = npf(flat, toks, jnp.int32(5))[0]
+        np.testing.assert_allclose(np.asarray(out), np.asarray(probs)[:, 5, :], rtol=1e-5)

@@ -1,0 +1,71 @@
+//! Figure 2: synthetic examples.
+//!  2a — Zipf toy distribution: effective targets of Top-K / Naive Fix / RS
+//!       vs ground truth (head values + bias L1).
+//!  2b — Gaussian-cluster MLP calibration under CE/FullKD/Top-K/RS-KD.
+//!  2c — CIFAR-100-like toy image calibration (same protocol).
+
+use rskd::report::Report;
+use rskd::sampling::zipf::{averaged_effective_target, bias_l1, zipf};
+use rskd::sampling::Method;
+use rskd::toynn::train::train_teacher;
+use rskd::toynn::{train_toy, GaussianClasses, ToyImages, ToyMethod, ToyTrainConfig};
+
+fn fig2a(report: &mut Report) {
+    report.line("--- Fig 2a: Zipf toy distribution (head estimates + bias) ---");
+    let p = zipf(100_000, 1.0);
+    let methods = [
+        ("Ground Truth", None),
+        ("Top-K 20 (renorm)", Some(Method::TopK { k: 20, normalize: true })),
+        ("Naive Fix 20", Some(Method::NaiveFix { k: 20 })),
+        ("RS (22 samples)", Some(Method::RandomSampling { rounds: 22, temp: 1.0 })),
+    ];
+    let mut rows = Vec::new();
+    for (name, m) in methods {
+        let head = match m {
+            None => p[..6].to_vec(),
+            Some(m) => averaged_effective_target(&p, m, 400, 6, 0),
+        };
+        let bias = m.map(|m| bias_l1(&p, m, 400, 0));
+        let mut row = vec![name.to_string()];
+        row.extend(head.iter().map(|x| format!("{x:.4}")));
+        row.push(bias.map(|b| format!("{b:.4}")).unwrap_or_else(|| "0".into()));
+        rows.push(row);
+    }
+    report.table(&["series", "p1", "p2", "p3", "p4", "p5", "p6", "bias L1"], &rows);
+}
+
+fn toy_block(report: &mut Report, title: &str, dim: usize, classes: usize,
+             mut sample: impl FnMut(usize, &mut rskd::util::rng::Pcg) -> (Vec<f32>, Vec<u32>)) {
+    report.line(format!("--- {title} ---"));
+    let cfg = ToyTrainConfig { steps: 500, ..Default::default() };
+    let teacher = train_teacher(&mut sample, dim, classes, &cfg);
+    let mut rows = Vec::new();
+    for m in [
+        ToyMethod::Ce,
+        ToyMethod::FullKd,
+        ToyMethod::TopK { k: 7 },
+        ToyMethod::RandomSampling { rounds: 50 },
+    ] {
+        let res = train_toy(&mut sample, dim, classes, Some(&teacher), m, &cfg);
+        rows.push(vec![
+            m.name().to_string(),
+            format!("{:.1}", res.accuracy * 100.0),
+            format!("{:.1}", res.calibration.ece * 100.0),
+            format!("{:+.3}", res.calibration.mean_conf - res.calibration.accuracy),
+        ]);
+    }
+    report.table(&["method", "acc %", "ECE %", "overconfidence"], &rows);
+}
+
+fn main() {
+    let mut report = Report::new("fig2_synthetic", "Synthetic examples (paper Figure 2)");
+    fig2a(&mut report);
+    let gauss = GaussianClasses::new(128, 64, 1.5, 0);
+    toy_block(&mut report, "Fig 2b: Gaussian-cluster MLP calibration", 64, 128,
+              |b, r| gauss.batch(b, r));
+    let imgs = ToyImages::new(64, 8, 0);
+    let dim = imgs.dim();
+    toy_block(&mut report, "Fig 2c: toy image (CIFAR-100 stand-in) calibration", dim, 64,
+              |b, r| imgs.batch(b, 0.6, r));
+    report.finish();
+}

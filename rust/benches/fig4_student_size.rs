@@ -1,0 +1,66 @@
+//! Figure 4: downstream improvement of RS-KD over CE vs student size.
+//! Requires `artifacts/sizes` (4 student dims + shared teacher); run
+//! `cd python && python -m compile.aot --config sizes --out ../artifacts`.
+//! Expectation: the 0-shot gain over CE grows (or at least does not fall)
+//! with student size — the paper's contrast with Peng et al.'s Top-K drop.
+
+use rskd::coordinator::schedule::LrSchedule;
+use rskd::coordinator::trainer::{train_student, SparseVariant};
+use rskd::coordinator::{CacheKind, Pipeline, StudentMethod};
+use rskd::expt;
+use rskd::model::ModelState;
+use rskd::report::Report;
+
+fn main() {
+    if !expt::artifacts_exist("artifacts/sizes") {
+        println!("[skipped: artifacts/sizes missing — `make artifacts-sizes` or aot --config sizes]");
+        return;
+    }
+    let cfg = expt::config_for("artifacts/sizes", "fig4");
+    let steps = cfg.student_steps;
+    let lr = cfg.student_lr;
+    let pipe = Pipeline::prepare(cfg).unwrap();
+    let (cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "f4", 1).unwrap();
+
+    let mut report = Report::new("fig4_student_size", "Improvement vs student size (paper Figure 4)");
+    let mut rows = Vec::new();
+    let roles: Vec<String> = pipe
+        .engine
+        .manifest()
+        .roles
+        .keys()
+        .filter(|r| r.starts_with('s') && *r != "teacher")
+        .cloned()
+        .collect();
+    for role in roles {
+        let params = pipe.engine.manifest().role(&role).unwrap().param_count;
+        let mut scores = Vec::new();
+        for method in [
+            StudentMethod::Ce,
+            StudentMethod::Sparse { variant: SparseVariant::Rs, alpha: 0.0, adaptive: None },
+        ] {
+            let mut student = ModelState::init(&pipe.engine, &role, 3).unwrap();
+            let mut loader = pipe.train_loader(11);
+            train_student(
+                &pipe.engine,
+                &mut student,
+                &mut loader,
+                steps,
+                LrSchedule::paper_default(lr, steps),
+                &method,
+                Some(&cache),
+                Some(&pipe.teacher),
+            )
+            .unwrap();
+            scores.push(expt::zero_shot(&pipe, &student).unwrap());
+        }
+        rows.push(vec![
+            format!("{role} ({params} params)"),
+            format!("{:.1}", scores[0]),
+            format!("{:.1}", scores[1]),
+            format!("{:+.1}", scores[1] - scores[0]),
+        ]);
+    }
+    report.table(&["student", "CE 0-shot", "RS-KD 0-shot", "improvement"], &rows);
+    report.finish();
+}

@@ -1,0 +1,34 @@
+//! Figure 5 (+ Appendix C): unique tokens sampled vs sampling rounds on the
+//! Zipf synthetic teacher, with a log-log power-law fit. Expectation: almost
+//! perfectly linear in log-log (R^2 > 0.99).
+
+use rskd::metrics::powerlaw::fit_powerlaw;
+use rskd::report::Report;
+use rskd::sampling::rounds::{rounds_curve, rounds_for_unique};
+use rskd::sampling::zipf::zipf;
+
+fn main() {
+    let p = zipf(512, 1.0);
+    let rounds = [1usize, 2, 4, 8, 16, 32, 64, 128, 256, 512];
+    let curve = rounds_curve(&p, &rounds, 120, 0);
+
+    let mut report = Report::new("fig5_unique_tokens", "Unique tokens vs sampling rounds (paper Figure 5)");
+    let rows: Vec<Vec<String>> = curve
+        .iter()
+        .map(|(n, u)| vec![format!("{n}"), format!("{u:.2}")])
+        .collect();
+    report.table(&["sampling rounds", "avg unique tokens"], &rows);
+
+    let pts: Vec<(f64, f64)> = curve.iter().map(|&(n, u)| (n as f64, u)).collect();
+    let fit = fit_powerlaw(&pts);
+    report.line(format!(
+        "power-law fit: unique ≈ {:.2} * rounds^{:.3}  (R² = {:.4})",
+        fit.scale, fit.exponent, fit.r2
+    ));
+
+    for target in [12.0f64, 25.0, 50.0] {
+        let n = rounds_for_unique(&p, target, 60, 1);
+        report.line(format!("rounds for ~{target} unique tokens: {n}"));
+    }
+    report.finish();
+}

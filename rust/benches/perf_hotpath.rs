@@ -1,0 +1,144 @@
+//! Perf harness (EXPERIMENTS.md §Perf): per-layer hot-path timings.
+//!  L1 vs L2 — Pallas sparse-KLD train step vs pure-jnp variant (identical
+//!             numerics, different lowering).
+//!  L3       — cache block assembly, RS sampling (pure rust vs graph),
+//!             host<->device transfer share from engine stats.
+
+use std::time::Duration;
+
+use rskd::cache::CacheReader;
+use rskd::coordinator::trainer::{assemble_sparse_block, SparseVariant};
+use rskd::coordinator::{CacheKind, Pipeline};
+use rskd::expt;
+use rskd::report::Report;
+use rskd::runtime::HostTensor;
+use rskd::util::bench::bench;
+use rskd::util::rng::Pcg;
+
+fn main() {
+    if !expt::artifacts_exist("artifacts/small") {
+        println!("[skipped: artifacts/small missing]");
+        return;
+    }
+    let mut cfg = expt::config_for("artifacts/small", "perf");
+    cfg.teacher_steps = 40; // perf pass does not need a good teacher
+    let pipe = Pipeline::prepare(cfg).unwrap();
+    let m = pipe.engine.manifest();
+    let (b, s, v, k) = (m.batch, m.seq, m.vocab, m.k_slots);
+    let (cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 50, temp: 1.0 }, "perf", 1).unwrap();
+
+    let mut report = Report::new("perf_hotpath", "Hot-path timings per layer");
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let budget = Duration::from_millis(2500);
+
+    // --- L3: batch assembly from cache (host) ---
+    let mut loader = pipe.packed_loader(11, false, 0);
+    let batch = loader.next_batch();
+    let st = bench(2, budget, || {
+        let blk = assemble_sparse_block(&cache, &batch, v, k, SparseVariant::Rs, None);
+        std::hint::black_box(blk.val.len());
+    });
+    rows.push(vec!["L3 cache->block assembly".into(), format!("{:.3} ms", st.per_iter_ms())]);
+
+    // --- L3: pure-rust RS sampling of one [B,S] block of teacher rows ---
+    let probs = pipe
+        .engine
+        .call("fwd_teacher", &[pipe.teacher.params_tensor(),
+                               HostTensor::i32(batch.tokens.clone(), &[b, s])])
+        .unwrap()
+        .remove(0);
+    let pv = probs.as_f32().unwrap().to_vec();
+    let st = bench(1, budget, || {
+        let mut rng = Pcg::new(1);
+        let mut acc = 0usize;
+        for row in pv.chunks(v) {
+            acc += rskd::sampling::random_sampling(row, 50, 1.0, &mut rng).k();
+        }
+        std::hint::black_box(acc);
+    });
+    rows.push(vec!["L3 rust RS sampler (B*S rows)".into(), format!("{:.3} ms", st.per_iter_ms())]);
+
+    // --- L1 sampler graph for the same block ---
+    pipe.engine.warmup(&["sample_rs", "train_sparse_student", "train_sparse_jnp_student"]).unwrap();
+    let n = m.n_rounds;
+    let mut unif = vec![0.0f32; b * s * n];
+    Pcg::new(2).fill_f32(&mut unif);
+    let st = bench(2, budget, || {
+        let out = pipe
+            .engine
+            .call("sample_rs", &[probs.clone(), HostTensor::f32(unif.clone(), &[b, s, n]),
+                                 HostTensor::scalar_f32(1.0)])
+            .unwrap();
+        std::hint::black_box(out.len());
+    });
+    rows.push(vec!["L1 sample_rs graph (incl. transfer)".into(), format!("{:.3} ms", st.per_iter_ms())]);
+
+    // --- L1 vs L2: pallas vs jnp sparse train step ---
+    let student = rskd::model::ModelState::init(&pipe.engine, "student", 1).unwrap();
+    let blk = assemble_sparse_block(&cache, &batch, v, k, SparseVariant::Rs, None);
+    let mk_args = || {
+        let [p, mm, vv, stp] = student.opt_inputs();
+        vec![
+            p, mm, vv, stp,
+            HostTensor::scalar_f32(1e-4),
+            HostTensor::i32(batch.tokens.clone(), &[b, s]),
+            HostTensor::i32(batch.labels.clone(), &[b, s]),
+            HostTensor::i32(blk.idx.clone(), &[b, s, k]),
+            HostTensor::f32(blk.val.clone(), &[b, s, k]),
+            HostTensor::scalar_f32(0.0),
+            HostTensor::f32(blk.smooth.clone(), &[b, s]),
+            HostTensor::scalar_f32(0.0),
+            HostTensor::f32(blk.lr_scale.clone(), &[b, s]),
+        ]
+    };
+    for (label, graph) in [
+        ("L1 train_sparse (pallas kernel)", "train_sparse_student"),
+        ("L2 train_sparse_jnp (pure jnp)", "train_sparse_jnp_student"),
+    ] {
+        let args = mk_args();
+        let st = bench(2, budget, || {
+            let out = pipe.engine.call(graph, &args).unwrap();
+            std::hint::black_box(out.len());
+        });
+        rows.push(vec![label.into(), format!("{:.3} ms", st.per_iter_ms())]);
+    }
+
+    // --- baseline steps for context ---
+    for (label, graph, extra) in [
+        ("train_ce step", "train_ce_student", 0usize),
+        ("fwd_teacher", "fwd_teacher", 1),
+    ] {
+        let st = match extra {
+            0 => {
+                let [p, mm, vv, stp] = student.opt_inputs();
+                let args = vec![p, mm, vv, stp, HostTensor::scalar_f32(1e-4),
+                                HostTensor::i32(batch.tokens.clone(), &[b, s]),
+                                HostTensor::i32(batch.labels.clone(), &[b, s])];
+                bench(2, budget, || {
+                    std::hint::black_box(pipe.engine.call(graph, &args).unwrap().len());
+                })
+            }
+            _ => {
+                let args = vec![pipe.teacher.params_tensor(),
+                                HostTensor::i32(batch.tokens.clone(), &[b, s])];
+                bench(2, budget, || {
+                    std::hint::black_box(pipe.engine.call(graph, &args).unwrap().len());
+                })
+            }
+        };
+        rows.push(vec![label.into(), format!("{:.3} ms", st.per_iter_ms())]);
+    }
+
+    report.table(&["hot path", "median"], &rows);
+    let es = pipe.engine.stats();
+    report.line(format!(
+        "engine totals: {} execs, exec {:.2}s, transfer {:.2}s ({:.0}% of exec+transfer)",
+        es.executions,
+        es.execute_time.as_secs_f64(),
+        es.transfer_time.as_secs_f64(),
+        100.0 * es.transfer_time.as_secs_f64()
+            / (es.execute_time + es.transfer_time).as_secs_f64().max(1e-9)
+    ));
+    let _unused: Option<&CacheReader> = None;
+    report.finish();
+}

@@ -1,0 +1,68 @@
+//! Table 11: adapting the teacher to a shifted data distribution before
+//! distilling (paper: Llama-3-8B on Fineweb-edu). The teacher pre-trains on
+//! corpus A; the student trains on shifted corpus B. Expectation: KD without
+//! adaptation barely beats CE; a short teacher fine-tune on B recovers the
+//! KD gain.
+
+use rskd::coordinator::{CacheKind, Pipeline, StudentMethod};
+use rskd::data::TextDataset;
+use rskd::expt;
+use rskd::report::Report;
+
+fn main() {
+    if !expt::artifacts_exist("artifacts/small") {
+        println!("[skipped: artifacts/small missing]");
+        return;
+    }
+    // teacher domain A = default corpus; student domain B = shifted corpus.
+    // Domain-B pipelines get teacher_steps=1 (their built-in teacher is
+    // replaced by the domain-A teacher below) to avoid wasted pre-training.
+    let mut cfg = expt::config_for("artifacts/small", "table11");
+    cfg.corpus = cfg.corpus.shifted(); // pipeline data (student domain) = B
+    cfg.teacher_steps = 1;
+    let pipe = Pipeline::prepare(cfg.clone()).unwrap();
+
+    // the real teacher: pre-trained on domain A only
+    let cfg_a = expt::config_for("artifacts/small", "table11-A");
+    let pipe_a = Pipeline::prepare(cfg_a).unwrap();
+    let teacher_a = pipe_a.teacher.clone();
+
+    let mut report = Report::new("table11_adapt", "Teacher adaptation (paper Table 11)");
+    let mut rows = Vec::new();
+
+    let (_, _, ev_ce, z_ce) =
+        expt::run_with_zero_shot(&pipe, &StudentMethod::Ce, None, 3).unwrap();
+    rows.push(vec!["CE".into(), format!("{:.3}", ev_ce.lm_loss), format!("{z_ce:.1}")]);
+
+    // KD w/o adaptation: cache built by the domain-A teacher over domain-B data
+    {
+        let mut unadapted_pipe = Pipeline::prepare(cfg.clone()).unwrap();
+        unadapted_pipe.teacher = teacher_a.clone();
+        let (cache, _) = unadapted_pipe
+            .build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "t11-noadapt", 1)
+            .unwrap();
+        let (_, _, ev, z) =
+            expt::run_with_zero_shot(&unadapted_pipe, &expt::rs(), Some(&cache), 3).unwrap();
+        rows.push(vec!["KD w/o adapt".into(), format!("{:.3}", ev.lm_loss), format!("{z:.1}")]);
+    }
+
+    // KD with adaptation: fine-tune the domain-A teacher briefly on B
+    {
+        let mut adapted_pipe = Pipeline::prepare(cfg).unwrap();
+        let mut teacher = teacher_a;
+        teacher.reset_optimizer();
+        let ds = TextDataset::build(&adapted_pipe.cfg.corpus, adapted_pipe.engine.manifest().vocab,
+                                    40_000, 31);
+        adapted_pipe.continue_ce(&mut teacher, &ds.docs, expt::scale().teacher_steps / 4, 1e-4).unwrap();
+        adapted_pipe.teacher = teacher;
+        let (cache, _) = adapted_pipe
+            .build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "t11-adapt", 2)
+            .unwrap();
+        let (_, _, ev, z) =
+            expt::run_with_zero_shot(&adapted_pipe, &expt::rs(), Some(&cache), 3).unwrap();
+        rows.push(vec!["KD w adapt".into(), format!("{:.3}", ev.lm_loss), format!("{z:.1}")]);
+    }
+
+    report.table(&["Method", "LM Loss", "0-shot"], &rows);
+    report.finish();
+}

@@ -1,0 +1,51 @@
+//! Table 1: vanilla Top-K KD sweep — LM loss, % CE->FullKD, ECE vs K,
+//! plus the Top-p row. Expectation (paper §2.1): small K underperforms CE,
+//! ECE worsens as K shrinks, FullKD is the ceiling.
+
+use rskd::coordinator::trainer::SparseVariant;
+use rskd::coordinator::{pct_ce_to_fullkd, CacheKind, StudentMethod};
+use rskd::expt;
+use rskd::report::Report;
+
+fn main() {
+    let Some(pipe) = expt::prepare_small("table1") else { return };
+    let (cache, _) = pipe.build_cache(CacheKind::TopK, "t1", 1).unwrap();
+
+    let mut report = Report::new("table1_topk", "Vanilla Top-K KD (paper Table 1)");
+    let mut rows = Vec::new();
+
+    let (_, _, ev_ce) = pipe.run_student(&StudentMethod::Ce, None, 3).unwrap();
+    let (_, _, ev_fk) = pipe
+        .run_student(&StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None, 3)
+        .unwrap();
+
+    rows.push(vec!["CE".into(), format!("{:.3}", ev_ce.lm_loss), "0%".into(),
+                   format!("{:.1}", ev_ce.ece_pct)]);
+    for k in [3usize, 5, 12, 25, 50] {
+        let (_, _, ev) = pipe.run_student(&expt::topk(k), Some(&cache), 3).unwrap();
+        rows.push(vec![
+            format!("{k}"),
+            format!("{:.3}", ev.lm_loss),
+            format!("{:.0}%", pct_ce_to_fullkd(ev.lm_loss, ev_ce.lm_loss, ev_fk.lm_loss)),
+            format!("{:.1}", ev.ece_pct),
+        ]);
+    }
+    // the paper's *50 row: Top-p 0.98 capped at K=50
+    let topp = StudentMethod::Sparse {
+        variant: SparseVariant::TopP { p: 0.98, k: 50 },
+        alpha: 0.0,
+        adaptive: None,
+    };
+    let (_, _, ev) = pipe.run_student(&topp, Some(&cache), 3).unwrap();
+    rows.push(vec![
+        "*50 (top-p .98)".into(),
+        format!("{:.3}", ev.lm_loss),
+        format!("{:.0}%", pct_ce_to_fullkd(ev.lm_loss, ev_ce.lm_loss, ev_fk.lm_loss)),
+        format!("{:.1}", ev.ece_pct),
+    ]);
+    rows.push(vec!["FullKD".into(), format!("{:.3}", ev_fk.lm_loss), "100%".into(),
+                   format!("{:.1}", ev_fk.ece_pct)]);
+
+    report.table(&["Unique Tokens", "LM Loss", "% CE to FullKD", "ECE %"], &rows);
+    report.finish();
+}

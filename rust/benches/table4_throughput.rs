@@ -1,0 +1,60 @@
+//! Table 4: training throughput — tokens/sec (relative, FullKD = 1.0x) and
+//! an estimated FLOP/s column for CE vs RS-KD (cached) vs FullKD (online
+//! teacher). Expectation: RS-KD within ~10% of CE; FullKD pays the online
+//! teacher forward.
+
+use rskd::coordinator::{CacheKind, StudentMethod};
+use rskd::expt;
+use rskd::metrics::throughput::train_flops_per_token;
+use rskd::report::Report;
+
+fn main() {
+    let Some(pipe) = expt::prepare_small("table4") else { return };
+    let m = pipe.engine.manifest();
+    let p_student = m.role("student").unwrap().param_count as u64;
+    let p_teacher = m.role("teacher").unwrap().param_count as u64;
+    let (cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 50, temp: 1.0 }, "t4", 1).unwrap();
+
+    // warm up compiles so the timed runs measure steady-state throughput
+    pipe.engine
+        .warmup(&[
+            "train_ce_student",
+            "train_sparse_student",
+            "train_sparse_jnp_student", // CPU hot path after the perf pass
+            "train_dense_student",
+            "fwd_teacher",
+        ])
+        .unwrap();
+
+    let runs: Vec<(&str, StudentMethod, Option<&rskd::cache::CacheReader>, u64)> = vec![
+        ("CE", StudentMethod::Ce, None, 0),
+        ("Random Sampling", expt::rs(), Some(&cache), 0),
+        ("Full KD", StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None, 2 * p_teacher),
+    ];
+
+    let mut measured = Vec::new();
+    for (name, method, cache, teacher_flops) in runs {
+        let (_, tr, _) = pipe.run_student(&method, cache, 3).unwrap();
+        let fpt = train_flops_per_token(p_student, 0) + teacher_flops;
+        measured.push((name, tr.tokens_per_sec, fpt as f64 * tr.tokens_per_sec));
+    }
+    let fullkd_tps = measured.last().unwrap().1;
+
+    let mut report = Report::new("table4_throughput", "Speed/Throughput (paper Table 4)");
+    let rows: Vec<Vec<String>> = measured
+        .iter()
+        .map(|(name, tps, flops)| {
+            vec![
+                name.to_string(),
+                format!("{:.2}x", tps / fullkd_tps),
+                format!("{tps:.0}"),
+                format!("{:.2} MFLOP/s", flops / 1e6),
+            ]
+        })
+        .collect();
+    report.table(&["Method", "Tokens/sec (rel FullKD)", "Tokens/sec", "est. FLOP/s"], &rows);
+    report.line(format!(
+        "(student {p_student} params, teacher {p_teacher} params; FullKD pays 2*teacher fwd FLOPs/token online)"
+    ));
+    report.finish();
+}

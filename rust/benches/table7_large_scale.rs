@@ -1,0 +1,66 @@
+//! Table 7: large-scale comparison (paper: 8B→3B, 100B tokens; here the
+//! `large` artifact config) — CE, Top-K 12/50, RS-KD 12, RS+adaptive, FullKD,
+//! with 0-shot before and after instruction SFT. Requires
+//! `make artifacts-large`; falls back to the small config with a note.
+
+use rskd::coordinator::trainer::{AdaptiveLr, SparseVariant};
+use rskd::coordinator::{CacheKind, Pipeline, StudentMethod};
+use rskd::data::TextDataset;
+use rskd::expt;
+use rskd::report::Report;
+
+fn main() {
+    let (dir, tag) = if expt::artifacts_exist("artifacts/large") {
+        ("artifacts/large", "large")
+    } else if expt::artifacts_exist("artifacts/small") {
+        println!("[artifacts/large missing: running the scaled-down analogue on artifacts/small]");
+        ("artifacts/small", "small-as-large")
+    } else {
+        println!("[skipped: no artifacts]");
+        return;
+    };
+    let cfg = expt::config_for(dir, "table7");
+    let pipe = Pipeline::prepare(cfg).unwrap();
+    let (tk_cache, _) = pipe.build_cache(CacheKind::TopK, "t7-tk", 1).unwrap();
+    let (rs_cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "t7-rs", 2).unwrap();
+
+    // instruction SFT set in the corpus grammar (paper: Tulu)
+    let ds = TextDataset::build(&pipe.cfg.corpus, pipe.engine.manifest().vocab, 4_000, 5);
+    let sft_docs = TextDataset::build_sft_docs(&pipe.cfg.corpus, &ds.bpe, 60, 6);
+
+    let adaptive = Some(AdaptiveLr { ratio: 2.0, hard_frac: 0.5 });
+    let runs: Vec<(&str, StudentMethod, Option<&rskd::cache::CacheReader>)> = vec![
+        ("CE", StudentMethod::Ce, None),
+        ("Top-K 12",
+         StudentMethod::Sparse { variant: SparseVariant::TopK { k: 12, normalize: false }, alpha: 0.0, adaptive: None },
+         Some(&tk_cache)),
+        ("Top-K 50",
+         StudentMethod::Sparse { variant: SparseVariant::TopK { k: 50, normalize: false }, alpha: 0.0, adaptive: None },
+         Some(&tk_cache)),
+        ("Ours (12)", expt::rs(), Some(&rs_cache)),
+        ("Ours (12)+",
+         StudentMethod::Sparse { variant: SparseVariant::Rs, alpha: 0.1, adaptive },
+         Some(&rs_cache)),
+        ("FullKD", StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None),
+    ];
+
+    let mut report = Report::new("table7_large_scale", format!("Large-scale sparse KD ({tag}) — paper Table 7").as_str());
+    let mut rows = Vec::new();
+    for (name, method, cache) in runs {
+        let (mut student, _, ev, z) = expt::run_with_zero_shot(&pipe, &method, cache, 3).unwrap();
+        // IF SFT: fine-tune on instructions, re-score
+        student.reset_optimizer();
+        pipe.continue_ce(&mut student, &sft_docs, 25, 2e-5).unwrap();
+        let z_sft = expt::zero_shot(&pipe, &student).unwrap();
+        rows.push(vec![
+            name.to_string(),
+            format!("{:.3}", ev.lm_loss),
+            format!("{:.1}", ev.ece_pct),
+            format!("{:.1}", ev.spec_accept_pct),
+            format!("{z:.1}"),
+            format!("{z_sft:.1}"),
+        ]);
+    }
+    report.table(&["Method", "LM Loss", "ECE %", "SpecAccept %", "0-shot", "IF SFT 0-shot"], &rows);
+    report.finish();
+}

@@ -1,0 +1,179 @@
+//! Sparse-logit cache shard format.
+//!
+//! A cache directory holds `shard-NNNN.slc` files plus `cache.json`. Each
+//! shard covers a contiguous range of *stream positions* (global token
+//! offsets of the teacher's packed stream — alignment with the student's
+//! packing is exactly the Table 13 experiment). Layout (little-endian):
+//!
+//! ```text
+//! magic  u32 = 0x534C4331 ("SLC1")
+//! codec  u8, rounds u8, reserved u16
+//! start  u64   first stream position
+//! count  u64   number of positions
+//! then per position: n u8, n * 3-byte slots (quant::pack_slot)
+//! ```
+
+use std::io::{self, Read, Write};
+
+use crate::cache::quant::{self, ProbCodec};
+
+pub const MAGIC: u32 = 0x534C_4331;
+
+/// One position's sparse target, decoded.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct SparseTarget {
+    pub ids: Vec<u32>,
+    pub probs: Vec<f32>,
+}
+
+impl SparseTarget {
+    pub fn mass(&self) -> f32 {
+        self.probs.iter().sum()
+    }
+
+    pub fn k(&self) -> usize {
+        self.ids.len()
+    }
+}
+
+/// In-memory shard: encoded records for [start, start+records.len()).
+pub struct Shard {
+    pub codec: ProbCodec,
+    pub start: u64,
+    /// per-position encoded (ids, codes)
+    pub records: Vec<(Vec<u32>, Vec<u8>)>,
+}
+
+impl Shard {
+    pub fn new(codec: ProbCodec, start: u64) -> Shard {
+        Shard { codec, start, records: Vec::new() }
+    }
+
+    pub fn push(&mut self, target: &SparseTarget) {
+        let (ids, codes) = quant::encode(&target.ids, &target.probs, self.codec);
+        self.records.push((ids, codes));
+    }
+
+    pub fn decode(&self, i: usize) -> SparseTarget {
+        let (ids, codes) = &self.records[i];
+        SparseTarget { ids: ids.clone(), probs: quant::decode(codes, self.codec) }
+    }
+
+    pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
+        let rounds = match self.codec {
+            ProbCodec::Count { rounds } => rounds as u8,
+            _ => 0,
+        };
+        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&[self.codec.tag(), rounds, 0, 0])?;
+        w.write_all(&self.start.to_le_bytes())?;
+        w.write_all(&(self.records.len() as u64).to_le_bytes())?;
+        for (ids, codes) in &self.records {
+            debug_assert!(ids.len() < 256);
+            w.write_all(&[ids.len() as u8])?;
+            for (&id, &c) in ids.iter().zip(codes.iter()) {
+                w.write_all(&quant::pack_slot(id, c))?;
+            }
+        }
+        Ok(())
+    }
+
+    pub fn read_from(r: &mut impl Read) -> io::Result<Shard> {
+        let mut u32b = [0u8; 4];
+        r.read_exact(&mut u32b)?;
+        if u32::from_le_bytes(u32b) != MAGIC {
+            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad shard magic"));
+        }
+        let mut hdr = [0u8; 4];
+        r.read_exact(&mut hdr)?;
+        let codec = ProbCodec::from_tag(hdr[0], hdr[1] as u32)
+            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad codec tag"))?;
+        let mut u64b = [0u8; 8];
+        r.read_exact(&mut u64b)?;
+        let start = u64::from_le_bytes(u64b);
+        r.read_exact(&mut u64b)?;
+        let count = u64::from_le_bytes(u64b) as usize;
+        let mut records = Vec::with_capacity(count);
+        for _ in 0..count {
+            let mut nb = [0u8; 1];
+            r.read_exact(&mut nb)?;
+            let n = nb[0] as usize;
+            let mut ids = Vec::with_capacity(n);
+            let mut codes = Vec::with_capacity(n);
+            for _ in 0..n {
+                let mut slot = [0u8; 3];
+                r.read_exact(&mut slot)?;
+                let (id, c) = quant::unpack_slot(slot);
+                ids.push(id);
+                codes.push(c);
+            }
+            records.push((ids, codes));
+        }
+        Ok(Shard { codec, start, records })
+    }
+
+    /// Bytes on disk for this shard (header + records).
+    pub fn byte_size(&self) -> usize {
+        24 + self.records.iter().map(|(ids, _)| 1 + 3 * ids.len()).sum::<usize>()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn target(k: usize, seed: u64) -> SparseTarget {
+        let mut rng = crate::util::rng::Pcg::new(seed);
+        let ids: Vec<u32> = (0..k as u32).map(|i| i * 3 + rng.next_u32() % 3).collect();
+        let mut probs: Vec<f32> = (0..k).map(|_| rng.f32() + 0.01).collect();
+        let z: f32 = probs.iter().sum::<f32>() * 1.2;
+        probs.iter_mut().for_each(|p| *p /= z);
+        SparseTarget { ids, probs }
+    }
+
+    #[test]
+    fn shard_io_roundtrip() {
+        for codec in [ProbCodec::Interval, ProbCodec::Ratio, ProbCodec::Count { rounds: 50 }] {
+            let mut shard = Shard::new(codec, 1024);
+            for i in 0..10 {
+                shard.push(&target(5 + i % 7, i as u64));
+            }
+            let mut buf = Vec::new();
+            shard.write_to(&mut buf).unwrap();
+            assert_eq!(buf.len(), shard.byte_size());
+            let back = Shard::read_from(&mut buf.as_slice()).unwrap();
+            assert_eq!(back.start, 1024);
+            assert_eq!(back.records, shard.records);
+        }
+    }
+
+    #[test]
+    fn decode_error_bounded_ratio() {
+        let mut shard = Shard::new(ProbCodec::Ratio, 0);
+        let t = target(16, 9);
+        shard.push(&t);
+        let dec = shard.decode(0);
+        // same id set
+        let mut a = t.ids.clone();
+        let mut b = dec.ids.clone();
+        a.sort();
+        b.sort();
+        assert_eq!(a, b);
+        assert!((dec.mass() - t.mass()).abs() < 0.1);
+    }
+
+    #[test]
+    fn rejects_bad_magic() {
+        let buf = vec![0u8; 64];
+        assert!(Shard::read_from(&mut buf.as_slice()).is_err());
+    }
+
+    #[test]
+    fn storage_is_3_bytes_per_slot() {
+        // the paper's headline storage claim: 24 bits per cached logit
+        let mut shard = Shard::new(ProbCodec::Count { rounds: 50 }, 0);
+        let t = target(12, 1);
+        shard.push(&t);
+        assert_eq!(shard.byte_size(), 24 + 1 + 3 * 12);
+    }
+}

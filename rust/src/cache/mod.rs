@@ -1,0 +1,13 @@
+//! Quantized sparse-logit cache (paper Appendix D.1/D.2): 24-bit slots,
+//! three probability codecs, shard files, a bounded ring buffer with an
+//! async writer thread, and a range reader for the student trainer.
+
+pub mod format;
+pub mod quant;
+pub mod reader;
+pub mod writer;
+
+pub use format::SparseTarget;
+pub use quant::ProbCodec;
+pub use reader::CacheReader;
+pub use writer::{CacheStats, CacheWriter, RingBuffer};

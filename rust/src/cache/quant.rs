@@ -1,0 +1,222 @@
+//! Probability quantization for cached sparse logits (paper Appendix D.1).
+//!
+//! Slots are byte-aligned 24 bits: 17 bits of token id (enough for a 100k+
+//! LLM vocabulary — we keep the paper's layout even though our V=512) plus
+//! 7 bits of probability. Three 7-bit probability codecs:
+//!
+//! * `Interval` — naive: split [0,1] into 2^7 equal bins (the paper's first
+//!   attempt; "slightly lower performance").
+//! * `Ratio` — sort probabilities descending, store p_0 and the successive
+//!   ratios p_i/p_{i-1}; ratios concentrate near [0,1] so tail error shrinks
+//!   ("reduced quantization error to almost 0").
+//! * `Count` — RS-KD with N <= 128 sampling rounds: weights are exactly x/N,
+//!   store the integer numerator; lossless.
+
+pub const ID_BITS: u32 = 17;
+pub const PROB_BITS: u32 = 7;
+pub const PROB_LEVELS: u32 = 1 << PROB_BITS; // 128
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ProbCodec {
+    Interval,
+    Ratio,
+    /// numerators over a fixed denominator (RS-KD sampling rounds)
+    Count { rounds: u32 },
+}
+
+impl ProbCodec {
+    pub fn tag(self) -> u8 {
+        match self {
+            ProbCodec::Interval => 0,
+            ProbCodec::Ratio => 1,
+            ProbCodec::Count { .. } => 2,
+        }
+    }
+
+    pub fn from_tag(tag: u8, rounds: u32) -> Option<ProbCodec> {
+        match tag {
+            0 => Some(ProbCodec::Interval),
+            1 => Some(ProbCodec::Ratio),
+            2 => Some(ProbCodec::Count { rounds }),
+            _ => None,
+        }
+    }
+}
+
+/// Pack (id, code) into a 3-byte little-endian slot.
+#[inline]
+pub fn pack_slot(id: u32, code: u8) -> [u8; 3] {
+    debug_assert!(id < (1 << ID_BITS));
+    debug_assert!((code as u32) < PROB_LEVELS);
+    let word: u32 = id | ((code as u32) << ID_BITS);
+    [word as u8, (word >> 8) as u8, (word >> 16) as u8]
+}
+
+#[inline]
+pub fn unpack_slot(bytes: [u8; 3]) -> (u32, u8) {
+    let word = bytes[0] as u32 | ((bytes[1] as u32) << 8) | ((bytes[2] as u32) << 16);
+    (word & ((1 << ID_BITS) - 1), (word >> ID_BITS) as u8)
+}
+
+fn q_interval(p: f32) -> u8 {
+    ((p.clamp(0.0, 1.0) * PROB_LEVELS as f32) as u32).min(PROB_LEVELS - 1) as u8
+}
+
+fn dq_interval(c: u8) -> f32 {
+    (c as f32 + 0.5) / PROB_LEVELS as f32
+}
+
+/// Encode one position's sparse target. Returns (ids, codes) in codec order
+/// (Ratio sorts descending by probability; others keep input order).
+pub fn encode(ids: &[u32], probs: &[f32], codec: ProbCodec) -> (Vec<u32>, Vec<u8>) {
+    assert_eq!(ids.len(), probs.len());
+    match codec {
+        ProbCodec::Interval => {
+            (ids.to_vec(), probs.iter().map(|&p| q_interval(p)).collect())
+        }
+        ProbCodec::Ratio => {
+            let mut order: Vec<usize> = (0..ids.len()).collect();
+            order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            let sorted_ids: Vec<u32> = order.iter().map(|&i| ids[i]).collect();
+            let mut codes = Vec::with_capacity(ids.len());
+            let mut prev = 1.0f32;
+            for &i in &order {
+                let ratio = if prev > 0.0 { (probs[i] / prev).clamp(0.0, 1.0) } else { 0.0 };
+                let c = q_interval(ratio);
+                codes.push(c);
+                prev *= dq_interval(c); // track the *decoded* chain to cancel drift
+            }
+            (sorted_ids, codes)
+        }
+        ProbCodec::Count { rounds } => {
+            assert!(rounds <= PROB_LEVELS, "rounds must fit in 7 bits");
+            let codes = probs
+                .iter()
+                .map(|&p| {
+                    let x = (p * rounds as f32).round() as u32;
+                    x.min(PROB_LEVELS - 1) as u8
+                })
+                .collect();
+            (ids.to_vec(), codes)
+        }
+    }
+}
+
+/// Decode back to probabilities (same order as the encoded ids).
+pub fn decode(codes: &[u8], codec: ProbCodec) -> Vec<f32> {
+    match codec {
+        ProbCodec::Interval => codes.iter().map(|&c| dq_interval(c)).collect(),
+        ProbCodec::Ratio => {
+            let mut out = Vec::with_capacity(codes.len());
+            let mut prev = 1.0f32;
+            for &c in codes {
+                prev *= dq_interval(c);
+                out.push(prev);
+            }
+            out
+        }
+        ProbCodec::Count { rounds } => {
+            codes.iter().map(|&c| c as f32 / rounds as f32).collect()
+        }
+    }
+}
+
+/// L1 reconstruction error of an encode/decode round trip.
+pub fn roundtrip_l1(ids: &[u32], probs: &[f32], codec: ProbCodec) -> f32 {
+    let (enc_ids, codes) = encode(ids, probs, codec);
+    let dec = decode(&codes, codec);
+    let mut err = 0.0;
+    for (i, &id) in enc_ids.iter().enumerate() {
+        let orig = ids.iter().position(|&x| x == id).map(|j| probs[j]).unwrap_or(0.0);
+        err += (dec[i] - orig).abs();
+    }
+    err
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn slot_roundtrip() {
+        for id in [0u32, 1, 511, 99_999, (1 << ID_BITS) - 1] {
+            for code in [0u8, 1, 63, 127] {
+                assert_eq!(unpack_slot(pack_slot(id, code)), (id, code));
+            }
+        }
+    }
+
+    #[test]
+    fn count_codec_is_lossless_for_rs() {
+        // RS-KD with t=1 produces weights x/N exactly
+        let rounds = 50u32;
+        let ids = [3u32, 99, 7];
+        let probs = [10.0 / 50.0, 38.0 / 50.0, 2.0 / 50.0];
+        let (eids, codes) = encode(&ids, &probs, ProbCodec::Count { rounds });
+        let dec = decode(&codes, ProbCodec::Count { rounds });
+        assert_eq!(eids, ids);
+        for (d, p) in dec.iter().zip(probs.iter()) {
+            assert!((d - p).abs() < 1e-7);
+        }
+    }
+
+    #[test]
+    fn ratio_beats_interval_on_zipf_tail() {
+        // the paper's observation: ratio encoding has far lower error on
+        // sorted Top-K probabilities than naive interval quantization
+        let k = 32;
+        let mut probs: Vec<f32> = (1..=k).map(|i| 1.0 / i as f32).collect();
+        let z: f32 = probs.iter().sum();
+        probs.iter_mut().for_each(|p| *p /= z);
+        let ids: Vec<u32> = (0..k as u32).collect();
+        let e_int = roundtrip_l1(&ids, &probs, ProbCodec::Interval);
+        let e_ratio = roundtrip_l1(&ids, &probs, ProbCodec::Ratio);
+        assert!(e_ratio < e_int * 0.5, "ratio {e_ratio} vs interval {e_int}");
+    }
+
+    #[test]
+    fn ratio_decode_is_sorted_descending() {
+        let probs = [0.05f32, 0.5, 0.2];
+        let ids = [7u32, 1, 3];
+        let (eids, codes) = encode(&ids, &probs, ProbCodec::Ratio);
+        assert_eq!(eids, [1, 3, 7]);
+        let dec = decode(&codes, ProbCodec::Ratio);
+        assert!(dec[0] >= dec[1] && dec[1] >= dec[2]);
+    }
+
+    #[test]
+    fn interval_error_bounded() {
+        let mut rng = Pcg::new(0);
+        for _ in 0..200 {
+            let p = rng.f32();
+            let c = q_interval(p);
+            assert!((dq_interval(c) - p).abs() <= 0.5 / PROB_LEVELS as f32 + 1e-6);
+        }
+    }
+
+    #[test]
+    fn property_ratio_roundtrip_error_small() {
+        use crate::util::testing::forall;
+        forall(
+            40,
+            |rng: &mut Pcg| {
+                let k = 1 + rng.usize_below(40);
+                let mut probs: Vec<f32> = (0..k).map(|_| rng.f32() + 1e-4).collect();
+                let z: f32 = probs.iter().sum::<f32>() * (1.0 + rng.f32()); // mass <= 1
+                probs.iter_mut().for_each(|p| *p /= z);
+                let ids: Vec<u32> = (0..k as u32).collect();
+                (ids, probs)
+            },
+            |(ids, probs)| {
+                let err = roundtrip_l1(ids, probs, ProbCodec::Ratio);
+                let mass: f32 = probs.iter().sum();
+                if err < 0.06 * mass.max(0.05) {
+                    Ok(())
+                } else {
+                    Err(format!("err {err} mass {mass}"))
+                }
+            },
+        );
+    }
+}

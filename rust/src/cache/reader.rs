@@ -1,0 +1,113 @@
+//! Cache reader: loads shards from a cache directory and serves sparse
+//! targets for arbitrary stream-position ranges (the student trainer asks for
+//! `[offset, offset + seq)` per packed row).
+
+use std::path::{Path, PathBuf};
+
+use crate::cache::format::{Shard, SparseTarget};
+use crate::util::json::Json;
+
+pub struct CacheReader {
+    shards: Vec<Shard>,
+    /// shard start positions (sorted) for binary search
+    starts: Vec<u64>,
+    pub positions: u64,
+    pub rounds: u32,
+    pub bytes: u64,
+}
+
+impl CacheReader {
+    pub fn open(dir: &Path) -> std::io::Result<CacheReader> {
+        let meta_text = std::fs::read_to_string(dir.join("cache.json"))?;
+        let meta = Json::parse(&meta_text)
+            .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
+        let positions = meta.get("positions").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+        let rounds = meta.get("rounds").and_then(|v| v.as_f64()).unwrap_or(0.0) as u32;
+        let bytes = meta.get("bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
+
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|x| x == "slc").unwrap_or(false))
+            .collect();
+        paths.sort();
+        let mut shards = Vec::with_capacity(paths.len());
+        for p in &paths {
+            let mut f = std::io::BufReader::new(std::fs::File::open(p)?);
+            shards.push(Shard::read_from(&mut f)?);
+        }
+        shards.sort_by_key(|s| s.start);
+        let starts = shards.iter().map(|s| s.start).collect();
+        Ok(CacheReader { shards, starts, positions, rounds, bytes })
+    }
+
+    /// Sparse target at one stream position.
+    pub fn get(&self, pos: u64) -> Option<SparseTarget> {
+        let idx = match self.starts.binary_search(&pos) {
+            Ok(i) => i,
+            Err(0) => return None,
+            Err(i) => i - 1,
+        };
+        let shard = &self.shards[idx];
+        let local = (pos - shard.start) as usize;
+        if local < shard.records.len() {
+            Some(shard.decode(local))
+        } else {
+            None
+        }
+    }
+
+    /// Targets for a contiguous range (one packed row). Missing positions
+    /// (misaligned packing, Table 13) come back as empty targets.
+    pub fn get_range(&self, start: u64, len: usize) -> Vec<SparseTarget> {
+        (0..len as u64).map(|i| self.get(start + i).unwrap_or_default()).collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::quant::ProbCodec;
+    use crate::cache::writer::CacheWriter;
+
+    fn build_cache(dir: &Path, n: u64) {
+        let _ = std::fs::remove_dir_all(dir);
+        let w = CacheWriter::create(dir, ProbCodec::Count { rounds: 50 }, 16, 8).unwrap();
+        for pos in 0..n {
+            let t = SparseTarget {
+                ids: vec![pos as u32 % 100, 200, 300],
+                probs: vec![20.0 / 50.0, 10.0 / 50.0, 5.0 / 50.0],
+            };
+            w.push(pos, t);
+        }
+        w.finish().unwrap();
+    }
+
+    #[test]
+    fn read_back_every_position() {
+        let dir = std::env::temp_dir().join(format!("rskd-reader-test-{}", std::process::id()));
+        build_cache(&dir, 100);
+        let r = CacheReader::open(&dir).unwrap();
+        assert_eq!(r.positions, 100);
+        assert_eq!(r.rounds, 50);
+        for pos in 0..100u64 {
+            let t = r.get(pos).unwrap();
+            assert_eq!(t.ids[0], pos as u32 % 100);
+            assert!((t.probs[0] - 0.4).abs() < 1e-6);
+        }
+        assert!(r.get(100).is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn range_pads_missing() {
+        let dir = std::env::temp_dir().join(format!("rskd-range-test-{}", std::process::id()));
+        build_cache(&dir, 10);
+        let r = CacheReader::open(&dir).unwrap();
+        let ts = r.get_range(5, 10);
+        assert_eq!(ts.len(), 10);
+        assert_eq!(ts[0].k(), 3);
+        assert_eq!(ts[9].k(), 0); // position 14 missing -> empty
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

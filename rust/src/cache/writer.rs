@@ -1,0 +1,270 @@
+//! Async cache writer (paper Appendix D.2): the teacher-inference thread must
+//! never block on disk, so targets flow through a bounded ring buffer to a
+//! dedicated writer thread that batches them into shards.
+
+use std::collections::VecDeque;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Condvar, Mutex};
+use std::thread::JoinHandle;
+
+use crate::cache::format::{Shard, SparseTarget};
+use crate::cache::quant::ProbCodec;
+use crate::util::json::Json;
+
+/// Bounded MPMC ring buffer (Mutex + Condvar; crossbeam not needed at our
+/// throughput). `push` blocks when full — that *is* the backpressure the
+/// paper's shared-memory ring buffers provide.
+pub struct RingBuffer<T> {
+    inner: Mutex<RingInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct RingInner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> RingBuffer<T> {
+    pub fn new(cap: usize) -> Arc<RingBuffer<T>> {
+        Arc::new(RingBuffer {
+            inner: Mutex::new(RingInner { queue: VecDeque::with_capacity(cap), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+        })
+    }
+
+    /// Blocking push; returns false if the buffer is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.queue.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.queue.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Blocking pop; None once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.queue.pop_front() {
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+/// Targets must arrive in stream order: (position, target).
+pub struct CacheWriter {
+    ring: Arc<RingBuffer<(u64, SparseTarget)>>,
+    handle: Option<JoinHandle<std::io::Result<CacheStats>>>,
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct CacheStats {
+    pub positions: u64,
+    pub slots: u64,
+    pub bytes: u64,
+    pub shards: u32,
+}
+
+impl CacheWriter {
+    /// `positions_per_shard` bounds shard memory; `ring_cap` bounds the
+    /// producer lead (backpressure window).
+    pub fn create(
+        dir: &Path,
+        codec: ProbCodec,
+        positions_per_shard: usize,
+        ring_cap: usize,
+    ) -> std::io::Result<CacheWriter> {
+        std::fs::create_dir_all(dir)?;
+        let ring = RingBuffer::new(ring_cap);
+        let ring2 = Arc::clone(&ring);
+        let dir: PathBuf = dir.to_path_buf();
+        let handle = std::thread::spawn(move || -> std::io::Result<CacheStats> {
+            let mut stats = CacheStats::default();
+            let mut shard: Option<Shard> = None;
+            let mut next_expected: Option<u64> = None;
+            let flush = |shard: Shard, stats: &mut CacheStats, dir: &Path| -> std::io::Result<()> {
+                let path = dir.join(format!("shard-{:05}.slc", stats.shards));
+                let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
+                shard.write_to(&mut f)?;
+                stats.bytes += shard.byte_size() as u64;
+                stats.shards += 1;
+                Ok(())
+            };
+            while let Some((pos, target)) = ring2.pop() {
+                if let Some(exp) = next_expected {
+                    assert_eq!(pos, exp, "cache writer requires stream-ordered positions");
+                }
+                next_expected = Some(pos + 1);
+                let s = shard.get_or_insert_with(|| Shard::new(codec, pos));
+                s.push(&target);
+                stats.positions += 1;
+                stats.slots += target.ids.len() as u64;
+                if s.records.len() >= positions_per_shard {
+                    flush(shard.take().unwrap(), &mut stats, &dir)?;
+                }
+            }
+            if let Some(s) = shard.take() {
+                if !s.records.is_empty() {
+                    flush(s, &mut stats, &dir)?;
+                }
+            }
+            // cache.json metadata
+            let rounds = match codec {
+                ProbCodec::Count { rounds } => rounds,
+                _ => 0,
+            };
+            let meta = Json::obj(vec![
+                ("codec", Json::num(codec.tag() as f64)),
+                ("rounds", Json::num(rounds as f64)),
+                ("positions", Json::num(stats.positions as f64)),
+                ("slots", Json::num(stats.slots as f64)),
+                ("bytes", Json::num(stats.bytes as f64)),
+                ("shards", Json::num(stats.shards as f64)),
+            ]);
+            std::fs::write(dir.join("cache.json"), meta.to_string())?;
+            Ok(stats)
+        });
+        Ok(CacheWriter { ring, handle: Some(handle) })
+    }
+
+    /// Enqueue one position's target (blocks under backpressure).
+    pub fn push(&self, pos: u64, target: SparseTarget) {
+        assert!(self.ring.push((pos, target)), "cache writer closed");
+    }
+
+    pub fn backlog(&self) -> usize {
+        self.ring.len()
+    }
+
+    /// Close the ring and wait for the writer thread.
+    pub fn finish(mut self) -> std::io::Result<CacheStats> {
+        self.ring.close();
+        self.handle.take().unwrap().join().expect("writer thread panicked")
+    }
+}
+
+impl Drop for CacheWriter {
+    fn drop(&mut self) {
+        self.ring.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_fifo_order() {
+        let ring = RingBuffer::new(4);
+        for i in 0..4 {
+            ring.push(i);
+        }
+        ring.close();
+        let got: Vec<i32> = std::iter::from_fn(|| ring.pop()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn ring_backpressure_blocks_then_drains() {
+        let ring = RingBuffer::new(2);
+        let r2 = Arc::clone(&ring);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                assert!(r2.push(i));
+            }
+            r2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = ring.pop() {
+            got.push(x);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ring_concurrent_producers_fifo_per_producer() {
+        let ring: Arc<RingBuffer<(u32, u32)>> = RingBuffer::new(8);
+        let mut handles = Vec::new();
+        for p in 0..4u32 {
+            let r = Arc::clone(&ring);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u32 {
+                    r.push((p, i));
+                }
+            }));
+        }
+        let consumer = {
+            let r = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while got.len() < 200 {
+                    if let Some(x) = r.pop() {
+                        got.push(x);
+                    }
+                }
+                got
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        let got = consumer.join().unwrap();
+        ring.close();
+        // per-producer order preserved (FIFO invariant under concurrency)
+        for p in 0..4u32 {
+            let seq: Vec<u32> = got.iter().filter(|(q, _)| *q == p).map(|&(_, i)| i).collect();
+            assert_eq!(seq, (0..50).collect::<Vec<_>>());
+        }
+    }
+
+    #[test]
+    fn writer_produces_shards_and_meta() {
+        let dir = std::env::temp_dir().join(format!("rskd-cache-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 16, 8).unwrap();
+        for pos in 0..40u64 {
+            let t = SparseTarget { ids: vec![1, 2, 3], probs: vec![0.2, 0.4, 0.1] };
+            w.push(pos, t);
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.positions, 40);
+        assert_eq!(stats.shards, 3); // 16 + 16 + 8
+        assert!(dir.join("cache.json").exists());
+        assert!(dir.join("shard-00000.slc").exists());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,184 @@
+//! Cache-building stage: one teacher inference pass over the packed stream,
+//! sparsify every position, quantize, and write shards through the async
+//! ring-buffer writer (paper Figure 1 + Appendix D).
+//!
+//! Sparsification runs on-device via the AOT graphs: `sample_topk`
+//! (jax.lax.top_k) or `sample_rs` (the L1 Pallas importance sampler, fed
+//! rust-generated uniforms so the draw is deterministic in the seed).
+
+use std::path::Path;
+
+use anyhow::Result;
+
+use crate::cache::{CacheStats, CacheWriter, ProbCodec, SparseTarget};
+use crate::data::loader::Loader;
+use crate::model::ModelState;
+use crate::runtime::{Engine, HostTensor};
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Copy, Debug)]
+pub enum CacheKind {
+    /// store the Top-`k_slots` head with ratio encoding (serves every Top-K
+    /// variant with k <= k_slots)
+    TopK,
+    /// Random Sampling KD draws: `rounds` importance samples at `temp`,
+    /// exact 7-bit count encoding when temp == 1
+    Rs { rounds: u32, temp: f32 },
+}
+
+impl CacheKind {
+    fn codec(self) -> ProbCodec {
+        match self {
+            CacheKind::TopK => ProbCodec::Ratio,
+            CacheKind::Rs { rounds, temp } => {
+                if (temp - 1.0).abs() < 1e-6 && rounds <= 128 {
+                    ProbCodec::Count { rounds }
+                } else {
+                    ProbCodec::Ratio
+                }
+            }
+        }
+    }
+}
+
+#[derive(Clone, Debug, Default)]
+pub struct BuildStats {
+    pub cache: CacheStats,
+    pub teacher_batches: u64,
+    pub avg_unique_tokens: f64,
+}
+
+/// Run the teacher over `loader` (stream order) and cache sparse targets.
+pub fn build_cache(
+    engine: &Engine,
+    teacher: &ModelState,
+    loader: &Loader,
+    kind: CacheKind,
+    dir: &Path,
+    seed: u64,
+) -> Result<BuildStats> {
+    let m = engine.manifest();
+    let (b, s, n) = (m.batch, m.seq, m.n_rounds);
+    let writer = CacheWriter::create(dir, kind.codec(), 4096, 1024)?;
+    let mut rng = Pcg::new(seed);
+    let fwd = format!("fwd_{}", teacher.role);
+    let mut batches = 0u64;
+    let mut unique_sum = 0u64;
+    let mut positions = 0u64;
+
+    for batch in loader.iter_eval() {
+        let probs = engine
+            .call(&fwd, &[teacher.params_tensor(), HostTensor::i32(batch.tokens.clone(), &[b, s])])?
+            .remove(0);
+        let (ids_t, vals_t) = match kind {
+            CacheKind::TopK => {
+                let mut outs = engine.call("sample_topk", &[probs])?;
+                let vals = outs.remove(1);
+                let ids = outs.remove(0);
+                (ids, vals)
+            }
+            CacheKind::Rs { rounds, temp } => {
+                // rust drives the randomness: uniforms in, samples out
+                let mut unif = vec![0.0f32; b * s * n];
+                rng.fill_f32(&mut unif);
+                let mut outs = engine.call(
+                    "sample_rs",
+                    &[probs, HostTensor::f32(unif, &[b, s, n]), HostTensor::scalar_f32(temp)],
+                )?;
+                let w = outs.remove(1);
+                let ids = outs.remove(0);
+                // graph emits `n_rounds` slots; if the experiment wants fewer
+                // rounds, truncate and renormalize (weights are 1/n each for
+                // temp=1, so truncation to `rounds` = an exact smaller draw)
+                let _ = rounds;
+                (ids, w)
+            }
+        };
+        let ids = ids_t.as_i32()?;
+        let vals = vals_t.as_f32()?;
+        let slots = ids.len() / (b * s);
+        let keep = match kind {
+            CacheKind::Rs { rounds, .. } => (rounds as usize).min(slots),
+            CacheKind::TopK => slots,
+        };
+        for row in 0..b {
+            let base_off = batch.offsets[row] as u64;
+            for pos in 0..s {
+                let at = (row * s + pos) * slots;
+                let target = merge_slots(&ids[at..at + keep], &vals[at..at + keep], kind);
+                unique_sum += target.ids.len() as u64;
+                positions += 1;
+                writer.push(base_off + pos as u64, target);
+            }
+        }
+        batches += 1;
+    }
+    let cache = writer.finish()?;
+    Ok(BuildStats {
+        cache,
+        teacher_batches: batches,
+        avg_unique_tokens: unique_sum as f64 / positions.max(1) as f64,
+    })
+}
+
+/// Merge duplicate sampled ids (RS emits one slot per draw) and drop zeros;
+/// for truncated RS draws, renormalize so weights stay x/keep.
+fn merge_slots(ids: &[i32], vals: &[f32], kind: CacheKind) -> SparseTarget {
+    let mut pairs: Vec<(u32, f32)> = Vec::with_capacity(ids.len());
+    for (&i, &w) in ids.iter().zip(vals.iter()) {
+        if w <= 0.0 {
+            continue;
+        }
+        pairs.push((i as u32, w));
+    }
+    pairs.sort_by_key(|&(i, _)| i);
+    let mut out = SparseTarget::default();
+    for (i, w) in pairs {
+        if out.ids.last() == Some(&i) {
+            *out.probs.last_mut().unwrap() += w;
+        } else {
+            out.ids.push(i);
+            out.probs.push(w);
+        }
+    }
+    if let CacheKind::Rs { .. } = kind {
+        let mass = out.mass();
+        if mass > 0.0 {
+            out.probs.iter_mut().for_each(|p| *p /= mass);
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_slots_merges_duplicates() {
+        let ids = [3, 3, 5, 1];
+        let vals = [0.25, 0.25, 0.25, 0.25];
+        let t = merge_slots(&ids, &vals, CacheKind::Rs { rounds: 4, temp: 1.0 });
+        assert_eq!(t.ids, vec![1, 3, 5]);
+        assert!((t.probs[1] - 0.5).abs() < 1e-6);
+        assert!((t.mass() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_slots_drops_zeros() {
+        let ids = [3, 4, 5];
+        let vals = [0.5, 0.0, 0.2];
+        let t = merge_slots(&ids, &vals, CacheKind::TopK);
+        assert_eq!(t.ids, vec![3, 5]);
+    }
+
+    #[test]
+    fn codec_choice() {
+        assert_eq!(CacheKind::TopK.codec(), ProbCodec::Ratio);
+        assert_eq!(
+            CacheKind::Rs { rounds: 50, temp: 1.0 }.codec(),
+            ProbCodec::Count { rounds: 50 }
+        );
+        assert_eq!(CacheKind::Rs { rounds: 50, temp: 0.8 }.codec(), ProbCodec::Ratio);
+    }
+}

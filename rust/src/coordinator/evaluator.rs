@@ -1,0 +1,73 @@
+//! Evaluation stage: LM loss on held-out data, Expected Calibration Error,
+//! speculative-decoding acceptance rate, and teacher Top-1 agreement — the
+//! metric columns of Tables 1/5/6/7.
+
+use anyhow::Result;
+
+use crate::data::loader::Loader;
+use crate::metrics::ece::{calibration, Calibration};
+use crate::model::ModelState;
+use crate::runtime::{Engine, HostTensor};
+
+#[derive(Clone, Debug)]
+pub struct EvalResult {
+    pub lm_loss: f64,
+    pub ece_pct: f64,
+    /// speculative acceptance % (E[sum_x min(p_s, p_t)])
+    pub spec_accept_pct: f64,
+    /// teacher top-1 agreement %
+    pub agree_pct: f64,
+    pub calibration: Calibration,
+    pub tokens: usize,
+}
+
+/// Evaluate `student` on `loader` (deterministic stream order). `teacher`
+/// enables the speculative/agreement columns.
+pub fn evaluate(
+    engine: &Engine,
+    student: &ModelState,
+    loader: &Loader,
+    teacher: Option<&ModelState>,
+    max_batches: usize,
+) -> Result<EvalResult> {
+    let m = engine.manifest();
+    let (b, s) = (m.batch, m.seq);
+    let graph = format!("eval_{}", student.role);
+    let mut loss_sum = 0.0f64;
+    let mut conf = Vec::new();
+    let mut correct = Vec::new();
+    let mut accept_sum = 0.0f64;
+    let mut agree_sum = 0.0f64;
+    let mut tokens = 0usize;
+
+    for batch in loader.iter_eval().take(max_batches) {
+        let toks = HostTensor::i32(batch.tokens.clone(), &[b, s]);
+        let labels = HostTensor::i32(batch.labels.clone(), &[b, s]);
+        let outs = engine.call(&graph, &[student.params_tensor(), toks.clone(), labels])?;
+        loss_sum += outs[0].scalar()? as f64;
+        conf.extend_from_slice(outs[1].as_f32()?);
+        correct.extend_from_slice(outs[2].as_f32()?);
+        tokens += b * s;
+
+        if let Some(t) = teacher {
+            let tprobs = engine
+                .call(&format!("fwd_{}", t.role), &[t.params_tensor(), toks.clone()])?
+                .remove(0);
+            let ag = engine.call(
+                &format!("agree_{}", student.role),
+                &[student.params_tensor(), toks, tprobs],
+            )?;
+            accept_sum += ag[0].as_f32()?.iter().map(|&x| x as f64).sum::<f64>();
+            agree_sum += ag[1].as_f32()?.iter().map(|&x| x as f64).sum::<f64>();
+        }
+    }
+    let cal = calibration(&conf, &correct, 15);
+    Ok(EvalResult {
+        lm_loss: loss_sum / tokens.max(1) as f64,
+        ece_pct: cal.ece * 100.0,
+        spec_accept_pct: 100.0 * accept_sum / tokens.max(1) as f64,
+        agree_pct: 100.0 * agree_sum / tokens.max(1) as f64,
+        calibration: cal,
+        tokens,
+    })
+}

@@ -1,0 +1,24 @@
+//! L3 coordinator: the paper's offline-distillation pipeline.
+//!
+//! Stages (Figure 1 of the paper):
+//! 1. `teacher` — pre-train (and optionally adapt) the teacher with CE.
+//! 2. `cachebuild` — one teacher pass over the packed stream; sparsify each
+//!    position (Top-K graph or the L1 RS sampler graph); quantize; write
+//!    shards through the async ring-buffer writer.
+//! 3. `trainer` — student training from the cache (or online teacher for
+//!    FullKD/dense ablations), covering every sparse-KD variant.
+//! 4. `evaluator` — LM loss, ECE, speculative acceptance, agreement.
+//! 5. `pipeline` — end-to-end experiment presets used by the benches.
+
+pub mod cachebuild;
+pub mod evaluator;
+pub mod pipeline;
+pub mod schedule;
+pub mod teacher;
+pub mod trainer;
+
+pub use cachebuild::{build_cache, CacheKind};
+pub use evaluator::{evaluate, EvalResult};
+pub use pipeline::{pct_ce_to_fullkd, Pipeline, PipelineConfig};
+pub use schedule::LrSchedule;
+pub use trainer::{train_student, AdaptiveLr, StudentMethod, TrainResult};

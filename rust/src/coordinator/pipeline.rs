@@ -1,0 +1,201 @@
+//! End-to-end experiment pipeline: corpus -> tokenizer -> packing -> teacher
+//! pre-training -> cache build -> student training -> evaluation. The bench
+//! targets compose these presets to regenerate each paper table/figure.
+
+use std::path::PathBuf;
+
+use anyhow::Result;
+
+use crate::cache::CacheReader;
+use crate::coordinator::cachebuild::{build_cache, BuildStats, CacheKind};
+use crate::coordinator::evaluator::{evaluate, EvalResult};
+use crate::coordinator::schedule::LrSchedule;
+use crate::coordinator::teacher;
+use crate::coordinator::trainer::{train_student, StudentMethod, TrainResult};
+use crate::data::corpus::CorpusConfig;
+use crate::data::loader::Loader;
+use crate::data::packing::pack;
+use crate::data::TextDataset;
+use crate::model::ModelState;
+use crate::runtime::Engine;
+
+#[derive(Clone, Debug)]
+pub struct PipelineConfig {
+    pub artifact_dir: PathBuf,
+    pub corpus: CorpusConfig,
+    pub target_tokens: usize,
+    pub teacher_steps: usize,
+    pub student_steps: usize,
+    pub teacher_lr: f32,
+    pub student_lr: f32,
+    /// teacher-side packing seed (cache stream addressing)
+    pub teacher_shuffle_seed: u64,
+    /// student-side packing seed; == teacher's for aligned runs (Table 13)
+    pub student_shuffle_seed: u64,
+    pub data_seed: u64,
+    pub eval_frac: f64,
+    pub eval_batches: usize,
+    pub work_dir: PathBuf,
+}
+
+impl Default for PipelineConfig {
+    fn default() -> Self {
+        PipelineConfig {
+            artifact_dir: PathBuf::from("artifacts/small"),
+            corpus: CorpusConfig::default(),
+            target_tokens: 260_000,
+            teacher_steps: 400,
+            student_steps: 300,
+            teacher_lr: 6e-4,
+            student_lr: 4e-4, // paper Appendix F
+            teacher_shuffle_seed: 11,
+            student_shuffle_seed: 11,
+            data_seed: 0,
+            eval_frac: 0.06,
+            eval_batches: 8,
+            work_dir: PathBuf::from("target/pipeline"),
+        }
+    }
+}
+
+impl PipelineConfig {
+    /// Smaller/faster preset for integration tests.
+    pub fn quick() -> PipelineConfig {
+        PipelineConfig {
+            target_tokens: 60_000,
+            teacher_steps: 60,
+            student_steps: 40,
+            eval_batches: 3,
+            ..Default::default()
+        }
+    }
+}
+
+/// A prepared pipeline: engine + data + pre-trained teacher, ready to train
+/// students under different methods (teacher work is shared across methods —
+/// exactly the cost structure the paper's offline caching exploits).
+pub struct Pipeline {
+    pub engine: Engine,
+    pub cfg: PipelineConfig,
+    pub teacher: ModelState,
+    pub teacher_losses: Vec<f32>,
+    /// training documents (token sequences) — repacked per shuffle seed
+    train_docs: Vec<Vec<u32>>,
+    eval_seqs: Vec<crate::data::packing::Sequence>,
+}
+
+impl Pipeline {
+    /// Build data, train the teacher. The *teacher* packed stream (packing
+    /// seed = `teacher_shuffle_seed`) defines the cache's position space.
+    pub fn prepare(cfg: PipelineConfig) -> Result<Pipeline> {
+        let engine = Engine::load(&cfg.artifact_dir)?;
+        let m = engine.manifest();
+        let ds = TextDataset::build(&cfg.corpus, m.vocab, cfg.target_tokens, cfg.data_seed);
+        // doc-level train/eval split so teacher and student can re-pack the
+        // same training docs under different shuffle seeds (Table 13)
+        let n_eval_docs = ((ds.docs.len() as f64 * cfg.eval_frac) as usize).max(2);
+        let mut docs = ds.docs;
+        let eval_docs = docs.split_off(docs.len() - n_eval_docs);
+        let eval_seqs = pack(&eval_docs, m.seq, 0);
+        let teacher_seqs = pack(&docs, m.seq, cfg.teacher_shuffle_seed);
+        let mut loader = Loader::new(teacher_seqs, m.batch, cfg.data_seed ^ 0x7EAC, true);
+        let (teacher, teacher_losses) =
+            teacher::pretrain(&engine, "teacher", &mut loader, cfg.teacher_steps, cfg.teacher_lr, 7)?;
+        Ok(Pipeline { engine, cfg, teacher, teacher_losses, train_docs: docs, eval_seqs })
+    }
+
+    /// Stream-ordered loader over the packing with `packing_seed` (the cache
+    /// is addressed in the `teacher_shuffle_seed` packing's position space;
+    /// a different seed here reproduces the paper's misalignment).
+    pub fn packed_loader(&self, packing_seed: u64, shuffle: bool, batch_seed: u64) -> Loader {
+        let m = self.engine.manifest();
+        let seqs = pack(&self.train_docs, m.seq, packing_seed);
+        Loader::new(seqs, m.batch, batch_seed, shuffle)
+    }
+
+    pub fn train_loader(&self, packing_seed: u64) -> Loader {
+        self.packed_loader(packing_seed, true, self.cfg.data_seed ^ 0x57)
+    }
+
+    pub fn eval_loader(&self) -> Loader {
+        let m = self.engine.manifest();
+        Loader::new(self.eval_seqs.clone(), m.batch, 0, false)
+    }
+
+    pub fn eval_sequences(&self) -> &[crate::data::packing::Sequence] {
+        &self.eval_seqs
+    }
+
+    /// Change the student-side packing seed (Table 13 misalignment knob).
+    pub fn set_student_packing_seed(&mut self, seed: u64) {
+        self.cfg.student_shuffle_seed = seed;
+    }
+
+    /// Continue CE training of an existing model (teacher adaptation /
+    /// instruction SFT) on an arbitrary doc set.
+    pub fn continue_ce(
+        &self,
+        state: &mut ModelState,
+        docs: &[Vec<u32>],
+        steps: usize,
+        lr: f32,
+    ) -> Result<Vec<f32>> {
+        let m = self.engine.manifest();
+        let seqs = pack(docs, m.seq, 1);
+        let mut loader = Loader::new(seqs, m.batch, 5, true);
+        teacher::continue_ce(&self.engine, state, &mut loader, steps,
+                             LrSchedule::Constant { base: lr })
+    }
+
+    /// Build a cache of `kind` under the work dir, addressed in the teacher
+    /// packing's position space.
+    pub fn build_cache(&self, kind: CacheKind, tag: &str, seed: u64) -> Result<(CacheReader, BuildStats)> {
+        let dir = self.cfg.work_dir.join(format!("cache-{tag}"));
+        let _ = std::fs::remove_dir_all(&dir);
+        let loader = self.packed_loader(self.cfg.teacher_shuffle_seed, false, 0);
+        let stats = build_cache(&self.engine, &self.teacher, &loader, kind, &dir, seed)?;
+        Ok((CacheReader::open(&dir)?, stats))
+    }
+
+    /// Train a fresh student with `method` and evaluate it.
+    pub fn run_student(
+        &self,
+        method: &StudentMethod,
+        cache: Option<&CacheReader>,
+        seed: i32,
+    ) -> Result<(ModelState, TrainResult, EvalResult)> {
+        let mut student = ModelState::init(&self.engine, "student", seed)?;
+        let mut loader = self.train_loader(self.cfg.student_shuffle_seed);
+        let schedule = LrSchedule::paper_default(self.cfg.student_lr, self.cfg.student_steps);
+        let tr = train_student(
+            &self.engine,
+            &mut student,
+            &mut loader,
+            self.cfg.student_steps,
+            schedule,
+            method,
+            cache,
+            Some(&self.teacher),
+        )?;
+        let ev = evaluate(&self.engine, &student, &self.eval_loader(), Some(&self.teacher),
+                          self.cfg.eval_batches)?;
+        Ok((student, tr, ev))
+    }
+}
+
+/// The paper's '% CE to FullKD' gap metric (Table 1 caption).
+pub fn pct_ce_to_fullkd(loss: f64, ce_loss: f64, fullkd_loss: f64) -> f64 {
+    100.0 * (ce_loss - loss) / (ce_loss - fullkd_loss).max(1e-9)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn pct_metric() {
+        assert!((pct_ce_to_fullkd(2.81, 2.81, 2.75) - 0.0).abs() < 1e-9);
+        assert!((pct_ce_to_fullkd(2.75, 2.81, 2.75) - 100.0).abs() < 1e-9);
+        assert!(pct_ce_to_fullkd(2.9, 2.81, 2.75) < 0.0);
+    }
+}

@@ -1,0 +1,68 @@
+//! Learning-rate schedule (paper Appendix F): linear warmup (4% of steps)
+//! into cosine decay to min_lr = lr/10, or constant.
+
+#[derive(Clone, Copy, Debug)]
+pub enum LrSchedule {
+    CosineWarmup { base: f32, warmup: usize, total: usize, min_ratio: f32 },
+    Constant { base: f32 },
+}
+
+impl LrSchedule {
+    pub fn paper_default(base: f32, total: usize) -> LrSchedule {
+        LrSchedule::CosineWarmup {
+            base,
+            warmup: (total as f32 * 0.04).ceil() as usize,
+            total,
+            min_ratio: 0.1,
+        }
+    }
+
+    pub fn at(&self, step: usize) -> f32 {
+        match *self {
+            LrSchedule::Constant { base } => base,
+            LrSchedule::CosineWarmup { base, warmup, total, min_ratio } => {
+                if warmup > 0 && step < warmup {
+                    return base * (step + 1) as f32 / warmup as f32;
+                }
+                let t = ((step - warmup) as f32 / (total.saturating_sub(warmup)).max(1) as f32)
+                    .clamp(0.0, 1.0);
+                let min = base * min_ratio;
+                min + 0.5 * (base - min) * (1.0 + (std::f32::consts::PI * t).cos())
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn warmup_ramps() {
+        let s = LrSchedule::CosineWarmup { base: 1.0, warmup: 10, total: 100, min_ratio: 0.1 };
+        assert!(s.at(0) < s.at(5));
+        assert!((s.at(9) - 1.0).abs() < 0.11);
+    }
+
+    #[test]
+    fn decays_to_min() {
+        let s = LrSchedule::CosineWarmup { base: 1.0, warmup: 10, total: 100, min_ratio: 0.1 };
+        assert!((s.at(100) - 0.1).abs() < 1e-5);
+        assert!(s.at(50) < 1.0 && s.at(50) > 0.1);
+    }
+
+    #[test]
+    fn constant_is_constant() {
+        let s = LrSchedule::Constant { base: 0.5 };
+        assert_eq!(s.at(0), 0.5);
+        assert_eq!(s.at(1_000_000), 0.5);
+    }
+
+    #[test]
+    fn monotone_after_warmup() {
+        let s = LrSchedule::paper_default(4e-4, 200);
+        for w in (8..200).collect::<Vec<_>>().windows(2) {
+            assert!(s.at(w[1]) <= s.at(w[0]) + 1e-9);
+        }
+    }
+}

@@ -1,0 +1,57 @@
+//! Teacher stage: CE pre-training of the teacher model, plus the short
+//! adaptation fine-tune of Table 11 (Sreenivas et al.: adapt the teacher on
+//! the student's data distribution before distilling).
+
+use anyhow::Result;
+
+use crate::coordinator::schedule::LrSchedule;
+use crate::data::loader::Loader;
+use crate::model::ModelState;
+use crate::runtime::{Engine, HostTensor};
+
+/// Pre-train `role` with CE for `steps`. Returns the state and loss curve.
+pub fn pretrain(
+    engine: &Engine,
+    role: &str,
+    loader: &mut Loader,
+    steps: usize,
+    base_lr: f32,
+    seed: i32,
+) -> Result<(ModelState, Vec<f32>)> {
+    let mut state = ModelState::init(engine, role, seed)?;
+    let losses = continue_ce(engine, &mut state, loader, steps, LrSchedule::paper_default(base_lr, steps))?;
+    Ok((state, losses))
+}
+
+/// Continue CE training on an existing state (adaptation, SFT).
+pub fn continue_ce(
+    engine: &Engine,
+    state: &mut ModelState,
+    loader: &mut Loader,
+    steps: usize,
+    schedule: LrSchedule,
+) -> Result<Vec<f32>> {
+    let m = engine.manifest();
+    let (b, s) = (m.batch, m.seq);
+    let graph = format!("train_ce_{}", state.role);
+    let mut losses = Vec::with_capacity(steps);
+    for step in 0..steps {
+        let batch = loader.next_batch();
+        let [p, mm, vv, st] = state.opt_inputs();
+        let mut outs = engine.call(
+            &graph,
+            &[
+                p,
+                mm,
+                vv,
+                st,
+                HostTensor::scalar_f32(schedule.at(step)),
+                HostTensor::i32(batch.tokens, &[b, s]),
+                HostTensor::i32(batch.labels, &[b, s]),
+            ],
+        )?;
+        state.absorb(&mut outs)?;
+        losses.push(outs[0].scalar()?);
+    }
+    Ok(losses)
+}

@@ -1,0 +1,254 @@
+//! Synthetic pre-training corpus generator.
+//!
+//! Substitutes Fineweb-Edu (paper §5.2): a word-level order-1 Markov chain
+//! whose unigram marginal follows a Zipf law — the hyperbolic token
+//! distribution (Kingsley 1935, paper §3.1) is the property that makes Top-K
+//! sparsification lossy and RS-KD work, so it is the thing we must preserve.
+//! Documents have topics (a topic reweights a subset of words), which gives
+//! real cross-document distribution shift for the packing-alignment
+//! experiment (Table 13) and the teacher-adaptation experiment (Table 11).
+
+use crate::util::rng::{Cdf, Pcg};
+
+#[derive(Clone, Debug)]
+pub struct CorpusConfig {
+    /// word inventory size
+    pub n_words: usize,
+    /// Zipf exponent for the unigram marginal (1.0 = classic)
+    pub zipf_s: f64,
+    /// number of latent topics
+    pub n_topics: usize,
+    /// how strongly a topic reweights its words
+    pub topic_boost: f64,
+    /// successors kept per word in the Markov chain
+    pub branching: usize,
+    /// document length range (words)
+    pub doc_len: (usize, usize),
+    pub seed: u64,
+}
+
+impl Default for CorpusConfig {
+    fn default() -> Self {
+        CorpusConfig {
+            n_words: 2000,
+            zipf_s: 1.0,
+            n_topics: 16,
+            topic_boost: 4.0,
+            branching: 24,
+            doc_len: (30, 300),
+            seed: 0,
+        }
+    }
+}
+
+impl CorpusConfig {
+    /// The "shifted" domain for Table 11: different tail exponent and topics.
+    pub fn shifted(&self) -> CorpusConfig {
+        CorpusConfig {
+            zipf_s: self.zipf_s * 1.25,
+            topic_boost: self.topic_boost * 2.0,
+            seed: self.seed ^ 0xD00D,
+            ..self.clone()
+        }
+    }
+}
+
+/// A generated corpus: documents of words, plus the generator tables so the
+/// true conditional distribution is known (useful for diagnostics).
+pub struct Corpus {
+    cfg: CorpusConfig,
+    words: Vec<String>,
+    unigram: Vec<f64>,
+    /// per-word successor lists: (word ids, cdf)
+    successors: Vec<(Vec<u32>, Cdf)>,
+    topics: Vec<Vec<u32>>, // word ids boosted by each topic
+}
+
+fn synth_word(rng: &mut Pcg, rank: usize) -> String {
+    // frequent words are short, rare words longer — like natural language
+    let len = 2 + (rank as f64).ln().max(0.0) as usize + rng.usize_below(3);
+    let mut s = String::new();
+    const C: &[u8] = b"bcdfghjklmnpqrstvwz";
+    const V: &[u8] = b"aeiou";
+    for i in 0..len {
+        let set = if i % 2 == 0 { C } else { V };
+        s.push(set[rng.usize_below(set.len())] as char);
+    }
+    s
+}
+
+impl Corpus {
+    pub fn build(cfg: &CorpusConfig) -> Corpus {
+        let mut rng = Pcg::new(cfg.seed);
+        let mut words = Vec::with_capacity(cfg.n_words);
+        for r in 0..cfg.n_words {
+            words.push(synth_word(&mut rng, r));
+        }
+        // Zipf unigram
+        let mut unigram: Vec<f64> =
+            (1..=cfg.n_words).map(|i| 1.0 / (i as f64).powf(cfg.zipf_s)).collect();
+        let z: f64 = unigram.iter().sum();
+        for u in unigram.iter_mut() {
+            *u /= z;
+        }
+        // Markov successors: each word keeps `branching` successors sampled
+        // from the unigram, with weights = unigram * noise (keeps marginal
+        // approximately Zipf while making context matter)
+        let uni_cdf = Cdf::new(&unigram);
+        let mut successors = Vec::with_capacity(cfg.n_words);
+        for _ in 0..cfg.n_words {
+            let mut ids = Vec::with_capacity(cfg.branching);
+            let mut ws = Vec::with_capacity(cfg.branching);
+            for _ in 0..cfg.branching {
+                let id = uni_cdf.sample(&mut rng);
+                ids.push(id as u32);
+                ws.push(unigram[id] * (0.25 + rng.f64() * 1.5));
+            }
+            successors.push((ids, Cdf::new(&ws)));
+        }
+        // topics: each boosts a random subset of mid-frequency words
+        let mut topics = Vec::with_capacity(cfg.n_topics);
+        for _ in 0..cfg.n_topics {
+            let n = cfg.n_words / 20;
+            let mut ids = Vec::with_capacity(n);
+            for _ in 0..n {
+                ids.push(rng.usize_below(cfg.n_words) as u32);
+            }
+            topics.push(ids);
+        }
+        Corpus { cfg: cfg.clone(), words, unigram, successors, topics }
+    }
+
+    pub fn n_words(&self) -> usize {
+        self.cfg.n_words
+    }
+
+    pub fn unigram(&self) -> &[f64] {
+        &self.unigram
+    }
+
+    /// Generate one document as text. `rng` controls doc identity.
+    pub fn gen_doc(&self, rng: &mut Pcg) -> String {
+        let (lo, hi) = self.cfg.doc_len;
+        let len = lo + rng.usize_below(hi - lo);
+        let topic = &self.topics[rng.usize_below(self.topics.len())];
+        let uni_cdf = Cdf::new(&self.unigram);
+        let mut cur = uni_cdf.sample(rng);
+        let mut out = String::new();
+        for i in 0..len {
+            if i > 0 {
+                out.push(' ');
+            }
+            out.push_str(&self.words[cur]);
+            // topic interrupt: jump to a boosted word
+            if !topic.is_empty() && rng.f64() < 1.0 / self.cfg.topic_boost.max(1.0) {
+                cur = topic[rng.usize_below(topic.len())] as usize;
+            } else {
+                let (ids, cdf) = &self.successors[cur];
+                cur = ids[cdf.sample(rng)] as usize;
+            }
+        }
+        out.push('.');
+        out
+    }
+
+    /// Generate `n` documents with a dedicated stream forked from `seed`.
+    pub fn gen_docs(&self, n: usize, seed: u64) -> Vec<String> {
+        let mut rng = Pcg::new(self.cfg.seed ^ seed.wrapping_mul(0x9E3779B97F4A7C15));
+        (0..n).map(|_| self.gen_doc(&mut rng)).collect()
+    }
+
+    /// Instruction-format documents for the SFT stage (Table 7 "IF SFT"):
+    /// "Q: <prompt words> A: <response words>" in the corpus grammar.
+    pub fn gen_instruction_doc(&self, rng: &mut Pcg) -> (String, String) {
+        let saved = self.cfg.doc_len;
+        let _ = saved;
+        let mut mk = |lo: usize, hi: usize| {
+            let len = lo + rng.usize_below(hi - lo);
+            let uni_cdf = Cdf::new(&self.unigram);
+            let mut cur = uni_cdf.sample(rng);
+            let mut s = String::new();
+            for i in 0..len {
+                if i > 0 {
+                    s.push(' ');
+                }
+                s.push_str(&self.words[cur]);
+                let (ids, cdf) = &self.successors[cur];
+                cur = ids[cdf.sample(rng)] as usize;
+            }
+            s
+        };
+        let prompt = mk(5, 20);
+        let response = mk(10, 60);
+        (prompt, response)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::collections::HashMap;
+
+    #[test]
+    fn deterministic_by_seed() {
+        let c = Corpus::build(&CorpusConfig::default());
+        assert_eq!(c.gen_docs(3, 7), c.gen_docs(3, 7));
+        assert_ne!(c.gen_docs(3, 7), c.gen_docs(3, 8));
+    }
+
+    #[test]
+    fn doc_lengths_in_range() {
+        let cfg = CorpusConfig { doc_len: (10, 20), ..Default::default() };
+        let c = Corpus::build(&cfg);
+        for d in c.gen_docs(20, 0) {
+            let n = d.split_whitespace().count();
+            assert!((10..=20).contains(&n), "{n}");
+        }
+    }
+
+    #[test]
+    fn unigram_is_zipf_normalized() {
+        let c = Corpus::build(&CorpusConfig::default());
+        let total: f64 = c.unigram().iter().sum();
+        assert!((total - 1.0).abs() < 1e-9);
+        assert!(c.unigram()[0] > c.unigram()[10]);
+        assert!(c.unigram()[10] > c.unigram()[500]);
+    }
+
+    #[test]
+    fn empirical_word_freq_is_heavy_tailed() {
+        let c = Corpus::build(&CorpusConfig::default());
+        let docs = c.gen_docs(200, 1);
+        let mut counts: HashMap<&str, usize> = HashMap::new();
+        let mut total = 0usize;
+        for d in &docs {
+            for w in d.split_whitespace() {
+                *counts.entry(w.trim_end_matches('.')).or_default() += 1;
+                total += 1;
+            }
+        }
+        let mut freqs: Vec<usize> = counts.values().copied().collect();
+        freqs.sort_unstable_by(|a, b| b.cmp(a));
+        // head mass: the top 1% of words should carry a large share
+        let head: usize = freqs.iter().take(freqs.len() / 100 + 1).sum();
+        assert!(head as f64 / total as f64 > 0.1, "head share {}", head as f64 / total as f64);
+    }
+
+    #[test]
+    fn shifted_domain_differs() {
+        let cfg = CorpusConfig::default();
+        let a = Corpus::build(&cfg);
+        let b = Corpus::build(&cfg.shifted());
+        assert_ne!(a.gen_docs(2, 0), b.gen_docs(2, 0));
+        // steeper zipf = heavier head
+        assert!(b.unigram()[0] > a.unigram()[0]);
+    }
+
+    #[test]
+    fn instruction_docs_have_both_parts() {
+        let c = Corpus::build(&CorpusConfig::default());
+        let mut rng = Pcg::new(3);
+        let (p, r) = c.gen_instruction_doc(&mut rng);
+        assert!(!p.is_empty() && !r.is_empty());
+    }
+}

@@ -1,0 +1,160 @@
+//! Batch loader: seeded epoch shuffling over packed sequences, yielding
+//! `[B, S]` token/label batches as flat i32 buffers ready for the runtime.
+
+use crate::data::packing::Sequence;
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct Batch {
+    /// flat [B, S] row-major
+    pub tokens: Vec<i32>,
+    pub labels: Vec<i32>,
+    /// per-row stream offsets (cache addressing)
+    pub offsets: Vec<usize>,
+    pub batch: usize,
+    pub seq: usize,
+}
+
+pub struct Loader {
+    seqs: Vec<Sequence>,
+    batch: usize,
+    seq: usize,
+    order: Vec<usize>,
+    cursor: usize,
+    epoch: u64,
+    seed: u64,
+    shuffle: bool,
+}
+
+impl Loader {
+    pub fn new(seqs: Vec<Sequence>, batch: usize, seed: u64, shuffle: bool) -> Loader {
+        assert!(!seqs.is_empty(), "empty dataset");
+        let seq = seqs[0].tokens.len();
+        let mut l = Loader {
+            seqs,
+            batch,
+            seq,
+            order: Vec::new(),
+            cursor: 0,
+            epoch: 0,
+            seed,
+            shuffle,
+        };
+        l.reshuffle();
+        l
+    }
+
+    fn reshuffle(&mut self) {
+        self.order = (0..self.seqs.len()).collect();
+        if self.shuffle {
+            let mut rng = Pcg::new(self.seed ^ self.epoch.wrapping_mul(0x9E3779B97F4A7C15));
+            rng.shuffle(&mut self.order);
+        }
+        self.cursor = 0;
+    }
+
+    pub fn len(&self) -> usize {
+        self.seqs.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.seqs.is_empty()
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    /// Next `[B, S]` batch; wraps to a new shuffled epoch as needed.
+    pub fn next_batch(&mut self) -> Batch {
+        let (b, s) = (self.batch, self.seq);
+        let mut tokens = Vec::with_capacity(b * s);
+        let mut labels = Vec::with_capacity(b * s);
+        let mut offsets = Vec::with_capacity(b);
+        for _ in 0..b {
+            if self.cursor >= self.order.len() {
+                self.epoch += 1;
+                self.reshuffle();
+            }
+            let sq = &self.seqs[self.order[self.cursor]];
+            self.cursor += 1;
+            tokens.extend(sq.tokens.iter().map(|&t| t as i32));
+            labels.extend(sq.labels.iter().map(|&t| t as i32));
+            offsets.push(sq.stream_offset);
+        }
+        Batch { tokens, labels, offsets, batch: b, seq: s }
+    }
+
+    /// Deterministic full pass in stream order (for eval / cache building).
+    pub fn iter_eval(&self) -> impl Iterator<Item = Batch> + '_ {
+        let (b, s) = (self.batch, self.seq);
+        self.seqs.chunks(b).filter(move |c| c.len() == b).map(move |chunk| {
+            let mut tokens = Vec::with_capacity(b * s);
+            let mut labels = Vec::with_capacity(b * s);
+            let mut offsets = Vec::with_capacity(b);
+            for sq in chunk {
+                tokens.extend(sq.tokens.iter().map(|&t| t as i32));
+                labels.extend(sq.labels.iter().map(|&t| t as i32));
+                offsets.push(sq.stream_offset);
+            }
+            Batch { tokens, labels, offsets, batch: b, seq: s }
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::packing::pack;
+
+    fn seqs() -> Vec<Sequence> {
+        let docs: Vec<Vec<u32>> = (0..30).map(|i| vec![(i + 1) as u32; 9]).collect();
+        pack(&docs, 8, 0)
+    }
+
+    #[test]
+    fn batch_shapes() {
+        let mut l = Loader::new(seqs(), 4, 0, true);
+        let b = l.next_batch();
+        assert_eq!(b.tokens.len(), 4 * 8);
+        assert_eq!(b.labels.len(), 4 * 8);
+        assert_eq!(b.offsets.len(), 4);
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let mut a = Loader::new(seqs(), 4, 5, true);
+        let mut b = Loader::new(seqs(), 4, 5, true);
+        for _ in 0..10 {
+            assert_eq!(a.next_batch().tokens, b.next_batch().tokens);
+        }
+    }
+
+    #[test]
+    fn epochs_reshuffle() {
+        let n = seqs().len();
+        let mut l = Loader::new(seqs(), 4, 1, true);
+        let first_epoch: Vec<Vec<i32>> =
+            (0..n / 4).map(|_| l.next_batch().tokens).collect();
+        let second_epoch: Vec<Vec<i32>> =
+            (0..n / 4).map(|_| l.next_batch().tokens).collect();
+        assert!(l.epoch() >= 1);
+        assert_ne!(first_epoch, second_epoch);
+    }
+
+    #[test]
+    fn eval_iter_is_stream_ordered() {
+        let l = Loader::new(seqs(), 4, 9, true);
+        let offs: Vec<usize> = l.iter_eval().flat_map(|b| b.offsets).collect();
+        let mut sorted = offs.clone();
+        sorted.sort();
+        assert_eq!(offs, sorted);
+    }
+
+    #[test]
+    fn unshuffled_is_stream_ordered() {
+        let mut l = Loader::new(seqs(), 2, 0, false);
+        let b1 = l.next_batch();
+        assert_eq!(b1.offsets, vec![0, 8]);
+    }
+}

@@ -1,0 +1,234 @@
+//! Byte-level BPE tokenizer trained on the synthetic corpus.
+//!
+//! The paper distills over a 100k-token LLM vocabulary; our models use a
+//! V=512 vocabulary (DESIGN.md §4), so the tokenizer trains 256 base byte
+//! tokens + up to `vocab-256` merges. Special ids: 0 = EOS/document
+//! separator (byte 0x00 never occurs in text).
+
+use std::collections::HashMap;
+
+pub const EOS: u32 = 0;
+
+#[derive(Clone, Debug)]
+pub struct Bpe {
+    /// merge rank: (left, right) -> merged token id (rank order = id order)
+    merges: HashMap<(u32, u32), u32>,
+    /// token id -> byte string
+    pieces: Vec<Vec<u8>>,
+    vocab: usize,
+}
+
+impl Bpe {
+    /// Train on `text` until `vocab` tokens exist (256 bytes + merges).
+    pub fn train(text: &str, vocab: usize) -> Bpe {
+        assert!(vocab >= 256, "vocab must cover the byte alphabet");
+        let mut pieces: Vec<Vec<u8>> = (0..=255u8).map(|b| vec![b]).collect();
+        let mut merges = HashMap::new();
+
+        // working corpus as token sequences per word (BPE never merges
+        // across spaces; the space byte is glued to the following word like
+        // GPT-2's byte-level BPE)
+        let mut words: HashMap<Vec<u32>, usize> = HashMap::new();
+        for w in split_pretoken(text) {
+            *words.entry(w.bytes().map(|b| b as u32).collect()).or_default() += 1;
+        }
+
+        while pieces.len() < vocab {
+            let mut counts: HashMap<(u32, u32), usize> = HashMap::new();
+            for (toks, n) in &words {
+                for pair in toks.windows(2) {
+                    *counts.entry((pair[0], pair[1])).or_default() += n;
+                }
+            }
+            let Some((&best, &cnt)) = counts.iter().max_by_key(|(p, c)| (**c, std::cmp::Reverse(**p)))
+            else {
+                break;
+            };
+            if cnt < 2 {
+                break;
+            }
+            let new_id = pieces.len() as u32;
+            let mut merged_piece = pieces[best.0 as usize].clone();
+            merged_piece.extend_from_slice(&pieces[best.1 as usize]);
+            pieces.push(merged_piece);
+            merges.insert(best, new_id);
+
+            // apply the merge to the working corpus
+            let old: Vec<(Vec<u32>, usize)> = words.drain().collect();
+            for (toks, n) in old {
+                let merged = apply_one_merge(&toks, best, new_id);
+                *words.entry(merged).or_default() += n;
+            }
+        }
+        Bpe { merges, pieces, vocab }
+    }
+
+    pub fn vocab_size(&self) -> usize {
+        self.vocab
+    }
+
+    /// Encode text to token ids (never emits EOS; add it between documents).
+    pub fn encode(&self, text: &str) -> Vec<u32> {
+        let mut out = Vec::with_capacity(text.len() / 2);
+        for w in split_pretoken(text) {
+            let mut toks: Vec<u32> = w.bytes().map(|b| b as u32).collect();
+            // repeatedly apply the lowest-id (earliest-learned) applicable merge
+            loop {
+                let mut best: Option<(usize, u32)> = None; // (pos, new_id)
+                for (i, pair) in toks.windows(2).enumerate() {
+                    if let Some(&id) = self.merges.get(&(pair[0], pair[1])) {
+                        if best.map(|(_, b)| id < b).unwrap_or(true) {
+                            best = Some((i, id));
+                        }
+                    }
+                }
+                match best {
+                    Some((i, id)) => {
+                        toks[i] = id;
+                        toks.remove(i + 1);
+                    }
+                    None => break,
+                }
+            }
+            out.extend(toks);
+        }
+        out
+    }
+
+    /// Decode token ids back to text (lossy only on invalid UTF-8 boundaries).
+    pub fn decode(&self, toks: &[u32]) -> String {
+        let mut bytes = Vec::new();
+        for &t in toks {
+            if t == EOS {
+                bytes.push(b'\n');
+                continue;
+            }
+            if let Some(p) = self.pieces.get(t as usize) {
+                bytes.extend_from_slice(p);
+            }
+        }
+        String::from_utf8_lossy(&bytes).into_owned()
+    }
+
+    /// Encode a document stream, separating documents with EOS.
+    pub fn encode_docs(&self, docs: &[String]) -> Vec<Vec<u32>> {
+        docs.iter().map(|d| self.encode(d)).collect()
+    }
+}
+
+/// GPT-2-style pre-tokenization: split into (space-prefixed) word chunks so
+/// merges never cross word boundaries.
+fn split_pretoken(text: &str) -> Vec<String> {
+    let mut out = Vec::new();
+    let mut cur = String::new();
+    for ch in text.chars() {
+        if ch == ' ' {
+            if !cur.is_empty() {
+                out.push(std::mem::take(&mut cur));
+            }
+            cur.push(' ');
+        } else {
+            cur.push(ch);
+        }
+    }
+    if !cur.is_empty() {
+        out.push(cur);
+    }
+    out
+}
+
+fn apply_one_merge(toks: &[u32], pair: (u32, u32), new_id: u32) -> Vec<u32> {
+    let mut out = Vec::with_capacity(toks.len());
+    let mut i = 0;
+    while i < toks.len() {
+        if i + 1 < toks.len() && toks[i] == pair.0 && toks[i + 1] == pair.1 {
+            out.push(new_id);
+            i += 2;
+        } else {
+            out.push(toks[i]);
+            i += 1;
+        }
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::data::corpus::{Corpus, CorpusConfig};
+
+    fn sample_text() -> String {
+        let c = Corpus::build(&CorpusConfig { n_words: 300, ..Default::default() });
+        c.gen_docs(40, 0).join(" ")
+    }
+
+    #[test]
+    fn roundtrip_identity() {
+        let text = sample_text();
+        let bpe = Bpe::train(&text, 420);
+        let enc = bpe.encode(&text);
+        assert_eq!(bpe.decode(&enc), text);
+    }
+
+    #[test]
+    fn roundtrip_on_unseen_text() {
+        let bpe = Bpe::train(&sample_text(), 420);
+        let unseen = "zzqx unseen-words 123 !? with punctuation";
+        assert_eq!(bpe.decode(&bpe.encode(unseen)), unseen);
+    }
+
+    #[test]
+    fn merges_compress() {
+        let text = sample_text();
+        let bpe = Bpe::train(&text, 512);
+        let enc = bpe.encode(&text);
+        assert!(enc.len() < text.len() / 2, "{} vs {}", enc.len(), text.len());
+    }
+
+    #[test]
+    fn ids_below_vocab() {
+        let text = sample_text();
+        let bpe = Bpe::train(&text, 400);
+        for id in bpe.encode(&text) {
+            assert!((id as usize) < 400);
+        }
+    }
+
+    #[test]
+    fn never_emits_eos() {
+        let text = sample_text();
+        let bpe = Bpe::train(&text, 400);
+        assert!(!bpe.encode(&text).contains(&EOS));
+    }
+
+    #[test]
+    fn deterministic_training() {
+        let text = sample_text();
+        let a = Bpe::train(&text, 350);
+        let b = Bpe::train(&text, 350);
+        assert_eq!(a.encode(&text), b.encode(&text));
+    }
+
+    #[test]
+    fn property_roundtrip_random_ascii() {
+        use crate::util::{rng::Pcg, testing::forall};
+        let bpe = Bpe::train(&sample_text(), 420);
+        forall(
+            30,
+            |rng: &mut Pcg| {
+                let len = 1 + rng.usize_below(60);
+                (0..len)
+                    .map(|_| (b' ' + rng.below(95) as u8) as char)
+                    .collect::<String>()
+            },
+            |s| {
+                let got = bpe.decode(&bpe.encode(s));
+                if &got == s {
+                    Ok(())
+                } else {
+                    Err(format!("{got:?} != {s:?}"))
+                }
+            },
+        );
+    }
+}

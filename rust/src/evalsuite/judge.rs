@@ -1,0 +1,58 @@
+//! LLM-as-judge proxy (paper Table 8 used Llama-3.1-405B; offline we use the
+//! *teacher* as judge): a model's response to an instruction prompt is scored
+//! by the likelihood the judge assigns to it, reported as a ratio to the
+//! judge's score of the reference response — the same
+//! score(model)/score(reference) protocol as the paper's E.3.
+
+use anyhow::Result;
+
+use crate::evalsuite::{continuation_logprob, generate_greedy};
+use crate::model::ModelState;
+use crate::runtime::Engine;
+
+#[derive(Clone, Debug)]
+pub struct JudgeReport {
+    /// per-dataset scores (0..~100), higher = closer to reference quality
+    pub scores: Vec<(String, f64)>,
+    pub average: f64,
+}
+
+/// Evaluate `student` on instruction datasets: for each (prompt, reference)
+/// pair, greedy-generate a response, judge both under `judge_model`, score =
+/// 100 * exp(lp_model − max(lp_model, lp_reference)) (length-normalized).
+pub fn judge_scores(
+    engine: &Engine,
+    student: &ModelState,
+    judge_model: &ModelState,
+    datasets: &[(String, Vec<(Vec<u32>, Vec<u32>)>)],
+    gen_tokens: usize,
+) -> Result<JudgeReport> {
+    let b = engine.manifest().batch;
+    let mut scores = Vec::new();
+    for (name, pairs) in datasets {
+        let mut total = 0.0f64;
+        let mut n = 0usize;
+        for chunk in pairs.chunks(b) {
+            if chunk.len() < b {
+                break;
+            }
+            let prompts: Vec<Vec<u32>> = chunk.iter().map(|(p, _)| p.clone()).collect();
+            let gens = generate_greedy(engine, student, &prompts, gen_tokens)?;
+            let model_rows: Vec<(Vec<u32>, Vec<u32>)> =
+                prompts.iter().cloned().zip(gens.into_iter()).collect();
+            let ref_rows: Vec<(Vec<u32>, Vec<u32>)> = chunk.to_vec();
+            let lp_model = continuation_logprob(engine, judge_model, &model_rows)?;
+            let lp_ref = continuation_logprob(engine, judge_model, &ref_rows)?;
+            for (m, r) in lp_model.iter().zip(lp_ref.iter()) {
+                // pairwise Bradley-Terry score under the judge: 50 = parity
+                // with the reference response, >50 = judged better
+                let s = 100.0 / (1.0 + (r - m).exp());
+                total += s;
+                n += 1;
+            }
+        }
+        scores.push((name.clone(), total / n.max(1) as f64));
+    }
+    let average = scores.iter().map(|(_, s)| s).sum::<f64>() / scores.len().max(1) as f64;
+    Ok(JudgeReport { scores, average })
+}

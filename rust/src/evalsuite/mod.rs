@@ -1,0 +1,112 @@
+//! Downstream evaluation suite (substitutes lm-eval-harness + LLM-as-judge,
+//! see DESIGN.md §4): synthetic 0-shot multiple-choice tasks scored by
+//! likelihood, instruction SFT data, generation, and a teacher-likelihood
+//! judge.
+
+pub mod judge;
+pub mod tasks;
+
+pub use judge::{judge_scores, JudgeReport};
+pub use tasks::{zero_shot_score, ClozeTask};
+
+use anyhow::Result;
+
+use crate::model::ModelState;
+use crate::runtime::{Engine, HostTensor};
+
+/// Greedy generation: extend each of the B prompt rows by `new_tokens`,
+/// re-running the forward at each step via `next_probs_<role>` (positions
+/// are static-shape, so prompts are padded into the fixed [B, S] window).
+pub fn generate_greedy(
+    engine: &Engine,
+    model: &ModelState,
+    prompts: &[Vec<u32>],
+    new_tokens: usize,
+) -> Result<Vec<Vec<u32>>> {
+    let m = engine.manifest();
+    let (b, s, _v) = (m.batch, m.seq, m.vocab);
+    assert!(prompts.len() == b, "need exactly B prompts");
+    let plen = prompts.iter().map(|p| p.len()).max().unwrap_or(0);
+    assert!(plen + new_tokens <= s, "prompt + generation must fit the window");
+    let mut tokens = vec![0i32; b * s];
+    for (r, p) in prompts.iter().enumerate() {
+        for (i, &t) in p.iter().enumerate() {
+            tokens[r * s + i] = t as i32;
+        }
+    }
+    let graph = format!("next_probs_{}", model.role);
+    let mut out: Vec<Vec<u32>> = vec![Vec::new(); b];
+    for step in 0..new_tokens {
+        let pos = (plen + step - 1) as i32;
+        let probs = engine
+            .call(
+                &graph,
+                &[
+                    model.params_tensor(),
+                    HostTensor::i32(tokens.clone(), &[b, s]),
+                    HostTensor::scalar_i32(pos),
+                ],
+            )?
+            .remove(0);
+        let pv = probs.as_f32()?;
+        let v = pv.len() / b;
+        for r in 0..b {
+            let row = &pv[r * v..(r + 1) * v];
+            let next = row
+                .iter()
+                .enumerate()
+                .max_by(|a, bb| a.1.partial_cmp(bb.1).unwrap())
+                .map(|(i, _)| i as u32)
+                .unwrap_or(0);
+            out[r].push(next);
+            tokens[r * s + plen + step] = next as i32;
+        }
+    }
+    Ok(out)
+}
+
+/// Mean per-token log-likelihood that `model` assigns to `continuation`
+/// after `prompt` (used by both the judge and option scoring).
+pub fn continuation_logprob(
+    engine: &Engine,
+    model: &ModelState,
+    rows: &[(Vec<u32>, Vec<u32>)],
+) -> Result<Vec<f64>> {
+    let m = engine.manifest();
+    let (b, s) = (m.batch, m.seq);
+    assert!(rows.len() == b);
+    let mut tokens = vec![0i32; b * s];
+    let mut labels = vec![0i32; b * s];
+    let mut spans = Vec::with_capacity(b);
+    for (r, (prompt, cont)) in rows.iter().enumerate() {
+        let full: Vec<u32> = prompt.iter().chain(cont.iter()).copied().collect();
+        assert!(full.len() <= s, "row too long");
+        for (i, &t) in full.iter().enumerate() {
+            tokens[r * s + i] = t as i32;
+        }
+        for i in 0..full.len().saturating_sub(1) {
+            labels[r * s + i] = full[i + 1] as i32;
+        }
+        // positions predicting the continuation: [len(prompt)-1, len(full)-1)
+        spans.push((prompt.len().saturating_sub(1), full.len().saturating_sub(1)));
+    }
+    let outs = engine.call(
+        &format!("eval_{}", model.role),
+        &[
+            model.params_tensor(),
+            HostTensor::i32(tokens, &[b, s]),
+            HostTensor::i32(labels, &[b, s]),
+        ],
+    )?;
+    let label_prob = outs[3].as_f32()?;
+    let mut scores = Vec::with_capacity(b);
+    for (r, (lo, hi)) in spans.iter().enumerate() {
+        let mut lp = 0.0f64;
+        let n = (hi - lo).max(1);
+        for i in *lo..*hi {
+            lp += (label_prob[r * s + i].max(1e-9) as f64).ln();
+        }
+        scores.push(lp / n as f64);
+    }
+    Ok(scores)
+}

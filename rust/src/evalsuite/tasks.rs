@@ -1,0 +1,136 @@
+//! Synthetic 0-shot NLU tasks: multiple-choice cloze items built from
+//! held-out corpus sequences — given a prefix, pick the true continuation
+//! against distractors sampled from elsewhere in the corpus, scored by model
+//! likelihood (the same mechanism lm-eval-harness uses for ARC/HellaSwag/
+//! PiQA-style tasks).
+
+use anyhow::Result;
+
+use crate::data::packing::Sequence;
+use crate::evalsuite::continuation_logprob;
+use crate::model::ModelState;
+use crate::runtime::Engine;
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct ClozeTask {
+    pub prefix: Vec<u32>,
+    /// options[0] is always the true continuation
+    pub options: Vec<Vec<u32>>,
+}
+
+/// Build `n` 4-way items: prefix of `prefix_len` tokens, true next
+/// `cont_len` tokens vs 3 distractor spans from other sequences.
+pub fn build_cloze_tasks(
+    seqs: &[Sequence],
+    n: usize,
+    prefix_len: usize,
+    cont_len: usize,
+    seed: u64,
+) -> Vec<ClozeTask> {
+    let mut rng = Pcg::new(seed);
+    let mut tasks = Vec::with_capacity(n);
+    let usable: Vec<&Sequence> =
+        seqs.iter().filter(|s| s.tokens.len() >= prefix_len + cont_len).collect();
+    if usable.is_empty() {
+        return tasks;
+    }
+    for _ in 0..n {
+        let s = usable[rng.usize_below(usable.len())];
+        let start = rng.usize_below(s.tokens.len() - prefix_len - cont_len + 1);
+        let prefix = s.tokens[start..start + prefix_len].to_vec();
+        let truth = s.tokens[start + prefix_len..start + prefix_len + cont_len].to_vec();
+        let mut options = vec![truth];
+        for _ in 0..3 {
+            let d = usable[rng.usize_below(usable.len())];
+            let ds = rng.usize_below(d.tokens.len() - cont_len + 1);
+            options.push(d.tokens[ds..ds + cont_len].to_vec());
+        }
+        tasks.push(ClozeTask { prefix, options });
+    }
+    tasks
+}
+
+/// 0-shot accuracy (%): fraction of items whose true continuation gets the
+/// highest per-token log-likelihood. Items are packed 2-per-batch
+/// (4 options x 2 = 8 = B rows).
+pub fn zero_shot_score(
+    engine: &Engine,
+    model: &ModelState,
+    tasks: &[ClozeTask],
+) -> Result<f64> {
+    let b = engine.manifest().batch;
+    let per_batch = b / 4;
+    assert!(per_batch >= 1, "batch too small for 4-way items");
+    let mut correct = 0usize;
+    let mut total = 0usize;
+    for chunk in tasks.chunks(per_batch) {
+        if chunk.len() < per_batch {
+            break;
+        }
+        let mut rows = Vec::with_capacity(b);
+        for t in chunk {
+            for opt in &t.options {
+                rows.push((t.prefix.clone(), opt.clone()));
+            }
+        }
+        let scores = continuation_logprob(engine, model, &rows)?;
+        for (i, _t) in chunk.iter().enumerate() {
+            let s = &scores[i * 4..(i + 1) * 4];
+            let best = s
+                .iter()
+                .enumerate()
+                .max_by(|a, bb| a.1.partial_cmp(bb.1).unwrap())
+                .map(|(j, _)| j)
+                .unwrap();
+            if best == 0 {
+                correct += 1;
+            }
+            total += 1;
+        }
+    }
+    Ok(100.0 * correct as f64 / total.max(1) as f64)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn seqs() -> Vec<Sequence> {
+        (0..20)
+            .map(|i| Sequence {
+                tokens: (0..64).map(|j| ((i * 7 + j * 3) % 100) as u32).collect(),
+                labels: (0..64).map(|j| ((i * 7 + (j + 1) * 3) % 100) as u32).collect(),
+                stream_offset: i * 64,
+            })
+            .collect()
+    }
+
+    #[test]
+    fn tasks_have_four_options() {
+        let tasks = build_cloze_tasks(&seqs(), 10, 16, 4, 0);
+        assert_eq!(tasks.len(), 10);
+        for t in &tasks {
+            assert_eq!(t.options.len(), 4);
+            assert_eq!(t.prefix.len(), 16);
+            assert!(t.options.iter().all(|o| o.len() == 4));
+        }
+    }
+
+    #[test]
+    fn deterministic_by_seed() {
+        let a = build_cloze_tasks(&seqs(), 5, 8, 4, 1);
+        let b = build_cloze_tasks(&seqs(), 5, 8, 4, 1);
+        assert_eq!(a.len(), b.len());
+        for (x, y) in a.iter().zip(b.iter()) {
+            assert_eq!(x.prefix, y.prefix);
+            assert_eq!(x.options, y.options);
+        }
+    }
+
+    #[test]
+    fn skips_short_sequences() {
+        let short = vec![Sequence { tokens: vec![1, 2, 3], labels: vec![2, 3, 4], stream_offset: 0 }];
+        assert!(build_cloze_tasks(&short, 5, 16, 4, 0).is_empty());
+    }
+}

@@ -1,0 +1,26 @@
+//! # rskd — Random Sampling Knowledge Distillation
+//!
+//! Reproduction of *"Sparse Logit Sampling: Accelerating Knowledge
+//! Distillation in LLMs"* (ACL 2025) as a three-layer Rust + JAX + Pallas
+//! system: Pallas kernels (L1) and a JAX transformer (L2) are AOT-lowered to
+//! HLO text at build time; this crate (L3) owns the entire offline
+//! distillation pipeline — teacher pre-training, sparse logit caching with
+//! 24-bit quantization, student training with every sparse-KD variant the
+//! paper studies, and the evaluation/benchmark harness that regenerates the
+//! paper's tables and figures.
+//!
+//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for results.
+
+pub mod cache;
+pub mod coordinator;
+pub mod data;
+pub mod evalsuite;
+pub mod expt;
+pub mod report;
+pub mod specdecode;
+pub mod metrics;
+pub mod model;
+pub mod runtime;
+pub mod sampling;
+pub mod toynn;
+pub mod util;

@@ -1,0 +1,231 @@
+//! rskd launcher: run pipeline stages and experiments from the command line.
+//!
+//! ```text
+//! rskd pipeline [--method ce|fullkd|topk|rs|...] [--steps N] [--quick=true]
+//! rskd toy      [--task gauss|image]
+//! rskd zipf     [--k N] [--rounds N]
+//! rskd info     [--artifacts DIR]
+//! ```
+
+use std::path::PathBuf;
+
+use anyhow::{bail, Result};
+
+use rskd::coordinator::{pct_ce_to_fullkd, CacheKind, Pipeline, PipelineConfig, StudentMethod};
+use rskd::coordinator::trainer::SparseVariant;
+use rskd::report::{final_loss, Report};
+use rskd::sampling::Method;
+use rskd::toynn::train::train_teacher;
+use rskd::toynn::{train_toy, GaussianClasses, ToyImages, ToyMethod, ToyTrainConfig};
+use rskd::util::cli::Args;
+
+fn main() {
+    if let Err(e) = run() {
+        eprintln!("error: {e:#}");
+        std::process::exit(1);
+    }
+}
+
+fn parse_method(args: &Args) -> Result<(StudentMethod, Option<CacheKind>)> {
+    let k = args.usize_or("k", 12);
+    let rounds = args.usize_or("rounds", 50) as u32;
+    let temp = args.f32_or("temp", 1.0);
+    let alpha = args.f32_or("alpha", 0.0);
+    Ok(match args.str_or("method", "rs").as_str() {
+        "ce" => (StudentMethod::Ce, None),
+        "fullkd" => (StudentMethod::DenseOnline { kind: "kld", alpha }, None),
+        "rkl" => (StudentMethod::DenseOnline { kind: "rkl", alpha }, None),
+        "mse" => (StudentMethod::DenseOnline { kind: "mse", alpha }, None),
+        "l1" => (StudentMethod::DenseOnline { kind: "l1", alpha }, None),
+        "frkl" => (StudentMethod::DenseOnline { kind: "frkl", alpha }, None),
+        "topk" => (
+            StudentMethod::Sparse {
+                variant: SparseVariant::TopK { k, normalize: false },
+                alpha,
+                adaptive: None,
+            },
+            Some(CacheKind::TopK),
+        ),
+        "ghost" => (
+            StudentMethod::Sparse { variant: SparseVariant::GhostToken { k }, alpha, adaptive: None },
+            Some(CacheKind::TopK),
+        ),
+        "naive" => (
+            StudentMethod::Sparse { variant: SparseVariant::NaiveFix { k }, alpha, adaptive: None },
+            Some(CacheKind::TopK),
+        ),
+        "smooth" => (
+            StudentMethod::Sparse { variant: SparseVariant::Smoothing { k }, alpha, adaptive: None },
+            Some(CacheKind::TopK),
+        ),
+        "rs" => (
+            StudentMethod::Sparse { variant: SparseVariant::Rs, alpha, adaptive: None },
+            Some(CacheKind::Rs { rounds, temp }),
+        ),
+        other => bail!("unknown method {other:?}"),
+    })
+}
+
+fn cmd_pipeline(args: &Args) -> Result<()> {
+    let mut cfg = if args.bool_or("quick", false) {
+        PipelineConfig::quick()
+    } else {
+        PipelineConfig::default()
+    };
+    cfg.artifact_dir = PathBuf::from(args.str_or("artifacts", "artifacts/small"));
+    if let Some(s) = args.get("steps") {
+        cfg.student_steps = s.parse()?;
+    }
+    if let Some(s) = args.get("teacher-steps") {
+        cfg.teacher_steps = s.parse()?;
+    }
+    let (method, cache_kind) = parse_method(args)?;
+
+    println!("== preparing pipeline (teacher pre-training) ==");
+    let pipe = Pipeline::prepare(cfg)?;
+    println!(
+        "teacher: {} params, final CE loss {:.3}",
+        pipe.teacher.param_count(),
+        pipe.teacher_losses.last().copied().unwrap_or(f32::NAN)
+    );
+
+    let cache = match cache_kind {
+        Some(kind) => {
+            println!("== building sparse logit cache ({kind:?}) ==");
+            let (reader, stats) = pipe.build_cache(kind, "cli", 99)?;
+            println!(
+                "cache: {} positions, {:.1} avg unique tokens, {} bytes ({:.2} B/token)",
+                stats.cache.positions,
+                stats.avg_unique_tokens,
+                stats.cache.bytes,
+                stats.cache.bytes as f64 / stats.cache.positions.max(1) as f64,
+            );
+            Some(reader)
+        }
+        None => None,
+    };
+
+    println!("== training student ({method:?}) ==");
+    let (_student, tr, ev) = pipe.run_student(&method, cache.as_ref(), 3)?;
+    println!(
+        "train: {} steps, final loss {:.3}, {:.0} tokens/sec{}",
+        tr.steps,
+        final_loss(&tr),
+        tr.tokens_per_sec,
+        if tr.diverged { " [DIVERGED]" } else { "" }
+    );
+    println!(
+        "eval: LM loss {:.3} | ECE {:.1}% | spec-accept {:.1}% | agree {:.1}%",
+        ev.lm_loss, ev.ece_pct, ev.spec_accept_pct, ev.agree_pct
+    );
+    let s = pipe.engine.stats();
+    println!(
+        "engine: {} compiles ({:.1}s), {} execs ({:.1}s exec, {:.1}s transfer)",
+        s.compiles,
+        s.compile_time.as_secs_f64(),
+        s.executions,
+        s.execute_time.as_secs_f64(),
+        s.transfer_time.as_secs_f64()
+    );
+    Ok(())
+}
+
+fn cmd_toy(args: &Args) -> Result<()> {
+    let task = args.str_or("task", "gauss");
+    let cfg = ToyTrainConfig { steps: args.usize_or("steps", 600), ..Default::default() };
+    let mut report = Report::new("toy_calibration", "Fig 2b/2c toy calibration");
+    let methods = [
+        ToyMethod::Ce,
+        ToyMethod::FullKd,
+        ToyMethod::TopK { k: args.usize_or("k", 7) },
+        ToyMethod::RandomSampling { rounds: args.usize_or("rounds", 50) },
+    ];
+    let mut rows = Vec::new();
+    let mut run = |sample: &mut dyn FnMut(usize, &mut rskd::util::rng::Pcg) -> (Vec<f32>, Vec<u32>),
+                   dim: usize,
+                   classes: usize| {
+        let teacher = train_teacher(&mut *sample, dim, classes, &cfg);
+        for m in methods {
+            let res = train_toy(&mut *sample, dim, classes, Some(&teacher), m, &cfg);
+            rows.push(vec![
+                m.name().to_string(),
+                format!("{:.1}", res.accuracy * 100.0),
+                format!("{:.1}", res.calibration.ece * 100.0),
+                format!("{:+.3}", res.calibration.mean_conf - res.calibration.accuracy),
+            ]);
+        }
+    };
+    match task.as_str() {
+        "gauss" => {
+            let data = GaussianClasses::new(128, 64, 1.5, 0);
+            run(&mut |b, r| data.batch(b, r), 64, 128);
+        }
+        "image" => {
+            let data = ToyImages::new(64, 8, 0);
+            let dim = data.dim();
+            run(&mut |b, r| data.batch(b, 0.6, r), dim, 64);
+        }
+        other => bail!("unknown toy task {other:?}"),
+    }
+    report.table(&["method", "acc %", "ECE %", "overconfidence"], &rows);
+    report.finish();
+    Ok(())
+}
+
+fn cmd_zipf(args: &Args) -> Result<()> {
+    use rskd::sampling::zipf::{bias_l1, zipf};
+    let k = args.usize_or("k", 20);
+    let rounds = args.usize_or("rounds", 22);
+    let p = zipf(100_000, 1.0);
+    let mut report = Report::new("zipf_demo", "Fig 2a toy distribution bias");
+    let rows = vec![
+        ("Top-K (renorm)", bias_l1(&p, Method::TopK { k, normalize: true }, 1, 0)),
+        ("Naive Fix", bias_l1(&p, Method::NaiveFix { k }, 500, 0)),
+        ("Random Sampling", bias_l1(&p, Method::RandomSampling { rounds, temp: 1.0 }, 500, 0)),
+    ];
+    report.table(
+        &["method", "bias L1"],
+        &rows.iter().map(|(n, b)| vec![n.to_string(), format!("{b:.4}")]).collect::<Vec<_>>(),
+    );
+    report.finish();
+    Ok(())
+}
+
+fn cmd_info(args: &Args) -> Result<()> {
+    let dir = PathBuf::from(args.str_or("artifacts", "artifacts/small"));
+    let m = rskd::runtime::Manifest::load(&dir)?;
+    println!(
+        "config {} | batch {} seq {} vocab {} k_slots {} n_rounds {}",
+        m.config, m.batch, m.seq, m.vocab, m.k_slots, m.n_rounds
+    );
+    for (role, info) in &m.roles {
+        println!(
+            "  {role}: d={} L={} heads={}/{} ff={} params={}",
+            info.d_model, info.n_layers, info.n_heads, info.n_kv_heads, info.d_ff,
+            info.param_count
+        );
+    }
+    println!("  {} graphs", m.graphs.len());
+    Ok(())
+}
+
+fn run() -> Result<()> {
+    let args = Args::from_env();
+    let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
+    match cmd {
+        "pipeline" => cmd_pipeline(&args),
+        "toy" => cmd_toy(&args),
+        "zipf" => cmd_zipf(&args),
+        "info" => cmd_info(&args),
+        _ => {
+            println!("usage: rskd <pipeline|toy|zipf|info> [--flags]");
+            println!("  pipeline --method ce|fullkd|topk|rs|ghost|naive|smooth|rkl|mse|l1|frkl");
+            println!("           --k N --rounds N --temp T --alpha A --steps N --quick=true");
+            println!("  toy      --task gauss|image");
+            println!("  zipf     --k N --rounds N");
+            println!("  info     --artifacts DIR");
+            let _ = pct_ce_to_fullkd(0.0, 1.0, 0.5);
+            Ok(())
+        }
+    }
+}

@@ -1,0 +1,128 @@
+//! Expected Calibration Error (Guo et al. 2017), the paper's calibration
+//! metric: equal-width confidence bins, ECE = Σ (n_b / N) · |acc_b − conf_b|.
+
+#[derive(Clone, Debug)]
+pub struct ReliabilityBin {
+    pub lo: f64,
+    pub hi: f64,
+    pub count: usize,
+    pub mean_conf: f64,
+    pub accuracy: f64,
+}
+
+#[derive(Clone, Debug)]
+pub struct Calibration {
+    pub bins: Vec<ReliabilityBin>,
+    pub ece: f64,
+    pub accuracy: f64,
+    pub mean_conf: f64,
+    pub n: usize,
+}
+
+/// `conf[i]` = model's max probability, `correct[i]` = 1.0 if argmax == label.
+pub fn calibration(conf: &[f32], correct: &[f32], n_bins: usize) -> Calibration {
+    assert_eq!(conf.len(), correct.len());
+    assert!(n_bins > 0);
+    let n = conf.len();
+    let mut count = vec![0usize; n_bins];
+    let mut conf_sum = vec![0.0f64; n_bins];
+    let mut acc_sum = vec![0.0f64; n_bins];
+    for (&c, &a) in conf.iter().zip(correct.iter()) {
+        let b = ((c as f64 * n_bins as f64) as usize).min(n_bins - 1);
+        count[b] += 1;
+        conf_sum[b] += c as f64;
+        acc_sum[b] += a as f64;
+    }
+    let mut bins = Vec::with_capacity(n_bins);
+    let mut ece = 0.0;
+    for b in 0..n_bins {
+        let (lo, hi) = (b as f64 / n_bins as f64, (b + 1) as f64 / n_bins as f64);
+        if count[b] == 0 {
+            bins.push(ReliabilityBin { lo, hi, count: 0, mean_conf: 0.0, accuracy: 0.0 });
+            continue;
+        }
+        let mean_conf = conf_sum[b] / count[b] as f64;
+        let accuracy = acc_sum[b] / count[b] as f64;
+        ece += (count[b] as f64 / n as f64) * (accuracy - mean_conf).abs();
+        bins.push(ReliabilityBin { lo, hi, count: count[b], mean_conf, accuracy });
+    }
+    Calibration {
+        bins,
+        ece,
+        accuracy: correct.iter().map(|&x| x as f64).sum::<f64>() / n.max(1) as f64,
+        mean_conf: conf.iter().map(|&x| x as f64).sum::<f64>() / n.max(1) as f64,
+        n,
+    }
+}
+
+/// ECE as a percentage (how the paper reports it).
+pub fn ece_percent(conf: &[f32], correct: &[f32]) -> f64 {
+    calibration(conf, correct, 15).ece * 100.0
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn perfectly_calibrated_is_zero() {
+        // confidence c, correct with probability exactly c
+        let mut rng = Pcg::new(0);
+        let mut conf = Vec::new();
+        let mut correct = Vec::new();
+        for _ in 0..200_000 {
+            let c = 0.5 + rng.f32() * 0.5;
+            conf.push(c);
+            correct.push(if rng.f32() < c { 1.0 } else { 0.0 });
+        }
+        let cal = calibration(&conf, &correct, 15);
+        assert!(cal.ece < 0.01, "ece {}", cal.ece);
+    }
+
+    #[test]
+    fn overconfident_has_positive_ece() {
+        // model says 0.9 but is right half the time -> ECE ~ 0.4
+        let mut rng = Pcg::new(1);
+        let conf = vec![0.9f32; 50_000];
+        let correct: Vec<f32> =
+            (0..50_000).map(|_| if rng.f32() < 0.5 { 1.0 } else { 0.0 }).collect();
+        let cal = calibration(&conf, &correct, 15);
+        assert!((cal.ece - 0.4).abs() < 0.02, "ece {}", cal.ece);
+    }
+
+    #[test]
+    fn ece_bounded() {
+        use crate::util::testing::forall;
+        forall(
+            30,
+            |rng: &mut Pcg| {
+                let n = 10 + rng.usize_below(500);
+                let conf: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+                let correct: Vec<f32> =
+                    (0..n).map(|_| if rng.f32() < 0.5 { 1.0 } else { 0.0 }).collect();
+                (conf, correct)
+            },
+            |(conf, correct)| {
+                let cal = calibration(conf, correct, 15);
+                if (0.0..=1.0).contains(&cal.ece) {
+                    Ok(())
+                } else {
+                    Err(format!("ece {}", cal.ece))
+                }
+            },
+        );
+    }
+
+    #[test]
+    fn bins_partition_counts() {
+        let conf = vec![0.05f32, 0.15, 0.95, 0.5, 0.5];
+        let correct = vec![1.0f32; 5];
+        let cal = calibration(&conf, &correct, 10);
+        let total: usize = cal.bins.iter().map(|b| b.count).sum();
+        assert_eq!(total, 5);
+        assert_eq!(cal.bins[0].count, 1);
+        assert_eq!(cal.bins[9].count, 1);
+        assert_eq!(cal.bins[5].count, 2);
+    }
+}

@@ -1,0 +1,68 @@
+//! Gradient similarity metrics (paper Table 3): angular difference and norm
+//! ratio between a sparse-KD gradient and the FullKD gradient on the same
+//! batch.
+
+#[derive(Clone, Copy, Debug)]
+pub struct GradSim {
+    pub angle_deg: f64,
+    pub norm_ratio: f64,
+    pub cosine: f64,
+}
+
+pub fn grad_similarity(g: &[f32], reference: &[f32]) -> GradSim {
+    assert_eq!(g.len(), reference.len());
+    let mut dot = 0.0f64;
+    let mut na = 0.0f64;
+    let mut nb = 0.0f64;
+    for (&a, &b) in g.iter().zip(reference.iter()) {
+        dot += a as f64 * b as f64;
+        na += a as f64 * a as f64;
+        nb += b as f64 * b as f64;
+    }
+    let na = na.sqrt();
+    let nb = nb.sqrt();
+    let cosine = if na > 0.0 && nb > 0.0 { (dot / (na * nb)).clamp(-1.0, 1.0) } else { 0.0 };
+    GradSim {
+        angle_deg: cosine.acos().to_degrees(),
+        norm_ratio: if nb > 0.0 { na / nb } else { f64::INFINITY },
+        cosine,
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn identical_gradients() {
+        let g = vec![1.0f32, -2.0, 3.0];
+        let s = grad_similarity(&g, &g);
+        assert!(s.angle_deg < 1e-3);
+        assert!((s.norm_ratio - 1.0).abs() < 1e-9);
+    }
+
+    #[test]
+    fn scaled_gradient_same_angle() {
+        let g = vec![1.0f32, -2.0, 3.0];
+        let g2: Vec<f32> = g.iter().map(|x| 2.4 * x).collect();
+        let s = grad_similarity(&g2, &g);
+        assert!(s.angle_deg < 1e-3);
+        assert!((s.norm_ratio - 2.4).abs() < 1e-6);
+    }
+
+    #[test]
+    fn orthogonal_is_90() {
+        let s = grad_similarity(&[1.0, 0.0], &[0.0, 1.0]);
+        assert!((s.angle_deg - 90.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn random_highdim_near_90() {
+        let mut rng = Pcg::new(0);
+        let a: Vec<f32> = (0..10_000).map(|_| rng.normal() as f32).collect();
+        let b: Vec<f32> = (0..10_000).map(|_| rng.normal() as f32).collect();
+        let s = grad_similarity(&a, &b);
+        assert!((s.angle_deg - 90.0).abs() < 5.0, "{}", s.angle_deg);
+    }
+}

@@ -1,0 +1,12 @@
+//! Evaluation metrics: calibration (ECE), gradient similarity, throughput,
+//! and power-law fitting.
+
+pub mod ece;
+pub mod gradsim;
+pub mod powerlaw;
+pub mod throughput;
+
+pub use ece::{calibration, ece_percent, Calibration};
+pub use gradsim::{grad_similarity, GradSim};
+pub use powerlaw::{fit_powerlaw, PowerLawFit};
+pub use throughput::{flops_per_sec, train_flops_per_token, ThroughputMeter};

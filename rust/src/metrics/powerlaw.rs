@@ -1,0 +1,66 @@
+//! Power-law fitting in log-log space (paper Figure 5: unique tokens vs
+//! sampling rounds is "almost perfectly linear" on a log-log plot).
+
+#[derive(Clone, Copy, Debug)]
+pub struct PowerLawFit {
+    /// y ≈ scale * x^exponent
+    pub scale: f64,
+    pub exponent: f64,
+    /// R² of the log-log linear regression
+    pub r2: f64,
+}
+
+pub fn fit_powerlaw(points: &[(f64, f64)]) -> PowerLawFit {
+    let logs: Vec<(f64, f64)> = points
+        .iter()
+        .filter(|(x, y)| *x > 0.0 && *y > 0.0)
+        .map(|(x, y)| (x.ln(), y.ln()))
+        .collect();
+    let n = logs.len() as f64;
+    assert!(n >= 2.0, "need at least two positive points");
+    let mx = logs.iter().map(|(x, _)| x).sum::<f64>() / n;
+    let my = logs.iter().map(|(_, y)| y).sum::<f64>() / n;
+    let sxx: f64 = logs.iter().map(|(x, _)| (x - mx) * (x - mx)).sum();
+    let sxy: f64 = logs.iter().map(|(x, y)| (x - mx) * (y - my)).sum();
+    let syy: f64 = logs.iter().map(|(_, y)| (y - my) * (y - my)).sum();
+    let slope = sxy / sxx.max(1e-300);
+    let intercept = my - slope * mx;
+    let r2 = if syy > 0.0 { (sxy * sxy) / (sxx * syy) } else { 1.0 };
+    PowerLawFit { scale: intercept.exp(), exponent: slope, r2 }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn exact_powerlaw_recovered() {
+        let pts: Vec<(f64, f64)> = (1..=20).map(|i| {
+            let x = i as f64;
+            (x, 3.0 * x.powf(0.7))
+        }).collect();
+        let fit = fit_powerlaw(&pts);
+        assert!((fit.exponent - 0.7).abs() < 1e-9);
+        assert!((fit.scale - 3.0).abs() < 1e-9);
+        assert!(fit.r2 > 0.999999);
+    }
+
+    #[test]
+    fn noisy_powerlaw_good_r2() {
+        let mut rng = crate::util::rng::Pcg::new(0);
+        let pts: Vec<(f64, f64)> = (1..=50).map(|i| {
+            let x = i as f64 * 2.0;
+            (x, 5.0 * x.powf(0.5) * (1.0 + 0.05 * (rng.f64() - 0.5)))
+        }).collect();
+        let fit = fit_powerlaw(&pts);
+        assert!((fit.exponent - 0.5).abs() < 0.05);
+        assert!(fit.r2 > 0.99);
+    }
+
+    #[test]
+    fn ignores_nonpositive_points() {
+        let pts = vec![(0.0, 1.0), (1.0, 2.0), (2.0, 4.0), (4.0, 8.0)];
+        let fit = fit_powerlaw(&pts);
+        assert!((fit.exponent - 1.0).abs() < 1e-9);
+    }
+}

@@ -1,0 +1,105 @@
+//! Throughput accounting (paper Table 4): tokens/sec meters and a model-FLOP
+//! estimator so we can report a TFlops-equivalent utilization column.
+
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct ThroughputMeter {
+    started: Instant,
+    tokens: u64,
+    steps: u64,
+    paused: Option<Instant>,
+    excluded: Duration,
+}
+
+impl Default for ThroughputMeter {
+    fn default() -> Self {
+        Self::new()
+    }
+}
+
+impl ThroughputMeter {
+    pub fn new() -> ThroughputMeter {
+        ThroughputMeter {
+            started: Instant::now(),
+            tokens: 0,
+            steps: 0,
+            paused: None,
+            excluded: Duration::ZERO,
+        }
+    }
+
+    pub fn record(&mut self, tokens: u64) {
+        self.tokens += tokens;
+        self.steps += 1;
+    }
+
+    /// Exclude a span (e.g. eval) from the wall clock.
+    pub fn pause(&mut self) {
+        self.paused = Some(Instant::now());
+    }
+
+    pub fn resume(&mut self) {
+        if let Some(p) = self.paused.take() {
+            self.excluded += p.elapsed();
+        }
+    }
+
+    pub fn elapsed(&self) -> Duration {
+        self.started.elapsed().saturating_sub(self.excluded)
+    }
+
+    pub fn tokens_per_sec(&self) -> f64 {
+        self.tokens as f64 / self.elapsed().as_secs_f64().max(1e-9)
+    }
+
+    pub fn tokens(&self) -> u64 {
+        self.tokens
+    }
+
+    pub fn steps(&self) -> u64 {
+        self.steps
+    }
+}
+
+/// Approximate training FLOPs per token for a decoder-only transformer:
+/// 6 * params for fwd+bwd (+2 * params when a teacher forward runs online).
+pub fn train_flops_per_token(params: u64, online_teacher_params: u64) -> u64 {
+    6 * params + 2 * online_teacher_params
+}
+
+/// Effective FLOP/s given a meter and per-token cost.
+pub fn flops_per_sec(meter: &ThroughputMeter, flops_per_token: u64) -> f64 {
+    meter.tokens_per_sec() * flops_per_token as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn counts_tokens() {
+        let mut m = ThroughputMeter::new();
+        m.record(512);
+        m.record(512);
+        assert_eq!(m.tokens(), 1024);
+        assert_eq!(m.steps(), 2);
+        assert!(m.tokens_per_sec() > 0.0);
+    }
+
+    #[test]
+    fn pause_excludes_time() {
+        let mut m = ThroughputMeter::new();
+        m.record(1000);
+        m.pause();
+        std::thread::sleep(Duration::from_millis(30));
+        m.resume();
+        assert!(m.elapsed() < Duration::from_millis(25));
+    }
+
+    #[test]
+    fn flops_formula() {
+        assert_eq!(train_flops_per_token(100, 0), 600);
+        assert_eq!(train_flops_per_token(100, 300), 1200);
+    }
+}

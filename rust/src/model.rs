@@ -1,0 +1,93 @@
+//! Model state handles: the flat-parameter convention means a model is four
+//! arrays (params, adam m, adam v, step) plus its role name. Training graphs
+//! take and return these; the coordinator never inspects parameter layout.
+
+use anyhow::Result;
+
+use crate::runtime::{Engine, HostTensor};
+
+#[derive(Clone, Debug)]
+pub struct ModelState {
+    pub role: String,
+    pub params: Vec<f32>,
+    pub m: Vec<f32>,
+    pub v: Vec<f32>,
+    pub step: i32,
+}
+
+impl ModelState {
+    /// Initialize from the model's `init_<role>` graph.
+    pub fn init(engine: &Engine, role: &str, seed: i32) -> Result<ModelState> {
+        let out = engine.call(&format!("init_{role}"), &[HostTensor::scalar_i32(seed)])?;
+        let params = out.into_iter().next().unwrap().into_f32()?;
+        let n = params.len();
+        Ok(ModelState { role: role.to_string(), params, m: vec![0.0; n], v: vec![0.0; n], step: 0 })
+    }
+
+    pub fn param_count(&self) -> usize {
+        self.params.len()
+    }
+
+    /// Pack optimizer state as graph inputs (params, m, v, step).
+    pub fn opt_inputs(&self) -> [HostTensor; 4] {
+        let n = self.params.len();
+        [
+            HostTensor::f32(self.params.clone(), &[n]),
+            HostTensor::f32(self.m.clone(), &[n]),
+            HostTensor::f32(self.v.clone(), &[n]),
+            HostTensor::scalar_i32(self.step),
+        ]
+    }
+
+    /// Absorb the (params', m', v', step') prefix of a train-graph result.
+    pub fn absorb(&mut self, outs: &mut Vec<HostTensor>) -> Result<()> {
+        let step = outs.remove(3);
+        let v = outs.remove(2);
+        let m = outs.remove(1);
+        let p = outs.remove(0);
+        self.params = p.into_f32()?;
+        self.m = m.into_f32()?;
+        self.v = v.into_f32()?;
+        self.step = step.as_i32()?[0];
+        Ok(())
+    }
+
+    /// Fresh optimizer state (for fine-tuning stages).
+    pub fn reset_optimizer(&mut self) {
+        self.m.iter_mut().for_each(|x| *x = 0.0);
+        self.v.iter_mut().for_each(|x| *x = 0.0);
+        self.step = 0;
+    }
+
+    pub fn params_tensor(&self) -> HostTensor {
+        HostTensor::f32(self.params.clone(), &[self.params.len()])
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn absorb_consumes_prefix() {
+        let mut st = ModelState {
+            role: "t".into(),
+            params: vec![0.0; 3],
+            m: vec![0.0; 3],
+            v: vec![0.0; 3],
+            step: 0,
+        };
+        let mut outs = vec![
+            HostTensor::f32(vec![1.0, 2.0, 3.0], &[3]),
+            HostTensor::f32(vec![4.0, 5.0, 6.0], &[3]),
+            HostTensor::f32(vec![7.0, 8.0, 9.0], &[3]),
+            HostTensor::scalar_i32(5),
+            HostTensor::scalar_f32(2.5), // loss stays behind
+        ];
+        st.absorb(&mut outs).unwrap();
+        assert_eq!(st.params, vec![1.0, 2.0, 3.0]);
+        assert_eq!(st.step, 5);
+        assert_eq!(outs.len(), 1);
+        assert_eq!(outs[0].scalar().unwrap(), 2.5);
+    }
+}

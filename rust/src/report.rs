@@ -1,0 +1,55 @@
+//! Experiment reporting: shared row-formatting helpers used by the bench
+//! targets so every regenerated table prints the paper's columns.
+
+use crate::coordinator::{EvalResult, TrainResult};
+
+pub use crate::util::bench::{fmt_f, Report};
+
+/// The standard metric row: LM loss, ECE %, spec accept %, and optionally
+/// %CE->FullKD and 0-shot.
+pub fn metric_row(
+    name: &str,
+    ev: &EvalResult,
+    pct_gap: Option<f64>,
+    zero_shot: Option<f64>,
+) -> Vec<String> {
+    let mut row = vec![
+        name.to_string(),
+        format!("{:.3}", ev.lm_loss),
+        format!("{:.1}", ev.ece_pct),
+        format!("{:.1}", ev.spec_accept_pct),
+    ];
+    row.push(pct_gap.map(|p| format!("{p:.0}%")).unwrap_or_else(|| "-".into()));
+    row.push(zero_shot.map(|z| format!("{z:.1}")).unwrap_or_else(|| "-".into()));
+    row
+}
+
+pub const METRIC_HEADER: [&str; 6] =
+    ["method", "LM loss", "ECE %", "SpecAccept %", "%CE->FullKD", "0-shot"];
+
+/// Summarize a loss curve: final smoothed loss (mean of last quarter).
+pub fn final_loss(tr: &TrainResult) -> f64 {
+    let xs = &tr.losses;
+    if xs.is_empty() {
+        return f64::NAN;
+    }
+    let tail = &xs[xs.len() - (xs.len() / 4).max(1)..];
+    tail.iter().map(|&x| x as f64).sum::<f64>() / tail.len() as f64
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn final_loss_uses_tail() {
+        let tr = TrainResult {
+            losses: vec![10.0, 10.0, 1.0, 1.0],
+            kd_losses: vec![],
+            tokens_per_sec: 0.0,
+            steps: 4,
+            diverged: false,
+        };
+        assert!((final_loss(&tr) - 1.0).abs() < 1e-9);
+    }
+}

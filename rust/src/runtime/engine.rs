@@ -1,0 +1,188 @@
+//! PJRT execution engine: loads AOT artifacts (HLO text), compiles them
+//! lazily on the CPU PJRT client, validates calls against the manifest, and
+//! executes. One `Engine` per artifact config directory.
+//!
+//! Interchange is HLO *text* — jax ≥ 0.5 serialized protos use 64-bit
+//! instruction ids that xla_extension 0.5.1 rejects; the text parser
+//! reassigns ids (see /opt/xla-example/README.md and python/compile/aot.py).
+
+use std::cell::RefCell;
+use std::collections::HashMap;
+use std::path::Path;
+use std::rc::Rc;
+use std::time::{Duration, Instant};
+
+use anyhow::{bail, Context, Result};
+
+use crate::runtime::manifest::{GraphSpec, Manifest};
+use crate::runtime::tensor::HostTensor;
+
+#[derive(Clone, Debug, Default)]
+pub struct EngineStats {
+    pub compiles: u64,
+    pub compile_time: Duration,
+    pub executions: u64,
+    pub execute_time: Duration,
+    /// host<->device literal conversion time (perf pass target)
+    pub transfer_time: Duration,
+}
+
+pub struct Engine {
+    client: xla::PjRtClient,
+    manifest: Manifest,
+    executables: RefCell<HashMap<String, Rc<xla::PjRtLoadedExecutable>>>,
+    stats: RefCell<EngineStats>,
+}
+
+impl Engine {
+    pub fn load(artifact_dir: &Path) -> Result<Engine> {
+        let manifest = Manifest::load(artifact_dir)?;
+        let client = xla::PjRtClient::cpu().context("creating PJRT CPU client")?;
+        Ok(Engine {
+            client,
+            manifest,
+            executables: RefCell::new(HashMap::new()),
+            stats: RefCell::new(EngineStats::default()),
+        })
+    }
+
+    pub fn manifest(&self) -> &Manifest {
+        &self.manifest
+    }
+
+    pub fn stats(&self) -> EngineStats {
+        self.stats.borrow().clone()
+    }
+
+    fn executable(&self, name: &str) -> Result<Rc<xla::PjRtLoadedExecutable>> {
+        if let Some(exe) = self.executables.borrow().get(name) {
+            return Ok(Rc::clone(exe));
+        }
+        let spec = self.manifest.graph(name)?;
+        let t0 = Instant::now();
+        let proto = xla::HloModuleProto::from_text_file(
+            spec.file.to_str().context("non-utf8 path")?,
+        )
+        .with_context(|| format!("parsing HLO text for {name}"))?;
+        let comp = xla::XlaComputation::from_proto(&proto);
+        let exe = self.client.compile(&comp).with_context(|| format!("compiling {name}"))?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.compiles += 1;
+            s.compile_time += t0.elapsed();
+        }
+        let exe = Rc::new(exe);
+        self.executables.borrow_mut().insert(name.to_string(), Rc::clone(&exe));
+        Ok(exe)
+    }
+
+    /// Pre-compile a set of graphs (so timed loops exclude compilation).
+    pub fn warmup(&self, names: &[&str]) -> Result<()> {
+        for n in names {
+            self.executable(n)?;
+        }
+        Ok(())
+    }
+
+    /// Execute `name` with validated inputs; returns one HostTensor per
+    /// declared output.
+    pub fn call(&self, name: &str, inputs: &[HostTensor]) -> Result<Vec<HostTensor>> {
+        let spec: GraphSpec = self.manifest.graph(name)?.clone();
+        if inputs.len() != spec.args.len() {
+            bail!("{name}: expected {} args, got {}", spec.args.len(), inputs.len());
+        }
+        for (i, (t, s)) in inputs.iter().zip(spec.args.iter()).enumerate() {
+            if !t.matches(s) {
+                bail!(
+                    "{name}: arg {i} mismatch: got {:?}{:?}, want {:?}{:?}",
+                    t.dtype(),
+                    t.shape(),
+                    s.dtype,
+                    s.shape
+                );
+            }
+        }
+        let exe = self.executable(name)?;
+
+        let t0 = Instant::now();
+        let literals: Vec<xla::Literal> =
+            inputs.iter().map(|t| t.to_literal()).collect::<Result<_>>()?;
+        let t_transfer_in = t0.elapsed();
+
+        let t1 = Instant::now();
+        let result = exe.execute::<xla::Literal>(&literals)?;
+        let root = result[0][0].to_literal_sync()?;
+        let exec_time = t1.elapsed();
+
+        let t2 = Instant::now();
+        // aot.py lowers with return_tuple=True: root is always a tuple
+        let parts = root.to_tuple()?;
+        if parts.len() != spec.outputs.len() {
+            bail!("{name}: expected {} outputs, got {}", spec.outputs.len(), parts.len());
+        }
+        let outs = parts
+            .iter()
+            .zip(spec.outputs.iter())
+            .map(|(lit, os)| HostTensor::from_literal(lit, os))
+            .collect::<Result<Vec<_>>>()?;
+        {
+            let mut s = self.stats.borrow_mut();
+            s.executions += 1;
+            s.execute_time += exec_time;
+            s.transfer_time += t_transfer_in + t2.elapsed();
+        }
+        Ok(outs)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/small"))
+    }
+
+    fn engine() -> Option<Engine> {
+        if !art_dir().join("manifest.json").exists() {
+            return None;
+        }
+        Some(Engine::load(&art_dir()).unwrap())
+    }
+
+    #[test]
+    fn init_and_fwd_roundtrip() {
+        let Some(e) = engine() else { return };
+        let m = e.manifest();
+        let (b, s, v) = (m.batch, m.seq, m.vocab);
+        let p = e.call("init_student", &[HostTensor::scalar_i32(0)]).unwrap();
+        let pcount = m.role("student").unwrap().param_count;
+        assert_eq!(p[0].len(), pcount);
+        let toks = HostTensor::i32(vec![1; b * s], &[b, s]);
+        let probs = e.call("fwd_student", &[p[0].clone(), toks]).unwrap();
+        assert_eq!(probs[0].shape(), &[b, s, v]);
+        // rows sum to 1
+        let data = probs[0].as_f32().unwrap();
+        let row: f32 = data[0..v].iter().sum();
+        assert!((row - 1.0).abs() < 1e-4, "{row}");
+    }
+
+    #[test]
+    fn rejects_shape_mismatch() {
+        let Some(e) = engine() else { return };
+        let bad = HostTensor::i32(vec![1; 4], &[2, 2]);
+        let p = e.call("init_student", &[HostTensor::scalar_i32(0)]).unwrap();
+        assert!(e.call("fwd_student", &[p[0].clone(), bad]).is_err());
+    }
+
+    #[test]
+    fn stats_accumulate() {
+        let Some(e) = engine() else { return };
+        let _ = e.call("init_student", &[HostTensor::scalar_i32(1)]).unwrap();
+        let _ = e.call("init_student", &[HostTensor::scalar_i32(2)]).unwrap();
+        let s = e.stats();
+        assert_eq!(s.compiles, 1); // cached after first call
+        assert_eq!(s.executions, 2);
+    }
+}

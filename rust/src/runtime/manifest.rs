@@ -1,0 +1,176 @@
+//! Typed view of `artifacts/<config>/manifest.json` (written by aot.py):
+//! model dims per role, batch geometry, and per-graph argument/output specs.
+
+use std::collections::BTreeMap;
+use std::path::{Path, PathBuf};
+
+use anyhow::{anyhow, bail, Context, Result};
+
+use crate::util::json::Json;
+
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DType {
+    F32,
+    I32,
+}
+
+#[derive(Clone, Debug)]
+pub struct TensorSpec {
+    pub shape: Vec<usize>,
+    pub dtype: DType,
+}
+
+impl TensorSpec {
+    pub fn elements(&self) -> usize {
+        self.shape.iter().product()
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct GraphSpec {
+    pub name: String,
+    pub file: PathBuf,
+    pub args: Vec<TensorSpec>,
+    pub outputs: Vec<TensorSpec>,
+}
+
+#[derive(Clone, Debug)]
+pub struct RoleInfo {
+    pub d_model: usize,
+    pub n_layers: usize,
+    pub n_heads: usize,
+    pub n_kv_heads: usize,
+    pub d_ff: usize,
+    pub param_count: usize,
+}
+
+#[derive(Clone, Debug)]
+pub struct Manifest {
+    pub config: String,
+    pub dir: PathBuf,
+    pub batch: usize,
+    pub seq: usize,
+    pub vocab: usize,
+    pub k_slots: usize,
+    pub n_rounds: usize,
+    pub roles: BTreeMap<String, RoleInfo>,
+    pub graphs: BTreeMap<String, GraphSpec>,
+}
+
+fn tensor_spec(j: &Json) -> Result<TensorSpec> {
+    let shape = j
+        .get("shape")
+        .and_then(|s| s.as_arr())
+        .ok_or_else(|| anyhow!("missing shape"))?
+        .iter()
+        .map(|x| x.as_usize().unwrap_or(0))
+        .collect();
+    let dtype = match j.get("dtype").and_then(|d| d.as_str()) {
+        Some("f32") => DType::F32,
+        Some("i32") => DType::I32,
+        other => bail!("bad dtype {other:?}"),
+    };
+    Ok(TensorSpec { shape, dtype })
+}
+
+impl Manifest {
+    pub fn load(dir: &Path) -> Result<Manifest> {
+        let path = dir.join("manifest.json");
+        let text = std::fs::read_to_string(&path)
+            .with_context(|| format!("reading {} (run `make artifacts` first)", path.display()))?;
+        let j = Json::parse(&text).map_err(|e| anyhow!("parsing manifest: {e}"))?;
+        let need = |k: &str| -> Result<usize> {
+            j.get(k).and_then(|v| v.as_usize()).ok_or_else(|| anyhow!("manifest missing {k}"))
+        };
+        let mut roles = BTreeMap::new();
+        for (role, info) in j.get("roles").and_then(|r| r.as_obj()).into_iter().flatten() {
+            let g = |k: &str| info.get(k).and_then(|v| v.as_usize()).unwrap_or(0);
+            roles.insert(
+                role.clone(),
+                RoleInfo {
+                    d_model: g("d_model"),
+                    n_layers: g("n_layers"),
+                    n_heads: g("n_heads"),
+                    n_kv_heads: g("n_kv_heads"),
+                    d_ff: g("d_ff"),
+                    param_count: g("param_count"),
+                },
+            );
+        }
+        let mut graphs = BTreeMap::new();
+        for (name, g) in j.get("graphs").and_then(|r| r.as_obj()).into_iter().flatten() {
+            let args = g
+                .get("args")
+                .and_then(|a| a.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let outputs = g
+                .get("outputs")
+                .and_then(|a| a.as_arr())
+                .unwrap_or(&[])
+                .iter()
+                .map(tensor_spec)
+                .collect::<Result<Vec<_>>>()?;
+            let file = dir.join(
+                g.get("file").and_then(|f| f.as_str()).ok_or_else(|| anyhow!("missing file"))?,
+            );
+            graphs.insert(name.clone(), GraphSpec { name: name.clone(), file, args, outputs });
+        }
+        Ok(Manifest {
+            config: j.get("config").and_then(|c| c.as_str()).unwrap_or("?").to_string(),
+            dir: dir.to_path_buf(),
+            batch: need("batch")?,
+            seq: need("seq")?,
+            vocab: need("vocab")?,
+            k_slots: need("k_slots")?,
+            n_rounds: need("n_rounds")?,
+            roles,
+            graphs,
+        })
+    }
+
+    pub fn graph(&self, name: &str) -> Result<&GraphSpec> {
+        self.graphs.get(name).ok_or_else(|| {
+            anyhow!("graph {name:?} not in manifest (have: {:?})", self.graphs.keys())
+        })
+    }
+
+    pub fn role(&self, name: &str) -> Result<&RoleInfo> {
+        self.roles.get(name).ok_or_else(|| anyhow!("role {name:?} not in manifest"))
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn art_dir() -> PathBuf {
+        PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/small"))
+    }
+
+    #[test]
+    fn loads_small_manifest() {
+        if !art_dir().join("manifest.json").exists() {
+            return; // artifacts not built in this environment
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert_eq!(m.config, "small");
+        assert!(m.roles.contains_key("teacher") && m.roles.contains_key("student"));
+        let g = m.graph("train_sparse_student").unwrap();
+        assert_eq!(g.args.len(), 13);
+        assert_eq!(g.args[0].dtype, DType::F32);
+        assert_eq!(g.args[7].dtype, DType::I32);
+        assert!(g.file.exists());
+    }
+
+    #[test]
+    fn missing_graph_errors() {
+        if !art_dir().join("manifest.json").exists() {
+            return;
+        }
+        let m = Manifest::load(&art_dir()).unwrap();
+        assert!(m.graph("nope").is_err());
+    }
+}

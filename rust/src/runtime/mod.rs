@@ -1,0 +1,10 @@
+//! PJRT runtime: manifest-driven loading, compilation, and execution of the
+//! AOT artifacts produced by `python/compile/aot.py`.
+
+pub mod engine;
+pub mod manifest;
+pub mod tensor;
+
+pub use engine::{Engine, EngineStats};
+pub use manifest::{DType, GraphSpec, Manifest, RoleInfo, TensorSpec};
+pub use tensor::HostTensor;

@@ -1,0 +1,177 @@
+//! Host-side tensors: the coordinator's currency for graph inputs/outputs.
+//! Conversion to/from `xla::Literal` lives here so the rest of L3 never
+//! touches the FFI types directly.
+
+use anyhow::{bail, Result};
+
+use crate::runtime::manifest::{DType, TensorSpec};
+
+#[derive(Clone, Debug)]
+pub enum HostTensor {
+    F32 { data: Vec<f32>, shape: Vec<usize> },
+    I32 { data: Vec<i32>, shape: Vec<usize> },
+}
+
+impl HostTensor {
+    pub fn f32(data: Vec<f32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        HostTensor::F32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn i32(data: Vec<i32>, shape: &[usize]) -> HostTensor {
+        assert_eq!(data.len(), shape.iter().product::<usize>(), "shape/data mismatch");
+        HostTensor::I32 { data, shape: shape.to_vec() }
+    }
+
+    pub fn scalar_f32(x: f32) -> HostTensor {
+        HostTensor::F32 { data: vec![x], shape: vec![] }
+    }
+
+    pub fn scalar_i32(x: i32) -> HostTensor {
+        HostTensor::I32 { data: vec![x], shape: vec![] }
+    }
+
+    pub fn zeros_like_spec(spec: &TensorSpec) -> HostTensor {
+        match spec.dtype {
+            DType::F32 => HostTensor::F32 { data: vec![0.0; spec.elements()], shape: spec.shape.clone() },
+            DType::I32 => HostTensor::I32 { data: vec![0; spec.elements()], shape: spec.shape.clone() },
+        }
+    }
+
+    pub fn shape(&self) -> &[usize] {
+        match self {
+            HostTensor::F32 { shape, .. } | HostTensor::I32 { shape, .. } => shape,
+        }
+    }
+
+    pub fn dtype(&self) -> DType {
+        match self {
+            HostTensor::F32 { .. } => DType::F32,
+            HostTensor::I32 { .. } => DType::I32,
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        match self {
+            HostTensor::F32 { data, .. } => data.len(),
+            HostTensor::I32 { data, .. } => data.len(),
+        }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn as_f32(&self) -> Result<&[f32]> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn as_i32(&self) -> Result<&[i32]> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn into_f32(self) -> Result<Vec<f32>> {
+        match self {
+            HostTensor::F32 { data, .. } => Ok(data),
+            _ => bail!("expected f32 tensor"),
+        }
+    }
+
+    pub fn into_i32(self) -> Result<Vec<i32>> {
+        match self {
+            HostTensor::I32 { data, .. } => Ok(data),
+            _ => bail!("expected i32 tensor"),
+        }
+    }
+
+    pub fn scalar(&self) -> Result<f32> {
+        match self {
+            HostTensor::F32 { data, .. } if data.len() == 1 => Ok(data[0]),
+            HostTensor::I32 { data, .. } if data.len() == 1 => Ok(data[0] as f32),
+            _ => bail!("not a scalar (len {})", self.len()),
+        }
+    }
+
+    pub fn matches(&self, spec: &TensorSpec) -> bool {
+        self.dtype() == spec.dtype && self.shape() == spec.shape.as_slice()
+    }
+
+    pub fn to_literal(&self) -> Result<xla::Literal> {
+        let dims: Vec<i64> = self.shape().iter().map(|&d| d as i64).collect();
+        let lit = match self {
+            HostTensor::F32 { data, shape } => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+            HostTensor::I32 { data, shape } => {
+                if shape.is_empty() {
+                    xla::Literal::scalar(data[0])
+                } else {
+                    xla::Literal::vec1(data).reshape(&dims)?
+                }
+            }
+        };
+        Ok(lit)
+    }
+
+    pub fn from_literal(lit: &xla::Literal, spec: &TensorSpec) -> Result<HostTensor> {
+        Ok(match spec.dtype {
+            DType::F32 => HostTensor::F32 { data: lit.to_vec::<f32>()?, shape: spec.shape.clone() },
+            DType::I32 => HostTensor::I32 { data: lit.to_vec::<i32>()?, shape: spec.shape.clone() },
+        })
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn shape_checks() {
+        let t = HostTensor::f32(vec![1.0, 2.0, 3.0, 4.0], &[2, 2]);
+        assert_eq!(t.shape(), &[2, 2]);
+        assert_eq!(t.len(), 4);
+        assert_eq!(t.dtype(), DType::F32);
+    }
+
+    #[test]
+    #[should_panic(expected = "shape/data mismatch")]
+    fn rejects_bad_shape() {
+        let _ = HostTensor::f32(vec![1.0], &[2, 2]);
+    }
+
+    #[test]
+    fn literal_roundtrip_f32() {
+        let t = HostTensor::f32(vec![1.0, -2.5, 3.0, 0.0, 7.0, 9.0], &[2, 3]);
+        let lit = t.to_literal().unwrap();
+        let spec = TensorSpec { shape: vec![2, 3], dtype: DType::F32 };
+        let back = HostTensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_f32().unwrap(), t.as_f32().unwrap());
+    }
+
+    #[test]
+    fn literal_roundtrip_scalar() {
+        let t = HostTensor::scalar_i32(42);
+        let lit = t.to_literal().unwrap();
+        let spec = TensorSpec { shape: vec![], dtype: DType::I32 };
+        let back = HostTensor::from_literal(&lit, &spec).unwrap();
+        assert_eq!(back.as_i32().unwrap(), &[42]);
+    }
+
+    #[test]
+    fn spec_matching() {
+        let t = HostTensor::i32(vec![1, 2], &[2]);
+        assert!(t.matches(&TensorSpec { shape: vec![2], dtype: DType::I32 }));
+        assert!(!t.matches(&TensorSpec { shape: vec![2], dtype: DType::F32 }));
+        assert!(!t.matches(&TensorSpec { shape: vec![1, 2], dtype: DType::I32 }));
+    }
+}

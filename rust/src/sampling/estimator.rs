@@ -1,0 +1,106 @@
+//! Bias/variance analysis of sparse target estimators (paper §4.3): sweep
+//! methods over many draws and measure the mean estimate's deviation from the
+//! teacher row (bias) and per-draw spread (variance).
+
+use crate::sampling::{build_target, effective_dense, Method};
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Debug)]
+pub struct EstimatorStats {
+    pub method: Method,
+    /// L1 distance of the mean effective target from the truth
+    pub bias_l1: f64,
+    /// average per-draw L1 distance from the truth (total error)
+    pub mean_l1: f64,
+    /// average per-coordinate variance, summed over the vocab
+    pub variance: f64,
+    /// average number of stored slots
+    pub avg_slots: f64,
+}
+
+pub fn estimator_stats(
+    probs: &[f32],
+    method: Method,
+    trials: usize,
+    seed: u64,
+) -> EstimatorStats {
+    let v = probs.len();
+    let mut rng = Pcg::new(seed);
+    let mut sum = vec![0.0f64; v];
+    let mut sumsq = vec![0.0f64; v];
+    let mut mean_l1 = 0.0f64;
+    let mut slots = 0usize;
+    for _ in 0..trials {
+        let dense = match build_target(probs, 0, method, &mut rng) {
+            Some(tt) => {
+                slots += tt.target.k();
+                effective_dense(&tt, v)
+            }
+            None => {
+                let mut one = vec![0.0f32; v];
+                one[0] = 1.0;
+                one
+            }
+        };
+        let mut l1 = 0.0f64;
+        for i in 0..v {
+            let x = dense[i] as f64;
+            sum[i] += x;
+            sumsq[i] += x * x;
+            l1 += (x - probs[i] as f64).abs();
+        }
+        mean_l1 += l1;
+    }
+    let n = trials as f64;
+    let mut bias_l1 = 0.0f64;
+    let mut variance = 0.0f64;
+    for i in 0..v {
+        let mean = sum[i] / n;
+        bias_l1 += (mean - probs[i] as f64).abs();
+        variance += (sumsq[i] / n - mean * mean).max(0.0);
+    }
+    EstimatorStats { method, bias_l1, mean_l1: mean_l1 / n, variance, avg_slots: slots as f64 / n }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::sampling::zipf::zipf;
+
+    #[test]
+    fn rs_unbiased_topk_biased() {
+        let p = zipf(256, 1.0);
+        let rs = estimator_stats(&p, Method::RandomSampling { rounds: 22, temp: 1.0 }, 600, 0);
+        let tk = estimator_stats(&p, Method::TopK { k: 20, normalize: true }, 1, 0);
+        assert!(rs.bias_l1 < 0.12, "rs bias {}", rs.bias_l1);
+        assert!(tk.bias_l1 > 0.3, "topk bias {}", tk.bias_l1);
+    }
+
+    #[test]
+    fn topk_single_draw_l1_below_rs() {
+        // Appendix A.3: Top-K minimizes *per-draw* L1 — its failure is bias,
+        // not per-sample error.
+        let p = zipf(256, 1.0);
+        let rs = estimator_stats(&p, Method::RandomSampling { rounds: 22, temp: 1.0 }, 300, 1);
+        let tk = estimator_stats(&p, Method::TopK { k: 20, normalize: false }, 1, 1);
+        assert!(tk.mean_l1 < rs.mean_l1, "topk {} rs {}", tk.mean_l1, rs.mean_l1);
+    }
+
+    #[test]
+    fn temperature_extremes_increase_variance() {
+        // §6.1: t in [0.8, 1.2] is the low-variance basin; t=0.25 (near
+        // uniform) is much noisier.
+        let p = zipf(256, 1.0);
+        let v1 = estimator_stats(&p, Method::RandomSampling { rounds: 50, temp: 1.0 }, 400, 2).variance;
+        let v0 = estimator_stats(&p, Method::RandomSampling { rounds: 50, temp: 0.25 }, 400, 2).variance;
+        assert!(v0 > 2.0 * v1, "t=0.25 var {v0} vs t=1 var {v1}");
+    }
+
+    #[test]
+    fn more_rounds_less_variance() {
+        let p = zipf(256, 1.0);
+        let a = estimator_stats(&p, Method::RandomSampling { rounds: 5, temp: 1.0 }, 400, 3).variance;
+        let b = estimator_stats(&p, Method::RandomSampling { rounds: 50, temp: 1.0 }, 400, 3).variance;
+        assert!(b < a, "{b} !< {a}");
+    }
+}

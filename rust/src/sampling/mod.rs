@@ -1,0 +1,335 @@
+//! Sparsifier library: every sparse-KD target construction the paper studies
+//! (§2–§3), as pure-rust reference implementations. The runtime path uses the
+//! L1 Pallas sampler graph for throughput; these implementations are the
+//! oracle for tests, the engine for the synthetic/toy experiments (Fig 2a,
+//! Fig 5), and the variant logic (naive fix / smoothing / ghost) that turns a
+//! cached sparse target into what the `train_sparse` graph consumes.
+
+pub mod estimator;
+pub mod rounds;
+pub mod zipf;
+
+use crate::cache::SparseTarget;
+use crate::util::rng::{Cdf, Pcg};
+
+/// Sparse-KD method (paper §2–§3 taxonomy).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Method {
+    /// plain cross-entropy on the ground truth (no distillation)
+    CrossEntropy,
+    /// full dense teacher distribution
+    FullKd,
+    /// vanilla Top-K: keep K largest, optionally renormalized
+    TopK { k: usize, normalize: bool },
+    /// Top-p nucleus with cap K
+    TopP { p: f32, k: usize },
+    /// Top-K + uniform residual smoothing (§3.1)
+    Smoothing { k: usize },
+    /// Top-K + ghost token for the residual (§3.2)
+    GhostToken { k: usize },
+    /// Top-K + residual assigned to the ground-truth label (§3.3)
+    NaiveFix { k: usize },
+    /// Random Sampling KD (§3.4): N importance-sampling rounds at `temp`
+    RandomSampling { rounds: usize, temp: f32 },
+}
+
+impl Method {
+    pub fn name(&self) -> String {
+        match self {
+            Method::CrossEntropy => "CE".into(),
+            Method::FullKd => "FullKD".into(),
+            Method::TopK { k, .. } => format!("Top-K {k}"),
+            Method::TopP { p, k } => format!("Top-p {p} (K={k})"),
+            Method::Smoothing { k } => format!("Smoothing {k}"),
+            Method::GhostToken { k } => format!("Ghost {k}"),
+            Method::NaiveFix { k } => format!("NaiveFix {k}"),
+            Method::RandomSampling { rounds, temp } => format!("RS n={rounds} t={temp}"),
+        }
+    }
+}
+
+/// Indices of the K largest probabilities (descending).
+pub fn topk_indices(probs: &[f32], k: usize) -> Vec<u32> {
+    let mut idx: Vec<u32> = (0..probs.len() as u32).collect();
+    let k = k.min(probs.len());
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
+        probs[b as usize].partial_cmp(&probs[a as usize]).unwrap()
+    });
+    idx.truncate(k);
+    idx.sort_by(|&a, &b| probs[b as usize].partial_cmp(&probs[a as usize]).unwrap());
+    idx
+}
+
+/// Vanilla Top-K target (paper §2): t_i = p_i for i in K, else 0.
+pub fn topk(probs: &[f32], k: usize, normalize: bool) -> SparseTarget {
+    let ids = topk_indices(probs, k);
+    let mut vals: Vec<f32> = ids.iter().map(|&i| probs[i as usize]).collect();
+    if normalize {
+        let z: f32 = vals.iter().sum();
+        if z > 0.0 {
+            vals.iter_mut().for_each(|v| *v /= z);
+        }
+    }
+    SparseTarget { ids, probs: vals }
+}
+
+/// Top-p (nucleus) with a hard cap of `k_cap` tokens.
+pub fn topp(probs: &[f32], p: f32, k_cap: usize) -> SparseTarget {
+    let ids = topk_indices(probs, k_cap);
+    let mut keep = Vec::new();
+    let mut vals = Vec::new();
+    let mut mass = 0.0f32;
+    for &i in &ids {
+        keep.push(i);
+        vals.push(probs[i as usize]);
+        mass += probs[i as usize];
+        if mass >= p {
+            break;
+        }
+    }
+    SparseTarget { ids: keep, probs: vals }
+}
+
+/// Random Sampling KD (paper §3.4): draw `rounds` tokens from q ∝ p^temp,
+/// weight by p/q, normalize. Duplicate draws merge. Matches the L1 kernel.
+pub fn random_sampling(probs: &[f32], rounds: usize, temp: f32, rng: &mut Pcg) -> SparseTarget {
+    let v = probs.len();
+    let q: Vec<f64> = probs.iter().map(|&p| (p.max(1e-20) as f64).powf(temp as f64)).collect();
+    let qz: f64 = q.iter().sum();
+    let cdf = Cdf::new(&q);
+    // accumulate importance ratios per sampled id
+    let mut ratio_by_id: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+    let mut total_ratio = 0.0f64;
+    for _ in 0..rounds {
+        let id = cdf.sample(rng).min(v - 1);
+        let p = probs[id] as f64;
+        let qq = q[id] / qz;
+        let r = p / qq.max(1e-20);
+        *ratio_by_id.entry(id as u32).or_default() += r;
+        total_ratio += r;
+    }
+    let mut ids: Vec<u32> = ratio_by_id.keys().copied().collect();
+    ids.sort();
+    let vals: Vec<f32> =
+        ids.iter().map(|i| (ratio_by_id[i] / total_ratio.max(1e-20)) as f32).collect();
+    SparseTarget { ids, probs: vals }
+}
+
+/// What the student trainer feeds `train_sparse`: target + scalar knobs.
+#[derive(Clone, Debug, Default)]
+pub struct TrainTarget {
+    pub target: SparseTarget,
+    /// uniform smoothing constant added to every class in-kernel
+    pub smooth_c: f32,
+    /// 1.0 enables the ghost-token residual term
+    pub ghost_on: f32,
+}
+
+/// Build the training target for `method` from the dense teacher row.
+/// `label` is the ground-truth token (used by NaiveFix), `rng` drives RS.
+pub fn build_target(
+    probs: &[f32],
+    label: u32,
+    method: Method,
+    rng: &mut Pcg,
+) -> Option<TrainTarget> {
+    let v = probs.len();
+    match method {
+        Method::CrossEntropy => None,
+        Method::FullKd => Some(TrainTarget {
+            target: SparseTarget { ids: (0..v as u32).collect(), probs: probs.to_vec() },
+            ..Default::default()
+        }),
+        Method::TopK { k, normalize } => Some(TrainTarget {
+            target: topk(probs, k, normalize),
+            ..Default::default()
+        }),
+        Method::TopP { p, k } => Some(TrainTarget { target: topp(probs, p, k), ..Default::default() }),
+        Method::Smoothing { k } => {
+            let t = topk(probs, k, false);
+            let residual = (1.0 - t.mass()).max(0.0);
+            Some(TrainTarget { target: t, smooth_c: residual / v as f32, ghost_on: 0.0 })
+        }
+        Method::GhostToken { k } => Some(TrainTarget {
+            target: topk(probs, k, false),
+            smooth_c: 0.0,
+            ghost_on: 1.0,
+        }),
+        Method::NaiveFix { k } => {
+            let mut t = topk(probs, k, false);
+            let residual = (1.0 - t.mass()).max(0.0);
+            if let Some(pos) = t.ids.iter().position(|&i| i == label) {
+                t.probs[pos] += residual;
+            } else {
+                t.ids.push(label);
+                t.probs.push(residual);
+            }
+            Some(TrainTarget { target: t, ..Default::default() })
+        }
+        Method::RandomSampling { rounds, temp } => Some(TrainTarget {
+            target: random_sampling(probs, rounds, temp, rng),
+            ..Default::default()
+        }),
+    }
+}
+
+/// Dense reconstruction of what the student is *effectively* asked to learn
+/// (scatter + smoothing; used by the toy experiments and estimator stats).
+pub fn effective_dense(t: &TrainTarget, vocab: usize) -> Vec<f32> {
+    let mut out = vec![t.smooth_c; vocab];
+    for (&i, &p) in t.target.ids.iter().zip(t.target.probs.iter()) {
+        out[i as usize] += p;
+    }
+    out
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn zipf_probs(v: usize) -> Vec<f32> {
+        let mut p: Vec<f32> = (1..=v).map(|i| 1.0 / i as f32).collect();
+        let z: f32 = p.iter().sum();
+        p.iter_mut().for_each(|x| *x /= z);
+        p
+    }
+
+    #[test]
+    fn topk_picks_largest() {
+        let p = zipf_probs(32);
+        let t = topk(&p, 4, false);
+        assert_eq!(t.ids, vec![0, 1, 2, 3]);
+        assert!((t.probs[0] - p[0]).abs() < 1e-7);
+    }
+
+    #[test]
+    fn topk_normalized_sums_to_one() {
+        let p = zipf_probs(32);
+        let t = topk(&p, 5, true);
+        assert!((t.mass() - 1.0).abs() < 1e-6);
+        // normalization scales the head UP — the paper's bias
+        assert!(t.probs[0] > p[0]);
+    }
+
+    #[test]
+    fn topp_stops_at_mass() {
+        let p = zipf_probs(64);
+        let t = topp(&p, 0.5, 64);
+        assert!(t.mass() >= 0.5);
+        let t_minus = t.mass() - t.probs.last().unwrap();
+        assert!(t_minus < 0.5);
+    }
+
+    #[test]
+    fn rs_weights_sum_to_one() {
+        let p = zipf_probs(128);
+        let mut rng = Pcg::new(0);
+        let t = random_sampling(&p, 50, 1.0, &mut rng);
+        assert!((t.mass() - 1.0).abs() < 1e-5);
+        assert!(t.k() <= 50);
+    }
+
+    #[test]
+    fn rs_t1_weights_are_multiples_of_inv_rounds() {
+        let p = zipf_probs(128);
+        let mut rng = Pcg::new(1);
+        let t = random_sampling(&p, 50, 1.0, &mut rng);
+        for &w in &t.probs {
+            let x = w * 50.0;
+            assert!((x - x.round()).abs() < 1e-4, "{w}");
+        }
+    }
+
+    #[test]
+    fn rs_unbiased_mean_estimate() {
+        let v = 64;
+        let p = zipf_probs(v);
+        let mut rng = Pcg::new(2);
+        let mut acc = vec![0.0f64; v];
+        let trials = 3000;
+        for _ in 0..trials {
+            let t = random_sampling(&p, 12, 1.0, &mut rng);
+            for (&i, &w) in t.ids.iter().zip(t.probs.iter()) {
+                acc[i as usize] += w as f64;
+            }
+        }
+        let max_err = acc
+            .iter()
+            .zip(p.iter())
+            .map(|(a, &b)| (a / trials as f64 - b as f64).abs())
+            .fold(0.0, f64::max);
+        assert!(max_err < 0.01, "max err {max_err}");
+    }
+
+    #[test]
+    fn topk_biased_mean_estimate() {
+        let v = 64;
+        let p = zipf_probs(v);
+        let t = topk(&p, 8, true);
+        // head strictly overestimated
+        for (&i, &w) in t.ids.iter().zip(t.probs.iter()) {
+            assert!(w > p[i as usize]);
+        }
+    }
+
+    #[test]
+    fn naive_fix_sums_to_one_and_keeps_label() {
+        let p = zipf_probs(64);
+        let mut rng = Pcg::new(3);
+        let tt = build_target(&p, 50, Method::NaiveFix { k: 8 }, &mut rng).unwrap();
+        assert!((tt.target.mass() - 1.0).abs() < 1e-6);
+        assert!(tt.target.ids.contains(&50));
+    }
+
+    #[test]
+    fn smoothing_total_mass_one() {
+        let p = zipf_probs(64);
+        let mut rng = Pcg::new(4);
+        let tt = build_target(&p, 0, Method::Smoothing { k: 8 }, &mut rng).unwrap();
+        let dense = effective_dense(&tt, 64);
+        let total: f32 = dense.iter().sum();
+        assert!((total - 1.0).abs() < 1e-5);
+        assert!(tt.smooth_c > 0.0);
+    }
+
+    #[test]
+    fn ghost_sets_flag() {
+        let p = zipf_probs(64);
+        let mut rng = Pcg::new(5);
+        let tt = build_target(&p, 0, Method::GhostToken { k: 8 }, &mut rng).unwrap();
+        assert_eq!(tt.ghost_on, 1.0);
+        assert!((tt.target.mass() - p[..8].iter().sum::<f32>()).abs() < 1e-6);
+    }
+
+    #[test]
+    fn property_build_target_ids_in_vocab() {
+        use crate::util::testing::forall;
+        let p = zipf_probs(100);
+        forall(
+            40,
+            |rng: &mut Pcg| {
+                let methods = [
+                    Method::TopK { k: 1 + rng.usize_below(20), normalize: rng.f32() < 0.5 },
+                    Method::NaiveFix { k: 1 + rng.usize_below(20) },
+                    Method::RandomSampling { rounds: 1 + rng.usize_below(60), temp: 1.0 },
+                    Method::Smoothing { k: 1 + rng.usize_below(20) },
+                ];
+                let m = methods[rng.usize_below(4)];
+                let label = rng.below(100) as u32;
+                (m, label, rng.next_u64())
+            },
+            |&(m, label, seed)| {
+                let mut rng = Pcg::new(seed);
+                let tt = build_target(&p, label, m, &mut rng).unwrap();
+                if tt.target.ids.iter().all(|&i| (i as usize) < 100)
+                    && tt.target.probs.iter().all(|&w| (0.0..=1.0 + 1e-5).contains(&w))
+                    && tt.target.mass() <= 1.0 + 1e-4
+                {
+                    Ok(())
+                } else {
+                    Err(format!("invalid target {tt:?}"))
+                }
+            },
+        );
+    }
+}

@@ -1,0 +1,83 @@
+//! Unique-tokens-vs-sampling-rounds curve (paper Figure 5 + Appendix C):
+//! on Zipf-like teacher rows, the expected number of *unique* sampled tokens
+//! grows as an approximate power law in the number of sampling rounds.
+
+use crate::sampling::random_sampling;
+use crate::util::rng::Pcg;
+
+/// Average unique tokens over `trials` RS draws with `rounds` rounds.
+pub fn avg_unique_tokens(probs: &[f32], rounds: usize, temp: f32, trials: usize, seed: u64) -> f64 {
+    let mut rng = Pcg::new(seed);
+    let mut total = 0usize;
+    for _ in 0..trials {
+        total += random_sampling(probs, rounds, temp, &mut rng).k();
+    }
+    total as f64 / trials as f64
+}
+
+/// The Figure 5 series: (rounds, avg unique tokens) pairs.
+pub fn rounds_curve(probs: &[f32], rounds_list: &[usize], trials: usize, seed: u64) -> Vec<(usize, f64)> {
+    rounds_list
+        .iter()
+        .map(|&n| (n, avg_unique_tokens(probs, n, 1.0, trials, seed ^ n as u64)))
+        .collect()
+}
+
+/// Sampling rounds needed to average ~`target_unique` unique tokens
+/// (paper: "the average number of unique tokens remains the same as K").
+pub fn rounds_for_unique(probs: &[f32], target_unique: f64, trials: usize, seed: u64) -> usize {
+    let mut lo = 1usize;
+    let mut hi = 4096usize;
+    while lo < hi {
+        let mid = (lo + hi) / 2;
+        if avg_unique_tokens(probs, mid, 1.0, trials, seed) < target_unique {
+            lo = mid + 1;
+        } else {
+            hi = mid;
+        }
+    }
+    lo
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::metrics::powerlaw::fit_powerlaw;
+    use crate::sampling::zipf::zipf;
+
+    #[test]
+    fn unique_tokens_monotone_in_rounds() {
+        let p = zipf(512, 1.0);
+        let curve = rounds_curve(&p, &[2, 8, 32, 128], 60, 0);
+        for w in curve.windows(2) {
+            assert!(w[1].1 > w[0].1, "{curve:?}");
+        }
+    }
+
+    #[test]
+    fn unique_at_most_rounds() {
+        let p = zipf(512, 1.0);
+        for (n, u) in rounds_curve(&p, &[1, 4, 16, 64], 40, 1) {
+            assert!(u <= n as f64 + 1e-9);
+        }
+    }
+
+    #[test]
+    fn curve_is_near_power_law() {
+        // paper Fig 5: log-log linear ("almost perfectly linear")
+        let p = zipf(512, 1.0);
+        let curve = rounds_curve(&p, &[2, 4, 8, 16, 32, 64, 128, 256], 60, 2);
+        let pts: Vec<(f64, f64)> = curve.iter().map(|&(n, u)| (n as f64, u)).collect();
+        let fit = fit_powerlaw(&pts);
+        assert!(fit.r2 > 0.98, "r2 = {}", fit.r2);
+        assert!(fit.exponent > 0.3 && fit.exponent < 1.0, "exp = {}", fit.exponent);
+    }
+
+    #[test]
+    fn rounds_for_unique_hits_target() {
+        let p = zipf(512, 1.0);
+        let n = rounds_for_unique(&p, 12.0, 40, 3);
+        let u = avg_unique_tokens(&p, n, 1.0, 200, 4);
+        assert!((u - 12.0).abs() < 2.5, "rounds {n} -> unique {u}");
+    }
+}

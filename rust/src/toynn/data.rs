@@ -1,0 +1,135 @@
+//! Synthetic classification datasets (paper Appendix K pseudo-code):
+//! Gaussian clusters around random class means in d dimensions (Fig 2b) and
+//! a CIFAR-100-like toy image task — class-specific 8x8 patterns + noise
+//! (Fig 2c substitute; CIFAR itself is not available offline).
+
+use crate::util::rng::Pcg;
+
+pub struct GaussianClasses {
+    pub n_classes: usize,
+    pub dim: usize,
+    means: Vec<f32>,           // [n_classes, dim]
+    sigmas: Vec<f32>,          // per-class noise scale
+}
+
+impl GaussianClasses {
+    pub fn new(n_classes: usize, dim: usize, sigma: f32, seed: u64) -> GaussianClasses {
+        let mut rng = Pcg::new(seed);
+        let means: Vec<f32> = (0..n_classes * dim).map(|_| rng.f32()).collect();
+        let sigmas: Vec<f32> = (0..n_classes).map(|_| rng.f32() * sigma).collect();
+        GaussianClasses { n_classes, dim, means, sigmas }
+    }
+
+    /// Sample a batch: (x [b, dim], labels [b]).
+    pub fn batch(&self, b: usize, rng: &mut Pcg) -> (Vec<f32>, Vec<u32>) {
+        let mut x = Vec::with_capacity(b * self.dim);
+        let mut y = Vec::with_capacity(b);
+        for _ in 0..b {
+            let c = rng.usize_below(self.n_classes);
+            y.push(c as u32);
+            let s = self.sigmas[c];
+            for d in 0..self.dim {
+                x.push(self.means[c * self.dim + d] + rng.normal() as f32 * s);
+            }
+        }
+        (x, y)
+    }
+}
+
+/// Toy image classes: each class is a fixed low-frequency 2-D pattern;
+/// samples add pixel noise and a random brightness shift.
+pub struct ToyImages {
+    pub n_classes: usize,
+    pub side: usize,
+    patterns: Vec<f32>, // [n_classes, side*side]
+}
+
+impl ToyImages {
+    pub fn new(n_classes: usize, side: usize, seed: u64) -> ToyImages {
+        let mut rng = Pcg::new(seed);
+        let mut patterns = Vec::with_capacity(n_classes * side * side);
+        for _ in 0..n_classes {
+            // sum of a few random sinusoids: smooth class-specific texture
+            let (fx, fy) = (1.0 + rng.f32() * 3.0, 1.0 + rng.f32() * 3.0);
+            let (px, py) = (rng.f32() * 6.28, rng.f32() * 6.28);
+            let amp = 0.5 + rng.f32();
+            for i in 0..side {
+                for j in 0..side {
+                    let v = amp
+                        * ((i as f32 / side as f32 * fx * 6.28 + px).sin()
+                            + (j as f32 / side as f32 * fy * 6.28 + py).cos());
+                    patterns.push(v);
+                }
+            }
+        }
+        ToyImages { n_classes, side, patterns }
+    }
+
+    pub fn dim(&self) -> usize {
+        self.side * self.side
+    }
+
+    pub fn batch(&self, b: usize, noise: f32, rng: &mut Pcg) -> (Vec<f32>, Vec<u32>) {
+        let dim = self.dim();
+        let mut x = Vec::with_capacity(b * dim);
+        let mut y = Vec::with_capacity(b);
+        for _ in 0..b {
+            let c = rng.usize_below(self.n_classes);
+            y.push(c as u32);
+            let shift = rng.normal() as f32 * 0.2;
+            for d in 0..dim {
+                x.push(self.patterns[c * dim + d] + shift + rng.normal() as f32 * noise);
+            }
+        }
+        (x, y)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn gaussian_batch_shapes() {
+        let g = GaussianClasses::new(16, 8, 1.0, 0);
+        let mut rng = Pcg::new(1);
+        let (x, y) = g.batch(32, &mut rng);
+        assert_eq!(x.len(), 32 * 8);
+        assert_eq!(y.len(), 32);
+        assert!(y.iter().all(|&c| c < 16));
+    }
+
+    #[test]
+    fn classes_are_separable_at_low_noise() {
+        let g = GaussianClasses::new(4, 16, 0.01, 2);
+        let mut rng = Pcg::new(3);
+        let (x, y) = g.batch(64, &mut rng);
+        // nearest-mean classification should be near-perfect
+        let mut correct = 0;
+        for i in 0..64 {
+            let xi = &x[i * 16..(i + 1) * 16];
+            let mut best = (f32::MAX, 0u32);
+            for c in 0..4 {
+                let d: f32 = (0..16)
+                    .map(|k| (xi[k] - g.means[c * 16 + k]).powi(2))
+                    .sum();
+                if d < best.0 {
+                    best = (d, c as u32);
+                }
+            }
+            if best.1 == y[i] {
+                correct += 1;
+            }
+        }
+        assert!(correct > 60, "{correct}");
+    }
+
+    #[test]
+    fn image_batch_shapes() {
+        let t = ToyImages::new(10, 8, 0);
+        let mut rng = Pcg::new(1);
+        let (x, y) = t.batch(16, 0.3, &mut rng);
+        assert_eq!(x.len(), 16 * 64);
+        assert!(y.iter().all(|&c| c < 10));
+    }
+}

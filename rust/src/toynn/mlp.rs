@@ -1,0 +1,263 @@
+//! 3-layer GELU MLP with hand-rolled forward/backward and Adam — the toy
+//! model of paper Appendix K (`ToyModel`: Linear-GELU-Linear-GELU-Linear).
+
+use crate::util::rng::Pcg;
+
+pub struct Linear {
+    pub w: Vec<f32>, // [din, dout] row-major
+    pub b: Vec<f32>, // [dout]
+    pub din: usize,
+    pub dout: usize,
+    // Adam state
+    mw: Vec<f32>,
+    vw: Vec<f32>,
+    mb: Vec<f32>,
+    vb: Vec<f32>,
+}
+
+impl Linear {
+    fn new(din: usize, dout: usize, rng: &mut Pcg) -> Linear {
+        let scale = (2.0 / din as f32).sqrt();
+        Linear {
+            w: (0..din * dout).map(|_| rng.normal() as f32 * scale).collect(),
+            b: vec![0.0; dout],
+            din,
+            dout,
+            mw: vec![0.0; din * dout],
+            vw: vec![0.0; din * dout],
+            mb: vec![0.0; dout],
+            vb: vec![0.0; dout],
+        }
+    }
+
+    /// y[b,dout] = x[b,din] @ w + b
+    fn forward(&self, x: &[f32], bsz: usize) -> Vec<f32> {
+        let mut y = vec![0.0f32; bsz * self.dout];
+        for i in 0..bsz {
+            let xi = &x[i * self.din..(i + 1) * self.din];
+            let yi = &mut y[i * self.dout..(i + 1) * self.dout];
+            yi.copy_from_slice(&self.b);
+            for (k, &xv) in xi.iter().enumerate() {
+                if xv == 0.0 {
+                    continue;
+                }
+                let wrow = &self.w[k * self.dout..(k + 1) * self.dout];
+                for (j, &wv) in wrow.iter().enumerate() {
+                    yi[j] += xv * wv;
+                }
+            }
+        }
+        y
+    }
+
+    /// Backward: given dL/dy, accumulate dW, db (returned via adam later) and
+    /// return dL/dx. Applies the Adam update immediately (online step).
+    fn backward_update(
+        &mut self,
+        x: &[f32],
+        dy: &[f32],
+        bsz: usize,
+        lr: f32,
+        step: i32,
+    ) -> Vec<f32> {
+        let mut dw = vec![0.0f32; self.din * self.dout];
+        let mut db = vec![0.0f32; self.dout];
+        let mut dx = vec![0.0f32; bsz * self.din];
+        for i in 0..bsz {
+            let xi = &x[i * self.din..(i + 1) * self.din];
+            let dyi = &dy[i * self.dout..(i + 1) * self.dout];
+            for (j, &d) in dyi.iter().enumerate() {
+                db[j] += d;
+            }
+            for k in 0..self.din {
+                let wrow = &self.w[k * self.dout..(k + 1) * self.dout];
+                let dwrow = &mut dw[k * self.dout..(k + 1) * self.dout];
+                let mut acc = 0.0f32;
+                let xv = xi[k];
+                for j in 0..self.dout {
+                    dwrow[j] += xv * dyi[j];
+                    acc += wrow[j] * dyi[j];
+                }
+                dx[i * self.din + k] = acc;
+            }
+        }
+        adam(&mut self.w, &mut self.mw, &mut self.vw, &dw, lr, step);
+        adam(&mut self.b, &mut self.mb, &mut self.vb, &db, lr, step);
+        dx
+    }
+}
+
+fn adam(p: &mut [f32], m: &mut [f32], v: &mut [f32], g: &[f32], lr: f32, step: i32) {
+    const B1: f32 = 0.9;
+    const B2: f32 = 0.999;
+    const EPS: f32 = 1e-8;
+    let t = step as f32;
+    let bc1 = 1.0 - B1.powf(t);
+    let bc2 = 1.0 - B2.powf(t);
+    for i in 0..p.len() {
+        m[i] = B1 * m[i] + (1.0 - B1) * g[i];
+        v[i] = B2 * v[i] + (1.0 - B2) * g[i] * g[i];
+        p[i] -= lr * (m[i] / bc1) / ((v[i] / bc2).sqrt() + EPS);
+    }
+}
+
+#[inline]
+fn gelu(x: f32) -> f32 {
+    0.5 * x * (1.0 + (0.7978845608 * (x + 0.044715 * x * x * x)).tanh())
+}
+
+#[inline]
+fn gelu_grad(x: f32) -> f32 {
+    let t = 0.7978845608 * (x + 0.044715 * x * x * x);
+    let th = t.tanh();
+    let sech2 = 1.0 - th * th;
+    0.5 * (1.0 + th) + 0.5 * x * sech2 * 0.7978845608 * (1.0 + 3.0 * 0.044715 * x * x)
+}
+
+pub struct Mlp {
+    pub l1: Linear,
+    pub l2: Linear,
+    pub l3: Linear,
+    step: i32,
+}
+
+impl Mlp {
+    pub fn new(din: usize, hidden: usize, classes: usize, seed: u64) -> Mlp {
+        let mut rng = Pcg::new(seed);
+        Mlp {
+            l1: Linear::new(din, hidden, &mut rng),
+            l2: Linear::new(hidden, hidden, &mut rng),
+            l3: Linear::new(hidden, classes, &mut rng),
+            step: 0,
+        }
+    }
+
+    /// Forward returning logits [b, classes].
+    pub fn logits(&self, x: &[f32], bsz: usize) -> Vec<f32> {
+        let h1 = self.l1.forward(x, bsz);
+        let a1: Vec<f32> = h1.iter().map(|&v| gelu(v)).collect();
+        let h2 = self.l2.forward(&a1, bsz);
+        let a2: Vec<f32> = h2.iter().map(|&v| gelu(v)).collect();
+        self.l3.forward(&a2, bsz)
+    }
+
+    /// Softmax rows of logits in place.
+    pub fn probs(&self, x: &[f32], bsz: usize) -> Vec<f32> {
+        let mut l = self.logits(x, bsz);
+        softmax_rows(&mut l, self.l3.dout);
+        l
+    }
+
+    /// One training step: caller provides dL/dlogits (the KD gradient
+    /// `(sum_t)·p − t`, CE gradient `p − onehot`, etc.).
+    pub fn step_with_logit_grad(&mut self, x: &[f32], bsz: usize, dlogits: &[f32], lr: f32) {
+        self.step += 1;
+        // recompute activations (hold them for backward)
+        let h1 = self.l1.forward(x, bsz);
+        let a1: Vec<f32> = h1.iter().map(|&v| gelu(v)).collect();
+        let h2 = self.l2.forward(&a1, bsz);
+        let a2: Vec<f32> = h2.iter().map(|&v| gelu(v)).collect();
+
+        let da2 = self.l3.backward_update(&a2, dlogits, bsz, lr, self.step);
+        let dh2: Vec<f32> = da2.iter().zip(h2.iter()).map(|(&d, &h)| d * gelu_grad(h)).collect();
+        let da1 = self.l2.backward_update(&a1, &dh2, bsz, lr, self.step);
+        let dh1: Vec<f32> = da1.iter().zip(h1.iter()).map(|(&d, &h)| d * gelu_grad(h)).collect();
+        let _ = self.l1.backward_update(x, &dh1, bsz, lr, self.step);
+    }
+}
+
+pub fn softmax_rows(logits: &mut [f32], classes: usize) {
+    for row in logits.chunks_mut(classes) {
+        let m = row.iter().cloned().fold(f32::MIN, f32::max);
+        let mut z = 0.0f32;
+        for v in row.iter_mut() {
+            *v = (*v - m).exp();
+            z += *v;
+        }
+        for v in row.iter_mut() {
+            *v /= z;
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn softmax_rows_normalized() {
+        let mut x = vec![1.0f32, 2.0, 3.0, -1.0, 0.0, 1.0];
+        softmax_rows(&mut x, 3);
+        assert!((x[0..3].iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!((x[3..6].iter().sum::<f32>() - 1.0).abs() < 1e-6);
+        assert!(x[2] > x[1] && x[1] > x[0]);
+    }
+
+    #[test]
+    fn gelu_grad_matches_numeric() {
+        for &x in &[-2.0f32, -0.5, 0.0, 0.7, 3.0] {
+            let eps = 1e-3;
+            let num = (gelu(x + eps) - gelu(x - eps)) / (2.0 * eps);
+            assert!((gelu_grad(x) - num).abs() < 1e-3, "{x}");
+        }
+    }
+
+    #[test]
+    fn ce_training_learns_xor_like_task() {
+        // two classes, means far apart: CE training should reach high accuracy
+        use crate::toynn::data::GaussianClasses;
+        let data = GaussianClasses::new(4, 8, 0.05, 0);
+        let mut mlp = Mlp::new(8, 32, 4, 1);
+        let mut rng = Pcg::new(2);
+        for _ in 0..300 {
+            let (x, y) = data.batch(64, &mut rng);
+            let mut p = mlp.probs(&x, 64);
+            for (i, &label) in y.iter().enumerate() {
+                p[i * 4 + label as usize] -= 1.0; // dL/dlogits = p - onehot
+            }
+            for v in p.iter_mut() {
+                *v /= 64.0;
+            }
+            mlp.step_with_logit_grad(&x, 64, &p, 2e-3);
+        }
+        let (x, y) = data.batch(256, &mut rng);
+        let p = mlp.probs(&x, 256);
+        let correct = y
+            .iter()
+            .enumerate()
+            .filter(|(i, &label)| {
+                let row = &p[i * 4..(i + 1) * 4];
+                let am = row.iter().enumerate().max_by(|a, b| a.1.partial_cmp(b.1).unwrap()).unwrap().0;
+                am == label as usize
+            })
+            .count();
+        assert!(correct > 230, "accuracy {correct}/256");
+    }
+
+    #[test]
+    fn linear_backward_matches_numeric() {
+        let mut rng = Pcg::new(3);
+        let lin = Linear::new(4, 3, &mut rng);
+        let x: Vec<f32> = (0..8).map(|_| rng.normal() as f32).collect();
+        let y = lin.forward(&x, 2);
+        // dL = sum(y^2)/2 -> dy = y
+        let mut lin2 = Linear {
+            w: lin.w.clone(), b: lin.b.clone(), din: 4, dout: 3,
+            mw: vec![0.0; 12], vw: vec![0.0; 12], mb: vec![0.0; 3], vb: vec![0.0; 3],
+        };
+        let dx = lin2.backward_update(&x, &y, 2, 0.0, 1); // lr=0: no param change
+        // numeric dx
+        for i in 0..8 {
+            let eps = 1e-2;
+            let mut xp = x.clone();
+            xp[i] += eps;
+            let mut xm = x.clone();
+            xm[i] -= eps;
+            let f = |xx: &Vec<f32>| -> f32 {
+                lin.forward(xx, 2).iter().map(|v| v * v * 0.5).sum()
+            };
+            let num = (f(&xp) - f(&xm)) / (2.0 * eps);
+            assert!((dx[i] - num).abs() < 1e-2, "dx[{i}] {} vs {num}", dx[i]);
+        }
+    }
+}

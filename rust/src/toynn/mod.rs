@@ -1,0 +1,16 @@
+//! Pure-rust toy neural network for the synthetic calibration experiments
+//! (paper Figure 2b/2c + Appendix K): a 3-layer GELU MLP with hand-rolled
+//! backprop and Adam, trained with CE / FullKD / Top-K KD / RS-KD on
+//! synthetic Gaussian class clusters and a CIFAR-like toy image task.
+//!
+//! This substrate is deliberately independent of the PJRT runtime: the
+//! paper's Fig 2 experiments are standalone sanity checks of the estimator
+//! theory and must not depend on the LLM stack.
+
+pub mod data;
+pub mod mlp;
+pub mod train;
+
+pub use data::{GaussianClasses, ToyImages};
+pub use mlp::Mlp;
+pub use train::{train_toy, ToyMethod, ToyTrainConfig, ToyTrainResult};

@@ -1,0 +1,195 @@
+//! Toy KD training loops (paper Fig 2b/2c): train a teacher MLP with CE,
+//! then students with CE / FullKD / Top-K KD / RS-KD, and measure calibration.
+//! The logit gradients are the paper's closed forms, so this doubles as an
+//! independent check of Appendix A.4/A.6 in a second implementation.
+
+use crate::metrics::ece::{calibration, Calibration};
+use crate::sampling::{build_target, effective_dense, Method};
+use crate::toynn::mlp::Mlp;
+use crate::util::rng::Pcg;
+
+#[derive(Clone, Copy, Debug)]
+pub enum ToyMethod {
+    Ce,
+    FullKd,
+    TopK { k: usize },
+    RandomSampling { rounds: usize },
+}
+
+impl ToyMethod {
+    pub fn name(&self) -> &'static str {
+        match self {
+            ToyMethod::Ce => "CE",
+            ToyMethod::FullKd => "FullKD",
+            ToyMethod::TopK { .. } => "Top-K",
+            ToyMethod::RandomSampling { .. } => "RS-KD",
+        }
+    }
+}
+
+#[derive(Clone, Debug)]
+pub struct ToyTrainConfig {
+    pub steps: usize,
+    pub batch: usize,
+    pub lr: f32,
+    pub hidden: usize,
+    pub seed: u64,
+}
+
+impl Default for ToyTrainConfig {
+    fn default() -> Self {
+        ToyTrainConfig { steps: 800, batch: 128, lr: 2e-3, hidden: 48, seed: 0 }
+    }
+}
+
+pub struct ToyTrainResult {
+    pub accuracy: f64,
+    pub calibration: Calibration,
+}
+
+/// Train a student on batches from `sample` using `method`, distilling from
+/// `teacher` (ignored for CE). Returns held-out accuracy + calibration.
+pub fn train_toy<F>(
+    mut sample: F,
+    dim: usize,
+    n_classes: usize,
+    teacher: Option<&Mlp>,
+    method: ToyMethod,
+    cfg: &ToyTrainConfig,
+) -> ToyTrainResult
+where
+    F: FnMut(usize, &mut Pcg) -> (Vec<f32>, Vec<u32>),
+{
+    let mut rng = Pcg::new(cfg.seed ^ 0xBEEF);
+    let mut student = Mlp::new(dim, cfg.hidden, n_classes, cfg.seed ^ 0xF00D);
+    let b = cfg.batch;
+    for _ in 0..cfg.steps {
+        let (x, y) = sample(b, &mut rng);
+        let p = student.probs(&x, b);
+        let mut dlogits = vec![0.0f32; b * n_classes];
+        match (method, teacher) {
+            (ToyMethod::Ce, _) | (_, None) => {
+                for i in 0..b {
+                    for c in 0..n_classes {
+                        dlogits[i * n_classes + c] = p[i * n_classes + c];
+                    }
+                    dlogits[i * n_classes + y[i] as usize] -= 1.0;
+                }
+            }
+            (m, Some(t)) => {
+                let tp = t.probs(&x, b);
+                for i in 0..b {
+                    let trow = &tp[i * n_classes..(i + 1) * n_classes];
+                    let dense: Vec<f32> = match m {
+                        ToyMethod::FullKd => trow.to_vec(),
+                        ToyMethod::TopK { k } => {
+                            let tt = build_target(trow, y[i], Method::TopK { k, normalize: false }, &mut rng).unwrap();
+                            effective_dense(&tt, n_classes)
+                        }
+                        ToyMethod::RandomSampling { rounds } => {
+                            let tt = build_target(trow, y[i], Method::RandomSampling { rounds, temp: 1.0 }, &mut rng).unwrap();
+                            effective_dense(&tt, n_classes)
+                        }
+                        ToyMethod::Ce => unreachable!(),
+                    };
+                    // generalized KLD gradient (paper Eq. 4): (Σt)·p − t
+                    let sum_t: f32 = dense.iter().sum();
+                    for c in 0..n_classes {
+                        dlogits[i * n_classes + c] =
+                            sum_t * p[i * n_classes + c] - dense[c];
+                    }
+                }
+            }
+        }
+        for v in dlogits.iter_mut() {
+            *v /= b as f32;
+        }
+        student.step_with_logit_grad(&x, b, &dlogits, cfg.lr);
+    }
+
+    // held-out evaluation
+    let mut conf = Vec::new();
+    let mut correct = Vec::new();
+    for _ in 0..20 {
+        let (x, y) = sample(b, &mut rng);
+        let p = student.probs(&x, b);
+        for i in 0..b {
+            let row = &p[i * n_classes..(i + 1) * n_classes];
+            let (am, &c) = row
+                .iter()
+                .enumerate()
+                .max_by(|a, bb| a.1.partial_cmp(bb.1).unwrap())
+                .unwrap();
+            conf.push(c);
+            correct.push(if am == y[i] as usize { 1.0 } else { 0.0 });
+        }
+    }
+    let cal = calibration(&conf, &correct, 12);
+    ToyTrainResult { accuracy: cal.accuracy, calibration: cal }
+}
+
+/// Train a CE teacher for the KD experiments.
+pub fn train_teacher<F>(
+    mut sample: F,
+    dim: usize,
+    n_classes: usize,
+    cfg: &ToyTrainConfig,
+) -> Mlp
+where
+    F: FnMut(usize, &mut Pcg) -> (Vec<f32>, Vec<u32>),
+{
+    let mut rng = Pcg::new(cfg.seed ^ 0x7EAC);
+    let mut teacher = Mlp::new(dim, cfg.hidden * 2, n_classes, cfg.seed ^ 0x7EA0);
+    for _ in 0..cfg.steps {
+        let (x, y) = sample(cfg.batch, &mut rng);
+        let mut d = teacher.probs(&x, cfg.batch);
+        for (i, &label) in y.iter().enumerate() {
+            d[i * n_classes + label as usize] -= 1.0;
+        }
+        for v in d.iter_mut() {
+            *v /= cfg.batch as f32;
+        }
+        teacher.step_with_logit_grad(&x, cfg.batch, &d, cfg.lr);
+    }
+    teacher
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::toynn::data::GaussianClasses;
+
+    fn quick_cfg() -> ToyTrainConfig {
+        ToyTrainConfig { steps: 250, batch: 96, lr: 3e-3, hidden: 32, seed: 0 }
+    }
+
+    #[test]
+    fn kd_methods_train_above_chance() {
+        let data = GaussianClasses::new(16, 24, 0.8, 0);
+        let cfg = quick_cfg();
+        let teacher = train_teacher(|b, r| data.batch(b, r), 24, 16, &cfg);
+        for method in [ToyMethod::FullKd, ToyMethod::TopK { k: 3 }, ToyMethod::RandomSampling { rounds: 12 }] {
+            let res = train_toy(|b, r| data.batch(b, r), 24, 16, Some(&teacher), method, &cfg);
+            assert!(res.accuracy > 0.3, "{}: acc {}", method.name(), res.accuracy);
+        }
+    }
+
+    #[test]
+    fn topk_more_overconfident_than_rs() {
+        // Fig 2b's message: Top-K KD inflates confidence; RS-KD stays
+        // calibrated like FullKD.
+        let data = GaussianClasses::new(32, 32, 1.4, 1);
+        let cfg = ToyTrainConfig { steps: 500, ..quick_cfg() };
+        let teacher = train_teacher(|b, r| data.batch(b, r), 32, 32, &cfg);
+        let topk = train_toy(|b, r| data.batch(b, r), 32, 32, Some(&teacher),
+                             ToyMethod::TopK { k: 3 }, &cfg);
+        let rs = train_toy(|b, r| data.batch(b, r), 32, 32, Some(&teacher),
+                           ToyMethod::RandomSampling { rounds: 30 }, &cfg);
+        let over_topk = topk.calibration.mean_conf - topk.calibration.accuracy;
+        let over_rs = rs.calibration.mean_conf - rs.calibration.accuracy;
+        assert!(
+            over_topk > over_rs + 0.02,
+            "topk overconf {over_topk:.3} rs {over_rs:.3}"
+        );
+    }
+}

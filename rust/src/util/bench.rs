@@ -1,0 +1,158 @@
+//! Micro-benchmark harness (criterion is not in the offline vendor set).
+//!
+//! Every `cargo bench` target uses this: warmup + timed iterations, robust
+//! statistics (median / p10 / p90), throughput helpers, and a plain-text
+//! experiment report writer so each paper table/figure lands in
+//! `target/experiments/<id>.txt`.
+
+use std::fmt::Write as _;
+use std::time::{Duration, Instant};
+
+#[derive(Clone, Debug)]
+pub struct BenchStats {
+    pub iters: usize,
+    pub median: Duration,
+    pub p10: Duration,
+    pub p90: Duration,
+    pub mean: Duration,
+}
+
+impl BenchStats {
+    pub fn per_iter_ms(&self) -> f64 {
+        self.median.as_secs_f64() * 1e3
+    }
+}
+
+/// Run `f` repeatedly until `budget` elapses (after `warmup` runs), collecting
+/// per-iteration wall times.
+pub fn bench<F: FnMut()>(warmup: usize, budget: Duration, mut f: F) -> BenchStats {
+    for _ in 0..warmup {
+        f();
+    }
+    let mut samples = Vec::new();
+    let start = Instant::now();
+    while start.elapsed() < budget || samples.len() < 3 {
+        let t = Instant::now();
+        f();
+        samples.push(t.elapsed());
+        if samples.len() >= 10_000 {
+            break;
+        }
+    }
+    stats_of(samples)
+}
+
+pub fn stats_of(mut samples: Vec<Duration>) -> BenchStats {
+    assert!(!samples.is_empty());
+    samples.sort();
+    let n = samples.len();
+    let total: Duration = samples.iter().sum();
+    BenchStats {
+        iters: n,
+        median: samples[n / 2],
+        p10: samples[n / 10],
+        p90: samples[(n * 9) / 10],
+        mean: total / (n as u32),
+    }
+}
+
+/// Plain-text experiment report: paper-style table with aligned columns,
+/// echoed to stdout and written to `target/experiments/<id>.txt`.
+pub struct Report {
+    id: String,
+    title: String,
+    lines: Vec<String>,
+}
+
+impl Report {
+    pub fn new(id: &str, title: &str) -> Report {
+        Report { id: id.to_string(), title: title.to_string(), lines: Vec::new() }
+    }
+
+    pub fn line(&mut self, s: impl AsRef<str>) {
+        println!("{}", s.as_ref());
+        self.lines.push(s.as_ref().to_string());
+    }
+
+    pub fn table(&mut self, header: &[&str], rows: &[Vec<String>]) {
+        let mut widths: Vec<usize> = header.iter().map(|h| h.len()).collect();
+        for row in rows {
+            for (i, cell) in row.iter().enumerate() {
+                if i < widths.len() {
+                    widths[i] = widths[i].max(cell.len());
+                }
+            }
+        }
+        let fmt_row = |cells: &[String]| {
+            let mut s = String::new();
+            for (i, c) in cells.iter().enumerate() {
+                let w = widths.get(i).copied().unwrap_or(c.len());
+                let _ = write!(s, "| {c:w$} ");
+            }
+            s.push('|');
+            s
+        };
+        let head: Vec<String> = header.iter().map(|h| h.to_string()).collect();
+        let sep: Vec<String> = widths.iter().map(|w| "-".repeat(*w)).collect();
+        self.line(fmt_row(&head));
+        self.line(fmt_row(&sep));
+        for row in rows {
+            self.line(fmt_row(row));
+        }
+    }
+
+    pub fn finish(&self) {
+        let dir = std::path::Path::new("target/experiments");
+        let _ = std::fs::create_dir_all(dir);
+        let path = dir.join(format!("{}.txt", self.id));
+        let mut text = format!("# {} — {}\n", self.id, self.title);
+        for l in &self.lines {
+            text.push_str(l);
+            text.push('\n');
+        }
+        if let Err(e) = std::fs::write(&path, &text) {
+            eprintln!("warning: could not write {}: {e}", path.display());
+        } else {
+            println!("[report written to {}]", path.display());
+        }
+    }
+}
+
+pub fn fmt_f(x: f64, digits: usize) -> String {
+    format!("{x:.digits$}")
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bench_counts_iters() {
+        let mut n = 0u64;
+        let s = bench(2, Duration::from_millis(20), || {
+            n += 1;
+            std::hint::black_box(n);
+        });
+        assert!(s.iters >= 3);
+        assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+
+    #[test]
+    fn stats_percentiles() {
+        let samples: Vec<Duration> = (1..=100).map(Duration::from_micros).collect();
+        let s = stats_of(samples);
+        assert_eq!(s.median, Duration::from_micros(51));
+        assert_eq!(s.p10, Duration::from_micros(11));
+    }
+
+    #[test]
+    fn report_table_alignment() {
+        let mut r = Report::new("test_report", "test");
+        r.table(
+            &["method", "loss"],
+            &[vec!["CE".into(), "2.81".into()], vec!["FullKD".into(), "2.75".into()]],
+        );
+        assert!(r.lines[0].contains("method"));
+        assert!(r.lines.iter().all(|l| l.starts_with('|')));
+    }
+}

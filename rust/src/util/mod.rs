@@ -1,0 +1,9 @@
+//! Self-contained utilities: the offline vendor set ships only `xla` and
+//! `anyhow`, so JSON, PRNG, CLI parsing, benchmarking, and property testing
+//! are implemented here from scratch.
+
+pub mod bench;
+pub mod cli;
+pub mod json;
+pub mod rng;
+pub mod testing;

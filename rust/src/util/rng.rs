@@ -1,0 +1,250 @@
+//! Deterministic PRNG for the coordinator: PCG64-ish (no `rand` crate in the
+//! offline build). Every pipeline stage takes an explicit seed so runs are
+//! reproducible and teacher/student shuffle-seed alignment (paper Appendix
+//! D.3, Table 13) is an experiment knob rather than an accident.
+
+/// Permuted congruential generator (PCG-XSH-RR variant on a 64-bit LCG state,
+/// 128-bit increment folded in at seed time).
+#[derive(Clone, Debug)]
+pub struct Pcg {
+    state: u64,
+    inc: u64,
+}
+
+const PCG_MULT: u64 = 6364136223846793005;
+
+impl Pcg {
+    pub fn new(seed: u64) -> Self {
+        // SplitMix64 seeding to decorrelate nearby seeds
+        let mut sm = seed.wrapping_add(0x9E3779B97F4A7C15);
+        let mut next = || {
+            sm = sm.wrapping_add(0x9E3779B97F4A7C15);
+            let mut z = sm;
+            z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+            z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+            z ^ (z >> 31)
+        };
+        let mut rng = Pcg { state: next(), inc: next() | 1 };
+        rng.next_u64();
+        rng
+    }
+
+    /// Derive an independent stream (for per-shard / per-worker rngs).
+    pub fn fork(&mut self, tag: u64) -> Pcg {
+        Pcg::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
+    }
+
+    #[inline]
+    pub fn next_u64(&mut self) -> u64 {
+        // SplitMix64 finalizer over an LCG-advanced state: statistically
+        // sound output mixing (the raw LCG low bits are never exposed).
+        self.state = self.state.wrapping_mul(PCG_MULT).wrapping_add(self.inc);
+        let mut z = self.state;
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
+    #[inline]
+    pub fn next_u32(&mut self) -> u32 {
+        (self.next_u64() >> 32) as u32
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f32(&mut self) -> f32 {
+        ((self.next_u32() >> 8) as f32) * (1.0 / (1u32 << 24) as f32)
+    }
+
+    /// Uniform in [0, 1).
+    #[inline]
+    pub fn f64(&mut self) -> f64 {
+        ((self.next_u64() >> 11) as f64) * (1.0 / (1u64 << 53) as f64)
+    }
+
+    /// Uniform integer in [0, n). Lemire-style rejection to avoid modulo bias.
+    pub fn below(&mut self, n: u64) -> u64 {
+        assert!(n > 0);
+        let mut x = self.next_u64();
+        let mut m = (x as u128) * (n as u128);
+        let mut lo = m as u64;
+        if lo < n {
+            let t = n.wrapping_neg() % n;
+            while lo < t {
+                x = self.next_u64();
+                m = (x as u128) * (n as u128);
+                lo = m as u64;
+            }
+        }
+        (m >> 64) as u64
+    }
+
+    pub fn usize_below(&mut self, n: usize) -> usize {
+        self.below(n as u64) as usize
+    }
+
+    /// Standard normal via Box-Muller.
+    pub fn normal(&mut self) -> f64 {
+        let u1 = self.f64().max(1e-300);
+        let u2 = self.f64();
+        (-2.0 * u1.ln()).sqrt() * (2.0 * std::f64::consts::PI * u2).cos()
+    }
+
+    /// Fisher-Yates shuffle.
+    pub fn shuffle<T>(&mut self, xs: &mut [T]) {
+        for i in (1..xs.len()).rev() {
+            let j = self.usize_below(i + 1);
+            xs.swap(i, j);
+        }
+    }
+
+    /// Sample an index from unnormalized weights via linear CDF walk.
+    pub fn weighted(&mut self, weights: &[f64]) -> usize {
+        let total: f64 = weights.iter().sum();
+        let mut u = self.f64() * total;
+        for (i, w) in weights.iter().enumerate() {
+            u -= w;
+            if u <= 0.0 {
+                return i;
+            }
+        }
+        weights.len() - 1
+    }
+
+    /// Fill a buffer with uniforms in [0,1).
+    pub fn fill_f32(&mut self, out: &mut [f32]) {
+        for x in out.iter_mut() {
+            *x = self.f32();
+        }
+    }
+}
+
+/// Cumulative-distribution sampler with O(log V) draws, used by the pure-rust
+/// importance sampler and the corpus generator.
+pub struct Cdf {
+    cum: Vec<f64>,
+}
+
+impl Cdf {
+    pub fn new(probs: &[f64]) -> Self {
+        let mut cum = Vec::with_capacity(probs.len());
+        let mut acc = 0.0;
+        for p in probs {
+            acc += *p;
+            cum.push(acc);
+        }
+        Cdf { cum }
+    }
+
+    pub fn total(&self) -> f64 {
+        *self.cum.last().unwrap_or(&0.0)
+    }
+
+    /// searchsorted-right of u * total.
+    pub fn sample(&self, rng: &mut Pcg) -> usize {
+        self.sample_u(rng.f64())
+    }
+
+    pub fn sample_u(&self, u: f64) -> usize {
+        let x = u * self.total();
+        match self.cum.binary_search_by(|c| c.partial_cmp(&x).unwrap()) {
+            Ok(i) => (i + 1).min(self.cum.len() - 1),
+            Err(i) => i.min(self.cum.len() - 1),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn deterministic() {
+        let mut a = Pcg::new(7);
+        let mut b = Pcg::new(7);
+        for _ in 0..100 {
+            assert_eq!(a.next_u64(), b.next_u64());
+        }
+    }
+
+    #[test]
+    fn seeds_differ() {
+        let mut a = Pcg::new(1);
+        let mut b = Pcg::new(2);
+        assert_ne!(a.next_u64(), b.next_u64());
+    }
+
+    #[test]
+    fn f32_in_range() {
+        let mut r = Pcg::new(3);
+        for _ in 0..10_000 {
+            let x = r.f32();
+            assert!((0.0..1.0).contains(&x));
+        }
+    }
+
+    #[test]
+    fn below_unbiased_small() {
+        let mut r = Pcg::new(4);
+        let mut counts = [0usize; 5];
+        for _ in 0..50_000 {
+            counts[r.below(5) as usize] += 1;
+        }
+        for c in counts {
+            assert!((c as f64 - 10_000.0).abs() < 600.0, "{counts:?}");
+        }
+    }
+
+    #[test]
+    fn normal_moments() {
+        let mut r = Pcg::new(5);
+        let n = 100_000;
+        let xs: Vec<f64> = (0..n).map(|_| r.normal()).collect();
+        let mean = xs.iter().sum::<f64>() / n as f64;
+        let var = xs.iter().map(|x| (x - mean) * (x - mean)).sum::<f64>() / n as f64;
+        assert!(mean.abs() < 0.02, "mean {mean}");
+        assert!((var - 1.0).abs() < 0.03, "var {var}");
+    }
+
+    #[test]
+    fn shuffle_is_permutation() {
+        let mut r = Pcg::new(6);
+        let mut xs: Vec<u32> = (0..100).collect();
+        r.shuffle(&mut xs);
+        let mut sorted = xs.clone();
+        sorted.sort();
+        assert_eq!(sorted, (0..100).collect::<Vec<_>>());
+        assert_ne!(xs, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn cdf_matches_weights() {
+        let probs = vec![0.5, 0.3, 0.2];
+        let cdf = Cdf::new(&probs);
+        let mut r = Pcg::new(8);
+        let mut counts = [0usize; 3];
+        for _ in 0..30_000 {
+            counts[cdf.sample(&mut r)] += 1;
+        }
+        assert!((counts[0] as f64 / 30_000.0 - 0.5).abs() < 0.02);
+        assert!((counts[1] as f64 / 30_000.0 - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn cdf_edges() {
+        let cdf = Cdf::new(&[1.0, 1.0]);
+        assert_eq!(cdf.sample_u(0.0), 0);
+        assert_eq!(cdf.sample_u(0.49), 0);
+        assert_eq!(cdf.sample_u(0.51), 1);
+        assert_eq!(cdf.sample_u(0.9999999), 1);
+    }
+
+    #[test]
+    fn fork_streams_decorrelated() {
+        let mut root = Pcg::new(9);
+        let mut a = root.fork(0);
+        let mut b = root.fork(1);
+        let same = (0..64).filter(|_| a.next_u64() == b.next_u64()).count();
+        assert_eq!(same, 0);
+    }
+}

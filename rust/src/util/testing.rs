@@ -1,0 +1,75 @@
+//! Property-testing helper (proptest is not in the offline vendor set).
+//!
+//! `forall(cases, gen, prop)` runs `prop` on `cases` generated inputs with a
+//! deterministic seed sequence and reports the seed of the first failing case
+//! so it can be replayed. Used by the coordinator-invariant property tests.
+
+use crate::util::rng::Pcg;
+
+/// Run `prop` on `cases` inputs drawn by `gen`. Panics with the failing seed.
+pub fn forall<T, G, P>(cases: usize, mut gen: G, mut prop: P)
+where
+    G: FnMut(&mut Pcg) -> T,
+    P: FnMut(&T) -> Result<(), String>,
+    T: std::fmt::Debug,
+{
+    for case in 0..cases {
+        let seed = 0xC0FFEE ^ (case as u64).wrapping_mul(0x9E3779B97F4A7C15);
+        let mut rng = Pcg::new(seed);
+        let input = gen(&mut rng);
+        if let Err(msg) = prop(&input) {
+            panic!("property failed on case {case} (seed {seed:#x}): {msg}\ninput: {input:?}");
+        }
+    }
+}
+
+/// Assert two f32 slices are element-wise close.
+pub fn assert_allclose(a: &[f32], b: &[f32], rtol: f32, atol: f32) {
+    assert_eq!(a.len(), b.len(), "length mismatch: {} vs {}", a.len(), b.len());
+    for (i, (x, y)) in a.iter().zip(b.iter()).enumerate() {
+        let tol = atol + rtol * y.abs();
+        assert!(
+            (x - y).abs() <= tol || (x.is_nan() && y.is_nan()),
+            "element {i}: {x} vs {y} (tol {tol})"
+        );
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn forall_passes_trivially() {
+        forall(50, |rng| rng.f32(), |x| {
+            if (0.0..1.0).contains(x) {
+                Ok(())
+            } else {
+                Err(format!("{x} out of range"))
+            }
+        });
+    }
+
+    #[test]
+    #[should_panic(expected = "property failed")]
+    fn forall_reports_failure() {
+        forall(10, |rng| rng.usize_below(10), |x| {
+            if *x < 5 {
+                Ok(())
+            } else {
+                Err("too big".into())
+            }
+        });
+    }
+
+    #[test]
+    fn allclose_ok() {
+        assert_allclose(&[1.0, 2.0], &[1.0 + 1e-7, 2.0 - 1e-7], 1e-5, 1e-6);
+    }
+
+    #[test]
+    #[should_panic]
+    fn allclose_catches_mismatch() {
+        assert_allclose(&[1.0], &[1.1], 1e-5, 1e-6);
+    }
+}

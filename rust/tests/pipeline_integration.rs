@@ -1,0 +1,192 @@
+//! Integration tests over the full three-layer stack: corpus -> BPE ->
+//! packing -> teacher pre-training (PJRT) -> L1 sampler cache -> student
+//! training -> evaluation. Requires `make artifacts` (skips otherwise).
+
+use std::path::PathBuf;
+
+use rskd::cache::{CacheReader, ProbCodec, SparseTarget};
+use rskd::coordinator::trainer::SparseVariant;
+use rskd::coordinator::{CacheKind, Pipeline, PipelineConfig, StudentMethod};
+use rskd::evalsuite::tasks::{build_cloze_tasks, zero_shot_score};
+use rskd::model::ModelState;
+use rskd::runtime::{Engine, HostTensor};
+
+fn artifacts() -> Option<PathBuf> {
+    let p = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/small"));
+    p.join("manifest.json").exists().then_some(p)
+}
+
+fn micro_cfg(dir: PathBuf) -> PipelineConfig {
+    PipelineConfig {
+        artifact_dir: dir,
+        target_tokens: 50_000,
+        teacher_steps: 30,
+        student_steps: 14,
+        eval_batches: 2,
+        work_dir: PathBuf::from("target/test-pipeline"),
+        ..Default::default()
+    }
+}
+
+/// One shared end-to-end pass exercising every stage (single test to share
+/// the PJRT compile cost).
+#[test]
+fn full_stack_end_to_end() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts/small not built");
+        return;
+    };
+    let pipe = Pipeline::prepare(micro_cfg(dir)).unwrap();
+    assert!(pipe.teacher_losses.iter().all(|l| l.is_finite()));
+    assert!(
+        pipe.teacher_losses.last().unwrap() < pipe.teacher_losses.first().unwrap(),
+        "teacher CE did not decrease: {:?}",
+        pipe.teacher_losses
+    );
+
+    // --- cache build via the L1 Pallas sampler graph ---
+    let (rs_cache, rs_stats) = pipe.build_cache(CacheKind::Rs { rounds: 50, temp: 1.0 }, "it-rs", 1).unwrap();
+    assert!(rs_stats.cache.positions > 1000);
+    assert!(rs_stats.avg_unique_tokens > 1.0 && rs_stats.avg_unique_tokens <= 50.0);
+    // count codec: decoded weights are multiples of 1/50 and sum to 1
+    let t = rs_cache.get(0).unwrap();
+    let mass: f32 = t.probs.iter().sum();
+    assert!((mass - 1.0).abs() < 1e-4, "mass {mass}");
+    for &p in &t.probs {
+        let x = p * 50.0;
+        assert!((x - x.round()).abs() < 1e-4);
+    }
+
+    let (tk_cache, tk_stats) = pipe.build_cache(CacheKind::TopK, "it-tk", 2).unwrap();
+    assert_eq!(tk_stats.cache.positions, rs_stats.cache.positions);
+    let t = tk_cache.get(10).unwrap();
+    // ratio codec decodes sorted descending
+    for w in t.probs.windows(2) {
+        assert!(w[0] >= w[1] - 1e-6);
+    }
+
+    // storage: 24-bit slots -> RS cache stores ~3 bytes per kept logit
+    let bytes_per_slot = rs_stats.cache.bytes as f64 / rs_stats.cache.slots as f64;
+    assert!(bytes_per_slot < 3.2, "bytes/slot {bytes_per_slot}");
+
+    // --- students across methods ---
+    let (_, tr_ce, ev_ce) = pipe.run_student(&StudentMethod::Ce, None, 5).unwrap();
+    assert!(!tr_ce.diverged);
+    assert!(ev_ce.lm_loss.is_finite() && ev_ce.lm_loss > 0.0);
+
+    let rs_method = StudentMethod::Sparse { variant: SparseVariant::Rs, alpha: 0.0, adaptive: None };
+    let (student_rs, tr_rs, ev_rs) = pipe.run_student(&rs_method, Some(&rs_cache), 5).unwrap();
+    assert!(!tr_rs.diverged);
+    assert!(tr_rs.losses.last().unwrap() < tr_rs.losses.first().unwrap());
+    assert!(ev_rs.spec_accept_pct > 10.0 && ev_rs.spec_accept_pct <= 100.0);
+
+    let tk_method = StudentMethod::Sparse {
+        variant: SparseVariant::TopK { k: 12, normalize: false },
+        alpha: 0.0,
+        adaptive: None,
+    };
+    let (_, tr_tk, _) = pipe.run_student(&tk_method, Some(&tk_cache), 5).unwrap();
+    assert!(!tr_tk.diverged);
+
+    let (_, tr_fk, ev_fk) = pipe
+        .run_student(&StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None, 5)
+        .unwrap();
+    assert!(!tr_fk.diverged);
+    assert!(ev_fk.lm_loss.is_finite());
+
+    // --- evalsuite on the trained student ---
+    let eval_loader = pipe.eval_loader();
+    let seqs: Vec<_> = eval_loader.iter_eval().flat_map(|b| {
+        (0..b.batch).map(move |r| rskd::data::packing::Sequence {
+            tokens: b.tokens[r * b.seq..(r + 1) * b.seq].iter().map(|&t| t as u32).collect(),
+            labels: b.labels[r * b.seq..(r + 1) * b.seq].iter().map(|&t| t as u32).collect(),
+            stream_offset: b.offsets[r],
+        }).collect::<Vec<_>>()
+    }).collect();
+    let tasks = build_cloze_tasks(&seqs, 8, 16, 4, 3);
+    if !tasks.is_empty() {
+        let score = zero_shot_score(&pipe.engine, &student_rs, &tasks).unwrap();
+        assert!((0.0..=100.0).contains(&score), "{score}");
+    }
+}
+
+/// The sparse graph generalizes FullKD: feeding the full distribution as a
+/// "sparse" target must match the dense graph's loss (cross-layer check).
+#[test]
+fn sparse_graph_generalizes_dense() {
+    let Some(dir) = artifacts() else { return };
+    let engine = Engine::load(&dir).unwrap();
+    let m = engine.manifest();
+    let (b, s, v, k) = (m.batch, m.seq, m.vocab, m.k_slots);
+    assert!(k <= v);
+
+    let student = ModelState::init(&engine, "student", 1).unwrap();
+    let teacher = ModelState::init(&engine, "teacher", 2).unwrap();
+    let toks = HostTensor::i32(vec![5; b * s], &[b, s]);
+    let labels = HostTensor::i32(vec![6; b * s], &[b, s]);
+    let probs = engine
+        .call("fwd_teacher", &[teacher.params_tensor(), toks.clone()])
+        .unwrap()
+        .remove(0);
+
+    // top-k of the dense distribution as sparse target, k = k_slots
+    let mut outs = engine.call("sample_topk", &[probs.clone()]).unwrap();
+    let vals = outs.remove(1);
+    let ids = outs.remove(0);
+
+    let [p, mm, vv, st] = student.opt_inputs();
+    let sparse = engine
+        .call(
+            "train_sparse_student",
+            &[
+                p, mm, vv, st,
+                HostTensor::scalar_f32(0.0), // lr 0: loss probe only
+                toks.clone(),
+                labels.clone(),
+                ids,
+                vals,
+                HostTensor::scalar_f32(0.0),
+                HostTensor::f32(vec![0.0; b * s], &[b, s]),
+                HostTensor::scalar_f32(0.0),
+                HostTensor::f32(vec![1.0; b * s], &[b, s]),
+            ],
+        )
+        .unwrap();
+    let kd_sparse = sparse[5].scalar().unwrap();
+
+    let [p, mm, vv, st] = student.opt_inputs();
+    let dense = engine
+        .call(
+            "train_dense_student",
+            &[p, mm, vv, st, HostTensor::scalar_f32(0.0), toks, labels, probs,
+              HostTensor::scalar_f32(0.0)],
+        )
+        .unwrap();
+    let kd_dense = dense[5].scalar().unwrap();
+
+    // top-64 of a 512-vocab head covers most mass; losses should be close,
+    // with the sparse one *smaller* (it omits tail KLD terms, which are
+    // positive when the student is near-uniform) — tight equality is checked
+    // in python where the full distribution fits in k_slots.
+    assert!(kd_sparse <= kd_dense + 0.05, "sparse {kd_sparse} dense {kd_dense}");
+    assert!(kd_sparse > 0.1 * kd_dense, "sparse {kd_sparse} dense {kd_dense}");
+}
+
+/// Cache addressing is positional: reading a range across shard boundaries
+/// returns the same targets as pointwise gets.
+#[test]
+fn cache_range_consistency() {
+    let dir = std::env::temp_dir().join(format!("rskd-it-cache-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let w = rskd::cache::CacheWriter::create(&dir, ProbCodec::Ratio, 7, 4).unwrap();
+    for pos in 0..40u64 {
+        w.push(pos, SparseTarget { ids: vec![pos as u32, 500], probs: vec![0.5, 0.25] });
+    }
+    w.finish().unwrap();
+    let r = CacheReader::open(&dir).unwrap();
+    let range = r.get_range(3, 20);
+    for (i, t) in range.iter().enumerate() {
+        assert_eq!(t.ids, r.get(3 + i as u64).unwrap().ids);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
