@@ -1,17 +1,19 @@
-//! Cache format tour (paper Appendix D.1): build a small cache under each
-//! probability codec, inspect storage cost and quantization error, and show
-//! the byte-level slot layout.
+//! Cache format tour (paper Appendix D.1 + docs/CACHE_FORMAT.md): build a
+//! small v2 cache, inspect storage cost, quantization error, the byte-level
+//! slot layout, and the directory manifest that makes out-of-order shard
+//! production and lazy reading possible.
 //!
 //! ```sh
 //! cargo run --release --example cache_inspect
 //! ```
 
 use anyhow::Result;
+use rskd::cache::format::CacheManifest;
 use rskd::cache::quant::{self, ProbCodec};
 use rskd::cache::{CacheReader, CacheWriter, SparseTarget};
 use rskd::report::Report;
-use rskd::sampling::{random_sampling, topk};
 use rskd::sampling::zipf::zipf;
+use rskd::sampling::{random_sampling, topk};
 use rskd::util::rng::Pcg;
 
 fn main() -> Result<()> {
@@ -38,18 +40,21 @@ fn main() -> Result<()> {
     }
     report.table(&["codec", "size", "roundtrip L1"], &rows);
 
-    report.line("--- on-disk shards via the async ring-buffer writer ---");
+    report.line("--- on-disk v2 shards via the out-of-order ring-buffer writer ---");
     let dir = std::env::temp_dir().join("rskd-cache-inspect");
     let _ = std::fs::remove_dir_all(&dir);
     let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 512, 64)?;
-    let mut rng = Pcg::new(1);
     let n_positions = 2048u64;
-    for pos in 0..n_positions {
-        w.push(pos, random_sampling(&p, 50, 1.0, &mut rng));
+    // push in reverse to show that producer order no longer matters
+    let mut rng = Pcg::new(1);
+    let targets: Vec<SparseTarget> =
+        (0..n_positions).map(|_| random_sampling(&p, 50, 1.0, &mut rng)).collect();
+    for pos in (0..n_positions).rev() {
+        assert!(w.push(pos, targets[pos as usize].clone()));
     }
     let stats = w.finish()?;
     report.line(format!(
-        "{} positions -> {} shards, {} bytes ({:.1} B/position, {:.2} B/slot)",
+        "{} positions (pushed in reverse) -> {} shards, {} bytes ({:.1} B/position, {:.2} B/slot)",
         stats.positions, stats.shards, stats.bytes,
         stats.bytes as f64 / stats.positions as f64,
         stats.bytes as f64 / stats.slots as f64
@@ -59,9 +64,46 @@ fn main() -> Result<()> {
         "vs dense fp32 distributions: {dense_bytes:.0} bytes -> {:.0}x compression",
         dense_bytes / stats.bytes as f64
     ));
+
+    report.line("--- index.json manifest (v2 shard directory) ---");
+    let manifest = CacheManifest::load(&dir)?;
+    report.line(format!(
+        "version {} | codec tag {} (rounds {}) | {} positions, {} slots, {} bytes",
+        manifest.version,
+        manifest.codec.tag(),
+        manifest.rounds(),
+        manifest.positions,
+        manifest.slots,
+        manifest.bytes
+    ));
+    let rows: Vec<Vec<String>> = manifest
+        .shards
+        .iter()
+        .map(|s| {
+            vec![
+                s.file.clone(),
+                format!("[{}, {})", s.start, s.start + s.count),
+                format!("{} B", s.bytes),
+            ]
+        })
+        .collect();
+    report.table(&["shard file", "position range", "size"], &rows);
+
+    report.line("--- lazy LRU reader ---");
     let r = CacheReader::open(&dir)?;
+    report.line(format!(
+        "open: {} shards indexed, {} decoded (metadata only)",
+        r.shard_count(),
+        r.resident_shards()
+    ));
     let t = r.get(123).unwrap();
-    report.line(format!("position 123 decodes to {} tokens, mass {:.3}", t.k(), t.mass()));
+    report.line(format!(
+        "position 123 decodes to {} tokens, mass {:.3}; now {} shard resident, {} load(s)",
+        t.k(),
+        t.mass(),
+        r.resident_shards(),
+        r.shard_loads()
+    ));
     let _ = std::fs::remove_dir_all(&dir);
     report.finish();
     Ok(())

@@ -1,23 +1,44 @@
-//! Sparse-logit cache shard format.
+//! Sparse-logit cache shard format (v2) — see `docs/CACHE_FORMAT.md` for the
+//! normative byte-level spec.
 //!
-//! A cache directory holds `shard-NNNN.slc` files plus `cache.json`. Each
-//! shard covers a contiguous range of *stream positions* (global token
+//! A cache directory holds `shard-*.slc` files plus an `index.json` manifest.
+//! Each shard covers a contiguous range of *stream positions* (global token
 //! offsets of the teacher's packed stream — alignment with the student's
-//! packing is exactly the Table 13 experiment). Layout (little-endian):
+//! packing is exactly the Table 13 experiment). Shard layout (little-endian):
 //!
 //! ```text
-//! magic  u32 = 0x534C4331 ("SLC1")
+//! magic  u32 = 0x534C4332 ("SLC2"; v1 files carry "SLC1")
 //! codec  u8, rounds u8, reserved u16
 //! start  u64   first stream position
 //! count  u64   number of positions
 //! then per position: n u8, n * 3-byte slots (quant::pack_slot)
 //! ```
+//!
+//! v2 differs from v1 only in the magic and in the directory-level contract:
+//! v2 directories carry `index.json` (see [`CacheManifest`]) listing every
+//! shard's `[start, count)` range, so shards can be produced, named, and
+//! discovered in any order; v1 directories carry a `cache.json` with totals
+//! only and rely on lexicographic filename order. Both record encodings are
+//! byte-identical, which is why [`Shard::read_from`] accepts either magic.
 
 use std::io::{self, Read, Write};
+use std::path::Path;
 
 use crate::cache::quant::{self, ProbCodec};
+use crate::util::json::Json;
 
-pub const MAGIC: u32 = 0x534C_4331;
+/// Legacy (v1) shard magic: ASCII "SLC1" as a little-endian u32.
+pub const MAGIC_V1: u32 = 0x534C_4331;
+/// Current (v2) shard magic: ASCII "SLC2" as a little-endian u32.
+pub const MAGIC_V2: u32 = 0x534C_4332;
+/// Current format version written by [`Shard::write_to`].
+pub const FORMAT_VERSION: u32 = 2;
+/// Fixed shard header size in bytes (magic + codec word + start + count).
+pub const HEADER_BYTES: usize = 24;
+/// Directory-level manifest filename for v2 caches.
+pub const INDEX_FILE: &str = "index.json";
+/// Directory-level metadata filename for legacy v1 caches.
+pub const LEGACY_META_FILE: &str = "cache.json";
 
 /// One position's sparse target, decoded.
 #[derive(Clone, Debug, Default, PartialEq)]
@@ -34,6 +55,49 @@ impl SparseTarget {
     pub fn k(&self) -> usize {
         self.ids.len()
     }
+}
+
+/// Decoded fixed-size shard header.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct ShardHeader {
+    /// 1 for "SLC1" files, 2 for "SLC2" files.
+    pub version: u32,
+    pub codec: ProbCodec,
+    /// First stream position covered by the shard.
+    pub start: u64,
+    /// Number of consecutive positions stored.
+    pub count: u64,
+}
+
+/// Read and validate the 24-byte header. This is all a lazy reader needs to
+/// index a shard; record decoding can be deferred until first touch.
+pub fn read_header(r: &mut impl Read) -> io::Result<ShardHeader> {
+    let mut u32b = [0u8; 4];
+    r.read_exact(&mut u32b)?;
+    let magic = u32::from_le_bytes(u32b);
+    let version = match magic {
+        MAGIC_V1 => 1,
+        MAGIC_V2 => 2,
+        other => {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!(
+                    "unsupported shard magic {other:#010x}: expected \
+                     {MAGIC_V1:#010x} (\"SLC1\", v1) or {MAGIC_V2:#010x} (\"SLC2\", v2)"
+                ),
+            ))
+        }
+    };
+    let mut hdr = [0u8; 4];
+    r.read_exact(&mut hdr)?;
+    let codec = ProbCodec::from_tag(hdr[0], hdr[1] as u32)
+        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad codec tag"))?;
+    let mut u64b = [0u8; 8];
+    r.read_exact(&mut u64b)?;
+    let start = u64::from_le_bytes(u64b);
+    r.read_exact(&mut u64b)?;
+    let count = u64::from_le_bytes(u64b);
+    Ok(ShardHeader { version, codec, start, count })
 }
 
 /// In-memory shard: encoded records for [start, start+records.len()).
@@ -59,12 +123,13 @@ impl Shard {
         SparseTarget { ids: ids.clone(), probs: quant::decode(codes, self.codec) }
     }
 
+    /// Serialize with the current (v2) magic.
     pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
         let rounds = match self.codec {
             ProbCodec::Count { rounds } => rounds as u8,
             _ => 0,
         };
-        w.write_all(&MAGIC.to_le_bytes())?;
+        w.write_all(&MAGIC_V2.to_le_bytes())?;
         w.write_all(&[self.codec.tag(), rounds, 0, 0])?;
         w.write_all(&self.start.to_le_bytes())?;
         w.write_all(&(self.records.len() as u64).to_le_bytes())?;
@@ -78,21 +143,11 @@ impl Shard {
         Ok(())
     }
 
+    /// Deserialize a full shard. Accepts both v1 and v2 magics (the record
+    /// encoding is identical); unknown magics fail with a versioned error.
     pub fn read_from(r: &mut impl Read) -> io::Result<Shard> {
-        let mut u32b = [0u8; 4];
-        r.read_exact(&mut u32b)?;
-        if u32::from_le_bytes(u32b) != MAGIC {
-            return Err(io::Error::new(io::ErrorKind::InvalidData, "bad shard magic"));
-        }
-        let mut hdr = [0u8; 4];
-        r.read_exact(&mut hdr)?;
-        let codec = ProbCodec::from_tag(hdr[0], hdr[1] as u32)
-            .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad codec tag"))?;
-        let mut u64b = [0u8; 8];
-        r.read_exact(&mut u64b)?;
-        let start = u64::from_le_bytes(u64b);
-        r.read_exact(&mut u64b)?;
-        let count = u64::from_le_bytes(u64b) as usize;
+        let hdr = read_header(r)?;
+        let count = hdr.count as usize;
         let mut records = Vec::with_capacity(count);
         for _ in 0..count {
             let mut nb = [0u8; 1];
@@ -109,12 +164,129 @@ impl Shard {
             }
             records.push((ids, codes));
         }
-        Ok(Shard { codec, start, records })
+        Ok(Shard { codec: hdr.codec, start: hdr.start, records })
     }
 
     /// Bytes on disk for this shard (header + records).
     pub fn byte_size(&self) -> usize {
-        24 + self.records.iter().map(|(ids, _)| 1 + 3 * ids.len()).sum::<usize>()
+        HEADER_BYTES + self.records.iter().map(|(ids, _)| 1 + 3 * ids.len()).sum::<usize>()
+    }
+}
+
+/// One shard's entry in the directory manifest.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardMeta {
+    /// Filename relative to the cache directory.
+    pub file: String,
+    /// First stream position covered.
+    pub start: u64,
+    /// Number of consecutive positions stored.
+    pub count: u64,
+    /// On-disk size (header + records).
+    pub bytes: u64,
+}
+
+/// Directory-level `index.json` manifest (v2 caches).
+///
+/// The manifest is the single source of truth for shard discovery: readers
+/// never have to rely on filename order, and writers are free to emit shards
+/// as soon as their position range completes, in any order.
+#[derive(Clone, Debug, PartialEq)]
+pub struct CacheManifest {
+    pub version: u32,
+    pub codec: ProbCodec,
+    /// Total distinct positions across all shards.
+    pub positions: u64,
+    /// Total stored (id, prob) slots.
+    pub slots: u64,
+    /// Total shard bytes on disk.
+    pub bytes: u64,
+    /// Shard entries, sorted by `start`.
+    pub shards: Vec<ShardMeta>,
+}
+
+impl CacheManifest {
+    pub fn rounds(&self) -> u32 {
+        match self.codec {
+            ProbCodec::Count { rounds } => rounds,
+            _ => 0,
+        }
+    }
+
+    pub fn to_json(&self) -> Json {
+        let shards: Vec<Json> = self
+            .shards
+            .iter()
+            .map(|s| {
+                Json::obj(vec![
+                    ("file", Json::str(&s.file)),
+                    ("start", Json::num(s.start as f64)),
+                    ("count", Json::num(s.count as f64)),
+                    ("bytes", Json::num(s.bytes as f64)),
+                ])
+            })
+            .collect();
+        Json::obj(vec![
+            ("version", Json::num(self.version as f64)),
+            ("codec", Json::num(self.codec.tag() as f64)),
+            ("rounds", Json::num(self.rounds() as f64)),
+            ("positions", Json::num(self.positions as f64)),
+            ("slots", Json::num(self.slots as f64)),
+            ("bytes", Json::num(self.bytes as f64)),
+            ("shards", Json::Arr(shards)),
+        ])
+    }
+
+    pub fn from_json(j: &Json) -> io::Result<CacheManifest> {
+        let bad = |msg: &str| io::Error::new(io::ErrorKind::InvalidData, msg.to_string());
+        let num =
+            |key: &str| j.get(key).and_then(|v| v.as_f64()).ok_or_else(|| bad("missing field"));
+        let version = num("version")? as u32;
+        if version != FORMAT_VERSION {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unsupported cache manifest version {version} (expected {FORMAT_VERSION})"),
+            ));
+        }
+        let tag = num("codec")? as u8;
+        let rounds = num("rounds")? as u32;
+        let codec = ProbCodec::from_tag(tag, rounds).ok_or_else(|| bad("bad codec tag"))?;
+        let mut shards = Vec::new();
+        for s in j.get("shards").and_then(|v| v.as_arr()).ok_or_else(|| bad("missing shards"))? {
+            let snum = |key: &str| {
+                s.get(key).and_then(|v| v.as_f64()).ok_or_else(|| bad("bad shard entry"))
+            };
+            shards.push(ShardMeta {
+                file: s
+                    .get("file")
+                    .and_then(|v| v.as_str())
+                    .ok_or_else(|| bad("bad shard entry"))?
+                    .to_string(),
+                start: snum("start")? as u64,
+                count: snum("count")? as u64,
+                bytes: snum("bytes")? as u64,
+            });
+        }
+        shards.sort_by_key(|s| s.start);
+        Ok(CacheManifest {
+            version,
+            codec,
+            positions: num("positions")? as u64,
+            slots: num("slots")? as u64,
+            bytes: num("bytes")? as u64,
+            shards,
+        })
+    }
+
+    pub fn save(&self, dir: &Path) -> io::Result<()> {
+        std::fs::write(dir.join(INDEX_FILE), self.to_json().to_string())
+    }
+
+    pub fn load(dir: &Path) -> io::Result<CacheManifest> {
+        let text = std::fs::read_to_string(dir.join(INDEX_FILE))?;
+        let j = Json::parse(&text)
+            .map_err(|e| io::Error::new(io::ErrorKind::InvalidData, e))?;
+        CacheManifest::from_json(&j)
     }
 }
 
@@ -148,6 +320,52 @@ mod tests {
     }
 
     #[test]
+    fn v2_magic_bytes_pinned() {
+        // docs/CACHE_FORMAT.md pins the wire bytes: "SLC2" little-endian.
+        assert_eq!(MAGIC_V2, 0x534C_4332);
+        assert_eq!(MAGIC_V1, 0x534C_4331);
+        let mut shard = Shard::new(ProbCodec::Count { rounds: 50 }, 7);
+        shard.push(&target(3, 0));
+        let mut buf = Vec::new();
+        shard.write_to(&mut buf).unwrap();
+        assert_eq!(&buf[0..4], &[0x32, 0x43, 0x4C, 0x53]); // "2CLS" on the wire
+        assert_eq!(buf[4], 2); // codec tag Count
+        assert_eq!(buf[5], 50); // rounds
+        assert_eq!(&buf[6..8], &[0, 0]); // reserved
+        assert_eq!(u64::from_le_bytes(buf[8..16].try_into().unwrap()), 7); // start
+        assert_eq!(u64::from_le_bytes(buf[16..24].try_into().unwrap()), 1); // count
+    }
+
+    #[test]
+    fn header_only_read() {
+        let mut shard = Shard::new(ProbCodec::Ratio, 4096);
+        for i in 0..5 {
+            shard.push(&target(4, i));
+        }
+        let mut buf = Vec::new();
+        shard.write_to(&mut buf).unwrap();
+        let hdr = read_header(&mut buf.as_slice()).unwrap();
+        assert_eq!(
+            hdr,
+            ShardHeader { version: 2, codec: ProbCodec::Ratio, start: 4096, count: 5 }
+        );
+    }
+
+    #[test]
+    fn reads_legacy_v1_magic() {
+        // a v1 shard differs only in the magic word
+        let mut shard = Shard::new(ProbCodec::Count { rounds: 50 }, 10);
+        shard.push(&target(3, 1));
+        let mut buf = Vec::new();
+        shard.write_to(&mut buf).unwrap();
+        buf[0..4].copy_from_slice(&MAGIC_V1.to_le_bytes());
+        let hdr = read_header(&mut buf.as_slice()).unwrap();
+        assert_eq!(hdr.version, 1);
+        let back = Shard::read_from(&mut buf.as_slice()).unwrap();
+        assert_eq!(back.records, shard.records);
+    }
+
+    #[test]
     fn decode_error_bounded_ratio() {
         let mut shard = Shard::new(ProbCodec::Ratio, 0);
         let t = target(16, 9);
@@ -163,9 +381,12 @@ mod tests {
     }
 
     #[test]
-    fn rejects_bad_magic() {
+    fn rejects_bad_magic_with_versioned_error() {
         let buf = vec![0u8; 64];
-        assert!(Shard::read_from(&mut buf.as_slice()).is_err());
+        let err = Shard::read_from(&mut buf.as_slice()).unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("unsupported shard magic"), "got: {msg}");
+        assert!(msg.contains("SLC1") && msg.contains("SLC2"), "got: {msg}");
     }
 
     #[test]
@@ -174,6 +395,43 @@ mod tests {
         let mut shard = Shard::new(ProbCodec::Count { rounds: 50 }, 0);
         let t = target(12, 1);
         shard.push(&t);
-        assert_eq!(shard.byte_size(), 24 + 1 + 3 * 12);
+        assert_eq!(shard.byte_size(), HEADER_BYTES + 1 + 3 * 12);
+    }
+
+    #[test]
+    fn manifest_json_roundtrip() {
+        let m = CacheManifest {
+            version: FORMAT_VERSION,
+            codec: ProbCodec::Count { rounds: 50 },
+            positions: 100,
+            slots: 4200,
+            bytes: 12_625,
+            shards: vec![
+                ShardMeta { file: "shard-00000001.slc".into(), start: 64, count: 36, bytes: 525 },
+                ShardMeta { file: "shard-00000000.slc".into(), start: 0, count: 64, bytes: 900 },
+            ],
+        };
+        let j = m.to_json();
+        let back = CacheManifest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back.codec, m.codec);
+        assert_eq!(back.positions, 100);
+        // from_json sorts by start
+        assert_eq!(back.shards[0].start, 0);
+        assert_eq!(back.shards[1].start, 64);
+    }
+
+    #[test]
+    fn manifest_rejects_future_version() {
+        let mut m = CacheManifest {
+            version: FORMAT_VERSION,
+            codec: ProbCodec::Ratio,
+            positions: 0,
+            slots: 0,
+            bytes: 0,
+            shards: vec![],
+        };
+        m.version = 99;
+        let err = CacheManifest::from_json(&m.to_json()).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "got: {err}");
     }
 }

@@ -1,13 +1,32 @@
 //! Quantized sparse-logit cache (paper Appendix D.1/D.2): 24-bit slots,
-//! three probability codecs, shard files, a bounded ring buffer with an
-//! async writer thread, and a range reader for the student trainer.
+//! three probability codecs, sharded v2 files with a directory manifest, a
+//! bounded ring buffer feeding an out-of-order async writer, and a lazy LRU
+//! range reader for the student trainer.
+//!
+//! # v2 producer/consumer contract
+//!
+//! The position space (global token offsets of the teacher's packed stream)
+//! is statically partitioned into fixed-size shards. On the producer side,
+//! [`CacheWriter::push`] is thread-safe and order-free: any number of teacher
+//! workers may push `(position, target)` pairs concurrently, and each shard
+//! is flushed to its own `shard-*.slc` file the moment its range completes.
+//! `finish` writes the `index.json` manifest ([`format::CacheManifest`])
+//! listing every shard's `[start, count)` range and the directory totals.
+//!
+//! On the consumer side, [`CacheReader::open`] reads *metadata only* (the
+//! manifest, or per-file headers for legacy v1 directories); shard records
+//! decode on first touch and are held in a capacity-bounded LRU. Readers and
+//! writers agree that a position absent from every shard decodes as an empty
+//! [`SparseTarget`] — the paper's misaligned-packing semantics (Table 13).
+//!
+//! The byte-level format is specified in `docs/CACHE_FORMAT.md`.
 
 pub mod format;
 pub mod quant;
 pub mod reader;
 pub mod writer;
 
-pub use format::SparseTarget;
+pub use format::{CacheManifest, ShardMeta, SparseTarget};
 pub use quant::ProbCodec;
-pub use reader::CacheReader;
+pub use reader::{CacheReader, ShardEntry, DEFAULT_RESIDENT_SHARDS};
 pub use writer::{CacheStats, CacheWriter, RingBuffer};

@@ -1,66 +1,259 @@
-//! Cache reader: loads shards from a cache directory and serves sparse
-//! targets for arbitrary stream-position ranges (the student trainer asks for
-//! `[offset, offset + seq)` per packed row).
+//! Lazy cache reader: serves sparse targets for arbitrary stream-position
+//! ranges (the student trainer asks for `[offset, offset + seq)` per packed
+//! row) without ever holding the whole cache in memory.
+//!
+//! `open` is O(shards) metadata work only: for a v2 cache it parses the
+//! `index.json` manifest; for a legacy v1 cache it scans the 24-byte header
+//! of each `.slc` file. No shard *records* are decoded at open time. Shards
+//! are decoded on first touch and kept in a capacity-bounded LRU, so steady-
+//! state memory is `capacity * positions_per_shard` records regardless of
+//! cache size, and a trainer that only visits one partition of the stream
+//! never pays for the rest.
+//!
+//! The reader is `Sync`: `get`/`get_range` take `&self` and may be called
+//! from several trainer threads (the LRU sits behind a mutex; decoded shards
+//! are shared as `Arc<Shard>` so a hit never copies records).
 
 use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
 
-use crate::cache::format::{Shard, SparseTarget};
+use crate::cache::format::{
+    self, CacheManifest, Shard, SparseTarget, INDEX_FILE, LEGACY_META_FILE,
+};
 use crate::util::json::Json;
 
+/// Default number of decoded shards kept resident.
+pub const DEFAULT_RESIDENT_SHARDS: usize = 16;
+
+/// One shard's location in the stream-position space.
+#[derive(Clone, Debug)]
+pub struct ShardEntry {
+    /// Absolute path of the `.slc` file.
+    pub path: PathBuf,
+    /// First stream position covered.
+    pub start: u64,
+    /// Number of consecutive positions stored.
+    pub count: u64,
+}
+
+/// Tiny LRU over decoded shards: MRU at the back. Capacity is small (tens),
+/// so a linear scan beats a hash map + intrusive list here.
+struct Lru {
+    slots: Vec<(usize, Arc<Shard>)>,
+}
+
 pub struct CacheReader {
-    shards: Vec<Shard>,
+    entries: Vec<ShardEntry>,
     /// shard start positions (sorted) for binary search
     starts: Vec<u64>,
+    lru: Mutex<Lru>,
+    capacity: usize,
+    /// total shard decodes performed (reloads after eviction included)
+    loads: AtomicU64,
     pub positions: u64,
     pub rounds: u32,
     pub bytes: u64,
+    /// cache directory format version: 2 (index.json) or 1 (cache.json)
+    pub version: u32,
 }
 
 impl CacheReader {
+    /// Open with [`DEFAULT_RESIDENT_SHARDS`] resident decoded shards.
     pub fn open(dir: &Path) -> std::io::Result<CacheReader> {
-        let meta_text = std::fs::read_to_string(dir.join("cache.json"))?;
+        CacheReader::open_with_capacity(dir, DEFAULT_RESIDENT_SHARDS)
+    }
+
+    /// Open a cache directory, reading metadata only. `capacity` bounds how
+    /// many decoded shards stay resident at once (min 1).
+    pub fn open_with_capacity(dir: &Path, capacity: usize) -> std::io::Result<CacheReader> {
+        let (version, positions, rounds, bytes, mut entries) = if dir.join(INDEX_FILE).exists() {
+            let m = CacheManifest::load(dir)?;
+            let entries = m
+                .shards
+                .iter()
+                .map(|s| ShardEntry { path: dir.join(&s.file), start: s.start, count: s.count })
+                .collect();
+            (m.version, m.positions, m.rounds(), m.bytes, entries)
+        } else if dir.join(LEGACY_META_FILE).exists() {
+            Self::open_legacy_v1(dir)?
+        } else {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::NotFound,
+                format!(
+                    "no cache manifest in {}: expected {INDEX_FILE} (v2) or \
+                     {LEGACY_META_FILE} (v1)",
+                    dir.display()
+                ),
+            ));
+        };
+        entries.sort_by_key(|e| e.start);
+        let starts = entries.iter().map(|e| e.start).collect();
+        Ok(CacheReader {
+            entries,
+            starts,
+            lru: Mutex::new(Lru { slots: Vec::new() }),
+            capacity: capacity.max(1),
+            loads: AtomicU64::new(0),
+            positions,
+            rounds,
+            bytes,
+            version,
+        })
+    }
+
+    /// Legacy v1 directory: totals live in `cache.json`, shard ranges are
+    /// recovered by scanning each file's fixed-size header (records are NOT
+    /// decoded). Unknown shard magics fail here with a versioned error.
+    #[allow(clippy::type_complexity)]
+    fn open_legacy_v1(
+        dir: &Path,
+    ) -> std::io::Result<(u32, u64, u32, u64, Vec<ShardEntry>)> {
+        let meta_text = std::fs::read_to_string(dir.join(LEGACY_META_FILE))?;
         let meta = Json::parse(&meta_text)
             .map_err(|e| std::io::Error::new(std::io::ErrorKind::InvalidData, e))?;
-        let positions = meta.get("positions").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
-        let rounds = meta.get("rounds").and_then(|v| v.as_f64()).unwrap_or(0.0) as u32;
-        let bytes = meta.get("bytes").and_then(|v| v.as_f64()).unwrap_or(0.0) as u64;
-
+        let num = |key: &str| meta.get(key).and_then(|v| v.as_f64()).unwrap_or(0.0);
         let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
             .filter_map(|e| e.ok())
             .map(|e| e.path())
             .filter(|p| p.extension().map(|x| x == "slc").unwrap_or(false))
             .collect();
         paths.sort();
-        let mut shards = Vec::with_capacity(paths.len());
-        for p in &paths {
-            let mut f = std::io::BufReader::new(std::fs::File::open(p)?);
-            shards.push(Shard::read_from(&mut f)?);
+        let mut entries = Vec::with_capacity(paths.len());
+        for p in paths {
+            let mut f = std::io::BufReader::new(std::fs::File::open(&p)?);
+            let hdr = format::read_header(&mut f)?;
+            entries.push(ShardEntry { path: p, start: hdr.start, count: hdr.count });
         }
-        shards.sort_by_key(|s| s.start);
-        let starts = shards.iter().map(|s| s.start).collect();
-        Ok(CacheReader { shards, starts, positions, rounds, bytes })
+        Ok((1, num("positions") as u64, num("rounds") as u32, num("bytes") as u64, entries))
     }
 
-    /// Sparse target at one stream position.
-    pub fn get(&self, pos: u64) -> Option<SparseTarget> {
+    /// Shard index owning `pos`, if any.
+    fn shard_idx(&self, pos: u64) -> Option<usize> {
         let idx = match self.starts.binary_search(&pos) {
             Ok(i) => i,
             Err(0) => return None,
             Err(i) => i - 1,
         };
-        let shard = &self.shards[idx];
-        let local = (pos - shard.start) as usize;
-        if local < shard.records.len() {
-            Some(shard.decode(local))
-        } else {
-            None
-        }
+        (pos - self.entries[idx].start < self.entries[idx].count).then_some(idx)
     }
 
-    /// Targets for a contiguous range (one packed row). Missing positions
-    /// (misaligned packing, Table 13) come back as empty targets.
+    /// Decoded shard `idx`, loading it through the LRU on a miss.
+    fn shard(&self, idx: usize) -> std::io::Result<Arc<Shard>> {
+        {
+            let mut lru = self.lru.lock().unwrap();
+            if let Some(i) = lru.slots.iter().position(|(k, _)| *k == idx) {
+                let hit = lru.slots.remove(i);
+                let shard = Arc::clone(&hit.1);
+                lru.slots.push(hit); // move to MRU
+                return Ok(shard);
+            }
+        }
+        // decode outside the lock so concurrent readers miss independently
+        let entry = &self.entries[idx];
+        let mut f = std::io::BufReader::new(std::fs::File::open(&entry.path)?);
+        let shard = Arc::new(Shard::read_from(&mut f)?);
+        // positions are bounds-checked against the manifest's `count`, so a
+        // shard holding fewer records than declared must fail here, cleanly,
+        // not as an index panic inside decode()
+        if (shard.records.len() as u64) < entry.count {
+            return Err(std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "corrupt cache: {} holds {} records but the manifest declares {}",
+                    entry.path.display(),
+                    shard.records.len(),
+                    entry.count
+                ),
+            ));
+        }
+        self.loads.fetch_add(1, Ordering::Relaxed);
+        let mut lru = self.lru.lock().unwrap();
+        if !lru.slots.iter().any(|(k, _)| *k == idx) {
+            if lru.slots.len() >= self.capacity {
+                lru.slots.remove(0); // evict LRU
+            }
+            lru.slots.push((idx, Arc::clone(&shard)));
+        }
+        Ok(shard)
+    }
+
+    /// Sparse target at one stream position. Panics on shard I/O errors
+    /// (a corrupt cache must not silently train on empty targets); use
+    /// [`CacheReader::try_get`] to handle them.
+    pub fn get(&self, pos: u64) -> Option<SparseTarget> {
+        self.try_get(pos).expect("cache shard read failed")
+    }
+
+    /// Fallible variant of [`CacheReader::get`].
+    pub fn try_get(&self, pos: u64) -> std::io::Result<Option<SparseTarget>> {
+        let Some(idx) = self.shard_idx(pos) else { return Ok(None) };
+        let shard = self.shard(idx)?;
+        Ok(Some(shard.decode((pos - self.entries[idx].start) as usize)))
+    }
+
+    /// Targets for a contiguous range (one packed row): one binary search,
+    /// then a sequential scan that touches each overlapping shard once.
+    /// Missing positions (misaligned packing, Table 13) come back as empty
+    /// targets. Like [`CacheReader::get`], panics if a shard fails to load
+    /// (deleted/truncated file, manifest mismatch) — a corrupt cache must
+    /// not silently train on empty targets.
     pub fn get_range(&self, start: u64, len: usize) -> Vec<SparseTarget> {
-        (0..len as u64).map(|i| self.get(start + i).unwrap_or_default()).collect()
+        let mut out = Vec::with_capacity(len);
+        let mut idx: Option<usize> = match self.starts.binary_search(&start) {
+            Ok(i) => Some(i),
+            Err(0) => None,
+            Err(i) => Some(i - 1),
+        };
+        let mut cur: Option<(usize, Arc<Shard>)> = None;
+        for off in 0..len as u64 {
+            let pos = start + off;
+            // advance to the next shard when pos crosses its start
+            let next = idx.map_or(0, |i| i + 1);
+            if next < self.starts.len() && self.starts[next] <= pos {
+                idx = Some(next);
+            }
+            let Some(i) = idx else {
+                out.push(SparseTarget::default());
+                continue;
+            };
+            let e = &self.entries[i];
+            let local = pos - e.start;
+            if local >= e.count {
+                out.push(SparseTarget::default());
+                continue;
+            }
+            let shard = match &cur {
+                Some((ci, s)) if *ci == i => Arc::clone(s),
+                _ => {
+                    let s = self.shard(i).expect("cache shard read failed");
+                    cur = Some((i, Arc::clone(&s)));
+                    s
+                }
+            };
+            out.push(shard.decode(local as usize));
+        }
+        out
+    }
+
+    /// Number of shards listed in the manifest.
+    pub fn shard_count(&self) -> usize {
+        self.entries.len()
+    }
+
+    /// Shard ranges, sorted by start position.
+    pub fn entries(&self) -> &[ShardEntry] {
+        &self.entries
+    }
+
+    /// Decoded shards currently resident in the LRU.
+    pub fn resident_shards(&self) -> usize {
+        self.lru.lock().unwrap().slots.len()
+    }
+
+    /// Total shard decodes so far (> `shard_count()` means eviction churn).
+    pub fn shard_loads(&self) -> u64 {
+        self.loads.load(Ordering::Relaxed)
     }
 }
 
@@ -78,7 +271,7 @@ mod tests {
                 ids: vec![pos as u32 % 100, 200, 300],
                 probs: vec![20.0 / 50.0, 10.0 / 50.0, 5.0 / 50.0],
             };
-            w.push(pos, t);
+            assert!(w.push(pos, t));
         }
         w.finish().unwrap();
     }
@@ -90,6 +283,7 @@ mod tests {
         let r = CacheReader::open(&dir).unwrap();
         assert_eq!(r.positions, 100);
         assert_eq!(r.rounds, 50);
+        assert_eq!(r.version, 2);
         for pos in 0..100u64 {
             let t = r.get(pos).unwrap();
             assert_eq!(t.ids[0], pos as u32 % 100);
@@ -108,6 +302,66 @@ mod tests {
         assert_eq!(ts.len(), 10);
         assert_eq!(ts[0].k(), 3);
         assert_eq!(ts[9].k(), 0); // position 14 missing -> empty
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn range_before_first_shard_pads() {
+        let dir = std::env::temp_dir().join(format!("rskd-prefix-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = CacheWriter::create(&dir, ProbCodec::Ratio, 16, 8).unwrap();
+        for pos in 32..48u64 {
+            assert!(w.push(pos, SparseTarget { ids: vec![1], probs: vec![0.5] }));
+        }
+        w.finish().unwrap();
+        let r = CacheReader::open(&dir).unwrap();
+        let ts = r.get_range(30, 4); // 30, 31 missing; 32, 33 present
+        assert_eq!(ts[0].k(), 0);
+        assert_eq!(ts[1].k(), 0);
+        assert_eq!(ts[2].k(), 1);
+        assert_eq!(ts[3].k(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn open_is_lazy_and_touch_loads_one_shard() {
+        let dir = std::env::temp_dir().join(format!("rskd-lazy-test-{}", std::process::id()));
+        build_cache(&dir, 100); // 7 shards of 16
+        let r = CacheReader::open(&dir).unwrap();
+        assert_eq!(r.shard_count(), 7);
+        assert_eq!(r.resident_shards(), 0, "open must not decode any shard");
+        assert_eq!(r.shard_loads(), 0);
+        let _ = r.get(20).unwrap(); // second shard only
+        assert_eq!(r.resident_shards(), 1);
+        assert_eq!(r.shard_loads(), 1);
+        let _ = r.get(21).unwrap(); // same shard: LRU hit, no reload
+        assert_eq!(r.shard_loads(), 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn lru_evicts_but_stays_correct() {
+        let dir = std::env::temp_dir().join(format!("rskd-lru-test-{}", std::process::id()));
+        build_cache(&dir, 96); // 6 shards of 16
+        let r = CacheReader::open_with_capacity(&dir, 2).unwrap();
+        for round in 0..3 {
+            for pos in (0..96u64).step_by(16) {
+                let t = r.get(pos + round).unwrap();
+                assert_eq!(t.ids[0], (pos + round) as u32 % 100);
+            }
+            assert!(r.resident_shards() <= 2);
+        }
+        assert!(r.shard_loads() > 6, "cycling 6 shards through capacity 2 must evict");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn missing_manifest_is_a_clear_error() {
+        let dir = std::env::temp_dir().join(format!("rskd-nomani-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        let err = CacheReader::open(&dir).unwrap_err();
+        assert!(err.to_string().contains("index.json"), "got: {err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,15 +1,38 @@
-//! Async cache writer (paper Appendix D.2): the teacher-inference thread must
-//! never block on disk, so targets flow through a bounded ring buffer to a
-//! dedicated writer thread that batches them into shards.
+//! Async, out-of-order cache writer (paper Appendix D.2, extended for
+//! parallel teacher producers).
+//!
+//! Producer threads must never block on disk, so targets flow through a
+//! bounded ring buffer to a dedicated writer thread. Unlike the v1 writer,
+//! which asserted strictly stream-ordered positions (forcing a single
+//! producer), the v2 writer is *range-keyed*: position space is statically
+//! partitioned into `positions_per_shard`-sized shards, each pushed target is
+//! routed to its owning shard's assembly buffer, and a shard is flushed to
+//! disk the moment its range completes — regardless of arrival order.
+//!
+//! Producer contract:
+//! * `push(pos, target)` is thread-safe (`&self`) and may be called from any
+//!   number of threads, in any position order. It returns `false` once the
+//!   writer has shut down (I/O error or `finish`); producers should stop
+//!   pushing and let `finish` surface the error.
+//! * Each position should be pushed exactly once. A duplicate push while the
+//!   shard is still in flight overwrites the earlier record (last write
+//!   wins, stats stay single-counted); a duplicate arriving after its shard
+//!   already flushed is dropped — flushed shards are immutable.
+//! * Positions absent at `finish` decode as empty targets if they fall below
+//!   a shard's highest filled slot, and are simply out of range otherwise —
+//!   matching the reader's "missing position => empty target" semantics.
+//!
+//! Memory stays bounded as long as producers are *roughly* range-local: only
+//! incomplete shards are buffered, and every complete shard leaves memory
+//! immediately.
 
-use std::collections::VecDeque;
+use std::collections::{HashMap, HashSet, VecDeque};
 use std::path::{Path, PathBuf};
 use std::sync::{Arc, Condvar, Mutex};
 use std::thread::JoinHandle;
 
-use crate::cache::format::{Shard, SparseTarget};
-use crate::cache::quant::ProbCodec;
-use crate::util::json::Json;
+use crate::cache::format::{CacheManifest, Shard, ShardMeta, SparseTarget, FORMAT_VERSION};
+use crate::cache::quant::{self, ProbCodec};
 
 /// Bounded MPMC ring buffer (Mutex + Condvar; crossbeam not needed at our
 /// throughput). `push` blocks when full — that *is* the backpressure the
@@ -81,7 +104,8 @@ impl<T> RingBuffer<T> {
     }
 }
 
-/// Targets must arrive in stream order: (position, target).
+/// Range-keyed async writer: accepts `(position, target)` pushes from N
+/// concurrent producers in any order and assembles them into v2 shards.
 pub struct CacheWriter {
     ring: Arc<RingBuffer<(u64, SparseTarget)>>,
     handle: Option<JoinHandle<std::io::Result<CacheStats>>>,
@@ -95,71 +119,49 @@ pub struct CacheStats {
     pub shards: u32,
 }
 
+/// Assembly buffer for one in-flight shard.
+struct Pending {
+    /// slot-indexed encoded records; `None` = not yet pushed
+    records: Vec<Option<(Vec<u32>, Vec<u8>)>>,
+    filled: usize,
+    /// highest filled slot index (bounds the trailing partial shard)
+    hi: usize,
+}
+
 impl CacheWriter {
-    /// `positions_per_shard` bounds shard memory; `ring_cap` bounds the
-    /// producer lead (backpressure window).
+    /// `positions_per_shard` fixes the static range partition (shard `i` owns
+    /// positions `[i*pps, (i+1)*pps)`); `ring_cap` bounds the producer lead
+    /// (backpressure window).
     pub fn create(
         dir: &Path,
         codec: ProbCodec,
         positions_per_shard: usize,
         ring_cap: usize,
     ) -> std::io::Result<CacheWriter> {
+        assert!(positions_per_shard > 0, "positions_per_shard must be positive");
         std::fs::create_dir_all(dir)?;
         let ring = RingBuffer::new(ring_cap);
         let ring2 = Arc::clone(&ring);
         let dir: PathBuf = dir.to_path_buf();
+        let pps = positions_per_shard;
         let handle = std::thread::spawn(move || -> std::io::Result<CacheStats> {
-            let mut stats = CacheStats::default();
-            let mut shard: Option<Shard> = None;
-            let mut next_expected: Option<u64> = None;
-            let flush = |shard: Shard, stats: &mut CacheStats, dir: &Path| -> std::io::Result<()> {
-                let path = dir.join(format!("shard-{:05}.slc", stats.shards));
-                let mut f = std::io::BufWriter::new(std::fs::File::create(path)?);
-                shard.write_to(&mut f)?;
-                stats.bytes += shard.byte_size() as u64;
-                stats.shards += 1;
-                Ok(())
-            };
-            while let Some((pos, target)) = ring2.pop() {
-                if let Some(exp) = next_expected {
-                    assert_eq!(pos, exp, "cache writer requires stream-ordered positions");
-                }
-                next_expected = Some(pos + 1);
-                let s = shard.get_or_insert_with(|| Shard::new(codec, pos));
-                s.push(&target);
-                stats.positions += 1;
-                stats.slots += target.ids.len() as u64;
-                if s.records.len() >= positions_per_shard {
-                    flush(shard.take().unwrap(), &mut stats, &dir)?;
-                }
-            }
-            if let Some(s) = shard.take() {
-                if !s.records.is_empty() {
-                    flush(s, &mut stats, &dir)?;
-                }
-            }
-            // cache.json metadata
-            let rounds = match codec {
-                ProbCodec::Count { rounds } => rounds,
-                _ => 0,
-            };
-            let meta = Json::obj(vec![
-                ("codec", Json::num(codec.tag() as f64)),
-                ("rounds", Json::num(rounds as f64)),
-                ("positions", Json::num(stats.positions as f64)),
-                ("slots", Json::num(stats.slots as f64)),
-                ("bytes", Json::num(stats.bytes as f64)),
-                ("shards", Json::num(stats.shards as f64)),
-            ]);
-            std::fs::write(dir.join("cache.json"), meta.to_string())?;
-            Ok(stats)
+            let result = write_loop(&ring2, codec, pps, &dir);
+            // close on *every* exit path: an I/O error must unblock any
+            // producer parked on a full ring (push then returns false) so
+            // `finish` can report the error instead of deadlocking
+            ring2.close();
+            result
         });
         Ok(CacheWriter { ring, handle: Some(handle) })
     }
 
-    /// Enqueue one position's target (blocks under backpressure).
-    pub fn push(&self, pos: u64, target: SparseTarget) {
-        assert!(self.ring.push((pos, target)), "cache writer closed");
+    /// Enqueue one position's target (blocks under backpressure). Safe to
+    /// call from multiple threads; positions may arrive in any order.
+    /// Returns false once the writer has shut down (I/O error on the writer
+    /// thread) — stop pushing and call `finish` to get the error.
+    #[must_use = "a false return means the writer died; finish() has the error"]
+    pub fn push(&self, pos: u64, target: SparseTarget) -> bool {
+        self.ring.push((pos, target))
     }
 
     pub fn backlog(&self) -> usize {
@@ -182,9 +184,90 @@ impl Drop for CacheWriter {
     }
 }
 
+/// Writer-thread body: drain the ring, assemble range-keyed shards, flush
+/// each as it completes, then flush trailing partials and save the manifest.
+fn write_loop(
+    ring: &RingBuffer<(u64, SparseTarget)>,
+    codec: ProbCodec,
+    pps: usize,
+    dir: &Path,
+) -> std::io::Result<CacheStats> {
+    let mut stats = CacheStats::default();
+    let mut pending: HashMap<u64, Pending> = HashMap::new();
+    let mut flushed: HashSet<u64> = HashSet::new();
+    let mut manifest = Vec::<ShardMeta>::new();
+    let flush = |shard_id: u64,
+                 p: Pending,
+                 stats: &mut CacheStats,
+                 manifest: &mut Vec<ShardMeta>|
+     -> std::io::Result<()> {
+        let count = p.hi + 1;
+        let records: Vec<(Vec<u32>, Vec<u8>)> =
+            p.records.into_iter().take(count).map(|r| r.unwrap_or_default()).collect();
+        let shard = Shard { codec, start: shard_id * pps as u64, records };
+        let file = format!("shard-{shard_id:08}.slc");
+        let mut f = std::io::BufWriter::new(std::fs::File::create(dir.join(&file))?);
+        shard.write_to(&mut f)?;
+        let bytes = shard.byte_size() as u64;
+        manifest.push(ShardMeta { file, start: shard.start, count: count as u64, bytes });
+        stats.bytes += bytes;
+        stats.shards += 1;
+        Ok(())
+    };
+    while let Some((pos, target)) = ring.pop() {
+        let shard_id = pos / pps as u64;
+        if flushed.contains(&shard_id) {
+            // late duplicate for a completed range: flushed shards are
+            // immutable, so drop it rather than resurrect an empty buffer
+            continue;
+        }
+        let local = (pos % pps as u64) as usize;
+        let p = pending.entry(shard_id).or_insert_with(|| Pending {
+            records: vec![None; pps],
+            filled: 0,
+            hi: 0,
+        });
+        let enc = quant::encode(&target.ids, &target.probs, codec);
+        stats.slots += enc.0.len() as u64;
+        if let Some(old) = p.records[local].replace(enc) {
+            // in-flight duplicate: last write wins, stats stay single-counted
+            stats.slots -= old.0.len() as u64;
+        } else {
+            p.filled += 1;
+            stats.positions += 1;
+        }
+        p.hi = p.hi.max(local);
+        if p.filled == pps {
+            let done = pending.remove(&shard_id).unwrap();
+            flushed.insert(shard_id);
+            flush(shard_id, done, &mut stats, &mut manifest)?;
+        }
+    }
+    // trailing partial shards (ascending for deterministic output)
+    let mut rest: Vec<(u64, Pending)> = pending.drain().collect();
+    rest.sort_by_key(|(id, _)| *id);
+    for (shard_id, p) in rest {
+        if p.filled > 0 {
+            flush(shard_id, p, &mut stats, &mut manifest)?;
+        }
+    }
+    manifest.sort_by_key(|s| s.start);
+    CacheManifest {
+        version: FORMAT_VERSION,
+        codec,
+        positions: stats.positions,
+        slots: stats.slots,
+        bytes: stats.bytes,
+        shards: manifest,
+    }
+    .save(dir)?;
+    Ok(stats)
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::cache::format::INDEX_FILE;
 
     #[test]
     fn ring_fifo_order() {
@@ -251,20 +334,118 @@ mod tests {
         }
     }
 
-    #[test]
-    fn writer_produces_shards_and_meta() {
-        let dir = std::env::temp_dir().join(format!("rskd-cache-test-{}", std::process::id()));
+    fn tdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("rskd-{tag}-{}", std::process::id()));
         let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    #[test]
+    fn writer_produces_shards_and_manifest() {
+        let dir = tdir("writer-basic");
         let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 16, 8).unwrap();
         for pos in 0..40u64 {
             let t = SparseTarget { ids: vec![1, 2, 3], probs: vec![0.2, 0.4, 0.1] };
-            w.push(pos, t);
+            assert!(w.push(pos, t));
         }
         let stats = w.finish().unwrap();
         assert_eq!(stats.positions, 40);
         assert_eq!(stats.shards, 3); // 16 + 16 + 8
-        assert!(dir.join("cache.json").exists());
-        assert!(dir.join("shard-00000.slc").exists());
+        assert!(dir.join(INDEX_FILE).exists());
+        assert!(dir.join("shard-00000000.slc").exists());
+        let m = CacheManifest::load(&dir).unwrap();
+        assert_eq!(m.positions, 40);
+        assert_eq!(m.shards.len(), 3);
+        assert_eq!(m.shards[2].start, 32);
+        assert_eq!(m.shards[2].count, 8);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_accepts_reverse_order() {
+        let dir = tdir("writer-reverse");
+        let w = CacheWriter::create(&dir, ProbCodec::Ratio, 8, 4).unwrap();
+        for pos in (0..32u64).rev() {
+            let t = SparseTarget { ids: vec![pos as u32], probs: vec![0.5] };
+            assert!(w.push(pos, t));
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.positions, 32);
+        assert_eq!(stats.shards, 4);
+        let m = CacheManifest::load(&dir).unwrap();
+        let starts: Vec<u64> = m.shards.iter().map(|s| s.start).collect();
+        assert_eq!(starts, vec![0, 8, 16, 24]);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_fills_interior_gaps_with_empty_records() {
+        let dir = tdir("writer-gaps");
+        let w = CacheWriter::create(&dir, ProbCodec::Ratio, 8, 4).unwrap();
+        // positions 0 and 5 only: slots 1..=4 become empty records, count = 6
+        assert!(w.push(0, SparseTarget { ids: vec![9], probs: vec![0.9] }));
+        assert!(w.push(5, SparseTarget { ids: vec![7], probs: vec![0.7] }));
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.positions, 2);
+        let m = CacheManifest::load(&dir).unwrap();
+        assert_eq!(m.shards.len(), 1);
+        assert_eq!(m.shards[0].count, 6);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_duplicate_push_last_wins() {
+        let dir = tdir("writer-dup");
+        let w = CacheWriter::create(&dir, ProbCodec::Ratio, 8, 4).unwrap();
+        assert!(w.push(3, SparseTarget { ids: vec![1, 2], probs: vec![0.3, 0.2] }));
+        assert!(w.push(3, SparseTarget { ids: vec![5], probs: vec![0.8] }));
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.positions, 1);
+        assert_eq!(stats.slots, 1);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_drops_duplicate_after_shard_flushed() {
+        let dir = tdir("writer-late-dup");
+        let w = CacheWriter::create(&dir, ProbCodec::Ratio, 4, 8).unwrap();
+        for pos in 0..4u64 {
+            assert!(w.push(pos, SparseTarget { ids: vec![pos as u32], probs: vec![0.5] }));
+        }
+        // shard 0 is complete; give the writer thread time to flush it, then
+        // push a late duplicate — it must not resurrect the shard
+        while w.backlog() > 0 {
+            std::thread::yield_now();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        assert!(w.push(2, SparseTarget { ids: vec![99], probs: vec![0.9] }));
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.positions, 4);
+        assert_eq!(stats.shards, 1);
+        let m = CacheManifest::load(&dir).unwrap();
+        assert_eq!(m.shards.len(), 1, "late duplicate must not add a manifest entry");
+        assert_eq!(m.shards[0].count, 4);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_io_error_surfaces_without_deadlock() {
+        let dir = tdir("writer-ioerr");
+        std::fs::create_dir_all(&dir).unwrap();
+        // occupy the first shard's filename with a directory: flush fails
+        std::fs::create_dir_all(dir.join("shard-00000000.slc")).unwrap();
+        let w = CacheWriter::create(&dir, ProbCodec::Ratio, 2, 2).unwrap();
+        // completing shard 0 triggers the failing flush; the writer thread
+        // must close the ring so pushes return false instead of blocking
+        let mut alive = true;
+        for pos in 0..64u64 {
+            alive = w.push(pos, SparseTarget { ids: vec![1], probs: vec![0.5] });
+            if !alive {
+                break;
+            }
+        }
+        assert!(!alive, "pushes must start failing after the writer dies");
+        assert!(w.finish().is_err(), "finish must report the flush error");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -5,12 +5,20 @@
 //! Sparsification runs on-device via the AOT graphs: `sample_topk`
 //! (jax.lax.top_k) or `sample_rs` (the L1 Pallas importance sampler, fed
 //! rust-generated uniforms so the draw is deterministic in the seed).
+//!
+//! Host-side post-processing (slot merge + quantize + encode) runs on a small
+//! worker pool: the teacher thread only copies each output row into a job
+//! queue, workers push finished targets straight into the out-of-order
+//! [`CacheWriter`], which reassembles them by position range. The cache
+//! content is identical to a serial build — targets are position-keyed, and
+//! all randomness is drawn on the teacher thread in stream order.
 
 use std::path::Path;
+use std::sync::Arc;
 
-use anyhow::Result;
+use anyhow::{ensure, Result};
 
-use crate::cache::{CacheStats, CacheWriter, ProbCodec, SparseTarget};
+use crate::cache::{CacheStats, CacheWriter, ProbCodec, RingBuffer, SparseTarget};
 use crate::data::loader::Loader;
 use crate::model::ModelState;
 use crate::runtime::{Engine, HostTensor};
@@ -48,6 +56,20 @@ pub struct BuildStats {
     pub avg_unique_tokens: f64,
 }
 
+/// One teacher-output row handed to the sparsify/encode worker pool. Rows
+/// are compacted to the `keep` slots the draw actually uses before they are
+/// enqueued, so a truncated RS draw (rounds < n_rounds) never copies the
+/// graph's full slot width through the queue.
+struct RowJob {
+    /// stream position of the row's first token
+    base_off: u64,
+    /// [seq * keep] sampled ids for the row
+    ids: Vec<i32>,
+    /// [seq * keep] sampled weights for the row
+    vals: Vec<f32>,
+    keep: usize,
+}
+
 /// Run the teacher over `loader` (stream order) and cache sparse targets.
 pub fn build_cache(
     engine: &Engine,
@@ -59,60 +81,130 @@ pub fn build_cache(
 ) -> Result<BuildStats> {
     let m = engine.manifest();
     let (b, s, n) = (m.batch, m.seq, m.n_rounds);
+    if let CacheKind::Rs { rounds, .. } = kind {
+        // the AOT sampler graph emits a fixed n_rounds slots per position;
+        // a draw of `rounds <= n_rounds` is an exact truncation of it, but
+        // more rounds than the graph provides cannot be synthesized here.
+        ensure!(rounds > 0, "CacheKind::Rs requires rounds >= 1");
+        ensure!(
+            rounds as usize <= n,
+            "CacheKind::Rs rounds={rounds} exceeds the AOT sampler's n_rounds={n}; \
+             re-export artifacts with a larger n_rounds or lower the draw"
+        );
+    }
     let writer = CacheWriter::create(dir, kind.codec(), 4096, 1024)?;
     let mut rng = Pcg::new(seed);
     let fwd = format!("fwd_{}", teacher.role);
-    let mut batches = 0u64;
-    let mut unique_sum = 0u64;
-    let mut positions = 0u64;
 
-    for batch in loader.iter_eval() {
-        let probs = engine
-            .call(&fwd, &[teacher.params_tensor(), HostTensor::i32(batch.tokens.clone(), &[b, s])])?
-            .remove(0);
-        let (ids_t, vals_t) = match kind {
-            CacheKind::TopK => {
-                let mut outs = engine.call("sample_topk", &[probs])?;
-                let vals = outs.remove(1);
-                let ids = outs.remove(0);
-                (ids, vals)
+    let n_workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).clamp(1, 4);
+    let jobs: Arc<RingBuffer<RowJob>> = RingBuffer::new(4 * n_workers);
+
+    let (batches, unique_sum, positions) = std::thread::scope(|scope| -> Result<(u64, u64, u64)> {
+        let writer_ref = &writer;
+        let workers: Vec<_> = (0..n_workers)
+            .map(|_| {
+                let jobs = Arc::clone(&jobs);
+                scope.spawn(move || {
+                    let (mut uniq, mut npos) = (0u64, 0u64);
+                    // if the writer dies (I/O error) keep draining jobs so the
+                    // teacher thread never blocks; finish() reports the error
+                    let mut writer_alive = true;
+                    while let Some(job) = jobs.pop() {
+                        for pos in 0..s {
+                            let at = pos * job.keep;
+                            let ids = &job.ids[at..at + job.keep];
+                            let vals = &job.vals[at..at + job.keep];
+                            let target = merge_slots(ids, vals, kind);
+                            uniq += target.ids.len() as u64;
+                            npos += 1;
+                            if writer_alive {
+                                writer_alive = writer_ref.push(job.base_off + pos as u64, target);
+                            }
+                        }
+                    }
+                    (uniq, npos)
+                })
+            })
+            .collect();
+
+        // teacher pass on this thread; close the job queue even on error so
+        // the workers always drain and join
+        let mut feed = || -> Result<u64> {
+            let mut batches = 0u64;
+            for batch in loader.iter_eval() {
+                let probs = engine
+                    .call(
+                        &fwd,
+                        &[teacher.params_tensor(), HostTensor::i32(batch.tokens.clone(), &[b, s])],
+                    )?
+                    .remove(0);
+                let (ids_t, vals_t) = match kind {
+                    CacheKind::TopK => {
+                        let mut outs = engine.call("sample_topk", &[probs])?;
+                        let vals = outs.remove(1);
+                        let ids = outs.remove(0);
+                        (ids, vals)
+                    }
+                    CacheKind::Rs { temp, .. } => {
+                        // rust drives the randomness: uniforms in, samples out
+                        let mut unif = vec![0.0f32; b * s * n];
+                        rng.fill_f32(&mut unif);
+                        let unif_t = HostTensor::f32(unif, &[b, s, n]);
+                        let mut outs = engine
+                            .call("sample_rs", &[probs, unif_t, HostTensor::scalar_f32(temp)])?;
+                        let w = outs.remove(1);
+                        let ids = outs.remove(0);
+                        (ids, w)
+                    }
+                };
+                let ids = ids_t.as_i32()?;
+                let vals = vals_t.as_f32()?;
+                let slots = ids.len() / (b * s);
+                // the graph emits `n_rounds` slots; a smaller `rounds` draw is
+                // the exact prefix (weights are 1/n each at temp=1, and
+                // merge_slots renormalizes)
+                let keep = match kind {
+                    CacheKind::Rs { rounds, .. } => (rounds as usize).min(slots),
+                    CacheKind::TopK => slots,
+                };
+                for row in 0..b {
+                    let at = row * s * slots;
+                    let (row_ids, row_vals) = if keep == slots {
+                        (ids[at..at + s * slots].to_vec(), vals[at..at + s * slots].to_vec())
+                    } else {
+                        // truncated RS draw: ship only the kept prefix of
+                        // each position's slot block through the queue
+                        let mut ri = Vec::with_capacity(s * keep);
+                        let mut rv = Vec::with_capacity(s * keep);
+                        for pos in 0..s {
+                            let a = at + pos * slots;
+                            ri.extend_from_slice(&ids[a..a + keep]);
+                            rv.extend_from_slice(&vals[a..a + keep]);
+                        }
+                        (ri, rv)
+                    };
+                    jobs.push(RowJob {
+                        base_off: batch.offsets[row] as u64,
+                        ids: row_ids,
+                        vals: row_vals,
+                        keep,
+                    });
+                }
+                batches += 1;
             }
-            CacheKind::Rs { rounds, temp } => {
-                // rust drives the randomness: uniforms in, samples out
-                let mut unif = vec![0.0f32; b * s * n];
-                rng.fill_f32(&mut unif);
-                let mut outs = engine.call(
-                    "sample_rs",
-                    &[probs, HostTensor::f32(unif, &[b, s, n]), HostTensor::scalar_f32(temp)],
-                )?;
-                let w = outs.remove(1);
-                let ids = outs.remove(0);
-                // graph emits `n_rounds` slots; if the experiment wants fewer
-                // rounds, truncate and renormalize (weights are 1/n each for
-                // temp=1, so truncation to `rounds` = an exact smaller draw)
-                let _ = rounds;
-                (ids, w)
-            }
+            Ok(batches)
         };
-        let ids = ids_t.as_i32()?;
-        let vals = vals_t.as_f32()?;
-        let slots = ids.len() / (b * s);
-        let keep = match kind {
-            CacheKind::Rs { rounds, .. } => (rounds as usize).min(slots),
-            CacheKind::TopK => slots,
-        };
-        for row in 0..b {
-            let base_off = batch.offsets[row] as u64;
-            for pos in 0..s {
-                let at = (row * s + pos) * slots;
-                let target = merge_slots(&ids[at..at + keep], &vals[at..at + keep], kind);
-                unique_sum += target.ids.len() as u64;
-                positions += 1;
-                writer.push(base_off + pos as u64, target);
-            }
+        let fed = feed();
+        jobs.close();
+        let (mut unique_sum, mut positions) = (0u64, 0u64);
+        for w in workers {
+            let (u, p) = w.join().expect("cache worker panicked");
+            unique_sum += u;
+            positions += p;
         }
-        batches += 1;
-    }
+        Ok((fed?, unique_sum, positions))
+    })?;
+
     let cache = writer.finish()?;
     Ok(BuildStats {
         cache,

@@ -148,7 +148,9 @@ impl Pipeline {
     }
 
     /// Build a cache of `kind` under the work dir, addressed in the teacher
-    /// packing's position space.
+    /// packing's position space. The returned reader is lazy: shards decode
+    /// on first touch and stay resident in a bounded LRU (see
+    /// `cache::reader`), so handing it to several student runs is cheap.
     pub fn build_cache(&self, kind: CacheKind, tag: &str, seed: u64) -> Result<(CacheReader, BuildStats)> {
         let dir = self.cfg.work_dir.join(format!("cache-{tag}"));
         let _ = std::fs::remove_dir_all(&dir);

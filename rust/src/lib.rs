@@ -9,7 +9,9 @@
 //! paper studies, and the evaluation/benchmark harness that regenerates the
 //! paper's tables and figures.
 //!
-//! See `DESIGN.md` for the architecture and `EXPERIMENTS.md` for results.
+//! Start at the repo-root `README.md`; see `DESIGN.md` for the architecture,
+//! `EXPERIMENTS.md` for the results harness, and `docs/CACHE_FORMAT.md` for
+//! the on-disk sparse-logit cache spec.
 
 pub mod cache;
 pub mod coordinator;

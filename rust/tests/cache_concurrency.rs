@@ -1,0 +1,227 @@
+//! Integration tests for the v2 cache concurrency surface: multi-producer
+//! out-of-order writes, lazy opening, LRU eviction, shard-boundary ranges,
+//! and legacy v1 compatibility.
+
+use std::path::PathBuf;
+
+use rskd::cache::quant::{self, ProbCodec};
+use rskd::cache::{CacheReader, CacheWriter, SparseTarget};
+use rskd::util::json::Json;
+
+fn tdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rskd-it-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn target_for(pos: u64) -> SparseTarget {
+    // deterministic per-position target so any producer can build it
+    SparseTarget {
+        ids: vec![pos as u32 % 97, 200 + (pos as u32 % 7), 400],
+        probs: vec![20.0 / 50.0, 10.0 / 50.0, 5.0 / 50.0],
+    }
+}
+
+#[test]
+fn multi_producer_out_of_order_reassembles() {
+    let dir = tdir("mp");
+    let n = 256u64;
+    let n_producers = 4u64;
+    let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 32, 16).unwrap();
+    std::thread::scope(|s| {
+        for p in 0..n_producers {
+            let w = &w;
+            // strided interleave: every producer writes into every shard,
+            // so no shard can complete from a single producer's stream
+            s.spawn(move || {
+                for pos in (p..n).step_by(n_producers as usize) {
+                    assert!(w.push(pos, target_for(pos)));
+                }
+            });
+        }
+    });
+    let stats = w.finish().unwrap();
+    assert_eq!(stats.positions, n);
+    assert_eq!(stats.shards, 8); // 256 / 32
+
+    let r = CacheReader::open(&dir).unwrap();
+    assert_eq!(r.positions, n);
+    assert_eq!(r.shard_count(), 8);
+    for pos in 0..n {
+        let t = r.get(pos).unwrap_or_else(|| panic!("position {pos} missing"));
+        assert_eq!(t.ids, target_for(pos).ids, "wrong target at {pos}");
+    }
+    assert!(r.get(n).is_none());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn lru_eviction_still_serves_correct_targets() {
+    let dir = tdir("lru");
+    let n = 160u64; // 10 shards of 16
+    let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 16, 8).unwrap();
+    for pos in 0..n {
+        assert!(w.push(pos, target_for(pos)));
+    }
+    w.finish().unwrap();
+
+    let r = CacheReader::open_with_capacity(&dir, 3).unwrap();
+    // a shard-hostile access pattern: stride the whole stream repeatedly
+    for round in 0..4u64 {
+        for pos in (round..n).step_by(16) {
+            let t = r.get(pos).unwrap();
+            assert_eq!(t.ids, target_for(pos).ids);
+        }
+        assert!(r.resident_shards() <= 3, "LRU exceeded its capacity");
+    }
+    assert!(r.shard_loads() > 10, "expected eviction churn under capacity 3");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn get_range_spans_shard_boundary() {
+    let dir = tdir("boundary");
+    let n = 64u64;
+    let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 16, 8).unwrap();
+    for pos in 0..n {
+        assert!(w.push(pos, target_for(pos)));
+    }
+    w.finish().unwrap();
+
+    let r = CacheReader::open(&dir).unwrap();
+    // [8, 40): crosses the 16 and 32 shard boundaries
+    let ts = r.get_range(8, 32);
+    assert_eq!(ts.len(), 32);
+    for (i, t) in ts.iter().enumerate() {
+        assert_eq!(t.ids, target_for(8 + i as u64).ids, "wrong target at offset {i}");
+    }
+    // exactly the three overlapped shards were decoded
+    assert_eq!(r.shard_loads(), 3);
+    // past-the-end tail pads with empty targets
+    let tail = r.get_range(n - 2, 5);
+    assert_eq!(tail[0].k(), 3);
+    assert_eq!(tail[1].k(), 3);
+    assert!(tail[2..].iter().all(|t| t.k() == 0));
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn open_is_lazy_until_first_touch() {
+    let dir = tdir("lazy");
+    let w = CacheWriter::create(&dir, ProbCodec::Ratio, 16, 8).unwrap();
+    for pos in 0..128u64 {
+        assert!(w.push(pos, target_for(pos)));
+    }
+    w.finish().unwrap();
+
+    let r = CacheReader::open(&dir).unwrap();
+    assert_eq!(r.shard_count(), 8);
+    assert_eq!(r.resident_shards(), 0, "open must not decode shard records");
+    assert_eq!(r.shard_loads(), 0);
+    let _ = r.get_range(48, 16); // one shard's worth
+    assert_eq!(r.shard_loads(), 1, "touching one shard must load exactly one");
+    assert_eq!(r.resident_shards(), 1);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Hand-write a legacy v1 cache directory: "SLC1" shards named in stream
+/// order plus a totals-only `cache.json` — exactly what the pre-v2 writer
+/// produced. The lazy reader must open it from headers alone.
+#[test]
+fn legacy_v1_cache_opens_correctly() {
+    let dir = tdir("v1");
+    std::fs::create_dir_all(&dir).unwrap();
+    let n = 40u64;
+    let per_shard = 16u64;
+    let mut bytes = 0u64;
+    let mut slots = 0u64;
+    let mut shard_no = 0u32;
+    let mut pos = 0u64;
+    while pos < n {
+        let count = per_shard.min(n - pos);
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&0x534C_4331u32.to_le_bytes()); // "SLC1"
+        buf.extend_from_slice(&[2u8, 50, 0, 0]); // codec Count, rounds 50
+        buf.extend_from_slice(&pos.to_le_bytes());
+        buf.extend_from_slice(&count.to_le_bytes());
+        for p in pos..pos + count {
+            let t = target_for(p);
+            buf.push(t.ids.len() as u8);
+            for (&id, &prob) in t.ids.iter().zip(t.probs.iter()) {
+                let code = (prob * 50.0).round() as u8;
+                buf.extend_from_slice(&quant::pack_slot(id, code));
+            }
+            slots += t.ids.len() as u64;
+        }
+        bytes += buf.len() as u64;
+        std::fs::write(dir.join(format!("shard-{shard_no:05}.slc")), &buf).unwrap();
+        shard_no += 1;
+        pos += count;
+    }
+    let meta = Json::obj(vec![
+        ("codec", Json::num(2.0)),
+        ("rounds", Json::num(50.0)),
+        ("positions", Json::num(n as f64)),
+        ("slots", Json::num(slots as f64)),
+        ("bytes", Json::num(bytes as f64)),
+        ("shards", Json::num(shard_no as f64)),
+    ]);
+    std::fs::write(dir.join("cache.json"), meta.to_string()).unwrap();
+
+    let r = CacheReader::open(&dir).unwrap();
+    assert_eq!(r.version, 1);
+    assert_eq!(r.positions, n);
+    assert_eq!(r.rounds, 50);
+    assert_eq!(r.resident_shards(), 0, "v1 open must also be lazy");
+    for p in 0..n {
+        let t = r.get(p).unwrap();
+        assert_eq!(t.ids, target_for(p).ids);
+        assert!((t.probs[0] - 0.4).abs() < 1e-6);
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn manifest_count_mismatch_is_a_clean_error() {
+    let dir = tdir("corrupt");
+    let w = CacheWriter::create(&dir, ProbCodec::Ratio, 16, 8).unwrap();
+    for pos in 0..32u64 {
+        assert!(w.push(pos, target_for(pos)));
+    }
+    w.finish().unwrap();
+    // inflate the first shard's declared count past its record count
+    let idx = dir.join("index.json");
+    let text = std::fs::read_to_string(&idx).unwrap();
+    let text = text.replacen("\"count\":16", "\"count\":20", 1);
+    std::fs::write(&idx, text).unwrap();
+
+    let r = CacheReader::open(&dir).unwrap();
+    let err = r.try_get(0).unwrap_err();
+    assert!(err.to_string().contains("corrupt cache"), "got: {err}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn unknown_shard_version_fails_with_clear_error() {
+    let dir = tdir("badmagic");
+    std::fs::create_dir_all(&dir).unwrap();
+    // plausible-looking shard with a future magic ("SLC9")
+    let mut buf = Vec::new();
+    buf.extend_from_slice(&0x534C_4339u32.to_le_bytes());
+    buf.extend_from_slice(&[2u8, 50, 0, 0]);
+    buf.extend_from_slice(&0u64.to_le_bytes());
+    buf.extend_from_slice(&1u64.to_le_bytes());
+    buf.push(0);
+    std::fs::write(dir.join("shard-00000.slc"), &buf).unwrap();
+    std::fs::write(
+        dir.join("cache.json"),
+        Json::obj(vec![("positions", Json::num(1.0))]).to_string(),
+    )
+    .unwrap();
+
+    let err = CacheReader::open(&dir).unwrap_err();
+    let msg = err.to_string();
+    assert!(msg.contains("unsupported shard magic"), "got: {msg}");
+    assert!(msg.contains("SLC1") && msg.contains("SLC2"), "got: {msg}");
+    let _ = std::fs::remove_dir_all(&dir);
+}

@@ -180,7 +180,7 @@ fn cache_range_consistency() {
     let _ = std::fs::remove_dir_all(&dir);
     let w = rskd::cache::CacheWriter::create(&dir, ProbCodec::Ratio, 7, 4).unwrap();
     for pos in 0..40u64 {
-        w.push(pos, SparseTarget { ids: vec![pos as u32, 500], probs: vec![0.5, 0.25] });
+        assert!(w.push(pos, SparseTarget { ids: vec![pos as u32, 500], probs: vec![0.5, 0.25] }));
     }
     w.finish().unwrap();
     let r = CacheReader::open(&dir).unwrap();
