@@ -14,6 +14,7 @@ use rskd::cache::{CacheReader, CacheWriter, SparseTarget};
 use rskd::report::Report;
 use rskd::sampling::zipf::zipf;
 use rskd::sampling::{random_sampling, topk};
+use rskd::spec::CachePlan;
 use rskd::util::rng::Pcg;
 
 fn main() -> Result<()> {
@@ -25,7 +26,7 @@ fn main() -> Result<()> {
 
     let p = zipf(512, 1.0);
     let mut rng = Pcg::new(0);
-    let t_topk = topk(&p, 32, false);
+    let t_topk = topk(&p, 32);
     let t_rs = random_sampling(&p, 50, 1.0, &mut rng);
 
     report.line("--- quantization error per codec (L1 of decode vs original) ---");
@@ -43,7 +44,13 @@ fn main() -> Result<()> {
     report.line("--- on-disk v2 shards via the out-of-order ring-buffer writer ---");
     let dir = std::env::temp_dir().join("rskd-cache-inspect");
     let _ = std::fs::remove_dir_all(&dir);
-    let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 512, 64)?;
+    let w = CacheWriter::create_with_kind(
+        &dir,
+        ProbCodec::Count { rounds: 50 },
+        512,
+        64,
+        Some("rs:rounds=50,temp=1".into()),
+    )?;
     let n_positions = 2048u64;
     // push in reverse to show that producer order no longer matters
     let mut rng = Pcg::new(1);
@@ -68,10 +75,11 @@ fn main() -> Result<()> {
     report.line("--- index.json manifest (v2 shard directory) ---");
     let manifest = CacheManifest::load(&dir)?;
     report.line(format!(
-        "version {} | codec tag {} (rounds {}) | {} positions, {} slots, {} bytes",
+        "version {} | codec tag {} (rounds {}) | kind {} | {} positions, {} slots, {} bytes",
         manifest.version,
         manifest.codec.tag(),
         manifest.rounds(),
+        manifest.kind.as_deref().unwrap_or("<untagged>"),
         manifest.positions,
         manifest.slots,
         manifest.bytes
@@ -89,8 +97,21 @@ fn main() -> Result<()> {
         .collect();
     report.table(&["shard file", "position range", "size"], &rows);
 
-    report.line("--- lazy LRU reader ---");
+    report.line("--- inferred cache plan (spec-layer view of this directory) ---");
     let r = CacheReader::open(&dir)?;
+    match r.cache_kind() {
+        Ok(kind) => {
+            let plan = CachePlan { kind };
+            report.line(format!(
+                "kind {kind} -> plan {plan}, registry tag `{}`; serves specs whose \
+                 cache_plan() matches (see docs/SPEC.md compatibility matrix)",
+                plan.dir_tag()
+            ));
+        }
+        Err(e) => report.line(format!("kind unparseable ({e}): training would refuse this cache")),
+    }
+
+    report.line("--- lazy LRU reader ---");
     report.line(format!(
         "open: {} shards indexed, {} decoded (metadata only)",
         r.shard_count(),

@@ -9,7 +9,7 @@
 use rskd::report::Report;
 use rskd::sampling::estimator::estimator_stats;
 use rskd::sampling::zipf::zipf;
-use rskd::sampling::Method;
+use rskd::spec::{DistillSpec, Variant};
 use rskd::toynn::train::train_teacher;
 use rskd::toynn::{train_toy, GaussianClasses, ToyMethod, ToyTrainConfig};
 
@@ -19,16 +19,16 @@ fn main() {
     report.line("--- estimator view: bias/variance on a Zipf teacher row ---");
     let p = zipf(512, 1.0);
     let mut rows = Vec::new();
-    for m in [
-        Method::TopK { k: 12, normalize: true },
-        Method::NaiveFix { k: 12 },
-        Method::RandomSampling { rounds: 12, temp: 1.0 },
-        Method::RandomSampling { rounds: 50, temp: 1.0 },
-        Method::RandomSampling { rounds: 50, temp: 0.25 },
+    for spec in [
+        DistillSpec::sparse(Variant::TopK { k: 12, normalize: true }),
+        DistillSpec::sparse(Variant::NaiveFix { k: 12 }),
+        DistillSpec::rs(12),
+        DistillSpec::rs(50),
+        DistillSpec::sparse(Variant::Rs { rounds: 50, temp: 0.25 }),
     ] {
-        let st = estimator_stats(&p, m, 500, 0);
+        let st = estimator_stats(&p, &spec, 500, 0);
         rows.push(vec![
-            m.name(),
+            spec.name(),
             format!("{:.4}", st.bias_l1),
             format!("{:.4}", st.mean_l1),
             format!("{:.5}", st.variance),

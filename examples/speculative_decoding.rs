@@ -7,10 +7,10 @@
 //! ```
 
 use anyhow::Result;
-use rskd::coordinator::{CacheKind, Pipeline, PipelineConfig, StudentMethod};
-use rskd::coordinator::trainer::SparseVariant;
+use rskd::coordinator::{Pipeline, PipelineConfig};
 use rskd::report::Report;
 use rskd::runtime::HostTensor;
+use rskd::spec::DistillSpec;
 use rskd::specdecode::{analytic_accept, simulate};
 use rskd::util::rng::Pcg;
 
@@ -23,14 +23,12 @@ fn main() -> Result<()> {
         work_dir: "target/specdemo".into(),
         ..Default::default()
     };
-    let pipe = Pipeline::prepare(cfg)?;
+    let mut pipe = Pipeline::prepare(cfg)?;
     let m = pipe.engine.manifest();
     let (b, s, v) = (m.batch, m.seq, m.vocab);
 
-    let (cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 50, temp: 1.0 }, "spec", 1)?;
-    let rs = StudentMethod::Sparse { variant: SparseVariant::Rs, alpha: 0.0, adaptive: None };
-    let (student, _, _) = pipe.run_student(&rs, Some(&cache), 3)?;
-    let (student_ce, _, _) = pipe.run_student(&StudentMethod::Ce, None, 3)?;
+    let (student, _, _) = pipe.run_spec(&DistillSpec::rs(50), 3)?;
+    let (student_ce, _, _) = pipe.run_spec(&DistillSpec::ce(), 3)?;
 
     // gather aligned draft/target prob rows on an eval batch
     let batch = pipe.eval_loader().next_batch_for_demo();

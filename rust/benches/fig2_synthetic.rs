@@ -6,26 +6,29 @@
 
 use rskd::report::Report;
 use rskd::sampling::zipf::{averaged_effective_target, bias_l1, zipf};
-use rskd::sampling::Method;
+use rskd::spec::{DistillSpec, Variant};
 use rskd::toynn::train::train_teacher;
 use rskd::toynn::{train_toy, GaussianClasses, ToyImages, ToyMethod, ToyTrainConfig};
 
 fn fig2a(report: &mut Report) {
     report.line("--- Fig 2a: Zipf toy distribution (head estimates + bias) ---");
     let p = zipf(100_000, 1.0);
-    let methods = [
+    let methods: [(&str, Option<DistillSpec>); 4] = [
         ("Ground Truth", None),
-        ("Top-K 20 (renorm)", Some(Method::TopK { k: 20, normalize: true })),
-        ("Naive Fix 20", Some(Method::NaiveFix { k: 20 })),
-        ("RS (22 samples)", Some(Method::RandomSampling { rounds: 22, temp: 1.0 })),
+        (
+            "Top-K 20 (renorm)",
+            Some(DistillSpec::sparse(Variant::TopK { k: 20, normalize: true })),
+        ),
+        ("Naive Fix 20", Some(DistillSpec::sparse(Variant::NaiveFix { k: 20 }))),
+        ("RS (22 samples)", Some(DistillSpec::rs(22))),
     ];
     let mut rows = Vec::new();
-    for (name, m) in methods {
-        let head = match m {
+    for (name, spec) in methods {
+        let head = match &spec {
             None => p[..6].to_vec(),
-            Some(m) => averaged_effective_target(&p, m, 400, 6, 0),
+            Some(s) => averaged_effective_target(&p, s, 400, 6, 0),
         };
-        let bias = m.map(|m| bias_l1(&p, m, 400, 0));
+        let bias = spec.as_ref().map(|s| bias_l1(&p, s, 400, 0));
         let mut row = vec![name.to_string()];
         row.extend(head.iter().map(|x| format!("{x:.4}")));
         row.push(bias.map(|b| format!("{b:.4}")).unwrap_or_else(|| "0".into()));

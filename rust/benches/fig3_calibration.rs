@@ -3,27 +3,23 @@
 //!       CE / Top-K 12 / RS-KD 12 / FullKD students.
 //!  3b — ECE vs token budget for Top-K and RS-KD.
 
-use rskd::coordinator::{CacheKind, StudentMethod};
 use rskd::expt;
 use rskd::report::Report;
 
 fn main() {
-    let Some(pipe) = expt::prepare_small("fig3") else { return };
-    let (tk_cache, _) = pipe.build_cache(CacheKind::TopK, "f3-tk", 1).unwrap();
-    let (rs_cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "f3-rs", 2).unwrap();
+    let Some(mut pipe) = expt::prepare_small("fig3") else { return };
 
     let mut report = Report::new("fig3_calibration", "LLM pre-training calibration (paper Figure 3)");
     report.line("--- Fig 3a: reliability diagrams (bin conf -> accuracy) ---");
 
-    let runs: Vec<(&str, StudentMethod, Option<&rskd::cache::CacheReader>)> = vec![
-        ("CE", StudentMethod::Ce, None),
-        ("Top-K 12", expt::topk(12), Some(&tk_cache)),
-        ("RS-KD 12", expt::rs(), Some(&rs_cache)),
-        ("FullKD", StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None),
-    ];
     let mut curves = Vec::new();
-    for (name, method, cache) in runs {
-        let (_, _, ev) = pipe.run_student(&method, cache, 3).unwrap();
+    for (name, s) in [
+        ("CE", "ce"),
+        ("Top-K 12", "topk:k=12"),
+        ("RS-KD 12", "rs:rounds=12"),
+        ("FullKD", "fullkd"),
+    ] {
+        let (_, _, ev) = pipe.run_spec(&expt::spec(s), 3).unwrap();
         curves.push((name, ev));
     }
     let mut rows = Vec::new();
@@ -46,15 +42,14 @@ fn main() {
     report.line("--- Fig 3b: ECE vs token budget ---");
     let mut rows = Vec::new();
     for k in [5usize, 12, 25, 50] {
-        let (_, _, ev_tk) = pipe.run_student(&expt::topk(k), Some(&tk_cache), 3).unwrap();
-        let (rs_c, stats) = pipe
-            .build_cache(CacheKind::Rs { rounds: k as u32, temp: 1.0 }, &format!("f3-rs{k}"), k as u64)
-            .unwrap();
-        let (_, _, ev_rs) = pipe.run_student(&expt::rs(), Some(&rs_c), 3).unwrap();
+        let (_, _, ev_tk) = pipe.run_spec(&expt::spec(&format!("topk:k={k}")), 3).unwrap();
+        let rs = expt::spec(&format!("rs:rounds={k}"));
+        let handle = pipe.ensure_cache(&rs).unwrap().unwrap();
+        let (_, _, ev_rs) = pipe.run_spec(&rs, 3).unwrap();
         rows.push(vec![
             format!("{k}"),
             format!("{:.1}", ev_tk.ece_pct),
-            format!("{:.1} ({:.1} uniq)", ev_rs.ece_pct, stats.avg_unique_tokens),
+            format!("{:.1} ({:.1} uniq)", ev_rs.ece_pct, handle.stats.avg_unique_tokens),
         ]);
     }
     report.table(&["tokens", "Top-K ECE %", "RS-KD ECE %"], &rows);

@@ -5,8 +5,7 @@
 //! with student size — the paper's contrast with Peng et al.'s Top-K drop.
 
 use rskd::coordinator::schedule::LrSchedule;
-use rskd::coordinator::trainer::{train_student, SparseVariant};
-use rskd::coordinator::{CacheKind, Pipeline, StudentMethod};
+use rskd::coordinator::{train_student, Pipeline};
 use rskd::expt;
 use rskd::model::ModelState;
 use rskd::report::Report;
@@ -19,8 +18,9 @@ fn main() {
     let cfg = expt::config_for("artifacts/sizes", "fig4");
     let steps = cfg.student_steps;
     let lr = cfg.student_lr;
-    let pipe = Pipeline::prepare(cfg).unwrap();
-    let (cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "f4", 1).unwrap();
+    let mut pipe = Pipeline::prepare(cfg).unwrap();
+    let rs12 = expt::spec("rs:rounds=12");
+    let cache = pipe.ensure_cache(&rs12).unwrap().unwrap();
 
     let mut report = Report::new("fig4_student_size", "Improvement vs student size (paper Figure 4)");
     let mut rows = Vec::new();
@@ -35,10 +35,7 @@ fn main() {
     for role in roles {
         let params = pipe.engine.manifest().role(&role).unwrap().param_count;
         let mut scores = Vec::new();
-        for method in [
-            StudentMethod::Ce,
-            StudentMethod::Sparse { variant: SparseVariant::Rs, alpha: 0.0, adaptive: None },
-        ] {
+        for spec in [expt::spec("ce"), rs12] {
             let mut student = ModelState::init(&pipe.engine, &role, 3).unwrap();
             let mut loader = pipe.train_loader(11);
             train_student(
@@ -47,8 +44,8 @@ fn main() {
                 &mut loader,
                 steps,
                 LrSchedule::paper_default(lr, steps),
-                &method,
-                Some(&cache),
+                &spec,
+                Some(&cache.reader),
                 Some(&pipe.teacher),
             )
             .unwrap();

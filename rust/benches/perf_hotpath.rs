@@ -13,13 +13,13 @@ use std::time::{Duration, Instant};
 
 use rskd::cache::quant::ProbCodec;
 use rskd::cache::{CacheReader, CacheWriter, SparseTarget};
-use rskd::coordinator::trainer::{assemble_sparse_block, SparseVariant};
-use rskd::coordinator::{CacheKind, Pipeline};
+use rskd::coordinator::{assemble_sparse_block, Pipeline};
 use rskd::expt;
 use rskd::report::Report;
 use rskd::runtime::HostTensor;
 use rskd::sampling::random_sampling;
 use rskd::sampling::zipf::zipf;
+use rskd::spec::Variant;
 use rskd::util::bench::bench;
 use rskd::util::rng::Pcg;
 
@@ -123,10 +123,10 @@ fn main() {
     }
     let mut cfg = expt::config_for("artifacts/small", "perf");
     cfg.teacher_steps = 40; // perf pass does not need a good teacher
-    let pipe = Pipeline::prepare(cfg).unwrap();
+    let mut pipe = Pipeline::prepare(cfg).unwrap();
     let m = pipe.engine.manifest();
     let (b, s, v, k) = (m.batch, m.seq, m.vocab, m.k_slots);
-    let (cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 50, temp: 1.0 }, "perf", 1).unwrap();
+    let cache = pipe.ensure_cache(&expt::spec("rs:rounds=50")).unwrap().unwrap().reader;
 
     let mut rows: Vec<Vec<String>> = Vec::new();
     let budget = Duration::from_millis(2500);
@@ -135,7 +135,8 @@ fn main() {
     let mut loader = pipe.packed_loader(11, false, 0);
     let batch = loader.next_batch();
     let st = bench(2, budget, || {
-        let blk = assemble_sparse_block(&cache, &batch, v, k, SparseVariant::Rs, None);
+        let blk =
+            assemble_sparse_block(&cache, &batch, v, k, Variant::Rs { rounds: 50, temp: 1.0 }, None);
         std::hint::black_box(blk.val.len());
     });
     rows.push(vec!["L3 cache->block assembly".into(), format!("{:.3} ms", st.per_iter_ms())]);
@@ -175,7 +176,8 @@ fn main() {
 
     // --- L1 vs L2: pallas vs jnp sparse train step ---
     let student = rskd::model::ModelState::init(&pipe.engine, "student", 1).unwrap();
-    let blk = assemble_sparse_block(&cache, &batch, v, k, SparseVariant::Rs, None);
+    let blk =
+        assemble_sparse_block(&cache, &batch, v, k, Variant::Rs { rounds: 50, temp: 1.0 }, None);
     let mk_args = || {
         let [p, mm, vv, stp] = student.opt_inputs();
         vec![

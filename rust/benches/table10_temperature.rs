@@ -2,26 +2,26 @@
 //! t ∈ {0, 0.8, 1.0, 1.2}. Expectation: t=0 (uniform proposal) diverges;
 //! t ∈ [0.8, 1.2] all comparable.
 
-use rskd::coordinator::CacheKind;
 use rskd::expt;
 use rskd::report::Report;
 
 fn main() {
-    let Some(pipe) = expt::prepare_small("table10") else { return };
+    let Some(mut pipe) = expt::prepare_small("table10") else { return };
     let mut report = Report::new("table10_temperature", "Proposal temperature (paper Table 10)");
     let mut rows = Vec::new();
     for temp in [0.0f32, 0.8, 1.0, 1.2] {
-        let (cache, stats) = pipe
-            .build_cache(CacheKind::Rs { rounds: 50, temp }, &format!("t10-{temp}"), 7)
-            .unwrap();
-        let (_, tr, ev) = pipe.run_student(&expt::rs(), Some(&cache), 3).unwrap();
+        // each temperature is its own cache plan, so the registry builds one
+        // cache per row (and would reuse them on a re-run within the process)
+        let spec = expt::spec(&format!("rs:rounds=50,temp={temp}"));
+        let handle = pipe.ensure_cache(&spec).unwrap().unwrap();
+        let (_, tr, ev) = pipe.run_spec(&spec, 3).unwrap();
         if tr.diverged || !ev.lm_loss.is_finite() || ev.lm_loss > 20.0 {
-            rows.push(vec![format!("{temp}"), format!("{:.1}", stats.avg_unique_tokens),
+            rows.push(vec![format!("{temp}"), format!("{:.1}", handle.stats.avg_unique_tokens),
                            "inf (diverged)".into(), "-".into(), "-".into()]);
         } else {
             rows.push(vec![
                 format!("{temp}"),
-                format!("{:.1}", stats.avg_unique_tokens),
+                format!("{:.1}", handle.stats.avg_unique_tokens),
                 format!("{:.3}", ev.lm_loss),
                 format!("{:.1}", ev.ece_pct),
                 format!("{:.1}", ev.spec_accept_pct),

@@ -4,7 +4,7 @@
 //! adaptation barely beats CE; a short teacher fine-tune on B recovers the
 //! KD gain.
 
-use rskd::coordinator::{CacheKind, Pipeline, StudentMethod};
+use rskd::coordinator::Pipeline;
 use rskd::data::TextDataset;
 use rskd::expt;
 use rskd::report::Report;
@@ -20,7 +20,7 @@ fn main() {
     let mut cfg = expt::config_for("artifacts/small", "table11");
     cfg.corpus = cfg.corpus.shifted(); // pipeline data (student domain) = B
     cfg.teacher_steps = 1;
-    let pipe = Pipeline::prepare(cfg.clone()).unwrap();
+    let mut pipe = Pipeline::prepare(cfg.clone()).unwrap();
 
     // the real teacher: pre-trained on domain A only
     let cfg_a = expt::config_for("artifacts/small", "table11-A");
@@ -30,19 +30,20 @@ fn main() {
     let mut report = Report::new("table11_adapt", "Teacher adaptation (paper Table 11)");
     let mut rows = Vec::new();
 
-    let (_, _, ev_ce, z_ce) =
-        expt::run_with_zero_shot(&pipe, &StudentMethod::Ce, None, 3).unwrap();
+    let (_, _, ev_ce, z_ce) = expt::run_with_zero_shot(&mut pipe, &expt::spec("ce"), 3).unwrap();
     rows.push(vec!["CE".into(), format!("{:.3}", ev_ce.lm_loss), format!("{z_ce:.1}")]);
+
+    let rs12 = expt::spec("rs:rounds=12");
 
     // KD w/o adaptation: cache built by the domain-A teacher over domain-B data
     {
         let mut unadapted_pipe = Pipeline::prepare(cfg.clone()).unwrap();
         unadapted_pipe.teacher = teacher_a.clone();
-        let (cache, _) = unadapted_pipe
-            .build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "t11-noadapt", 1)
-            .unwrap();
-        let (_, _, ev, z) =
-            expt::run_with_zero_shot(&unadapted_pipe, &expt::rs(), Some(&cache), 3).unwrap();
+        // defensive: the registry is empty on a fresh pipeline, but the
+        // teacher-swap-then-clear idiom keeps this correct if caches are
+        // ever warmed before the swap
+        unadapted_pipe.clear_caches();
+        let (_, _, ev, z) = expt::run_with_zero_shot(&mut unadapted_pipe, &rs12, 3).unwrap();
         rows.push(vec!["KD w/o adapt".into(), format!("{:.3}", ev.lm_loss), format!("{z:.1}")]);
     }
 
@@ -55,11 +56,8 @@ fn main() {
                                     40_000, 31);
         adapted_pipe.continue_ce(&mut teacher, &ds.docs, expt::scale().teacher_steps / 4, 1e-4).unwrap();
         adapted_pipe.teacher = teacher;
-        let (cache, _) = adapted_pipe
-            .build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "t11-adapt", 2)
-            .unwrap();
-        let (_, _, ev, z) =
-            expt::run_with_zero_shot(&adapted_pipe, &expt::rs(), Some(&cache), 3).unwrap();
+        adapted_pipe.clear_caches(); // defensive, as above
+        let (_, _, ev, z) = expt::run_with_zero_shot(&mut adapted_pipe, &rs12, 3).unwrap();
         rows.push(vec!["KD w adapt".into(), format!("{:.3}", ev.lm_loss), format!("{z:.1}")]);
     }
 

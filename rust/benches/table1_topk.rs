@@ -2,27 +2,24 @@
 //! plus the Top-p row. Expectation (paper §2.1): small K underperforms CE,
 //! ECE worsens as K shrinks, FullKD is the ceiling.
 
-use rskd::coordinator::trainer::SparseVariant;
-use rskd::coordinator::{pct_ce_to_fullkd, CacheKind, StudentMethod};
+use rskd::coordinator::pct_ce_to_fullkd;
 use rskd::expt;
 use rskd::report::Report;
 
 fn main() {
-    let Some(pipe) = expt::prepare_small("table1") else { return };
-    let (cache, _) = pipe.build_cache(CacheKind::TopK, "t1", 1).unwrap();
+    let Some(mut pipe) = expt::prepare_small("table1") else { return };
 
     let mut report = Report::new("table1_topk", "Vanilla Top-K KD (paper Table 1)");
     let mut rows = Vec::new();
 
-    let (_, _, ev_ce) = pipe.run_student(&StudentMethod::Ce, None, 3).unwrap();
-    let (_, _, ev_fk) = pipe
-        .run_student(&StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None, 3)
-        .unwrap();
+    let (_, _, ev_ce) = pipe.run_spec(&expt::spec("ce"), 3).unwrap();
+    let (_, _, ev_fk) = pipe.run_spec(&expt::spec("fullkd"), 3).unwrap();
 
     rows.push(vec!["CE".into(), format!("{:.3}", ev_ce.lm_loss), "0%".into(),
                    format!("{:.1}", ev_ce.ece_pct)]);
+    // every k shares the one Top-K cache via the pipeline's registry
     for k in [3usize, 5, 12, 25, 50] {
-        let (_, _, ev) = pipe.run_student(&expt::topk(k), Some(&cache), 3).unwrap();
+        let (_, _, ev) = pipe.run_spec(&expt::spec(&format!("topk:k={k}")), 3).unwrap();
         rows.push(vec![
             format!("{k}"),
             format!("{:.3}", ev.lm_loss),
@@ -31,12 +28,7 @@ fn main() {
         ]);
     }
     // the paper's *50 row: Top-p 0.98 capped at K=50
-    let topp = StudentMethod::Sparse {
-        variant: SparseVariant::TopP { p: 0.98, k: 50 },
-        alpha: 0.0,
-        adaptive: None,
-    };
-    let (_, _, ev) = pipe.run_student(&topp, Some(&cache), 3).unwrap();
+    let (_, _, ev) = pipe.run_spec(&expt::spec("topp:p=0.98,k=50"), 3).unwrap();
     rows.push(vec![
         "*50 (top-p .98)".into(),
         format!("{:.3}", ev.lm_loss),

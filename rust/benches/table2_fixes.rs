@@ -3,23 +3,17 @@
 //! anchors. Expectation: smoothing fixes ECE but hurts loss; ghost improves
 //! both; naive fix approaches FullKD as K grows.
 
-use rskd::coordinator::trainer::SparseVariant;
-use rskd::coordinator::{pct_ce_to_fullkd, CacheKind, StudentMethod};
+use rskd::coordinator::pct_ce_to_fullkd;
 use rskd::expt;
 use rskd::report::{Report, METRIC_HEADER};
 
-fn sparse(variant: SparseVariant) -> StudentMethod {
-    StudentMethod::Sparse { variant, alpha: 0.0, adaptive: None }
-}
-
 fn main() {
-    let Some(pipe) = expt::prepare_small("table2") else { return };
-    let (cache, _) = pipe.build_cache(CacheKind::TopK, "t2", 1).unwrap();
+    let Some(mut pipe) = expt::prepare_small("table2") else { return };
 
     let mut report = Report::new("table2_fixes", "Naive fixes for Top-K KD (paper Table 2)");
-    let (_, _, ev_ce, z_ce) = expt::run_with_zero_shot(&pipe, &StudentMethod::Ce, None, 3).unwrap();
-    let (_, _, ev_fk, z_fk) = expt::run_with_zero_shot(
-        &pipe, &StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None, 3).unwrap();
+    let (_, _, ev_ce, z_ce) = expt::run_with_zero_shot(&mut pipe, &expt::spec("ce"), 3).unwrap();
+    let (_, _, ev_fk, z_fk) =
+        expt::run_with_zero_shot(&mut pipe, &expt::spec("fullkd"), 3).unwrap();
 
     let mut rows = Vec::new();
     let mut push = |name: String, ev: &rskd::coordinator::EvalResult, z: f64,
@@ -35,16 +29,17 @@ fn main() {
     };
     push("CE".into(), &ev_ce, z_ce, &mut rows);
 
-    for (name, variant) in [
-        ("Smoothing 50", SparseVariant::Smoothing { k: 50 }),
-        ("Ghost Token 50", SparseVariant::GhostToken { k: 50 }),
-        ("NaiveFix 1", SparseVariant::NaiveFix { k: 1 }),
-        ("NaiveFix 5", SparseVariant::NaiveFix { k: 5 }),
-        ("NaiveFix 10", SparseVariant::NaiveFix { k: 10 }),
-        ("NaiveFix 20", SparseVariant::NaiveFix { k: 20 }),
-        ("NaiveFix 50", SparseVariant::NaiveFix { k: 50 }),
+    // every fix shares the one Top-K cache (same cache plan, memoized)
+    for (name, s) in [
+        ("Smoothing 50", "smooth:k=50"),
+        ("Ghost Token 50", "ghost:k=50"),
+        ("NaiveFix 1", "naive:k=1"),
+        ("NaiveFix 5", "naive:k=5"),
+        ("NaiveFix 10", "naive:k=10"),
+        ("NaiveFix 20", "naive:k=20"),
+        ("NaiveFix 50", "naive:k=50"),
     ] {
-        let (_, _, ev, z) = expt::run_with_zero_shot(&pipe, &sparse(variant), Some(&cache), 3).unwrap();
+        let (_, _, ev, z) = expt::run_with_zero_shot(&mut pipe, &expt::spec(s), 3).unwrap();
         push(name.into(), &ev, z, &mut rows);
     }
     push("FullKD".into(), &ev_fk, z_fk, &mut rows);

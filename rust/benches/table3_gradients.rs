@@ -4,27 +4,32 @@
 //! ~12 tokens shows a few degrees and norm ratio ~1; Top-K is tens of
 //! degrees with inflated norms.
 
-use rskd::coordinator::trainer::{assemble_sparse_block, SparseVariant};
-use rskd::coordinator::{CacheKind, StudentMethod};
+use rskd::coordinator::assemble_sparse_block;
 use rskd::expt;
 use rskd::metrics::gradsim::grad_similarity;
 use rskd::report::Report;
 use rskd::runtime::HostTensor;
+use rskd::spec::{DistillSpec, Objective};
+
+/// The sparse variant a spec string names (these presets are all sparse).
+fn variant_of(spec: &DistillSpec) -> rskd::spec::Variant {
+    match spec.objective {
+        Objective::Sparse { variant, .. } => variant,
+        _ => panic!("table3 cases are sparse specs"),
+    }
+}
 
 fn main() {
-    let Some(pipe) = expt::prepare_small("table3") else { return };
+    let Some(mut pipe) = expt::prepare_small("table3") else { return };
     let m = pipe.engine.manifest();
     let (b, s, v, k_slots) = (m.batch, m.seq, m.vocab, m.k_slots);
 
     // FullKD-trained checkpoint (paper: "a 300M model trained with FullKD")
-    let (student, _, _) = pipe
-        .run_student(&StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None, 3)
-        .unwrap();
+    let (student, _, _) = pipe.run_spec(&expt::spec("fullkd"), 3).unwrap();
 
-    let (tk_cache, _) = pipe.build_cache(CacheKind::TopK, "t3-tk", 1).unwrap();
-    let (rs_cache, rs_stats) = pipe
-        .build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "t3-rs", 2)
-        .unwrap();
+    // the registry hands back one shared Top-K cache and one RS-12 cache
+    let tk = pipe.ensure_cache(&expt::spec("topk:k=12")).unwrap().unwrap();
+    let rs = pipe.ensure_cache(&expt::spec("rs:rounds=12")).unwrap().unwrap();
 
     // one global batch, stream-ordered
     let mut loader = pipe.packed_loader(11, false, 0);
@@ -52,18 +57,19 @@ fn main() {
 
     let mut report = Report::new("table3_gradients", "Sparse-KD gradients vs FullKD (paper Table 3)");
     let mut rows = Vec::new();
-    let cases: Vec<(String, &rskd::cache::CacheReader, SparseVariant)> = vec![
-        ("Top-K 12".into(), &tk_cache, SparseVariant::TopK { k: 12, normalize: false }),
-        ("Top-K 50".into(), &tk_cache, SparseVariant::TopK { k: 50, normalize: false }),
-        ("Top-K 64".into(), &tk_cache, SparseVariant::TopK { k: 64, normalize: false }),
+    let cases: Vec<(String, &rskd::coordinator::CacheHandle, DistillSpec)> = vec![
+        ("Top-K 12".into(), &tk, expt::spec("topk:k=12")),
+        ("Top-K 50".into(), &tk, expt::spec("topk:k=50")),
+        ("Top-K 64".into(), &tk, expt::spec("topk:k=64")),
         (
-            format!("RS ({:.1} uniq)", rs_stats.avg_unique_tokens),
-            &rs_cache,
-            SparseVariant::Rs,
+            format!("RS ({:.1} uniq)", rs.stats.avg_unique_tokens),
+            &rs,
+            expt::spec("rs:rounds=12"),
         ),
     ];
-    for (name, cache, variant) in cases {
-        let blk = assemble_sparse_block(cache, &batch, v, k_slots, variant, None);
+    for (name, cache, spec) in cases {
+        let blk =
+            assemble_sparse_block(&cache.reader, &batch, v, k_slots, variant_of(&spec), None);
         let g = pipe
             .engine
             .call(

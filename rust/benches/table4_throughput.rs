@@ -3,17 +3,15 @@
 //! teacher). Expectation: RS-KD within ~10% of CE; FullKD pays the online
 //! teacher forward.
 
-use rskd::coordinator::{CacheKind, StudentMethod};
 use rskd::expt;
 use rskd::metrics::throughput::train_flops_per_token;
 use rskd::report::Report;
 
 fn main() {
-    let Some(pipe) = expt::prepare_small("table4") else { return };
+    let Some(mut pipe) = expt::prepare_small("table4") else { return };
     let m = pipe.engine.manifest();
     let p_student = m.role("student").unwrap().param_count as u64;
     let p_teacher = m.role("teacher").unwrap().param_count as u64;
-    let (cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 50, temp: 1.0 }, "t4", 1).unwrap();
 
     // warm up compiles so the timed runs measure steady-state throughput
     pipe.engine
@@ -26,15 +24,15 @@ fn main() {
         ])
         .unwrap();
 
-    let runs: Vec<(&str, StudentMethod, Option<&rskd::cache::CacheReader>, u64)> = vec![
-        ("CE", StudentMethod::Ce, None, 0),
-        ("Random Sampling", expt::rs(), Some(&cache), 0),
-        ("Full KD", StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None, 2 * p_teacher),
+    let runs: Vec<(&str, &str, u64)> = vec![
+        ("CE", "ce", 0),
+        ("Random Sampling", "rs:rounds=50", 0),
+        ("Full KD", "fullkd", 2 * p_teacher),
     ];
 
     let mut measured = Vec::new();
-    for (name, method, cache, teacher_flops) in runs {
-        let (_, tr, _) = pipe.run_student(&method, cache, 3).unwrap();
+    for (name, s, teacher_flops) in runs {
+        let (_, tr, _) = pipe.run_spec(&expt::spec(s), 3).unwrap();
         let fpt = train_flops_per_token(p_student, 0) + teacher_flops;
         measured.push((name, tr.tokens_per_sec, fpt as f64 * tr.tokens_per_sec));
     }

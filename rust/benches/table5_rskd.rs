@@ -2,26 +2,26 @@
 //! tokens, LM loss, ECE, speculative accept, 0-shot. Expectation: ~12 unique
 //! tokens already matches FullKD loss and calibration.
 
-use rskd::coordinator::{CacheKind, StudentMethod};
 use rskd::expt;
 use rskd::report::{Report, METRIC_HEADER};
 
 fn main() {
-    let Some(pipe) = expt::prepare_small("table5") else { return };
+    let Some(mut pipe) = expt::prepare_small("table5") else { return };
     let mut report = Report::new("table5_rskd", "Random Sampling KD sweep (paper Table 5)");
     let mut rows = Vec::new();
 
-    let (_, _, ev_ce, z_ce) = expt::run_with_zero_shot(&pipe, &StudentMethod::Ce, None, 3).unwrap();
+    let (_, _, ev_ce, z_ce) = expt::run_with_zero_shot(&mut pipe, &expt::spec("ce"), 3).unwrap();
     rows.push(vec!["CE".into(), format!("{:.3}", ev_ce.lm_loss), format!("{:.1}", ev_ce.ece_pct),
                    format!("{:.1}", ev_ce.spec_accept_pct), "-".into(), format!("{z_ce:.1}")]);
 
     for rounds in [2u32, 5, 12, 25, 50] {
-        let (cache, stats) = pipe
-            .build_cache(CacheKind::Rs { rounds, temp: 1.0 }, &format!("t5-{rounds}"), rounds as u64)
-            .unwrap();
-        let (_, _, ev, z) = expt::run_with_zero_shot(&pipe, &expt::rs(), Some(&cache), 3).unwrap();
+        let spec = expt::spec(&format!("rs:rounds={rounds}"));
+        report.meta(&format!("rs{rounds}"), spec.to_json());
+        // build (or fetch) this budget's cache up front for its stats column
+        let handle = pipe.ensure_cache(&spec).unwrap().unwrap();
+        let (_, _, ev, z) = expt::run_with_zero_shot(&mut pipe, &spec, 3).unwrap();
         rows.push(vec![
-            format!("{:.1}", stats.avg_unique_tokens),
+            format!("{:.1}", handle.stats.avg_unique_tokens),
             format!("{:.3}", ev.lm_loss),
             format!("{:.1}", ev.ece_pct),
             format!("{:.1}", ev.spec_accept_pct),
@@ -29,8 +29,8 @@ fn main() {
             format!("{z:.1}"),
         ]);
     }
-    let (_, _, ev_fk, z_fk) = expt::run_with_zero_shot(
-        &pipe, &StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None, 3).unwrap();
+    let (_, _, ev_fk, z_fk) =
+        expt::run_with_zero_shot(&mut pipe, &expt::spec("fullkd"), 3).unwrap();
     rows.push(vec!["FullKD".into(), format!("{:.3}", ev_fk.lm_loss), format!("{:.1}", ev_fk.ece_pct),
                    format!("{:.1}", ev_fk.spec_accept_pct), "-".into(), format!("{z_fk:.1}")]);
 

@@ -2,7 +2,7 @@
 //! — CE vs RS-KD (12 tokens) vs FullKD at 4x the standard step budget.
 //! Expectation: all three converge to similar LM loss; RS keeps calibration.
 
-use rskd::coordinator::{CacheKind, Pipeline, StudentMethod};
+use rskd::coordinator::Pipeline;
 use rskd::expt;
 use rskd::report::{Report, METRIC_HEADER};
 
@@ -13,17 +13,16 @@ fn main() {
     }
     let mut cfg = expt::config_for("artifacts/small", "table6");
     cfg.student_steps *= 3; // "longer training" regime
-    let pipe = Pipeline::prepare(cfg).unwrap();
-    let (cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "t6", 1).unwrap();
+    let mut pipe = Pipeline::prepare(cfg).unwrap();
 
     let mut report = Report::new("table6_long_train", "Longer training (paper Table 6)");
     let mut rows = Vec::new();
-    for (name, method, cache_ref) in [
-        ("CE", StudentMethod::Ce, None),
-        ("Ours (RS-12)", expt::rs(), Some(&cache)),
-        ("FullKD", StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None),
+    for (name, s) in [
+        ("CE", "ce"),
+        ("Ours (RS-12)", "rs:rounds=12"),
+        ("FullKD", "fullkd"),
     ] {
-        let (_, _, ev, z) = expt::run_with_zero_shot(&pipe, &method, cache_ref, 3).unwrap();
+        let (_, _, ev, z) = expt::run_with_zero_shot(&mut pipe, &expt::spec(s), 3).unwrap();
         rows.push(vec![
             name.to_string(),
             format!("{:.3}", ev.lm_loss),

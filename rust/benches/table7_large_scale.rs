@@ -3,8 +3,7 @@
 //! with 0-shot before and after instruction SFT. Requires
 //! `make artifacts-large`; falls back to the small config with a note.
 
-use rskd::coordinator::trainer::{AdaptiveLr, SparseVariant};
-use rskd::coordinator::{CacheKind, Pipeline, StudentMethod};
+use rskd::coordinator::Pipeline;
 use rskd::data::TextDataset;
 use rskd::expt;
 use rskd::report::Report;
@@ -20,34 +19,26 @@ fn main() {
         return;
     };
     let cfg = expt::config_for(dir, "table7");
-    let pipe = Pipeline::prepare(cfg).unwrap();
-    let (tk_cache, _) = pipe.build_cache(CacheKind::TopK, "t7-tk", 1).unwrap();
-    let (rs_cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "t7-rs", 2).unwrap();
+    let mut pipe = Pipeline::prepare(cfg).unwrap();
 
     // instruction SFT set in the corpus grammar (paper: Tulu)
     let ds = TextDataset::build(&pipe.cfg.corpus, pipe.engine.manifest().vocab, 4_000, 5);
     let sft_docs = TextDataset::build_sft_docs(&pipe.cfg.corpus, &ds.bpe, 60, 6);
 
-    let adaptive = Some(AdaptiveLr { ratio: 2.0, hard_frac: 0.5 });
-    let runs: Vec<(&str, StudentMethod, Option<&rskd::cache::CacheReader>)> = vec![
-        ("CE", StudentMethod::Ce, None),
-        ("Top-K 12",
-         StudentMethod::Sparse { variant: SparseVariant::TopK { k: 12, normalize: false }, alpha: 0.0, adaptive: None },
-         Some(&tk_cache)),
-        ("Top-K 50",
-         StudentMethod::Sparse { variant: SparseVariant::TopK { k: 50, normalize: false }, alpha: 0.0, adaptive: None },
-         Some(&tk_cache)),
-        ("Ours (12)", expt::rs(), Some(&rs_cache)),
-        ("Ours (12)+",
-         StudentMethod::Sparse { variant: SparseVariant::Rs, alpha: 0.1, adaptive },
-         Some(&rs_cache)),
-        ("FullKD", StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None),
+    let runs: Vec<(&str, &str)> = vec![
+        ("CE", "ce"),
+        ("Top-K 12", "topk:k=12"),
+        ("Top-K 50", "topk:k=50"),
+        ("Ours (12)", "rs:rounds=12"),
+        ("Ours (12)+", "rs:rounds=12,alpha=0.1,adapt=2@0.5"),
+        ("FullKD", "fullkd"),
     ];
 
     let mut report = Report::new("table7_large_scale", format!("Large-scale sparse KD ({tag}) — paper Table 7").as_str());
     let mut rows = Vec::new();
-    for (name, method, cache) in runs {
-        let (mut student, _, ev, z) = expt::run_with_zero_shot(&pipe, &method, cache, 3).unwrap();
+    for (name, s) in runs {
+        let (mut student, _, ev, z) =
+            expt::run_with_zero_shot(&mut pipe, &expt::spec(s), 3).unwrap();
         // IF SFT: fine-tune on instructions, re-score
         student.reset_optimizer();
         pipe.continue_ce(&mut student, &sft_docs, 25, 2e-5).unwrap();

@@ -3,8 +3,6 @@
 //! offline we use the teacher as judge on five synthetic instruction
 //! datasets (DESIGN.md §4 substitution). Expectation: RS-KD wins the average.
 
-use rskd::coordinator::trainer::SparseVariant;
-use rskd::coordinator::{CacheKind, StudentMethod};
 use rskd::data::TextDataset;
 use rskd::evalsuite::judge_scores;
 use rskd::expt;
@@ -12,10 +10,8 @@ use rskd::report::Report;
 use rskd::util::rng::Pcg;
 
 fn main() {
-    let Some(pipe) = expt::prepare_small("table8") else { return };
+    let Some(mut pipe) = expt::prepare_small("table8") else { return };
     let m = pipe.engine.manifest();
-    let (tk_cache, _) = pipe.build_cache(CacheKind::TopK, "t8-tk", 1).unwrap();
-    let (rs_cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "t8-rs", 2).unwrap();
 
     // five synthetic instruction datasets (stand-ins for Dolly/SelfInst/...)
     let ds = TextDataset::build(&pipe.cfg.corpus, m.vocab, 4_000, 21);
@@ -38,22 +34,18 @@ fn main() {
         })
         .collect();
 
-    let runs: Vec<(&str, StudentMethod, Option<&rskd::cache::CacheReader>)> = vec![
-        ("CE", StudentMethod::Ce, None),
-        ("Top-K 12",
-         StudentMethod::Sparse { variant: SparseVariant::TopK { k: 12, normalize: false }, alpha: 0.0, adaptive: None },
-         Some(&tk_cache)),
-        ("Top-K 50",
-         StudentMethod::Sparse { variant: SparseVariant::TopK { k: 50, normalize: false }, alpha: 0.0, adaptive: None },
-         Some(&tk_cache)),
-        ("Ours 12", expt::rs(), Some(&rs_cache)),
-        ("FullKD", StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None),
+    let runs: Vec<(&str, &str)> = vec![
+        ("CE", "ce"),
+        ("Top-K 12", "topk:k=12"),
+        ("Top-K 50", "topk:k=50"),
+        ("Ours 12", "rs:rounds=12"),
+        ("FullKD", "fullkd"),
     ];
 
     let mut report = Report::new("table8_judge", "LLM-as-judge generative eval (paper Table 8)");
     let mut per_method = Vec::new();
-    for (name, method, cache) in runs {
-        let (mut student, _, _) = pipe.run_student(&method, cache, 3).unwrap();
+    for (name, s) in runs {
+        let (mut student, _, _) = pipe.run_spec(&expt::spec(s), 3).unwrap();
         // brief SFT before generation (the paper judges instruction-tuned models)
         student.reset_optimizer();
         let sft_docs = TextDataset::build_sft_docs(&pipe.cfg.corpus, &ds.bpe, 40, 9);

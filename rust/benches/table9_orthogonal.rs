@@ -2,19 +2,16 @@
 //! RS-KD, reported as '% CE to FullKD'. Expectation: mild CE mixing + 1.5-2x
 //! hard-token LR pushes RS-KD past FullKD (>100%).
 
-use rskd::coordinator::trainer::{AdaptiveLr, SparseVariant};
-use rskd::coordinator::{pct_ce_to_fullkd, CacheKind, StudentMethod};
+use rskd::coordinator::pct_ce_to_fullkd;
 use rskd::expt;
 use rskd::report::Report;
+use rskd::spec::{AdaptiveLr, DistillSpec};
 
 fn main() {
-    let Some(pipe) = expt::prepare_small("table9") else { return };
-    let (cache, _) = pipe.build_cache(CacheKind::Rs { rounds: 12, temp: 1.0 }, "t9", 1).unwrap();
+    let Some(mut pipe) = expt::prepare_small("table9") else { return };
 
-    let (_, _, ev_ce) = pipe.run_student(&rskd::coordinator::StudentMethod::Ce, None, 3).unwrap();
-    let (_, _, ev_fk) = pipe
-        .run_student(&StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None, 3)
-        .unwrap();
+    let (_, _, ev_ce) = pipe.run_spec(&expt::spec("ce"), 3).unwrap();
+    let (_, _, ev_fk) = pipe.run_spec(&expt::spec("fullkd"), 3).unwrap();
 
     let alphas = [0.3f32, 0.2, 0.1, 0.0];
     let ratios = [1.0f32, 1.5, 2.0];
@@ -23,10 +20,13 @@ fn main() {
     for &ratio in &ratios {
         let mut row = vec![format!("LR {ratio}")];
         for &alpha in &alphas {
-            let adaptive =
-                (ratio > 1.0).then_some(AdaptiveLr { ratio, hard_frac: 0.5 });
-            let method = StudentMethod::Sparse { variant: SparseVariant::Rs, alpha, adaptive };
-            let (_, _, ev) = pipe.run_student(&method, Some(&cache), 3).unwrap();
+            // the grid cell as a spec: the builder helpers compose the same
+            // objects the `rs:rounds=12,alpha=..,adapt=..` grammar parses to
+            let mut spec = DistillSpec::rs(12).with_alpha(alpha);
+            if ratio > 1.0 {
+                spec = spec.with_adaptive(AdaptiveLr { ratio, hard_frac: 0.5 });
+            }
+            let (_, _, ev) = pipe.run_spec(&spec, 3).unwrap();
             row.push(format!(
                 "{:.0}",
                 pct_ce_to_fullkd(ev.lm_loss, ev_ce.lm_loss, ev_fk.lm_loss)

@@ -195,6 +195,11 @@ pub struct ShardMeta {
 pub struct CacheManifest {
     pub version: u32,
     pub codec: ProbCodec,
+    /// Canonical cache-kind string (`topk`, `rs:rounds=50,temp=1`) recorded
+    /// by the builder so readers can enforce spec/cache compatibility
+    /// (`spec::DistillSpec::check_cache`). Absent in caches written before
+    /// the kind was recorded; readers then fall back to codec inference.
+    pub kind: Option<String>,
     /// Total distinct positions across all shards.
     pub positions: u64,
     /// Total stored (id, prob) slots.
@@ -226,7 +231,7 @@ impl CacheManifest {
                 ])
             })
             .collect();
-        Json::obj(vec![
+        let mut pairs = vec![
             ("version", Json::num(self.version as f64)),
             ("codec", Json::num(self.codec.tag() as f64)),
             ("rounds", Json::num(self.rounds() as f64)),
@@ -234,7 +239,11 @@ impl CacheManifest {
             ("slots", Json::num(self.slots as f64)),
             ("bytes", Json::num(self.bytes as f64)),
             ("shards", Json::Arr(shards)),
-        ])
+        ];
+        if let Some(kind) = &self.kind {
+            pairs.push(("kind", Json::str(kind)));
+        }
+        Json::obj(pairs)
     }
 
     pub fn from_json(j: &Json) -> io::Result<CacheManifest> {
@@ -271,6 +280,7 @@ impl CacheManifest {
         Ok(CacheManifest {
             version,
             codec,
+            kind: j.get("kind").and_then(|v| v.as_str()).map(|s| s.to_string()),
             positions: num("positions")? as u64,
             slots: num("slots")? as u64,
             bytes: num("bytes")? as u64,
@@ -403,6 +413,7 @@ mod tests {
         let m = CacheManifest {
             version: FORMAT_VERSION,
             codec: ProbCodec::Count { rounds: 50 },
+            kind: Some("rs:rounds=50,temp=1".into()),
             positions: 100,
             slots: 4200,
             bytes: 12_625,
@@ -414,6 +425,7 @@ mod tests {
         let j = m.to_json();
         let back = CacheManifest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
         assert_eq!(back.codec, m.codec);
+        assert_eq!(back.kind.as_deref(), Some("rs:rounds=50,temp=1"));
         assert_eq!(back.positions, 100);
         // from_json sorts by start
         assert_eq!(back.shards[0].start, 0);
@@ -425,6 +437,7 @@ mod tests {
         let mut m = CacheManifest {
             version: FORMAT_VERSION,
             codec: ProbCodec::Ratio,
+            kind: None,
             positions: 0,
             slots: 0,
             bytes: 0,

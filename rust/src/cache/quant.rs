@@ -76,7 +76,18 @@ pub fn encode(ids: &[u32], probs: &[f32], codec: ProbCodec) -> (Vec<u32>, Vec<u8
         }
         ProbCodec::Ratio => {
             let mut order: Vec<usize> = (0..ids.len()).collect();
-            order.sort_by(|&a, &b| probs[b].partial_cmp(&probs[a]).unwrap());
+            // NaN ranks as -inf: it must neither panic the writer thread
+            // (old partial_cmp) nor sort to the head, where the ratio
+            // chain would poison every later slot of the record (same
+            // hardening as sampling::topk_indices)
+            let key = |i: usize| {
+                if probs[i].is_nan() {
+                    f32::NEG_INFINITY
+                } else {
+                    probs[i]
+                }
+            };
+            order.sort_by(|&a, &b| key(b).total_cmp(&key(a)));
             let sorted_ids: Vec<u32> = order.iter().map(|&i| ids[i]).collect();
             let mut codes = Vec::with_capacity(ids.len());
             let mut prev = 1.0f32;

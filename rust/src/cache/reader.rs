@@ -56,6 +56,9 @@ pub struct CacheReader {
     pub bytes: u64,
     /// cache directory format version: 2 (index.json) or 1 (cache.json)
     pub version: u32,
+    /// canonical cache-kind string from the manifest (`topk`,
+    /// `rs:rounds=50,temp=1`); `None` for legacy/untagged directories
+    pub kind: Option<String>,
 }
 
 impl CacheReader {
@@ -67,16 +70,20 @@ impl CacheReader {
     /// Open a cache directory, reading metadata only. `capacity` bounds how
     /// many decoded shards stay resident at once (min 1).
     pub fn open_with_capacity(dir: &Path, capacity: usize) -> std::io::Result<CacheReader> {
-        let (version, positions, rounds, bytes, mut entries) = if dir.join(INDEX_FILE).exists() {
+        let (version, positions, rounds, bytes, kind, mut entries) = if dir
+            .join(INDEX_FILE)
+            .exists()
+        {
             let m = CacheManifest::load(dir)?;
             let entries = m
                 .shards
                 .iter()
                 .map(|s| ShardEntry { path: dir.join(&s.file), start: s.start, count: s.count })
                 .collect();
-            (m.version, m.positions, m.rounds(), m.bytes, entries)
+            (m.version, m.positions, m.rounds(), m.bytes, m.kind, entries)
         } else if dir.join(LEGACY_META_FILE).exists() {
-            Self::open_legacy_v1(dir)?
+            let (version, positions, rounds, bytes, entries) = Self::open_legacy_v1(dir)?;
+            (version, positions, rounds, bytes, None, entries)
         } else {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::NotFound,
@@ -99,7 +106,34 @@ impl CacheReader {
             rounds,
             bytes,
             version,
+            kind,
         })
+    }
+
+    /// The typed kind of targets this cache holds, for spec compatibility
+    /// checks. Prefers the manifest's recorded kind string — an unparseable
+    /// recorded tag is an *error* (an unknown layout must not be trained on
+    /// unchecked). Untagged directories (legacy v1, or v2 written before
+    /// kinds were recorded) fall back to codec inference: a count codec
+    /// (`rounds > 0`) means RS draws at temperature 1, anything else is
+    /// assumed to be a Top-K head. The ratio codec is genuinely ambiguous:
+    /// pre-tag builds of RS caches at temp != 1 (e.g. old `table10` bench
+    /// output dirs) are misread as Top-K under this inference. Those dirs
+    /// are transient per-run bench artifacts; rebuild (the registry always
+    /// does) or tag any such cache you intend to keep serving.
+    pub fn cache_kind(&self) -> Result<crate::spec::CacheKind, crate::spec::SpecError> {
+        match &self.kind {
+            Some(k) => crate::spec::CacheKind::parse(k).map_err(|_| {
+                crate::spec::SpecError::Parse {
+                    input: k.clone(),
+                    reason: "unrecognized cache kind tag in the cache manifest".into(),
+                }
+            }),
+            None if self.rounds > 0 => {
+                Ok(crate::spec::CacheKind::Rs { rounds: self.rounds, temp: 1.0 })
+            }
+            None => Ok(crate::spec::CacheKind::TopK),
+        }
     }
 
     /// Legacy v1 directory: totals live in `cache.json`, shard ranges are
@@ -353,6 +387,55 @@ mod tests {
         }
         assert!(r.shard_loads() > 6, "cycling 6 shards through capacity 2 must evict");
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn cache_kind_recorded_and_inferred() {
+        use crate::spec::CacheKind;
+        // tagged: the manifest's kind string wins
+        let dir = std::env::temp_dir().join(format!("rskd-kind-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = CacheWriter::create_with_kind(
+            &dir,
+            ProbCodec::Ratio,
+            16,
+            8,
+            Some("rs:rounds=50,temp=0.8".into()),
+        )
+        .unwrap();
+        assert!(w.push(0, SparseTarget { ids: vec![1], probs: vec![0.5] }));
+        w.finish().unwrap();
+        let r = CacheReader::open(&dir).unwrap();
+        assert_eq!(r.cache_kind().unwrap(), CacheKind::Rs { rounds: 50, temp: 0.8 });
+        let _ = std::fs::remove_dir_all(&dir);
+
+        // untagged count codec: inferred as RS at temp 1
+        let dir2 = std::env::temp_dir().join(format!("rskd-kind2-test-{}", std::process::id()));
+        build_cache(&dir2, 10);
+        let r = CacheReader::open(&dir2).unwrap();
+        assert_eq!(r.kind, None);
+        assert_eq!(r.cache_kind().unwrap(), CacheKind::Rs { rounds: 50, temp: 1.0 });
+        let _ = std::fs::remove_dir_all(&dir2);
+
+        // untagged ratio codec: inferred as a Top-K head
+        let dir3 = std::env::temp_dir().join(format!("rskd-kind3-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir3);
+        let w = CacheWriter::create(&dir3, ProbCodec::Ratio, 16, 8).unwrap();
+        assert!(w.push(0, SparseTarget { ids: vec![1], probs: vec![0.5] }));
+        w.finish().unwrap();
+        assert_eq!(CacheReader::open(&dir3).unwrap().cache_kind().unwrap(), CacheKind::TopK);
+        let _ = std::fs::remove_dir_all(&dir3);
+
+        // a recorded-but-unparseable tag is an error, not a silent skip
+        let dir4 = std::env::temp_dir().join(format!("rskd-kind4-test-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir4);
+        let w = CacheWriter::create_with_kind(&dir4, ProbCodec::Ratio, 16, 8,
+                                              Some("hologram:q=3".into())).unwrap();
+        assert!(w.push(0, SparseTarget { ids: vec![1], probs: vec![0.5] }));
+        w.finish().unwrap();
+        let err = CacheReader::open(&dir4).unwrap().cache_kind().unwrap_err();
+        assert!(err.to_string().contains("hologram"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir4);
     }
 
     #[test]

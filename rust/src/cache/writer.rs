@@ -138,6 +138,19 @@ impl CacheWriter {
         positions_per_shard: usize,
         ring_cap: usize,
     ) -> std::io::Result<CacheWriter> {
+        CacheWriter::create_with_kind(dir, codec, positions_per_shard, ring_cap, None)
+    }
+
+    /// Like [`CacheWriter::create`], additionally recording the canonical
+    /// cache-kind string (`topk`, `rs:rounds=50,temp=1`) in the manifest so
+    /// readers can enforce spec/cache compatibility.
+    pub fn create_with_kind(
+        dir: &Path,
+        codec: ProbCodec,
+        positions_per_shard: usize,
+        ring_cap: usize,
+        kind: Option<String>,
+    ) -> std::io::Result<CacheWriter> {
         assert!(positions_per_shard > 0, "positions_per_shard must be positive");
         std::fs::create_dir_all(dir)?;
         let ring = RingBuffer::new(ring_cap);
@@ -145,7 +158,7 @@ impl CacheWriter {
         let dir: PathBuf = dir.to_path_buf();
         let pps = positions_per_shard;
         let handle = std::thread::spawn(move || -> std::io::Result<CacheStats> {
-            let result = write_loop(&ring2, codec, pps, &dir);
+            let result = write_loop(&ring2, codec, pps, &dir, kind);
             // close on *every* exit path: an I/O error must unblock any
             // producer parked on a full ring (push then returns false) so
             // `finish` can report the error instead of deadlocking
@@ -191,6 +204,7 @@ fn write_loop(
     codec: ProbCodec,
     pps: usize,
     dir: &Path,
+    kind: Option<String>,
 ) -> std::io::Result<CacheStats> {
     let mut stats = CacheStats::default();
     let mut pending: HashMap<u64, Pending> = HashMap::new();
@@ -255,6 +269,7 @@ fn write_loop(
     CacheManifest {
         version: FORMAT_VERSION,
         codec,
+        kind,
         positions: stats.positions,
         slots: stats.slots,
         bytes: stats.bytes,
@@ -359,6 +374,31 @@ mod tests {
         assert_eq!(m.shards[2].start, 32);
         assert_eq!(m.shards[2].count, 8);
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn writer_records_kind_in_manifest() {
+        let dir = tdir("writer-kind");
+        let w = CacheWriter::create_with_kind(
+            &dir,
+            ProbCodec::Count { rounds: 50 },
+            16,
+            8,
+            Some("rs:rounds=50,temp=1".into()),
+        )
+        .unwrap();
+        assert!(w.push(0, SparseTarget { ids: vec![1], probs: vec![0.5] }));
+        w.finish().unwrap();
+        let m = CacheManifest::load(&dir).unwrap();
+        assert_eq!(m.kind.as_deref(), Some("rs:rounds=50,temp=1"));
+        // the plain constructor records no kind (legacy-compatible manifests)
+        let dir2 = tdir("writer-nokind");
+        let w = CacheWriter::create(&dir2, ProbCodec::Ratio, 16, 8).unwrap();
+        assert!(w.push(0, SparseTarget { ids: vec![1], probs: vec![0.5] }));
+        w.finish().unwrap();
+        assert_eq!(CacheManifest::load(&dir2).unwrap().kind, None);
+        let _ = std::fs::remove_dir_all(&dir);
+        let _ = std::fs::remove_dir_all(&dir2);
     }
 
     #[test]

@@ -2,6 +2,11 @@
 //! sparsify every position, quantize, and write shards through the async
 //! ring-buffer writer (paper Figure 1 + Appendix D).
 //!
+//! What to build is a [`CacheKind`], derived from a `DistillSpec` via
+//! `cache_plan()` — this module no longer owns a taxonomy of its own. The
+//! kind (and its codec) is recorded in the cache's `index.json`, so readers
+//! can enforce spec/cache compatibility before training starts.
+//!
 //! Sparsification runs on-device via the AOT graphs: `sample_topk`
 //! (jax.lax.top_k) or `sample_rs` (the L1 Pallas importance sampler, fed
 //! rust-generated uniforms so the draw is deterministic in the seed).
@@ -18,36 +23,12 @@ use std::sync::Arc;
 
 use anyhow::{ensure, Result};
 
-use crate::cache::{CacheStats, CacheWriter, ProbCodec, RingBuffer, SparseTarget};
+use crate::cache::{CacheStats, CacheWriter, RingBuffer, SparseTarget};
 use crate::data::loader::Loader;
 use crate::model::ModelState;
 use crate::runtime::{Engine, HostTensor};
+use crate::spec::CacheKind;
 use crate::util::rng::Pcg;
-
-#[derive(Clone, Copy, Debug)]
-pub enum CacheKind {
-    /// store the Top-`k_slots` head with ratio encoding (serves every Top-K
-    /// variant with k <= k_slots)
-    TopK,
-    /// Random Sampling KD draws: `rounds` importance samples at `temp`,
-    /// exact 7-bit count encoding when temp == 1
-    Rs { rounds: u32, temp: f32 },
-}
-
-impl CacheKind {
-    fn codec(self) -> ProbCodec {
-        match self {
-            CacheKind::TopK => ProbCodec::Ratio,
-            CacheKind::Rs { rounds, temp } => {
-                if (temp - 1.0).abs() < 1e-6 && rounds <= 128 {
-                    ProbCodec::Count { rounds }
-                } else {
-                    ProbCodec::Ratio
-                }
-            }
-        }
-    }
-}
 
 #[derive(Clone, Debug, Default)]
 pub struct BuildStats {
@@ -92,7 +73,8 @@ pub fn build_cache(
              re-export artifacts with a larger n_rounds or lower the draw"
         );
     }
-    let writer = CacheWriter::create(dir, kind.codec(), 4096, 1024)?;
+    let writer =
+        CacheWriter::create_with_kind(dir, kind.codec(), 4096, 1024, Some(kind.to_string()))?;
     let mut rng = Pcg::new(seed);
     let fwd = format!("fwd_{}", teacher.role);
 
@@ -262,15 +244,5 @@ mod tests {
         let vals = [0.5, 0.0, 0.2];
         let t = merge_slots(&ids, &vals, CacheKind::TopK);
         assert_eq!(t.ids, vec![3, 5]);
-    }
-
-    #[test]
-    fn codec_choice() {
-        assert_eq!(CacheKind::TopK.codec(), ProbCodec::Ratio);
-        assert_eq!(
-            CacheKind::Rs { rounds: 50, temp: 1.0 }.codec(),
-            ProbCodec::Count { rounds: 50 }
-        );
-        assert_eq!(CacheKind::Rs { rounds: 50, temp: 0.8 }.codec(), ProbCodec::Ratio);
     }
 }

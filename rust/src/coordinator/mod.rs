@@ -9,6 +9,10 @@
 //!    FullKD/dense ablations), covering every sparse-KD variant.
 //! 4. `evaluator` — LM loss, ECE, speculative acceptance, agreement.
 //! 5. `pipeline` — end-to-end experiment presets used by the benches.
+//!
+//! What to run is described by `spec::DistillSpec` (the single method
+//! taxonomy); `Pipeline::run_spec` resolves a spec's cache plan through a
+//! memoized registry and trains a student under it.
 
 pub mod cachebuild;
 pub mod evaluator;
@@ -17,8 +21,10 @@ pub mod schedule;
 pub mod teacher;
 pub mod trainer;
 
-pub use cachebuild::{build_cache, CacheKind};
+pub use cachebuild::{build_cache, BuildStats};
 pub use evaluator::{evaluate, EvalResult};
-pub use pipeline::{pct_ce_to_fullkd, Pipeline, PipelineConfig};
+pub use pipeline::{pct_ce_to_fullkd, CacheHandle, Pipeline, PipelineConfig};
 pub use schedule::LrSchedule;
-pub use trainer::{train_student, AdaptiveLr, StudentMethod, TrainResult};
+pub use trainer::{assemble_sparse_block, train_student, TrainResult};
+
+pub use crate::spec::CacheKind;

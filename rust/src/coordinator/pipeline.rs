@@ -1,23 +1,32 @@
 //! End-to-end experiment pipeline: corpus -> tokenizer -> packing -> teacher
 //! pre-training -> cache build -> student training -> evaluation. The bench
 //! targets compose these presets to regenerate each paper table/figure.
+//!
+//! Experiments are described by [`DistillSpec`]: [`Pipeline::run_spec`]
+//! resolves the spec's cache plan, builds (or reuses — the registry memoizes
+//! by plan tag) the cache it needs, and trains + evaluates a fresh student.
+//! Incompatible spec/cache pairs fail with a typed [`SpecError`] before any
+//! training step runs.
 
+use std::collections::HashMap;
 use std::path::PathBuf;
+use std::sync::Arc;
 
 use anyhow::Result;
 
 use crate::cache::CacheReader;
-use crate::coordinator::cachebuild::{build_cache, BuildStats, CacheKind};
+use crate::coordinator::cachebuild::{build_cache, BuildStats};
 use crate::coordinator::evaluator::{evaluate, EvalResult};
 use crate::coordinator::schedule::LrSchedule;
 use crate::coordinator::teacher;
-use crate::coordinator::trainer::{train_student, StudentMethod, TrainResult};
+use crate::coordinator::trainer::{train_student, TrainResult};
 use crate::data::corpus::CorpusConfig;
 use crate::data::loader::Loader;
 use crate::data::packing::pack;
 use crate::data::TextDataset;
 use crate::model::ModelState;
 use crate::runtime::Engine;
+use crate::spec::{CacheKind, DistillSpec, Objective, SpecError, Variant};
 
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -71,8 +80,17 @@ impl PipelineConfig {
     }
 }
 
+/// One memoized cache build: lazy LRU reader + build-time stats.
+/// `Arc`, not `Rc`: `CacheReader` is deliberately `Sync` (Mutex-guarded
+/// LRU), so handles can cross threads for parallel student runs.
+#[derive(Clone)]
+pub struct CacheHandle {
+    pub reader: Arc<CacheReader>,
+    pub stats: BuildStats,
+}
+
 /// A prepared pipeline: engine + data + pre-trained teacher, ready to train
-/// students under different methods (teacher work is shared across methods —
+/// students under different specs (teacher work is shared across specs —
 /// exactly the cost structure the paper's offline caching exploits).
 pub struct Pipeline {
     pub engine: Engine,
@@ -82,6 +100,11 @@ pub struct Pipeline {
     /// training documents (token sequences) — repacked per shuffle seed
     train_docs: Vec<Vec<u32>>,
     eval_seqs: Vec<crate::data::packing::Sequence>,
+    /// cache registry, keyed by `CachePlan::dir_tag()`
+    caches: HashMap<String, CacheHandle>,
+    /// bumped by `clear_caches` so rebuilds land in fresh directories and
+    /// previously handed-out lazy readers never see their shards rewritten
+    cache_gen: u32,
 }
 
 impl Pipeline {
@@ -101,7 +124,16 @@ impl Pipeline {
         let mut loader = Loader::new(teacher_seqs, m.batch, cfg.data_seed ^ 0x7EAC, true);
         let (teacher, teacher_losses) =
             teacher::pretrain(&engine, "teacher", &mut loader, cfg.teacher_steps, cfg.teacher_lr, 7)?;
-        Ok(Pipeline { engine, cfg, teacher, teacher_losses, train_docs: docs, eval_seqs })
+        Ok(Pipeline {
+            engine,
+            cfg,
+            teacher,
+            teacher_losses,
+            train_docs: docs,
+            eval_seqs,
+            caches: HashMap::new(),
+            cache_gen: 0,
+        })
     }
 
     /// Stream-ordered loader over the packing with `packing_seed` (the cache
@@ -127,8 +159,21 @@ impl Pipeline {
     }
 
     /// Change the student-side packing seed (Table 13 misalignment knob).
+    /// The cache registry is unaffected: caches are addressed in the
+    /// *teacher* packing's position space — misaligned reads are the point.
     pub fn set_student_packing_seed(&mut self, seed: u64) {
         self.cfg.student_shuffle_seed = seed;
+    }
+
+    /// Drop all memoized caches. Call after replacing `self.teacher`
+    /// (e.g. the Table 11 adaptation experiments): registry entries were
+    /// built by the previous teacher and would silently go stale. Rebuilds
+    /// after this land in fresh generation-suffixed directories, so any
+    /// still-alive `CacheHandle` from before keeps reading its own (old,
+    /// intact) shards rather than the new teacher's.
+    pub fn clear_caches(&mut self) {
+        self.caches.clear();
+        self.cache_gen += 1;
     }
 
     /// Continue CE training of an existing model (teacher adaptation /
@@ -151,6 +196,10 @@ impl Pipeline {
     /// packing's position space. The returned reader is lazy: shards decode
     /// on first touch and stay resident in a bounded LRU (see
     /// `cache::reader`), so handing it to several student runs is cheap.
+    /// Rebuilding a `tag` deletes and rewrites its directory — do not keep
+    /// using a reader from a previous build of the same tag. Most callers
+    /// want [`Pipeline::ensure_cache`], which memoizes and generation-
+    /// suffixes directories across `clear_caches`.
     pub fn build_cache(&self, kind: CacheKind, tag: &str, seed: u64) -> Result<(CacheReader, BuildStats)> {
         let dir = self.cfg.work_dir.join(format!("cache-{tag}"));
         let _ = std::fs::remove_dir_all(&dir);
@@ -159,13 +208,88 @@ impl Pipeline {
         Ok((CacheReader::open(&dir)?, stats))
     }
 
-    /// Train a fresh student with `method` and evaluate it.
+    /// The cache `spec` needs, building it on first use and reusing it for
+    /// every later spec with the same plan (all Top-K-family specs share one
+    /// Top-K cache; RS specs share per-(rounds, temp) caches). Returns
+    /// `None` for cache-free objectives.
+    pub fn ensure_cache(&mut self, spec: &DistillSpec) -> Result<Option<CacheHandle>> {
+        // validate before building: a spec the graphs cannot serve must not
+        // cost a full teacher-forward cache pass before erroring
+        self.preflight(spec)?;
+        let Some(plan) = spec.cache_plan() else { return Ok(None) };
+        let tag = plan.dir_tag();
+        if let Some(h) = self.caches.get(&tag) {
+            return Ok(Some(h.clone()));
+        }
+        // generation-suffixed dirs after clear_caches: old handles keep
+        // reading their own shards, never a rebuilt directory
+        let dir_tag = if self.cache_gen == 0 {
+            tag.clone()
+        } else {
+            format!("{tag}-g{}", self.cache_gen)
+        };
+        let (reader, stats) = self.build_cache(plan.kind, &dir_tag, seed_for_tag(&tag))?;
+        let handle = CacheHandle { reader: Arc::new(reader), stats };
+        self.caches.insert(tag, handle.clone());
+        Ok(Some(handle))
+    }
+
+    /// Typed pre-flight validation against the loaded AOT graphs: a spec
+    /// whose targets need more sparse slots per token than the graphs
+    /// provide (`k_slots`; additionally capped by the sampler's `n_rounds`
+    /// for RS draws) would be silently truncated — reject it up front,
+    /// before any cache build or training step.
+    fn preflight(&self, spec: &DistillSpec) -> Result<()> {
+        if let Some(demand) = spec.slot_demand() {
+            let m = self.engine.manifest();
+            let is_rs =
+                matches!(spec.objective, Objective::Sparse { variant: Variant::Rs { .. }, .. });
+            let budget = if is_rs { m.k_slots.min(m.n_rounds) } else { m.k_slots };
+            if demand > budget {
+                return Err(SpecError::SlotOverflow {
+                    spec: spec.to_string(),
+                    demand,
+                    k_slots: budget,
+                }
+                .into());
+            }
+        }
+        Ok(())
+    }
+
+    /// Train a fresh student under `spec` and evaluate it, resolving the
+    /// cache the spec requires through the memoized registry. Invalid specs
+    /// fail typed *before* the (expensive) cache build runs.
+    pub fn run_spec(
+        &mut self,
+        spec: &DistillSpec,
+        seed: i32,
+    ) -> Result<(ModelState, TrainResult, EvalResult)> {
+        // preflight runs inside both ensure_cache and run_student
+        let handle = self.ensure_cache(spec)?;
+        self.run_student(spec, handle.as_ref().map(|h| h.reader.as_ref()), seed)
+    }
+
+    /// Train a fresh student under `spec` with an explicit cache (or none)
+    /// and evaluate it. Fails with a typed [`SpecError`] *before* training
+    /// starts when the spec needs a cache that is missing or of a kind that
+    /// cannot serve it (e.g. a Top-K variant over an RS cache), when the
+    /// cache's recorded kind tag is unrecognizable, or when the spec asks
+    /// for more sparse slots per token than the AOT graphs provide (which
+    /// would silently truncate targets).
     pub fn run_student(
         &self,
-        method: &StudentMethod,
+        spec: &DistillSpec,
         cache: Option<&CacheReader>,
         seed: i32,
     ) -> Result<(ModelState, TrainResult, EvalResult)> {
+        self.preflight(spec)?;
+        if spec.requires_cache() {
+            let Some(cache) = cache else {
+                return Err(SpecError::MissingCache { spec: spec.to_string() }.into());
+            };
+            spec.check_cache(cache.cache_kind()?)?;
+        }
         let mut student = ModelState::init(&self.engine, "student", seed)?;
         let mut loader = self.train_loader(self.cfg.student_shuffle_seed);
         let schedule = LrSchedule::paper_default(self.cfg.student_lr, self.cfg.student_steps);
@@ -175,7 +299,7 @@ impl Pipeline {
             &mut loader,
             self.cfg.student_steps,
             schedule,
-            method,
+            spec,
             cache,
             Some(&self.teacher),
         )?;
@@ -183,6 +307,17 @@ impl Pipeline {
                           self.cfg.eval_batches)?;
         Ok((student, tr, ev))
     }
+}
+
+/// Deterministic per-tag build seed (FNV-1a fold), so registry builds are
+/// reproducible without threading explicit seeds through every bench.
+fn seed_for_tag(tag: &str) -> u64 {
+    let mut h: u64 = 0xcbf2_9ce4_8422_2325;
+    for b in tag.bytes() {
+        h ^= b as u64;
+        h = h.wrapping_mul(0x0000_0100_0000_01B3);
+    }
+    h
 }
 
 /// The paper's '% CE to FullKD' gap metric (Table 1 caption).
@@ -199,5 +334,11 @@ mod tests {
         assert!((pct_ce_to_fullkd(2.81, 2.81, 2.75) - 0.0).abs() < 1e-9);
         assert!((pct_ce_to_fullkd(2.75, 2.81, 2.75) - 100.0).abs() < 1e-9);
         assert!(pct_ce_to_fullkd(2.9, 2.81, 2.75) < 0.0);
+    }
+
+    #[test]
+    fn tag_seeds_deterministic_and_distinct() {
+        assert_eq!(seed_for_tag("topk"), seed_for_tag("topk"));
+        assert_ne!(seed_for_tag("topk"), seed_for_tag("rs-r50-t1"));
     }
 }

@@ -1,70 +1,21 @@
-//! Student training stage: every sparse-KD variant the paper studies, driven
-//! from the quantized cache (offline path) or an online teacher forward
-//! (FullKD ceiling + dense-loss ablations).
+//! Student training stage: drives every [`DistillSpec`] objective — CE,
+//! online dense distillation (FullKD ceiling + dense-loss ablations), and
+//! offline sparse distillation from the quantized cache. Target
+//! reconstitution lives in `spec::reconstitute` (one engine for the cached
+//! and dense paths); this module only assembles tensor blocks and runs the
+//! training graphs.
 
-use anyhow::{bail, Result};
+use anyhow::Result;
 
-use crate::cache::{CacheReader, SparseTarget};
+use crate::cache::CacheReader;
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::loader::{Batch, Loader};
 use crate::metrics::throughput::ThroughputMeter;
 use crate::model::ModelState;
 use crate::runtime::{Engine, HostTensor};
-
-/// Table 9's adaptive easy/hard LR split: tokens whose cached teacher
-/// confidence in the ground truth is below the `hard_frac` percentile train
-/// at `ratio`x the LR of easy tokens; mean LR stays 1.
-#[derive(Clone, Copy, Debug)]
-pub struct AdaptiveLr {
-    pub ratio: f32,
-    pub hard_frac: f32,
-}
-
-#[derive(Clone, Debug)]
-pub enum StudentMethod {
-    /// plain CE (no teacher)
-    Ce,
-    /// online dense distillation; kind in {kld, rkl, frkl, mse, l1};
-    /// kld == FullKD
-    DenseOnline { kind: &'static str, alpha: f32 },
-    /// offline sparse distillation from a cache directory
-    Sparse {
-        variant: SparseVariant,
-        alpha: f32,
-        adaptive: Option<AdaptiveLr>,
-    },
-}
-
-/// How cached sparse targets are reconstituted per token (paper §2-§3).
-#[derive(Clone, Copy, Debug)]
-pub enum SparseVariant {
-    /// vanilla Top-K, optionally renormalized (paper always renormalizes
-    /// implicitly via the KLD gradient — `normalize` matches Fig 2a)
-    TopK { k: usize, normalize: bool },
-    /// Top-p nucleus with cap k
-    TopP { p: f32, k: usize },
-    /// Top-K + uniform residual smoothing (§3.1)
-    Smoothing { k: usize },
-    /// Top-K + ghost token (§3.2)
-    GhostToken { k: usize },
-    /// Top-K + residual on the ground truth (§3.3)
-    NaiveFix { k: usize },
-    /// Random Sampling KD (§3.4): use the cached draws as-is
-    Rs,
-}
-
-impl SparseVariant {
-    pub fn name(&self) -> String {
-        match self {
-            SparseVariant::TopK { k, .. } => format!("Top-K {k}"),
-            SparseVariant::TopP { p, k } => format!("Top-p {p}/{k}"),
-            SparseVariant::Smoothing { k } => format!("Smoothing {k}"),
-            SparseVariant::GhostToken { k } => format!("Ghost {k}"),
-            SparseVariant::NaiveFix { k } => format!("NaiveFix {k}"),
-            SparseVariant::Rs => "RS-KD".into(),
-        }
-    }
-}
+use crate::spec::{
+    adaptive_lr_scale, reconstitute, AdaptiveLr, DistillSpec, Objective, SpecError, Variant,
+};
 
 #[derive(Clone, Debug)]
 pub struct TrainResult {
@@ -73,82 +24,6 @@ pub struct TrainResult {
     pub tokens_per_sec: f64,
     pub steps: usize,
     pub diverged: bool,
-}
-
-/// Reconstitute one cached target according to `variant`. Returns
-/// (ids, vals, smooth_c, label_conf). `label_conf` = teacher confidence in
-/// the ground truth (drives AdaptiveLr).
-fn reconstitute(
-    cached: &SparseTarget,
-    label: u32,
-    vocab: usize,
-    variant: SparseVariant,
-) -> (Vec<u32>, Vec<f32>, f32, f32) {
-    // cached Top-K targets decode sorted descending (ratio codec); RS decode
-    // is id-sorted with weights summing to 1
-    let label_conf = cached
-        .ids
-        .iter()
-        .position(|&i| i == label)
-        .map(|j| cached.probs[j])
-        .unwrap_or(0.0);
-    match variant {
-        SparseVariant::Rs => (cached.ids.clone(), cached.probs.clone(), 0.0, label_conf),
-        SparseVariant::TopK { k, normalize } => {
-            let k = k.min(cached.ids.len());
-            let mut ids = cached.ids[..k].to_vec();
-            let mut vals = cached.probs[..k].to_vec();
-            if normalize {
-                let z: f32 = vals.iter().sum();
-                if z > 0.0 {
-                    vals.iter_mut().for_each(|v| *v /= z);
-                }
-            }
-            ids.shrink_to_fit();
-            (ids, vals, 0.0, label_conf)
-        }
-        SparseVariant::TopP { p, k } => {
-            let mut ids = Vec::new();
-            let mut vals = Vec::new();
-            let mut mass = 0.0f32;
-            for (i, (&id, &v)) in cached.ids.iter().zip(cached.probs.iter()).enumerate() {
-                if i >= k {
-                    break;
-                }
-                ids.push(id);
-                vals.push(v);
-                mass += v;
-                if mass >= p {
-                    break;
-                }
-            }
-            (ids, vals, 0.0, label_conf)
-        }
-        SparseVariant::Smoothing { k } => {
-            let k = k.min(cached.ids.len());
-            let ids = cached.ids[..k].to_vec();
-            let vals = cached.probs[..k].to_vec();
-            let residual = (1.0 - vals.iter().sum::<f32>()).max(0.0);
-            (ids, vals, residual / vocab as f32, label_conf)
-        }
-        SparseVariant::GhostToken { k } => {
-            let k = k.min(cached.ids.len());
-            (cached.ids[..k].to_vec(), cached.probs[..k].to_vec(), 0.0, label_conf)
-        }
-        SparseVariant::NaiveFix { k } => {
-            let k = k.min(cached.ids.len());
-            let mut ids = cached.ids[..k].to_vec();
-            let mut vals = cached.probs[..k].to_vec();
-            let residual = (1.0 - vals.iter().sum::<f32>()).max(0.0);
-            if let Some(j) = ids.iter().position(|&i| i == label) {
-                vals[j] += residual;
-            } else if ids.len() < k + 1 {
-                ids.push(label);
-                vals.push(residual);
-            }
-            (ids, vals, 0.0, label_conf)
-        }
-    }
 }
 
 /// Assemble the `train_sparse` tensor block for one batch from the cache.
@@ -165,7 +40,7 @@ pub fn assemble_sparse_block(
     batch: &Batch,
     vocab: usize,
     k_slots: usize,
-    variant: SparseVariant,
+    variant: Variant,
     adaptive: Option<AdaptiveLr>,
 ) -> SparseBlock {
     let (b, s) = (batch.batch, batch.seq);
@@ -179,36 +54,22 @@ pub fn assemble_sparse_block(
         for pos in 0..s {
             let r = row * s + pos;
             let label = batch.labels[r] as u32;
-            let (ids, vals, c, conf) = reconstitute(&targets[pos], label, vocab, variant);
-            smooth[r] = c;
-            confs[r] = conf;
-            let n = ids.len().min(k_slots);
+            let tt = reconstitute(&targets[pos], label, vocab, variant);
+            smooth[r] = tt.smooth_c;
+            confs[r] = tt.label_conf;
+            let n = tt.target.ids.len().min(k_slots);
             for j in 0..n {
-                idx[r * k_slots + j] = ids[j] as i32;
-                val[r * k_slots + j] = vals[j];
+                idx[r * k_slots + j] = tt.target.ids[j] as i32;
+                val[r * k_slots + j] = tt.target.probs[j];
             }
         }
     }
-    let ghost_on = matches!(variant, SparseVariant::GhostToken { .. }) as i32 as f32;
+    let ghost_on = variant.is_ghost() as i32 as f32;
     let lr_scale = match adaptive {
         None => vec![1.0f32; rows],
         Some(a) => adaptive_lr_scale(&confs, a),
     };
     SparseBlock { idx, val, smooth, ghost_on, lr_scale }
-}
-
-/// Per-token LR multipliers: hard tokens (low teacher confidence in the
-/// label) get `ratio`x, mean held at 1.
-pub fn adaptive_lr_scale(confs: &[f32], a: AdaptiveLr) -> Vec<f32> {
-    let mut sorted: Vec<f32> = confs.to_vec();
-    sorted.sort_by(|x, y| x.partial_cmp(y).unwrap());
-    let cut = sorted[((confs.len() as f32 * a.hard_frac) as usize).min(confs.len() - 1)];
-    let q = a.hard_frac;
-    let norm = 1.0 / (q * a.ratio + (1.0 - q)).max(1e-6);
-    confs
-        .iter()
-        .map(|&c| if c <= cut { a.ratio * norm } else { norm })
-        .collect()
 }
 
 /// Perf pass (EXPERIMENTS.md §Perf): on the CPU PJRT backend the
@@ -228,8 +89,9 @@ fn sparse_graph_for(engine: &Engine, role: &str) -> String {
     }
 }
 
-/// Train `student` for `steps`. `cache` is required for Sparse methods;
-/// `teacher` for DenseOnline.
+/// Train `student` for `steps` under `spec`. `cache` is required for Sparse
+/// objectives; `teacher` for Dense. (The `Pipeline` checks cache/spec
+/// compatibility before calling this — see `DistillSpec::check_cache`.)
 #[allow(clippy::too_many_arguments)]
 pub fn train_student(
     engine: &Engine,
@@ -237,7 +99,7 @@ pub fn train_student(
     loader: &mut Loader,
     steps: usize,
     schedule: LrSchedule,
-    method: &StudentMethod,
+    spec: &DistillSpec,
     cache: Option<&CacheReader>,
     teacher: Option<&ModelState>,
 ) -> Result<TrainResult> {
@@ -255,28 +117,29 @@ pub fn train_student(
         let toks = HostTensor::i32(batch.tokens.clone(), &[b, s]);
         let labels = HostTensor::i32(batch.labels.clone(), &[b, s]);
         let [p, mm, vv, st] = student.opt_inputs();
-        let mut outs = match method {
-            StudentMethod::Ce => {
+        let mut outs = match spec.objective {
+            Objective::Ce => {
                 engine.call(&format!("train_ce_{role}"), &[p, mm, vv, st, lr, toks, labels])?
             }
-            StudentMethod::DenseOnline { kind, alpha } => {
-                let t = teacher.expect("DenseOnline requires a teacher");
+            Objective::Dense { loss, alpha } => {
+                let t = teacher.expect("Dense objective requires a teacher");
                 let probs = engine
                     .call(&format!("fwd_{}", t.role), &[t.params_tensor(), toks.clone()])?
                     .remove(0);
-                let graph = if *kind == "kld" {
-                    format!("train_dense_{role}")
-                } else {
-                    format!("train_dense_{kind}_{role}")
+                let graph = match loss {
+                    crate::spec::DenseLoss::Kld => format!("train_dense_{role}"),
+                    other => format!("train_dense_{}_{role}", other.graph_key()),
                 };
                 engine.call(
                     &graph,
-                    &[p, mm, vv, st, lr, toks, labels, probs, HostTensor::scalar_f32(*alpha)],
+                    &[p, mm, vv, st, lr, toks, labels, probs, HostTensor::scalar_f32(alpha)],
                 )?
             }
-            StudentMethod::Sparse { variant, alpha, adaptive } => {
-                let Some(cache) = cache else { bail!("Sparse method requires a cache") };
-                let blk = assemble_sparse_block(cache, &batch, v, k, *variant, *adaptive);
+            Objective::Sparse { variant, alpha, adaptive } => {
+                let Some(cache) = cache else {
+                    return Err(SpecError::MissingCache { spec: spec.to_string() }.into());
+                };
+                let blk = assemble_sparse_block(cache, &batch, v, k, variant, adaptive);
                 engine.call(
                     &sparse_graph_for(engine, &role),
                     &[
@@ -289,7 +152,7 @@ pub fn train_student(
                         labels,
                         HostTensor::i32(blk.idx, &[b, s, k]),
                         HostTensor::f32(blk.val, &[b, s, k]),
-                        HostTensor::scalar_f32(*alpha),
+                        HostTensor::scalar_f32(alpha),
                         HostTensor::f32(blk.smooth, &[b, s]),
                         HostTensor::scalar_f32(blk.ghost_on),
                         HostTensor::f32(blk.lr_scale, &[b, s]),
@@ -314,58 +177,4 @@ pub fn train_student(
         steps: meter.steps() as usize,
         diverged,
     })
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    fn cached_topk() -> SparseTarget {
-        // sorted descending, mass 0.8
-        SparseTarget { ids: vec![7, 3, 9, 1], probs: vec![0.4, 0.2, 0.15, 0.05] }
-    }
-
-    #[test]
-    fn topk_truncates_and_normalizes() {
-        let (ids, vals, c, _) =
-            reconstitute(&cached_topk(), 0, 64, SparseVariant::TopK { k: 2, normalize: true });
-        assert_eq!(ids, vec![7, 3]);
-        assert!((vals.iter().sum::<f32>() - 1.0).abs() < 1e-6);
-        assert_eq!(c, 0.0);
-    }
-
-    #[test]
-    fn smoothing_residual_per_row() {
-        let (_, vals, c, _) = reconstitute(&cached_topk(), 0, 100, SparseVariant::Smoothing { k: 4 });
-        let mass: f32 = vals.iter().sum();
-        assert!((mass + c * 100.0 - 1.0).abs() < 1e-5);
-    }
-
-    #[test]
-    fn naive_fix_adds_label() {
-        let (ids, vals, _, conf) = reconstitute(&cached_topk(), 42, 64, SparseVariant::NaiveFix { k: 4 });
-        assert!(ids.contains(&42));
-        assert!((vals.iter().sum::<f32>() - 1.0).abs() < 1e-5);
-        assert_eq!(conf, 0.0); // label was not in the cached head
-
-        let (_, vals2, _, conf2) = reconstitute(&cached_topk(), 3, 64, SparseVariant::NaiveFix { k: 4 });
-        assert!((vals2.iter().sum::<f32>() - 1.0).abs() < 1e-5);
-        assert!((conf2 - 0.2).abs() < 1e-6);
-    }
-
-    #[test]
-    fn topp_cuts_at_mass() {
-        let (ids, _, _, _) = reconstitute(&cached_topk(), 0, 64, SparseVariant::TopP { p: 0.55, k: 4 });
-        assert_eq!(ids, vec![7, 3]); // 0.4 + 0.2 >= 0.55
-    }
-
-    #[test]
-    fn adaptive_scale_mean_one() {
-        let confs: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
-        let sc = adaptive_lr_scale(&confs, AdaptiveLr { ratio: 2.0, hard_frac: 0.5 });
-        let mean: f32 = sc.iter().sum::<f32>() / sc.len() as f32;
-        assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
-        assert!(sc[0] > sc[99]);
-        assert!((sc[0] / sc[99] - 2.0).abs() < 1e-4);
-    }
 }

@@ -1,16 +1,16 @@
 //! Shared experiment harness for the bench targets: scaling knobs (env
-//! `RSKD_SCALE=quick|default|full`), standard pipeline presets, and the
-//! method table used across benches.
+//! `RSKD_SCALE=quick|default|full`), standard pipeline presets, and
+//! spec-string helpers so every bench describes its methods in the one
+//! `DistillSpec` grammar the CLI accepts.
 
 use std::path::PathBuf;
 
 use anyhow::Result;
 
-use crate::coordinator::trainer::SparseVariant;
-use crate::coordinator::{CacheKind, EvalResult, Pipeline, PipelineConfig, StudentMethod, TrainResult};
-use crate::cache::CacheReader;
+use crate::coordinator::{EvalResult, Pipeline, PipelineConfig, TrainResult};
 use crate::evalsuite::tasks::{build_cloze_tasks, zero_shot_score};
 use crate::model::ModelState;
+use crate::spec::DistillSpec;
 
 #[derive(Clone, Copy, Debug)]
 pub struct Scale {
@@ -72,14 +72,21 @@ pub fn prepare_small(tag: &str) -> Option<Pipeline> {
     Some(Pipeline::prepare(config_for("artifacts/small", tag)).expect("pipeline"))
 }
 
-/// Run a student and also compute its 0-shot synthetic-NLU score.
+/// Parse a spec literal in the canonical grammar (`rs:rounds=12`,
+/// `topk:k=50`, `fullkd`, ...). Panics on bad literals — bench presets are
+/// hard-coded strings, so a typo should fail loudly at startup.
+pub fn spec(s: &str) -> DistillSpec {
+    DistillSpec::parse(s).unwrap_or_else(|e| panic!("bad spec literal: {e}"))
+}
+
+/// Run a student under `spec` (cache resolved via the pipeline's registry)
+/// and also compute its 0-shot synthetic-NLU score.
 pub fn run_with_zero_shot(
-    pipe: &Pipeline,
-    method: &StudentMethod,
-    cache: Option<&CacheReader>,
+    pipe: &mut Pipeline,
+    spec: &DistillSpec,
     seed: i32,
 ) -> Result<(ModelState, TrainResult, EvalResult, f64)> {
-    let (student, tr, ev) = pipe.run_student(method, cache, seed)?;
+    let (student, tr, ev) = pipe.run_spec(spec, seed)?;
     let score = zero_shot(pipe, &student)?;
     Ok((student, tr, ev, score))
 }
@@ -91,23 +98,6 @@ pub fn zero_shot(pipe: &Pipeline, model: &ModelState) -> Result<f64> {
         return Ok(f64::NAN);
     }
     zero_shot_score(&pipe.engine, model, &tasks)
-}
-
-/// The standard sparse methods keyed by paper name.
-pub fn topk(k: usize) -> StudentMethod {
-    StudentMethod::Sparse {
-        variant: SparseVariant::TopK { k, normalize: false },
-        alpha: 0.0,
-        adaptive: None,
-    }
-}
-
-pub fn rs() -> StudentMethod {
-    StudentMethod::Sparse { variant: SparseVariant::Rs, alpha: 0.0, adaptive: None }
-}
-
-pub fn rs_cache_kind(rounds: u32, temp: f32) -> CacheKind {
-    CacheKind::Rs { rounds, temp }
 }
 
 #[cfg(test)]
@@ -125,5 +115,12 @@ mod tests {
     fn config_paths() {
         let c = config_for("artifacts/small", "x");
         assert!(c.work_dir.to_string_lossy().contains("bench-x"));
+    }
+
+    #[test]
+    fn spec_helper_parses_bench_presets() {
+        assert_eq!(spec("rs:rounds=12"), DistillSpec::rs(12));
+        assert_eq!(spec("topk:k=50"), DistillSpec::topk(50));
+        assert_eq!(spec("fullkd"), DistillSpec::full_kd());
     }
 }

@@ -9,7 +9,13 @@
 //! paper studies, and the evaluation/benchmark harness that regenerates the
 //! paper's tables and figures.
 //!
+//! What to run is described by [`spec::DistillSpec`] — one typed taxonomy
+//! (with a canonical string grammar) shared by the CLI, the bench presets,
+//! and the cache manifests; `coordinator::Pipeline::run_spec` resolves a
+//! spec's cache plan and trains a student under it.
+//!
 //! Start at the repo-root `README.md`; see `DESIGN.md` for the architecture,
+//! `docs/SPEC.md` for the spec grammar and cache-compatibility matrix,
 //! `EXPERIMENTS.md` for the results harness, and `docs/CACHE_FORMAT.md` for
 //! the on-disk sparse-logit cache spec.
 
@@ -24,5 +30,6 @@ pub mod metrics;
 pub mod model;
 pub mod runtime;
 pub mod sampling;
+pub mod spec;
 pub mod toynn;
 pub mod util;

@@ -1,20 +1,26 @@
 //! rskd launcher: run pipeline stages and experiments from the command line.
 //!
 //! ```text
-//! rskd pipeline [--method ce|fullkd|topk|rs|...] [--steps N] [--quick=true]
+//! rskd pipeline [--method <spec>] [--steps N] [--quick=true]
 //! rskd toy      [--task gauss|image]
 //! rskd zipf     [--k N] [--rounds N]
 //! rskd info     [--artifacts DIR]
 //! ```
+//!
+//! `--method` takes the canonical `DistillSpec` grammar (docs/SPEC.md):
+//! `ce`, `fullkd`, `rkl`, `frkl`, `mse`, `l1`, `topk:k=12[,norm]`,
+//! `topp:p=0.98,k=50`, `smooth:k=50`, `ghost:k=50`, `naive:k=20`,
+//! `rs:rounds=50,temp=1`, with `alpha=A` / `adapt=R@F` riders. Bare heads
+//! pick their parameters up from `--k/--rounds/--temp/--alpha`, so
+//! `--method rs --rounds 25` still works.
 
 use std::path::PathBuf;
 
 use anyhow::{bail, Result};
 
-use rskd::coordinator::{pct_ce_to_fullkd, CacheKind, Pipeline, PipelineConfig, StudentMethod};
-use rskd::coordinator::trainer::SparseVariant;
+use rskd::coordinator::{pct_ce_to_fullkd, Pipeline, PipelineConfig};
 use rskd::report::{final_loss, Report};
-use rskd::sampling::Method;
+use rskd::spec::{DistillSpec, SpecDefaults, Variant};
 use rskd::toynn::train::train_teacher;
 use rskd::toynn::{train_toy, GaussianClasses, ToyImages, ToyMethod, ToyTrainConfig};
 use rskd::util::cli::Args;
@@ -26,44 +32,16 @@ fn main() {
     }
 }
 
-fn parse_method(args: &Args) -> Result<(StudentMethod, Option<CacheKind>)> {
-    let k = args.usize_or("k", 12);
-    let rounds = args.usize_or("rounds", 50) as u32;
-    let temp = args.f32_or("temp", 1.0);
-    let alpha = args.f32_or("alpha", 0.0);
-    Ok(match args.str_or("method", "rs").as_str() {
-        "ce" => (StudentMethod::Ce, None),
-        "fullkd" => (StudentMethod::DenseOnline { kind: "kld", alpha }, None),
-        "rkl" => (StudentMethod::DenseOnline { kind: "rkl", alpha }, None),
-        "mse" => (StudentMethod::DenseOnline { kind: "mse", alpha }, None),
-        "l1" => (StudentMethod::DenseOnline { kind: "l1", alpha }, None),
-        "frkl" => (StudentMethod::DenseOnline { kind: "frkl", alpha }, None),
-        "topk" => (
-            StudentMethod::Sparse {
-                variant: SparseVariant::TopK { k, normalize: false },
-                alpha,
-                adaptive: None,
-            },
-            Some(CacheKind::TopK),
-        ),
-        "ghost" => (
-            StudentMethod::Sparse { variant: SparseVariant::GhostToken { k }, alpha, adaptive: None },
-            Some(CacheKind::TopK),
-        ),
-        "naive" => (
-            StudentMethod::Sparse { variant: SparseVariant::NaiveFix { k }, alpha, adaptive: None },
-            Some(CacheKind::TopK),
-        ),
-        "smooth" => (
-            StudentMethod::Sparse { variant: SparseVariant::Smoothing { k }, alpha, adaptive: None },
-            Some(CacheKind::TopK),
-        ),
-        "rs" => (
-            StudentMethod::Sparse { variant: SparseVariant::Rs, alpha, adaptive: None },
-            Some(CacheKind::Rs { rounds, temp }),
-        ),
-        other => bail!("unknown method {other:?}"),
-    })
+/// Parse `--method` with the `--k/--rounds/--temp/--alpha` flags as defaults
+/// for parameters the spec string leaves out.
+fn parse_spec(args: &Args) -> Result<DistillSpec> {
+    let defaults = SpecDefaults {
+        k: args.usize_or("k", 12),
+        rounds: args.usize_or("rounds", 50) as u32,
+        temp: args.f32_or("temp", 1.0),
+        alpha: args.f32_or("alpha", 0.0),
+    };
+    Ok(DistillSpec::parse_with(&args.str_or("method", "rs"), &defaults)?)
 }
 
 fn cmd_pipeline(args: &Args) -> Result<()> {
@@ -79,34 +57,32 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     if let Some(s) = args.get("teacher-steps") {
         cfg.teacher_steps = s.parse()?;
     }
-    let (method, cache_kind) = parse_method(args)?;
+    let spec = parse_spec(args)?;
+    println!("spec: {spec}  ({})", spec.to_json());
 
     println!("== preparing pipeline (teacher pre-training) ==");
-    let pipe = Pipeline::prepare(cfg)?;
+    let mut pipe = Pipeline::prepare(cfg)?;
     println!(
         "teacher: {} params, final CE loss {:.3}",
         pipe.teacher.param_count(),
         pipe.teacher_losses.last().copied().unwrap_or(f32::NAN)
     );
 
-    let cache = match cache_kind {
-        Some(kind) => {
-            println!("== building sparse logit cache ({kind:?}) ==");
-            let (reader, stats) = pipe.build_cache(kind, "cli", 99)?;
-            println!(
-                "cache: {} positions, {:.1} avg unique tokens, {} bytes ({:.2} B/token)",
-                stats.cache.positions,
-                stats.avg_unique_tokens,
-                stats.cache.bytes,
-                stats.cache.bytes as f64 / stats.cache.positions.max(1) as f64,
-            );
-            Some(reader)
-        }
-        None => None,
-    };
+    if let Some(plan) = spec.cache_plan() {
+        println!("== building sparse logit cache ({plan}) ==");
+        let handle = pipe.ensure_cache(&spec)?.expect("plan implies a cache");
+        let stats = &handle.stats;
+        println!(
+            "cache: {} positions, {:.1} avg unique tokens, {} bytes ({:.2} B/token)",
+            stats.cache.positions,
+            stats.avg_unique_tokens,
+            stats.cache.bytes,
+            stats.cache.bytes as f64 / stats.cache.positions.max(1) as f64,
+        );
+    }
 
-    println!("== training student ({method:?}) ==");
-    let (_student, tr, ev) = pipe.run_student(&method, cache.as_ref(), 3)?;
+    println!("== training student ({}) ==", spec.name());
+    let (_student, tr, ev) = pipe.run_spec(&spec, 3)?;
     println!(
         "train: {} steps, final loss {:.3}, {:.0} tokens/sec{}",
         tr.steps,
@@ -175,13 +151,15 @@ fn cmd_toy(args: &Args) -> Result<()> {
 fn cmd_zipf(args: &Args) -> Result<()> {
     use rskd::sampling::zipf::{bias_l1, zipf};
     let k = args.usize_or("k", 20);
-    let rounds = args.usize_or("rounds", 22);
+    let rounds = args.usize_or("rounds", 22) as u32;
     let p = zipf(100_000, 1.0);
     let mut report = Report::new("zipf_demo", "Fig 2a toy distribution bias");
+    let topk_renorm = DistillSpec::sparse(Variant::TopK { k, normalize: true });
+    let naive = DistillSpec::sparse(Variant::NaiveFix { k });
     let rows = vec![
-        ("Top-K (renorm)", bias_l1(&p, Method::TopK { k, normalize: true }, 1, 0)),
-        ("Naive Fix", bias_l1(&p, Method::NaiveFix { k }, 500, 0)),
-        ("Random Sampling", bias_l1(&p, Method::RandomSampling { rounds, temp: 1.0 }, 500, 0)),
+        ("Top-K (renorm)", bias_l1(&p, &topk_renorm, 1, 0)),
+        ("Naive Fix", bias_l1(&p, &naive, 500, 0)),
+        ("Random Sampling", bias_l1(&p, &DistillSpec::rs(rounds), 500, 0)),
     ];
     report.table(
         &["method", "bias L1"],
@@ -219,8 +197,13 @@ fn run() -> Result<()> {
         "info" => cmd_info(&args),
         _ => {
             println!("usage: rskd <pipeline|toy|zipf|info> [--flags]");
-            println!("  pipeline --method ce|fullkd|topk|rs|ghost|naive|smooth|rkl|mse|l1|frkl");
-            println!("           --k N --rounds N --temp T --alpha A --steps N --quick=true");
+            println!("  pipeline --method <spec>   spec grammar (docs/SPEC.md):");
+            println!("           ce | fullkd | rkl | frkl | mse | l1");
+            println!("           topk:k=12[,norm] | topp:p=0.98,k=50 | smooth:k=50");
+            println!("           ghost:k=50 | naive:k=20 | rs:rounds=50,temp=1");
+            println!("           riders: alpha=A (CE mix), adapt=RATIO@FRAC (Table 9)");
+            println!("           bare heads use --k N --rounds N --temp T --alpha A");
+            println!("           plus: --steps N --teacher-steps N --quick=true");
             println!("  toy      --task gauss|image");
             println!("  zipf     --k N --rounds N");
             println!("  info     --artifacts DIR");

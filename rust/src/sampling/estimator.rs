@@ -1,13 +1,13 @@
 //! Bias/variance analysis of sparse target estimators (paper §4.3): sweep
-//! methods over many draws and measure the mean estimate's deviation from the
+//! specs over many draws and measure the mean estimate's deviation from the
 //! teacher row (bias) and per-draw spread (variance).
 
-use crate::sampling::{build_target, effective_dense, Method};
+use crate::spec::{build_target, effective_dense, DistillSpec};
 use crate::util::rng::Pcg;
 
 #[derive(Clone, Debug)]
 pub struct EstimatorStats {
-    pub method: Method,
+    pub spec: DistillSpec,
     /// L1 distance of the mean effective target from the truth
     pub bias_l1: f64,
     /// average per-draw L1 distance from the truth (total error)
@@ -20,7 +20,7 @@ pub struct EstimatorStats {
 
 pub fn estimator_stats(
     probs: &[f32],
-    method: Method,
+    spec: &DistillSpec,
     trials: usize,
     seed: u64,
 ) -> EstimatorStats {
@@ -31,7 +31,7 @@ pub fn estimator_stats(
     let mut mean_l1 = 0.0f64;
     let mut slots = 0usize;
     for _ in 0..trials {
-        let dense = match build_target(probs, 0, method, &mut rng) {
+        let dense = match build_target(probs, 0, spec, &mut rng) {
             Some(tt) => {
                 slots += tt.target.k();
                 effective_dense(&tt, v)
@@ -59,19 +59,27 @@ pub fn estimator_stats(
         bias_l1 += (mean - probs[i] as f64).abs();
         variance += (sumsq[i] / n - mean * mean).max(0.0);
     }
-    EstimatorStats { method, bias_l1, mean_l1: mean_l1 / n, variance, avg_slots: slots as f64 / n }
+    EstimatorStats {
+        spec: *spec,
+        bias_l1,
+        mean_l1: mean_l1 / n,
+        variance,
+        avg_slots: slots as f64 / n,
+    }
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::sampling::zipf::zipf;
+    use crate::spec::Variant;
 
     #[test]
     fn rs_unbiased_topk_biased() {
         let p = zipf(256, 1.0);
-        let rs = estimator_stats(&p, Method::RandomSampling { rounds: 22, temp: 1.0 }, 600, 0);
-        let tk = estimator_stats(&p, Method::TopK { k: 20, normalize: true }, 1, 0);
+        let rs = estimator_stats(&p, &DistillSpec::rs(22), 600, 0);
+        let topk = DistillSpec::sparse(Variant::TopK { k: 20, normalize: true });
+        let tk = estimator_stats(&p, &topk, 1, 0);
         assert!(rs.bias_l1 < 0.12, "rs bias {}", rs.bias_l1);
         assert!(tk.bias_l1 > 0.3, "topk bias {}", tk.bias_l1);
     }
@@ -81,8 +89,8 @@ mod tests {
         // Appendix A.3: Top-K minimizes *per-draw* L1 — its failure is bias,
         // not per-sample error.
         let p = zipf(256, 1.0);
-        let rs = estimator_stats(&p, Method::RandomSampling { rounds: 22, temp: 1.0 }, 300, 1);
-        let tk = estimator_stats(&p, Method::TopK { k: 20, normalize: false }, 1, 1);
+        let rs = estimator_stats(&p, &DistillSpec::rs(22), 300, 1);
+        let tk = estimator_stats(&p, &DistillSpec::topk(20), 1, 1);
         assert!(tk.mean_l1 < rs.mean_l1, "topk {} rs {}", tk.mean_l1, rs.mean_l1);
     }
 
@@ -91,16 +99,17 @@ mod tests {
         // §6.1: t in [0.8, 1.2] is the low-variance basin; t=0.25 (near
         // uniform) is much noisier.
         let p = zipf(256, 1.0);
-        let v1 = estimator_stats(&p, Method::RandomSampling { rounds: 50, temp: 1.0 }, 400, 2).variance;
-        let v0 = estimator_stats(&p, Method::RandomSampling { rounds: 50, temp: 0.25 }, 400, 2).variance;
+        let rs_t = |temp| DistillSpec::sparse(Variant::Rs { rounds: 50, temp });
+        let v1 = estimator_stats(&p, &rs_t(1.0), 400, 2).variance;
+        let v0 = estimator_stats(&p, &rs_t(0.25), 400, 2).variance;
         assert!(v0 > 2.0 * v1, "t=0.25 var {v0} vs t=1 var {v1}");
     }
 
     #[test]
     fn more_rounds_less_variance() {
         let p = zipf(256, 1.0);
-        let a = estimator_stats(&p, Method::RandomSampling { rounds: 5, temp: 1.0 }, 400, 3).variance;
-        let b = estimator_stats(&p, Method::RandomSampling { rounds: 50, temp: 1.0 }, 400, 3).variance;
+        let a = estimator_stats(&p, &DistillSpec::rs(5), 400, 3).variance;
+        let b = estimator_stats(&p, &DistillSpec::rs(50), 400, 3).variance;
         assert!(b < a, "{b} !< {a}");
     }
 }

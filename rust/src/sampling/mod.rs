@@ -1,9 +1,15 @@
-//! Sparsifier library: every sparse-KD target construction the paper studies
-//! (§2–§3), as pure-rust reference implementations. The runtime path uses the
+//! Sparsifier primitives: pure-rust reference implementations of the two
+//! head constructions the paper studies (§2–§3) — the deterministic Top-K
+//! head and the Random Sampling importance draw. The runtime path uses the
 //! L1 Pallas sampler graph for throughput; these implementations are the
-//! oracle for tests, the engine for the synthetic/toy experiments (Fig 2a,
-//! Fig 5), and the variant logic (naive fix / smoothing / ghost) that turns a
-//! cached sparse target into what the `train_sparse` graph consumes.
+//! oracle for tests and the engine for the synthetic/toy experiments
+//! (Fig 2a, Fig 5).
+//!
+//! What to *do* with a head (renormalize, smooth, ghost, naive-fix, nucleus
+//! cut) is not decided here: that is the reconstitution engine in
+//! [`crate::spec::reconstitute`], shared with the student trainer's cached
+//! path. This module replaced the old `sampling::Method` taxonomy — specs
+//! are now described by [`crate::spec::DistillSpec`] everywhere.
 
 pub mod estimator;
 pub mod rounds;
@@ -12,86 +18,39 @@ pub mod zipf;
 use crate::cache::SparseTarget;
 use crate::util::rng::{Cdf, Pcg};
 
-/// Sparse-KD method (paper §2–§3 taxonomy).
-#[derive(Clone, Copy, Debug, PartialEq)]
-pub enum Method {
-    /// plain cross-entropy on the ground truth (no distillation)
-    CrossEntropy,
-    /// full dense teacher distribution
-    FullKd,
-    /// vanilla Top-K: keep K largest, optionally renormalized
-    TopK { k: usize, normalize: bool },
-    /// Top-p nucleus with cap K
-    TopP { p: f32, k: usize },
-    /// Top-K + uniform residual smoothing (§3.1)
-    Smoothing { k: usize },
-    /// Top-K + ghost token for the residual (§3.2)
-    GhostToken { k: usize },
-    /// Top-K + residual assigned to the ground-truth label (§3.3)
-    NaiveFix { k: usize },
-    /// Random Sampling KD (§3.4): N importance-sampling rounds at `temp`
-    RandomSampling { rounds: usize, temp: f32 },
-}
-
-impl Method {
-    pub fn name(&self) -> String {
-        match self {
-            Method::CrossEntropy => "CE".into(),
-            Method::FullKd => "FullKD".into(),
-            Method::TopK { k, .. } => format!("Top-K {k}"),
-            Method::TopP { p, k } => format!("Top-p {p} (K={k})"),
-            Method::Smoothing { k } => format!("Smoothing {k}"),
-            Method::GhostToken { k } => format!("Ghost {k}"),
-            Method::NaiveFix { k } => format!("NaiveFix {k}"),
-            Method::RandomSampling { rounds, temp } => format!("RS n={rounds} t={temp}"),
-        }
-    }
-}
-
-/// Indices of the K largest probabilities (descending).
+/// Indices of the K largest probabilities (descending). NaN entries rank
+/// as -inf, so a corrupt teacher row degrades — NaNs are *excluded* from
+/// the head while real values remain — instead of panicking (the old
+/// `partial_cmp(..).unwrap()`) or displacing real tokens (naive
+/// `total_cmp`, which ranks NaN above +inf).
 pub fn topk_indices(probs: &[f32], k: usize) -> Vec<u32> {
+    let key = |i: u32| {
+        let p = probs[i as usize];
+        if p.is_nan() {
+            f32::NEG_INFINITY
+        } else {
+            p
+        }
+    };
     let mut idx: Vec<u32> = (0..probs.len() as u32).collect();
     let k = k.min(probs.len());
-    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| {
-        probs[b as usize].partial_cmp(&probs[a as usize]).unwrap()
-    });
+    idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| key(b).total_cmp(&key(a)));
     idx.truncate(k);
-    idx.sort_by(|&a, &b| probs[b as usize].partial_cmp(&probs[a as usize]).unwrap());
+    idx.sort_by(|&a, &b| key(b).total_cmp(&key(a)));
     idx
 }
 
-/// Vanilla Top-K target (paper §2): t_i = p_i for i in K, else 0.
-pub fn topk(probs: &[f32], k: usize, normalize: bool) -> SparseTarget {
+/// The raw Top-K head (paper §2): the K largest probabilities, sorted
+/// descending, unnormalized — the same shape a Top-K cache decodes to.
+pub fn topk(probs: &[f32], k: usize) -> SparseTarget {
     let ids = topk_indices(probs, k);
-    let mut vals: Vec<f32> = ids.iter().map(|&i| probs[i as usize]).collect();
-    if normalize {
-        let z: f32 = vals.iter().sum();
-        if z > 0.0 {
-            vals.iter_mut().for_each(|v| *v /= z);
-        }
-    }
+    let vals: Vec<f32> = ids.iter().map(|&i| probs[i as usize]).collect();
     SparseTarget { ids, probs: vals }
 }
 
-/// Top-p (nucleus) with a hard cap of `k_cap` tokens.
-pub fn topp(probs: &[f32], p: f32, k_cap: usize) -> SparseTarget {
-    let ids = topk_indices(probs, k_cap);
-    let mut keep = Vec::new();
-    let mut vals = Vec::new();
-    let mut mass = 0.0f32;
-    for &i in &ids {
-        keep.push(i);
-        vals.push(probs[i as usize]);
-        mass += probs[i as usize];
-        if mass >= p {
-            break;
-        }
-    }
-    SparseTarget { ids: keep, probs: vals }
-}
-
 /// Random Sampling KD (paper §3.4): draw `rounds` tokens from q ∝ p^temp,
-/// weight by p/q, normalize. Duplicate draws merge. Matches the L1 kernel.
+/// weight by p/q, normalize. Duplicate draws merge; ids come out sorted
+/// ascending — the same shape an RS cache decodes to. Matches the L1 kernel.
 pub fn random_sampling(probs: &[f32], rounds: usize, temp: f32, rng: &mut Pcg) -> SparseTarget {
     let v = probs.len();
     let q: Vec<f64> = probs.iter().map(|&p| (p.max(1e-20) as f64).powf(temp as f64)).collect();
@@ -115,77 +74,10 @@ pub fn random_sampling(probs: &[f32], rounds: usize, temp: f32, rng: &mut Pcg) -
     SparseTarget { ids, probs: vals }
 }
 
-/// What the student trainer feeds `train_sparse`: target + scalar knobs.
-#[derive(Clone, Debug, Default)]
-pub struct TrainTarget {
-    pub target: SparseTarget,
-    /// uniform smoothing constant added to every class in-kernel
-    pub smooth_c: f32,
-    /// 1.0 enables the ghost-token residual term
-    pub ghost_on: f32,
-}
-
-/// Build the training target for `method` from the dense teacher row.
-/// `label` is the ground-truth token (used by NaiveFix), `rng` drives RS.
-pub fn build_target(
-    probs: &[f32],
-    label: u32,
-    method: Method,
-    rng: &mut Pcg,
-) -> Option<TrainTarget> {
-    let v = probs.len();
-    match method {
-        Method::CrossEntropy => None,
-        Method::FullKd => Some(TrainTarget {
-            target: SparseTarget { ids: (0..v as u32).collect(), probs: probs.to_vec() },
-            ..Default::default()
-        }),
-        Method::TopK { k, normalize } => Some(TrainTarget {
-            target: topk(probs, k, normalize),
-            ..Default::default()
-        }),
-        Method::TopP { p, k } => Some(TrainTarget { target: topp(probs, p, k), ..Default::default() }),
-        Method::Smoothing { k } => {
-            let t = topk(probs, k, false);
-            let residual = (1.0 - t.mass()).max(0.0);
-            Some(TrainTarget { target: t, smooth_c: residual / v as f32, ghost_on: 0.0 })
-        }
-        Method::GhostToken { k } => Some(TrainTarget {
-            target: topk(probs, k, false),
-            smooth_c: 0.0,
-            ghost_on: 1.0,
-        }),
-        Method::NaiveFix { k } => {
-            let mut t = topk(probs, k, false);
-            let residual = (1.0 - t.mass()).max(0.0);
-            if let Some(pos) = t.ids.iter().position(|&i| i == label) {
-                t.probs[pos] += residual;
-            } else {
-                t.ids.push(label);
-                t.probs.push(residual);
-            }
-            Some(TrainTarget { target: t, ..Default::default() })
-        }
-        Method::RandomSampling { rounds, temp } => Some(TrainTarget {
-            target: random_sampling(probs, rounds, temp, rng),
-            ..Default::default()
-        }),
-    }
-}
-
-/// Dense reconstruction of what the student is *effectively* asked to learn
-/// (scatter + smoothing; used by the toy experiments and estimator stats).
-pub fn effective_dense(t: &TrainTarget, vocab: usize) -> Vec<f32> {
-    let mut out = vec![t.smooth_c; vocab];
-    for (&i, &p) in t.target.ids.iter().zip(t.target.probs.iter()) {
-        out[i as usize] += p;
-    }
-    out
-}
-
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spec::{build_target, effective_dense, DistillSpec, Variant};
 
     fn zipf_probs(v: usize) -> Vec<f32> {
         let mut p: Vec<f32> = (1..=v).map(|i| 1.0 / i as f32).collect();
@@ -197,26 +89,55 @@ mod tests {
     #[test]
     fn topk_picks_largest() {
         let p = zipf_probs(32);
-        let t = topk(&p, 4, false);
+        let t = topk(&p, 4);
         assert_eq!(t.ids, vec![0, 1, 2, 3]);
         assert!((t.probs[0] - p[0]).abs() < 1e-7);
     }
 
     #[test]
+    fn topk_survives_nan_rows() {
+        // regression: the old partial_cmp(..).unwrap() comparators panicked
+        // on any NaN teacher probability
+        let p = vec![0.2, f32::NAN, 0.5, 0.1, f32::NAN, 0.05];
+        let idx = topk_indices(&p, 3);
+        // NaNs rank as -inf: the head keeps the real top values
+        assert_eq!(idx, vec![2, 0, 3]);
+        let t = topk(&p, 3);
+        assert!(t.probs.iter().all(|v| v.is_finite()), "{t:?}");
+        // an all-NaN row must also survive
+        let all_nan = vec![f32::NAN; 8];
+        assert_eq!(topk_indices(&all_nan, 4).len(), 4);
+    }
+
+    #[test]
     fn topk_normalized_sums_to_one() {
         let p = zipf_probs(32);
-        let t = topk(&p, 5, true);
-        assert!((t.mass() - 1.0).abs() < 1e-6);
+        let mut rng = Pcg::new(0);
+        let tt = build_target(
+            &p,
+            0,
+            &DistillSpec::sparse(Variant::TopK { k: 5, normalize: true }),
+            &mut rng,
+        )
+        .unwrap();
+        assert!((tt.target.mass() - 1.0).abs() < 1e-6);
         // normalization scales the head UP — the paper's bias
-        assert!(t.probs[0] > p[0]);
+        assert!(tt.target.probs[0] > p[0]);
     }
 
     #[test]
     fn topp_stops_at_mass() {
         let p = zipf_probs(64);
-        let t = topp(&p, 0.5, 64);
-        assert!(t.mass() >= 0.5);
-        let t_minus = t.mass() - t.probs.last().unwrap();
+        let mut rng = Pcg::new(0);
+        let tt = build_target(
+            &p,
+            0,
+            &DistillSpec::sparse(Variant::TopP { p: 0.5, k: 64 }),
+            &mut rng,
+        )
+        .unwrap();
+        assert!(tt.target.mass() >= 0.5);
+        let t_minus = tt.target.mass() - tt.target.probs.last().unwrap();
         assert!(t_minus < 0.5);
     }
 
@@ -265,9 +186,16 @@ mod tests {
     fn topk_biased_mean_estimate() {
         let v = 64;
         let p = zipf_probs(v);
-        let t = topk(&p, 8, true);
+        let mut rng = Pcg::new(0);
+        let tt = build_target(
+            &p,
+            0,
+            &DistillSpec::sparse(Variant::TopK { k: 8, normalize: true }),
+            &mut rng,
+        )
+        .unwrap();
         // head strictly overestimated
-        for (&i, &w) in t.ids.iter().zip(t.probs.iter()) {
+        for (&i, &w) in tt.target.ids.iter().zip(tt.target.probs.iter()) {
             assert!(w > p[i as usize]);
         }
     }
@@ -276,7 +204,13 @@ mod tests {
     fn naive_fix_sums_to_one_and_keeps_label() {
         let p = zipf_probs(64);
         let mut rng = Pcg::new(3);
-        let tt = build_target(&p, 50, Method::NaiveFix { k: 8 }, &mut rng).unwrap();
+        let tt = build_target(
+            &p,
+            50,
+            &DistillSpec::sparse(Variant::NaiveFix { k: 8 }),
+            &mut rng,
+        )
+        .unwrap();
         assert!((tt.target.mass() - 1.0).abs() < 1e-6);
         assert!(tt.target.ids.contains(&50));
     }
@@ -285,7 +219,13 @@ mod tests {
     fn smoothing_total_mass_one() {
         let p = zipf_probs(64);
         let mut rng = Pcg::new(4);
-        let tt = build_target(&p, 0, Method::Smoothing { k: 8 }, &mut rng).unwrap();
+        let tt = build_target(
+            &p,
+            0,
+            &DistillSpec::sparse(Variant::Smoothing { k: 8 }),
+            &mut rng,
+        )
+        .unwrap();
         let dense = effective_dense(&tt, 64);
         let total: f32 = dense.iter().sum();
         assert!((total - 1.0).abs() < 1e-5);
@@ -296,7 +236,13 @@ mod tests {
     fn ghost_sets_flag() {
         let p = zipf_probs(64);
         let mut rng = Pcg::new(5);
-        let tt = build_target(&p, 0, Method::GhostToken { k: 8 }, &mut rng).unwrap();
+        let tt = build_target(
+            &p,
+            0,
+            &DistillSpec::sparse(Variant::GhostToken { k: 8 }),
+            &mut rng,
+        )
+        .unwrap();
         assert_eq!(tt.ghost_on, 1.0);
         assert!((tt.target.mass() - p[..8].iter().sum::<f32>()).abs() < 1e-6);
     }
@@ -308,19 +254,19 @@ mod tests {
         forall(
             40,
             |rng: &mut Pcg| {
-                let methods = [
-                    Method::TopK { k: 1 + rng.usize_below(20), normalize: rng.f32() < 0.5 },
-                    Method::NaiveFix { k: 1 + rng.usize_below(20) },
-                    Method::RandomSampling { rounds: 1 + rng.usize_below(60), temp: 1.0 },
-                    Method::Smoothing { k: 1 + rng.usize_below(20) },
+                let variants = [
+                    Variant::TopK { k: 1 + rng.usize_below(20), normalize: rng.f32() < 0.5 },
+                    Variant::NaiveFix { k: 1 + rng.usize_below(20) },
+                    Variant::Rs { rounds: 1 + rng.below(60) as u32, temp: 1.0 },
+                    Variant::Smoothing { k: 1 + rng.usize_below(20) },
                 ];
-                let m = methods[rng.usize_below(4)];
+                let v = variants[rng.usize_below(4)];
                 let label = rng.below(100) as u32;
-                (m, label, rng.next_u64())
+                (v, label, rng.next_u64())
             },
-            |&(m, label, seed)| {
+            |&(v, label, seed)| {
                 let mut rng = Pcg::new(seed);
-                let tt = build_target(&p, label, m, &mut rng).unwrap();
+                let tt = build_target(&p, label, &DistillSpec::sparse(v), &mut rng).unwrap();
                 if tt.target.ids.iter().all(|&i| (i as usize) < 100)
                     && tt.target.probs.iter().all(|&w| (0.0..=1.0 + 1e-5).contains(&w))
                     && tt.target.mass() <= 1.0 + 1e-4

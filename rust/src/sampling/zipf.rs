@@ -2,7 +2,7 @@
 //! how each sparse-KD method's effective target aligns with the ground-truth
 //! teacher distribution.
 
-use crate::sampling::{build_target, effective_dense, Method};
+use crate::spec::{build_target, effective_dense, DistillSpec};
 use crate::util::rng::Pcg;
 
 /// Normalized Zipf distribution p_i ∝ 1/i^s over `vocab` tokens.
@@ -13,12 +13,12 @@ pub fn zipf(vocab: usize, s: f64) -> Vec<f32> {
     p.iter().map(|&x| x as f32).collect()
 }
 
-/// One series of Figure 2a: the *average* effective target of `method` over
+/// One series of Figure 2a: the *average* effective target of `spec` over
 /// `trials` draws (deterministic methods need one trial), restricted to the
-/// first `head` token indices.
+/// first `head` token indices. CE specs contribute a one-hot on the label.
 pub fn averaged_effective_target(
     probs: &[f32],
-    method: Method,
+    spec: &DistillSpec,
     trials: usize,
     head: usize,
     seed: u64,
@@ -31,7 +31,7 @@ pub fn averaged_effective_target(
     let cdf = crate::util::rng::Cdf::new(&probs.iter().map(|&p| p as f64).collect::<Vec<_>>());
     for _ in 0..trials {
         let label = cdf.sample(&mut rng) as u32;
-        match build_target(probs, label, method, &mut rng) {
+        match build_target(probs, label, spec, &mut rng) {
             Some(tt) => {
                 for (i, x) in effective_dense(&tt, v).iter().enumerate() {
                     acc[i] += *x as f64;
@@ -48,14 +48,15 @@ pub fn averaged_effective_target(
 
 /// L1 distance between a method's averaged effective target and the truth —
 /// the quantitative version of Fig 2a (bias shows up as irreducible L1).
-pub fn bias_l1(probs: &[f32], method: Method, trials: usize, seed: u64) -> f32 {
-    let est = averaged_effective_target(probs, method, trials, probs.len(), seed);
+pub fn bias_l1(probs: &[f32], spec: &DistillSpec, trials: usize, seed: u64) -> f32 {
+    let est = averaged_effective_target(probs, spec, trials, probs.len(), seed);
     est.iter().zip(probs.iter()).map(|(a, b)| (a - b).abs()).sum()
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
+    use crate::spec::Variant;
 
     #[test]
     fn zipf_normalized_and_decreasing() {
@@ -69,8 +70,9 @@ mod tests {
         // Figure 2a's message, quantified: averaged RS estimates converge to
         // the truth; normalized Top-K does not.
         let p = zipf(1000, 1.0);
-        let b_topk = bias_l1(&p, Method::TopK { k: 20, normalize: true }, 1, 0);
-        let b_rs = bias_l1(&p, Method::RandomSampling { rounds: 22, temp: 1.0 }, 800, 0);
+        let topk = DistillSpec::sparse(Variant::TopK { k: 20, normalize: true });
+        let b_topk = bias_l1(&p, &topk, 1, 0);
+        let b_rs = bias_l1(&p, &DistillSpec::rs(22), 800, 0);
         assert!(b_rs < b_topk * 0.35, "rs {b_rs} topk {b_topk}");
     }
 
@@ -79,8 +81,9 @@ mod tests {
         // with ground-truth labels drawn from the teacher distribution, the
         // residual-to-label assignment is unbiased in expectation (§3.3)
         let p = zipf(1000, 1.0);
-        let b_topk = bias_l1(&p, Method::TopK { k: 20, normalize: true }, 400, 0);
-        let b_naive = bias_l1(&p, Method::NaiveFix { k: 20 }, 400, 0);
+        let topk = DistillSpec::sparse(Variant::TopK { k: 20, normalize: true });
+        let b_topk = bias_l1(&p, &topk, 400, 0);
+        let b_naive = bias_l1(&p, &DistillSpec::sparse(Variant::NaiveFix { k: 20 }), 400, 0);
         assert!(b_naive < b_topk * 0.75, "naive {b_naive} topk {b_topk}");
     }
 }

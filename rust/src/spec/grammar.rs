@@ -1,0 +1,494 @@
+//! Canonical string grammar + JSON form for [`DistillSpec`].
+//!
+//! One parser serves the CLI (`rskd pipeline --method <spec>`), the `expt`
+//! bench presets, cache-kind manifest tags, and `Report` metadata. The
+//! grammar is `head[:param,param,...]`:
+//!
+//! ```text
+//! ce
+//! fullkd[:alpha=A]            rkl | frkl | mse | l1  (same params)
+//! dense:loss=kld|rkl|frkl|mse|l1[,alpha=A]
+//! topk:k=K[,norm]
+//! topp:p=P,k=K
+//! smooth:k=K    ghost:k=K    naive:k=K
+//! rs:rounds=N[,temp=T]
+//! ```
+//!
+//! Sparse heads also accept `alpha=A` (CE mixing weight) and
+//! `adapt=RATIO@FRAC` (Table 9 adaptive LR). `Display` emits the canonical
+//! form; `parse(format(spec)) == spec` for every spec (property-tested).
+//! See `docs/SPEC.md` for the full reference.
+
+use std::str::FromStr;
+
+use crate::spec::{AdaptiveLr, DenseLoss, DistillSpec, Objective, SpecError, Variant};
+use crate::util::json::Json;
+
+/// Defaults substituted for omitted parameters, so `--method topk` works
+/// from the CLI with the flag-provided `--k` as the default.
+#[derive(Clone, Copy, Debug)]
+pub struct SpecDefaults {
+    pub k: usize,
+    pub rounds: u32,
+    pub temp: f32,
+    pub alpha: f32,
+}
+
+impl Default for SpecDefaults {
+    fn default() -> SpecDefaults {
+        SpecDefaults { k: 12, rounds: 50, temp: 1.0, alpha: 0.0 }
+    }
+}
+
+struct Params<'a> {
+    input: &'a str,
+    pairs: Vec<(&'a str, Option<&'a str>)>,
+    used: Vec<bool>,
+}
+
+impl<'a> Params<'a> {
+    fn new(input: &'a str, body: &'a str) -> Result<Params<'a>, SpecError> {
+        let mut pairs = Vec::new();
+        if !body.is_empty() {
+            for part in body.split(',') {
+                if part.is_empty() {
+                    return Err(parse_err(input, "empty parameter"));
+                }
+                match part.split_once('=') {
+                    Some((k, v)) => pairs.push((k, Some(v))),
+                    None => pairs.push((part, None)),
+                }
+            }
+        }
+        let used = vec![false; pairs.len()];
+        Ok(Params { input, pairs, used })
+    }
+
+    fn flag(&mut self, name: &str) -> bool {
+        for (i, (k, v)) in self.pairs.iter().enumerate() {
+            if *k == name && v.is_none() {
+                self.used[i] = true;
+                return true;
+            }
+        }
+        false
+    }
+
+    fn value(&mut self, name: &str) -> Result<Option<&'a str>, SpecError> {
+        for (i, (k, v)) in self.pairs.iter().enumerate() {
+            if *k == name {
+                self.used[i] = true;
+                return match v {
+                    Some(v) => Ok(Some(v)),
+                    None => Err(parse_err(self.input, &format!("`{name}` needs a value"))),
+                };
+            }
+        }
+        Ok(None)
+    }
+
+    fn num<T: FromStr>(&mut self, name: &str, default: T) -> Result<T, SpecError> {
+        match self.value(name)? {
+            None => Ok(default),
+            Some(v) => v
+                .parse::<T>()
+                .map_err(|_| parse_err(self.input, &format!("bad value for `{name}`: {v:?}"))),
+        }
+    }
+
+    /// Reject unknown parameters (typos must not silently fall back).
+    fn finish(self) -> Result<(), SpecError> {
+        for (i, (k, _)) in self.pairs.iter().enumerate() {
+            if !self.used[i] {
+                return Err(parse_err(self.input, &format!("unknown parameter `{k}`")));
+            }
+        }
+        Ok(())
+    }
+}
+
+fn parse_err(input: &str, reason: &str) -> SpecError {
+    SpecError::Parse { input: input.to_string(), reason: reason.to_string() }
+}
+
+fn finite(input: &str, name: &str, x: f32) -> Result<f32, SpecError> {
+    if x.is_finite() {
+        Ok(x)
+    } else {
+        Err(parse_err(input, &format!("`{name}` must be finite")))
+    }
+}
+
+fn parse_adapt(input: &str, v: &str) -> Result<AdaptiveLr, SpecError> {
+    let (r, f) = v
+        .split_once('@')
+        .ok_or_else(|| parse_err(input, "`adapt` must be RATIO@FRAC, e.g. adapt=2@0.5"))?;
+    let ratio: f32 =
+        r.parse().map_err(|_| parse_err(input, &format!("bad adapt ratio {r:?}")))?;
+    let hard_frac: f32 =
+        f.parse().map_err(|_| parse_err(input, &format!("bad adapt fraction {f:?}")))?;
+    finite(input, "adapt ratio", ratio)?;
+    finite(input, "adapt fraction", hard_frac)?;
+    if ratio <= 0.0 {
+        // a non-positive hard-token multiplier means gradient ascent on
+        // part of the batch — reject rather than silently diverge
+        return Err(parse_err(input, "adapt ratio must be > 0"));
+    }
+    if !(0.0..=1.0).contains(&hard_frac) {
+        return Err(parse_err(input, "adapt fraction must be in [0, 1]"));
+    }
+    Ok(AdaptiveLr { ratio, hard_frac })
+}
+
+impl DistillSpec {
+    /// Parse with the standard defaults.
+    pub fn parse(s: &str) -> Result<DistillSpec, SpecError> {
+        DistillSpec::parse_with(s, &SpecDefaults::default())
+    }
+
+    /// Parse with caller-provided defaults for omitted parameters.
+    pub fn parse_with(s: &str, d: &SpecDefaults) -> Result<DistillSpec, SpecError> {
+        let s = s.trim();
+        let (head, body) = match s.split_once(':') {
+            Some((h, b)) => (h, b),
+            None => (s, ""),
+        };
+        let mut p = Params::new(s, body)?;
+
+        let dense = |loss: DenseLoss, p: &mut Params<'_>| -> Result<DistillSpec, SpecError> {
+            let alpha = finite(s, "alpha", p.num("alpha", d.alpha)?)?;
+            Ok(DistillSpec::dense(loss, alpha))
+        };
+        let spec = match head {
+            "ce" => DistillSpec::ce(),
+            "fullkd" | "kld" => dense(DenseLoss::Kld, &mut p)?,
+            "rkl" => dense(DenseLoss::Rkl, &mut p)?,
+            "frkl" => dense(DenseLoss::Frkl, &mut p)?,
+            "mse" => dense(DenseLoss::Mse, &mut p)?,
+            "l1" => dense(DenseLoss::L1, &mut p)?,
+            "dense" => {
+                let loss = match p.value("loss")? {
+                    Some("kld") => DenseLoss::Kld,
+                    Some("rkl") => DenseLoss::Rkl,
+                    Some("frkl") => DenseLoss::Frkl,
+                    Some("mse") => DenseLoss::Mse,
+                    Some("l1") => DenseLoss::L1,
+                    Some(other) => {
+                        return Err(parse_err(s, &format!("unknown dense loss {other:?}")))
+                    }
+                    None => return Err(parse_err(s, "`dense` requires loss=kld|rkl|frkl|mse|l1")),
+                };
+                dense(loss, &mut p)?
+            }
+            "topk" | "topp" | "smooth" | "ghost" | "naive" | "rs" => {
+                let variant = match head {
+                    "topk" => {
+                        Variant::TopK { k: p.num("k", d.k)?, normalize: p.flag("norm") }
+                    }
+                    "topp" => {
+                        let pp = finite(s, "p", p.num("p", 0.98)?)?;
+                        if !(0.0..=1.0).contains(&pp) {
+                            return Err(parse_err(s, "`p` must be in [0, 1]"));
+                        }
+                        Variant::TopP { p: pp, k: p.num("k", d.k)? }
+                    }
+                    "smooth" => Variant::Smoothing { k: p.num("k", d.k)? },
+                    "ghost" => Variant::GhostToken { k: p.num("k", d.k)? },
+                    "naive" => Variant::NaiveFix { k: p.num("k", d.k)? },
+                    _ => {
+                        let rounds = p.num("rounds", d.rounds)?;
+                        if rounds == 0 {
+                            return Err(parse_err(s, "`rounds` must be >= 1"));
+                        }
+                        let temp = finite(s, "temp", p.num("temp", d.temp)?)?;
+                        Variant::Rs { rounds, temp }
+                    }
+                };
+                if let Variant::TopK { k, .. }
+                | Variant::TopP { k, .. }
+                | Variant::Smoothing { k }
+                | Variant::GhostToken { k }
+                | Variant::NaiveFix { k } = variant
+                {
+                    if k == 0 {
+                        return Err(parse_err(s, "`k` must be >= 1"));
+                    }
+                }
+                let alpha = finite(s, "alpha", p.num("alpha", d.alpha)?)?;
+                let adaptive = match p.value("adapt")? {
+                    Some(v) => Some(parse_adapt(s, v)?),
+                    None => None,
+                };
+                DistillSpec { objective: Objective::Sparse { variant, alpha, adaptive } }
+            }
+            other => {
+                return Err(parse_err(
+                    s,
+                    &format!(
+                        "unknown method {other:?} (expected ce|fullkd|rkl|frkl|mse|l1|dense|\
+                         topk|topp|smooth|ghost|naive|rs)"
+                    ),
+                ))
+            }
+        };
+        p.finish()?;
+        Ok(spec)
+    }
+
+    /// JSON form: the canonical string plus expanded fields for readability.
+    /// `from_json` reads only the `spec` field, so the round-trip is exactly
+    /// the string round-trip (no float re-encoding drift).
+    pub fn to_json(&self) -> Json {
+        let mut pairs = vec![
+            ("spec", Json::str(&self.to_string())),
+            ("name", Json::str(&self.name())),
+        ];
+        let objective = match self.objective {
+            Objective::Ce => "ce",
+            Objective::Dense { .. } => "dense",
+            Objective::Sparse { .. } => "sparse",
+        };
+        pairs.push(("objective", Json::str(objective)));
+        if let Some(plan) = self.cache_plan() {
+            pairs.push(("cache", Json::str(&plan.kind.to_string())));
+        }
+        if self.alpha() != 0.0 {
+            pairs.push(("alpha", Json::num(self.alpha() as f64)));
+        }
+        Json::obj(pairs)
+    }
+
+    pub fn from_json(j: &Json) -> Result<DistillSpec, SpecError> {
+        // accept either the object form or a bare string
+        if let Some(s) = j.as_str() {
+            return DistillSpec::parse(s);
+        }
+        let s = j.get("spec").and_then(|v| v.as_str()).ok_or_else(|| SpecError::Parse {
+            input: j.to_string(),
+            reason: "expected a spec string or an object with a `spec` field".into(),
+        })?;
+        DistillSpec::parse(s)
+    }
+}
+
+impl std::fmt::Display for DistillSpec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self.objective {
+            Objective::Ce => write!(f, "ce"),
+            Objective::Dense { loss, alpha } => {
+                write!(f, "{}", loss.head())?;
+                if alpha != 0.0 {
+                    write!(f, ":alpha={alpha}")?;
+                }
+                Ok(())
+            }
+            Objective::Sparse { variant, alpha, adaptive } => {
+                match variant {
+                    Variant::TopK { k, normalize } => {
+                        write!(f, "topk:k={k}")?;
+                        if normalize {
+                            write!(f, ",norm")?;
+                        }
+                    }
+                    Variant::TopP { p, k } => write!(f, "topp:p={p},k={k}")?,
+                    Variant::Smoothing { k } => write!(f, "smooth:k={k}")?,
+                    Variant::GhostToken { k } => write!(f, "ghost:k={k}")?,
+                    Variant::NaiveFix { k } => write!(f, "naive:k={k}")?,
+                    Variant::Rs { rounds, temp } => write!(f, "rs:rounds={rounds},temp={temp}")?,
+                }
+                if alpha != 0.0 {
+                    write!(f, ",alpha={alpha}")?;
+                }
+                if let Some(a) = adaptive {
+                    write!(f, ",adapt={}@{}", a.ratio, a.hard_frac)?;
+                }
+                Ok(())
+            }
+        }
+    }
+}
+
+impl FromStr for DistillSpec {
+    type Err = SpecError;
+
+    fn from_str(s: &str) -> Result<DistillSpec, SpecError> {
+        DistillSpec::parse(s)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+    use crate::util::testing::forall;
+
+    #[test]
+    fn parses_every_head() {
+        for (s, name) in [
+            ("ce", "CE"),
+            ("fullkd", "FullKD"),
+            ("rkl", "KLD (R)"),
+            ("frkl", "KLD (F+R)"),
+            ("mse", "MSE"),
+            ("l1", "L1"),
+            ("dense:loss=rkl,alpha=0.2", "KLD (R)"),
+            ("topk:k=12", "Top-K 12"),
+            ("topk:k=50,norm", "Top-K 50"),
+            ("topp:p=0.98,k=50", "Top-p 0.98 (K=50)"),
+            ("smooth:k=50", "Smoothing 50"),
+            ("ghost:k=50", "Ghost 50"),
+            ("naive:k=20", "NaiveFix 20"),
+            ("rs:rounds=50,temp=1", "RS n=50 t=1"),
+            ("rs:rounds=12,alpha=0.1,adapt=2@0.5", "RS n=12 t=1"),
+        ] {
+            let spec = DistillSpec::parse(s).unwrap_or_else(|e| panic!("{s}: {e}"));
+            assert_eq!(spec.name(), name, "{s}");
+        }
+    }
+
+    #[test]
+    fn defaults_fill_omitted_params() {
+        let d = SpecDefaults { k: 7, rounds: 9, temp: 0.8, alpha: 0.25 };
+        let s = DistillSpec::parse_with("topk", &d).unwrap();
+        let Objective::Sparse { variant: Variant::TopK { k, normalize }, alpha, .. } = s.objective
+        else {
+            panic!()
+        };
+        assert_eq!((k, normalize), (7, false));
+        assert!((alpha - 0.25).abs() < 1e-9);
+        let s = DistillSpec::parse_with("rs", &d).unwrap();
+        let Objective::Sparse { variant: Variant::Rs { rounds, temp }, .. } = s.objective else {
+            panic!()
+        };
+        assert_eq!(rounds, 9);
+        assert!((temp - 0.8).abs() < 1e-9);
+    }
+
+    #[test]
+    fn rejects_typos_and_garbage() {
+        for bad in [
+            "",
+            "topq:k=3",
+            "topk:q=3",
+            "topk:k=",
+            "topk:k=twelve",
+            "topk:k=0",
+            "rs:rounds=0",
+            "rs:rounds=5,temp=nan",
+            "dense",
+            "dense:loss=tanh",
+            "rs:rounds=5,adapt=2",
+            "rs:rounds=5,adapt=-2@0.5",
+            "rs:rounds=5,adapt=0@0.5",
+            "rs:rounds=5,,temp=1",
+        ] {
+            let err = DistillSpec::parse(bad).expect_err(bad);
+            assert!(matches!(err, SpecError::Parse { .. }), "{bad}: {err:?}");
+        }
+    }
+
+    #[test]
+    fn canonical_examples_roundtrip() {
+        for s in [
+            "ce",
+            "fullkd",
+            "fullkd:alpha=0.3",
+            "topk:k=12",
+            "topk:k=12,norm",
+            "topp:p=0.98,k=50",
+            "smooth:k=50",
+            "ghost:k=50",
+            "naive:k=20",
+            "rs:rounds=50,temp=1",
+            "rs:rounds=12,temp=0.8,alpha=0.1,adapt=2@0.5",
+        ] {
+            let spec = DistillSpec::parse(s).unwrap();
+            assert_eq!(spec.to_string(), s, "display must be canonical");
+            assert_eq!(DistillSpec::parse(&spec.to_string()).unwrap(), spec);
+        }
+    }
+
+    /// parse ∘ format = id over randomly generated specs (acceptance
+    /// criterion; rust float Display is shortest-roundtrip, so arbitrary
+    /// finite f32 parameters survive).
+    #[test]
+    fn property_roundtrip_parse_format() {
+        fn gen_spec(rng: &mut Pcg) -> DistillSpec {
+            let alpha = (rng.f32() * 0.5 * 1e4).round() / 1e4;
+            let adaptive = (rng.f32() < 0.5)
+                .then(|| AdaptiveLr { ratio: 1.0 + rng.f32() * 3.0, hard_frac: rng.f32() });
+            let k = 1 + rng.usize_below(64);
+            let variant = match rng.usize_below(6) {
+                0 => Variant::TopK { k, normalize: rng.f32() < 0.5 },
+                1 => Variant::TopP { p: rng.f32(), k },
+                2 => Variant::Smoothing { k },
+                3 => Variant::GhostToken { k },
+                4 => Variant::NaiveFix { k },
+                _ => Variant::Rs { rounds: 1 + rng.below(128) as u32, temp: rng.f32() * 2.0 },
+            };
+            match rng.usize_below(4) {
+                0 => DistillSpec::ce(),
+                1 => {
+                    let loss = [
+                        DenseLoss::Kld,
+                        DenseLoss::Rkl,
+                        DenseLoss::Frkl,
+                        DenseLoss::Mse,
+                        DenseLoss::L1,
+                    ][rng.usize_below(5)];
+                    DistillSpec::dense(loss, alpha)
+                }
+                _ => DistillSpec {
+                    objective: Objective::Sparse { variant, alpha, adaptive },
+                },
+            }
+        }
+        forall(200, gen_spec, |spec| {
+            let text = spec.to_string();
+            let back = DistillSpec::parse(&text)
+                .map_err(|e| format!("canonical form {text:?} failed to parse: {e}"))?;
+            if back == *spec {
+                Ok(())
+            } else {
+                Err(format!("{spec:?} -> {text:?} -> {back:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn property_roundtrip_json() {
+        fn gen(rng: &mut Pcg) -> DistillSpec {
+            match rng.usize_below(3) {
+                0 => DistillSpec::ce(),
+                1 => DistillSpec::dense(DenseLoss::Rkl, rng.f32()),
+                _ => DistillSpec::rs(1 + rng.below(100) as u32).with_alpha(rng.f32()),
+            }
+        }
+        forall(60, gen, |spec| {
+            let j = spec.to_json();
+            let text = j.to_string();
+            let parsed = Json::parse(&text).map_err(|e| e.to_string())?;
+            let back = DistillSpec::from_json(&parsed).map_err(|e| e.to_string())?;
+            if back == *spec {
+                Ok(())
+            } else {
+                Err(format!("{spec:?} -> {text} -> {back:?}"))
+            }
+        });
+    }
+
+    #[test]
+    fn json_accepts_bare_string() {
+        let j = Json::Str("topk:k=5".into());
+        assert_eq!(DistillSpec::from_json(&j).unwrap(), DistillSpec::topk(5));
+        assert!(DistillSpec::from_json(&Json::Num(3.0)).is_err());
+    }
+
+    #[test]
+    fn json_carries_cache_plan() {
+        let j = DistillSpec::rs(50).to_json();
+        assert_eq!(j.get("cache").unwrap().as_str(), Some("rs:rounds=50,temp=1"));
+        assert_eq!(j.get("objective").unwrap().as_str(), Some("sparse"));
+        assert!(DistillSpec::ce().to_json().get("cache").is_none());
+    }
+}

@@ -1,0 +1,613 @@
+//! Declarative distillation spec: the single source of truth for "what
+//! distillation to run".
+//!
+//! Before this module existed the repo carried three parallel method
+//! taxonomies that had drifted apart: `sampling::Method` (dense-row oracle),
+//! `trainer::StudentMethod`/`SparseVariant` (cache reconstitution, with a
+//! stringly-typed dense-loss kind), and `cachebuild::CacheKind` — and nothing
+//! checked that a cache could actually serve the variant reading it (a Top-K
+//! reconstitution over an RS cache silently truncated id-sorted draws into
+//! garbage targets). [`DistillSpec`] replaces all three:
+//!
+//! * one typed objective (`Ce` | `Dense { loss, alpha }` |
+//!   `Sparse { variant, alpha, adaptive }`),
+//! * one reconstitution engine ([`reconstitute`]) shared by the trainer's
+//!   cache path and the synthetic/estimator dense path,
+//! * a [`DistillSpec::cache_plan`] mapping each spec to the [`CacheKind`] and
+//!   codec that can serve it, with [`DistillSpec::check_cache`] returning
+//!   *typed* incompatibility errors before training starts,
+//! * a canonical string grammar (`rs:rounds=50,temp=1`, `topk:k=12,norm`)
+//!   with parse/format round-trip plus `util::json` serialization, shared by
+//!   the CLI, the bench presets, and report metadata (see [`grammar`] and
+//!   `docs/SPEC.md`).
+
+pub mod grammar;
+pub mod reconstitute;
+
+pub use grammar::SpecDefaults;
+pub use reconstitute::{
+    adaptive_lr_scale, build_target, effective_dense, reconstitute, TrainTarget,
+};
+
+use std::fmt;
+
+use crate::cache::ProbCodec;
+
+/// Dense (online-teacher) distillation loss family (paper Table 12).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum DenseLoss {
+    /// forward KLD — this is FullKD, the paper's ceiling
+    Kld,
+    /// reverse KLD
+    Rkl,
+    /// forward + reverse KLD
+    Frkl,
+    /// mean squared error on probabilities
+    Mse,
+    /// L1 on probabilities
+    L1,
+}
+
+impl DenseLoss {
+    /// Key used in the AOT graph name (`train_dense_<key>_<role>`; plain
+    /// `train_dense_<role>` for forward KLD).
+    pub fn graph_key(self) -> &'static str {
+        match self {
+            DenseLoss::Kld => "kld",
+            DenseLoss::Rkl => "rkl",
+            DenseLoss::Frkl => "frkl",
+            DenseLoss::Mse => "mse",
+            DenseLoss::L1 => "l1",
+        }
+    }
+
+    /// Grammar head (also the CLI `--method` value).
+    pub fn head(self) -> &'static str {
+        match self {
+            DenseLoss::Kld => "fullkd",
+            DenseLoss::Rkl => "rkl",
+            DenseLoss::Frkl => "frkl",
+            DenseLoss::Mse => "mse",
+            DenseLoss::L1 => "l1",
+        }
+    }
+
+    /// Paper-table display name.
+    pub fn table_name(self) -> &'static str {
+        match self {
+            DenseLoss::Kld => "FullKD",
+            DenseLoss::Rkl => "KLD (R)",
+            DenseLoss::Frkl => "KLD (F+R)",
+            DenseLoss::Mse => "MSE",
+            DenseLoss::L1 => "L1",
+        }
+    }
+}
+
+/// Table 9's adaptive easy/hard LR split: tokens whose cached teacher
+/// confidence in the ground truth is below the `hard_frac` percentile train
+/// at `ratio`x the LR of easy tokens; mean LR stays 1.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct AdaptiveLr {
+    pub ratio: f32,
+    pub hard_frac: f32,
+}
+
+/// How a sparse target is constructed/reconstituted per token (paper §2–§3).
+/// The same variant drives both the dense-row oracle path (synthetic
+/// experiments) and the cached path (student training).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Variant {
+    /// vanilla Top-K, optionally renormalized (Fig 2a's biased baseline)
+    TopK { k: usize, normalize: bool },
+    /// Top-p nucleus with hard cap k
+    TopP { p: f32, k: usize },
+    /// Top-K + uniform residual smoothing (§3.1)
+    Smoothing { k: usize },
+    /// Top-K + ghost token for the residual (§3.2)
+    GhostToken { k: usize },
+    /// Top-K + residual assigned to the ground-truth label (§3.3)
+    NaiveFix { k: usize },
+    /// Random Sampling KD (§3.4): `rounds` importance samples from q ∝ p^temp
+    Rs { rounds: u32, temp: f32 },
+}
+
+impl Variant {
+    pub fn is_ghost(&self) -> bool {
+        matches!(self, Variant::GhostToken { .. })
+    }
+
+    pub fn name(&self) -> String {
+        match self {
+            Variant::TopK { k, .. } => format!("Top-K {k}"),
+            Variant::TopP { p, k } => format!("Top-p {p} (K={k})"),
+            Variant::Smoothing { k } => format!("Smoothing {k}"),
+            Variant::GhostToken { k } => format!("Ghost {k}"),
+            Variant::NaiveFix { k } => format!("NaiveFix {k}"),
+            Variant::Rs { rounds, temp } => format!("RS n={rounds} t={temp}"),
+        }
+    }
+}
+
+/// The training objective: what loss the student optimizes and from what
+/// teacher signal.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum Objective {
+    /// plain cross-entropy on the ground truth (no teacher)
+    Ce,
+    /// online dense distillation (teacher forward every step)
+    Dense { loss: DenseLoss, alpha: f32 },
+    /// offline sparse distillation from a logit cache
+    Sparse { variant: Variant, alpha: f32, adaptive: Option<AdaptiveLr> },
+}
+
+/// A complete, self-describing distillation configuration.
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct DistillSpec {
+    pub objective: Objective,
+}
+
+impl DistillSpec {
+    pub fn ce() -> DistillSpec {
+        DistillSpec { objective: Objective::Ce }
+    }
+
+    /// FullKD: online forward-KLD dense distillation.
+    pub fn full_kd() -> DistillSpec {
+        DistillSpec::dense(DenseLoss::Kld, 0.0)
+    }
+
+    pub fn dense(loss: DenseLoss, alpha: f32) -> DistillSpec {
+        DistillSpec { objective: Objective::Dense { loss, alpha } }
+    }
+
+    pub fn sparse(variant: Variant) -> DistillSpec {
+        DistillSpec { objective: Objective::Sparse { variant, alpha: 0.0, adaptive: None } }
+    }
+
+    /// Vanilla Top-K (no renormalization), the paper's Table 1 baseline.
+    pub fn topk(k: usize) -> DistillSpec {
+        DistillSpec::sparse(Variant::TopK { k, normalize: false })
+    }
+
+    /// RS-KD at temperature 1.
+    pub fn rs(rounds: u32) -> DistillSpec {
+        DistillSpec::sparse(Variant::Rs { rounds, temp: 1.0 })
+    }
+
+    /// Set the CE mixing weight (Dense/Sparse objectives only; no-op on Ce).
+    pub fn with_alpha(mut self, a: f32) -> DistillSpec {
+        match &mut self.objective {
+            Objective::Ce => {}
+            Objective::Dense { alpha, .. } => *alpha = a,
+            Objective::Sparse { alpha, .. } => *alpha = a,
+        }
+        self
+    }
+
+    /// Enable the Table 9 adaptive LR split (Sparse objectives only).
+    pub fn with_adaptive(mut self, adapt: AdaptiveLr) -> DistillSpec {
+        if let Objective::Sparse { adaptive, .. } = &mut self.objective {
+            *adaptive = Some(adapt);
+        }
+        self
+    }
+
+    /// Paper-table display name.
+    pub fn name(&self) -> String {
+        match self.objective {
+            Objective::Ce => "CE".into(),
+            Objective::Dense { loss, .. } => loss.table_name().into(),
+            Objective::Sparse { variant, .. } => variant.name(),
+        }
+    }
+
+    pub fn alpha(&self) -> f32 {
+        match self.objective {
+            Objective::Ce => 0.0,
+            Objective::Dense { alpha, .. } | Objective::Sparse { alpha, .. } => alpha,
+        }
+    }
+
+    /// Sparse objectives read a logit cache.
+    pub fn requires_cache(&self) -> bool {
+        matches!(self.objective, Objective::Sparse { .. })
+    }
+
+    /// Dense objectives run the teacher forward online.
+    pub fn requires_teacher(&self) -> bool {
+        matches!(self.objective, Objective::Dense { .. })
+    }
+
+    /// Worst-case sparse slots per token this spec's targets occupy, or
+    /// `None` for cache-free objectives. NaiveFix may append the label on
+    /// top of its k head slots; RS uses at most one slot per draw.
+    pub fn slot_demand(&self) -> Option<usize> {
+        let Objective::Sparse { variant, .. } = self.objective else { return None };
+        Some(match variant {
+            Variant::TopK { k, .. }
+            | Variant::TopP { k, .. }
+            | Variant::Smoothing { k }
+            | Variant::GhostToken { k } => k,
+            Variant::NaiveFix { k } => k + 1,
+            Variant::Rs { rounds, .. } => rounds as usize,
+        })
+    }
+
+    /// The cache this spec needs, or `None` for cache-free objectives.
+    pub fn cache_plan(&self) -> Option<CachePlan> {
+        let Objective::Sparse { variant, .. } = self.objective else { return None };
+        let kind = match variant {
+            Variant::Rs { rounds, temp } => CacheKind::Rs { rounds, temp },
+            Variant::TopK { .. }
+            | Variant::TopP { .. }
+            | Variant::Smoothing { .. }
+            | Variant::GhostToken { .. }
+            | Variant::NaiveFix { .. } => CacheKind::TopK,
+        };
+        Some(CachePlan { kind })
+    }
+
+    /// Typed compatibility check: can a cache of `cache` kind serve this
+    /// spec? Cache-free objectives accept anything (the cache is ignored).
+    pub fn check_cache(&self, cache: CacheKind) -> Result<(), SpecError> {
+        let Objective::Sparse { variant, .. } = self.objective else { return Ok(()) };
+        let err = |reason: String| {
+            Err(SpecError::Incompatible {
+                spec: self.to_string(),
+                cache: cache.to_string(),
+                reason,
+            })
+        };
+        match (variant, cache) {
+            (Variant::Rs { rounds, temp }, CacheKind::Rs { rounds: cr, temp: ct }) => {
+                if rounds != cr {
+                    return err(format!(
+                        "RS draws are merged x/{cr} count weights and cannot be re-drawn \
+                         as {rounds} rounds; rebuild the cache"
+                    ));
+                }
+                if (temp - ct).abs() > 1e-6 {
+                    return err(format!(
+                        "cached draws were taken at proposal temperature {ct}, not {temp}"
+                    ));
+                }
+                Ok(())
+            }
+            (Variant::Rs { .. }, CacheKind::TopK) => err(
+                "RS-KD needs importance-sampling draws; a Top-K head is deterministic \
+                 and biased (paper §2)"
+                    .into(),
+            ),
+            (_, CacheKind::TopK) => Ok(()),
+            (_, CacheKind::Rs { .. }) => err(
+                "Top-K-family reconstitution assumes a descending-probability head, but \
+                 RS caches store id-sorted draws — truncating them yields garbage targets"
+                    .into(),
+            ),
+        }
+    }
+}
+
+impl Default for DistillSpec {
+    fn default() -> DistillSpec {
+        DistillSpec::rs(50)
+    }
+}
+
+/// What kind of sparse targets a cache directory holds. Derived from a
+/// [`DistillSpec`] via [`DistillSpec::cache_plan`]; recorded in the cache's
+/// `index.json` so readers can enforce [`DistillSpec::check_cache`].
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub enum CacheKind {
+    /// the Top-`k_slots` head, ratio-encoded (serves every Top-K-family
+    /// variant with k <= k_slots)
+    TopK,
+    /// Random Sampling KD draws: `rounds` importance samples at `temp`,
+    /// exact 7-bit count encoding when temp == 1
+    Rs { rounds: u32, temp: f32 },
+}
+
+impl CacheKind {
+    /// The probability codec that losslessly (or near-losslessly) encodes
+    /// this kind's targets (paper Appendix D.1).
+    pub fn codec(self) -> ProbCodec {
+        match self {
+            CacheKind::TopK => ProbCodec::Ratio,
+            CacheKind::Rs { rounds, temp } => {
+                if (temp - 1.0).abs() < 1e-6 && rounds <= 128 {
+                    ProbCodec::Count { rounds }
+                } else {
+                    ProbCodec::Ratio
+                }
+            }
+        }
+    }
+
+    /// Parse the canonical kind string (`topk`, `rs:rounds=50,temp=1`).
+    /// Strict, unlike the spec grammar: a manifest tag describes what is
+    /// actually on disk, so `rs` parameters must be explicit — nothing is
+    /// defaults-filled (a guessed round count would defeat the
+    /// compatibility check the tag exists for).
+    pub fn parse(s: &str) -> Result<CacheKind, SpecError> {
+        if s == "topk" {
+            return Ok(CacheKind::TopK);
+        }
+        let err = |reason: &str| SpecError::Parse {
+            input: s.to_string(),
+            reason: reason.to_string(),
+        };
+        let body = s
+            .strip_prefix("rs:")
+            .ok_or_else(|| err("expected a cache kind: `topk` or `rs:rounds=N,temp=T`"))?;
+        let (mut rounds, mut temp) = (None, None);
+        for part in body.split(',') {
+            match part.split_once('=') {
+                Some(("rounds", v)) => {
+                    rounds = Some(v.parse::<u32>().map_err(|_| err("bad `rounds` value"))?)
+                }
+                Some(("temp", v)) => {
+                    temp = Some(v.parse::<f32>().map_err(|_| err("bad `temp` value"))?)
+                }
+                _ => return Err(err("unknown parameter in cache kind")),
+            }
+        }
+        let rounds = rounds.ok_or_else(|| err("cache kind `rs` requires explicit rounds=N"))?;
+        let temp = temp.ok_or_else(|| err("cache kind `rs` requires explicit temp=T"))?;
+        if rounds == 0 {
+            return Err(err("`rounds` must be >= 1"));
+        }
+        if !temp.is_finite() {
+            return Err(err("`temp` must be finite"));
+        }
+        Ok(CacheKind::Rs { rounds, temp })
+    }
+}
+
+impl fmt::Display for CacheKind {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            CacheKind::TopK => write!(f, "topk"),
+            CacheKind::Rs { rounds, temp } => write!(f, "rs:rounds={rounds},temp={temp}"),
+        }
+    }
+}
+
+/// Resolved cache requirement of a spec: the kind to build plus derived
+/// metadata (codec, registry/directory tag).
+#[derive(Clone, Copy, Debug, PartialEq)]
+pub struct CachePlan {
+    pub kind: CacheKind,
+}
+
+impl CachePlan {
+    pub fn codec(&self) -> ProbCodec {
+        self.kind.codec()
+    }
+
+    /// Filesystem-safe tag; equal tags mean one build can serve both specs,
+    /// so `Pipeline`'s registry memoizes on it.
+    pub fn dir_tag(&self) -> String {
+        match self.kind {
+            CacheKind::TopK => "topk".into(),
+            CacheKind::Rs { rounds, temp } => {
+                format!("rs-r{rounds}-t{}", format!("{temp}").replace('.', "p").replace('-', "m"))
+            }
+        }
+    }
+}
+
+impl fmt::Display for CachePlan {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        let codec = match self.codec() {
+            ProbCodec::Interval => "interval".to_string(),
+            ProbCodec::Ratio => "ratio".to_string(),
+            ProbCodec::Count { rounds } => format!("count/{rounds}"),
+        };
+        write!(f, "{} (codec {codec})", self.kind)
+    }
+}
+
+/// Typed spec-layer error: bad grammar, or a spec/cache pairing that cannot
+/// produce correct targets. Surfaced *before* any training step runs.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SpecError {
+    /// the string/JSON form did not parse
+    Parse { input: String, reason: String },
+    /// the spec needs a cache that the given cache kind cannot serve
+    Incompatible { spec: String, cache: String, reason: String },
+    /// the spec needs a cache and none was provided
+    MissingCache { spec: String },
+    /// the spec's targets need more sparse slots per token than the AOT
+    /// graphs provide — they would be silently truncated mid-training
+    SlotOverflow { spec: String, demand: usize, k_slots: usize },
+}
+
+impl fmt::Display for SpecError {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            SpecError::Parse { input, reason } => {
+                write!(f, "invalid distill spec {input:?}: {reason}")
+            }
+            SpecError::Incompatible { spec, cache, reason } => write!(
+                f,
+                "spec `{spec}` cannot be served from a `{cache}` cache: {reason}"
+            ),
+            SpecError::MissingCache { spec } => {
+                write!(f, "spec `{spec}` requires a sparse-logit cache but none was provided")
+            }
+            SpecError::SlotOverflow { spec, demand, k_slots } => write!(
+                f,
+                "spec `{spec}` needs up to {demand} sparse slots per token but the AOT \
+                 graphs' slot budget is {k_slots}; targets would be silently truncated — \
+                 lower k/rounds or re-export artifacts with a wider head"
+            ),
+        }
+    }
+}
+
+impl std::error::Error for SpecError {}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn all_variants() -> Vec<Variant> {
+        vec![
+            Variant::TopK { k: 12, normalize: false },
+            Variant::TopK { k: 50, normalize: true },
+            Variant::TopP { p: 0.98, k: 50 },
+            Variant::Smoothing { k: 50 },
+            Variant::GhostToken { k: 50 },
+            Variant::NaiveFix { k: 20 },
+            Variant::Rs { rounds: 50, temp: 1.0 },
+            Variant::Rs { rounds: 12, temp: 1.0 },
+            Variant::Rs { rounds: 50, temp: 0.8 },
+        ]
+    }
+
+    #[test]
+    fn cache_plan_maps_variants() {
+        assert_eq!(DistillSpec::ce().cache_plan(), None);
+        assert_eq!(DistillSpec::full_kd().cache_plan(), None);
+        assert_eq!(DistillSpec::topk(12).cache_plan().unwrap().kind, CacheKind::TopK);
+        assert_eq!(
+            DistillSpec::rs(50).cache_plan().unwrap().kind,
+            CacheKind::Rs { rounds: 50, temp: 1.0 }
+        );
+        // every top-k-family variant shares the one TopK cache
+        for v in [
+            Variant::TopP { p: 0.9, k: 10 },
+            Variant::Smoothing { k: 5 },
+            Variant::GhostToken { k: 5 },
+            Variant::NaiveFix { k: 5 },
+        ] {
+            assert_eq!(DistillSpec::sparse(v).cache_plan().unwrap().kind, CacheKind::TopK);
+        }
+    }
+
+    #[test]
+    fn codec_choice() {
+        assert_eq!(CacheKind::TopK.codec(), ProbCodec::Ratio);
+        assert_eq!(
+            CacheKind::Rs { rounds: 50, temp: 1.0 }.codec(),
+            ProbCodec::Count { rounds: 50 }
+        );
+        assert_eq!(CacheKind::Rs { rounds: 50, temp: 0.8 }.codec(), ProbCodec::Ratio);
+        assert_eq!(CacheKind::Rs { rounds: 200, temp: 1.0 }.codec(), ProbCodec::Ratio);
+    }
+
+    /// The full variant x cache-kind matrix: every pair either serves or
+    /// returns a typed error (acceptance criterion).
+    #[test]
+    fn compatibility_matrix_is_total_and_typed() {
+        let kinds = [
+            CacheKind::TopK,
+            CacheKind::Rs { rounds: 50, temp: 1.0 },
+            CacheKind::Rs { rounds: 12, temp: 1.0 },
+            CacheKind::Rs { rounds: 50, temp: 0.8 },
+        ];
+        for v in all_variants() {
+            let spec = DistillSpec::sparse(v);
+            let native = spec.cache_plan().unwrap().kind;
+            for kind in kinds {
+                let res = spec.check_cache(kind);
+                if kind == native {
+                    assert!(res.is_ok(), "{spec:?} must accept its own plan {kind:?}");
+                } else if matches!(v, Variant::Rs { .. }) || matches!(kind, CacheKind::Rs { .. })
+                {
+                    // any RS-side mismatch (kind, rounds, or temp) is typed
+                    let err = res.expect_err(&format!("{spec:?} over {kind:?} must fail"));
+                    assert!(
+                        matches!(err, SpecError::Incompatible { .. }),
+                        "expected Incompatible, got {err:?}"
+                    );
+                } else {
+                    // top-k family over the TopK cache always serves
+                    assert!(res.is_ok());
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn topk_over_rs_cache_is_rejected() {
+        // the exact silent-corruption case this module exists to prevent
+        let err = DistillSpec::topk(12)
+            .check_cache(CacheKind::Rs { rounds: 50, temp: 1.0 })
+            .unwrap_err();
+        let msg = err.to_string();
+        assert!(msg.contains("topk:k=12"), "{msg}");
+        assert!(msg.contains("rs:rounds=50"), "{msg}");
+    }
+
+    #[test]
+    fn cache_free_objectives_ignore_caches() {
+        for kind in [CacheKind::TopK, CacheKind::Rs { rounds: 5, temp: 1.0 }] {
+            assert!(DistillSpec::ce().check_cache(kind).is_ok());
+            assert!(DistillSpec::full_kd().check_cache(kind).is_ok());
+        }
+    }
+
+    #[test]
+    fn cache_kind_string_roundtrip() {
+        for kind in [
+            CacheKind::TopK,
+            CacheKind::Rs { rounds: 50, temp: 1.0 },
+            CacheKind::Rs { rounds: 12, temp: 0.8 },
+        ] {
+            assert_eq!(CacheKind::parse(&kind.to_string()).unwrap(), kind);
+        }
+        assert!(CacheKind::parse("ce").is_err());
+        assert!(CacheKind::parse("garbage!").is_err());
+        // strict: a manifest tag never gets defaults-filled — a guessed
+        // round count would defeat the compatibility check
+        assert!(CacheKind::parse("rs").is_err());
+        assert!(CacheKind::parse("rs:rounds=12").is_err());
+        assert!(CacheKind::parse("rs:temp=0.8").is_err());
+        assert!(CacheKind::parse("rs:rounds=0,temp=1").is_err());
+    }
+
+    #[test]
+    fn dir_tags_unique_per_plan() {
+        let tags: Vec<String> = all_variants()
+            .into_iter()
+            .map(|v| DistillSpec::sparse(v).cache_plan().unwrap().dir_tag())
+            .collect();
+        // top-k family all share "topk"; RS tags differ per (rounds, temp)
+        assert_eq!(tags.iter().filter(|t| *t == "topk").count(), 6);
+        let rs_tags: Vec<&String> = tags.iter().filter(|t| t.starts_with("rs-")).collect();
+        assert_eq!(rs_tags.len(), 3);
+        for w in rs_tags.windows(2) {
+            assert_ne!(w[0], w[1]);
+        }
+        assert!(rs_tags.iter().all(|t| !t.contains('.') && !t.contains(':')));
+    }
+
+    #[test]
+    fn slot_demand_per_variant() {
+        assert_eq!(DistillSpec::ce().slot_demand(), None);
+        assert_eq!(DistillSpec::full_kd().slot_demand(), None);
+        assert_eq!(DistillSpec::topk(12).slot_demand(), Some(12));
+        // NaiveFix may append the ground-truth label beyond its head
+        assert_eq!(DistillSpec::sparse(Variant::NaiveFix { k: 12 }).slot_demand(), Some(13));
+        assert_eq!(DistillSpec::rs(50).slot_demand(), Some(50));
+        assert_eq!(
+            DistillSpec::sparse(Variant::TopP { p: 0.9, k: 25 }).slot_demand(),
+            Some(25)
+        );
+    }
+
+    #[test]
+    fn builder_helpers() {
+        let s = DistillSpec::rs(12)
+            .with_alpha(0.1)
+            .with_adaptive(AdaptiveLr { ratio: 2.0, hard_frac: 0.5 });
+        assert!((s.alpha() - 0.1).abs() < 1e-9);
+        assert!(s.requires_cache());
+        assert!(!s.requires_teacher());
+        assert!(DistillSpec::full_kd().requires_teacher());
+        let Objective::Sparse { adaptive: Some(a), .. } = s.objective else { panic!() };
+        assert!((a.ratio - 2.0).abs() < 1e-9);
+    }
+}

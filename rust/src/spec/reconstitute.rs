@@ -1,0 +1,270 @@
+//! The single reconstitution engine (paper §2–§3): turn a sparse teacher
+//! head into the target the student trains on, for every [`Variant`].
+//!
+//! This logic used to exist twice — once in `trainer::reconstitute` (cached
+//! heads) and once in `sampling::build_target` (dense rows) — and the two
+//! copies had already drifted. Now both paths meet here:
+//!
+//! * the trainer decodes a cached head and calls [`reconstitute`];
+//! * the synthetic/estimator path sparsifies a dense row with the
+//!   `sampling` primitives and calls [`reconstitute`] on the result
+//!   ([`build_target`]).
+//!
+//! Head conventions (enforced by the cache codecs and the sampler): Top-K
+//! heads are sorted descending by probability; RS draws are id-sorted with
+//! weights summing to 1.
+
+use crate::cache::SparseTarget;
+use crate::spec::{AdaptiveLr, DistillSpec, Objective, Variant};
+use crate::util::rng::Pcg;
+
+/// What the student trainer feeds `train_sparse`: target + scalar knobs.
+#[derive(Clone, Debug, Default)]
+pub struct TrainTarget {
+    pub target: SparseTarget,
+    /// uniform smoothing constant added to every class in-kernel
+    pub smooth_c: f32,
+    /// 1.0 enables the ghost-token residual term
+    pub ghost_on: f32,
+    /// teacher confidence in the ground-truth label (drives [`AdaptiveLr`])
+    pub label_conf: f32,
+}
+
+/// Reconstitute one sparse head into the target `variant` asks for.
+/// `label` is the ground-truth token (used by NaiveFix and `label_conf`).
+pub fn reconstitute(
+    cached: &SparseTarget,
+    label: u32,
+    vocab: usize,
+    variant: Variant,
+) -> TrainTarget {
+    let label_conf = cached
+        .ids
+        .iter()
+        .position(|&i| i == label)
+        .map(|j| cached.probs[j])
+        .unwrap_or(0.0);
+    let ghost_on = variant.is_ghost() as i32 as f32;
+    let (ids, probs, smooth_c) = match variant {
+        Variant::Rs { .. } => (cached.ids.clone(), cached.probs.clone(), 0.0),
+        Variant::TopK { k, normalize } => {
+            let k = k.min(cached.ids.len());
+            let ids = cached.ids[..k].to_vec();
+            let mut vals = cached.probs[..k].to_vec();
+            if normalize {
+                let z: f32 = vals.iter().sum();
+                if z > 0.0 {
+                    vals.iter_mut().for_each(|v| *v /= z);
+                }
+            }
+            (ids, vals, 0.0)
+        }
+        Variant::TopP { p, k } => {
+            let mut ids = Vec::new();
+            let mut vals = Vec::new();
+            let mut mass = 0.0f32;
+            for (&id, &v) in cached.ids.iter().zip(cached.probs.iter()).take(k) {
+                ids.push(id);
+                vals.push(v);
+                mass += v;
+                if mass >= p {
+                    break;
+                }
+            }
+            (ids, vals, 0.0)
+        }
+        Variant::Smoothing { k } => {
+            let k = k.min(cached.ids.len());
+            let ids = cached.ids[..k].to_vec();
+            let vals = cached.probs[..k].to_vec();
+            let residual = (1.0 - vals.iter().sum::<f32>()).max(0.0);
+            (ids, vals, residual / vocab as f32)
+        }
+        Variant::GhostToken { k } => {
+            let k = k.min(cached.ids.len());
+            (cached.ids[..k].to_vec(), cached.probs[..k].to_vec(), 0.0)
+        }
+        Variant::NaiveFix { k } => {
+            let k = k.min(cached.ids.len());
+            let mut ids = cached.ids[..k].to_vec();
+            let mut vals = cached.probs[..k].to_vec();
+            let residual = (1.0 - vals.iter().sum::<f32>()).max(0.0);
+            if let Some(j) = ids.iter().position(|&i| i == label) {
+                vals[j] += residual;
+            } else {
+                ids.push(label);
+                vals.push(residual);
+            }
+            (ids, vals, 0.0)
+        }
+    };
+    TrainTarget { target: SparseTarget { ids, probs }, smooth_c, ghost_on, label_conf }
+}
+
+/// Build the training target for `spec` from a *dense* teacher row: sparsify
+/// with the `sampling` primitives, then reconstitute. Returns `None` for CE
+/// (one-hot ground truth, no teacher target). `rng` drives the RS draw.
+pub fn build_target(
+    probs: &[f32],
+    label: u32,
+    spec: &DistillSpec,
+    rng: &mut Pcg,
+) -> Option<TrainTarget> {
+    match spec.objective {
+        Objective::Ce => None,
+        Objective::Dense { .. } => Some(TrainTarget {
+            target: SparseTarget {
+                ids: (0..probs.len() as u32).collect(),
+                probs: probs.to_vec(),
+            },
+            ..Default::default()
+        }),
+        Objective::Sparse { variant, .. } => {
+            let head = match variant {
+                Variant::Rs { rounds, temp } => {
+                    crate::sampling::random_sampling(probs, rounds as usize, temp, rng)
+                }
+                Variant::TopK { k, .. }
+                | Variant::TopP { k, .. }
+                | Variant::Smoothing { k }
+                | Variant::GhostToken { k }
+                | Variant::NaiveFix { k } => crate::sampling::topk(probs, k),
+            };
+            Some(reconstitute(&head, label, probs.len(), variant))
+        }
+    }
+}
+
+/// Dense reconstruction of what the student is *effectively* asked to learn
+/// (scatter + smoothing; used by the toy experiments and estimator stats).
+pub fn effective_dense(t: &TrainTarget, vocab: usize) -> Vec<f32> {
+    let mut out = vec![t.smooth_c; vocab];
+    for (&i, &p) in t.target.ids.iter().zip(t.target.probs.iter()) {
+        out[i as usize] += p;
+    }
+    out
+}
+
+/// Per-token LR multipliers (Table 9): hard tokens (low teacher confidence
+/// in the label) get `ratio`x, mean held at 1. NaN confidences sort last
+/// (`total_cmp`) and compare as easy, so a corrupt teacher row degrades
+/// instead of panicking.
+pub fn adaptive_lr_scale(confs: &[f32], a: AdaptiveLr) -> Vec<f32> {
+    let mut sorted: Vec<f32> = confs.to_vec();
+    sorted.sort_by(f32::total_cmp);
+    let cut = sorted[((confs.len() as f32 * a.hard_frac) as usize).min(confs.len() - 1)];
+    let q = a.hard_frac;
+    let norm = 1.0 / (q * a.ratio + (1.0 - q)).max(1e-6);
+    confs
+        .iter()
+        .map(|&c| if c <= cut { a.ratio * norm } else { norm })
+        .collect()
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn cached_topk() -> SparseTarget {
+        // sorted descending, mass 0.8
+        SparseTarget { ids: vec![7, 3, 9, 1], probs: vec![0.4, 0.2, 0.15, 0.05] }
+    }
+
+    #[test]
+    fn topk_truncates_and_normalizes() {
+        let tt = reconstitute(&cached_topk(), 0, 64, Variant::TopK { k: 2, normalize: true });
+        assert_eq!(tt.target.ids, vec![7, 3]);
+        assert!((tt.target.mass() - 1.0).abs() < 1e-6);
+        assert_eq!(tt.smooth_c, 0.0);
+        assert_eq!(tt.label_conf, 0.0);
+    }
+
+    #[test]
+    fn smoothing_residual_per_row() {
+        let tt = reconstitute(&cached_topk(), 0, 100, Variant::Smoothing { k: 4 });
+        assert!((tt.target.mass() + tt.smooth_c * 100.0 - 1.0).abs() < 1e-5);
+    }
+
+    #[test]
+    fn naive_fix_adds_label() {
+        let tt = reconstitute(&cached_topk(), 42, 64, Variant::NaiveFix { k: 4 });
+        assert!(tt.target.ids.contains(&42));
+        assert!((tt.target.mass() - 1.0).abs() < 1e-5);
+        assert_eq!(tt.label_conf, 0.0); // label was not in the cached head
+
+        let tt2 = reconstitute(&cached_topk(), 3, 64, Variant::NaiveFix { k: 4 });
+        assert!((tt2.target.mass() - 1.0).abs() < 1e-5);
+        assert!((tt2.label_conf - 0.2).abs() < 1e-6);
+    }
+
+    #[test]
+    fn topp_cuts_at_mass() {
+        let tt = reconstitute(&cached_topk(), 0, 64, Variant::TopP { p: 0.55, k: 4 });
+        assert_eq!(tt.target.ids, vec![7, 3]); // 0.4 + 0.2 >= 0.55
+    }
+
+    #[test]
+    fn ghost_sets_flag() {
+        let tt = reconstitute(&cached_topk(), 0, 64, Variant::GhostToken { k: 4 });
+        assert_eq!(tt.ghost_on, 1.0);
+        assert!((tt.target.mass() - 0.8).abs() < 1e-6);
+    }
+
+    #[test]
+    fn rs_passes_draws_through() {
+        let draws = SparseTarget { ids: vec![1, 5, 9], probs: vec![0.2, 0.6, 0.2] };
+        let tt = reconstitute(&draws, 5, 64, Variant::Rs { rounds: 5, temp: 1.0 });
+        assert_eq!(tt.target, draws);
+        assert!((tt.label_conf - 0.6).abs() < 1e-6);
+    }
+
+    #[test]
+    fn adaptive_scale_mean_one() {
+        let confs: Vec<f32> = (0..100).map(|i| i as f32 / 100.0).collect();
+        let sc = adaptive_lr_scale(&confs, AdaptiveLr { ratio: 2.0, hard_frac: 0.5 });
+        let mean: f32 = sc.iter().sum::<f32>() / sc.len() as f32;
+        assert!((mean - 1.0).abs() < 0.05, "mean {mean}");
+        assert!(sc[0] > sc[99]);
+        assert!((sc[0] / sc[99] - 2.0).abs() < 1e-4);
+    }
+
+    #[test]
+    fn adaptive_scale_survives_nan_confidence() {
+        // regression: the old partial_cmp(..).unwrap() comparator panicked
+        let confs = vec![0.1, f32::NAN, 0.9, 0.4, f32::NAN, 0.2];
+        let sc = adaptive_lr_scale(&confs, AdaptiveLr { ratio: 2.0, hard_frac: 0.5 });
+        assert_eq!(sc.len(), confs.len());
+        // non-NaN tokens still get finite positive multipliers
+        for (&c, &s) in confs.iter().zip(sc.iter()) {
+            if c.is_finite() {
+                assert!(s.is_finite() && s > 0.0, "conf {c} -> scale {s}");
+            }
+        }
+    }
+
+    #[test]
+    fn dense_build_target_matches_reconstitute() {
+        // the dense path and the cached path must agree: sparsify then
+        // reconstitute == reconstitute(cached head)
+        let probs: Vec<f32> = {
+            let mut p: Vec<f32> = (1..=32).map(|i| 1.0 / i as f32).collect();
+            let z: f32 = p.iter().sum();
+            p.iter_mut().for_each(|x| *x /= z);
+            p
+        };
+        let head = crate::sampling::topk(&probs, 8);
+        for variant in [
+            Variant::TopK { k: 8, normalize: true },
+            Variant::Smoothing { k: 8 },
+            Variant::NaiveFix { k: 8 },
+            Variant::TopP { p: 0.5, k: 8 },
+        ] {
+            let spec = DistillSpec::sparse(variant);
+            let mut rng = Pcg::new(0);
+            let via_dense = build_target(&probs, 3, &spec, &mut rng).unwrap();
+            let via_cache = reconstitute(&head, 3, probs.len(), variant);
+            assert_eq!(via_dense.target, via_cache.target, "{variant:?}");
+            assert_eq!(via_dense.smooth_c, via_cache.smooth_c, "{variant:?}");
+        }
+    }
+}

@@ -4,7 +4,7 @@
 //! independent check of Appendix A.4/A.6 in a second implementation.
 
 use crate::metrics::ece::{calibration, Calibration};
-use crate::sampling::{build_target, effective_dense, Method};
+use crate::spec::{build_target, effective_dense, DistillSpec, Variant};
 use crate::toynn::mlp::Mlp;
 use crate::util::rng::Pcg;
 
@@ -83,11 +83,14 @@ where
                     let dense: Vec<f32> = match m {
                         ToyMethod::FullKd => trow.to_vec(),
                         ToyMethod::TopK { k } => {
-                            let tt = build_target(trow, y[i], Method::TopK { k, normalize: false }, &mut rng).unwrap();
+                            let spec =
+                                DistillSpec::sparse(Variant::TopK { k, normalize: false });
+                            let tt = build_target(trow, y[i], &spec, &mut rng).unwrap();
                             effective_dense(&tt, n_classes)
                         }
                         ToyMethod::RandomSampling { rounds } => {
-                            let tt = build_target(trow, y[i], Method::RandomSampling { rounds, temp: 1.0 }, &mut rng).unwrap();
+                            let spec = DistillSpec::rs(rounds as u32);
+                            let tt = build_target(trow, y[i], &spec, &mut rng).unwrap();
                             effective_dense(&tt, n_classes)
                         }
                         ToyMethod::Ce => unreachable!(),

@@ -57,16 +57,25 @@ pub fn stats_of(mut samples: Vec<Duration>) -> BenchStats {
 }
 
 /// Plain-text experiment report: paper-style table with aligned columns,
-/// echoed to stdout and written to `target/experiments/<id>.txt`.
+/// echoed to stdout and written to `target/experiments/<id>.txt`. Structured
+/// metadata (e.g. the `DistillSpec` JSON of each run) lands in a
+/// `<id>.meta.json` sidecar so downstream tooling shares one parser with the
+/// CLI and cache manifests (`util::json`).
 pub struct Report {
     id: String,
     title: String,
     lines: Vec<String>,
+    meta: Vec<(String, crate::util::json::Json)>,
 }
 
 impl Report {
     pub fn new(id: &str, title: &str) -> Report {
-        Report { id: id.to_string(), title: title.to_string(), lines: Vec::new() }
+        Report { id: id.to_string(), title: title.to_string(), lines: Vec::new(), meta: Vec::new() }
+    }
+
+    /// Attach a structured metadata entry (written to `<id>.meta.json`).
+    pub fn meta(&mut self, key: &str, value: crate::util::json::Json) {
+        self.meta.push((key.to_string(), value));
     }
 
     pub fn line(&mut self, s: impl AsRef<str>) {
@@ -114,6 +123,15 @@ impl Report {
             eprintln!("warning: could not write {}: {e}", path.display());
         } else {
             println!("[report written to {}]", path.display());
+        }
+        if !self.meta.is_empty() {
+            let obj = crate::util::json::Json::Obj(
+                self.meta.iter().map(|(k, v)| (k.clone(), v.clone())).collect(),
+            );
+            let meta_path = dir.join(format!("{}.meta.json", self.id));
+            if let Err(e) = std::fs::write(&meta_path, obj.to_string()) {
+                eprintln!("warning: could not write {}: {e}", meta_path.display());
+            }
         }
     }
 }

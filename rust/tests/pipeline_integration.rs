@@ -5,11 +5,11 @@
 use std::path::PathBuf;
 
 use rskd::cache::{CacheReader, ProbCodec, SparseTarget};
-use rskd::coordinator::trainer::SparseVariant;
-use rskd::coordinator::{CacheKind, Pipeline, PipelineConfig, StudentMethod};
+use rskd::coordinator::{Pipeline, PipelineConfig};
 use rskd::evalsuite::tasks::{build_cloze_tasks, zero_shot_score};
 use rskd::model::ModelState;
 use rskd::runtime::{Engine, HostTensor};
+use rskd::spec::{CacheKind, DistillSpec, SpecError};
 
 fn artifacts() -> Option<PathBuf> {
     let p = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/small"));
@@ -36,7 +36,7 @@ fn full_stack_end_to_end() {
         eprintln!("skipping: artifacts/small not built");
         return;
     };
-    let pipe = Pipeline::prepare(micro_cfg(dir)).unwrap();
+    let mut pipe = Pipeline::prepare(micro_cfg(dir)).unwrap();
     assert!(pipe.teacher_losses.iter().all(|l| l.is_finite()));
     assert!(
         pipe.teacher_losses.last().unwrap() < pipe.teacher_losses.first().unwrap(),
@@ -44,53 +44,69 @@ fn full_stack_end_to_end() {
         pipe.teacher_losses
     );
 
-    // --- cache build via the L1 Pallas sampler graph ---
-    let (rs_cache, rs_stats) = pipe.build_cache(CacheKind::Rs { rounds: 50, temp: 1.0 }, "it-rs", 1).unwrap();
-    assert!(rs_stats.cache.positions > 1000);
-    assert!(rs_stats.avg_unique_tokens > 1.0 && rs_stats.avg_unique_tokens <= 50.0);
+    // --- cache build via the L1 Pallas sampler graph (registry-resolved) ---
+    let rs_spec = DistillSpec::rs(50);
+    let rs = pipe.ensure_cache(&rs_spec).unwrap().unwrap();
+    assert!(rs.stats.cache.positions > 1000);
+    assert!(rs.stats.avg_unique_tokens > 1.0 && rs.stats.avg_unique_tokens <= 50.0);
+    // the manifest records the kind the spec derived
+    assert_eq!(rs.reader.cache_kind().unwrap(), CacheKind::Rs { rounds: 50, temp: 1.0 });
     // count codec: decoded weights are multiples of 1/50 and sum to 1
-    let t = rs_cache.get(0).unwrap();
+    let t = rs.reader.get(0).unwrap();
     let mass: f32 = t.probs.iter().sum();
     assert!((mass - 1.0).abs() < 1e-4, "mass {mass}");
     for &p in &t.probs {
         let x = p * 50.0;
         assert!((x - x.round()).abs() < 1e-4);
     }
+    // memoization: a second spec with the same plan reuses the build
+    let rs_again = pipe.ensure_cache(&rs_spec.with_alpha(0.1)).unwrap().unwrap();
+    assert!(std::sync::Arc::ptr_eq(&rs.reader, &rs_again.reader));
 
-    let (tk_cache, tk_stats) = pipe.build_cache(CacheKind::TopK, "it-tk", 2).unwrap();
-    assert_eq!(tk_stats.cache.positions, rs_stats.cache.positions);
-    let t = tk_cache.get(10).unwrap();
+    let tk_spec = DistillSpec::topk(12);
+    let tk = pipe.ensure_cache(&tk_spec).unwrap().unwrap();
+    assert_eq!(tk.stats.cache.positions, rs.stats.cache.positions);
+    assert_eq!(tk.reader.cache_kind().unwrap(), CacheKind::TopK);
+    let t = tk.reader.get(10).unwrap();
     // ratio codec decodes sorted descending
     for w in t.probs.windows(2) {
         assert!(w[0] >= w[1] - 1e-6);
     }
 
     // storage: 24-bit slots -> RS cache stores ~3 bytes per kept logit
-    let bytes_per_slot = rs_stats.cache.bytes as f64 / rs_stats.cache.slots as f64;
+    let bytes_per_slot = rs.stats.cache.bytes as f64 / rs.stats.cache.slots as f64;
     assert!(bytes_per_slot < 3.2, "bytes/slot {bytes_per_slot}");
 
-    // --- students across methods ---
-    let (_, tr_ce, ev_ce) = pipe.run_student(&StudentMethod::Ce, None, 5).unwrap();
+    // --- typed incompatibility: Top-K spec over the RS cache must fail
+    //     *before* training (this used to silently truncate id-sorted draws)
+    let err = pipe.run_student(&tk_spec, Some(&rs.reader), 5).unwrap_err();
+    let spec_err = err.downcast_ref::<SpecError>().expect("typed SpecError");
+    assert!(matches!(spec_err, SpecError::Incompatible { .. }), "{spec_err:?}");
+    // ... and so must an RS spec over the Top-K cache, or a missing cache
+    let err = pipe.run_student(&rs_spec, Some(&tk.reader), 5).unwrap_err();
+    assert!(matches!(err.downcast_ref::<SpecError>(), Some(SpecError::Incompatible { .. })));
+    let err = pipe.run_student(&rs_spec, None, 5).unwrap_err();
+    assert!(matches!(err.downcast_ref::<SpecError>(), Some(SpecError::MissingCache { .. })));
+    // ... and a spec wider than the AOT slot budget is rejected up front
+    let k_slots = pipe.engine.manifest().k_slots;
+    let wide = DistillSpec::topk(k_slots + 1);
+    let err = pipe.run_student(&wide, Some(&tk.reader), 5).unwrap_err();
+    assert!(matches!(err.downcast_ref::<SpecError>(), Some(SpecError::SlotOverflow { .. })));
+
+    // --- students across methods (run_spec resolves caches itself) ---
+    let (_, tr_ce, ev_ce) = pipe.run_spec(&DistillSpec::ce(), 5).unwrap();
     assert!(!tr_ce.diverged);
     assert!(ev_ce.lm_loss.is_finite() && ev_ce.lm_loss > 0.0);
 
-    let rs_method = StudentMethod::Sparse { variant: SparseVariant::Rs, alpha: 0.0, adaptive: None };
-    let (student_rs, tr_rs, ev_rs) = pipe.run_student(&rs_method, Some(&rs_cache), 5).unwrap();
+    let (student_rs, tr_rs, ev_rs) = pipe.run_spec(&rs_spec, 5).unwrap();
     assert!(!tr_rs.diverged);
     assert!(tr_rs.losses.last().unwrap() < tr_rs.losses.first().unwrap());
     assert!(ev_rs.spec_accept_pct > 10.0 && ev_rs.spec_accept_pct <= 100.0);
 
-    let tk_method = StudentMethod::Sparse {
-        variant: SparseVariant::TopK { k: 12, normalize: false },
-        alpha: 0.0,
-        adaptive: None,
-    };
-    let (_, tr_tk, _) = pipe.run_student(&tk_method, Some(&tk_cache), 5).unwrap();
+    let (_, tr_tk, _) = pipe.run_spec(&tk_spec, 5).unwrap();
     assert!(!tr_tk.diverged);
 
-    let (_, tr_fk, ev_fk) = pipe
-        .run_student(&StudentMethod::DenseOnline { kind: "kld", alpha: 0.0 }, None, 5)
-        .unwrap();
+    let (_, tr_fk, ev_fk) = pipe.run_spec(&DistillSpec::full_kd(), 5).unwrap();
     assert!(!tr_fk.diverged);
     assert!(ev_fk.lm_loss.is_finite());
 
@@ -173,17 +189,30 @@ fn sparse_graph_generalizes_dense() {
 }
 
 /// Cache addressing is positional: reading a range across shard boundaries
-/// returns the same targets as pointwise gets.
+/// returns the same targets as pointwise gets. Also pins the manifest kind
+/// round-trip the spec-layer compatibility checks rely on.
 #[test]
 fn cache_range_consistency() {
     let dir = std::env::temp_dir().join(format!("rskd-it-cache-{}", std::process::id()));
     let _ = std::fs::remove_dir_all(&dir);
-    let w = rskd::cache::CacheWriter::create(&dir, ProbCodec::Ratio, 7, 4).unwrap();
+    let w = rskd::cache::CacheWriter::create_with_kind(
+        &dir,
+        ProbCodec::Ratio,
+        7,
+        4,
+        Some(CacheKind::TopK.to_string()),
+    )
+    .unwrap();
     for pos in 0..40u64 {
         assert!(w.push(pos, SparseTarget { ids: vec![pos as u32, 500], probs: vec![0.5, 0.25] }));
     }
     w.finish().unwrap();
     let r = CacheReader::open(&dir).unwrap();
+    let kind = r.cache_kind().unwrap();
+    assert_eq!(kind, CacheKind::TopK);
+    // the kind gates specs: a Top-K family spec passes, an RS spec does not
+    assert!(DistillSpec::topk(5).check_cache(kind).is_ok());
+    assert!(DistillSpec::rs(5).check_cache(kind).is_err());
     let range = r.get_range(3, 20);
     for (i, t) in range.iter().enumerate() {
         assert_eq!(t.ids, r.get(3 + i as u64).unwrap().ids);
