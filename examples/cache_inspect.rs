@@ -5,6 +5,9 @@
 //!
 //! ```sh
 //! cargo run --release --example cache_inspect
+//! # live serving stats from a running `rskd serve` (docs/SERVING.md):
+//! cargo run --release --example cache_inspect -- --stats --port 7411
+//! cargo run --release --example cache_inspect -- --stats --unix /tmp/rskd.sock
 //! ```
 
 use anyhow::Result;
@@ -14,10 +17,71 @@ use rskd::cache::{CacheReader, CacheWriter, SparseTarget};
 use rskd::report::Report;
 use rskd::sampling::zipf::zipf;
 use rskd::sampling::{random_sampling, topk};
+use rskd::serve::stats::bucket_upper_us;
+use rskd::serve::{Endpoint, ServeClient};
 use rskd::spec::CachePlan;
+use rskd::util::cli::Args;
 use rskd::util::rng::Pcg;
 
+/// `--stats`: connect to a running server and pretty-print its advertised
+/// manifest, hot-shard counters, and the latency histogram with p50/p99.
+fn stats_mode(args: &Args) -> Result<()> {
+    let endpoint = Endpoint::from_cli(args.get("unix"), args.usize_or("port", 7411) as u16);
+    let mut client = ServeClient::connect(&endpoint)?;
+    let m = client.manifest()?;
+    let s = client.stats()?;
+    let mut report = Report::new("cache_inspect_stats", "Live sparse-logit server stats");
+    report.line(format!(
+        "server {endpoint} | cache v{} | kind {} | {} positions, {} shards, {} bytes",
+        m.cache_version,
+        m.kind.as_deref().unwrap_or("<untagged>"),
+        m.positions,
+        m.shard_count,
+        m.bytes
+    ));
+    report.line(format!(
+        "requests {} | rejected {} | errors {} | shard loads {} ({} coalesced in flight)",
+        s.requests, s.rejected, s.errors, s.shard_loads, s.coalesced
+    ));
+
+    report.line("--- latency histogram (log2 µs buckets) ---");
+    let max = s.hist.iter().copied().max().unwrap_or(0);
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for (i, &count) in s.hist.iter().enumerate() {
+        if count == 0 {
+            continue;
+        }
+        let bar = "#".repeat(((count as f64 / max as f64) * 40.0).ceil() as usize);
+        let lo = if i == 0 { 0 } else { bucket_upper_us(i - 1) };
+        rows.push(vec![format!("[{lo}, {}) µs", bucket_upper_us(i)), count.to_string(), bar]);
+    }
+    if rows.is_empty() {
+        report.line("(no range requests recorded yet)");
+    } else {
+        report.table(&["latency", "count", ""], &rows);
+        report.line(format!(
+            "p50 {} µs | p99 {} µs (upper bucket edges)",
+            s.p50_us().unwrap_or(0),
+            s.p99_us().unwrap_or(0)
+        ));
+    }
+
+    let hot = s.hot_shards(10);
+    if !hot.is_empty() {
+        report.line("--- hot shards (requests overlapping each shard) ---");
+        let rows: Vec<Vec<String>> =
+            hot.iter().map(|(i, n)| vec![format!("shard {i}"), n.to_string()]).collect();
+        report.table(&["shard", "hits"], &rows);
+    }
+    report.finish();
+    Ok(())
+}
+
 fn main() -> Result<()> {
+    let args = Args::from_env();
+    if args.bool_or("stats", false) {
+        return stats_mode(&args);
+    }
     let mut report = Report::new("cache_inspect", "Sparse-logit cache internals (Appendix D.1)");
 
     report.line("--- slot layout: 24 bits = 17-bit token id + 7-bit probability ---");

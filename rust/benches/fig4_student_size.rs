@@ -45,7 +45,7 @@ fn main() {
                 steps,
                 LrSchedule::paper_default(lr, steps),
                 &spec,
-                Some(&cache.reader),
+                Some(cache.reader.as_ref()),
                 Some(&pipe.teacher),
             )
             .unwrap();

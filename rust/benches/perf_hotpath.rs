@@ -5,10 +5,16 @@
 //!             out-of-order writer), cold/warm lazy reads, cache block
 //!             assembly, RS sampling (pure rust vs graph), host<->device
 //!             transfer share from engine stats.
+//!  serve    — loopback round-trip overhead of the sparse-logit server vs a
+//!             direct reader call, and a 4-client concurrent burst with
+//!             server-side p50/p99 (the `load-gen` subcommand is the
+//!             heavier, configurable version of this section).
 //!
-//! The cache-layer section is host-only and runs even when `artifacts/` is
-//! missing, so the storage hot path is benchmarkable on any machine.
+//! The cache-layer and serve sections are host-only and run even when
+//! `artifacts/` is missing, so the storage + serving hot paths are
+//! benchmarkable on any machine.
 
+use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use rskd::cache::quant::ProbCodec;
@@ -19,6 +25,7 @@ use rskd::report::Report;
 use rskd::runtime::HostTensor;
 use rskd::sampling::random_sampling;
 use rskd::sampling::zipf::zipf;
+use rskd::serve::{Endpoint, ServeClient, ServeConfig, Server};
 use rskd::spec::Variant;
 use rskd::util::bench::bench;
 use rskd::util::rng::Pcg;
@@ -112,9 +119,79 @@ fn cache_layer_benches(report: &mut Report) {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Serving layer: wire round-trip vs direct reader, then a 4-client burst.
+fn serve_layer_benches(report: &mut Report) {
+    let p = zipf(512, 1.0);
+    let mut rng = Pcg::new(11);
+    let n_positions = 8192u64;
+    let dir = std::env::temp_dir().join(format!("rskd-perf-serve-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 512, 256).unwrap();
+    for pos in 0..n_positions {
+        assert!(w.push(pos, random_sampling(&p, 50, 1.0, &mut rng)));
+    }
+    w.finish().unwrap();
+
+    let reader = Arc::new(CacheReader::open(&dir).unwrap());
+    let ep = Endpoint::Tcp(std::net::SocketAddr::from(([127, 0, 0, 1], 0)));
+    let server = Server::start(Arc::clone(&reader), ep, ServeConfig::default()).unwrap();
+    let endpoint = server.endpoint().clone();
+
+    report.line("--- serve: loopback TCP server over the same cache ---");
+    let budget = Duration::from_millis(800);
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let direct = CacheReader::open(&dir).unwrap();
+    let _ = direct.get_range(2048, 512); // warm the shard
+    let st = bench(2, budget, || {
+        std::hint::black_box(direct.get_range(2048, 512).len());
+    });
+    rows.push(vec!["direct warm get_range(512)".into(), format!("{:.3} ms", st.per_iter_ms())]);
+    let mut client = ServeClient::connect(&endpoint).unwrap();
+    let _ = client.get_range(2048, 512).unwrap();
+    let st = bench(2, budget, || {
+        std::hint::black_box(client.get_range(2048, 512).unwrap().len());
+    });
+    rows.push(vec!["served warm get_range(512)".into(), format!("{:.3} ms", st.per_iter_ms())]);
+
+    // 4 concurrent clients sweeping overlapping ranges
+    let t0 = Instant::now();
+    let per_client = 64usize;
+    std::thread::scope(|s| {
+        for c in 0..4u64 {
+            let endpoint = &endpoint;
+            s.spawn(move || {
+                let mut client = ServeClient::connect(endpoint).unwrap();
+                let mut rng = Pcg::new(100 + c);
+                for _ in 0..per_client {
+                    let start = rng.below(n_positions - 512);
+                    assert_eq!(client.get_range(start, 512).unwrap().len(), 512);
+                }
+            });
+        }
+    });
+    let wall = t0.elapsed().as_secs_f64();
+    rows.push(vec![
+        "4-client burst (4 x 64 ranges)".into(),
+        format!("{:.0} ranges/s", 4.0 * per_client as f64 / wall),
+    ]);
+    report.table(&["serve hot path", "median / rate"], &rows);
+    let snap = server.stats_snapshot();
+    report.line(format!(
+        "server: {} ranges, p50 {} µs, p99 {} µs, {} shard loads ({} coalesced)",
+        snap.requests,
+        snap.p50_us().unwrap_or(0),
+        snap.p99_us().unwrap_or(0),
+        snap.shard_loads,
+        snap.coalesced
+    ));
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
 fn main() {
     let mut report = Report::new("perf_hotpath", "Hot-path timings per layer");
     cache_layer_benches(&mut report);
+    serve_layer_benches(&mut report);
 
     if !expt::artifacts_exist("artifacts/small") {
         println!("[engine sections skipped: artifacts/small missing]");
@@ -134,9 +211,9 @@ fn main() {
     // --- L3: batch assembly from cache (host) ---
     let mut loader = pipe.packed_loader(11, false, 0);
     let batch = loader.next_batch();
+    let rs50 = Variant::Rs { rounds: 50, temp: 1.0 };
     let st = bench(2, budget, || {
-        let blk =
-            assemble_sparse_block(&cache, &batch, v, k, Variant::Rs { rounds: 50, temp: 1.0 }, None);
+        let blk = assemble_sparse_block(cache.as_ref(), &batch, v, k, rs50, None);
         std::hint::black_box(blk.val.len());
     });
     rows.push(vec!["L3 cache->block assembly".into(), format!("{:.3} ms", st.per_iter_ms())]);
@@ -176,8 +253,7 @@ fn main() {
 
     // --- L1 vs L2: pallas vs jnp sparse train step ---
     let student = rskd::model::ModelState::init(&pipe.engine, "student", 1).unwrap();
-    let blk =
-        assemble_sparse_block(&cache, &batch, v, k, Variant::Rs { rounds: 50, temp: 1.0 }, None);
+    let blk = assemble_sparse_block(cache.as_ref(), &batch, v, k, rs50, None);
     let mk_args = || {
         let [p, mm, vv, stp] = student.opt_inputs();
         vec![

@@ -68,8 +68,8 @@ fn main() {
         ),
     ];
     for (name, cache, spec) in cases {
-        let blk =
-            assemble_sparse_block(&cache.reader, &batch, v, k_slots, variant_of(&spec), None);
+        let variant = variant_of(&spec);
+        let blk = assemble_sparse_block(cache.reader.as_ref(), &batch, v, k_slots, variant, None);
         let g = pipe
             .engine
             .call(

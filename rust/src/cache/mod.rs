@@ -30,3 +30,28 @@ pub use format::{CacheManifest, ShardMeta, SparseTarget};
 pub use quant::ProbCodec;
 pub use reader::{CacheReader, ShardEntry, DEFAULT_RESIDENT_SHARDS};
 pub use writer::{CacheStats, CacheWriter, RingBuffer};
+
+/// Anything the student trainer can pull sparse targets from: a local
+/// [`CacheReader`], or `serve::ServedReader` speaking the wire protocol to a
+/// remote cache server. `trainer::train_student` and
+/// `coordinator::Pipeline::run_student` are written against this trait, so a
+/// student consumes a served cache unchanged.
+pub trait TargetSource: Sync {
+    /// Targets for `[start, start + len)`; missing positions come back as
+    /// empty targets (misaligned-packing semantics), I/O or transport
+    /// failures as errors.
+    fn try_get_range(&self, start: u64, len: usize) -> std::io::Result<Vec<SparseTarget>>;
+
+    /// The typed kind of targets this source holds, for
+    /// `spec::DistillSpec::check_cache` compatibility checks.
+    fn cache_kind(&self) -> Result<crate::spec::CacheKind, crate::spec::SpecError>;
+
+    /// Total distinct positions the source covers.
+    fn positions(&self) -> u64;
+
+    /// Panicking convenience over [`TargetSource::try_get_range`] — a corrupt
+    /// or unreachable cache must not silently train on empty targets.
+    fn get_range(&self, start: u64, len: usize) -> Vec<SparseTarget> {
+        self.try_get_range(start, len).expect("sparse-target source read failed")
+    }
+}

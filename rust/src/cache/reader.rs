@@ -11,12 +11,19 @@
 //! never pays for the rest.
 //!
 //! The reader is `Sync`: `get`/`get_range` take `&self` and may be called
-//! from several trainer threads (the LRU sits behind a mutex; decoded shards
-//! are shared as `Arc<Shard>` so a hit never copies records).
+//! from several trainer threads or `serve::Server` workers (the LRU sits
+//! behind a mutex; decoded shards are shared as `Arc<Shard>` so a hit never
+//! copies records). Concurrent misses on the *same* shard are single-flight
+//! coalesced: the first caller decodes, everyone else blocks on a condvar and
+//! shares the `Arc` — a cold shard is read from disk exactly once no matter
+//! how many threads race for it ([`CacheReader::coalesced_loads`] counts the
+//! piggybackers).
 
+use std::collections::hash_map::Entry;
+use std::collections::HashMap;
 use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{Arc, Condvar, Mutex};
 
 use crate::cache::format::{
     self, CacheManifest, Shard, SparseTarget, INDEX_FILE, LEGACY_META_FILE,
@@ -43,14 +50,29 @@ struct Lru {
     slots: Vec<(usize, Arc<Shard>)>,
 }
 
+/// One in-flight shard decode: the leader publishes the result here and
+/// notifies; followers wait instead of re-reading the file. `io::Error` is
+/// not `Clone`, so followers get the error's message re-wrapped.
+struct Flight {
+    result: Mutex<Option<Result<Arc<Shard>, String>>>,
+    cv: Condvar,
+}
+
 pub struct CacheReader {
     entries: Vec<ShardEntry>,
     /// shard start positions (sorted) for binary search
     starts: Vec<u64>,
     lru: Mutex<Lru>,
     capacity: usize,
+    /// in-flight decodes, keyed by shard index (single-flight coalescing)
+    inflight: Mutex<HashMap<usize, Arc<Flight>>>,
     /// total shard decodes performed (reloads after eviction included)
     loads: AtomicU64,
+    /// shard requests that piggybacked on another thread's in-flight decode
+    coalesced: AtomicU64,
+    /// artificial per-decode delay in microseconds (fault injection: lets
+    /// serving tests and `load-gen` simulate slow disks deterministically)
+    load_delay_us: AtomicU64,
     pub positions: u64,
     pub rounds: u32,
     pub bytes: u64,
@@ -101,7 +123,10 @@ impl CacheReader {
             starts,
             lru: Mutex::new(Lru { slots: Vec::new() }),
             capacity: capacity.max(1),
+            inflight: Mutex::new(HashMap::new()),
             loads: AtomicU64::new(0),
+            coalesced: AtomicU64::new(0),
+            load_delay_us: AtomicU64::new(0),
             positions,
             rounds,
             bytes,
@@ -111,29 +136,11 @@ impl CacheReader {
     }
 
     /// The typed kind of targets this cache holds, for spec compatibility
-    /// checks. Prefers the manifest's recorded kind string — an unparseable
-    /// recorded tag is an *error* (an unknown layout must not be trained on
-    /// unchecked). Untagged directories (legacy v1, or v2 written before
-    /// kinds were recorded) fall back to codec inference: a count codec
-    /// (`rounds > 0`) means RS draws at temperature 1, anything else is
-    /// assumed to be a Top-K head. The ratio codec is genuinely ambiguous:
-    /// pre-tag builds of RS caches at temp != 1 (e.g. old `table10` bench
-    /// output dirs) are misread as Top-K under this inference. Those dirs
-    /// are transient per-run bench artifacts; rebuild (the registry always
-    /// does) or tag any such cache you intend to keep serving.
+    /// checks: the manifest's recorded kind string, with codec inference as
+    /// the untagged-directory fallback (see `spec::CacheKind::of_manifest`
+    /// for the exact rules and the ratio-codec ambiguity caveat).
     pub fn cache_kind(&self) -> Result<crate::spec::CacheKind, crate::spec::SpecError> {
-        match &self.kind {
-            Some(k) => crate::spec::CacheKind::parse(k).map_err(|_| {
-                crate::spec::SpecError::Parse {
-                    input: k.clone(),
-                    reason: "unrecognized cache kind tag in the cache manifest".into(),
-                }
-            }),
-            None if self.rounds > 0 => {
-                Ok(crate::spec::CacheKind::Rs { rounds: self.rounds, temp: 1.0 })
-            }
-            None => Ok(crate::spec::CacheKind::TopK),
-        }
+        crate::spec::CacheKind::of_manifest(self.kind.as_deref(), self.rounds)
     }
 
     /// Legacy v1 directory: totals live in `cache.json`, shard ranges are
@@ -172,18 +179,39 @@ impl CacheReader {
         (pos - self.entries[idx].start < self.entries[idx].count).then_some(idx)
     }
 
-    /// Decoded shard `idx`, loading it through the LRU on a miss.
-    fn shard(&self, idx: usize) -> std::io::Result<Arc<Shard>> {
-        {
-            let mut lru = self.lru.lock().unwrap();
-            if let Some(i) = lru.slots.iter().position(|(k, _)| *k == idx) {
-                let hit = lru.slots.remove(i);
-                let shard = Arc::clone(&hit.1);
-                lru.slots.push(hit); // move to MRU
-                return Ok(shard);
+    /// Public view of [`CacheReader::shard_idx`]: the index (into
+    /// [`CacheReader::entries`]) of the shard owning `pos`, if any. The
+    /// serving layer routes requests to shard-affine workers with this.
+    pub fn shard_index_of(&self, pos: u64) -> Option<usize> {
+        self.shard_idx(pos)
+    }
+
+    /// LRU lookup, promoting a hit to MRU.
+    fn lru_hit(&self, idx: usize) -> Option<Arc<Shard>> {
+        let mut lru = self.lru.lock().unwrap();
+        let i = lru.slots.iter().position(|(k, _)| *k == idx)?;
+        let hit = lru.slots.remove(i);
+        let shard = Arc::clone(&hit.1);
+        lru.slots.push(hit); // move to MRU
+        Some(shard)
+    }
+
+    fn lru_insert(&self, idx: usize, shard: &Arc<Shard>) {
+        let mut lru = self.lru.lock().unwrap();
+        if !lru.slots.iter().any(|(k, _)| *k == idx) {
+            if lru.slots.len() >= self.capacity {
+                lru.slots.remove(0); // evict LRU
             }
+            lru.slots.push((idx, Arc::clone(shard)));
         }
-        // decode outside the lock so concurrent readers miss independently
+    }
+
+    /// Decode shard `idx` from disk (no LRU interaction).
+    fn load_shard(&self, idx: usize) -> std::io::Result<Arc<Shard>> {
+        let delay = self.load_delay_us.load(Ordering::Relaxed);
+        if delay > 0 {
+            std::thread::sleep(std::time::Duration::from_micros(delay));
+        }
         let entry = &self.entries[idx];
         let mut f = std::io::BufReader::new(std::fs::File::open(&entry.path)?);
         let shard = Arc::new(Shard::read_from(&mut f)?);
@@ -202,14 +230,63 @@ impl CacheReader {
             ));
         }
         self.loads.fetch_add(1, Ordering::Relaxed);
-        let mut lru = self.lru.lock().unwrap();
-        if !lru.slots.iter().any(|(k, _)| *k == idx) {
-            if lru.slots.len() >= self.capacity {
-                lru.slots.remove(0); // evict LRU
-            }
-            lru.slots.push((idx, Arc::clone(&shard)));
-        }
         Ok(shard)
+    }
+
+    /// Decoded shard `idx`: LRU hit, or a single-flight decode. Exactly one
+    /// thread (the leader) reads the file; concurrent callers for the same
+    /// shard wait on the flight's condvar and share the leader's `Arc`. The
+    /// leader inserts into the LRU *before* retiring the flight, so a caller
+    /// arriving in between takes the LRU fast path rather than re-decoding.
+    fn shard(&self, idx: usize) -> std::io::Result<Arc<Shard>> {
+        if let Some(s) = self.lru_hit(idx) {
+            return Ok(s);
+        }
+        let (flight, leader) = {
+            let mut inflight = self.inflight.lock().unwrap();
+            // re-check under the inflight lock: a leader may have just
+            // landed this shard in the LRU and retired its flight
+            if let Some(s) = self.lru_hit(idx) {
+                return Ok(s);
+            }
+            match inflight.entry(idx) {
+                Entry::Occupied(e) => (Arc::clone(e.get()), false),
+                Entry::Vacant(v) => {
+                    let f = Arc::new(Flight {
+                        result: Mutex::new(None),
+                        cv: Condvar::new(),
+                    });
+                    v.insert(Arc::clone(&f));
+                    (f, true)
+                }
+            }
+        };
+        if leader {
+            let res = self.load_shard(idx);
+            if let Ok(s) = &res {
+                self.lru_insert(idx, s);
+            }
+            let shared = match &res {
+                Ok(s) => Ok(Arc::clone(s)),
+                Err(e) => Err(e.to_string()),
+            };
+            *flight.result.lock().unwrap() = Some(shared);
+            flight.cv.notify_all();
+            self.inflight.lock().unwrap().remove(&idx);
+            res
+        } else {
+            self.coalesced.fetch_add(1, Ordering::Relaxed);
+            let mut g = flight.result.lock().unwrap();
+            while g.is_none() {
+                g = flight.cv.wait(g).unwrap();
+            }
+            match g.as_ref().unwrap() {
+                Ok(s) => Ok(Arc::clone(s)),
+                Err(msg) => {
+                    Err(std::io::Error::new(std::io::ErrorKind::InvalidData, msg.clone()))
+                }
+            }
+        }
     }
 
     /// Sparse target at one stream position. Panics on shard I/O errors
@@ -231,8 +308,15 @@ impl CacheReader {
     /// Missing positions (misaligned packing, Table 13) come back as empty
     /// targets. Like [`CacheReader::get`], panics if a shard fails to load
     /// (deleted/truncated file, manifest mismatch) — a corrupt cache must
-    /// not silently train on empty targets.
+    /// not silently train on empty targets. Servers, which must answer a
+    /// typed error frame instead of dying, use
+    /// [`CacheReader::try_get_range`].
     pub fn get_range(&self, start: u64, len: usize) -> Vec<SparseTarget> {
+        self.try_get_range(start, len).expect("cache shard read failed")
+    }
+
+    /// Fallible variant of [`CacheReader::get_range`].
+    pub fn try_get_range(&self, start: u64, len: usize) -> std::io::Result<Vec<SparseTarget>> {
         let mut out = Vec::with_capacity(len);
         let mut idx: Option<usize> = match self.starts.binary_search(&start) {
             Ok(i) => Some(i),
@@ -241,7 +325,12 @@ impl CacheReader {
         };
         let mut cur: Option<(usize, Arc<Shard>)> = None;
         for off in 0..len as u64 {
-            let pos = start + off;
+            // positions past u64::MAX cannot exist: empty, not a debug panic
+            // (`start` may come straight off the serving layer's wire)
+            let Some(pos) = start.checked_add(off) else {
+                out.push(SparseTarget::default());
+                continue;
+            };
             // advance to the next shard when pos crosses its start
             let next = idx.map_or(0, |i| i + 1);
             if next < self.starts.len() && self.starts[next] <= pos {
@@ -260,14 +349,14 @@ impl CacheReader {
             let shard = match &cur {
                 Some((ci, s)) if *ci == i => Arc::clone(s),
                 _ => {
-                    let s = self.shard(i).expect("cache shard read failed");
+                    let s = self.shard(i)?;
                     cur = Some((i, Arc::clone(&s)));
                     s
                 }
             };
             out.push(shard.decode(local as usize));
         }
-        out
+        Ok(out)
     }
 
     /// Number of shards listed in the manifest.
@@ -288,6 +377,34 @@ impl CacheReader {
     /// Total shard decodes so far (> `shard_count()` means eviction churn).
     pub fn shard_loads(&self) -> u64 {
         self.loads.load(Ordering::Relaxed)
+    }
+
+    /// Shard requests that piggybacked on another thread's in-flight decode
+    /// instead of reading the file themselves (single-flight coalescing).
+    pub fn coalesced_loads(&self) -> u64 {
+        self.coalesced.load(Ordering::Relaxed)
+    }
+
+    /// Inject an artificial delay into every shard decode. Fault-injection
+    /// knob for the serving tests and `load-gen --simulate-disk-ms`: it makes
+    /// in-flight windows wide enough to exercise coalescing and backpressure
+    /// deterministically. Zero (the default) disables it.
+    pub fn set_load_delay(&self, delay: std::time::Duration) {
+        self.load_delay_us.store(delay.as_micros() as u64, Ordering::Relaxed);
+    }
+}
+
+impl crate::cache::TargetSource for CacheReader {
+    fn try_get_range(&self, start: u64, len: usize) -> std::io::Result<Vec<SparseTarget>> {
+        CacheReader::try_get_range(self, start, len)
+    }
+
+    fn cache_kind(&self) -> Result<crate::spec::CacheKind, crate::spec::SpecError> {
+        CacheReader::cache_kind(self)
+    }
+
+    fn positions(&self) -> u64 {
+        self.positions
     }
 }
 
@@ -386,6 +503,47 @@ mod tests {
             assert!(r.resident_shards() <= 2);
         }
         assert!(r.shard_loads() > 6, "cycling 6 shards through capacity 2 must evict");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn concurrent_misses_coalesce_to_one_load() {
+        let dir = std::env::temp_dir().join(format!("rskd-sf-test-{}", std::process::id()));
+        build_cache(&dir, 32); // 2 shards of 16
+        let r = std::sync::Arc::new(CacheReader::open(&dir).unwrap());
+        // widen the in-flight window so all threads overlap deterministically
+        r.set_load_delay(std::time::Duration::from_millis(100));
+        let barrier = std::sync::Arc::new(std::sync::Barrier::new(4));
+        std::thread::scope(|s| {
+            for _ in 0..4 {
+                let r = std::sync::Arc::clone(&r);
+                let b = std::sync::Arc::clone(&barrier);
+                s.spawn(move || {
+                    b.wait();
+                    let t = r.get(3).unwrap();
+                    assert_eq!(t.ids[0], 3);
+                });
+            }
+        });
+        assert_eq!(r.shard_loads(), 1, "4 racing threads must decode the shard once");
+        // ideally all 3 non-leaders piggyback; a thread descheduled past the
+        // 100 ms window takes the LRU fast path instead, so assert >= 1
+        let coalesced = r.coalesced_loads();
+        assert!(coalesced >= 1, "racing threads must piggyback on the in-flight load");
+        // a later hit is a plain LRU hit, not a coalesce
+        let _ = r.get(4).unwrap();
+        assert_eq!(r.coalesced_loads(), coalesced);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn try_get_range_surfaces_missing_shard_file() {
+        let dir = std::env::temp_dir().join(format!("rskd-tryrange-test-{}", std::process::id()));
+        build_cache(&dir, 32);
+        std::fs::remove_file(dir.join("shard-00000001.slc")).unwrap();
+        let r = CacheReader::open(&dir).unwrap();
+        assert!(r.try_get_range(0, 8).is_ok(), "intact shard still serves");
+        assert!(r.try_get_range(16, 8).is_err(), "deleted shard must error, not pad");
         let _ = std::fs::remove_dir_all(&dir);
     }
 

@@ -73,6 +73,20 @@ impl<T> RingBuffer<T> {
         true
     }
 
+    /// Non-blocking push for admission-control callers (the serving layer's
+    /// bounded work queues): hands the item back instead of parking when the
+    /// buffer is full or closed, so the caller can reject the request with a
+    /// typed overload error rather than queue unboundedly.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.queue.len() >= self.cap {
+            return Err(item);
+        }
+        g.queue.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
     /// Blocking pop; None once closed and drained.
     pub fn pop(&self) -> Option<T> {
         let mut g = self.inner.lock().unwrap();
@@ -293,6 +307,18 @@ mod tests {
         ring.close();
         let got: Vec<i32> = std::iter::from_fn(|| ring.pop()).collect();
         assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn ring_try_push_rejects_when_full_or_closed() {
+        let ring = RingBuffer::new(2);
+        assert!(ring.try_push(1).is_ok());
+        assert!(ring.try_push(2).is_ok());
+        assert_eq!(ring.try_push(3), Err(3), "full buffer hands the item back");
+        assert_eq!(ring.pop(), Some(1));
+        assert!(ring.try_push(3).is_ok(), "a pop frees a slot");
+        ring.close();
+        assert_eq!(ring.try_push(4), Err(4), "closed buffer rejects");
     }
 
     #[test]

@@ -14,7 +14,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cache::CacheReader;
+use crate::cache::{CacheReader, TargetSource};
 use crate::coordinator::cachebuild::{build_cache, BuildStats};
 use crate::coordinator::evaluator::{evaluate, EvalResult};
 use crate::coordinator::schedule::LrSchedule;
@@ -267,20 +267,37 @@ impl Pipeline {
     ) -> Result<(ModelState, TrainResult, EvalResult)> {
         // preflight runs inside both ensure_cache and run_student
         let handle = self.ensure_cache(spec)?;
-        self.run_student(spec, handle.as_ref().map(|h| h.reader.as_ref()), seed)
+        let cache = handle.as_ref().map(|h| h.reader.as_ref() as &dyn TargetSource);
+        self.run_student(spec, cache, seed)
+    }
+
+    /// Served-cache mode: train a student whose sparse targets come from a
+    /// remote `serve::Server` instead of a local directory. The spec is
+    /// validated with `check_cache` against the server's *advertised*
+    /// manifest kind (fetched at connect time) before any training step —
+    /// the same typed-compatibility contract as the local path.
+    pub fn run_spec_served(
+        &self,
+        spec: &DistillSpec,
+        endpoint: &crate::serve::Endpoint,
+        seed: i32,
+    ) -> Result<(ModelState, TrainResult, EvalResult)> {
+        let served = crate::serve::ServedReader::connect(endpoint)?;
+        self.run_student(spec, Some(&served), seed)
     }
 
     /// Train a fresh student under `spec` with an explicit cache (or none)
-    /// and evaluate it. Fails with a typed [`SpecError`] *before* training
-    /// starts when the spec needs a cache that is missing or of a kind that
-    /// cannot serve it (e.g. a Top-K variant over an RS cache), when the
-    /// cache's recorded kind tag is unrecognizable, or when the spec asks
-    /// for more sparse slots per token than the AOT graphs provide (which
-    /// would silently truncate targets).
+    /// and evaluate it. The cache is any [`TargetSource`] — a local
+    /// [`CacheReader`] or a `serve::ServedReader`. Fails with a typed
+    /// [`SpecError`] *before* training starts when the spec needs a cache
+    /// that is missing or of a kind that cannot serve it (e.g. a Top-K
+    /// variant over an RS cache), when the cache's recorded kind tag is
+    /// unrecognizable, or when the spec asks for more sparse slots per token
+    /// than the AOT graphs provide (which would silently truncate targets).
     pub fn run_student(
         &self,
         spec: &DistillSpec,
-        cache: Option<&CacheReader>,
+        cache: Option<&dyn TargetSource>,
         seed: i32,
     ) -> Result<(ModelState, TrainResult, EvalResult)> {
         self.preflight(spec)?;

@@ -4,10 +4,14 @@
 //! reconstitution lives in `spec::reconstitute` (one engine for the cached
 //! and dense paths); this module only assembles tensor blocks and runs the
 //! training graphs.
+//!
+//! The cache is consumed through the [`TargetSource`] trait, so the same
+//! training loop reads a local `CacheReader` or a remote cache behind
+//! `serve::ServedReader` — the serving layer is invisible here.
 
 use anyhow::Result;
 
-use crate::cache::CacheReader;
+use crate::cache::TargetSource;
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::loader::{Batch, Loader};
 use crate::metrics::throughput::ThroughputMeter;
@@ -36,7 +40,7 @@ pub struct SparseBlock {
 }
 
 pub fn assemble_sparse_block(
-    cache: &CacheReader,
+    cache: &dyn TargetSource,
     batch: &Batch,
     vocab: usize,
     k_slots: usize,
@@ -90,8 +94,9 @@ fn sparse_graph_for(engine: &Engine, role: &str) -> String {
 }
 
 /// Train `student` for `steps` under `spec`. `cache` is required for Sparse
-/// objectives; `teacher` for Dense. (The `Pipeline` checks cache/spec
-/// compatibility before calling this — see `DistillSpec::check_cache`.)
+/// objectives (any [`TargetSource`]: local reader or served cache);
+/// `teacher` for Dense. (The `Pipeline` checks cache/spec compatibility
+/// before calling this — see `DistillSpec::check_cache`.)
 #[allow(clippy::too_many_arguments)]
 pub fn train_student(
     engine: &Engine,
@@ -100,7 +105,7 @@ pub fn train_student(
     steps: usize,
     schedule: LrSchedule,
     spec: &DistillSpec,
-    cache: Option<&CacheReader>,
+    cache: Option<&dyn TargetSource>,
     teacher: Option<&ModelState>,
 ) -> Result<TrainResult> {
     let m = engine.manifest();

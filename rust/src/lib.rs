@@ -12,7 +12,10 @@
 //! What to run is described by [`spec::DistillSpec`] — one typed taxonomy
 //! (with a canonical string grammar) shared by the CLI, the bench presets,
 //! and the cache manifests; `coordinator::Pipeline::run_spec` resolves a
-//! spec's cache plan and trains a student under it.
+//! spec's cache plan and trains a student under it. A built cache can also
+//! be *served* to concurrent consumers over a binary wire protocol
+//! ([`serve`], `docs/SERVING.md`); students consume remote caches through
+//! the same [`cache::TargetSource`] surface as local ones.
 //!
 //! Start at the repo-root `README.md`; see `DESIGN.md` for the architecture,
 //! `docs/SPEC.md` for the spec grammar and cache-compatibility matrix,
@@ -30,6 +33,7 @@ pub mod metrics;
 pub mod model;
 pub mod runtime;
 pub mod sampling;
+pub mod serve;
 pub mod spec;
 pub mod toynn;
 pub mod util;

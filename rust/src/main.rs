@@ -2,6 +2,8 @@
 //!
 //! ```text
 //! rskd pipeline [--method <spec>] [--steps N] [--quick=true]
+//! rskd serve    [--cache DIR | --method <spec>] [--port N | --unix PATH]
+//! rskd load-gen [--cache DIR | --method <spec> | --synthetic N] [--clients N]
 //! rskd toy      [--task gauss|image]
 //! rskd zipf     [--k N] [--rounds N]
 //! rskd info     [--artifacts DIR]
@@ -12,18 +14,27 @@
 //! `topp:p=0.98,k=50`, `smooth:k=50`, `ghost:k=50`, `naive:k=20`,
 //! `rs:rounds=50,temp=1`, with `alpha=A` / `adapt=R@F` riders. Bare heads
 //! pick their parameters up from `--k/--rounds/--temp/--alpha`, so
-//! `--method rs --rounds 25` still works.
+//! `--method rs --rounds 25` still works. `serve` and `load-gen` resolve
+//! `--method` to the spec's cache directory under `--work-dir` (the same
+//! `cache-<tag>` layout the pipeline registry writes), so "serve the cache
+//! for `rs:rounds=50`" needs no path spelunking.
 
-use std::path::PathBuf;
+use std::path::{Path, PathBuf};
+use std::sync::{Arc, Barrier};
+use std::time::{Duration, Instant};
 
-use anyhow::{bail, Result};
+use anyhow::{bail, Context, Result};
 
+use rskd::cache::{CacheReader, CacheWriter, ProbCodec, SparseTarget};
 use rskd::coordinator::{pct_ce_to_fullkd, Pipeline, PipelineConfig};
 use rskd::report::{final_loss, Report};
+use rskd::serve::{Endpoint, ServeClient, ServeConfig, Server};
 use rskd::spec::{DistillSpec, SpecDefaults, Variant};
 use rskd::toynn::train::train_teacher;
 use rskd::toynn::{train_toy, GaussianClasses, ToyImages, ToyMethod, ToyTrainConfig};
+use rskd::util::bench::quantile;
 use rskd::util::cli::Args;
+use rskd::util::rng::Pcg;
 
 fn main() {
     if let Err(e) = run() {
@@ -103,6 +114,223 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         s.execute_time.as_secs_f64(),
         s.transfer_time.as_secs_f64()
     );
+    Ok(())
+}
+
+/// `--unix PATH` wins; otherwise loopback TCP on `--port` (with a per-
+/// command default: 7411 for `serve`, 0 = ephemeral for `load-gen`).
+fn endpoint_from_args(args: &Args, default_port: u16) -> Endpoint {
+    Endpoint::from_cli(args.get("unix"), args.usize_or("port", default_port as usize) as u16)
+}
+
+/// The cache directory to serve: `--cache DIR` verbatim, else the registry
+/// layout (`<work-dir>/cache-<plan tag>`) of the `--method` spec.
+fn resolve_cache_dir(args: &Args) -> Result<PathBuf> {
+    if let Some(d) = args.get("cache") {
+        return Ok(PathBuf::from(d));
+    }
+    let spec = parse_spec(args)?;
+    let plan = spec
+        .cache_plan()
+        .with_context(|| format!("spec `{spec}` is cache-free — nothing to serve"))?;
+    let work = args.str_or("work-dir", "target/pipeline");
+    Ok(PathBuf::from(work).join(format!("cache-{}", plan.dir_tag())))
+}
+
+fn serve_config_from_args(args: &Args) -> ServeConfig {
+    ServeConfig {
+        workers: args.usize_or("workers", 4),
+        queue_cap: args.usize_or("queue", 64),
+        max_range: args.usize_or("max-range", 8192),
+        ..Default::default()
+    }
+}
+
+fn open_reader(dir: &Path, args: &Args) -> Result<Arc<CacheReader>> {
+    let reader = Arc::new(
+        CacheReader::open(dir).with_context(|| format!("opening cache {}", dir.display()))?,
+    );
+    let delay_ms = args.usize_or("simulate-disk-ms", 0);
+    if delay_ms > 0 {
+        reader.set_load_delay(Duration::from_millis(delay_ms as u64));
+    }
+    Ok(reader)
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let dir = resolve_cache_dir(args)?;
+    let reader = open_reader(&dir, args)?;
+    let cfg = serve_config_from_args(args);
+    println!(
+        "cache {}: {} positions, {} shards, kind {}",
+        dir.display(),
+        reader.positions,
+        reader.shard_count(),
+        reader.kind.as_deref().unwrap_or("<untagged>")
+    );
+    let server = Server::start(Arc::clone(&reader), endpoint_from_args(args, 7411), cfg.clone())?;
+    println!(
+        "serving on {} ({} workers, queue {} per worker, max range {})",
+        server.endpoint(),
+        cfg.workers,
+        cfg.queue_cap,
+        cfg.max_range
+    );
+    println!("stats: cargo run --release --example cache_inspect -- --stats [--port/--unix]");
+    loop {
+        std::thread::sleep(Duration::from_secs(30));
+        let s = server.stats_snapshot();
+        println!(
+            "served {} ranges (p50 {} µs, p99 {} µs) | rejected {} | errors {} | \
+             shard loads {} ({} coalesced)",
+            s.requests,
+            s.p50_us().unwrap_or(0),
+            s.p99_us().unwrap_or(0),
+            s.rejected,
+            s.errors,
+            s.shard_loads,
+            s.coalesced
+        );
+    }
+}
+
+/// Build the synthetic RS-50 zipf cache `load-gen --synthetic N` serves, so
+/// the load test runs on machines with no artifacts and no prior pipeline
+/// run (this is also what the CI smoke test exercises).
+fn build_synthetic_cache(dir: &Path, n_positions: u64) -> Result<()> {
+    use rskd::sampling::random_sampling;
+    use rskd::sampling::zipf::zipf;
+    let _ = std::fs::remove_dir_all(dir);
+    let p = zipf(512, 1.0);
+    let mut rng = Pcg::new(7);
+    let w = CacheWriter::create_with_kind(
+        dir,
+        ProbCodec::Count { rounds: 50 },
+        512,
+        256,
+        Some("rs:rounds=50,temp=1".into()),
+    )?;
+    for pos in 0..n_positions {
+        let t: SparseTarget = random_sampling(&p, 50, 1.0, &mut rng);
+        if !w.push(pos, t) {
+            break; // writer died; finish() reports the error
+        }
+    }
+    w.finish()?;
+    Ok(())
+}
+
+fn cmd_load_gen(args: &Args) -> Result<()> {
+    // resolve or synthesize the cache to serve
+    let synthetic = args.has("synthetic");
+    let dir = if synthetic {
+        std::env::temp_dir().join(format!("rskd-loadgen-{}", std::process::id()))
+    } else {
+        resolve_cache_dir(args)?
+    };
+    if synthetic {
+        let n = args.u64_or("synthetic", 16_384);
+        println!("building synthetic RS-50 cache ({n} positions) in {}", dir.display());
+        build_synthetic_cache(&dir, n)?;
+    }
+    let reader = open_reader(&dir, args)?;
+    let positions = reader.positions;
+
+    // self-hosted loopback server (ephemeral port unless --port/--unix given)
+    let ep = endpoint_from_args(args, 0);
+    let cfg = serve_config_from_args(args);
+    let server = Server::start(Arc::clone(&reader), ep, cfg.clone())?;
+    let endpoint = server.endpoint().clone();
+
+    let clients = args.usize_or("clients", 4).max(1);
+    let requests = args.usize_or("requests", 200).max(1);
+    let range = (args.usize_or("range", 512) as u64).min(positions.max(1)) as usize;
+    let span = positions.saturating_sub(range as u64).max(1);
+    println!(
+        "load-gen: {clients} clients x {requests} requests of {range} positions on {endpoint}"
+    );
+
+    // an independent direct reader to verify served bytes against
+    let direct = CacheReader::open(&dir)?;
+    let barrier = Barrier::new(clients);
+    let t0 = Instant::now();
+    let mut all_lats: Vec<Duration> = Vec::new();
+    let mut served = 0u64;
+    std::thread::scope(|s| -> Result<()> {
+        let mut handles = Vec::new();
+        for c in 0..clients {
+            let endpoint = &endpoint;
+            let direct = &direct;
+            let barrier = &barrier;
+            handles.push(s.spawn(move || -> Result<Vec<Duration>> {
+                let mut client = ServeClient::connect(endpoint)?;
+                let mut rng = Pcg::new(0xC0FFEE ^ c as u64);
+                let mut lats = Vec::with_capacity(requests);
+                barrier.wait();
+                for i in 0..requests {
+                    let start = rng.below(span);
+                    let t = Instant::now();
+                    let targets = client.get_range(start, range)?;
+                    lats.push(t.elapsed());
+                    if i == 0 && targets != direct.get_range(start, range) {
+                        bail!("served range [{start}, +{range}) differs from direct read");
+                    }
+                }
+                Ok(lats)
+            }));
+        }
+        for h in handles {
+            let lats = h.join().expect("client thread panicked")?;
+            served += lats.len() as u64;
+            all_lats.extend(lats);
+        }
+        Ok(())
+    })?;
+    let wall = t0.elapsed();
+    let snap = server.stats_snapshot();
+
+    let mut report = Report::new("serve_loadgen", "Sparse-logit serving load test");
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    rows.push(vec!["clients x requests".into(), format!("{clients} x {requests}")]);
+    let rps = served as f64 / wall.as_secs_f64();
+    rows.push(vec!["throughput".into(), format!("{rps:.0} ranges/s")]);
+    rows.push(vec![
+        "client p50 / p99".into(),
+        format!(
+            "{:.2} ms / {:.2} ms",
+            quantile(&mut all_lats, 0.5).as_secs_f64() * 1e3,
+            quantile(&mut all_lats, 0.99).as_secs_f64() * 1e3
+        ),
+    ]);
+    rows.push(vec![
+        "server p50 / p99".into(),
+        format!("{} µs / {} µs", snap.p50_us().unwrap_or(0), snap.p99_us().unwrap_or(0)),
+    ]);
+    rows.push(vec![
+        "shard loads (coalesced)".into(),
+        format!("{} ({} coalesced)", snap.shard_loads, snap.coalesced),
+    ]);
+    rows.push(vec!["rejected / errors".into(), format!("{} / {}", snap.rejected, snap.errors)]);
+    report.table(&["load-gen", "value"], &rows);
+    let hot: Vec<String> = snap
+        .hot_shards(5)
+        .iter()
+        .map(|(i, n)| format!("shard {i}: {n}"))
+        .collect();
+    report.line(format!("hot shards: {}", hot.join(", ")));
+    report.line("verify: first response per client byte-identical to direct reader: OK");
+    if snap.shard_loads > reader.shard_count() as u64 {
+        report.line(format!(
+            "note: {} loads > {} shards (LRU eviction churn; raise reader capacity)",
+            snap.shard_loads,
+            reader.shard_count()
+        ));
+    }
+    report.finish();
+    drop(server);
+    if synthetic {
+        let _ = std::fs::remove_dir_all(&dir);
+    }
     Ok(())
 }
 
@@ -192,11 +420,13 @@ fn run() -> Result<()> {
     let cmd = args.positional().first().map(|s| s.as_str()).unwrap_or("help");
     match cmd {
         "pipeline" => cmd_pipeline(&args),
+        "serve" => cmd_serve(&args),
+        "load-gen" => cmd_load_gen(&args),
         "toy" => cmd_toy(&args),
         "zipf" => cmd_zipf(&args),
         "info" => cmd_info(&args),
         _ => {
-            println!("usage: rskd <pipeline|toy|zipf|info> [--flags]");
+            println!("usage: rskd <pipeline|serve|load-gen|toy|zipf|info> [--flags]");
             println!("  pipeline --method <spec>   spec grammar (docs/SPEC.md):");
             println!("           ce | fullkd | rkl | frkl | mse | l1");
             println!("           topk:k=12[,norm] | topp:p=0.98,k=50 | smooth:k=50");
@@ -204,6 +434,11 @@ fn run() -> Result<()> {
             println!("           riders: alpha=A (CE mix), adapt=RATIO@FRAC (Table 9)");
             println!("           bare heads use --k N --rounds N --temp T --alpha A");
             println!("           plus: --steps N --teacher-steps N --quick=true");
+            println!("  serve    --cache DIR | --method <spec> [--work-dir D]");
+            println!("           --port N | --unix PATH, --workers N --queue N --max-range N");
+            println!("  load-gen --cache DIR | --method <spec> | --synthetic N");
+            println!("           --clients N --requests N --range N --simulate-disk-ms N");
+            println!("           (docs/SERVING.md: wire format, backpressure, SLO knobs)");
             println!("  toy      --task gauss|image");
             println!("  zipf     --k N --rounds N");
             println!("  info     --artifacts DIR");

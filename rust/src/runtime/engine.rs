@@ -23,7 +23,11 @@ pub struct EngineStats {
     pub compile_time: Duration,
     pub executions: u64,
     pub execute_time: Duration,
-    /// host<->device literal conversion time (perf pass target)
+    /// host<->device literal conversion time, accumulated around every
+    /// `call`: input `HostTensor -> Literal` packing plus output tuple
+    /// unpacking back to host tensors. `perf_hotpath` reports it as a share
+    /// of exec+transfer — the number that says whether the hot loop is
+    /// compute- or conversion-bound.
     pub transfer_time: Duration,
 }
 
@@ -184,5 +188,8 @@ mod tests {
         let s = e.stats();
         assert_eq!(s.compiles, 1); // cached after first call
         assert_eq!(s.executions, 2);
+        // transfer accounting runs on every call (init_student converts a
+        // scalar in and a full parameter vector out, so this is never zero)
+        assert!(s.transfer_time > Duration::ZERO, "{:?}", s.transfer_time);
     }
 }

@@ -1,0 +1,179 @@
+//! Blocking client for the sparse-logit server, plus [`ServedReader`] — the
+//! [`TargetSource`](crate::cache::TargetSource) adapter that lets
+//! `trainer::train_student` consume a remote cache exactly like a local
+//! [`CacheReader`](crate::cache::CacheReader).
+//!
+//! Failure handling is deliberately simple and explicit:
+//! * a transport error (server restarted, connection dropped) triggers one
+//!   reconnect + resend per call — requests are idempotent reads;
+//! * an [`ErrCode::Overloaded`] error frame (admission control shed the
+//!   request) backs off linearly and retries up to
+//!   [`ServeClient::overload_retries`] times;
+//! * every other error frame is permanent and surfaces as `io::Error`.
+
+use std::io;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::cache::{SparseTarget, TargetSource};
+use crate::serve::protocol::{
+    read_frame, write_frame, ErrCode, RemoteManifest, Request, Response,
+};
+use crate::serve::stats::StatsSnapshot;
+use crate::serve::{Endpoint, Stream};
+
+pub struct ServeClient {
+    endpoint: Endpoint,
+    stream: Stream,
+    /// max retries for `Overloaded` responses (0 = surface the first one)
+    pub overload_retries: u32,
+    /// base backoff between overload retries (attempt k sleeps k * base)
+    pub backoff: Duration,
+}
+
+impl ServeClient {
+    pub fn connect(endpoint: &Endpoint) -> io::Result<ServeClient> {
+        Ok(ServeClient {
+            stream: Stream::connect(endpoint)?,
+            endpoint: endpoint.clone(),
+            overload_retries: 5,
+            backoff: Duration::from_millis(5),
+        })
+    }
+
+    /// One request/response exchange, reconnecting + resending once if the
+    /// transport fails mid-call.
+    fn call(&mut self, req: &Request) -> io::Result<Response> {
+        let payload = req.encode();
+        for attempt in 0..2 {
+            let res = write_frame(&mut self.stream, &payload)
+                .and_then(|()| read_frame(&mut self.stream));
+            match res {
+                Ok(Some(frame)) => return Response::decode(&frame),
+                Ok(None) => {
+                    // server hung up between frames
+                    if attempt == 1 {
+                        return Err(io::Error::new(
+                            io::ErrorKind::ConnectionReset,
+                            format!("server at {} closed the connection", self.endpoint),
+                        ));
+                    }
+                }
+                Err(e) if attempt == 1 => return Err(e),
+                Err(_) => {}
+            }
+            self.stream = Stream::connect(&self.endpoint)?;
+        }
+        unreachable!("both attempts return or reconnect")
+    }
+
+    /// Map an error frame to `io::Error` (overload → `WouldBlock`, so
+    /// callers can tell shed load from hard failures).
+    fn err_of(code: ErrCode, msg: String) -> io::Error {
+        let kind = match code {
+            ErrCode::Overloaded => io::ErrorKind::WouldBlock,
+            ErrCode::BadRequest | ErrCode::RangeTooLarge | ErrCode::BadVersion => {
+                io::ErrorKind::InvalidInput
+            }
+            ErrCode::Internal => io::ErrorKind::Other,
+        };
+        io::Error::new(kind, format!("server error ({code:?}): {msg}"))
+    }
+
+    /// Targets for `[start, start + len)`, retrying shed (`Overloaded`)
+    /// requests with linear backoff.
+    pub fn get_range(&mut self, start: u64, len: usize) -> io::Result<Vec<SparseTarget>> {
+        let req = Request::GetRange { start, len: len as u32 };
+        let mut attempt = 0u32;
+        loop {
+            match self.call(&req)? {
+                Response::Targets(t) => return Ok(t),
+                Response::Error { code: ErrCode::Overloaded, msg: _ }
+                    if attempt < self.overload_retries =>
+                {
+                    attempt += 1;
+                    std::thread::sleep(self.backoff * attempt);
+                }
+                Response::Error { code, msg } => return Err(Self::err_of(code, msg)),
+                other => {
+                    return Err(io::Error::new(
+                        io::ErrorKind::InvalidData,
+                        format!("unexpected response to GetRange: {other:?}"),
+                    ))
+                }
+            }
+        }
+    }
+
+    pub fn manifest(&mut self) -> io::Result<RemoteManifest> {
+        match self.call(&Request::GetManifest)? {
+            Response::Manifest(m) => Ok(m),
+            Response::Error { code, msg } => Err(Self::err_of(code, msg)),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected response to GetManifest: {other:?}"),
+            )),
+        }
+    }
+
+    pub fn stats(&mut self) -> io::Result<StatsSnapshot> {
+        match self.call(&Request::GetStats)? {
+            Response::Stats(s) => Ok(s),
+            Response::Error { code, msg } => Err(Self::err_of(code, msg)),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected response to GetStats: {other:?}"),
+            )),
+        }
+    }
+
+    pub fn ping(&mut self) -> io::Result<()> {
+        match self.call(&Request::Ping)? {
+            Response::Pong => Ok(()),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected response to Ping: {other:?}"),
+            )),
+        }
+    }
+}
+
+/// A remote cache behind the [`TargetSource`] surface: `get_range` goes over
+/// the wire, `cache_kind` answers from the manifest fetched at connect time
+/// — so `Pipeline::run_student` runs its spec/cache compatibility check
+/// against the server's *advertised* kind before any training step.
+///
+/// The client sits behind a mutex: the trainer calls `get_range` row by row
+/// from one thread today, but `TargetSource` requires `Sync` (parallel
+/// student runs share sources), and a blocking request/response stream must
+/// not interleave two requests.
+pub struct ServedReader {
+    client: Mutex<ServeClient>,
+    manifest: RemoteManifest,
+}
+
+impl ServedReader {
+    pub fn connect(endpoint: &Endpoint) -> io::Result<ServedReader> {
+        let mut client = ServeClient::connect(endpoint)?;
+        let manifest = client.manifest()?;
+        Ok(ServedReader { client: Mutex::new(client), manifest })
+    }
+
+    pub fn manifest(&self) -> &RemoteManifest {
+        &self.manifest
+    }
+}
+
+impl TargetSource for ServedReader {
+    fn try_get_range(&self, start: u64, len: usize) -> io::Result<Vec<SparseTarget>> {
+        self.client.lock().unwrap().get_range(start, len)
+    }
+
+    fn cache_kind(&self) -> Result<crate::spec::CacheKind, crate::spec::SpecError> {
+        self.manifest.cache_kind()
+    }
+
+    fn positions(&self) -> u64 {
+        self.manifest.positions
+    }
+}

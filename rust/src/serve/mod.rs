@@ -1,0 +1,120 @@
+//! Concurrent sparse-logit serving layer: exposes a v2 cache directory to
+//! many consumers over a length-prefixed binary protocol (Unix socket or
+//! loopback TCP) — the paper's "one teacher pass, many student runs" cost
+//! structure turned into an actual service. See `docs/SERVING.md`.
+//!
+//! * [`protocol`] — versioned wire format (`GetRange` / `GetManifest` /
+//!   `Stats` + typed error frames).
+//! * [`server`] — shard-affinity worker pool over a shared
+//!   [`CacheReader`](crate::cache::CacheReader), bounded per-worker queues
+//!   with admission control (overload is a typed, retryable error frame, not
+//!   an unbounded queue), and in-flight request coalescing: duplicate or
+//!   overlapping range requests trigger one disk fetch (shard-affine routing
+//!   serializes same-shard work; the reader's single-flight loads collapse
+//!   cross-worker overlap).
+//! * [`client`] — blocking client with reconnect + overload backoff, and
+//!   [`ServedReader`], a [`TargetSource`](crate::cache::TargetSource)
+//!   adapter so `trainer::train_student` consumes a remote cache unchanged.
+//! * [`stats`] — log₂-bucket latency histogram (p50/p99 SLO readout) and
+//!   hot-shard counters.
+
+pub mod client;
+pub mod protocol;
+pub mod server;
+pub mod stats;
+
+pub use client::{ServeClient, ServedReader};
+pub use protocol::{ErrCode, RemoteManifest, Request, Response, PROTOCOL_VERSION};
+pub use server::{ServeConfig, Server};
+pub use stats::{LatencyHistogram, ServeStats, StatsSnapshot, HIST_BUCKETS};
+
+use std::fmt;
+use std::io::{self, Read, Write};
+use std::net::{SocketAddr, TcpStream};
+use std::os::unix::net::UnixStream;
+use std::path::PathBuf;
+use std::time::Duration;
+
+/// Where a server listens / a client connects. TCP is deliberately loopback-
+/// oriented (the protocol has no auth); Unix sockets are the same-host
+/// default.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum Endpoint {
+    Tcp(SocketAddr),
+    Unix(PathBuf),
+}
+
+impl Endpoint {
+    /// Resolve the conventional `--unix PATH` / `--port N` CLI pair, shared
+    /// by `rskd serve`, `rskd load-gen`, and `cache_inspect --stats`: a Unix
+    /// path wins; otherwise loopback TCP on `port` (0 = OS-assigned).
+    pub fn from_cli(unix: Option<&str>, port: u16) -> Endpoint {
+        match unix {
+            Some(p) => Endpoint::Unix(PathBuf::from(p)),
+            None => Endpoint::Tcp(SocketAddr::from(([127, 0, 0, 1], port))),
+        }
+    }
+}
+
+impl fmt::Display for Endpoint {
+    fn fmt(&self, f: &mut fmt::Formatter<'_>) -> fmt::Result {
+        match self {
+            Endpoint::Tcp(a) => write!(f, "tcp://{a}"),
+            Endpoint::Unix(p) => write!(f, "unix://{}", p.display()),
+        }
+    }
+}
+
+/// One connected stream of either transport.
+pub(crate) enum Stream {
+    Tcp(TcpStream),
+    Unix(UnixStream),
+}
+
+impl Stream {
+    pub(crate) fn connect(ep: &Endpoint) -> io::Result<Stream> {
+        Ok(match ep {
+            Endpoint::Tcp(a) => Stream::Tcp(TcpStream::connect(a)?),
+            Endpoint::Unix(p) => Stream::Unix(UnixStream::connect(p)?),
+        })
+    }
+
+    pub(crate) fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_read_timeout(d),
+            Stream::Unix(s) => s.set_read_timeout(d),
+        }
+    }
+
+    pub(crate) fn set_write_timeout(&self, d: Option<Duration>) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.set_write_timeout(d),
+            Stream::Unix(s) => s.set_write_timeout(d),
+        }
+    }
+}
+
+impl Read for Stream {
+    fn read(&mut self, buf: &mut [u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.read(buf),
+            Stream::Unix(s) => s.read(buf),
+        }
+    }
+}
+
+impl Write for Stream {
+    fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write(buf),
+            Stream::Unix(s) => s.write(buf),
+        }
+    }
+
+    fn flush(&mut self) -> io::Result<()> {
+        match self {
+            Stream::Tcp(s) => s.flush(),
+            Stream::Unix(s) => s.flush(),
+        }
+    }
+}

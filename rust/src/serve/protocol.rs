@@ -1,0 +1,573 @@
+//! Versioned length-prefixed wire format for the sparse-logit server — see
+//! `docs/SERVING.md` for the normative byte-level spec.
+//!
+//! Every message is one *frame*: a `u32` little-endian payload length
+//! followed by the payload. The payload starts with a fixed two-byte
+//! preamble — `version u8` ([`PROTOCOL_VERSION`]) and `opcode u8` — and the
+//! opcode-specific body. All integers are little-endian; probabilities
+//! travel as raw `f32` bits, so a served target is bit-identical to a local
+//! [`CacheReader`](crate::cache::CacheReader) decode.
+//!
+//! Requests: `GetRange` (a contiguous position range), `GetManifest` (the
+//! directory totals + kind tag, for spec/cache compatibility checks before
+//! training), `GetStats` (latency histogram + counters), `Ping`. Errors come
+//! back as typed [`Response::Error`] frames with an [`ErrCode`] — a client
+//! can distinguish transient overload (retry with backoff) from a request it
+//! must not repeat.
+
+use std::io::{self, Read, Write};
+
+use crate::cache::SparseTarget;
+use crate::serve::stats::{StatsSnapshot, HIST_BUCKETS};
+use crate::spec::{CacheKind, SpecError};
+
+/// Current wire protocol version; bumped on any incompatible change.
+pub const PROTOCOL_VERSION: u8 = 1;
+
+/// Hard cap on a frame payload (16 MiB): a corrupt or hostile length prefix
+/// must not allocate unboundedly.
+pub const MAX_FRAME: usize = 16 << 20;
+
+/// How many consecutive read-timeout wakeups `read_frame` tolerates *inside*
+/// a frame before declaring the peer stalled. Only servers set read
+/// timeouts, so this bounds how long a half-sent frame can pin a connection
+/// thread (stalls x read_timeout); clients block indefinitely as before.
+pub const MAX_FRAME_STALLS: u32 = 25;
+
+/// Request opcodes (high bit clear).
+pub const OP_GET_RANGE: u8 = 0x01;
+pub const OP_GET_MANIFEST: u8 = 0x02;
+pub const OP_GET_STATS: u8 = 0x03;
+pub const OP_PING: u8 = 0x04;
+
+/// Response opcodes (high bit set).
+pub const OP_TARGETS: u8 = 0x81;
+pub const OP_MANIFEST: u8 = 0x82;
+pub const OP_STATS: u8 = 0x83;
+pub const OP_PONG: u8 = 0x84;
+pub const OP_ERROR: u8 = 0xEE;
+
+/// Typed error codes carried by [`Response::Error`] frames.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum ErrCode {
+    /// malformed frame, unknown opcode, or bad body
+    BadRequest = 1,
+    /// `len` exceeds the server's `max_range`
+    RangeTooLarge = 2,
+    /// admission control rejected the request (queue full) — retry with
+    /// backoff; the only retryable code
+    Overloaded = 3,
+    /// server-side failure (shard I/O error, shutdown mid-request)
+    Internal = 4,
+    /// frame carried an unsupported protocol version
+    BadVersion = 5,
+}
+
+impl ErrCode {
+    pub fn from_u16(v: u16) -> Option<ErrCode> {
+        match v {
+            1 => Some(ErrCode::BadRequest),
+            2 => Some(ErrCode::RangeTooLarge),
+            3 => Some(ErrCode::Overloaded),
+            4 => Some(ErrCode::Internal),
+            5 => Some(ErrCode::BadVersion),
+            _ => None,
+        }
+    }
+}
+
+/// The server's advertised view of the cache it serves: the directory totals
+/// a [`CacheReader`](crate::cache::CacheReader) exposes locally, so a remote
+/// consumer can run the same spec/cache compatibility checks.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RemoteManifest {
+    /// cache directory format version (2 for v2, 1 for legacy)
+    pub cache_version: u32,
+    pub positions: u64,
+    pub rounds: u32,
+    pub bytes: u64,
+    pub shard_count: u32,
+    /// canonical cache-kind string (`topk`, `rs:rounds=50,temp=1`); `None`
+    /// for untagged directories
+    pub kind: Option<String>,
+}
+
+impl RemoteManifest {
+    /// Typed kind of the served cache — same rules as
+    /// `CacheReader::cache_kind` (recorded tag wins, codec inference as the
+    /// untagged fallback), so `DistillSpec::check_cache` works unchanged
+    /// against a remote cache.
+    pub fn cache_kind(&self) -> Result<CacheKind, SpecError> {
+        CacheKind::of_manifest(self.kind.as_deref(), self.rounds)
+    }
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Request {
+    /// targets for `[start, start + len)`
+    GetRange { start: u64, len: u32 },
+    GetManifest,
+    GetStats,
+    Ping,
+}
+
+#[derive(Clone, Debug, PartialEq)]
+pub enum Response {
+    Targets(Vec<SparseTarget>),
+    Manifest(RemoteManifest),
+    Stats(StatsSnapshot),
+    Pong,
+    Error { code: ErrCode, msg: String },
+}
+
+fn bad(msg: impl Into<String>) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg.into())
+}
+
+/// Write one frame (length prefix + payload).
+pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
+    if payload.len() > MAX_FRAME {
+        return Err(bad(format!("frame payload {} exceeds MAX_FRAME", payload.len())));
+    }
+    w.write_all(&(payload.len() as u32).to_le_bytes())?;
+    w.write_all(payload)?;
+    w.flush()
+}
+
+/// Read one frame's payload. `Ok(None)` is a clean EOF *at a frame
+/// boundary* (peer hung up between requests); EOF mid-frame is an error.
+/// A timeout at a frame boundary passes through untouched so servers can
+/// poll a shutdown flag; timeouts *inside* a frame are retried (a timeout
+/// there would desync the stream) up to [`MAX_FRAME_STALLS`] times, after
+/// which the peer is declared stalled — otherwise a client that sends half
+/// a frame and goes silent would pin its connection thread forever and hang
+/// server shutdown.
+pub fn read_frame(r: &mut impl Read) -> io::Result<Option<Vec<u8>>> {
+    let mut stalls = 0u32;
+    let mut stalled = |stalls: &mut u32| -> io::Result<()> {
+        *stalls += 1;
+        if *stalls > MAX_FRAME_STALLS {
+            return Err(bad("peer stalled mid-frame"));
+        }
+        Ok(())
+    };
+    let mut lenb = [0u8; 4];
+    let mut got = 0;
+    while got < 4 {
+        match r.read(&mut lenb[got..]) {
+            Ok(0) if got == 0 => return Ok(None),
+            Ok(0) => return Err(bad("EOF inside frame length prefix")),
+            Ok(n) => got += n,
+            Err(e) if got == 0 => return Err(e),
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                stalled(&mut stalls)?;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    let len = u32::from_le_bytes(lenb) as usize;
+    if len > MAX_FRAME {
+        return Err(bad(format!("frame length {len} exceeds MAX_FRAME")));
+    }
+    let mut payload = vec![0u8; len];
+    let mut got = 0;
+    while got < len {
+        match r.read(&mut payload[got..]) {
+            Ok(0) => return Err(bad("EOF inside frame payload")),
+            Ok(n) => got += n,
+            Err(e)
+                if e.kind() == io::ErrorKind::WouldBlock
+                    || e.kind() == io::ErrorKind::TimedOut =>
+            {
+                stalled(&mut stalls)?;
+            }
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(Some(payload))
+}
+
+/// Little-endian cursor over a payload body.
+struct Cursor<'a> {
+    buf: &'a [u8],
+    pos: usize,
+}
+
+impl<'a> Cursor<'a> {
+    fn take(&mut self, n: usize) -> io::Result<&'a [u8]> {
+        if self.pos + n > self.buf.len() {
+            return Err(bad("truncated frame body"));
+        }
+        let s = &self.buf[self.pos..self.pos + n];
+        self.pos += n;
+        Ok(s)
+    }
+
+    fn u8(&mut self) -> io::Result<u8> {
+        Ok(self.take(1)?[0])
+    }
+
+    fn u16(&mut self) -> io::Result<u16> {
+        Ok(u16::from_le_bytes(self.take(2)?.try_into().unwrap()))
+    }
+
+    fn u32(&mut self) -> io::Result<u32> {
+        Ok(u32::from_le_bytes(self.take(4)?.try_into().unwrap()))
+    }
+
+    fn u64(&mut self) -> io::Result<u64> {
+        Ok(u64::from_le_bytes(self.take(8)?.try_into().unwrap()))
+    }
+
+    fn done(&self) -> io::Result<()> {
+        if self.pos != self.buf.len() {
+            return Err(bad("trailing bytes in frame body"));
+        }
+        Ok(())
+    }
+}
+
+fn preamble(opcode: u8) -> Vec<u8> {
+    vec![PROTOCOL_VERSION, opcode]
+}
+
+/// Split a payload into (opcode, body), validating the version byte.
+fn open_payload(payload: &[u8]) -> io::Result<(u8, Cursor<'_>)> {
+    if payload.len() < 2 {
+        return Err(bad("frame payload shorter than the 2-byte preamble"));
+    }
+    if payload[0] != PROTOCOL_VERSION {
+        return Err(bad(format!(
+            "unsupported protocol version {} (expected {PROTOCOL_VERSION})",
+            payload[0]
+        )));
+    }
+    Ok((payload[1], Cursor { buf: payload, pos: 2 }))
+}
+
+impl Request {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Request::GetRange { start, len } => {
+                let mut p = preamble(OP_GET_RANGE);
+                p.extend_from_slice(&start.to_le_bytes());
+                p.extend_from_slice(&len.to_le_bytes());
+                p
+            }
+            Request::GetManifest => preamble(OP_GET_MANIFEST),
+            Request::GetStats => preamble(OP_GET_STATS),
+            Request::Ping => preamble(OP_PING),
+        }
+    }
+
+    pub fn decode(payload: &[u8]) -> io::Result<Request> {
+        let (op, mut c) = open_payload(payload)?;
+        let req = match op {
+            OP_GET_RANGE => Request::GetRange { start: c.u64()?, len: c.u32()? },
+            OP_GET_MANIFEST => Request::GetManifest,
+            OP_GET_STATS => Request::GetStats,
+            OP_PING => Request::Ping,
+            other => return Err(bad(format!("unknown request opcode {other:#04x}"))),
+        };
+        c.done()?;
+        Ok(req)
+    }
+}
+
+impl Response {
+    pub fn encode(&self) -> Vec<u8> {
+        match self {
+            Response::Targets(targets) => {
+                let mut p = preamble(OP_TARGETS);
+                p.extend_from_slice(&(targets.len() as u32).to_le_bytes());
+                for t in targets {
+                    debug_assert!(t.ids.len() < u16::MAX as usize);
+                    p.extend_from_slice(&(t.ids.len() as u16).to_le_bytes());
+                    for (&id, &prob) in t.ids.iter().zip(t.probs.iter()) {
+                        p.extend_from_slice(&id.to_le_bytes());
+                        p.extend_from_slice(&prob.to_bits().to_le_bytes());
+                    }
+                }
+                p
+            }
+            Response::Manifest(m) => {
+                let mut p = preamble(OP_MANIFEST);
+                p.extend_from_slice(&m.cache_version.to_le_bytes());
+                p.extend_from_slice(&m.positions.to_le_bytes());
+                p.extend_from_slice(&m.rounds.to_le_bytes());
+                p.extend_from_slice(&m.bytes.to_le_bytes());
+                p.extend_from_slice(&m.shard_count.to_le_bytes());
+                match &m.kind {
+                    None => p.push(0),
+                    Some(k) => {
+                        p.push(1);
+                        p.extend_from_slice(&(k.len() as u16).to_le_bytes());
+                        p.extend_from_slice(k.as_bytes());
+                    }
+                }
+                p
+            }
+            Response::Stats(s) => {
+                let mut p = preamble(OP_STATS);
+                for v in [s.requests, s.rejected, s.errors, s.shard_loads, s.coalesced] {
+                    p.extend_from_slice(&v.to_le_bytes());
+                }
+                debug_assert_eq!(s.hist.len(), HIST_BUCKETS);
+                p.push(s.hist.len() as u8);
+                for b in &s.hist {
+                    p.extend_from_slice(&b.to_le_bytes());
+                }
+                p.extend_from_slice(&(s.hot.len() as u32).to_le_bytes());
+                for h in &s.hot {
+                    p.extend_from_slice(&h.to_le_bytes());
+                }
+                p
+            }
+            Response::Pong => preamble(OP_PONG),
+            Response::Error { code, msg } => {
+                let mut p = preamble(OP_ERROR);
+                p.extend_from_slice(&(*code as u16).to_le_bytes());
+                let msg = &msg.as_bytes()[..msg.len().min(u16::MAX as usize)];
+                p.extend_from_slice(&(msg.len() as u16).to_le_bytes());
+                p.extend_from_slice(msg);
+                p
+            }
+        }
+    }
+
+    pub fn decode(payload: &[u8]) -> io::Result<Response> {
+        let (op, mut c) = open_payload(payload)?;
+        let resp = match op {
+            OP_TARGETS => {
+                let count = c.u32()? as usize;
+                let mut targets = Vec::with_capacity(count.min(1 << 20));
+                for _ in 0..count {
+                    let k = c.u16()? as usize;
+                    let mut ids = Vec::with_capacity(k);
+                    let mut probs = Vec::with_capacity(k);
+                    for _ in 0..k {
+                        ids.push(c.u32()?);
+                        probs.push(f32::from_bits(c.u32()?));
+                    }
+                    targets.push(SparseTarget { ids, probs });
+                }
+                Response::Targets(targets)
+            }
+            OP_MANIFEST => {
+                let cache_version = c.u32()?;
+                let positions = c.u64()?;
+                let rounds = c.u32()?;
+                let bytes = c.u64()?;
+                let shard_count = c.u32()?;
+                let kind = match c.u8()? {
+                    0 => None,
+                    1 => {
+                        let n = c.u16()? as usize;
+                        let s = std::str::from_utf8(c.take(n)?)
+                            .map_err(|_| bad("non-utf8 kind tag"))?;
+                        Some(s.to_string())
+                    }
+                    _ => return Err(bad("bad kind-presence flag")),
+                };
+                Response::Manifest(RemoteManifest {
+                    cache_version,
+                    positions,
+                    rounds,
+                    bytes,
+                    shard_count,
+                    kind,
+                })
+            }
+            OP_STATS => {
+                let requests = c.u64()?;
+                let rejected = c.u64()?;
+                let errors = c.u64()?;
+                let shard_loads = c.u64()?;
+                let coalesced = c.u64()?;
+                let nb = c.u8()? as usize;
+                if nb != HIST_BUCKETS {
+                    return Err(bad(format!(
+                        "stats frame carries {nb} histogram buckets, expected {HIST_BUCKETS}"
+                    )));
+                }
+                let mut hist = Vec::with_capacity(nb);
+                for _ in 0..nb {
+                    hist.push(c.u64()?);
+                }
+                let nh = c.u32()? as usize;
+                let mut hot = Vec::with_capacity(nh.min(1 << 20));
+                for _ in 0..nh {
+                    hot.push(c.u64()?);
+                }
+                Response::Stats(StatsSnapshot {
+                    requests,
+                    rejected,
+                    errors,
+                    shard_loads,
+                    coalesced,
+                    hist,
+                    hot,
+                })
+            }
+            OP_PONG => Response::Pong,
+            OP_ERROR => {
+                let code = ErrCode::from_u16(c.u16()?).unwrap_or(ErrCode::Internal);
+                let n = c.u16()? as usize;
+                let msg = String::from_utf8_lossy(c.take(n)?).into_owned();
+                Response::Error { code, msg }
+            }
+            other => return Err(bad(format!("unknown response opcode {other:#04x}"))),
+        };
+        c.done()?;
+        Ok(resp)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn roundtrip_req(r: Request) {
+        assert_eq!(Request::decode(&r.encode()).unwrap(), r);
+    }
+
+    fn roundtrip_resp(r: Response) {
+        assert_eq!(Response::decode(&r.encode()).unwrap(), r);
+    }
+
+    #[test]
+    fn request_roundtrip() {
+        roundtrip_req(Request::GetRange { start: 123_456_789, len: 512 });
+        roundtrip_req(Request::GetManifest);
+        roundtrip_req(Request::GetStats);
+        roundtrip_req(Request::Ping);
+    }
+
+    #[test]
+    fn targets_roundtrip_bit_exact() {
+        let targets = vec![
+            SparseTarget { ids: vec![1, 99_999, 131_000], probs: vec![0.4, 0.2, 1e-7] },
+            SparseTarget::default(), // empty target (missing position)
+            SparseTarget { ids: vec![7], probs: vec![f32::MIN_POSITIVE] },
+        ];
+        let encoded = Response::Targets(targets.clone()).encode();
+        let Response::Targets(back) = Response::decode(&encoded).unwrap() else {
+            panic!("wrong variant")
+        };
+        assert_eq!(back, targets);
+        // bit-exactness, not approximate equality
+        assert_eq!(back[2].probs[0].to_bits(), f32::MIN_POSITIVE.to_bits());
+    }
+
+    #[test]
+    fn manifest_roundtrip_with_and_without_kind() {
+        roundtrip_resp(Response::Manifest(RemoteManifest {
+            cache_version: 2,
+            positions: 16_384,
+            rounds: 50,
+            bytes: 2_473_917,
+            shard_count: 4,
+            kind: Some("rs:rounds=50,temp=1".into()),
+        }));
+        roundtrip_resp(Response::Manifest(RemoteManifest {
+            cache_version: 1,
+            positions: 10,
+            rounds: 0,
+            bytes: 100,
+            shard_count: 1,
+            kind: None,
+        }));
+    }
+
+    #[test]
+    fn remote_manifest_kind_matches_reader_rules() {
+        use crate::spec::CacheKind;
+        let m = |kind: Option<&str>, rounds| RemoteManifest {
+            cache_version: 2,
+            positions: 1,
+            rounds,
+            bytes: 1,
+            shard_count: 1,
+            kind: kind.map(|s| s.to_string()),
+        };
+        assert_eq!(
+            m(Some("rs:rounds=50,temp=0.8"), 0).cache_kind().unwrap(),
+            CacheKind::Rs { rounds: 50, temp: 0.8 }
+        );
+        assert_eq!(m(None, 50).cache_kind().unwrap(), CacheKind::Rs { rounds: 50, temp: 1.0 });
+        assert_eq!(m(None, 0).cache_kind().unwrap(), CacheKind::TopK);
+        assert!(m(Some("hologram:q=3"), 0).cache_kind().is_err());
+    }
+
+    #[test]
+    fn stats_roundtrip() {
+        roundtrip_resp(Response::Stats(StatsSnapshot {
+            requests: 100,
+            rejected: 3,
+            errors: 1,
+            shard_loads: 8,
+            coalesced: 5,
+            hist: (0..HIST_BUCKETS as u64).collect(),
+            hot: vec![40, 0, 60],
+        }));
+    }
+
+    #[test]
+    fn error_roundtrip_and_unknown_code() {
+        roundtrip_resp(Response::Error { code: ErrCode::Overloaded, msg: "queue full".into() });
+        // unknown code bytes decode to Internal rather than failing
+        let mut p = preamble(OP_ERROR);
+        p.extend_from_slice(&999u16.to_le_bytes());
+        p.extend_from_slice(&2u16.to_le_bytes());
+        p.extend_from_slice(b"xy");
+        let Response::Error { code, msg } = Response::decode(&p).unwrap() else { panic!() };
+        assert_eq!(code, ErrCode::Internal);
+        assert_eq!(msg, "xy");
+    }
+
+    #[test]
+    fn frame_io_roundtrip_and_eof() {
+        let mut buf = Vec::new();
+        write_frame(&mut buf, &Request::Ping.encode()).unwrap();
+        write_frame(&mut buf, &Request::GetManifest.encode()).unwrap();
+        let mut r = buf.as_slice();
+        assert_eq!(Request::decode(&read_frame(&mut r).unwrap().unwrap()).unwrap(), Request::Ping);
+        assert_eq!(
+            Request::decode(&read_frame(&mut r).unwrap().unwrap()).unwrap(),
+            Request::GetManifest
+        );
+        assert!(read_frame(&mut r).unwrap().is_none(), "clean EOF at frame boundary");
+    }
+
+    #[test]
+    fn frame_rejects_oversize_and_truncation() {
+        // oversize length prefix
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&(MAX_FRAME as u32 + 1).to_le_bytes());
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+        // EOF mid-payload
+        let mut buf = Vec::new();
+        buf.extend_from_slice(&8u32.to_le_bytes());
+        buf.extend_from_slice(&[1, 2, 3]); // 3 of 8 bytes
+        assert!(read_frame(&mut buf.as_slice()).is_err());
+        // EOF mid-length-prefix
+        assert!(read_frame(&mut [0u8, 0].as_slice()).is_err());
+    }
+
+    #[test]
+    fn version_and_opcode_validation() {
+        let mut p = Request::Ping.encode();
+        p[0] = 99;
+        let err = Request::decode(&p).unwrap_err();
+        assert!(err.to_string().contains("version 99"), "{err}");
+        let p = vec![PROTOCOL_VERSION, 0x7F];
+        assert!(Request::decode(&p).is_err());
+        // trailing garbage is rejected, not ignored
+        let mut p = Request::GetManifest.encode();
+        p.push(0);
+        assert!(Request::decode(&p).is_err());
+    }
+}

@@ -1,0 +1,392 @@
+//! Multi-threaded sparse-logit server.
+//!
+//! # Architecture
+//!
+//! One accept thread, one thread per connection, and a fixed pool of
+//! *shard-affine* workers over the shared [`CacheReader`]:
+//!
+//! ```text
+//! conn thread:  read frame -> decode -> route by owning shard of `start`
+//!                 -> try_push onto worker queue (bounded)  --full--> Error{Overloaded}
+//!                 -> wait for the worker's reply -> write response frame
+//! worker i:     pop job -> reader.try_get_range -> send result back
+//! ```
+//!
+//! * **Shard affinity.** A range request is routed to worker
+//!   `owning_shard(start) % workers`, so concurrent requests for the same
+//!   region serialize on one worker and hit the decoded-shard LRU instead of
+//!   racing the disk. Overlap *across* workers (a range spanning shards) is
+//!   collapsed by the reader's single-flight loads — together these make
+//!   duplicate in-flight fetches structurally impossible: every shard is
+//!   read from disk at most once per residency.
+//! * **Backpressure.** Worker queues are bounded ([`ServeConfig::queue_cap`]
+//!   per worker, admission-checked with `RingBuffer::try_push`). A full
+//!   queue answers [`ErrCode::Overloaded`] immediately — the server sheds
+//!   load instead of queueing unboundedly, and the client backs off.
+//! * **Latency accounting.** The connection thread measures accept-to-reply
+//!   time (queue wait included — what a client experiences) into the
+//!   log₂-bucket histogram; `Stats` exposes p50/p99 and hot-shard counters.
+//!
+//! Manifest/stats/ping requests are answered inline on the connection
+//! thread; only range reads go through the worker pool.
+
+use std::net::{TcpListener, TcpStream};
+use std::os::unix::net::{UnixListener, UnixStream};
+use std::path::PathBuf;
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::{mpsc, Arc, Mutex};
+use std::thread::JoinHandle;
+use std::time::{Duration, Instant};
+
+use crate::cache::{CacheReader, RingBuffer, SparseTarget};
+use crate::serve::protocol::{
+    read_frame, write_frame, ErrCode, RemoteManifest, Request, Response, MAX_FRAME,
+    PROTOCOL_VERSION,
+};
+use crate::serve::stats::{ServeStats, StatsSnapshot};
+use crate::serve::{Endpoint, Stream};
+
+/// Server-side write timeout: a healthy loopback client drains responses
+/// immediately, so a write blocked this long means the peer stopped reading
+/// — drop the connection instead of pinning its thread (and shutdown).
+const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+#[derive(Clone, Debug)]
+pub struct ServeConfig {
+    /// shard-affine worker threads performing cache reads
+    pub workers: usize,
+    /// bounded job-queue capacity *per worker*; the admission-control knob
+    pub queue_cap: usize,
+    /// largest `len` a single `GetRange` may ask for
+    pub max_range: usize,
+    /// how often idle connection threads poll the shutdown flag
+    pub read_timeout: Duration,
+}
+
+impl Default for ServeConfig {
+    fn default() -> ServeConfig {
+        ServeConfig {
+            workers: 4,
+            queue_cap: 64,
+            max_range: 8192,
+            read_timeout: Duration::from_millis(200),
+        }
+    }
+}
+
+/// One queued range read; the connection thread blocks on `done`.
+struct Job {
+    start: u64,
+    len: usize,
+    done: mpsc::SyncSender<Result<Vec<SparseTarget>, String>>,
+}
+
+struct Shared {
+    reader: Arc<CacheReader>,
+    cfg: ServeConfig,
+    stats: ServeStats,
+    queues: Vec<Arc<RingBuffer<Job>>>,
+    shutdown: AtomicBool,
+    /// connection threads, joined at shutdown (accept thread pushes)
+    conns: Mutex<Vec<JoinHandle<()>>>,
+}
+
+enum Listener {
+    Tcp(TcpListener),
+    Unix(UnixListener),
+}
+
+/// A running server. Dropping it (or calling [`Server::shutdown`]) stops the
+/// accept loop, drains in-flight work, and joins every thread.
+pub struct Server {
+    shared: Arc<Shared>,
+    endpoint: Endpoint,
+    accept: Option<JoinHandle<()>>,
+    workers: Vec<JoinHandle<()>>,
+    /// unix socket file to unlink at shutdown
+    unix_path: Option<PathBuf>,
+}
+
+impl Server {
+    /// Bind `endpoint` and start serving `reader`. `Endpoint::Tcp` with port
+    /// 0 binds an ephemeral port — read the actual one back from
+    /// [`Server::endpoint`].
+    pub fn start(
+        reader: Arc<CacheReader>,
+        endpoint: Endpoint,
+        cfg: ServeConfig,
+    ) -> std::io::Result<Server> {
+        let workers = cfg.workers.max(1);
+        let (listener, endpoint, unix_path) = match &endpoint {
+            Endpoint::Tcp(addr) => {
+                let l = TcpListener::bind(addr)?;
+                let actual = Endpoint::Tcp(l.local_addr()?);
+                (Listener::Tcp(l), actual, None)
+            }
+            Endpoint::Unix(path) => {
+                // a stale socket file from a dead server blocks bind
+                let _ = std::fs::remove_file(path);
+                let l = UnixListener::bind(path)?;
+                (Listener::Unix(l), Endpoint::Unix(path.clone()), Some(path.clone()))
+            }
+        };
+        let queues: Vec<Arc<RingBuffer<Job>>> =
+            (0..workers).map(|_| RingBuffer::new(cfg.queue_cap.max(1))).collect();
+        let shared = Arc::new(Shared {
+            stats: ServeStats::new(reader.shard_count()),
+            reader,
+            cfg,
+            queues,
+            shutdown: AtomicBool::new(false),
+            conns: Mutex::new(Vec::new()),
+        });
+        let worker_handles = (0..workers)
+            .map(|i| {
+                let shared = Arc::clone(&shared);
+                std::thread::spawn(move || worker_loop(&shared, i))
+            })
+            .collect();
+        let accept = {
+            let shared = Arc::clone(&shared);
+            std::thread::spawn(move || accept_loop(listener, &shared))
+        };
+        Ok(Server {
+            shared,
+            endpoint,
+            accept: Some(accept),
+            workers: worker_handles,
+            unix_path,
+        })
+    }
+
+    /// The bound endpoint (with the actual port for `Tcp(…:0)` binds).
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    /// Freeze every counter (serving stats + the reader's load/coalesce
+    /// counters) — same data the `Stats` wire frame carries.
+    pub fn stats_snapshot(&self) -> StatsSnapshot {
+        self.shared
+            .stats
+            .snapshot_with(self.shared.reader.shard_loads(), self.shared.reader.coalesced_loads())
+    }
+
+    /// Stop accepting, drain in-flight requests, join every thread, and (for
+    /// Unix endpoints) unlink the socket file. Idempotent; also runs on drop.
+    pub fn shutdown(&mut self) {
+        if self.shared.shutdown.swap(true, Ordering::SeqCst) {
+            return;
+        }
+        // the accept loop is parked in accept(); poke it with a throwaway
+        // connection so it observes the flag
+        match &self.endpoint {
+            Endpoint::Tcp(a) => drop(TcpStream::connect(a)),
+            Endpoint::Unix(p) => drop(UnixStream::connect(p)),
+        }
+        if let Some(h) = self.accept.take() {
+            let _ = h.join();
+        }
+        // connection threads exit within read_timeout of the flag (workers
+        // are still alive here, so a conn blocked on an in-flight job just
+        // waits for its reply first)
+        let conns = std::mem::take(&mut *self.shared.conns.lock().unwrap());
+        for h in conns {
+            let _ = h.join();
+        }
+        for q in &self.shared.queues {
+            q.close();
+        }
+        for h in self.workers.drain(..) {
+            let _ = h.join();
+        }
+        if let Some(p) = self.unix_path.take() {
+            let _ = std::fs::remove_file(p);
+        }
+    }
+}
+
+impl Drop for Server {
+    fn drop(&mut self) {
+        self.shutdown();
+    }
+}
+
+fn accept_loop(listener: Listener, shared: &Arc<Shared>) {
+    loop {
+        let stream = match &listener {
+            Listener::Tcp(l) => l.accept().map(|(s, _)| Stream::Tcp(s)),
+            Listener::Unix(l) => l.accept().map(|(s, _)| Stream::Unix(s)),
+        };
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let Ok(stream) = stream else { continue };
+        let _ = stream.set_read_timeout(Some(shared.cfg.read_timeout));
+        let _ = stream.set_write_timeout(Some(WRITE_TIMEOUT));
+        let sh = Arc::clone(shared);
+        let handle = std::thread::spawn(move || conn_loop(stream, &sh));
+        let mut conns = shared.conns.lock().unwrap();
+        // reap handles of finished connections so a long-lived server does
+        // not accumulate one JoinHandle per connection ever accepted
+        conns.retain(|h| !h.is_finished());
+        conns.push(handle);
+    }
+}
+
+fn worker_loop(shared: &Arc<Shared>, idx: usize) {
+    let queue = Arc::clone(&shared.queues[idx]);
+    while let Some(job) = queue.pop() {
+        // a panic must not kill the worker: its queue would keep accepting
+        // jobs nobody pops, wedging every connection routed to it
+        let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
+            shared.reader.try_get_range(job.start, job.len)
+        }))
+        .unwrap_or_else(|_| {
+            Err(std::io::Error::new(
+                std::io::ErrorKind::Other,
+                "cache read panicked serving this range",
+            ))
+        })
+        .map_err(|e| e.to_string());
+        // a dead connection just drops the receiver; nothing to do
+        let _ = job.done.send(res);
+    }
+}
+
+/// Worker index for a range starting at `start`: the owning shard of the
+/// first position, or a spread over workers for positions outside every
+/// shard (still a valid request — it answers empty targets).
+fn route(reader: &CacheReader, start: u64, workers: usize) -> usize {
+    match reader.shard_index_of(start) {
+        Some(shard) => shard % workers,
+        None => (start as usize) % workers,
+    }
+}
+
+fn conn_loop(mut stream: Stream, shared: &Arc<Shared>) {
+    loop {
+        if shared.shutdown.load(Ordering::SeqCst) {
+            return;
+        }
+        let payload = match read_frame(&mut stream) {
+            Ok(Some(p)) => p,
+            Ok(None) => return, // clean disconnect
+            Err(e)
+                if e.kind() == std::io::ErrorKind::WouldBlock
+                    || e.kind() == std::io::ErrorKind::TimedOut =>
+            {
+                continue
+            }
+            Err(_) => return,
+        };
+        let resp = match Request::decode(&payload) {
+            Ok(req) => handle_request(req, shared),
+            Err(e) => {
+                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                // decide the code from the version byte itself, not from the
+                // decode error's message text
+                let code = match payload.first() {
+                    Some(v) if *v != PROTOCOL_VERSION => ErrCode::BadVersion,
+                    _ => ErrCode::BadRequest,
+                };
+                Response::Error { code, msg: e.to_string() }
+            }
+        };
+        let mut payload = resp.encode();
+        if payload.len() > MAX_FRAME {
+            // a legal-but-huge range (misconfigured max_range vs dense
+            // targets) must answer a typed error frame, not die mid-write
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            payload = Response::Error {
+                code: ErrCode::RangeTooLarge,
+                msg: format!(
+                    "response of {} bytes exceeds the {MAX_FRAME}-byte frame limit; \
+                     request a smaller range",
+                    payload.len()
+                ),
+            }
+            .encode();
+        }
+        if write_frame(&mut stream, &payload).is_err() {
+            return;
+        }
+    }
+}
+
+fn handle_request(req: Request, shared: &Arc<Shared>) -> Response {
+    match req {
+        Request::Ping => Response::Pong,
+        Request::GetManifest => {
+            let r = &shared.reader;
+            Response::Manifest(RemoteManifest {
+                cache_version: r.version,
+                positions: r.positions,
+                rounds: r.rounds,
+                bytes: r.bytes,
+                shard_count: r.shard_count() as u32,
+                kind: r.kind.clone(),
+            })
+        }
+        Request::GetStats => Response::Stats(
+            shared
+                .stats
+                .snapshot_with(shared.reader.shard_loads(), shared.reader.coalesced_loads()),
+        ),
+        Request::GetRange { start, len } => serve_range(shared, start, len as usize),
+    }
+}
+
+fn serve_range(shared: &Arc<Shared>, start: u64, len: usize) -> Response {
+    if len > shared.cfg.max_range {
+        shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+        return Response::Error {
+            code: ErrCode::RangeTooLarge,
+            msg: format!("len {len} exceeds max_range {}", shared.cfg.max_range),
+        };
+    }
+    // wire-controlled start: a range running past u64::MAX is malformed
+    let Some(end) = start.checked_add(len as u64) else {
+        shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+        return Response::Error {
+            code: ErrCode::BadRequest,
+            msg: format!("range [{start}, +{len}) overflows the position space"),
+        };
+    };
+    let t0 = Instant::now();
+    let worker = route(&shared.reader, start, shared.queues.len());
+    let (tx, rx) = mpsc::sync_channel(1);
+    let job = Job { start, len, done: tx };
+    if shared.queues[worker].try_push(job).is_err() {
+        shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
+        return Response::Error {
+            code: ErrCode::Overloaded,
+            msg: format!("worker {worker} queue full ({} slots)", shared.cfg.queue_cap),
+        };
+    }
+    match rx.recv() {
+        Ok(Ok(targets)) => {
+            shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+            shared.stats.hist.record(t0.elapsed());
+            // hot-shard accounting: every shard the range overlaps
+            let entries = shared.reader.entries();
+            let first = entries.partition_point(|e| e.start + e.count <= start);
+            for (i, e) in entries.iter().enumerate().skip(first) {
+                if e.start >= end {
+                    break;
+                }
+                shared.stats.touch_shard(i);
+            }
+            Response::Targets(targets)
+        }
+        Ok(Err(msg)) => {
+            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+            Response::Error { code: ErrCode::Internal, msg }
+        }
+        // the worker pool is shutting down and dropped the job
+        Err(_) => Response::Error {
+            code: ErrCode::Internal,
+            msg: "server shutting down".into(),
+        },
+    }
+}

@@ -1,0 +1,201 @@
+//! Serving-side observability: a lock-free log₂-bucket latency histogram
+//! (p50/p99 without storing samples), hot-shard counters, and the counter
+//! set the `Stats` wire frame snapshots.
+//!
+//! Bucket `i` of the histogram counts latencies in `[2^i, 2^{i+1})`
+//! microseconds (bucket 0 also absorbs sub-microsecond samples). Quantiles
+//! are read as the *upper edge* of the bucket holding the target rank, so a
+//! reported p99 is a ≤2x overestimate — the right bias for latency SLOs
+//! (never under-promise tail latency).
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::time::Duration;
+
+/// Number of log₂ microsecond buckets: bucket 31 covers ~35 minutes — far
+/// beyond any sane request — so the top bucket never saturates in practice.
+pub const HIST_BUCKETS: usize = 32;
+
+/// Lock-free latency histogram; `record` is one relaxed atomic increment.
+#[derive(Debug, Default)]
+pub struct LatencyHistogram {
+    buckets: [AtomicU64; HIST_BUCKETS],
+}
+
+/// Bucket index for a latency: floor(log₂(µs)), clamped to the bucket range.
+fn bucket_of(latency: Duration) -> usize {
+    let us = latency.as_micros() as u64;
+    if us == 0 {
+        return 0;
+    }
+    ((63 - us.leading_zeros()) as usize).min(HIST_BUCKETS - 1)
+}
+
+/// Upper edge (exclusive) of bucket `i`, in microseconds.
+pub fn bucket_upper_us(i: usize) -> u64 {
+    1u64 << (i + 1).min(63)
+}
+
+impl LatencyHistogram {
+    pub fn record(&self, latency: Duration) {
+        self.buckets[bucket_of(latency)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn snapshot(&self) -> Vec<u64> {
+        self.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// Live server counters. Request latencies are recorded end-to-end on the
+/// connection thread (queue wait included — that is the latency a client
+/// experiences); hot-shard counters increment once per (request, shard
+/// overlapped) pair.
+#[derive(Debug)]
+pub struct ServeStats {
+    /// `GetRange` requests served successfully
+    pub requests: AtomicU64,
+    /// requests bounced by admission control (queue full)
+    pub rejected: AtomicU64,
+    /// requests answered with a non-overload error frame
+    pub errors: AtomicU64,
+    pub hist: LatencyHistogram,
+    hot: Vec<AtomicU64>,
+}
+
+impl ServeStats {
+    pub fn new(shard_count: usize) -> ServeStats {
+        ServeStats {
+            requests: AtomicU64::new(0),
+            rejected: AtomicU64::new(0),
+            errors: AtomicU64::new(0),
+            hist: LatencyHistogram::default(),
+            hot: (0..shard_count).map(|_| AtomicU64::new(0)).collect(),
+        }
+    }
+
+    pub fn touch_shard(&self, idx: usize) {
+        if let Some(h) = self.hot.get(idx) {
+            h.fetch_add(1, Ordering::Relaxed);
+        }
+    }
+
+    /// Freeze every counter, folding in the reader-level counters the server
+    /// tracks (total shard decodes; in-flight loads coalesced away).
+    pub fn snapshot_with(&self, shard_loads: u64, coalesced: u64) -> StatsSnapshot {
+        StatsSnapshot {
+            requests: self.requests.load(Ordering::Relaxed),
+            rejected: self.rejected.load(Ordering::Relaxed),
+            errors: self.errors.load(Ordering::Relaxed),
+            shard_loads,
+            coalesced,
+            hist: self.hist.snapshot(),
+            hot: self.hot.iter().map(|h| h.load(Ordering::Relaxed)).collect(),
+        }
+    }
+}
+
+/// Point-in-time counter snapshot; what the `Stats` wire frame carries.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct StatsSnapshot {
+    pub requests: u64,
+    pub rejected: u64,
+    pub errors: u64,
+    /// underlying shard decodes performed by the served `CacheReader`
+    pub shard_loads: u64,
+    /// shard requests coalesced onto another thread's in-flight decode
+    pub coalesced: u64,
+    /// log₂ µs latency buckets ([`HIST_BUCKETS`] entries)
+    pub hist: Vec<u64>,
+    /// per-shard request-overlap counters, indexed like the manifest shards
+    pub hot: Vec<u64>,
+}
+
+impl StatsSnapshot {
+    pub fn samples(&self) -> u64 {
+        self.hist.iter().sum()
+    }
+
+    /// Latency quantile in microseconds (upper bucket edge; ≤2x
+    /// overestimate). `None` when no samples have been recorded.
+    pub fn quantile_us(&self, q: f64) -> Option<u64> {
+        let total = self.samples();
+        if total == 0 {
+            return None;
+        }
+        // rank of the q-quantile sample, 1-based, clamped into [1, total]
+        let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+        let mut seen = 0u64;
+        for (i, &c) in self.hist.iter().enumerate() {
+            seen += c;
+            if seen >= rank {
+                return Some(bucket_upper_us(i));
+            }
+        }
+        Some(bucket_upper_us(HIST_BUCKETS - 1))
+    }
+
+    pub fn p50_us(&self) -> Option<u64> {
+        self.quantile_us(0.50)
+    }
+
+    pub fn p99_us(&self) -> Option<u64> {
+        self.quantile_us(0.99)
+    }
+
+    /// The `n` most-requested shards as `(shard_index, hits)`, busiest first
+    /// (zero-hit shards omitted).
+    pub fn hot_shards(&self, n: usize) -> Vec<(usize, u64)> {
+        let mut v: Vec<(usize, u64)> =
+            self.hot.iter().copied().enumerate().filter(|&(_, c)| c > 0).collect();
+        v.sort_by(|a, b| b.1.cmp(&a.1).then(a.0.cmp(&b.0)));
+        v.truncate(n);
+        v
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn bucket_edges() {
+        assert_eq!(bucket_of(Duration::from_micros(0)), 0);
+        assert_eq!(bucket_of(Duration::from_micros(1)), 0);
+        assert_eq!(bucket_of(Duration::from_micros(2)), 1);
+        assert_eq!(bucket_of(Duration::from_micros(3)), 1);
+        assert_eq!(bucket_of(Duration::from_micros(4)), 2);
+        assert_eq!(bucket_of(Duration::from_micros(1023)), 9);
+        assert_eq!(bucket_of(Duration::from_micros(1024)), 10);
+        assert_eq!(bucket_of(Duration::from_secs(3600)), HIST_BUCKETS - 1);
+        assert_eq!(bucket_upper_us(0), 2);
+        assert_eq!(bucket_upper_us(9), 1024);
+    }
+
+    #[test]
+    fn quantiles_from_known_distribution() {
+        let stats = ServeStats::new(4);
+        // 99 fast samples (~8 µs, bucket 3) and 1 slow (~2000 µs, bucket 10)
+        for _ in 0..99 {
+            stats.hist.record(Duration::from_micros(8));
+        }
+        stats.hist.record(Duration::from_micros(2000));
+        let s = stats.snapshot_with(0, 0);
+        assert_eq!(s.samples(), 100);
+        assert_eq!(s.p50_us(), Some(16)); // upper edge of bucket 3
+        assert_eq!(s.p99_us(), Some(16)); // rank 99 is still a fast sample
+        assert_eq!(s.quantile_us(1.0), Some(2048)); // the slow one (bucket 10)
+        assert_eq!(StatsSnapshot::default().p50_us(), None);
+    }
+
+    #[test]
+    fn hot_shards_ranked() {
+        let stats = ServeStats::new(4);
+        for _ in 0..5 {
+            stats.touch_shard(2);
+        }
+        stats.touch_shard(0);
+        stats.touch_shard(99); // out of range: ignored, not a panic
+        let s = stats.snapshot_with(0, 0);
+        assert_eq!(s.hot_shards(10), vec![(2, 5), (0, 1)]);
+        assert_eq!(s.hot_shards(1), vec![(2, 5)]);
+    }
+}

@@ -362,6 +362,27 @@ impl CacheKind {
         }
         Ok(CacheKind::Rs { rounds, temp })
     }
+
+    /// The typed kind of a cache given its manifest metadata, shared by the
+    /// local `CacheReader` and the serving layer's advertised manifest.
+    /// Prefers the recorded kind string — an unparseable recorded tag is an
+    /// *error* (an unknown layout must not be trained on unchecked).
+    /// Untagged directories (legacy v1, or v2 written before kinds were
+    /// recorded) fall back to codec inference: a count codec (`rounds > 0`)
+    /// means RS draws at temperature 1, anything else is assumed to be a
+    /// Top-K head. The ratio codec is genuinely ambiguous: pre-tag builds of
+    /// RS caches at temp != 1 are misread as Top-K under this inference —
+    /// rebuild or tag any such cache you intend to keep serving.
+    pub fn of_manifest(tag: Option<&str>, rounds: u32) -> Result<CacheKind, SpecError> {
+        match tag {
+            Some(k) => CacheKind::parse(k).map_err(|_| SpecError::Parse {
+                input: k.to_string(),
+                reason: "unrecognized cache kind tag in the cache manifest".into(),
+            }),
+            None if rounds > 0 => Ok(CacheKind::Rs { rounds, temp: 1.0 }),
+            None => Ok(CacheKind::TopK),
+        }
+    }
 }
 
 impl fmt::Display for CacheKind {

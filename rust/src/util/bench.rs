@@ -42,6 +42,15 @@ pub fn bench<F: FnMut()>(warmup: usize, budget: Duration, mut f: F) -> BenchStat
     stats_of(samples)
 }
 
+/// Exact quantile of a latency sample set (client-side SLO readouts; the
+/// serving layer's histogram is the streaming counterpart). Sorts in place.
+pub fn quantile(samples: &mut [Duration], q: f64) -> Duration {
+    assert!(!samples.is_empty());
+    samples.sort();
+    let rank = ((q * samples.len() as f64).ceil() as usize).clamp(1, samples.len());
+    samples[rank - 1]
+}
+
 pub fn stats_of(mut samples: Vec<Duration>) -> BenchStats {
     assert!(!samples.is_empty());
     samples.sort();
@@ -153,6 +162,16 @@ mod tests {
         });
         assert!(s.iters >= 3);
         assert!(s.p10 <= s.median && s.median <= s.p90);
+    }
+
+    #[test]
+    fn quantile_exact() {
+        let mut s: Vec<Duration> = (1..=100).rev().map(Duration::from_micros).collect();
+        assert_eq!(quantile(&mut s, 0.5), Duration::from_micros(50));
+        assert_eq!(quantile(&mut s, 0.99), Duration::from_micros(99));
+        assert_eq!(quantile(&mut s, 1.0), Duration::from_micros(100));
+        let mut one = vec![Duration::from_micros(7)];
+        assert_eq!(quantile(&mut one, 0.0), Duration::from_micros(7));
     }
 
     #[test]

@@ -79,18 +79,18 @@ fn full_stack_end_to_end() {
 
     // --- typed incompatibility: Top-K spec over the RS cache must fail
     //     *before* training (this used to silently truncate id-sorted draws)
-    let err = pipe.run_student(&tk_spec, Some(&rs.reader), 5).unwrap_err();
+    let err = pipe.run_student(&tk_spec, Some(rs.reader.as_ref()), 5).unwrap_err();
     let spec_err = err.downcast_ref::<SpecError>().expect("typed SpecError");
     assert!(matches!(spec_err, SpecError::Incompatible { .. }), "{spec_err:?}");
     // ... and so must an RS spec over the Top-K cache, or a missing cache
-    let err = pipe.run_student(&rs_spec, Some(&tk.reader), 5).unwrap_err();
+    let err = pipe.run_student(&rs_spec, Some(tk.reader.as_ref()), 5).unwrap_err();
     assert!(matches!(err.downcast_ref::<SpecError>(), Some(SpecError::Incompatible { .. })));
     let err = pipe.run_student(&rs_spec, None, 5).unwrap_err();
     assert!(matches!(err.downcast_ref::<SpecError>(), Some(SpecError::MissingCache { .. })));
     // ... and a spec wider than the AOT slot budget is rejected up front
     let k_slots = pipe.engine.manifest().k_slots;
     let wide = DistillSpec::topk(k_slots + 1);
-    let err = pipe.run_student(&wide, Some(&tk.reader), 5).unwrap_err();
+    let err = pipe.run_student(&wide, Some(tk.reader.as_ref()), 5).unwrap_err();
     assert!(matches!(err.downcast_ref::<SpecError>(), Some(SpecError::SlotOverflow { .. })));
 
     // --- students across methods (run_spec resolves caches itself) ---
