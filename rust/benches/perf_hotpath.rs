@@ -10,25 +10,41 @@
 //!             server-side p50/p99 (the `load-gen` subcommand is the
 //!             heavier, configurable version of this section).
 //!
-//! The cache-layer and serve sections are host-only and run even when
-//! `artifacts/` is missing, so the storage + serving hot paths are
-//! benchmarkable on any machine.
+//! The cache-layer, serve, and assembly sections are host-only and run even
+//! when `artifacts/` is missing, so the storage + serving + block-assembly
+//! hot paths are benchmarkable on any machine.
+//!
+//! The assembly section measures the legacy allocating path against the
+//! zero-allocation `assemble_sparse_block_into` path (tokens/sec plus
+//! steady-state allocation counts from the counting-allocator harness in
+//! `util::bench::alloc_count`) and emits `BENCH_hotpath.json` at the repo
+//! root — the machine-readable perf trajectory later PRs append to (schema:
+//! `docs/BENCH_SCHEMA.md`). With `RSKD_PERF_SMOKE=1` it runs tiny sizes and
+//! *asserts* the new path allocates nothing at steady state and is not
+//! slower than the old one — the CI perf gate.
 
 use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use rskd::cache::quant::ProbCodec;
 use rskd::cache::{CacheReader, CacheWriter, SparseTarget};
-use rskd::coordinator::{assemble_sparse_block, Pipeline};
+use rskd::coordinator::{
+    assemble_sparse_block, assemble_sparse_block_into, AssembleScratch, Pipeline, SparseBlock,
+};
+use rskd::data::loader::Batch;
 use rskd::expt;
 use rskd::report::Report;
 use rskd::runtime::HostTensor;
 use rskd::sampling::random_sampling;
 use rskd::sampling::zipf::zipf;
 use rskd::serve::{Endpoint, ServeClient, ServeConfig, Server};
-use rskd::spec::Variant;
-use rskd::util::bench::bench;
+use rskd::spec::{AdaptiveLr, Variant};
+use rskd::util::bench::{alloc_count, bench};
+use rskd::util::json::Json;
 use rskd::util::rng::Pcg;
+
+#[global_allocator]
+static ALLOC: alloc_count::CountingAllocator = alloc_count::CountingAllocator;
 
 /// Build an `n`-position cache with `producers` concurrent pushers (strided
 /// interleave, so every shard sees every producer) and return positions/sec.
@@ -188,8 +204,171 @@ fn serve_layer_benches(report: &mut Report) {
     let _ = std::fs::remove_dir_all(&dir);
 }
 
+/// Old-vs-new sparse-block assembly over a synthetic RS-50 cache (host-only:
+/// no artifacts needed). Returns the `BENCH_hotpath.json` assembly object.
+fn assembly_benches(report: &mut Report, smoke: bool) -> Json {
+    // tiny sizes under RSKD_PERF_SMOKE=1 so CI can gate on this cheaply
+    let (n_positions, b, s, k_slots) =
+        if smoke { (2048usize, 4usize, 64usize, 32usize) } else { (16_384, 8, 256, 64) };
+    let vocab = 512usize;
+    let p = zipf(vocab, 1.0);
+    let mut rng = Pcg::new(21);
+    let dir = std::env::temp_dir().join(format!("rskd-perf-asm-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 512, 256).unwrap();
+    for pos in 0..n_positions as u64 {
+        assert!(w.push(pos, random_sampling(&p, 50, 1.0, &mut rng)));
+    }
+    w.finish().unwrap();
+    // capacity >= shard count: steady-state reads must not evict/re-decode
+    let reader = CacheReader::open_with_capacity(&dir, n_positions / 512 + 1).unwrap();
+
+    // one fixed batch with scattered row offsets (the shuffled-loader shape)
+    let rows = b * s;
+    let batch = Batch {
+        tokens: vec![1i32; rows],
+        labels: (0..rows).map(|_| rng.below(vocab as u64) as i32).collect(),
+        offsets: (0..b).map(|_| rng.below((n_positions - s) as u64) as usize).collect(),
+        batch: b,
+        seq: s,
+    };
+    let variant = Variant::Rs { rounds: 50, temp: 1.0 };
+    let adaptive = Some(AdaptiveLr { ratio: 2.0, hard_frac: 0.3 });
+
+    // correctness first: the zero-alloc path must be byte-identical
+    let legacy = assemble_sparse_block(&reader, &batch, vocab, k_slots, variant, adaptive);
+    let mut scratch = AssembleScratch::serial();
+    let mut blk = SparseBlock::default();
+    assemble_sparse_block_into(&reader, &batch, vocab, k_slots, variant, adaptive, &mut scratch,
+                               &mut blk)
+        .unwrap();
+    assert_eq!(blk.idx, legacy.idx);
+    assert_eq!(blk.val, legacy.val);
+    assert_eq!(blk.smooth, legacy.smooth);
+    assert_eq!(blk.lr_scale, legacy.lr_scale);
+
+    let budget = Duration::from_millis(if smoke { 200 } else { 800 });
+    report.line("--- assembly: cache -> SparseBlock, old (allocating) vs new (zero-alloc) ---");
+    let counting = alloc_count::is_counting();
+
+    let st_old = bench(2, budget, || {
+        let blk = assemble_sparse_block(&reader, &batch, vocab, k_slots, variant, adaptive);
+        std::hint::black_box(blk.val.len());
+    });
+    let (allocs_old, _) = alloc_count::measure(|| {
+        let blk = assemble_sparse_block(&reader, &batch, vocab, k_slots, variant, adaptive);
+        std::hint::black_box(blk.val.len());
+    });
+
+    let st_new = bench(2, budget, || {
+        assemble_sparse_block_into(&reader, &batch, vocab, k_slots, variant, adaptive,
+                                   &mut scratch, &mut blk)
+            .unwrap();
+        std::hint::black_box(blk.val.len());
+    });
+    let (allocs_new, _) = alloc_count::measure(|| {
+        assemble_sparse_block_into(&reader, &batch, vocab, k_slots, variant, adaptive,
+                                   &mut scratch, &mut blk)
+            .unwrap();
+        std::hint::black_box(blk.val.len());
+    });
+
+    let mut par_scratch = AssembleScratch::with_workers(0);
+    let st_par = bench(2, budget, || {
+        assemble_sparse_block_into(&reader, &batch, vocab, k_slots, variant, adaptive,
+                                   &mut par_scratch, &mut blk)
+            .unwrap();
+        std::hint::black_box(blk.val.len());
+    });
+
+    let tps = |st: &rskd::util::bench::BenchStats| rows as f64 / st.median.as_secs_f64();
+    let alloc_cell = |n: u64| {
+        if counting { format!("{n}") } else { "n/a".into() }
+    };
+    report.table(
+        &["assembly path", "median", "tokens/s", "allocs/step"],
+        &[
+            vec!["old: assemble_sparse_block".into(),
+                 format!("{:.3} ms", st_old.per_iter_ms()),
+                 format!("{:.0}", tps(&st_old)),
+                 alloc_cell(allocs_old)],
+            vec!["new: assemble_sparse_block_into (serial)".into(),
+                 format!("{:.3} ms", st_new.per_iter_ms()),
+                 format!("{:.0}", tps(&st_new)),
+                 alloc_cell(allocs_new)],
+            vec![format!("new: parallel ({} workers)", par_scratch.workers()),
+                 format!("{:.3} ms", st_par.per_iter_ms()),
+                 format!("{:.0}", tps(&st_par)),
+                 "-".into()],
+        ],
+    );
+
+    if smoke {
+        assert!(counting, "smoke mode requires the counting allocator to be installed");
+        assert_eq!(allocs_new, 0, "zero-alloc assembly path must not allocate at steady state");
+        // 10% noise margin: the real gap is several x (no per-token vectors),
+        // so this still catches any genuine regression without making the CI
+        // gate flaky on a noisy shared runner
+        assert!(
+            st_new.median.as_secs_f64() <= st_old.median.as_secs_f64() * 1.10,
+            "new assembly path regressed: new {:?} > old {:?} (+10% margin)",
+            st_new.median,
+            st_old.median
+        );
+        report.line("[smoke gate passed: 0 allocs/step, new <= old]");
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+
+    let path_obj = |st: &rskd::util::bench::BenchStats, allocs: Option<u64>| {
+        let mut pairs = vec![
+            ("ms_per_block", Json::num(st.per_iter_ms())),
+            ("tokens_per_sec", Json::num(tps(st))),
+        ];
+        if let Some(a) = allocs {
+            pairs.push(("allocs_per_step", Json::num(a as f64)));
+        }
+        Json::obj(pairs)
+    };
+    Json::obj(vec![
+        ("config", Json::obj(vec![
+            ("vocab", Json::num(vocab as f64)),
+            ("batch", Json::num(b as f64)),
+            ("seq", Json::num(s as f64)),
+            ("k_slots", Json::num(k_slots as f64)),
+            ("rounds", Json::num(50.0)),
+            ("positions", Json::num(n_positions as f64)),
+            ("smoke", Json::Bool(smoke)),
+            ("alloc_counting", Json::Bool(counting)),
+        ])),
+        ("old", path_obj(&st_old, counting.then_some(allocs_old))),
+        ("new_serial", path_obj(&st_new, counting.then_some(allocs_new))),
+        ("new_parallel", Json::obj(vec![
+            ("workers", Json::num(par_scratch.workers() as f64)),
+            ("ms_per_block", Json::num(st_par.per_iter_ms())),
+            ("tokens_per_sec", Json::num(tps(&st_par))),
+        ])),
+    ])
+}
+
 fn main() {
+    let smoke = std::env::var("RSKD_PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
     let mut report = Report::new("perf_hotpath", "Hot-path timings per layer");
+    let assembly = assembly_benches(&mut report, smoke);
+    let bench_json = Json::obj(vec![
+        ("schema_version", Json::num(1.0)),
+        ("bench", Json::str("perf_hotpath")),
+        ("assembly", assembly),
+    ]);
+    // the repo-root perf trajectory point (schema: docs/BENCH_SCHEMA.md)
+    match std::fs::write("BENCH_hotpath.json", bench_json.to_string()) {
+        Ok(()) => println!("[BENCH_hotpath.json written]"),
+        Err(e) => eprintln!("warning: could not write BENCH_hotpath.json: {e}"),
+    }
+    if smoke {
+        println!("[smoke mode: skipping cache/serve/engine sections]");
+        report.finish();
+        return;
+    }
     cache_layer_benches(&mut report);
     serve_layer_benches(&mut report);
 

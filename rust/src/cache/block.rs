@@ -1,0 +1,186 @@
+//! Flat CSR-style range block: the zero-allocation counterpart of
+//! `Vec<SparseTarget>`.
+//!
+//! A [`RangeBlock`] holds the decoded sparse targets of one contiguous
+//! position range as three flat arrays — `ids`, `probs`, and a CSR `offsets`
+//! prefix — instead of one heap pair per position. Consumers own the block
+//! and pass it to [`TargetSource::read_range_into`](crate::cache::TargetSource::read_range_into)
+//! every step; `clear` keeps the backing capacity, so once the buffers have
+//! grown to the largest range seen, steady-state refills perform **zero**
+//! heap allocations. This is the hot-path currency of the student trainer's
+//! block assembly (`coordinator::trainer::assemble_sparse_block_into`).
+//!
+//! The legacy `Vec<SparseTarget>` API (`get_range`/`try_get_range`) remains
+//! as a thin compatibility wrapper that materializes a block into per-row
+//! vectors ([`RangeBlock::to_targets`]).
+
+use crate::cache::format::SparseTarget;
+
+/// Decoded sparse targets for a contiguous position range, CSR layout.
+///
+/// Invariants (maintained by the appending helpers; the fields are public so
+/// decoders can fill the arrays in place, but mutate through the helpers
+/// unless you uphold these yourself):
+/// * `offsets.len() == len() + 1`, `offsets[0] == 0`, non-decreasing;
+/// * `ids.len() == probs.len() == *offsets.last().unwrap() as usize`.
+#[derive(Clone, Debug, PartialEq)]
+pub struct RangeBlock {
+    /// token ids of every position, concatenated
+    pub ids: Vec<u32>,
+    /// probabilities, parallel to `ids`
+    pub probs: Vec<f32>,
+    /// CSR prefix: position `i` owns slots `offsets[i]..offsets[i+1]`
+    pub offsets: Vec<u32>,
+}
+
+impl Default for RangeBlock {
+    fn default() -> RangeBlock {
+        RangeBlock::new()
+    }
+}
+
+impl RangeBlock {
+    pub fn new() -> RangeBlock {
+        RangeBlock { ids: Vec::new(), probs: Vec::new(), offsets: vec![0] }
+    }
+
+    /// Pre-size for `positions` rows of ~`slots_per_pos` slots each.
+    pub fn with_capacity(positions: usize, slots_per_pos: usize) -> RangeBlock {
+        let mut b = RangeBlock {
+            ids: Vec::with_capacity(positions * slots_per_pos),
+            probs: Vec::with_capacity(positions * slots_per_pos),
+            offsets: Vec::with_capacity(positions + 1),
+        };
+        b.offsets.push(0);
+        b
+    }
+
+    /// Drop all positions, keeping the backing capacity (the zero-alloc
+    /// reuse contract).
+    pub fn clear(&mut self) {
+        self.ids.clear();
+        self.probs.clear();
+        self.offsets.clear();
+        self.offsets.push(0);
+    }
+
+    /// Number of positions stored.
+    pub fn len(&self) -> usize {
+        self.offsets.len().saturating_sub(1)
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    /// Total (id, prob) slots across all positions.
+    pub fn total_slots(&self) -> usize {
+        self.ids.len()
+    }
+
+    /// Append one slot to the position currently being built. Must be
+    /// followed by [`RangeBlock::end_position`] before the next position.
+    #[inline]
+    pub fn push_slot(&mut self, id: u32, prob: f32) {
+        self.ids.push(id);
+        self.probs.push(prob);
+    }
+
+    /// Seal the position currently being built (all slots pushed since the
+    /// previous seal belong to it).
+    #[inline]
+    pub fn end_position(&mut self) {
+        self.offsets.push(self.ids.len() as u32);
+    }
+
+    /// Append an empty position (missing from every shard — the misaligned-
+    /// packing semantics).
+    #[inline]
+    pub fn push_empty(&mut self) {
+        self.end_position();
+    }
+
+    /// Append one position from a decoded [`SparseTarget`].
+    pub fn push_target(&mut self, t: &SparseTarget) {
+        self.ids.extend_from_slice(&t.ids);
+        self.probs.extend_from_slice(&t.probs);
+        self.end_position();
+    }
+
+    /// Slot count of position `i`.
+    #[inline]
+    pub fn k_of(&self, i: usize) -> usize {
+        (self.offsets[i + 1] - self.offsets[i]) as usize
+    }
+
+    /// Borrowed `(ids, probs)` view of position `i`.
+    #[inline]
+    pub fn get(&self, i: usize) -> (&[u32], &[f32]) {
+        let (a, b) = (self.offsets[i] as usize, self.offsets[i + 1] as usize);
+        (&self.ids[a..b], &self.probs[a..b])
+    }
+
+    /// Materialize per-position vectors (the legacy `get_range` shape).
+    pub fn to_targets(&self) -> Vec<SparseTarget> {
+        (0..self.len())
+            .map(|i| {
+                let (ids, probs) = self.get(i);
+                SparseTarget { ids: ids.to_vec(), probs: probs.to_vec() }
+            })
+            .collect()
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn append_and_view() {
+        let mut b = RangeBlock::new();
+        b.push_slot(3, 0.5);
+        b.push_slot(9, 0.25);
+        b.end_position();
+        b.push_empty();
+        b.push_target(&SparseTarget { ids: vec![1], probs: vec![0.125] });
+        assert_eq!(b.len(), 3);
+        assert_eq!(b.total_slots(), 3);
+        assert_eq!(b.k_of(0), 2);
+        assert_eq!(b.k_of(1), 0);
+        assert_eq!(b.get(0), (&[3u32, 9][..], &[0.5f32, 0.25][..]));
+        assert_eq!(b.get(1), (&[][..], &[][..]));
+        assert_eq!(b.get(2), (&[1u32][..], &[0.125f32][..]));
+    }
+
+    #[test]
+    fn clear_keeps_capacity() {
+        let mut b = RangeBlock::with_capacity(4, 8);
+        for _ in 0..4 {
+            for j in 0..8 {
+                b.push_slot(j, 0.1);
+            }
+            b.end_position();
+        }
+        let (ci, cp, co) = (b.ids.capacity(), b.probs.capacity(), b.offsets.capacity());
+        b.clear();
+        assert_eq!(b.len(), 0);
+        assert_eq!(b.total_slots(), 0);
+        assert_eq!(b.ids.capacity(), ci);
+        assert_eq!(b.probs.capacity(), cp);
+        assert_eq!(b.offsets.capacity(), co);
+    }
+
+    #[test]
+    fn to_targets_roundtrip() {
+        let ts = vec![
+            SparseTarget { ids: vec![5, 7], probs: vec![0.5, 0.5] },
+            SparseTarget::default(),
+            SparseTarget { ids: vec![2], probs: vec![1.0] },
+        ];
+        let mut b = RangeBlock::new();
+        for t in &ts {
+            b.push_target(t);
+        }
+        assert_eq!(b.to_targets(), ts);
+    }
+}

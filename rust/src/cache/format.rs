@@ -123,6 +123,17 @@ impl Shard {
         SparseTarget { ids: ids.clone(), probs: quant::decode(codes, self.codec) }
     }
 
+    /// Decode position `i` *appending* it to a CSR [`RangeBlock`] — the
+    /// canonical decode entry point of the cached hot path: no per-position
+    /// vectors, and once the block's buffers have grown, no allocation at
+    /// all. `decode` remains as the allocating per-position convenience.
+    pub fn decode_into(&self, i: usize, out: &mut crate::cache::RangeBlock) {
+        let (ids, codes) = &self.records[i];
+        out.ids.extend_from_slice(ids);
+        quant::decode_into(codes, self.codec, &mut out.probs);
+        out.end_position();
+    }
+
     /// Serialize with the current (v2) magic.
     pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
         let rounds = match self.codec {
@@ -373,6 +384,27 @@ mod tests {
         assert_eq!(hdr.version, 1);
         let back = Shard::read_from(&mut buf.as_slice()).unwrap();
         assert_eq!(back.records, shard.records);
+    }
+
+    #[test]
+    fn decode_into_matches_decode() {
+        for codec in [ProbCodec::Interval, ProbCodec::Ratio, ProbCodec::Count { rounds: 50 }] {
+            let mut shard = Shard::new(codec, 0);
+            for i in 0..6 {
+                shard.push(&target(3 + i % 5, i as u64));
+            }
+            let mut block = crate::cache::RangeBlock::new();
+            for i in 0..6 {
+                shard.decode_into(i, &mut block);
+            }
+            assert_eq!(block.len(), 6);
+            for i in 0..6 {
+                let t = shard.decode(i);
+                let (ids, probs) = block.get(i);
+                assert_eq!(ids, t.ids.as_slice(), "{codec:?} pos {i}");
+                assert_eq!(probs, t.probs.as_slice(), "{codec:?} pos {i}");
+            }
+        }
     }
 
     #[test]

@@ -21,11 +21,13 @@
 //!
 //! The byte-level format is specified in `docs/CACHE_FORMAT.md`.
 
+pub mod block;
 pub mod format;
 pub mod quant;
 pub mod reader;
 pub mod writer;
 
+pub use block::RangeBlock;
 pub use format::{CacheManifest, ShardMeta, SparseTarget};
 pub use quant::ProbCodec;
 pub use reader::{CacheReader, ShardEntry, DEFAULT_RESIDENT_SHARDS};
@@ -36,11 +38,26 @@ pub use writer::{CacheStats, CacheWriter, RingBuffer};
 /// remote cache server. `trainer::train_student` and
 /// `coordinator::Pipeline::run_student` are written against this trait, so a
 /// student consumes a served cache unchanged.
+///
+/// [`TargetSource::read_range_into`] is the hot-path entry point: it fills a
+/// caller-owned [`RangeBlock`], so a trainer that reuses its block performs
+/// zero steady-state allocations per range. The `Vec<SparseTarget>` methods
+/// remain as compatibility wrappers over it.
 pub trait TargetSource: Sync {
-    /// Targets for `[start, start + len)`; missing positions come back as
-    /// empty targets (misaligned-packing semantics), I/O or transport
-    /// failures as errors.
-    fn try_get_range(&self, start: u64, len: usize) -> std::io::Result<Vec<SparseTarget>>;
+    /// Fill `out` with the targets for `[start, start + len)` — exactly
+    /// `len` positions, missing ones appended empty (misaligned-packing
+    /// semantics), I/O or transport failures as errors. Implementations
+    /// `clear` the block first and must not allocate beyond growing the
+    /// block's own buffers. On error the block contents are unspecified.
+    fn read_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> std::io::Result<()>;
+
+    /// Targets for `[start, start + len)` as per-position vectors; thin
+    /// compatibility wrapper over [`TargetSource::read_range_into`].
+    fn try_get_range(&self, start: u64, len: usize) -> std::io::Result<Vec<SparseTarget>> {
+        let mut block = RangeBlock::new();
+        self.read_range_into(start, len, &mut block)?;
+        Ok(block.to_targets())
+    }
 
     /// The typed kind of targets this source holds, for
     /// `spec::DistillSpec::check_cache` compatibility checks.

@@ -115,30 +115,44 @@ pub fn encode(ids: &[u32], probs: &[f32], codec: ProbCodec) -> (Vec<u32>, Vec<u8
 
 /// Decode back to probabilities (same order as the encoded ids).
 pub fn decode(codes: &[u8], codec: ProbCodec) -> Vec<f32> {
+    let mut out = Vec::with_capacity(codes.len());
+    decode_into(codes, codec, &mut out);
+    out
+}
+
+/// Decode, *appending* to a caller-owned buffer — the zero-allocation decode
+/// entry point used by `Shard::decode_into` on the cached-target hot path
+/// (once `out` has grown, steady-state decodes never touch the heap).
+pub fn decode_into(codes: &[u8], codec: ProbCodec, out: &mut Vec<f32>) {
     match codec {
-        ProbCodec::Interval => codes.iter().map(|&c| dq_interval(c)).collect(),
+        ProbCodec::Interval => out.extend(codes.iter().map(|&c| dq_interval(c))),
         ProbCodec::Ratio => {
-            let mut out = Vec::with_capacity(codes.len());
             let mut prev = 1.0f32;
-            for &c in codes {
+            out.extend(codes.iter().map(|&c| {
                 prev *= dq_interval(c);
-                out.push(prev);
-            }
-            out
+                prev
+            }));
         }
         ProbCodec::Count { rounds } => {
-            codes.iter().map(|&c| c as f32 / rounds as f32).collect()
+            out.extend(codes.iter().map(|&c| c as f32 / rounds as f32));
         }
     }
 }
 
-/// L1 reconstruction error of an encode/decode round trip.
+/// L1 reconstruction error of an encode/decode round trip. Runs inside
+/// property tests and the fig2/table1 benches, so the id -> prob lookup is a
+/// hash map built once (the old per-slot `ids.iter().position(..)` scan made
+/// this O(k^2) per call).
 pub fn roundtrip_l1(ids: &[u32], probs: &[f32], codec: ProbCodec) -> f32 {
     let (enc_ids, codes) = encode(ids, probs, codec);
     let dec = decode(&codes, codec);
+    let mut by_id = std::collections::HashMap::with_capacity(ids.len());
+    for (&id, &p) in ids.iter().zip(probs.iter()) {
+        by_id.entry(id).or_insert(p); // first occurrence wins, like the old scan
+    }
     let mut err = 0.0;
-    for (i, &id) in enc_ids.iter().enumerate() {
-        let orig = ids.iter().position(|&x| x == id).map(|j| probs[j]).unwrap_or(0.0);
+    for (i, id) in enc_ids.iter().enumerate() {
+        let orig = by_id.get(id).copied().unwrap_or(0.0);
         err += (dec[i] - orig).abs();
     }
     err
@@ -194,6 +208,31 @@ mod tests {
         assert_eq!(eids, [1, 3, 7]);
         let dec = decode(&codes, ProbCodec::Ratio);
         assert!(dec[0] >= dec[1] && dec[1] >= dec[2]);
+    }
+
+    #[test]
+    fn decode_into_appends_and_matches_decode() {
+        let probs = [0.4f32, 0.2, 0.1, 0.05];
+        let ids = [1u32, 2, 3, 4];
+        for codec in [ProbCodec::Interval, ProbCodec::Ratio, ProbCodec::Count { rounds: 50 }] {
+            let (_, codes) = encode(&ids, &probs, codec);
+            let full = decode(&codes, codec);
+            let mut out = vec![9.0f32]; // pre-existing content must survive
+            decode_into(&codes, codec, &mut out);
+            assert_eq!(out[0], 9.0);
+            assert_eq!(&out[1..], full.as_slice(), "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn roundtrip_l1_first_duplicate_wins() {
+        // duplicate ids: the lookup must agree with the old first-match scan
+        let ids = [3u32, 3, 7];
+        let probs = [0.5f32, 0.1, 0.2];
+        let e = roundtrip_l1(&ids, &probs, ProbCodec::Count { rounds: 50 });
+        // both id-3 slots decode against the FIRST original prob (0.5):
+        // |0.5-0.5| + |0.1-0.5| + |0.2-0.2| = 0.4
+        assert!((e - 0.4).abs() < 1e-6, "{e}");
     }
 
     #[test]

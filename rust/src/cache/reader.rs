@@ -25,6 +25,7 @@ use std::path::{Path, PathBuf};
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
+use crate::cache::block::RangeBlock;
 use crate::cache::format::{
     self, CacheManifest, Shard, SparseTarget, INDEX_FILE, LEGACY_META_FILE,
 };
@@ -315,9 +316,28 @@ impl CacheReader {
         self.try_get_range(start, len).expect("cache shard read failed")
     }
 
-    /// Fallible variant of [`CacheReader::get_range`].
+    /// Fallible variant of [`CacheReader::get_range`]: thin compatibility
+    /// wrapper over [`CacheReader::read_range_into`], materializing
+    /// per-position vectors.
     pub fn try_get_range(&self, start: u64, len: usize) -> std::io::Result<Vec<SparseTarget>> {
-        let mut out = Vec::with_capacity(len);
+        let mut block = RangeBlock::new();
+        self.read_range_into(start, len, &mut block)?;
+        Ok(block.to_targets())
+    }
+
+    /// Decode `[start, start + len)` into a caller-owned CSR block — the
+    /// canonical (zero-allocation) range decode: one binary search, a
+    /// sequential scan touching each overlapping shard once, records
+    /// appended via `Shard::decode_into`. Missing positions append empty.
+    /// Once `out` has grown to the widest range seen, steady-state calls
+    /// never allocate.
+    pub fn read_range_into(
+        &self,
+        start: u64,
+        len: usize,
+        out: &mut RangeBlock,
+    ) -> std::io::Result<()> {
+        out.clear();
         let mut idx: Option<usize> = match self.starts.binary_search(&start) {
             Ok(i) => Some(i),
             Err(0) => None,
@@ -328,7 +348,7 @@ impl CacheReader {
             // positions past u64::MAX cannot exist: empty, not a debug panic
             // (`start` may come straight off the serving layer's wire)
             let Some(pos) = start.checked_add(off) else {
-                out.push(SparseTarget::default());
+                out.push_empty();
                 continue;
             };
             // advance to the next shard when pos crosses its start
@@ -337,26 +357,25 @@ impl CacheReader {
                 idx = Some(next);
             }
             let Some(i) = idx else {
-                out.push(SparseTarget::default());
+                out.push_empty();
                 continue;
             };
             let e = &self.entries[i];
             let local = pos - e.start;
             if local >= e.count {
-                out.push(SparseTarget::default());
+                out.push_empty();
                 continue;
             }
-            let shard = match &cur {
-                Some((ci, s)) if *ci == i => Arc::clone(s),
+            match &cur {
+                Some((ci, s)) if *ci == i => s.decode_into(local as usize, out),
                 _ => {
                     let s = self.shard(i)?;
-                    cur = Some((i, Arc::clone(&s)));
-                    s
+                    s.decode_into(local as usize, out);
+                    cur = Some((i, s));
                 }
-            };
-            out.push(shard.decode(local as usize));
+            }
         }
-        Ok(out)
+        Ok(())
     }
 
     /// Number of shards listed in the manifest.
@@ -395,6 +414,15 @@ impl CacheReader {
 }
 
 impl crate::cache::TargetSource for CacheReader {
+    fn read_range_into(
+        &self,
+        start: u64,
+        len: usize,
+        out: &mut RangeBlock,
+    ) -> std::io::Result<()> {
+        CacheReader::read_range_into(self, start, len, out)
+    }
+
     fn try_get_range(&self, start: u64, len: usize) -> std::io::Result<Vec<SparseTarget>> {
         CacheReader::try_get_range(self, start, len)
     }
@@ -453,6 +481,34 @@ mod tests {
         assert_eq!(ts.len(), 10);
         assert_eq!(ts[0].k(), 3);
         assert_eq!(ts[9].k(), 0); // position 14 missing -> empty
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn read_range_into_matches_get_range_and_reuses_capacity() {
+        let dir = std::env::temp_dir().join(format!("rskd-csr-test-{}", std::process::id()));
+        build_cache(&dir, 40);
+        let r = CacheReader::open(&dir).unwrap();
+        let mut block = RangeBlock::new();
+        // sweep several windows, including ones that pad past the end
+        for start in [0u64, 3, 17, 35] {
+            r.read_range_into(start, 10, &mut block).unwrap();
+            let legacy = r.get_range(start, 10);
+            assert_eq!(block.len(), legacy.len());
+            for (i, t) in legacy.iter().enumerate() {
+                let (ids, probs) = block.get(i);
+                assert_eq!(ids, t.ids.as_slice(), "start {start} pos {i}");
+                assert_eq!(probs, t.probs.as_slice(), "start {start} pos {i}");
+            }
+        }
+        // steady state: a re-read of the same window must not regrow buffers
+        r.read_range_into(0, 10, &mut block).unwrap();
+        let cap = (block.ids.capacity(), block.probs.capacity(), block.offsets.capacity());
+        r.read_range_into(0, 10, &mut block).unwrap();
+        assert_eq!(
+            cap,
+            (block.ids.capacity(), block.probs.capacity(), block.offsets.capacity())
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 

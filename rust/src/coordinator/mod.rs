@@ -25,6 +25,9 @@ pub use cachebuild::{build_cache, BuildStats};
 pub use evaluator::{evaluate, EvalResult};
 pub use pipeline::{pct_ce_to_fullkd, CacheHandle, Pipeline, PipelineConfig};
 pub use schedule::LrSchedule;
-pub use trainer::{assemble_sparse_block, train_student, TrainResult};
+pub use trainer::{
+    assemble_sparse_block, assemble_sparse_block_into, train_student, train_student_with,
+    AssembleScratch, SparseBlock, TrainOpts, TrainResult,
+};
 
 pub use crate::spec::CacheKind;

@@ -8,29 +8,91 @@
 //! The cache is consumed through the [`TargetSource`] trait, so the same
 //! training loop reads a local `CacheReader` or a remote cache behind
 //! `serve::ServedReader` — the serving layer is invisible here.
+//!
+//! # The assembly hot path
+//!
+//! Two paths build the `train_sparse` tensor block (see DESIGN.md §Hot
+//! path):
+//!
+//! * [`assemble_sparse_block`] — the legacy allocating path (`get_range`
+//!   per row, `reconstitute` per token, fresh vectors everywhere). Kept as
+//!   the oracle: a golden test pins the zero-alloc path to it bit-for-bit.
+//! * [`assemble_sparse_block_into`] — the hot path: rows decode into a
+//!   reused CSR [`RangeBlock`] (`TargetSource::read_range_into`), targets
+//!   reconstitute straight into the block's slot arrays
+//!   (`spec::reconstitute_into`), LR multipliers come from
+//!   `adaptive_lr_scale_into` over reused scratch. With one worker this
+//!   performs **zero** steady-state heap allocations per step; with more,
+//!   rows are split shard-affinely (sorted by stream offset, contiguous
+//!   chunks per scoped worker — the `build_cache`/`serve` affinity pattern).
+//!
+//! [`train_student`] overlaps assembly with execution: a background thread
+//! assembles step N+1's block and host tensors while the engine executes
+//! step N (double buffering). The overlap is observable through the
+//! `assemble_time` / `prefetch_hits` / `prefetch_misses` / `prefetch_wait`
+//! counters on [`TrainResult`]; `TrainOpts { prefetch: false, .. }` forces
+//! the synchronous reference loop, which produces the exact same losses for
+//! a fixed seed (pinned by `rust/tests/trainer_hotpath.rs`).
 
-use anyhow::Result;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::mpsc;
+use std::time::{Duration, Instant};
 
-use crate::cache::TargetSource;
+use anyhow::{anyhow, Result};
+
+use crate::cache::{RangeBlock, TargetSource};
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::loader::{Batch, Loader};
 use crate::metrics::throughput::ThroughputMeter;
 use crate::model::ModelState;
 use crate::runtime::{Engine, HostTensor};
 use crate::spec::{
-    adaptive_lr_scale, reconstitute, AdaptiveLr, DistillSpec, Objective, SpecError, Variant,
+    adaptive_lr_scale, adaptive_lr_scale_into, reconstitute, reconstitute_into, AdaptiveLr,
+    DistillSpec, Objective, SlotView, SpecError, Variant,
 };
 
-#[derive(Clone, Debug)]
+#[derive(Clone, Debug, Default)]
 pub struct TrainResult {
     pub losses: Vec<f32>,
     pub kd_losses: Vec<f32>,
     pub tokens_per_sec: f64,
     pub steps: usize,
     pub diverged: bool,
+    /// wall time spent assembling sparse blocks + packing host tensors
+    /// (on the prefetch thread when pipelining, so it overlaps `engine.call`)
+    pub assemble_time: Duration,
+    /// steps whose tensors were already assembled when the engine needed them
+    pub prefetch_hits: u64,
+    /// steps where the training thread had to wait on the assembler
+    pub prefetch_misses: u64,
+    /// total time the training thread spent blocked on the assembler
+    pub prefetch_wait: Duration,
+}
+
+/// Knobs for [`train_student_with`]. The defaults are the production hot
+/// path: prefetch on, serial (zero-allocation) assembly on the background
+/// thread — parallel assembly helps only when assembly itself is the
+/// bottleneck (see the `perf_hotpath` assembly section).
+#[derive(Clone, Copy, Debug)]
+pub struct TrainOpts {
+    /// assemble step N+1 on a background thread while step N executes
+    pub prefetch: bool,
+    /// assembly worker threads: 1 = serial zero-alloc path (default),
+    /// 0 = auto (`available_parallelism` capped at 4), N = exactly N.
+    /// Parallelism only pays off over a local `CacheReader`; a
+    /// `ServedReader` serializes all workers on its single connection
+    /// mutex, so keep this at 1 for served caches.
+    pub assemble_workers: usize,
+}
+
+impl Default for TrainOpts {
+    fn default() -> TrainOpts {
+        TrainOpts { prefetch: true, assemble_workers: 1 }
+    }
 }
 
 /// Assemble the `train_sparse` tensor block for one batch from the cache.
+#[derive(Clone, Debug, Default)]
 pub struct SparseBlock {
     pub idx: Vec<i32>,
     pub val: Vec<f32>,
@@ -39,6 +101,10 @@ pub struct SparseBlock {
     pub lr_scale: Vec<f32>,
 }
 
+/// Legacy allocating assembly — the oracle for
+/// [`assemble_sparse_block_into`] (golden-tested byte-identical) and the
+/// old-path baseline in `perf_hotpath`. Panics on cache I/O errors, like
+/// `TargetSource::get_range`.
 pub fn assemble_sparse_block(
     cache: &dyn TargetSource,
     batch: &Batch,
@@ -76,6 +142,190 @@ pub fn assemble_sparse_block(
     SparseBlock { idx, val, smooth, ghost_on, lr_scale }
 }
 
+/// Reusable workspace for [`assemble_sparse_block_into`]: per-worker CSR
+/// range blocks, the per-token confidence buffer, and the adaptive-LR
+/// scratch. Construct once, reuse every step — after the first step all
+/// buffers have reached steady-state capacity and assembly allocates
+/// nothing.
+pub struct AssembleScratch {
+    workers: usize,
+    ranges: Vec<RangeBlock>,
+    confs: Vec<f32>,
+    lr_scratch: Vec<f32>,
+}
+
+impl AssembleScratch {
+    /// `workers`: 1 = serial zero-allocation assembly; 0 = auto
+    /// (`available_parallelism` capped at 4); N = exactly N scoped workers.
+    pub fn with_workers(workers: usize) -> AssembleScratch {
+        let workers = if workers > 0 {
+            workers
+        } else {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).clamp(1, 4)
+        };
+        AssembleScratch {
+            workers,
+            ranges: Vec::new(),
+            confs: Vec::new(),
+            lr_scratch: Vec::new(),
+        }
+    }
+
+    /// The serial zero-allocation configuration.
+    pub fn serial() -> AssembleScratch {
+        AssembleScratch::with_workers(1)
+    }
+
+    pub fn workers(&self) -> usize {
+        self.workers
+    }
+}
+
+/// Per-row mutable views into the output block: (slot idx, slot val,
+/// smoothing, confidences), each `seq * ..` wide.
+type RowView<'a> = (&'a mut [i32], &'a mut [f32], &'a mut [f32], &'a mut [f32]);
+
+/// One row of the batch: decode its range into `range`, reconstitute every
+/// position straight into the row's slot arrays.
+#[allow(clippy::too_many_arguments)]
+fn assemble_row(
+    cache: &dyn TargetSource,
+    batch: &Batch,
+    row: usize,
+    vocab: usize,
+    k_slots: usize,
+    variant: Variant,
+    range: &mut RangeBlock,
+    view: RowView<'_>,
+) -> std::io::Result<()> {
+    let (idx, val, smooth, confs) = view;
+    let s = batch.seq;
+    cache.read_range_into(batch.offsets[row] as u64, s, range)?;
+    for pos in 0..s {
+        let (ids, probs) = range.get(pos);
+        let label = batch.labels[row * s + pos] as u32;
+        let (smooth_c, conf) = reconstitute_into(
+            ids,
+            probs,
+            label,
+            vocab,
+            variant,
+            SlotView {
+                idx: &mut idx[pos * k_slots..(pos + 1) * k_slots],
+                val: &mut val[pos * k_slots..(pos + 1) * k_slots],
+            },
+        );
+        smooth[pos] = smooth_c;
+        confs[pos] = conf;
+    }
+    Ok(())
+}
+
+/// Zero-allocation [`assemble_sparse_block`]: fill a caller-owned
+/// [`SparseBlock`] using reused `scratch` buffers. Byte-identical to the
+/// legacy path for every [`Variant`] (golden-tested over both `CacheReader`
+/// and `ServedReader`). With `scratch.workers() > 1`, rows are sorted by
+/// stream offset and split into contiguous chunks across scoped worker
+/// threads, so rows touching the same shards stay on one worker
+/// (shard-affine splitting; the parallel path allocates O(batch) for the
+/// per-call row distribution and spawns scoped threads per call — the
+/// serial path allocates nothing). Parallel workers help only when the
+/// source itself is concurrent: a local `CacheReader` decodes shards in
+/// parallel, but a `ServedReader` serializes every worker on its single
+/// connection mutex — use one worker (correct either way, just wasted
+/// spawn/sort work otherwise).
+#[allow(clippy::too_many_arguments)]
+pub fn assemble_sparse_block_into(
+    cache: &dyn TargetSource,
+    batch: &Batch,
+    vocab: usize,
+    k_slots: usize,
+    variant: Variant,
+    adaptive: Option<AdaptiveLr>,
+    scratch: &mut AssembleScratch,
+    out: &mut SparseBlock,
+) -> std::io::Result<()> {
+    let (b, s) = (batch.batch, batch.seq);
+    let rows = b * s;
+    out.idx.resize(rows * k_slots, 0);
+    out.val.resize(rows * k_slots, 0.0);
+    out.smooth.resize(rows, 0.0);
+    out.lr_scale.resize(rows, 0.0);
+    scratch.confs.resize(rows, 0.0);
+    let w = scratch.workers.min(b).max(1);
+    if scratch.ranges.len() < w {
+        scratch.ranges.resize_with(w, RangeBlock::new);
+    }
+    if w == 1 {
+        // serial: every buffer reused, zero steady-state allocations
+        let range = &mut scratch.ranges[0];
+        for row in 0..b {
+            assemble_row(
+                cache,
+                batch,
+                row,
+                vocab,
+                k_slots,
+                variant,
+                range,
+                (
+                    &mut out.idx[row * s * k_slots..(row + 1) * s * k_slots],
+                    &mut out.val[row * s * k_slots..(row + 1) * s * k_slots],
+                    &mut out.smooth[row * s..(row + 1) * s],
+                    &mut scratch.confs[row * s..(row + 1) * s],
+                ),
+            )?;
+        }
+    } else {
+        // shard-affine split: rows sorted by offset, contiguous chunks of
+        // the sorted order per worker (same pattern as build_cache/serve)
+        let mut order: Vec<usize> = (0..b).collect();
+        order.sort_unstable_by_key(|&r| batch.offsets[r]);
+        let mut views: Vec<Option<RowView<'_>>> = out
+            .idx
+            .chunks_mut(s * k_slots)
+            .zip(out.val.chunks_mut(s * k_slots))
+            .zip(out.smooth.chunks_mut(s))
+            .zip(scratch.confs.chunks_mut(s))
+            .map(|(((i, v), sm), cf)| Some((i, v, sm, cf)))
+            .collect();
+        let per = (b + w - 1) / w;
+        let mut chunks: Vec<Vec<(usize, RowView<'_>)>> = order
+            .chunks(per)
+            .map(|rows| rows.iter().map(|&r| (r, views[r].take().unwrap())).collect())
+            .collect();
+        let results: Vec<std::io::Result<()>> = std::thread::scope(|scope| {
+            let handles: Vec<_> = chunks
+                .drain(..)
+                .zip(scratch.ranges.iter_mut())
+                .map(|(chunk, range)| {
+                    scope.spawn(move || -> std::io::Result<()> {
+                        for (row, view) in chunk {
+                            assemble_row(cache, batch, row, vocab, k_slots, variant, range, view)?;
+                        }
+                        Ok(())
+                    })
+                })
+                .collect();
+            handles
+                .into_iter()
+                .map(|h| h.join().expect("assembly worker panicked"))
+                .collect()
+        });
+        for r in results {
+            r?;
+        }
+    }
+    out.ghost_on = variant.is_ghost() as i32 as f32;
+    match adaptive {
+        None => out.lr_scale.iter_mut().for_each(|x| *x = 1.0),
+        Some(a) => {
+            adaptive_lr_scale_into(&scratch.confs, a, &mut scratch.lr_scratch, &mut out.lr_scale)
+        }
+    }
+    Ok(())
+}
+
 /// Perf pass (EXPERIMENTS.md §Perf): on the CPU PJRT backend the
 /// interpret-mode Pallas loss costs ~1.8x the XLA-fused `_jnp` variant
 /// (identical numerics, asserted by pytest and the integration suite), so
@@ -93,8 +343,111 @@ fn sparse_graph_for(engine: &Engine, role: &str) -> String {
     }
 }
 
-/// Train `student` for `steps` under `spec`. `cache` is required for Sparse
-/// objectives (any [`TargetSource`]: local reader or served cache);
+/// Per-step bookkeeping shared by the synchronous and pipelined loops.
+struct StepTracker {
+    losses: Vec<f32>,
+    kd_losses: Vec<f32>,
+    meter: ThroughputMeter,
+    diverged: bool,
+}
+
+impl StepTracker {
+    fn new(steps: usize) -> StepTracker {
+        StepTracker {
+            losses: Vec::with_capacity(steps),
+            kd_losses: Vec::with_capacity(steps),
+            meter: ThroughputMeter::new(),
+            diverged: false,
+        }
+    }
+
+    /// Absorb one step's outputs; `Ok(true)` means stop (divergence).
+    fn step(
+        &mut self,
+        student: &mut ModelState,
+        mut outs: Vec<HostTensor>,
+        tokens: u64,
+    ) -> Result<bool> {
+        student.absorb(&mut outs)?;
+        let loss = outs[0].scalar()?;
+        self.losses.push(loss);
+        self.kd_losses.push(outs.get(1).and_then(|t| t.scalar().ok()).unwrap_or(loss));
+        self.meter.record(tokens);
+        if !loss.is_finite() || loss > 50.0 {
+            self.diverged = true;
+            return Ok(true);
+        }
+        Ok(false)
+    }
+
+    fn finish(self) -> TrainResult {
+        TrainResult {
+            losses: self.losses,
+            kd_losses: self.kd_losses,
+            tokens_per_sec: self.meter.tokens_per_sec(),
+            steps: self.meter.steps() as usize,
+            diverged: self.diverged,
+            ..TrainResult::default()
+        }
+    }
+}
+
+/// One step's fully assembled graph inputs, built (and paid for) off the
+/// critical path when prefetching.
+struct StepTensors {
+    toks: HostTensor,
+    labels: HostTensor,
+    idx: HostTensor,
+    val: HostTensor,
+    smooth: HostTensor,
+    lr_scale: HostTensor,
+    ghost_on: f32,
+}
+
+fn step_tensors(batch: Batch, blk: &SparseBlock, b: usize, s: usize, k: usize) -> StepTensors {
+    StepTensors {
+        toks: HostTensor::i32(batch.tokens, &[b, s]),
+        labels: HostTensor::i32(batch.labels, &[b, s]),
+        idx: HostTensor::i32(blk.idx.clone(), &[b, s, k]),
+        val: HostTensor::f32(blk.val.clone(), &[b, s, k]),
+        smooth: HostTensor::f32(blk.smooth.clone(), &[b, s]),
+        lr_scale: HostTensor::f32(blk.lr_scale.clone(), &[b, s]),
+        ghost_on: blk.ghost_on,
+    }
+}
+
+fn call_sparse(
+    engine: &Engine,
+    graph: &str,
+    student: &ModelState,
+    lr: f32,
+    alpha: f32,
+    t: StepTensors,
+) -> Result<Vec<HostTensor>> {
+    let [p, mm, vv, st] = student.opt_inputs();
+    engine.call(
+        graph,
+        &[
+            p,
+            mm,
+            vv,
+            st,
+            HostTensor::scalar_f32(lr),
+            t.toks,
+            t.labels,
+            t.idx,
+            t.val,
+            HostTensor::scalar_f32(alpha),
+            t.smooth,
+            HostTensor::scalar_f32(t.ghost_on),
+            t.lr_scale,
+        ],
+    )
+}
+
+/// Train `student` for `steps` under `spec` with the default [`TrainOpts`]
+/// (prefetch on, serial zero-alloc assembly). `cache` is required for
+/// Sparse objectives (any [`TargetSource`]: local reader or served cache);
 /// `teacher` for Dense. (The `Pipeline` checks cache/spec compatibility
 /// before calling this — see `DistillSpec::check_cache`.)
 #[allow(clippy::too_many_arguments)]
@@ -108,21 +461,68 @@ pub fn train_student(
     cache: Option<&dyn TargetSource>,
     teacher: Option<&ModelState>,
 ) -> Result<TrainResult> {
-    let m = engine.manifest();
-    let (b, s, v, k) = (m.batch, m.seq, m.vocab, m.k_slots);
-    let role = student.role.clone();
-    let mut losses = Vec::with_capacity(steps);
-    let mut kd_losses = Vec::with_capacity(steps);
-    let mut meter = ThroughputMeter::new();
-    let mut diverged = false;
+    train_student_with(
+        engine,
+        student,
+        loader,
+        steps,
+        schedule,
+        spec,
+        cache,
+        teacher,
+        TrainOpts::default(),
+    )
+}
 
+/// [`train_student`] with explicit [`TrainOpts`]. The prefetched and
+/// synchronous loops produce identical losses for a fixed seed — assembly
+/// and engine inputs are the same; only the overlap differs.
+#[allow(clippy::too_many_arguments)]
+pub fn train_student_with(
+    engine: &Engine,
+    student: &mut ModelState,
+    loader: &mut Loader,
+    steps: usize,
+    schedule: LrSchedule,
+    spec: &DistillSpec,
+    cache: Option<&dyn TargetSource>,
+    teacher: Option<&ModelState>,
+    opts: TrainOpts,
+) -> Result<TrainResult> {
+    match spec.objective {
+        Objective::Sparse { variant, alpha, adaptive } => {
+            let Some(cache) = cache else {
+                return Err(SpecError::MissingCache { spec: spec.to_string() }.into());
+            };
+            train_sparse(
+                engine, student, loader, steps, schedule, variant, alpha, adaptive, cache, opts,
+            )
+        }
+        _ => train_simple(engine, student, loader, steps, schedule, spec, teacher),
+    }
+}
+
+/// CE and dense (online-teacher) objectives: no cache, no assembly stage.
+fn train_simple(
+    engine: &Engine,
+    student: &mut ModelState,
+    loader: &mut Loader,
+    steps: usize,
+    schedule: LrSchedule,
+    spec: &DistillSpec,
+    teacher: Option<&ModelState>,
+) -> Result<TrainResult> {
+    let m = engine.manifest();
+    let (b, s) = (m.batch, m.seq);
+    let role = student.role.clone();
+    let mut tracker = StepTracker::new(steps);
     for step in 0..steps {
         let batch = loader.next_batch();
         let lr = HostTensor::scalar_f32(schedule.at(step));
         let toks = HostTensor::i32(batch.tokens.clone(), &[b, s]);
         let labels = HostTensor::i32(batch.labels.clone(), &[b, s]);
         let [p, mm, vv, st] = student.opt_inputs();
-        let mut outs = match spec.objective {
+        let outs = match spec.objective {
             Objective::Ce => {
                 engine.call(&format!("train_ce_{role}"), &[p, mm, vv, st, lr, toks, labels])?
             }
@@ -140,46 +540,124 @@ pub fn train_student(
                     &[p, mm, vv, st, lr, toks, labels, probs, HostTensor::scalar_f32(alpha)],
                 )?
             }
-            Objective::Sparse { variant, alpha, adaptive } => {
-                let Some(cache) = cache else {
-                    return Err(SpecError::MissingCache { spec: spec.to_string() }.into());
-                };
-                let blk = assemble_sparse_block(cache, &batch, v, k, variant, adaptive);
-                engine.call(
-                    &sparse_graph_for(engine, &role),
-                    &[
-                        p,
-                        mm,
-                        vv,
-                        st,
-                        lr,
-                        toks,
-                        labels,
-                        HostTensor::i32(blk.idx, &[b, s, k]),
-                        HostTensor::f32(blk.val, &[b, s, k]),
-                        HostTensor::scalar_f32(alpha),
-                        HostTensor::f32(blk.smooth, &[b, s]),
-                        HostTensor::scalar_f32(blk.ghost_on),
-                        HostTensor::f32(blk.lr_scale, &[b, s]),
-                    ],
-                )?
-            }
+            Objective::Sparse { .. } => unreachable!("sparse handled by train_sparse"),
         };
-        student.absorb(&mut outs)?;
-        let loss = outs[0].scalar()?;
-        losses.push(loss);
-        kd_losses.push(outs.get(1).and_then(|t| t.scalar().ok()).unwrap_or(loss));
-        meter.record((b * s) as u64);
-        if !loss.is_finite() || loss > 50.0 {
-            diverged = true;
+        if tracker.step(student, outs, (b * s) as u64)? {
             break;
         }
     }
-    Ok(TrainResult {
-        losses,
-        kd_losses,
-        tokens_per_sec: meter.tokens_per_sec(),
-        steps: meter.steps() as usize,
-        diverged,
-    })
+    Ok(tracker.finish())
+}
+
+/// The cached sparse objective: zero-alloc assembly, optionally pipelined
+/// one step ahead of the engine.
+#[allow(clippy::too_many_arguments)]
+fn train_sparse(
+    engine: &Engine,
+    student: &mut ModelState,
+    loader: &mut Loader,
+    steps: usize,
+    schedule: LrSchedule,
+    variant: Variant,
+    alpha: f32,
+    adaptive: Option<AdaptiveLr>,
+    cache: &dyn TargetSource,
+    opts: TrainOpts,
+) -> Result<TrainResult> {
+    let m = engine.manifest();
+    let (b, s, v, k) = (m.batch, m.seq, m.vocab, m.k_slots);
+    let role = student.role.clone();
+    let graph = sparse_graph_for(engine, &role);
+    let mut tracker = StepTracker::new(steps);
+    let assemble_ns = AtomicU64::new(0);
+    let (mut hits, mut misses) = (0u64, 0u64);
+    let mut wait = Duration::ZERO;
+
+    if !opts.prefetch || steps == 0 {
+        // synchronous reference loop: same assembly, no overlap
+        let mut scratch = AssembleScratch::with_workers(opts.assemble_workers);
+        let mut blk = SparseBlock::default();
+        for step in 0..steps {
+            let batch = loader.next_batch();
+            let t0 = Instant::now();
+            assemble_sparse_block_into(
+                cache, &batch, v, k, variant, adaptive, &mut scratch, &mut blk,
+            )?;
+            let tensors = step_tensors(batch, &blk, b, s, k);
+            assemble_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+            let outs = call_sparse(engine, &graph, student, schedule.at(step), alpha, tensors)?;
+            if tracker.step(student, outs, (b * s) as u64)? {
+                break;
+            }
+        }
+    } else {
+        // double-buffered pipeline: keep at most 2 batches in flight so the
+        // assembler builds step N+1 while the engine executes step N
+        std::thread::scope(|scope| -> Result<()> {
+            let (job_tx, job_rx) = mpsc::channel::<(usize, Batch)>();
+            let (done_tx, done_rx) = mpsc::channel::<(usize, std::io::Result<StepTensors>)>();
+            let assemble_ns = &assemble_ns;
+            scope.spawn(move || {
+                let mut scratch = AssembleScratch::with_workers(opts.assemble_workers);
+                let mut blk = SparseBlock::default();
+                while let Ok((step, batch)) = job_rx.recv() {
+                    let t0 = Instant::now();
+                    let res = match assemble_sparse_block_into(
+                        cache, &batch, v, k, variant, adaptive, &mut scratch, &mut blk,
+                    ) {
+                        Ok(()) => Ok(step_tensors(batch, &blk, b, s, k)),
+                        Err(e) => Err(e),
+                    };
+                    assemble_ns.fetch_add(t0.elapsed().as_nanos() as u64, Ordering::Relaxed);
+                    let failed = res.is_err();
+                    if done_tx.send((step, res)).is_err() || failed {
+                        break;
+                    }
+                }
+            });
+            let mut next_job = 0usize;
+            while next_job < steps.min(2) {
+                let _ = job_tx.send((next_job, loader.next_batch()));
+                next_job += 1;
+            }
+            for step in 0..steps {
+                let t_wait = Instant::now();
+                let (got, res) = match done_rx.try_recv() {
+                    Ok(x) => {
+                        hits += 1;
+                        x
+                    }
+                    Err(mpsc::TryRecvError::Empty) => {
+                        misses += 1;
+                        done_rx
+                            .recv()
+                            .map_err(|_| anyhow!("assembly thread exited unexpectedly"))?
+                    }
+                    Err(mpsc::TryRecvError::Disconnected) => {
+                        return Err(anyhow!("assembly thread exited unexpectedly"));
+                    }
+                };
+                wait += t_wait.elapsed();
+                debug_assert_eq!(got, step);
+                let tensors = res?;
+                let outs =
+                    call_sparse(engine, &graph, student, schedule.at(step), alpha, tensors)?;
+                if tracker.step(student, outs, (b * s) as u64)? {
+                    break;
+                }
+                if next_job < steps {
+                    let _ = job_tx.send((next_job, loader.next_batch()));
+                    next_job += 1;
+                }
+            }
+            drop(job_tx); // unblock + retire the assembler before scope join
+            Ok(())
+        })?;
+    }
+    let mut result = tracker.finish();
+    result.assemble_time = Duration::from_nanos(assemble_ns.load(Ordering::Relaxed));
+    result.prefetch_hits = hits;
+    result.prefetch_misses = misses;
+    result.prefetch_wait = wait;
+    Ok(result)
 }

@@ -24,6 +24,16 @@ use crate::util::rng::{Cdf, Pcg};
 /// `partial_cmp(..).unwrap()`) or displacing real tokens (naive
 /// `total_cmp`, which ranks NaN above +inf).
 pub fn topk_indices(probs: &[f32], k: usize) -> Vec<u32> {
+    let mut idx = Vec::new();
+    topk_indices_into(probs, k, &mut idx);
+    idx
+}
+
+/// [`topk_indices`] into a caller-owned index buffer: the per-token `(0..V)`
+/// vector is reused across positions, so steady-state head selection never
+/// allocates (the cache-build / synthetic-sweep hot loops call this once per
+/// token).
+pub fn topk_indices_into(probs: &[f32], k: usize, idx: &mut Vec<u32>) {
     let key = |i: u32| {
         let p = probs[i as usize];
         if p.is_nan() {
@@ -32,12 +42,12 @@ pub fn topk_indices(probs: &[f32], k: usize) -> Vec<u32> {
             p
         }
     };
-    let mut idx: Vec<u32> = (0..probs.len() as u32).collect();
+    idx.clear();
+    idx.extend(0..probs.len() as u32);
     let k = k.min(probs.len());
     idx.select_nth_unstable_by(k.saturating_sub(1), |&a, &b| key(b).total_cmp(&key(a)));
     idx.truncate(k);
     idx.sort_by(|&a, &b| key(b).total_cmp(&key(a)));
-    idx
 }
 
 /// The raw Top-K head (paper §2): the K largest probabilities, sorted
@@ -48,30 +58,95 @@ pub fn topk(probs: &[f32], k: usize) -> SparseTarget {
     SparseTarget { ids, probs: vals }
 }
 
+/// [`topk`] into caller-owned buffers (`scratch_idx` holds the reusable
+/// `(0..V)` index workspace).
+pub fn topk_into(probs: &[f32], k: usize, scratch_idx: &mut Vec<u32>, out: &mut SparseTarget) {
+    topk_indices_into(probs, k, scratch_idx);
+    out.ids.clear();
+    out.ids.extend_from_slice(scratch_idx);
+    out.probs.clear();
+    out.probs.extend(scratch_idx.iter().map(|&i| probs[i as usize]));
+}
+
+/// Reusable workspace for [`random_sampling_into`]: the tempered proposal
+/// `q`, its CDF, and the per-draw `(id, ratio)` log. All buffers are reused
+/// across positions — after the first row of a sweep, sampling a token
+/// performs zero heap allocations (this is the cache-*build* hot path).
+///
+/// Accumulation is a sorted merge over the draw log instead of the old
+/// per-token `HashMap<u32, f64>`: draws sort by id (equal ids carry
+/// bit-identical ratios, so the unstable sort cannot perturb anything) and
+/// adjacent runs fold left in draw count — the exact fold the hash map
+/// performed, hence bit-identical outputs for identical [`Pcg`] seeds.
+pub struct RsScratch {
+    q: Vec<f64>,
+    cdf: Cdf,
+    draws: Vec<(u32, f64)>,
+}
+
+impl RsScratch {
+    pub fn new() -> RsScratch {
+        RsScratch { q: Vec::new(), cdf: Cdf::empty(), draws: Vec::new() }
+    }
+}
+
+impl Default for RsScratch {
+    fn default() -> RsScratch {
+        RsScratch::new()
+    }
+}
+
 /// Random Sampling KD (paper §3.4): draw `rounds` tokens from q ∝ p^temp,
 /// weight by p/q, normalize. Duplicate draws merge; ids come out sorted
 /// ascending — the same shape an RS cache decodes to. Matches the L1 kernel.
 pub fn random_sampling(probs: &[f32], rounds: usize, temp: f32, rng: &mut Pcg) -> SparseTarget {
+    let mut scratch = RsScratch::new();
+    let mut out = SparseTarget::default();
+    random_sampling_into(probs, rounds, temp, rng, &mut scratch, &mut out);
+    out
+}
+
+/// [`random_sampling`] into caller-owned buffers: identical draws and
+/// bit-identical weights for identical `rng` states (asserted by tests),
+/// zero steady-state allocations once `scratch`/`out` have grown.
+pub fn random_sampling_into(
+    probs: &[f32],
+    rounds: usize,
+    temp: f32,
+    rng: &mut Pcg,
+    scratch: &mut RsScratch,
+    out: &mut SparseTarget,
+) {
     let v = probs.len();
-    let q: Vec<f64> = probs.iter().map(|&p| (p.max(1e-20) as f64).powf(temp as f64)).collect();
-    let qz: f64 = q.iter().sum();
-    let cdf = Cdf::new(&q);
-    // accumulate importance ratios per sampled id
-    let mut ratio_by_id: std::collections::HashMap<u32, f64> = std::collections::HashMap::new();
+    scratch.q.clear();
+    scratch.q.extend(probs.iter().map(|&p| (p.max(1e-20) as f64).powf(temp as f64)));
+    let qz: f64 = scratch.q.iter().sum();
+    scratch.cdf.reset(&scratch.q);
+    scratch.draws.clear();
     let mut total_ratio = 0.0f64;
     for _ in 0..rounds {
-        let id = cdf.sample(rng).min(v - 1);
+        let id = scratch.cdf.sample(rng).min(v - 1);
         let p = probs[id] as f64;
-        let qq = q[id] / qz;
+        let qq = scratch.q[id] / qz;
         let r = p / qq.max(1e-20);
-        *ratio_by_id.entry(id as u32).or_default() += r;
+        scratch.draws.push((id as u32, r));
         total_ratio += r;
     }
-    let mut ids: Vec<u32> = ratio_by_id.keys().copied().collect();
-    ids.sort();
-    let vals: Vec<f32> =
-        ids.iter().map(|i| (ratio_by_id[i] / total_ratio.max(1e-20)) as f32).collect();
-    SparseTarget { ids, probs: vals }
+    scratch.draws.sort_unstable_by_key(|&(id, _)| id);
+    out.ids.clear();
+    out.probs.clear();
+    let total = total_ratio.max(1e-20);
+    let mut j = 0;
+    while j < scratch.draws.len() {
+        let id = scratch.draws[j].0;
+        let mut acc = 0.0f64;
+        while j < scratch.draws.len() && scratch.draws[j].0 == id {
+            acc += scratch.draws[j].1;
+            j += 1;
+        }
+        out.ids.push(id);
+        out.probs.push((acc / total) as f32);
+    }
 }
 
 #[cfg(test)]
@@ -139,6 +214,83 @@ mod tests {
         assert!(tt.target.mass() >= 0.5);
         let t_minus = tt.target.mass() - tt.target.probs.last().unwrap();
         assert!(t_minus < 0.5);
+    }
+
+    /// Pre-scratch reference implementation (per-token `HashMap` + fresh
+    /// `q`/`Cdf` buffers), kept as the oracle for the sorted-merge rewrite.
+    fn random_sampling_hashmap(
+        probs: &[f32],
+        rounds: usize,
+        temp: f32,
+        rng: &mut Pcg,
+    ) -> SparseTarget {
+        let v = probs.len();
+        let q: Vec<f64> =
+            probs.iter().map(|&p| (p.max(1e-20) as f64).powf(temp as f64)).collect();
+        let qz: f64 = q.iter().sum();
+        let cdf = Cdf::new(&q);
+        let mut ratio_by_id: std::collections::HashMap<u32, f64> =
+            std::collections::HashMap::new();
+        let mut total_ratio = 0.0f64;
+        for _ in 0..rounds {
+            let id = cdf.sample(rng).min(v - 1);
+            let p = probs[id] as f64;
+            let qq = q[id] / qz;
+            let r = p / qq.max(1e-20);
+            *ratio_by_id.entry(id as u32).or_default() += r;
+            total_ratio += r;
+        }
+        let mut ids: Vec<u32> = ratio_by_id.keys().copied().collect();
+        ids.sort();
+        let vals: Vec<f32> =
+            ids.iter().map(|i| (ratio_by_id[i] / total_ratio.max(1e-20)) as f32).collect();
+        SparseTarget { ids, probs: vals }
+    }
+
+    #[test]
+    fn rs_scratch_identical_draws_to_hashmap_oracle() {
+        let p = zipf_probs(200);
+        for seed in 0..5u64 {
+            for temp in [1.0f32, 0.7] {
+                // identical Pcg seeds -> identical id sets and bit-identical
+                // weights, with the scratch reused across positions
+                let mut rng_a = Pcg::new(seed);
+                let mut rng_b = Pcg::new(seed);
+                let mut scratch = RsScratch::new();
+                let mut out = SparseTarget::default();
+                for _pos in 0..8 {
+                    let want = random_sampling_hashmap(&p, 50, temp, &mut rng_a);
+                    random_sampling_into(&p, 50, temp, &mut rng_b, &mut scratch, &mut out);
+                    assert_eq!(out.ids, want.ids, "seed {seed} temp {temp}");
+                    assert_eq!(
+                        out.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        want.probs.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                        "seed {seed} temp {temp}"
+                    );
+                }
+                // the public wrapper is the same draw
+                let mut rng_c = Pcg::new(seed);
+                let w = random_sampling(&p, 50, temp, &mut rng_c);
+                let mut rng_d = Pcg::new(seed);
+                assert_eq!(w, random_sampling_hashmap(&p, 50, temp, &mut rng_d));
+            }
+        }
+    }
+
+    #[test]
+    fn topk_indices_into_matches_and_reuses_buffer() {
+        let p = zipf_probs(64);
+        let mut idx = Vec::new();
+        topk_indices_into(&p, 8, &mut idx);
+        assert_eq!(idx, topk_indices(&p, 8));
+        let cap = idx.capacity();
+        topk_indices_into(&p, 4, &mut idx);
+        assert_eq!(idx, topk_indices(&p, 4));
+        assert_eq!(idx.capacity(), cap, "scratch buffer must be reused");
+        // topk_into agrees with topk
+        let mut out = SparseTarget::default();
+        topk_into(&p, 8, &mut idx, &mut out);
+        assert_eq!(out, topk(&p, 8));
     }
 
     #[test]

@@ -2,15 +2,19 @@
 //! on Zipf-like teacher rows, the expected number of *unique* sampled tokens
 //! grows as an approximate power law in the number of sampling rounds.
 
-use crate::sampling::random_sampling;
+use crate::cache::SparseTarget;
+use crate::sampling::{random_sampling_into, RsScratch};
 use crate::util::rng::Pcg;
 
 /// Average unique tokens over `trials` RS draws with `rounds` rounds.
 pub fn avg_unique_tokens(probs: &[f32], rounds: usize, temp: f32, trials: usize, seed: u64) -> f64 {
     let mut rng = Pcg::new(seed);
+    let mut scratch = RsScratch::new();
+    let mut draw = SparseTarget::default();
     let mut total = 0usize;
     for _ in 0..trials {
-        total += random_sampling(probs, rounds, temp, &mut rng).k();
+        random_sampling_into(probs, rounds, temp, &mut rng, &mut scratch, &mut draw);
+        total += draw.k();
     }
     total as f64 / trials as f64
 }

@@ -15,7 +15,7 @@ use std::io;
 use std::sync::Mutex;
 use std::time::Duration;
 
-use crate::cache::{SparseTarget, TargetSource};
+use crate::cache::{RangeBlock, SparseTarget, TargetSource};
 use crate::serve::protocol::{
     read_frame, write_frame, ErrCode, RemoteManifest, Request, Response,
 };
@@ -44,12 +44,18 @@ impl ServeClient {
     /// One request/response exchange, reconnecting + resending once if the
     /// transport fails mid-call.
     fn call(&mut self, req: &Request) -> io::Result<Response> {
+        Response::decode(&self.call_raw(req)?)
+    }
+
+    /// Like [`ServeClient::call`] but returns the raw response frame, so hot
+    /// paths can decode straight into caller-owned buffers.
+    fn call_raw(&mut self, req: &Request) -> io::Result<Vec<u8>> {
         let payload = req.encode();
         for attempt in 0..2 {
             let res = write_frame(&mut self.stream, &payload)
                 .and_then(|()| read_frame(&mut self.stream));
             match res {
-                Ok(Some(frame)) => return Response::decode(&frame),
+                Ok(Some(frame)) => return Ok(frame),
                 Ok(None) => {
                     // server hung up between frames
                     if attempt == 1 {
@@ -80,22 +86,39 @@ impl ServeClient {
         io::Error::new(kind, format!("server error ({code:?}): {msg}"))
     }
 
-    /// Targets for `[start, start + len)`, retrying shed (`Overloaded`)
-    /// requests with linear backoff.
+    /// Targets for `[start, start + len)` as per-position vectors: thin
+    /// compatibility wrapper over [`ServeClient::read_range_into`].
     pub fn get_range(&mut self, start: u64, len: usize) -> io::Result<Vec<SparseTarget>> {
+        let mut block = RangeBlock::new();
+        self.read_range_into(start, len, &mut block)?;
+        Ok(block.to_targets())
+    }
+
+    /// Targets for `[start, start + len)` decoded straight off the wire into
+    /// a caller-owned CSR block (bit-identical to a local decode), retrying
+    /// shed (`Overloaded`) requests with linear backoff. The transport still
+    /// allocates one frame buffer per response; what this removes is the
+    /// per-position `SparseTarget` vectors.
+    pub fn read_range_into(
+        &mut self,
+        start: u64,
+        len: usize,
+        out: &mut RangeBlock,
+    ) -> io::Result<()> {
         let req = Request::GetRange { start, len: len as u32 };
         let mut attempt = 0u32;
         loop {
-            match self.call(&req)? {
-                Response::Targets(t) => return Ok(t),
-                Response::Error { code: ErrCode::Overloaded, msg: _ }
+            let frame = self.call_raw(&req)?;
+            match Response::decode_targets_into(&frame, out)? {
+                None => return Ok(()),
+                Some(Response::Error { code: ErrCode::Overloaded, msg: _ })
                     if attempt < self.overload_retries =>
                 {
                     attempt += 1;
                     std::thread::sleep(self.backoff * attempt);
                 }
-                Response::Error { code, msg } => return Err(Self::err_of(code, msg)),
-                other => {
+                Some(Response::Error { code, msg }) => return Err(Self::err_of(code, msg)),
+                Some(other) => {
                     return Err(io::Error::new(
                         io::ErrorKind::InvalidData,
                         format!("unexpected response to GetRange: {other:?}"),
@@ -165,6 +188,10 @@ impl ServedReader {
 }
 
 impl TargetSource for ServedReader {
+    fn read_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> io::Result<()> {
+        self.client.lock().unwrap().read_range_into(start, len, out)
+    }
+
     fn try_get_range(&self, start: u64, len: usize) -> io::Result<Vec<SparseTarget>> {
         self.client.lock().unwrap().get_range(start, len)
     }

@@ -338,6 +338,56 @@ impl Response {
         }
     }
 
+    /// Encode an `OP_TARGETS` payload straight from a CSR block — the
+    /// server-side symmetric of [`Response::decode_targets_into`]: byte-
+    /// identical to `Response::Targets(block.to_targets()).encode()` without
+    /// materializing the per-position vectors. Server workers call this with
+    /// a reused block, so a served range costs one decode and one encode,
+    /// no intermediate `Vec<SparseTarget>`.
+    pub fn encode_targets(block: &crate::cache::RangeBlock) -> Vec<u8> {
+        let mut p = preamble(OP_TARGETS);
+        p.extend_from_slice(&(block.len() as u32).to_le_bytes());
+        for i in 0..block.len() {
+            let (ids, probs) = block.get(i);
+            debug_assert!(ids.len() < u16::MAX as usize);
+            p.extend_from_slice(&(ids.len() as u16).to_le_bytes());
+            for (&id, &prob) in ids.iter().zip(probs.iter()) {
+                p.extend_from_slice(&id.to_le_bytes());
+                p.extend_from_slice(&prob.to_bits().to_le_bytes());
+            }
+        }
+        p
+    }
+
+    /// Decode an `OP_TARGETS` frame straight into a caller-owned CSR block
+    /// (probabilities from raw bits — bit-identical to [`Response::decode`]),
+    /// returning `Ok(None)`. Any other frame decodes normally and comes back
+    /// as `Ok(Some(response))` so callers can handle typed error frames.
+    /// This is the zero-allocation receive path of
+    /// `serve::ServedReader::read_range_into`.
+    pub fn decode_targets_into(
+        payload: &[u8],
+        out: &mut crate::cache::RangeBlock,
+    ) -> io::Result<Option<Response>> {
+        let (op, mut c) = open_payload(payload)?;
+        if op != OP_TARGETS {
+            return Response::decode(payload).map(Some);
+        }
+        out.clear();
+        let count = c.u32()? as usize;
+        for _ in 0..count {
+            let k = c.u16()? as usize;
+            for _ in 0..k {
+                let id = c.u32()?;
+                let prob = f32::from_bits(c.u32()?);
+                out.push_slot(id, prob);
+            }
+            out.end_position();
+        }
+        c.done()?;
+        Ok(None)
+    }
+
     pub fn decode(payload: &[u8]) -> io::Result<Response> {
         let (op, mut c) = open_payload(payload)?;
         let resp = match op {
@@ -460,6 +510,49 @@ mod tests {
         assert_eq!(back, targets);
         // bit-exactness, not approximate equality
         assert_eq!(back[2].probs[0].to_bits(), f32::MIN_POSITIVE.to_bits());
+    }
+
+    #[test]
+    fn encode_targets_matches_response_encode() {
+        use crate::cache::RangeBlock;
+        let targets = vec![
+            SparseTarget { ids: vec![3, 131_000], probs: vec![0.25, f32::MIN_POSITIVE] },
+            SparseTarget::default(),
+            SparseTarget { ids: vec![9], probs: vec![1e-7] },
+        ];
+        let mut block = RangeBlock::new();
+        for t in &targets {
+            block.push_target(t);
+        }
+        assert_eq!(
+            Response::encode_targets(&block),
+            Response::Targets(targets).encode(),
+            "block encode must be byte-identical to the Vec<SparseTarget> encode"
+        );
+    }
+
+    #[test]
+    fn decode_targets_into_is_bit_exact_and_passes_other_frames() {
+        use crate::cache::RangeBlock;
+        let targets = vec![
+            SparseTarget { ids: vec![1, 99_999], probs: vec![0.4, f32::MIN_POSITIVE] },
+            SparseTarget::default(),
+            SparseTarget { ids: vec![7], probs: vec![1e-7] },
+        ];
+        let payload = Response::Targets(targets.clone()).encode();
+        let mut block = RangeBlock::new();
+        assert!(Response::decode_targets_into(&payload, &mut block).unwrap().is_none());
+        assert_eq!(block.to_targets(), targets);
+        let (_, probs0) = block.get(0);
+        assert_eq!(probs0[1].to_bits(), f32::MIN_POSITIVE.to_bits());
+        // non-Targets frames decode normally and are handed back
+        let err = Response::Error { code: ErrCode::Overloaded, msg: "full".into() }.encode();
+        let back = Response::decode_targets_into(&err, &mut block).unwrap();
+        assert_eq!(back, Some(Response::Error { code: ErrCode::Overloaded, msg: "full".into() }));
+        // trailing garbage in a Targets frame is rejected
+        let mut bad = Response::Targets(targets).encode();
+        bad.push(0);
+        assert!(Response::decode_targets_into(&bad, &mut block).is_err());
     }
 
     #[test]

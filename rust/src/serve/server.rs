@@ -9,7 +9,8 @@
 //! conn thread:  read frame -> decode -> route by owning shard of `start`
 //!                 -> try_push onto worker queue (bounded)  --full--> Error{Overloaded}
 //!                 -> wait for the worker's reply -> write response frame
-//! worker i:     pop job -> reader.try_get_range -> send result back
+//! worker i:     pop job -> reader.read_range_into (reused RangeBlock)
+//!                 -> encode_targets straight from the block -> send payload
 //! ```
 //!
 //! * **Shard affinity.** A range request is routed to worker
@@ -38,7 +39,7 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::cache::{CacheReader, RingBuffer, SparseTarget};
+use crate::cache::{CacheReader, RangeBlock, RingBuffer};
 use crate::serve::protocol::{
     read_frame, write_frame, ErrCode, RemoteManifest, Request, Response, MAX_FRAME,
     PROTOCOL_VERSION,
@@ -74,11 +75,14 @@ impl Default for ServeConfig {
     }
 }
 
-/// One queued range read; the connection thread blocks on `done`.
+/// One queued range read; the connection thread blocks on `done`. The
+/// worker answers a fully encoded `Targets` payload (it decodes into a
+/// reused per-worker `RangeBlock` and encodes straight from it), so serving
+/// a range never materializes per-position `Vec<SparseTarget>`s.
 struct Job {
     start: u64,
     len: usize,
-    done: mpsc::SyncSender<Result<Vec<SparseTarget>, String>>,
+    done: mpsc::SyncSender<Result<Vec<u8>, String>>,
 }
 
 struct Shared {
@@ -236,11 +240,18 @@ fn accept_loop(listener: Listener, shared: &Arc<Shared>) {
 
 fn worker_loop(shared: &Arc<Shared>, idx: usize) {
     let queue = Arc::clone(&shared.queues[idx]);
+    // reused across jobs: steady-state range decodes allocate only the
+    // encoded payload (read_range_into clears the block, and a panicked
+    // decode leaves it in a state the next clear fixes)
+    let mut block = RangeBlock::new();
     while let Some(job) = queue.pop() {
         // a panic must not kill the worker: its queue would keep accepting
         // jobs nobody pops, wedging every connection routed to it
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            shared.reader.try_get_range(job.start, job.len)
+            shared
+                .reader
+                .read_range_into(job.start, job.len, &mut block)
+                .map(|()| Response::encode_targets(&block))
         }))
         .unwrap_or_else(|_| {
             Err(std::io::Error::new(
@@ -290,10 +301,10 @@ fn conn_loop(mut stream: Stream, shared: &Arc<Shared>) {
                     Some(v) if *v != PROTOCOL_VERSION => ErrCode::BadVersion,
                     _ => ErrCode::BadRequest,
                 };
-                Response::Error { code, msg: e.to_string() }
+                Response::Error { code, msg: e.to_string() }.encode()
             }
         };
-        let mut payload = resp.encode();
+        let mut payload = resp;
         if payload.len() > MAX_FRAME {
             // a legal-but-huge range (misconfigured max_range vs dense
             // targets) must answer a typed error frame, not die mid-write
@@ -314,9 +325,12 @@ fn conn_loop(mut stream: Stream, shared: &Arc<Shared>) {
     }
 }
 
-fn handle_request(req: Request, shared: &Arc<Shared>) -> Response {
+/// Answer one request with a fully encoded response payload (range reads
+/// come back pre-encoded from the worker pool, so the connection thread
+/// never re-materializes targets).
+fn handle_request(req: Request, shared: &Arc<Shared>) -> Vec<u8> {
     match req {
-        Request::Ping => Response::Pong,
+        Request::Ping => Response::Pong.encode(),
         Request::GetManifest => {
             let r = &shared.reader;
             Response::Manifest(RemoteManifest {
@@ -327,23 +341,26 @@ fn handle_request(req: Request, shared: &Arc<Shared>) -> Response {
                 shard_count: r.shard_count() as u32,
                 kind: r.kind.clone(),
             })
+            .encode()
         }
         Request::GetStats => Response::Stats(
             shared
                 .stats
                 .snapshot_with(shared.reader.shard_loads(), shared.reader.coalesced_loads()),
-        ),
+        )
+        .encode(),
         Request::GetRange { start, len } => serve_range(shared, start, len as usize),
     }
 }
 
-fn serve_range(shared: &Arc<Shared>, start: u64, len: usize) -> Response {
+fn serve_range(shared: &Arc<Shared>, start: u64, len: usize) -> Vec<u8> {
     if len > shared.cfg.max_range {
         shared.stats.errors.fetch_add(1, Ordering::Relaxed);
         return Response::Error {
             code: ErrCode::RangeTooLarge,
             msg: format!("len {len} exceeds max_range {}", shared.cfg.max_range),
-        };
+        }
+        .encode();
     }
     // wire-controlled start: a range running past u64::MAX is malformed
     let Some(end) = start.checked_add(len as u64) else {
@@ -351,7 +368,8 @@ fn serve_range(shared: &Arc<Shared>, start: u64, len: usize) -> Response {
         return Response::Error {
             code: ErrCode::BadRequest,
             msg: format!("range [{start}, +{len}) overflows the position space"),
-        };
+        }
+        .encode();
     };
     let t0 = Instant::now();
     let worker = route(&shared.reader, start, shared.queues.len());
@@ -362,10 +380,11 @@ fn serve_range(shared: &Arc<Shared>, start: u64, len: usize) -> Response {
         return Response::Error {
             code: ErrCode::Overloaded,
             msg: format!("worker {worker} queue full ({} slots)", shared.cfg.queue_cap),
-        };
+        }
+        .encode();
     }
     match rx.recv() {
-        Ok(Ok(targets)) => {
+        Ok(Ok(payload)) => {
             shared.stats.requests.fetch_add(1, Ordering::Relaxed);
             shared.stats.hist.record(t0.elapsed());
             // hot-shard accounting: every shard the range overlaps
@@ -377,16 +396,17 @@ fn serve_range(shared: &Arc<Shared>, start: u64, len: usize) -> Response {
                 }
                 shared.stats.touch_shard(i);
             }
-            Response::Targets(targets)
+            payload
         }
         Ok(Err(msg)) => {
             shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-            Response::Error { code: ErrCode::Internal, msg }
+            Response::Error { code: ErrCode::Internal, msg }.encode()
         }
         // the worker pool is shutting down and dropped the job
         Err(_) => Response::Error {
             code: ErrCode::Internal,
             msg: "server shutting down".into(),
-        },
+        }
+        .encode(),
     }
 }

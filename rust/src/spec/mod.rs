@@ -26,7 +26,8 @@ pub mod reconstitute;
 
 pub use grammar::SpecDefaults;
 pub use reconstitute::{
-    adaptive_lr_scale, build_target, effective_dense, reconstitute, TrainTarget,
+    adaptive_lr_scale, adaptive_lr_scale_into, build_target, effective_dense, reconstitute,
+    reconstitute_into, SlotView, TrainTarget,
 };
 
 use std::fmt;

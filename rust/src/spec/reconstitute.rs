@@ -101,6 +101,107 @@ pub fn reconstitute(
     TrainTarget { target: SparseTarget { ids, probs }, smooth_c, ghost_on, label_conf }
 }
 
+/// Borrowed view of one token's slot arrays inside a `SparseBlock`: `idx`
+/// and `val` are the `k_slots`-wide row the student graph consumes.
+/// [`reconstitute_into`] writes targets through this view, so the cached hot
+/// path never materializes an intermediate [`TrainTarget`].
+pub struct SlotView<'a> {
+    pub idx: &'a mut [i32],
+    pub val: &'a mut [f32],
+}
+
+/// Zero-allocation [`reconstitute`]: reconstitute one sparse head directly
+/// into a token's slot arrays, returning `(smooth_c, label_conf)`.
+///
+/// Byte-for-byte equivalent to running the allocating [`reconstitute`] and
+/// scattering `target.ids/probs` into pre-zeroed slots truncated at
+/// `k_slots` (the legacy `assemble_sparse_block` loop — kept as the oracle;
+/// a golden test pins the equivalence for every [`Variant`]). Slots past the
+/// head are zeroed here, so callers may hand in dirty (reused) buffers.
+pub fn reconstitute_into(
+    ids: &[u32],
+    probs: &[f32],
+    label: u32,
+    vocab: usize,
+    variant: Variant,
+    slots: SlotView<'_>,
+) -> (f32, f32) {
+    let SlotView { idx, val } = slots;
+    let k_slots = idx.len();
+    debug_assert_eq!(k_slots, val.len());
+    let label_conf =
+        ids.iter().position(|&i| i == label).map(|j| probs[j]).unwrap_or(0.0);
+    /// Copy the head prefix `[0, m)` into the slots (truncated at capacity),
+    /// returning the slot count actually written.
+    fn write_head(ids: &[u32], probs: &[f32], idx: &mut [i32], val: &mut [f32], m: usize) -> usize {
+        let n = m.min(idx.len());
+        for j in 0..n {
+            idx[j] = ids[j] as i32;
+            val[j] = probs[j];
+        }
+        n
+    }
+    let (n, smooth_c) = match variant {
+        Variant::Rs { .. } => (write_head(ids, probs, idx, val, ids.len()), 0.0),
+        Variant::TopK { k, normalize } => {
+            let m = k.min(ids.len());
+            let n = write_head(ids, probs, idx, val, m);
+            if normalize {
+                // the oracle normalizes over the full m-head, then truncates
+                let z: f32 = probs[..m].iter().sum();
+                if z > 0.0 {
+                    val[..n].iter_mut().for_each(|v| *v /= z);
+                }
+            }
+            (n, 0.0)
+        }
+        Variant::TopP { p, k } => {
+            let mut m = 0usize;
+            let mut mass = 0.0f32;
+            for &v in probs.iter().take(k.min(ids.len())) {
+                m += 1;
+                mass += v;
+                if mass >= p {
+                    break;
+                }
+            }
+            (write_head(ids, probs, idx, val, m), 0.0)
+        }
+        Variant::Smoothing { k } => {
+            let m = k.min(ids.len());
+            let residual = (1.0 - probs[..m].iter().sum::<f32>()).max(0.0);
+            (write_head(ids, probs, idx, val, m), residual / vocab as f32)
+        }
+        Variant::GhostToken { k } => {
+            (write_head(ids, probs, idx, val, k.min(ids.len())), 0.0)
+        }
+        Variant::NaiveFix { k } => {
+            let m = k.min(ids.len());
+            let residual = (1.0 - probs[..m].iter().sum::<f32>()).max(0.0);
+            let n = write_head(ids, probs, idx, val, m);
+            match ids[..m].iter().position(|&i| i == label) {
+                // the boost lands only if the label's slot survived truncation
+                Some(j) if j < n => {
+                    val[j] += residual;
+                    (n, 0.0)
+                }
+                Some(_) => (n, 0.0),
+                None if m < k_slots => {
+                    idx[m] = label as i32;
+                    val[m] = residual;
+                    (m + 1, 0.0)
+                }
+                None => (n, 0.0),
+            }
+        }
+    };
+    for j in n..k_slots {
+        idx[j] = 0;
+        val[j] = 0.0;
+    }
+    (smooth_c, label_conf)
+}
+
 /// Build the training target for `spec` from a *dense* teacher row: sparsify
 /// with the `sampling` primitives, then reconstitute. Returns `None` for CE
 /// (one-hot ground truth, no teacher target). `rng` drives the RS draw.
@@ -150,15 +251,32 @@ pub fn effective_dense(t: &TrainTarget, vocab: usize) -> Vec<f32> {
 /// (`total_cmp`) and compare as easy, so a corrupt teacher row degrades
 /// instead of panicking.
 pub fn adaptive_lr_scale(confs: &[f32], a: AdaptiveLr) -> Vec<f32> {
-    let mut sorted: Vec<f32> = confs.to_vec();
-    sorted.sort_by(f32::total_cmp);
-    let cut = sorted[((confs.len() as f32 * a.hard_frac) as usize).min(confs.len() - 1)];
+    let mut scratch = Vec::new();
+    let mut out = vec![0.0f32; confs.len()];
+    adaptive_lr_scale_into(confs, a, &mut scratch, &mut out);
+    out
+}
+
+/// Zero-allocation [`adaptive_lr_scale`]: only the cut point is needed, so
+/// the old full `sort_by` is a `select_nth_unstable_by` over a reusable
+/// scratch copy (same `total_cmp` order, hence the same cut element), and
+/// multipliers land in a caller-owned buffer of `confs.len()`.
+pub fn adaptive_lr_scale_into(
+    confs: &[f32],
+    a: AdaptiveLr,
+    scratch: &mut Vec<f32>,
+    out: &mut [f32],
+) {
+    assert_eq!(out.len(), confs.len());
+    scratch.clear();
+    scratch.extend_from_slice(confs);
+    let cut_i = ((confs.len() as f32 * a.hard_frac) as usize).min(confs.len() - 1);
+    let (_, &mut cut, _) = scratch.select_nth_unstable_by(cut_i, f32::total_cmp);
     let q = a.hard_frac;
     let norm = 1.0 / (q * a.ratio + (1.0 - q)).max(1e-6);
-    confs
-        .iter()
-        .map(|&c| if c <= cut { a.ratio * norm } else { norm })
-        .collect()
+    for (o, &c) in out.iter_mut().zip(confs.iter()) {
+        *o = if c <= cut { a.ratio * norm } else { norm };
+    }
 }
 
 #[cfg(test)]
@@ -239,6 +357,90 @@ mod tests {
             if c.is_finite() {
                 assert!(s.is_finite() && s > 0.0, "conf {c} -> scale {s}");
             }
+        }
+    }
+
+    /// The oracle-side scatter: what `assemble_sparse_block` does with an
+    /// allocating `reconstitute` result for one token.
+    fn legacy_slots(tt: &TrainTarget, k_slots: usize) -> (Vec<i32>, Vec<f32>) {
+        let mut idx = vec![0i32; k_slots];
+        let mut val = vec![0.0f32; k_slots];
+        let n = tt.target.ids.len().min(k_slots);
+        for j in 0..n {
+            idx[j] = tt.target.ids[j] as i32;
+            val[j] = tt.target.probs[j];
+        }
+        (idx, val)
+    }
+
+    #[test]
+    fn reconstitute_into_matches_oracle_for_every_variant() {
+        let heads = [
+            cached_topk(),
+            SparseTarget { ids: vec![1, 5, 9], probs: vec![0.2, 0.6, 0.2] }, // RS-shaped
+            SparseTarget::default(),                                        // missing position
+            SparseTarget { ids: vec![42], probs: vec![0.9] },
+        ];
+        let variants = [
+            Variant::Rs { rounds: 5, temp: 1.0 },
+            Variant::TopK { k: 2, normalize: true },
+            Variant::TopK { k: 8, normalize: false },
+            Variant::TopP { p: 0.55, k: 4 },
+            Variant::Smoothing { k: 3 },
+            Variant::GhostToken { k: 3 },
+            Variant::NaiveFix { k: 3 },
+            Variant::NaiveFix { k: 8 },
+        ];
+        for head in &heads {
+            for &variant in &variants {
+                for label in [0u32, 3, 42] {
+                    for k_slots in [1usize, 2, 4, 8] {
+                        let tt = reconstitute(head, label, 64, variant);
+                        let (want_idx, want_val) = legacy_slots(&tt, k_slots);
+                        // dirty buffers: the into-path must fully overwrite
+                        let mut idx = vec![-7i32; k_slots];
+                        let mut val = vec![9.9f32; k_slots];
+                        let (smooth, conf) = reconstitute_into(
+                            &head.ids,
+                            &head.probs,
+                            label,
+                            64,
+                            variant,
+                            SlotView { idx: &mut idx, val: &mut val },
+                        );
+                        let ctx = format!("{variant:?} label {label} k_slots {k_slots}");
+                        assert_eq!(idx, want_idx, "{ctx}");
+                        assert_eq!(
+                            val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                            want_val.iter().map(|v| v.to_bits()).collect::<Vec<_>>(),
+                            "{ctx}"
+                        );
+                        assert_eq!(smooth.to_bits(), tt.smooth_c.to_bits(), "{ctx}");
+                        assert_eq!(conf.to_bits(), tt.label_conf.to_bits(), "{ctx}");
+                    }
+                }
+            }
+        }
+    }
+
+    #[test]
+    fn adaptive_lr_scale_into_matches_full_sort_oracle() {
+        let mut rng = Pcg::new(17);
+        for n in [1usize, 2, 7, 100] {
+            let confs: Vec<f32> = (0..n).map(|_| rng.f32()).collect();
+            let a = AdaptiveLr { ratio: 2.0, hard_frac: 0.3 };
+            // the pre-select_nth oracle: full sort, index the cut
+            let mut sorted = confs.clone();
+            sorted.sort_by(f32::total_cmp);
+            let cut = sorted[((n as f32 * a.hard_frac) as usize).min(n - 1)];
+            let norm = 1.0 / (a.hard_frac * a.ratio + (1.0 - a.hard_frac)).max(1e-6);
+            let want: Vec<f32> =
+                confs.iter().map(|&c| if c <= cut { a.ratio * norm } else { norm }).collect();
+            assert_eq!(adaptive_lr_scale(&confs, a), want, "n {n}");
+            let mut scratch = Vec::new();
+            let mut out = vec![0.0f32; n];
+            adaptive_lr_scale_into(&confs, a, &mut scratch, &mut out);
+            assert_eq!(out, want, "n {n}");
         }
     }
 

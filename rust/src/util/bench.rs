@@ -8,6 +8,86 @@
 use std::fmt::Write as _;
 use std::time::{Duration, Instant};
 
+/// Counting-allocator harness for the zero-allocation hot-path claims.
+///
+/// [`alloc_count::CountingAllocator`] wraps the system allocator and counts
+/// allocation *events* (alloc / alloc_zeroed / realloc; frees are not
+/// events) per thread. Counts are thread-local, so a measurement is immune
+/// to concurrent allocations on other threads (test harnesses, prefetchers).
+///
+/// It only counts when installed as the global allocator, which must happen
+/// in the *binary* crate root:
+///
+/// ```ignore
+/// #[global_allocator]
+/// static ALLOC: rskd::util::bench::alloc_count::CountingAllocator =
+///     rskd::util::bench::alloc_count::CountingAllocator;
+/// ```
+///
+/// When not installed, every count reads 0 — measurements must first
+/// sanity-check that a known-allocating closure counts non-zero (see
+/// [`alloc_count::is_counting`]) before asserting zero on a hot loop.
+pub mod alloc_count {
+    use std::alloc::{GlobalAlloc, Layout, System};
+    use std::cell::Cell;
+
+    thread_local! {
+        static EVENTS: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// System-allocator wrapper counting per-thread allocation events.
+    pub struct CountingAllocator;
+
+    #[inline]
+    fn bump() {
+        // try_with: never panic inside the allocator, even during thread
+        // teardown edge cases
+        let _ = EVENTS.try_with(|c| c.set(c.get() + 1));
+    }
+
+    unsafe impl GlobalAlloc for CountingAllocator {
+        unsafe fn alloc(&self, layout: Layout) -> *mut u8 {
+            bump();
+            System.alloc(layout)
+        }
+
+        unsafe fn alloc_zeroed(&self, layout: Layout) -> *mut u8 {
+            bump();
+            System.alloc_zeroed(layout)
+        }
+
+        unsafe fn realloc(&self, ptr: *mut u8, layout: Layout, new_size: usize) -> *mut u8 {
+            bump();
+            System.realloc(ptr, layout, new_size)
+        }
+
+        unsafe fn dealloc(&self, ptr: *mut u8, layout: Layout) {
+            System.dealloc(ptr, layout)
+        }
+    }
+
+    /// Allocation events observed on this thread so far (0 unless the
+    /// counting allocator is installed).
+    pub fn thread_allocations() -> u64 {
+        EVENTS.try_with(|c| c.get()).unwrap_or(0)
+    }
+
+    /// Allocation events on this thread while `f` runs, plus its result.
+    pub fn measure<R>(f: impl FnOnce() -> R) -> (u64, R) {
+        let before = thread_allocations();
+        let r = f();
+        (thread_allocations() - before, r)
+    }
+
+    /// Whether the counting allocator is actually installed (a Vec push
+    /// must register). Assertions about *zero* allocations are meaningless
+    /// unless this holds.
+    pub fn is_counting() -> bool {
+        let (n, _) = measure(|| std::hint::black_box(vec![0u8; 4096]));
+        n > 0
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct BenchStats {
     pub iters: usize,

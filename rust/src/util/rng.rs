@@ -127,13 +127,26 @@ pub struct Cdf {
 
 impl Cdf {
     pub fn new(probs: &[f64]) -> Self {
-        let mut cum = Vec::with_capacity(probs.len());
+        let mut cdf = Cdf { cum: Vec::with_capacity(probs.len()) };
+        cdf.reset(probs);
+        cdf
+    }
+
+    /// An empty CDF (no mass); fill it with [`Cdf::reset`] before sampling.
+    pub fn empty() -> Self {
+        Cdf { cum: Vec::new() }
+    }
+
+    /// Rebuild over new weights, reusing the cumulative buffer — the
+    /// zero-allocation path for samplers that re-aim the CDF at every token
+    /// row (`sampling::RsScratch`).
+    pub fn reset(&mut self, probs: &[f64]) {
+        self.cum.clear();
         let mut acc = 0.0;
         for p in probs {
             acc += *p;
-            cum.push(acc);
+            self.cum.push(acc);
         }
-        Cdf { cum }
     }
 
     pub fn total(&self) -> f64 {
@@ -228,6 +241,22 @@ mod tests {
         }
         assert!((counts[0] as f64 / 30_000.0 - 0.5).abs() < 0.02);
         assert!((counts[1] as f64 / 30_000.0 - 0.3).abs() < 0.02);
+    }
+
+    #[test]
+    fn cdf_reset_matches_fresh() {
+        let mut cdf = Cdf::empty();
+        cdf.reset(&[0.1, 0.7, 0.2]);
+        let fresh = Cdf::new(&[0.1, 0.7, 0.2]);
+        for u in [0.0, 0.05, 0.5, 0.95, 0.9999] {
+            assert_eq!(cdf.sample_u(u), fresh.sample_u(u));
+        }
+        // re-aim at a different row; capacity is reused, results match new
+        cdf.reset(&[1.0, 1.0]);
+        let fresh2 = Cdf::new(&[1.0, 1.0]);
+        for u in [0.0, 0.49, 0.51, 0.9999] {
+            assert_eq!(cdf.sample_u(u), fresh2.sample_u(u));
+        }
     }
 
     #[test]

@@ -1,0 +1,255 @@
+//! Integration tests for the zero-allocation assembly hot path (DESIGN.md
+//! §Hot path):
+//!
+//! * `read_range_into` over local and served sources returns bytes identical
+//!   to the legacy `get_range`, including the misaligned-packing "missing
+//!   positions decode as empty" semantics across the CSR path;
+//! * golden test — `assemble_sparse_block_into` (serial and parallel)
+//!   produces byte-identical `idx`/`val`/`smooth`/`lr_scale` blocks to the
+//!   legacy `assemble_sparse_block` for every `Variant`, over both
+//!   `CacheReader` and `ServedReader`;
+//! * steady-state assembly performs zero heap allocations (counting
+//!   allocator installed in this binary; counts are thread-local so the
+//!   parallel test harness cannot pollute them);
+//! * the prefetched training loop produces the exact same `losses` sequence
+//!   as the synchronous loop for a fixed seed (requires `artifacts/small`;
+//!   self-skips otherwise, like `pipeline_integration`).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rskd::cache::{CacheReader, CacheWriter, ProbCodec, RangeBlock, TargetSource};
+use rskd::coordinator::{
+    assemble_sparse_block, assemble_sparse_block_into, AssembleScratch, SparseBlock, TrainOpts,
+};
+use rskd::data::loader::Batch;
+use rskd::sampling::random_sampling;
+use rskd::sampling::zipf::zipf;
+use rskd::serve::{Endpoint, ServeConfig, ServedReader, Server};
+use rskd::spec::{AdaptiveLr, Variant};
+use rskd::util::bench::alloc_count;
+use rskd::util::rng::Pcg;
+
+#[global_allocator]
+static ALLOC: alloc_count::CountingAllocator = alloc_count::CountingAllocator;
+
+const VOCAB: usize = 512;
+
+/// RS-50 cache over positions [0, 64) and [96, 160) with shard span 32:
+/// positions [64, 96) fall between shards — the misaligned-packing hole.
+fn build_gapped_cache(dir: &std::path::Path) {
+    let _ = std::fs::remove_dir_all(dir);
+    let p = zipf(VOCAB, 1.0);
+    let mut rng = Pcg::new(5);
+    let w = CacheWriter::create(dir, ProbCodec::Count { rounds: 50 }, 32, 64).unwrap();
+    for pos in (0u64..64).chain(96..160) {
+        assert!(w.push(pos, random_sampling(&p, 50, 1.0, &mut rng)));
+    }
+    w.finish().unwrap();
+}
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    std::env::temp_dir().join(format!("rskd-hotpath-{tag}-{}", std::process::id()))
+}
+
+fn serve(reader: Arc<CacheReader>) -> (Server, ServedReader) {
+    let ep = Endpoint::Tcp(std::net::SocketAddr::from(([127, 0, 0, 1], 0)));
+    let server = Server::start(reader, ep, ServeConfig::default()).unwrap();
+    let served = ServedReader::connect(server.endpoint()).unwrap();
+    (server, served)
+}
+
+fn bits(v: &[f32]) -> Vec<u32> {
+    v.iter().map(|x| x.to_bits()).collect()
+}
+
+#[test]
+fn read_range_into_matches_get_range_local_and_served() {
+    let dir = tmp_dir("csr");
+    build_gapped_cache(&dir);
+    let reader = Arc::new(CacheReader::open(&dir).unwrap());
+    let (server, served) = serve(Arc::clone(&reader));
+
+    let mut local_block = RangeBlock::new();
+    let mut served_block = RangeBlock::new();
+    // windows: inside a shard, across the hole, before position 0's shard
+    // boundary effects, and padding past the last position
+    for (start, len) in [(0u64, 16usize), (48, 64), (90, 20), (150, 20)] {
+        let legacy = reader.get_range(start, len);
+        reader.read_range_into(start, len, &mut local_block).unwrap();
+        served.read_range_into(start, len, &mut served_block).unwrap();
+        let served_legacy = served.try_get_range(start, len).unwrap();
+        assert_eq!(local_block.len(), len);
+        assert_eq!(served_block.len(), len);
+        for (i, t) in legacy.iter().enumerate() {
+            let ctx = format!("start {start} len {len} pos {i}");
+            let (ids, probs) = local_block.get(i);
+            assert_eq!(ids, t.ids.as_slice(), "{ctx}");
+            assert_eq!(bits(probs), bits(&t.probs), "{ctx}");
+            let (sids, sprobs) = served_block.get(i);
+            assert_eq!(sids, t.ids.as_slice(), "served {ctx}");
+            assert_eq!(bits(sprobs), bits(&t.probs), "served {ctx}");
+            assert_eq!(&served_legacy[i], t, "served legacy {ctx}");
+        }
+    }
+    // the hole itself: every position of [64, 96) decodes empty on all paths
+    reader.read_range_into(64, 32, &mut local_block).unwrap();
+    served.read_range_into(64, 32, &mut served_block).unwrap();
+    for i in 0..32 {
+        assert_eq!(local_block.k_of(i), 0, "hole pos {i} must decode empty");
+        assert_eq!(served_block.k_of(i), 0, "served hole pos {i} must decode empty");
+    }
+    drop(served);
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn golden_assembly_matches_legacy_for_every_variant_and_source() {
+    let dir = tmp_dir("golden");
+    build_gapped_cache(&dir);
+    let reader = Arc::new(CacheReader::open(&dir).unwrap());
+    let (server, served) = serve(Arc::clone(&reader));
+
+    let (b, s, k_slots) = (4usize, 16usize, 24usize);
+    let mut rng = Pcg::new(9);
+    let batch = Batch {
+        tokens: vec![1i32; b * s],
+        labels: (0..b * s).map(|_| rng.below(VOCAB as u64) as i32).collect(),
+        // rows: in-shard, across the hole, tail padding, plain
+        offsets: vec![3, 56, 150, 100],
+        batch: b,
+        seq: s,
+    };
+    let variants = [
+        Variant::Rs { rounds: 50, temp: 1.0 },
+        Variant::TopK { k: 8, normalize: true },
+        Variant::TopK { k: 8, normalize: false },
+        Variant::TopP { p: 0.6, k: 12 },
+        Variant::Smoothing { k: 8 },
+        Variant::GhostToken { k: 8 },
+        Variant::NaiveFix { k: 8 },
+    ];
+    let adaptives = [None, Some(AdaptiveLr { ratio: 2.0, hard_frac: 0.3 })];
+    let sources: [(&str, &dyn TargetSource); 2] = [("local", &*reader), ("served", &served)];
+    let mut blk = SparseBlock::default();
+    for (name, source) in sources {
+        for &variant in &variants {
+            for &adaptive in &adaptives {
+                let legacy =
+                    assemble_sparse_block(source, &batch, VOCAB, k_slots, variant, adaptive);
+                for workers in [1usize, 3] {
+                    let mut scratch = AssembleScratch::with_workers(workers);
+                    assemble_sparse_block_into(
+                        source, &batch, VOCAB, k_slots, variant, adaptive, &mut scratch,
+                        &mut blk,
+                    )
+                    .unwrap();
+                    let ctx = format!("{name} {variant:?} adaptive {adaptive:?} w{workers}");
+                    assert_eq!(blk.idx, legacy.idx, "{ctx}");
+                    assert_eq!(bits(&blk.val), bits(&legacy.val), "{ctx}");
+                    assert_eq!(bits(&blk.smooth), bits(&legacy.smooth), "{ctx}");
+                    assert_eq!(bits(&blk.lr_scale), bits(&legacy.lr_scale), "{ctx}");
+                    assert_eq!(blk.ghost_on, legacy.ghost_on, "{ctx}");
+                }
+            }
+        }
+    }
+    drop(served);
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn serial_assembly_is_zero_alloc_at_steady_state() {
+    assert!(
+        alloc_count::is_counting(),
+        "counting allocator must be installed in this test binary"
+    );
+    let dir = tmp_dir("alloc");
+    build_gapped_cache(&dir);
+    // capacity >= shard count so steady state never evicts/re-decodes
+    let reader = CacheReader::open_with_capacity(&dir, 16).unwrap();
+    let (b, s, k_slots) = (4usize, 16usize, 24usize);
+    let batch = Batch {
+        tokens: vec![1i32; b * s],
+        labels: vec![7i32; b * s],
+        offsets: vec![0, 40, 100, 128],
+        batch: b,
+        seq: s,
+    };
+    let variant = Variant::Rs { rounds: 50, temp: 1.0 };
+    let adaptive = Some(AdaptiveLr { ratio: 2.0, hard_frac: 0.3 });
+    let mut scratch = AssembleScratch::serial();
+    let mut blk = SparseBlock::default();
+    // warm: buffers grow to steady-state capacity, shards decode into the LRU
+    for _ in 0..2 {
+        assemble_sparse_block_into(
+            &reader, &batch, VOCAB, k_slots, variant, adaptive, &mut scratch, &mut blk,
+        )
+        .unwrap();
+    }
+    let (allocs, _) = alloc_count::measure(|| {
+        for _ in 0..3 {
+            assemble_sparse_block_into(
+                &reader, &batch, VOCAB, k_slots, variant, adaptive, &mut scratch, &mut blk,
+            )
+            .unwrap();
+            std::hint::black_box(blk.val.len());
+        }
+    });
+    assert_eq!(allocs, 0, "steady-state serial assembly must not allocate");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn prefetched_loop_matches_synchronous_losses() {
+    let artifacts = PathBuf::from(concat!(env!("CARGO_MANIFEST_DIR"), "/artifacts/small"));
+    if !artifacts.join("manifest.json").exists() {
+        eprintln!("skipping: artifacts/small not built");
+        return;
+    }
+    use rskd::coordinator::{train_student_with, Pipeline, PipelineConfig};
+    use rskd::model::ModelState;
+    let cfg = PipelineConfig {
+        artifact_dir: artifacts,
+        target_tokens: 50_000,
+        teacher_steps: 30,
+        student_steps: 12,
+        eval_batches: 2,
+        work_dir: PathBuf::from("target/test-hotpath"),
+        ..Default::default()
+    };
+    let steps = cfg.student_steps;
+    let lr = cfg.student_lr;
+    let mut pipe = Pipeline::prepare(cfg).unwrap();
+    let spec = rskd::spec::DistillSpec::rs(50);
+    let cache = pipe.ensure_cache(&spec).unwrap().unwrap();
+    let schedule = rskd::coordinator::LrSchedule::paper_default(lr, steps);
+
+    let mut run = |prefetch: bool| {
+        let mut student = ModelState::init(&pipe.engine, "student", 3).unwrap();
+        let mut loader = pipe.train_loader(11);
+        train_student_with(
+            &pipe.engine,
+            &mut student,
+            &mut loader,
+            steps,
+            schedule,
+            &spec,
+            Some(cache.reader.as_ref()),
+            Some(&pipe.teacher),
+            TrainOpts { prefetch, assemble_workers: 1 },
+        )
+        .unwrap()
+    };
+    let sync = run(false);
+    let pre = run(true);
+    assert_eq!(bits(&sync.losses), bits(&pre.losses), "prefetch must not change training");
+    assert_eq!(bits(&sync.kd_losses), bits(&pre.kd_losses));
+    // the overlap counters must account for every executed step
+    assert_eq!(pre.prefetch_hits + pre.prefetch_misses, pre.steps as u64);
+    assert!(pre.assemble_time > std::time::Duration::ZERO);
+    assert_eq!(sync.prefetch_hits, 0);
+    assert_eq!(sync.prefetch_misses, 0);
+}
