@@ -43,6 +43,13 @@ fn stats_mode(args: &Args) -> Result<()> {
         "requests {} | rejected {} | errors {} | shard loads {} ({} coalesced in flight)",
         s.requests, s.rejected, s.errors, s.shard_loads, s.coalesced
     ));
+    if s.tier != rskd::cache::TierCounters::default() {
+        report.line(format!(
+            "tier: {} hits / {} misses | {} positions backfilled | {} origin computes \
+             (write-through stack — docs/SERVING.md §Miss path)",
+            s.tier.hits, s.tier.misses, s.tier.backfilled, s.tier.origin_computes
+        ));
+    }
 
     report.line("--- latency histogram (log2 µs buckets) ---");
     let max = s.hist.iter().copied().max().unwrap_or(0);
@@ -165,7 +172,7 @@ fn main() -> Result<()> {
     let r = CacheReader::open(&dir)?;
     match r.cache_kind() {
         Ok(kind) => {
-            let plan = CachePlan { kind };
+            let plan = CachePlan::prebuilt(kind);
             report.line(format!(
                 "kind {kind} -> plan {plan}, registry tag `{}`; serves specs whose \
                  cache_plan() matches (see docs/SPEC.md compatibility matrix)",

@@ -8,7 +8,7 @@
 //!
 //! ```text
 //! magic  u32 = 0x534C4332 ("SLC2"; v1 files carry "SLC1")
-//! codec  u8, rounds u8, reserved u16
+//! codec  u8, rounds u8, flags u8 (bit 0 = fully covered), reserved u8
 //! start  u64   first stream position
 //! count  u64   number of positions
 //! then per position: n u8, n * 3-byte slots (quant::pack_slot)
@@ -57,12 +57,23 @@ impl SparseTarget {
     }
 }
 
+/// Header flag bit: every record in this shard was explicitly written (no
+/// never-computed gap records). Crash recovery without a manifest trusts
+/// only flagged shards — an unflagged file cannot distinguish a
+/// never-computed gap from a pushed-empty target, so it is recomputed.
+/// Files written before the flag existed carry 0 and are conservatively
+/// recomputed too.
+pub const FLAG_FULLY_COVERED: u8 = 1;
+
 /// Decoded fixed-size shard header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ShardHeader {
     /// 1 for "SLC1" files, 2 for "SLC2" files.
     pub version: u32,
     pub codec: ProbCodec,
+    /// [`FLAG_FULLY_COVERED`] and future bits (the old reserved byte; v1
+    /// and early-v2 files carry 0).
+    pub flags: u8,
     /// First stream position covered by the shard.
     pub start: u64,
     /// Number of consecutive positions stored.
@@ -92,12 +103,13 @@ pub fn read_header(r: &mut impl Read) -> io::Result<ShardHeader> {
     r.read_exact(&mut hdr)?;
     let codec = ProbCodec::from_tag(hdr[0], hdr[1] as u32)
         .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad codec tag"))?;
+    let flags = hdr[2];
     let mut u64b = [0u8; 8];
     r.read_exact(&mut u64b)?;
     let start = u64::from_le_bytes(u64b);
     r.read_exact(&mut u64b)?;
     let count = u64::from_le_bytes(u64b);
-    Ok(ShardHeader { version, codec, start, count })
+    Ok(ShardHeader { version, codec, flags, start, count })
 }
 
 /// In-memory shard: encoded records for [start, start+records.len()).
@@ -134,14 +146,20 @@ impl Shard {
         out.end_position();
     }
 
-    /// Serialize with the current (v2) magic.
+    /// Serialize with the current (v2) magic and no flags.
     pub fn write_to(&self, w: &mut impl Write) -> io::Result<()> {
+        self.write_to_flagged(w, 0)
+    }
+
+    /// Serialize with an explicit header `flags` byte (the writer sets
+    /// [`FLAG_FULLY_COVERED`] on shards with no gap records).
+    pub fn write_to_flagged(&self, w: &mut impl Write, flags: u8) -> io::Result<()> {
         let rounds = match self.codec {
             ProbCodec::Count { rounds } => rounds as u8,
             _ => 0,
         };
         w.write_all(&MAGIC_V2.to_le_bytes())?;
-        w.write_all(&[self.codec.tag(), rounds, 0, 0])?;
+        w.write_all(&[self.codec.tag(), rounds, flags, 0])?;
         w.write_all(&self.start.to_le_bytes())?;
         w.write_all(&(self.records.len() as u64).to_le_bytes())?;
         for (ids, codes) in &self.records {
@@ -195,6 +213,34 @@ pub struct ShardMeta {
     pub count: u64,
     /// On-disk size (header + records).
     pub bytes: u64,
+    /// Coverage manifest (run-length bitmap): the absolute `[lo, hi)`
+    /// position ranges of this shard that were actually *written* (pushed or
+    /// backfilled), sorted and disjoint. `None` means the full
+    /// `[start, start + count)` range is covered — the only form complete
+    /// shards and pre-coverage caches use. Partially-filled shards (a
+    /// checkpointed write-through tier, or a trailing shard with interior
+    /// gaps) record exact ranges so an interrupted cache reopens cleanly:
+    /// resumable builds skip covered ranges and recompute only the rest.
+    pub covered: Option<Vec<(u64, u64)>>,
+}
+
+impl ShardMeta {
+    /// Distinct positions actually written into this shard.
+    pub fn covered_positions(&self) -> u64 {
+        match &self.covered {
+            None => self.count,
+            Some(ranges) => ranges.iter().map(|&(lo, hi)| hi - lo).sum(),
+        }
+    }
+
+    /// Stored `(id, prob)` slots, recovered from the byte layout: a shard is
+    /// `HEADER_BYTES + count * 1 + slots * 3` bytes (one length byte per
+    /// position, 3 bytes per slot), so the slot total needs no decode.
+    /// Saturating as a belt — `from_json` already rejects entries whose
+    /// `bytes` cannot hold `count` records.
+    pub fn slots(&self) -> u64 {
+        self.bytes.saturating_sub(HEADER_BYTES as u64 + self.count) / 3
+    }
 }
 
 /// Directory-level `index.json` manifest (v2 caches).
@@ -234,12 +280,22 @@ impl CacheManifest {
             .shards
             .iter()
             .map(|s| {
-                Json::obj(vec![
+                let mut pairs = vec![
                     ("file", Json::str(&s.file)),
                     ("start", Json::num(s.start as f64)),
                     ("count", Json::num(s.count as f64)),
                     ("bytes", Json::num(s.bytes as f64)),
-                ])
+                ];
+                if let Some(ranges) = &s.covered {
+                    let arr = ranges
+                        .iter()
+                        .map(|&(lo, hi)| {
+                            Json::Arr(vec![Json::num(lo as f64), Json::num(hi as f64)])
+                        })
+                        .collect();
+                    pairs.push(("covered", Json::Arr(arr)));
+                }
+                Json::obj(pairs)
             })
             .collect();
         let mut pairs = vec![
@@ -276,7 +332,26 @@ impl CacheManifest {
             let snum = |key: &str| {
                 s.get(key).and_then(|v| v.as_f64()).ok_or_else(|| bad("bad shard entry"))
             };
-            shards.push(ShardMeta {
+            let covered = match s.get("covered").and_then(|v| v.as_arr()) {
+                None => None,
+                Some(pairs) => {
+                    let mut ranges = Vec::with_capacity(pairs.len());
+                    for p in pairs {
+                        let pair = p.as_arr().ok_or_else(|| bad("bad covered range"))?;
+                        let at = |i: usize| {
+                            pair.get(i)
+                                .and_then(|v| v.as_f64())
+                                .ok_or_else(|| bad("bad covered range"))
+                        };
+                        if pair.len() != 2 {
+                            return Err(bad("bad covered range"));
+                        }
+                        ranges.push((at(0)? as u64, at(1)? as u64));
+                    }
+                    Some(ranges)
+                }
+            };
+            let meta = ShardMeta {
                 file: s
                     .get("file")
                     .and_then(|v| v.as_str())
@@ -285,7 +360,14 @@ impl CacheManifest {
                 start: snum("start")? as u64,
                 count: snum("count")? as u64,
                 bytes: snum("bytes")? as u64,
-            });
+                covered,
+            };
+            // a shard is at least header + one length byte per record; an
+            // entry violating that would poison every derived total
+            if meta.bytes < HEADER_BYTES as u64 + meta.count {
+                return Err(bad("bad shard entry: bytes too small for count"));
+            }
+            shards.push(meta);
         }
         shards.sort_by_key(|s| s.start);
         Ok(CacheManifest {
@@ -368,8 +450,14 @@ mod tests {
         let hdr = read_header(&mut buf.as_slice()).unwrap();
         assert_eq!(
             hdr,
-            ShardHeader { version: 2, codec: ProbCodec::Ratio, start: 4096, count: 5 }
+            ShardHeader { version: 2, codec: ProbCodec::Ratio, flags: 0, start: 4096, count: 5 }
         );
+        // the flags byte roundtrips (crash recovery keys off it)
+        let mut buf = Vec::new();
+        shard.write_to_flagged(&mut buf, FLAG_FULLY_COVERED).unwrap();
+        let hdr = read_header(&mut buf.as_slice()).unwrap();
+        assert_eq!(hdr.flags, FLAG_FULLY_COVERED);
+        assert_eq!(buf.len(), shard.byte_size());
     }
 
     #[test]
@@ -450,8 +538,20 @@ mod tests {
             slots: 4200,
             bytes: 12_625,
             shards: vec![
-                ShardMeta { file: "shard-00000001.slc".into(), start: 64, count: 36, bytes: 525 },
-                ShardMeta { file: "shard-00000000.slc".into(), start: 0, count: 64, bytes: 900 },
+                ShardMeta {
+                    file: "shard-00000001.slc".into(),
+                    start: 64,
+                    count: 36,
+                    bytes: 525,
+                    covered: Some(vec![(64, 70), (80, 100)]),
+                },
+                ShardMeta {
+                    file: "shard-00000000.slc".into(),
+                    start: 0,
+                    count: 64,
+                    bytes: 900,
+                    covered: None,
+                },
             ],
         };
         let j = m.to_json();
@@ -462,6 +562,24 @@ mod tests {
         // from_json sorts by start
         assert_eq!(back.shards[0].start, 0);
         assert_eq!(back.shards[1].start, 64);
+        // the coverage run-length bitmap survives the roundtrip exactly
+        assert_eq!(back.shards[0].covered, None);
+        assert_eq!(back.shards[1].covered, Some(vec![(64, 70), (80, 100)]));
+        assert_eq!(back.shards[1].covered_positions(), 26);
+        assert_eq!(back.shards[0].covered_positions(), 64);
+    }
+
+    #[test]
+    fn shard_meta_slots_from_byte_layout() {
+        // bytes = header + count + 3 * slots, so slots() inverts exactly
+        let m = ShardMeta {
+            file: "shard-00000000.slc".into(),
+            start: 0,
+            count: 10,
+            bytes: HEADER_BYTES as u64 + 10 + 3 * 42,
+            covered: None,
+        };
+        assert_eq!(m.slots(), 42);
     }
 
     #[test]

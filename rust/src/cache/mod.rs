@@ -1,7 +1,10 @@
 //! Quantized sparse-logit cache (paper Appendix D.1/D.2): 24-bit slots,
 //! three probability codecs, sharded v2 files with a directory manifest, a
-//! bounded ring buffer feeding an out-of-order async writer, and a lazy LRU
-//! range reader for the student trainer.
+//! bounded ring buffer feeding an out-of-order *resumable* async writer, a
+//! lazy LRU range reader for the student trainer, and the composable tier
+//! stack ([`tier`]: write-through backfill over any origin + an in-RAM
+//! range LRU) that makes the cache a tier, not a phase — see DESIGN.md
+//! §Tiered sources.
 //!
 //! # v2 producer/consumer contract
 //!
@@ -25,13 +28,21 @@ pub mod block;
 pub mod format;
 pub mod quant;
 pub mod reader;
+pub mod tier;
 pub mod writer;
 
 pub use block::RangeBlock;
 pub use format::{CacheManifest, ShardMeta, SparseTarget};
 pub use quant::ProbCodec;
 pub use reader::{CacheReader, ShardEntry, DEFAULT_RESIDENT_SHARDS};
+pub use tier::{Coverage, MemoryTier, TierCounters, WriteThrough, DEFAULT_MEMORY_TIER_RANGES};
 pub use writer::{CacheStats, CacheWriter, RingBuffer};
+
+/// An owned, thread-safe, `'static` target source — what long-lived
+/// consumers (the serve layer's backfill stack) hold their origin as.
+/// `TargetSource` is `Sync` by supertrait; the explicit `Send` makes the
+/// boxed stack movable across server threads.
+pub type DynSource = Box<dyn TargetSource + Send>;
 
 /// Anything the student trainer can pull sparse targets from: a local
 /// [`CacheReader`], or `serve::ServedReader` speaking the wire protocol to a
@@ -70,5 +81,65 @@ pub trait TargetSource: Sync {
     /// or unreachable cache must not silently train on empty targets.
     fn get_range(&self, start: u64, len: usize) -> Vec<SparseTarget> {
         self.try_get_range(start, len).expect("sparse-target source read failed")
+    }
+}
+
+// Delegating impls so tiers compose over borrowed, boxed, or shared sources
+// without caring which (`WriteThrough<&TeacherSource>` on the pipeline's
+// stack, `WriteThrough<DynSource>` in the serve layer, `MemoryTier<Arc<..>>`
+// across threads).
+
+impl<'a, T: TargetSource + ?Sized> TargetSource for &'a T {
+    fn read_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> std::io::Result<()> {
+        (**self).read_range_into(start, len, out)
+    }
+
+    fn try_get_range(&self, start: u64, len: usize) -> std::io::Result<Vec<SparseTarget>> {
+        (**self).try_get_range(start, len)
+    }
+
+    fn cache_kind(&self) -> Result<crate::spec::CacheKind, crate::spec::SpecError> {
+        (**self).cache_kind()
+    }
+
+    fn positions(&self) -> u64 {
+        (**self).positions()
+    }
+}
+
+impl<T: TargetSource + ?Sized> TargetSource for Box<T> {
+    fn read_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> std::io::Result<()> {
+        (**self).read_range_into(start, len, out)
+    }
+
+    fn try_get_range(&self, start: u64, len: usize) -> std::io::Result<Vec<SparseTarget>> {
+        (**self).try_get_range(start, len)
+    }
+
+    fn cache_kind(&self) -> Result<crate::spec::CacheKind, crate::spec::SpecError> {
+        (**self).cache_kind()
+    }
+
+    fn positions(&self) -> u64 {
+        (**self).positions()
+    }
+}
+
+// `Arc<T>: Sync` (the supertrait obligation) additionally needs `T: Send`
+impl<T: TargetSource + Send + ?Sized> TargetSource for std::sync::Arc<T> {
+    fn read_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> std::io::Result<()> {
+        (**self).read_range_into(start, len, out)
+    }
+
+    fn try_get_range(&self, start: u64, len: usize) -> std::io::Result<Vec<SparseTarget>> {
+        (**self).try_get_range(start, len)
+    }
+
+    fn cache_kind(&self) -> Result<crate::spec::CacheKind, crate::spec::SpecError> {
+        (**self).cache_kind()
+    }
+
+    fn positions(&self) -> u64 {
+        (**self).positions()
     }
 }

@@ -1,0 +1,829 @@
+//! Composable target-source tiers: the cache as a *tier*, not a phase.
+//!
+//! The paper's cost structure — one teacher pass cached, many student runs —
+//! was wired into this repo as a monolithic offline stage: nothing could
+//! train or serve until `build_cache` ran to completion. This module turns
+//! the cache into a stack of [`TargetSource`] tiers that any consumer (the
+//! trainer, the serve layer, `build_cache` itself) drives the same way:
+//!
+//! ```text
+//!   MemoryTier          in-RAM LRU of decoded RangeBlocks (hit = memcpy)
+//!      |
+//!   WriteThrough        coverage-tracked disk cache; a miss computes via
+//!      |   \              the origin, quantizes, backfills a shard, and
+//!      |    CacheReader   answers — so the *first* epoch fills the cache
+//!      |                  and the second is served entirely from disk
+//!   origin: TargetSource  TeacherSource (on-demand teacher forward),
+//!                         SyntheticZipfSource, another CacheReader, ...
+//! ```
+//!
+//! * [`Coverage`] — a sorted, disjoint run-length set of covered position
+//!   ranges; the unit the write-through tier and resumable builds reason in.
+//! * [`WriteThrough`] — wraps any origin over a cache directory. Covered
+//!   ranges are served from disk (or from in-flight shard buffers); gaps are
+//!   computed via the origin, encoded with the directory's codec (so a
+//!   backfilled answer is bit-identical to a later disk read — the encode →
+//!   decode roundtrip happens on the miss path too), buffered into the same
+//!   range-keyed shards `CacheWriter` builds, flushed when complete, and
+//!   checkpointed (partial shards + coverage manifest) on demand and on
+//!   drop. A partially-filled directory reopens cleanly: coverage comes back
+//!   from `index.json` and only the gaps are ever recomputed.
+//! * [`MemoryTier`] — a capacity-bounded LRU of decoded [`RangeBlock`]s in
+//!   front of any source, sharing the zero-alloc `read_range_into` contract
+//!   (a steady-state hit copies into the caller's block without touching the
+//!   heap).
+//! * [`TierCounters`] — hit/miss/backfill/origin-compute counters, surfaced
+//!   by the serve layer's `Stats` frame and the pipeline's on-demand report.
+
+use std::collections::HashMap;
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+
+use crate::cache::block::RangeBlock;
+use crate::cache::format::{ShardMeta, INDEX_FILE};
+use crate::cache::quant::{self, ProbCodec};
+use crate::cache::reader::CacheReader;
+use crate::cache::writer::{manifest_of, merge_kind, recover_dir, Pending};
+use crate::cache::TargetSource;
+use crate::spec::{CacheKind, SpecError};
+
+/// Default number of decoded ranges a [`MemoryTier`] keeps resident.
+pub const DEFAULT_MEMORY_TIER_RANGES: usize = 1024;
+
+/// Tier observability: how a stack answered its range reads.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct TierCounters {
+    /// ranges answered entirely from covered tiers (no origin compute)
+    pub hits: u64,
+    /// ranges that had at least one uncovered gap (origin compute needed)
+    pub misses: u64,
+    /// positions encoded and backfilled into the cache via the miss path
+    pub backfilled: u64,
+    /// origin `read_range_into` calls (for a [`TeacherSource`] origin this
+    /// counts teacher computes; 0 on a warm stack)
+    ///
+    /// [`TeacherSource`]: crate::coordinator::teacher::TeacherSource
+    pub origin_computes: u64,
+}
+
+/// Sorted, disjoint, half-open `[lo, hi)` position ranges — a run-length
+/// encoded coverage bitmap. Adjacent and overlapping inserts merge, so the
+/// vector stays small for the range-local access patterns of builds and
+/// training sweeps.
+#[derive(Clone, Debug, Default, PartialEq, Eq)]
+pub struct Coverage {
+    ranges: Vec<(u64, u64)>,
+}
+
+impl Coverage {
+    pub fn new() -> Coverage {
+        Coverage { ranges: Vec::new() }
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.ranges.is_empty()
+    }
+
+    /// Total covered positions.
+    pub fn count(&self) -> u64 {
+        self.ranges.iter().map(|&(lo, hi)| hi - lo).sum()
+    }
+
+    /// The sorted disjoint ranges.
+    pub fn ranges(&self) -> &[(u64, u64)] {
+        &self.ranges
+    }
+
+    /// Mark `[lo, hi)` covered, merging with overlapping/adjacent ranges.
+    pub fn insert(&mut self, lo: u64, hi: u64) {
+        if lo >= hi {
+            return;
+        }
+        // first existing range whose end touches or passes lo
+        let first = self.ranges.partition_point(|&(_, e)| e < lo);
+        let (mut new_lo, mut new_hi) = (lo, hi);
+        let mut last = first;
+        while last < self.ranges.len() && self.ranges[last].0 <= hi {
+            new_lo = new_lo.min(self.ranges[last].0);
+            new_hi = new_hi.max(self.ranges[last].1);
+            last += 1;
+        }
+        self.ranges.splice(first..last, [(new_lo, new_hi)]);
+    }
+
+    pub fn contains(&self, pos: u64) -> bool {
+        let idx = self.ranges.partition_point(|&(s, _)| s <= pos);
+        idx > 0 && self.ranges[idx - 1].1 > pos
+    }
+
+    /// Is every position of `[lo, hi)` covered? (Empty ranges are covered.)
+    pub fn covers(&self, lo: u64, hi: u64) -> bool {
+        if lo >= hi {
+            return true;
+        }
+        // ranges are kept merged, so a fully-covered interval lies in one
+        let idx = self.ranges.partition_point(|&(s, _)| s <= lo);
+        idx > 0 && self.ranges[idx - 1].1 >= hi
+    }
+
+    /// The uncovered sub-ranges of `[lo, hi)`, in order.
+    pub fn gaps_within(&self, lo: u64, hi: u64) -> Vec<(u64, u64)> {
+        let mut gaps = Vec::new();
+        if lo >= hi {
+            return gaps;
+        }
+        let mut cursor = lo;
+        let first = self.ranges.partition_point(|&(_, e)| e <= lo);
+        for &(s, e) in &self.ranges[first..] {
+            if s >= hi {
+                break;
+            }
+            if s > cursor {
+                gaps.push((cursor, s));
+            }
+            cursor = cursor.max(e);
+            if cursor >= hi {
+                return gaps;
+            }
+        }
+        if cursor < hi {
+            gaps.push((cursor, hi));
+        }
+        gaps
+    }
+}
+
+/// In-RAM LRU of decoded [`RangeBlock`]s in front of any [`TargetSource`].
+///
+/// Keys are exact `(start, len)` ranges — the student trainer re-requests
+/// identical per-row windows every epoch, so exact-match caching captures
+/// the whole warm-epoch read stream without sub-range bookkeeping. A hit
+/// copies the stored block into the caller's block (`clone_from`, which
+/// reuses the caller's capacity: zero steady-state allocations); a miss
+/// delegates to the inner source and stores a clone on the way out.
+pub struct MemoryTier<O: TargetSource> {
+    inner: O,
+    cap: usize,
+    /// MRU at the back; capacity is bounded, a linear key scan suffices
+    lru: Mutex<Vec<((u64, usize), RangeBlock)>>,
+    hits: AtomicU64,
+    misses: AtomicU64,
+}
+
+impl<O: TargetSource> MemoryTier<O> {
+    pub fn new(inner: O) -> MemoryTier<O> {
+        MemoryTier::with_capacity(inner, DEFAULT_MEMORY_TIER_RANGES)
+    }
+
+    pub fn with_capacity(inner: O, cap: usize) -> MemoryTier<O> {
+        MemoryTier {
+            inner,
+            cap: cap.max(1),
+            lru: Mutex::new(Vec::new()),
+            hits: AtomicU64::new(0),
+            misses: AtomicU64::new(0),
+        }
+    }
+
+    /// `(hits, misses)` so far.
+    pub fn counters(&self) -> (u64, u64) {
+        (self.hits.load(Ordering::Relaxed), self.misses.load(Ordering::Relaxed))
+    }
+
+    /// Decoded ranges currently resident.
+    pub fn resident(&self) -> usize {
+        self.lru.lock().unwrap().len()
+    }
+
+    pub fn inner(&self) -> &O {
+        &self.inner
+    }
+}
+
+fn copy_block(src: &RangeBlock, dst: &mut RangeBlock) {
+    dst.ids.clone_from(&src.ids);
+    dst.probs.clone_from(&src.probs);
+    dst.offsets.clone_from(&src.offsets);
+}
+
+impl<O: TargetSource> TargetSource for MemoryTier<O> {
+    fn read_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> std::io::Result<()> {
+        {
+            let mut lru = self.lru.lock().unwrap();
+            if let Some(i) = lru.iter().position(|((s, l), _)| *s == start && *l == len) {
+                let entry = lru.remove(i);
+                copy_block(&entry.1, out);
+                lru.push(entry); // promote to MRU
+                self.hits.fetch_add(1, Ordering::Relaxed);
+                return Ok(());
+            }
+        }
+        // miss: fill outside the lock (the inner source may be slow), then
+        // store a clone; a concurrent same-range miss double-computes but
+        // stays correct (both insert identical blocks, single-entry-guarded)
+        self.inner.read_range_into(start, len, out)?;
+        self.misses.fetch_add(1, Ordering::Relaxed);
+        let mut lru = self.lru.lock().unwrap();
+        if !lru.iter().any(|((s, l), _)| *s == start && *l == len) {
+            if lru.len() >= self.cap {
+                lru.remove(0); // evict LRU
+            }
+            lru.push(((start, len), out.clone()));
+        }
+        Ok(())
+    }
+
+    fn cache_kind(&self) -> Result<CacheKind, SpecError> {
+        self.inner.cache_kind()
+    }
+
+    fn positions(&self) -> u64 {
+        self.inner.positions()
+    }
+}
+
+/// Write-through disk tier: serves covered ranges from a cache directory and
+/// computes gaps via `origin`, backfilling shards as ranges are first
+/// requested. See the module docs for the stack picture and
+/// `docs/CACHE_FORMAT.md` §Coverage for the on-disk manifest it maintains.
+///
+/// All range reads serialize on one internal lock: the miss path must be
+/// single-flight (one teacher compute per gap no matter how many readers
+/// race), and the warm path is a RAM/LRU-backed decode where the lock is not
+/// the bottleneck. Heavier fan-out belongs in front (a [`MemoryTier`]) or
+/// behind a `serve::Server`.
+pub struct WriteThrough<O: TargetSource> {
+    origin: O,
+    dir: PathBuf,
+    codec: ProbCodec,
+    pps: usize,
+    kind: Option<String>,
+    /// gap-compute windows expand to this alignment (set it to the packed
+    /// sequence length so a row-granular teacher origin computes whole rows
+    /// once instead of partial rows repeatedly); 1 = no expansion
+    align: u64,
+    state: Mutex<WtState>,
+}
+
+struct WtState {
+    coverage: Coverage,
+    /// in-flight shard assembly buffers (incomplete shards live here and
+    /// answer reads for their covered slots)
+    pending: HashMap<u64, Pending>,
+    /// flushed complete shards
+    entries: Vec<ShardMeta>,
+    /// lazily-opened reader over the flushed shards; invalidated per flush
+    reader: Option<Arc<CacheReader>>,
+    /// on-disk manifest lags the in-memory state (scan recovery, new fills)
+    dirty: bool,
+    counters: TierCounters,
+    origin_block: RangeBlock,
+    disk_block: RangeBlock,
+}
+
+impl<O: TargetSource> WriteThrough<O> {
+    /// Open (or create) the write-through tier over `dir`. A partially-built
+    /// directory is recovered exactly like [`CacheWriter::resume`]: complete
+    /// shards serve from disk, partial shards reload into assembly buffers,
+    /// and only uncovered gaps ever reach `origin`.
+    ///
+    /// [`CacheWriter::resume`]: crate::cache::CacheWriter::resume
+    pub fn open(
+        origin: O,
+        dir: &Path,
+        codec: ProbCodec,
+        positions_per_shard: usize,
+        kind: Option<String>,
+    ) -> std::io::Result<WriteThrough<O>> {
+        assert!(positions_per_shard > 0, "positions_per_shard must be positive");
+        std::fs::create_dir_all(dir)?;
+        let recovered = recover_dir(dir, codec, positions_per_shard)?;
+        // adopt the directory's recorded kind when the caller passes none
+        // (a checkpoint must never erase the tag); conflicts are refused
+        let kind = merge_kind(dir, kind, recovered.kind.clone())?;
+        let dirty = !recovered.entries.is_empty() && !dir.join(INDEX_FILE).exists();
+        Ok(WriteThrough {
+            origin,
+            dir: dir.to_path_buf(),
+            codec,
+            pps: positions_per_shard,
+            kind,
+            align: 1,
+            state: Mutex::new(WtState {
+                coverage: recovered.coverage,
+                pending: recovered.pending,
+                entries: recovered.entries,
+                reader: None,
+                dirty,
+                counters: TierCounters::default(),
+                origin_block: RangeBlock::new(),
+                disk_block: RangeBlock::new(),
+            }),
+        })
+    }
+
+    /// Expand gap-compute windows to multiples of `align` positions.
+    pub fn with_align(mut self, align: u64) -> WriteThrough<O> {
+        self.align = align.max(1);
+        self
+    }
+
+    pub fn counters(&self) -> TierCounters {
+        self.state.lock().unwrap().counters
+    }
+
+    /// Coverage of everything on disk or in assembly buffers.
+    pub fn coverage(&self) -> Coverage {
+        self.state.lock().unwrap().coverage.clone()
+    }
+
+    pub fn codec(&self) -> ProbCodec {
+        self.codec
+    }
+
+    pub fn positions_per_shard(&self) -> usize {
+        self.pps
+    }
+
+    pub fn kind_tag(&self) -> Option<&str> {
+        self.kind.as_deref()
+    }
+
+    pub fn origin(&self) -> &O {
+        &self.origin
+    }
+
+    /// Bytes of flushed complete shards on disk.
+    pub fn flushed_bytes(&self) -> u64 {
+        self.state.lock().unwrap().entries.iter().map(|e| e.bytes).sum()
+    }
+
+    /// `(shard_loads, coalesced_loads)` of the disk reader behind the tier
+    /// (zeros until the first disk read).
+    pub fn reader_counters(&self) -> (u64, u64) {
+        let st = self.state.lock().unwrap();
+        match &st.reader {
+            Some(r) => (r.shard_loads(), r.coalesced_loads()),
+            None => (0, 0),
+        }
+    }
+
+    /// Persist the tier durably: write every in-flight partial shard with
+    /// its coverage ranges, and save the manifest. After a checkpoint the
+    /// directory reopens with zero lost work; between checkpoints a crash
+    /// loses only incomplete shards (complete ones flush eagerly). Also runs
+    /// best-effort on drop.
+    pub fn checkpoint(&self) -> std::io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        self.persist_locked(&mut st)
+    }
+
+    fn persist_locked(&self, st: &mut WtState) -> std::io::Result<()> {
+        if !st.dirty {
+            // nothing new since the last save: a warm run must not
+            // truncate-and-rewrite identical shard files and manifest
+            return Ok(());
+        }
+        let mut metas = st.entries.clone();
+        let mut ids: Vec<u64> = st.pending.keys().copied().collect();
+        ids.sort_unstable();
+        for shard_id in ids {
+            let p = &st.pending[&shard_id];
+            if p.filled == 0 {
+                continue;
+            }
+            metas.push(p.flush_partial(&self.dir, shard_id, self.codec, self.pps)?);
+        }
+        manifest_of(self.codec, self.kind.clone(), metas).save(&self.dir)?;
+        st.dirty = false;
+        Ok(())
+    }
+
+    fn ensure_reader(&self, st: &mut WtState) -> std::io::Result<Arc<CacheReader>> {
+        if st.reader.is_none() {
+            if st.dirty {
+                self.persist_locked(st)?;
+            }
+            st.reader = Some(Arc::new(CacheReader::open(&self.dir)?));
+        }
+        Ok(Arc::clone(st.reader.as_ref().unwrap()))
+    }
+
+    /// Backfill every uncovered gap of `[start, end)` via the origin.
+    /// Returns whether any complete shard was flushed.
+    fn fill_gaps(&self, st: &mut WtState, start: u64, end: u64) -> std::io::Result<bool> {
+        let gaps = st.coverage.gaps_within(start, end);
+        if gaps.is_empty() {
+            st.counters.hits += 1;
+            return Ok(false);
+        }
+        st.counters.misses += 1;
+        let mut flushed_any = false;
+        for (glo, ghi) in gaps {
+            if st.coverage.covers(glo, ghi) {
+                // an earlier gap's alignment expansion already filled this
+                // one — never pay a second origin compute for it
+                continue;
+            }
+            // expand the compute window to the alignment so row-granular
+            // origins compute whole rows once, not partial rows repeatedly
+            let lo = glo - glo % self.align;
+            let rem = ghi % self.align;
+            let hi = if rem == 0 {
+                ghi
+            } else {
+                ghi.checked_add(self.align - rem).unwrap_or(ghi)
+            };
+            let n = (hi - lo) as usize;
+            self.origin.read_range_into(lo, n, &mut st.origin_block)?;
+            st.counters.origin_computes += 1;
+            for i in 0..n {
+                let pos = lo + i as u64;
+                if st.coverage.contains(pos) {
+                    continue; // the expansion may overlap covered territory
+                }
+                let (ids, probs) = st.origin_block.get(i);
+                // encode with the directory codec: the miss path answers the
+                // same quantized values a later disk read decodes
+                let enc = quant::encode(ids, probs, self.codec);
+                let shard_id = pos / self.pps as u64;
+                let local = (pos % self.pps as u64) as usize;
+                let p = st.pending.entry(shard_id).or_insert_with(|| Pending::empty(self.pps));
+                if p.records[local].replace(enc).is_none() {
+                    p.filled += 1;
+                }
+                p.hi = p.hi.max(local);
+                st.coverage.insert(pos, pos + 1);
+                st.counters.backfilled += 1;
+                st.dirty = true;
+                if p.filled == self.pps {
+                    let done = st.pending.remove(&shard_id).unwrap();
+                    st.entries
+                        .push(done.flush_complete(&self.dir, shard_id, self.codec, self.pps)?);
+                    st.reader = None; // the next disk read must see the new shard
+                    flushed_any = true;
+                }
+            }
+        }
+        Ok(flushed_any)
+    }
+}
+
+impl<O: TargetSource> TargetSource for WriteThrough<O> {
+    fn read_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> std::io::Result<()> {
+        out.clear();
+        if len == 0 {
+            return Ok(());
+        }
+        let mut guard = self.state.lock().unwrap();
+        let st = &mut *guard;
+        let end = start.saturating_add(len as u64);
+        if self.fill_gaps(st, start, end)? {
+            // keep complete shards durable: a crash between manifest saves
+            // must never lose a flushed shard to a stale manifest
+            self.persist_locked(st)?;
+        }
+        // serve phase: everything in [start, end) is now covered (positions
+        // past u64::MAX excepted — they decode empty like the plain reader)
+        let mut off = 0usize;
+        while off < len {
+            let Some(pos) = start.checked_add(off as u64) else {
+                out.push_empty();
+                off += 1;
+                continue;
+            };
+            let shard_id = pos / self.pps as u64;
+            let local = (pos % self.pps as u64) as usize;
+            if let Some(rec) = st.pending.get(&shard_id).and_then(|p| p.records[local].as_ref())
+            {
+                out.ids.extend_from_slice(&rec.0);
+                quant::decode_into(&rec.1, self.codec, &mut out.probs);
+                out.end_position();
+                off += 1;
+                continue;
+            }
+            if !st.coverage.contains(pos) {
+                out.push_empty();
+                off += 1;
+                continue;
+            }
+            // contiguous disk run: covered positions not resident in any
+            // assembly buffer live in flushed shards
+            let mut run_len = 1usize;
+            while off + run_len < len {
+                let Some(q) = pos.checked_add(run_len as u64) else { break };
+                let in_pending = st
+                    .pending
+                    .get(&(q / self.pps as u64))
+                    .map(|p| p.records[(q % self.pps as u64) as usize].is_some())
+                    .unwrap_or(false);
+                if in_pending || !st.coverage.contains(q) {
+                    break;
+                }
+                run_len += 1;
+            }
+            let reader = self.ensure_reader(st)?;
+            reader.read_range_into(pos, run_len, &mut st.disk_block)?;
+            for i in 0..run_len {
+                let (ids, probs) = st.disk_block.get(i);
+                out.ids.extend_from_slice(ids);
+                out.probs.extend_from_slice(probs);
+                out.end_position();
+            }
+            off += run_len;
+        }
+        Ok(())
+    }
+
+    fn cache_kind(&self) -> Result<CacheKind, SpecError> {
+        let rounds = match self.codec {
+            ProbCodec::Count { rounds } => rounds,
+            _ => 0,
+        };
+        CacheKind::of_manifest(self.kind.as_deref(), rounds)
+    }
+
+    fn positions(&self) -> u64 {
+        self.origin.positions()
+    }
+}
+
+impl<O: TargetSource> Drop for WriteThrough<O> {
+    fn drop(&mut self) {
+        if let Ok(mut st) = self.state.lock() {
+            if st.dirty {
+                let _ = self.persist_locked(&mut st);
+            }
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cache::format::{CacheManifest, SparseTarget};
+    use crate::cache::writer::CacheWriter;
+
+    #[test]
+    fn coverage_insert_merges_and_queries() {
+        let mut c = Coverage::new();
+        assert!(c.is_empty());
+        c.insert(10, 20);
+        c.insert(30, 40);
+        assert_eq!(c.ranges(), &[(10, 20), (30, 40)]);
+        c.insert(20, 25); // adjacent: merges left
+        assert_eq!(c.ranges(), &[(10, 25), (30, 40)]);
+        c.insert(24, 31); // bridges both
+        assert_eq!(c.ranges(), &[(10, 40)]);
+        c.insert(5, 5); // empty: no-op
+        assert_eq!(c.count(), 30);
+        assert!(c.contains(10) && c.contains(39) && !c.contains(40) && !c.contains(9));
+        assert!(c.covers(15, 35));
+        assert!(!c.covers(5, 15));
+        assert!(c.covers(7, 7), "empty ranges are trivially covered");
+    }
+
+    #[test]
+    fn coverage_gaps_within() {
+        let mut c = Coverage::new();
+        c.insert(10, 20);
+        c.insert(30, 40);
+        assert_eq!(c.gaps_within(0, 50), vec![(0, 10), (20, 30), (40, 50)]);
+        assert_eq!(c.gaps_within(12, 18), vec![]);
+        assert_eq!(c.gaps_within(15, 35), vec![(20, 30)]);
+        assert_eq!(c.gaps_within(40, 45), vec![(40, 45)]);
+        assert_eq!(Coverage::new().gaps_within(3, 7), vec![(3, 7)]);
+        assert_eq!(c.gaps_within(7, 7), vec![]);
+    }
+
+    fn tdir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("rskd-tier-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        dir
+    }
+
+    /// Deterministic position-keyed origin for tier tests: target at `pos`
+    /// depends only on `pos`, like every real origin must.
+    struct KeyedOrigin {
+        positions: u64,
+        computes: AtomicU64,
+    }
+
+    impl KeyedOrigin {
+        fn target_at(pos: u64) -> SparseTarget {
+            SparseTarget {
+                ids: vec![pos as u32 % 101, 200 + pos as u32 % 7],
+                probs: vec![32.0 / 50.0, 18.0 / 50.0],
+            }
+        }
+    }
+
+    impl TargetSource for KeyedOrigin {
+        fn read_range_into(
+            &self,
+            start: u64,
+            len: usize,
+            out: &mut RangeBlock,
+        ) -> std::io::Result<()> {
+            self.computes.fetch_add(1, Ordering::Relaxed);
+            out.clear();
+            for off in 0..len as u64 {
+                let pos = start + off;
+                if pos < self.positions {
+                    out.push_target(&Self::target_at(pos));
+                } else {
+                    out.push_empty();
+                }
+            }
+            Ok(())
+        }
+
+        fn cache_kind(&self) -> Result<CacheKind, SpecError> {
+            Ok(CacheKind::Rs { rounds: 50, temp: 1.0 })
+        }
+
+        fn positions(&self) -> u64 {
+            self.positions
+        }
+    }
+
+    fn origin(n: u64) -> KeyedOrigin {
+        KeyedOrigin { positions: n, computes: AtomicU64::new(0) }
+    }
+
+    const CODEC: ProbCodec = ProbCodec::Count { rounds: 50 };
+
+    #[test]
+    fn write_through_cold_fill_then_warm_serves_without_origin() {
+        let dir = tdir("wt-cold");
+        {
+            let wt =
+                WriteThrough::open(origin(64), &dir, CODEC, 16, Some("rs:rounds=50,temp=1".into()))
+                    .unwrap();
+            let mut blk = RangeBlock::new();
+            // cold pass backfills; answers must equal an encode/decode
+            // roundtrip of the origin targets
+            wt.read_range_into(0, 40, &mut blk).unwrap();
+            assert_eq!(blk.len(), 40);
+            for i in 0..40 {
+                let t = KeyedOrigin::target_at(i as u64);
+                let (enc_ids, codes) = quant::encode(&t.ids, &t.probs, CODEC);
+                let (ids, probs) = blk.get(i);
+                assert_eq!(ids, enc_ids.as_slice());
+                assert_eq!(probs, quant::decode(&codes, CODEC).as_slice());
+            }
+            let c = wt.counters();
+            assert_eq!((c.hits, c.misses), (0, 1));
+            assert_eq!(c.backfilled, 40);
+            assert!(c.origin_computes >= 1);
+            // warm pass: same range, no origin work
+            let before = wt.origin().computes.load(Ordering::Relaxed);
+            let mut warm = RangeBlock::new();
+            wt.read_range_into(0, 40, &mut warm).unwrap();
+            assert_eq!(wt.origin().computes.load(Ordering::Relaxed), before);
+            assert_eq!(warm, blk, "warm answer must be bit-identical to the cold one");
+            let c = wt.counters();
+            assert_eq!((c.hits, c.misses), (1, 1));
+            wt.checkpoint().unwrap();
+        }
+        // complete shards [0,32) flushed eagerly; checkpoint persisted the
+        // partial [32,40) with coverage — the directory reopens fully warm
+        let m = CacheManifest::load(&dir).unwrap();
+        assert_eq!(m.positions, 40);
+        let wt = WriteThrough::open(origin(64), &dir, CODEC, 16, None).unwrap();
+        let mut blk = RangeBlock::new();
+        wt.read_range_into(0, 40, &mut blk).unwrap();
+        let c = wt.counters();
+        assert_eq!(c.origin_computes, 0, "a reopened covered cache must not recompute");
+        assert_eq!(wt.origin().computes.load(Ordering::Relaxed), 0);
+        for i in 0..40 {
+            let t = KeyedOrigin::target_at(i as u64);
+            let (enc_ids, codes) = quant::encode(&t.ids, &t.probs, CODEC);
+            let (ids, probs) = blk.get(i);
+            assert_eq!(ids, enc_ids.as_slice(), "pos {i}");
+            assert_eq!(probs, quant::decode(&codes, CODEC).as_slice(), "pos {i}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_through_matches_prebuilt_cache_bit_for_bit() {
+        // a cold write-through fill must serve the same bytes a full
+        // `CacheWriter` build of the same origin serves (determinism across
+        // tiers — the acceptance criterion, minus the engine)
+        let pre = tdir("wt-prebuilt");
+        let w = CacheWriter::create(&pre, CODEC, 16, 8).unwrap();
+        for pos in 0..48u64 {
+            assert!(w.push(pos, KeyedOrigin::target_at(pos)));
+        }
+        w.finish().unwrap();
+        let direct = CacheReader::open(&pre).unwrap();
+
+        let dir = tdir("wt-cold-eq");
+        let wt = WriteThrough::open(origin(48), &dir, CODEC, 16, None).unwrap();
+        let (mut a, mut b) = (RangeBlock::new(), RangeBlock::new());
+        for (start, len) in [(0u64, 16usize), (5, 30), (40, 16), (0, 48)] {
+            direct.read_range_into(start, len, &mut a).unwrap();
+            wt.read_range_into(start, len, &mut b).unwrap();
+            assert_eq!(a, b, "start {start} len {len}");
+        }
+        let _ = std::fs::remove_dir_all(&pre);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn write_through_align_expands_compute_windows() {
+        let dir = tdir("wt-align");
+        let wt = WriteThrough::open(origin(64), &dir, CODEC, 16, None).unwrap().with_align(16);
+        let mut blk = RangeBlock::new();
+        // a 4-position request computes the whole aligned 16-row once…
+        wt.read_range_into(20, 4, &mut blk).unwrap();
+        assert_eq!(wt.counters().backfilled, 16);
+        // …so the neighbouring request is already covered
+        wt.read_range_into(16, 4, &mut blk).unwrap();
+        let c = wt.counters();
+        assert_eq!(c.origin_computes, 1);
+        assert_eq!((c.hits, c.misses), (1, 1));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn memory_tier_hits_and_evicts() {
+        let dir = tdir("mem");
+        let w = CacheWriter::create(&dir, CODEC, 16, 8).unwrap();
+        for pos in 0..64u64 {
+            assert!(w.push(pos, KeyedOrigin::target_at(pos)));
+        }
+        w.finish().unwrap();
+        let reader = CacheReader::open(&dir).unwrap();
+        let mem = MemoryTier::with_capacity(&reader, 2);
+        let (mut a, mut b) = (RangeBlock::new(), RangeBlock::new());
+        mem.read_range_into(0, 16, &mut a).unwrap();
+        mem.read_range_into(0, 16, &mut b).unwrap();
+        assert_eq!(a, b);
+        assert_eq!(mem.counters(), (1, 1));
+        // a different len is a different key, even at the same start
+        mem.read_range_into(0, 8, &mut b).unwrap();
+        assert_eq!(mem.counters(), (1, 2));
+        // capacity 2: a third distinct range evicts the LRU (0, 16)
+        mem.read_range_into(32, 16, &mut b).unwrap();
+        assert_eq!(mem.resident(), 2);
+        mem.read_range_into(0, 16, &mut b).unwrap();
+        assert_eq!(mem.counters().1, 4, "evicted range must re-read");
+        assert_eq!(a, b, "re-read content identical");
+        // steady-state hit must not regrow the caller's buffers
+        mem.read_range_into(0, 16, &mut b).unwrap();
+        let caps = (b.ids.capacity(), b.probs.capacity(), b.offsets.capacity());
+        mem.read_range_into(0, 16, &mut b).unwrap();
+        assert_eq!(caps, (b.ids.capacity(), b.probs.capacity(), b.offsets.capacity()));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn untagged_reopen_preserves_kind_and_skips_clean_checkpoints() {
+        let dir = tdir("wt-kindkeep");
+        {
+            let wt = WriteThrough::open(
+                origin(32),
+                &dir,
+                CODEC,
+                16,
+                Some("rs:rounds=50,temp=1".into()),
+            )
+            .unwrap();
+            let mut blk = RangeBlock::new();
+            wt.read_range_into(0, 8, &mut blk).unwrap(); // partial shard only
+            wt.checkpoint().unwrap();
+        }
+        // reopening untagged and checkpointing must not erase the tag
+        {
+            let wt = WriteThrough::open(origin(32), &dir, CODEC, 16, None).unwrap();
+            assert_eq!(wt.kind_tag(), Some("rs:rounds=50,temp=1"));
+            let mut blk = RangeBlock::new();
+            wt.read_range_into(0, 8, &mut blk).unwrap(); // fully warm: clean
+            let before = std::fs::metadata(dir.join("index.json")).unwrap().modified().unwrap();
+            wt.checkpoint().unwrap(); // clean checkpoint: no rewrite
+            let after = std::fs::metadata(dir.join("index.json")).unwrap().modified().unwrap();
+            assert_eq!(before, after, "a clean checkpoint must not rewrite the manifest");
+        }
+        assert_eq!(
+            CacheManifest::load(&dir).unwrap().kind.as_deref(),
+            Some("rs:rounds=50,temp=1")
+        );
+        // conflicting kinds are refused outright
+        assert!(WriteThrough::open(origin(32), &dir, CODEC, 16, Some("topk".into())).is_err());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn stacked_tiers_preserve_kind_and_positions() {
+        let dir = tdir("stack-meta");
+        let wt = WriteThrough::open(origin(32), &dir, CODEC, 16, Some("rs:rounds=50,temp=1".into()))
+            .unwrap();
+        let mem = MemoryTier::new(&wt);
+        assert_eq!(mem.cache_kind().unwrap(), CacheKind::Rs { rounds: 50, temp: 1.0 });
+        assert_eq!(mem.positions(), 32);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

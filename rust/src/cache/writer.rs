@@ -1,13 +1,14 @@
-//! Async, out-of-order cache writer (paper Appendix D.2, extended for
-//! parallel teacher producers).
+//! Async, out-of-order, *resumable* cache writer (paper Appendix D.2,
+//! extended for parallel teacher producers and interrupted builds).
 //!
 //! Producer threads must never block on disk, so targets flow through a
-//! bounded ring buffer to a dedicated writer thread. Unlike the v1 writer,
-//! which asserted strictly stream-ordered positions (forcing a single
-//! producer), the v2 writer is *range-keyed*: position space is statically
-//! partitioned into `positions_per_shard`-sized shards, each pushed target is
-//! routed to its owning shard's assembly buffer, and a shard is flushed to
-//! disk the moment its range completes — regardless of arrival order.
+//! bounded ring buffer ([`RingBuffer`], re-exported from `util::sync`) to a
+//! dedicated writer thread. Unlike the v1 writer, which asserted strictly
+//! stream-ordered positions (forcing a single producer), the v2 writer is
+//! *range-keyed*: position space is statically partitioned into
+//! `positions_per_shard`-sized shards, each pushed target is routed to its
+//! owning shard's assembly buffer, and a shard is flushed to disk the moment
+//! its range completes — regardless of arrival order.
 //!
 //! Producer contract:
 //! * `push(pos, target)` is thread-safe (`&self`) and may be called from any
@@ -22,106 +23,381 @@
 //!   a shard's highest filled slot, and are simply out of range otherwise —
 //!   matching the reader's "missing position => empty target" semantics.
 //!
+//! # Resumable builds
+//!
+//! [`CacheWriter::resume`] reopens a partially-built directory instead of
+//! starting from token zero. Complete shards (their files were flushed the
+//! moment their range filled) are adopted as-is; partially-covered shards
+//! recorded by a manifest coverage entry (`ShardMeta::covered`) are decoded
+//! back into in-flight assembly buffers; a directory whose build was killed
+//! before `finish` (shard files but no `index.json`) is recovered by
+//! scanning shard headers. The returned [`Coverage`] tells the driver which
+//! position ranges are already on disk so it can skip recomputing them —
+//! `coordinator::cachebuild::build_cache` uses exactly this to make builds
+//! resumable, and the write-through tier (`cache::tier`) uses the same
+//! recovery to reopen backfilled caches. A resumed build finishing over the
+//! same positions produces a byte-identical directory to a one-shot build
+//! (directory totals are recomputed from the manifest, not accumulated
+//! across sessions).
+//!
 //! Memory stays bounded as long as producers are *roughly* range-local: only
 //! incomplete shards are buffered, and every complete shard leaves memory
 //! immediately.
 
-use std::collections::{HashMap, HashSet, VecDeque};
+use std::collections::{HashMap, HashSet};
 use std::path::{Path, PathBuf};
-use std::sync::{Arc, Condvar, Mutex};
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::Arc;
 use std::thread::JoinHandle;
 
-use crate::cache::format::{CacheManifest, Shard, ShardMeta, SparseTarget, FORMAT_VERSION};
+use crate::cache::format::{
+    CacheManifest, Shard, ShardMeta, SparseTarget, FLAG_FULLY_COVERED, FORMAT_VERSION,
+    HEADER_BYTES,
+};
 use crate::cache::quant::{self, ProbCodec};
+use crate::cache::tier::Coverage;
 
-/// Bounded MPMC ring buffer (Mutex + Condvar; crossbeam not needed at our
-/// throughput). `push` blocks when full — that *is* the backpressure the
-/// paper's shared-memory ring buffers provide.
-pub struct RingBuffer<T> {
-    inner: Mutex<RingInner<T>>,
-    not_full: Condvar,
-    not_empty: Condvar,
-    cap: usize,
+pub use crate::util::sync::RingBuffer;
+
+/// One position's encoded record: `(ids, codes)` as produced by
+/// [`quant::encode`].
+pub(crate) type EncodedRecord = (Vec<u32>, Vec<u8>);
+
+/// Assembly buffer for one in-flight shard. `records[i].is_some()` doubles
+/// as the shard's coverage bitmap: a pushed-but-empty target encodes to
+/// `Some((vec![], vec![]))`, which is distinct from a never-pushed `None`.
+pub(crate) struct Pending {
+    /// slot-indexed encoded records; `None` = not yet pushed
+    pub(crate) records: Vec<Option<EncodedRecord>>,
+    pub(crate) filled: usize,
+    /// highest filled slot index (bounds the trailing partial shard)
+    pub(crate) hi: usize,
 }
 
-struct RingInner<T> {
-    queue: VecDeque<T>,
-    closed: bool,
+impl Pending {
+    pub(crate) fn empty(pps: usize) -> Pending {
+        Pending { records: vec![None; pps], filled: 0, hi: 0 }
+    }
+
+    /// Flush this buffer as a *partial* shard (count = highest filled slot
+    /// + 1, never-filled interior slots as gap records, exact coverage
+    /// ranges in the meta), keeping the buffer intact — the single
+    /// Pending→disk transformation shared by `finish`'s trailing flush and
+    /// the write-through tier's checkpoints.
+    pub(crate) fn flush_partial(
+        &self,
+        dir: &Path,
+        shard_id: u64,
+        codec: ProbCodec,
+        pps: usize,
+    ) -> std::io::Result<ShardMeta> {
+        let start = shard_id * pps as u64;
+        let count = self.hi + 1;
+        let covered = covered_ranges_of(start, &self.records, count);
+        let records: Vec<EncodedRecord> =
+            self.records[..count].iter().map(|r| r.clone().unwrap_or_default()).collect();
+        flush_shard_records(dir, shard_id, codec, start, records, covered)
+    }
+
+    /// Flush this buffer as a *complete* shard (every slot filled),
+    /// consuming it.
+    pub(crate) fn flush_complete(
+        self,
+        dir: &Path,
+        shard_id: u64,
+        codec: ProbCodec,
+        pps: usize,
+    ) -> std::io::Result<ShardMeta> {
+        debug_assert_eq!(self.filled, pps, "complete flush requires a full buffer");
+        let records: Vec<EncodedRecord> =
+            self.records.into_iter().map(|r| r.unwrap_or_default()).collect();
+        flush_shard_records(dir, shard_id, codec, shard_id * pps as u64, records, None)
+    }
 }
 
-impl<T> RingBuffer<T> {
-    pub fn new(cap: usize) -> Arc<RingBuffer<T>> {
-        Arc::new(RingBuffer {
-            inner: Mutex::new(RingInner { queue: VecDeque::with_capacity(cap), closed: false }),
-            not_full: Condvar::new(),
-            not_empty: Condvar::new(),
-            cap,
-        })
-    }
+/// Canonical shard filename for a shard id.
+pub(crate) fn shard_file_name(shard_id: u64) -> String {
+    format!("shard-{shard_id:08}.slc")
+}
 
-    /// Blocking push; returns false if the buffer is closed.
-    pub fn push(&self, item: T) -> bool {
-        let mut g = self.inner.lock().unwrap();
-        while g.queue.len() >= self.cap && !g.closed {
-            g = self.not_full.wait(g).unwrap();
-        }
-        if g.closed {
-            return false;
-        }
-        g.queue.push_back(item);
-        self.not_empty.notify_one();
-        true
-    }
+/// Write one shard's records to its canonical file, returning the manifest
+/// entry. `covered` is recorded verbatim (None = the full range is
+/// covered), and doubles as the header flag: a fully-covered shard is
+/// marked [`FLAG_FULLY_COVERED`] so manifest-less crash recovery can trust
+/// it (a file with gap records is indistinguishable from real empties
+/// without its manifest ranges, so it carries no flag and is recomputed).
+pub(crate) fn flush_shard_records(
+    dir: &Path,
+    shard_id: u64,
+    codec: ProbCodec,
+    start: u64,
+    records: Vec<EncodedRecord>,
+    covered: Option<Vec<(u64, u64)>>,
+) -> std::io::Result<ShardMeta> {
+    let count = records.len();
+    let flags = if covered.is_none() { FLAG_FULLY_COVERED } else { 0 };
+    let shard = Shard { codec, start, records };
+    let file = shard_file_name(shard_id);
+    let mut f = std::io::BufWriter::new(std::fs::File::create(dir.join(&file))?);
+    shard.write_to_flagged(&mut f, flags)?;
+    use std::io::Write;
+    f.flush()?;
+    Ok(ShardMeta {
+        file,
+        start,
+        count: count as u64,
+        bytes: shard.byte_size() as u64,
+        covered,
+    })
+}
 
-    /// Non-blocking push for admission-control callers (the serving layer's
-    /// bounded work queues): hands the item back instead of parking when the
-    /// buffer is full or closed, so the caller can reject the request with a
-    /// typed overload error rather than queue unboundedly.
-    pub fn try_push(&self, item: T) -> Result<(), T> {
-        let mut g = self.inner.lock().unwrap();
-        if g.closed || g.queue.len() >= self.cap {
-            return Err(item);
-        }
-        g.queue.push_back(item);
-        self.not_empty.notify_one();
-        Ok(())
+/// Coverage ranges of a pending shard's first `count` slots, as the manifest
+/// records them: `None` when every slot is filled (the common complete /
+/// gap-free case), else the sorted absolute `[lo, hi)` runs of filled slots.
+pub(crate) fn covered_ranges_of(
+    start: u64,
+    records: &[Option<EncodedRecord>],
+    count: usize,
+) -> Option<Vec<(u64, u64)>> {
+    if records[..count].iter().all(|r| r.is_some()) {
+        return None;
     }
-
-    /// Blocking pop; None once closed and drained.
-    pub fn pop(&self) -> Option<T> {
-        let mut g = self.inner.lock().unwrap();
-        loop {
-            if let Some(x) = g.queue.pop_front() {
-                self.not_full.notify_one();
-                return Some(x);
+    let mut ranges: Vec<(u64, u64)> = Vec::new();
+    for (i, r) in records[..count].iter().enumerate() {
+        if r.is_some() {
+            let pos = start + i as u64;
+            match ranges.last_mut() {
+                Some(last) if last.1 == pos => last.1 = pos + 1,
+                _ => ranges.push((pos, pos + 1)),
             }
-            if g.closed {
-                return None;
-            }
-            g = self.not_empty.wait(g).unwrap();
         }
     }
+    Some(ranges)
+}
 
-    pub fn close(&self) {
-        let mut g = self.inner.lock().unwrap();
-        g.closed = true;
-        self.not_empty.notify_all();
-        self.not_full.notify_all();
+/// Assemble the directory manifest from flushed shard entries, recomputing
+/// the totals from the entries themselves — deterministic no matter how many
+/// build sessions produced them (the resumable-build byte-identity
+/// contract).
+pub(crate) fn manifest_of(
+    codec: ProbCodec,
+    kind: Option<String>,
+    mut entries: Vec<ShardMeta>,
+) -> CacheManifest {
+    entries.sort_by_key(|s| s.start);
+    CacheManifest {
+        version: FORMAT_VERSION,
+        codec,
+        kind,
+        positions: entries.iter().map(|e| e.covered_positions()).sum(),
+        slots: entries.iter().map(|e| e.slots()).sum(),
+        bytes: entries.iter().map(|e| e.bytes).sum(),
+        shards: entries,
     }
+}
 
-    pub fn len(&self) -> usize {
-        self.inner.lock().unwrap().queue.len()
-    }
+fn bad_data(msg: String) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::InvalidData, msg)
+}
 
-    pub fn is_empty(&self) -> bool {
-        self.len() == 0
+/// Writer state recovered from a partially-built cache directory.
+pub(crate) struct Recovered {
+    /// complete shards adopted as flushed (their files are immutable)
+    pub(crate) entries: Vec<ShardMeta>,
+    /// partially-covered shards reloaded into assembly buffers
+    pub(crate) pending: HashMap<u64, Pending>,
+    /// every position already on disk or in a reloaded buffer
+    pub(crate) coverage: Coverage,
+    /// the kind tag already recorded in the directory's manifest, if any —
+    /// callers that pass no kind of their own must adopt it rather than
+    /// erase it on the next manifest save
+    pub(crate) kind: Option<String>,
+}
+
+impl Recovered {
+    fn empty() -> Recovered {
+        Recovered {
+            entries: Vec::new(),
+            pending: HashMap::new(),
+            coverage: Coverage::new(),
+            kind: None,
+        }
     }
+}
+
+/// Merge a caller-supplied kind tag with the one recovered from the
+/// directory: the caller's wins when both agree or the directory is
+/// untagged; a genuine conflict is refused (continuing would record targets
+/// of one kind under the other's tag).
+pub(crate) fn merge_kind(
+    dir: &Path,
+    caller: Option<String>,
+    recovered: Option<String>,
+) -> std::io::Result<Option<String>> {
+    match (caller, recovered) {
+        (Some(c), Some(r)) if c != r => Err(bad_data(format!(
+            "cache {} holds kind `{r}` but the writer was opened for `{c}` — refusing \
+             to mix target kinds in one directory",
+            dir.display()
+        ))),
+        (Some(c), _) => Ok(Some(c)),
+        (None, r) => Ok(r),
+    }
+}
+
+/// Recover writer state from `dir`:
+///
+/// * no directory / no shard files — a fresh build;
+/// * `index.json` present — adopt complete shards, reload partially-covered
+///   shards (per their `covered` ranges) into assembly buffers. Any shard
+///   with `count < positions_per_shard` is reloaded as pending so later
+///   sessions can extend it;
+/// * shard files but no manifest (build killed before `finish`) — scan each
+///   file's header; every found shard was flushed because its range
+///   completed, so it is adopted as fully covered.
+pub(crate) fn recover_dir(
+    dir: &Path,
+    codec: ProbCodec,
+    pps: usize,
+) -> std::io::Result<Recovered> {
+    use crate::cache::format::INDEX_FILE;
+    if !dir.exists() {
+        return Ok(Recovered::empty());
+    }
+    let mut rec = Recovered::empty();
+    let metas: Vec<ShardMeta> = if dir.join(INDEX_FILE).exists() {
+        let m = CacheManifest::load(dir)?;
+        if m.codec != codec {
+            return Err(bad_data(format!(
+                "cannot resume {}: existing cache uses codec {:?}, build wants {codec:?}",
+                dir.display(),
+                m.codec
+            )));
+        }
+        rec.kind = m.kind;
+        m.shards
+    } else {
+        // crash recovery: scan shard headers. Partials are normally flushed
+        // together with a manifest (finish/checkpoint), but a crash can land
+        // *between* the partial-file write and the manifest save — and a
+        // partial file without its manifest `covered` ranges cannot
+        // distinguish never-computed gap records from pushed-empty targets.
+        // Only complete shards (count == pps; every slot was pushed) are
+        // trustworthy without a manifest, so anything shorter is discarded
+        // and recomputed rather than silently adopted as covered.
+        let mut paths: Vec<PathBuf> = std::fs::read_dir(dir)?
+            .filter_map(|e| e.ok())
+            .map(|e| e.path())
+            .filter(|p| p.extension().map(|x| x == "slc").unwrap_or(false))
+            .collect();
+        paths.sort();
+        let mut metas = Vec::with_capacity(paths.len());
+        for p in paths {
+            let bytes = std::fs::metadata(&p)?.len();
+            // a kill can tear a file anywhere (half a header, half a record
+            // body): adopt a shard only if it parses end to end; anything
+            // else — torn, pre-flag, unmanifested partial — is discarded
+            // and recomputed. Full parses here are fine: resume is a cold
+            // path and adopted shards get read during serving anyway.
+            let parsed = std::fs::File::open(&p)
+                .map(std::io::BufReader::new)
+                .and_then(|mut f| Shard::read_from(&mut f));
+            let Ok(shard) = parsed else { continue };
+            let mut f = std::io::BufReader::new(std::fs::File::open(&p)?);
+            let hdr = crate::cache::format::read_header(&mut f)?;
+            if hdr.codec != codec {
+                // same refusal the manifest path gives: this directory
+                // belongs to a different build, resuming over it is an error
+                return Err(bad_data(format!(
+                    "cannot resume {}: shard {} uses codec {:?}, build wants {codec:?}",
+                    dir.display(),
+                    p.display(),
+                    hdr.codec
+                )));
+            }
+            if hdr.count < pps as u64
+                || hdr.flags & FLAG_FULLY_COVERED == 0
+                || shard.records.len() as u64 != hdr.count
+                || bytes != shard.byte_size() as u64
+            {
+                continue;
+            }
+            let file = p
+                .file_name()
+                .and_then(|n| n.to_str())
+                .ok_or_else(|| bad_data("non-utf8 shard filename".into()))?
+                .to_string();
+            metas.push(ShardMeta {
+                file,
+                start: hdr.start,
+                count: hdr.count,
+                bytes,
+                covered: None,
+            });
+        }
+        metas
+    };
+    for meta in metas {
+        if meta.start % pps as u64 != 0 || meta.count > pps as u64 {
+            return Err(bad_data(format!(
+                "cannot resume {}: shard {} spans [{}, +{}) which does not fit the \
+                 positions_per_shard={pps} partition",
+                dir.display(),
+                meta.file,
+                meta.start,
+                meta.count
+            )));
+        }
+        let complete = meta.count == pps as u64 && meta.covered.is_none();
+        match &meta.covered {
+            None => rec.coverage.insert(meta.start, meta.start + meta.count),
+            Some(ranges) => {
+                for &(lo, hi) in ranges {
+                    rec.coverage.insert(lo, hi);
+                }
+            }
+        }
+        if complete {
+            rec.entries.push(meta);
+            continue;
+        }
+        // partially-covered shard: reload its records into an assembly
+        // buffer so this session can extend and re-flush it
+        let mut f = std::io::BufReader::new(std::fs::File::open(dir.join(&meta.file))?);
+        let shard = Shard::read_from(&mut f)?;
+        if (shard.records.len() as u64) < meta.count {
+            return Err(bad_data(format!(
+                "cannot resume: {} holds {} records but the manifest declares {}",
+                meta.file,
+                shard.records.len(),
+                meta.count
+            )));
+        }
+        let mut pending = Pending::empty(pps);
+        let filled = |local: u64| match &meta.covered {
+            None => local < meta.count,
+            Some(ranges) => {
+                let pos = meta.start + local;
+                ranges.iter().any(|&(lo, hi)| pos >= lo && pos < hi)
+            }
+        };
+        for (i, record) in shard.records.into_iter().enumerate().take(meta.count as usize) {
+            if filled(i as u64) {
+                pending.records[i] = Some(record);
+                pending.filled += 1;
+                pending.hi = pending.hi.max(i);
+            }
+        }
+        rec.pending.insert(meta.start / pps as u64, pending);
+    }
+    Ok(rec)
 }
 
 /// Range-keyed async writer: accepts `(position, target)` pushes from N
 /// concurrent producers in any order and assembles them into v2 shards.
 pub struct CacheWriter {
     ring: Arc<RingBuffer<(u64, SparseTarget)>>,
+    abort: Arc<AtomicBool>,
     handle: Option<JoinHandle<std::io::Result<CacheStats>>>,
 }
 
@@ -133,13 +409,15 @@ pub struct CacheStats {
     pub shards: u32,
 }
 
-/// Assembly buffer for one in-flight shard.
-struct Pending {
-    /// slot-indexed encoded records; `None` = not yet pushed
-    records: Vec<Option<(Vec<u32>, Vec<u8>)>>,
-    filled: usize,
-    /// highest filled slot index (bounds the trailing partial shard)
-    hi: usize,
+impl CacheStats {
+    fn of_entries(entries: &[ShardMeta]) -> CacheStats {
+        CacheStats {
+            positions: entries.iter().map(|e| e.covered_positions()).sum(),
+            slots: entries.iter().map(|e| e.slots()).sum(),
+            bytes: entries.iter().map(|e| e.bytes).sum(),
+            shards: entries.len() as u32,
+        }
+    }
 }
 
 impl CacheWriter {
@@ -165,21 +443,54 @@ impl CacheWriter {
         ring_cap: usize,
         kind: Option<String>,
     ) -> std::io::Result<CacheWriter> {
+        CacheWriter::start(dir, codec, positions_per_shard, ring_cap, kind, Recovered::empty())
+    }
+
+    /// Reopen a partially-built cache directory for more writes, returning
+    /// the writer plus the [`Coverage`] of everything already present —
+    /// drivers skip covered ranges instead of recomputing them (resumable
+    /// builds). On a fresh/missing directory this is identical to
+    /// [`CacheWriter::create_with_kind`] with an empty coverage.
+    pub fn resume(
+        dir: &Path,
+        codec: ProbCodec,
+        positions_per_shard: usize,
+        ring_cap: usize,
+        kind: Option<String>,
+    ) -> std::io::Result<(CacheWriter, Coverage)> {
+        let recovered = recover_dir(dir, codec, positions_per_shard)?;
+        // never erase an existing kind tag by resuming untagged
+        let kind = merge_kind(dir, kind, recovered.kind.clone())?;
+        let coverage = recovered.coverage.clone();
+        let w = CacheWriter::start(dir, codec, positions_per_shard, ring_cap, kind, recovered)?;
+        Ok((w, coverage))
+    }
+
+    fn start(
+        dir: &Path,
+        codec: ProbCodec,
+        positions_per_shard: usize,
+        ring_cap: usize,
+        kind: Option<String>,
+        recovered: Recovered,
+    ) -> std::io::Result<CacheWriter> {
         assert!(positions_per_shard > 0, "positions_per_shard must be positive");
         std::fs::create_dir_all(dir)?;
         let ring = RingBuffer::new(ring_cap);
         let ring2 = Arc::clone(&ring);
+        let abort = Arc::new(AtomicBool::new(false));
+        let abort2 = Arc::clone(&abort);
         let dir: PathBuf = dir.to_path_buf();
         let pps = positions_per_shard;
         let handle = std::thread::spawn(move || -> std::io::Result<CacheStats> {
-            let result = write_loop(&ring2, codec, pps, &dir, kind);
+            let result = write_loop(&ring2, codec, pps, &dir, kind, recovered, &abort2);
             // close on *every* exit path: an I/O error must unblock any
             // producer parked on a full ring (push then returns false) so
             // `finish` can report the error instead of deadlocking
             ring2.close();
             result
         });
-        Ok(CacheWriter { ring, handle: Some(handle) })
+        Ok(CacheWriter { ring, abort, handle: Some(handle) })
     }
 
     /// Enqueue one position's target (blocks under backpressure). Safe to
@@ -200,6 +511,19 @@ impl CacheWriter {
         self.ring.close();
         self.handle.take().unwrap().join().expect("writer thread panicked")
     }
+
+    /// Simulate an interruption (test hook for crash-resume coverage): shut
+    /// the writer down *without* flushing trailing partial shards or saving
+    /// the manifest — exactly the on-disk state a killed build leaves behind
+    /// (complete shards only, no `index.json`). Everything still buffered in
+    /// memory is lost, as it would be in a real crash.
+    pub fn abort(mut self) {
+        self.abort.store(true, Ordering::SeqCst);
+        self.ring.close();
+        if let Some(h) = self.handle.take() {
+            let _ = h.join();
+        }
+    }
 }
 
 impl Drop for CacheWriter {
@@ -212,37 +536,26 @@ impl Drop for CacheWriter {
 }
 
 /// Writer-thread body: drain the ring, assemble range-keyed shards, flush
-/// each as it completes, then flush trailing partials and save the manifest.
+/// each as it completes, then flush trailing partials and save the manifest
+/// (totals recomputed from the manifest entries so resumed builds finish
+/// byte-identical to one-shot builds).
 fn write_loop(
     ring: &RingBuffer<(u64, SparseTarget)>,
     codec: ProbCodec,
     pps: usize,
     dir: &Path,
     kind: Option<String>,
+    recovered: Recovered,
+    abort: &AtomicBool,
 ) -> std::io::Result<CacheStats> {
-    let mut stats = CacheStats::default();
-    let mut pending: HashMap<u64, Pending> = HashMap::new();
-    let mut flushed: HashSet<u64> = HashSet::new();
-    let mut manifest = Vec::<ShardMeta>::new();
-    let flush = |shard_id: u64,
-                 p: Pending,
-                 stats: &mut CacheStats,
-                 manifest: &mut Vec<ShardMeta>|
-     -> std::io::Result<()> {
-        let count = p.hi + 1;
-        let records: Vec<(Vec<u32>, Vec<u8>)> =
-            p.records.into_iter().take(count).map(|r| r.unwrap_or_default()).collect();
-        let shard = Shard { codec, start: shard_id * pps as u64, records };
-        let file = format!("shard-{shard_id:08}.slc");
-        let mut f = std::io::BufWriter::new(std::fs::File::create(dir.join(&file))?);
-        shard.write_to(&mut f)?;
-        let bytes = shard.byte_size() as u64;
-        manifest.push(ShardMeta { file, start: shard.start, count: count as u64, bytes });
-        stats.bytes += bytes;
-        stats.shards += 1;
-        Ok(())
-    };
+    let mut pending = recovered.pending;
+    let mut entries = recovered.entries;
+    let mut flushed: HashSet<u64> =
+        entries.iter().map(|e| e.start / pps as u64).collect();
     while let Some((pos, target)) = ring.pop() {
+        if abort.load(Ordering::SeqCst) {
+            break;
+        }
         let shard_id = pos / pps as u64;
         if flushed.contains(&shard_id) {
             // late duplicate for a completed range: flushed shards are
@@ -250,130 +563,42 @@ fn write_loop(
             continue;
         }
         let local = (pos % pps as u64) as usize;
-        let p = pending.entry(shard_id).or_insert_with(|| Pending {
-            records: vec![None; pps],
-            filled: 0,
-            hi: 0,
-        });
+        let p = pending.entry(shard_id).or_insert_with(|| Pending::empty(pps));
         let enc = quant::encode(&target.ids, &target.probs, codec);
-        stats.slots += enc.0.len() as u64;
-        if let Some(old) = p.records[local].replace(enc) {
-            // in-flight duplicate: last write wins, stats stay single-counted
-            stats.slots -= old.0.len() as u64;
-        } else {
+        if p.records[local].replace(enc).is_none() {
+            // in-flight duplicates: last write wins, coverage single-counted
             p.filled += 1;
-            stats.positions += 1;
         }
         p.hi = p.hi.max(local);
         if p.filled == pps {
             let done = pending.remove(&shard_id).unwrap();
             flushed.insert(shard_id);
-            flush(shard_id, done, &mut stats, &mut manifest)?;
+            entries.push(done.flush_complete(dir, shard_id, codec, pps)?);
         }
+    }
+    if abort.load(Ordering::SeqCst) {
+        // interrupted: complete shards are on disk, nothing else — the
+        // state CacheWriter::resume recovers from
+        return Ok(CacheStats::of_entries(&entries));
     }
     // trailing partial shards (ascending for deterministic output)
     let mut rest: Vec<(u64, Pending)> = pending.drain().collect();
     rest.sort_by_key(|(id, _)| *id);
     for (shard_id, p) in rest {
-        if p.filled > 0 {
-            flush(shard_id, p, &mut stats, &mut manifest)?;
+        if p.filled == 0 {
+            continue;
         }
+        entries.push(p.flush_partial(dir, shard_id, codec, pps)?);
     }
-    manifest.sort_by_key(|s| s.start);
-    CacheManifest {
-        version: FORMAT_VERSION,
-        codec,
-        kind,
-        positions: stats.positions,
-        slots: stats.slots,
-        bytes: stats.bytes,
-        shards: manifest,
-    }
-    .save(dir)?;
-    Ok(stats)
+    let manifest = manifest_of(codec, kind, entries);
+    manifest.save(dir)?;
+    Ok(CacheStats::of_entries(&manifest.shards))
 }
 
 #[cfg(test)]
 mod tests {
     use super::*;
     use crate::cache::format::INDEX_FILE;
-
-    #[test]
-    fn ring_fifo_order() {
-        let ring = RingBuffer::new(4);
-        for i in 0..4 {
-            ring.push(i);
-        }
-        ring.close();
-        let got: Vec<i32> = std::iter::from_fn(|| ring.pop()).collect();
-        assert_eq!(got, vec![0, 1, 2, 3]);
-    }
-
-    #[test]
-    fn ring_try_push_rejects_when_full_or_closed() {
-        let ring = RingBuffer::new(2);
-        assert!(ring.try_push(1).is_ok());
-        assert!(ring.try_push(2).is_ok());
-        assert_eq!(ring.try_push(3), Err(3), "full buffer hands the item back");
-        assert_eq!(ring.pop(), Some(1));
-        assert!(ring.try_push(3).is_ok(), "a pop frees a slot");
-        ring.close();
-        assert_eq!(ring.try_push(4), Err(4), "closed buffer rejects");
-    }
-
-    #[test]
-    fn ring_backpressure_blocks_then_drains() {
-        let ring = RingBuffer::new(2);
-        let r2 = Arc::clone(&ring);
-        let producer = std::thread::spawn(move || {
-            for i in 0..100 {
-                assert!(r2.push(i));
-            }
-            r2.close();
-        });
-        let mut got = Vec::new();
-        while let Some(x) = ring.pop() {
-            got.push(x);
-        }
-        producer.join().unwrap();
-        assert_eq!(got, (0..100).collect::<Vec<_>>());
-    }
-
-    #[test]
-    fn ring_concurrent_producers_fifo_per_producer() {
-        let ring: Arc<RingBuffer<(u32, u32)>> = RingBuffer::new(8);
-        let mut handles = Vec::new();
-        for p in 0..4u32 {
-            let r = Arc::clone(&ring);
-            handles.push(std::thread::spawn(move || {
-                for i in 0..50u32 {
-                    r.push((p, i));
-                }
-            }));
-        }
-        let consumer = {
-            let r = Arc::clone(&ring);
-            std::thread::spawn(move || {
-                let mut got = Vec::new();
-                while got.len() < 200 {
-                    if let Some(x) = r.pop() {
-                        got.push(x);
-                    }
-                }
-                got
-            })
-        };
-        for h in handles {
-            h.join().unwrap();
-        }
-        let got = consumer.join().unwrap();
-        ring.close();
-        // per-producer order preserved (FIFO invariant under concurrency)
-        for p in 0..4u32 {
-            let seq: Vec<u32> = got.iter().filter(|(q, _)| *q == p).map(|&(_, i)| i).collect();
-            assert_eq!(seq, (0..50).collect::<Vec<_>>());
-        }
-    }
 
     fn tdir(tag: &str) -> PathBuf {
         let dir = std::env::temp_dir().join(format!("rskd-{tag}-{}", std::process::id()));
@@ -391,6 +616,7 @@ mod tests {
         }
         let stats = w.finish().unwrap();
         assert_eq!(stats.positions, 40);
+        assert_eq!(stats.slots, 120);
         assert_eq!(stats.shards, 3); // 16 + 16 + 8
         assert!(dir.join(INDEX_FILE).exists());
         assert!(dir.join("shard-00000000.slc").exists());
@@ -399,6 +625,8 @@ mod tests {
         assert_eq!(m.shards.len(), 3);
         assert_eq!(m.shards[2].start, 32);
         assert_eq!(m.shards[2].count, 8);
+        // complete and gap-free shards record no coverage ranges
+        assert!(m.shards.iter().all(|s| s.covered.is_none()));
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -456,6 +684,9 @@ mod tests {
         let m = CacheManifest::load(&dir).unwrap();
         assert_eq!(m.shards.len(), 1);
         assert_eq!(m.shards[0].count, 6);
+        // the coverage ranges distinguish the two pushed positions from the
+        // four interior gap records
+        assert_eq!(m.shards[0].covered, Some(vec![(0, 1), (5, 6)]));
         let _ = std::fs::remove_dir_all(&dir);
     }
 
@@ -512,6 +743,199 @@ mod tests {
         }
         assert!(!alive, "pushes must start failing after the writer dies");
         assert!(w.finish().is_err(), "finish must report the flush error");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn target_for(pos: u64) -> SparseTarget {
+        SparseTarget {
+            ids: vec![pos as u32 % 97, 200 + pos as u32 % 3],
+            probs: vec![30.0 / 50.0, 20.0 / 50.0],
+        }
+    }
+
+    #[test]
+    fn abort_leaves_complete_shards_and_no_manifest() {
+        let dir = tdir("writer-abort");
+        let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 8, 16).unwrap();
+        // shard 0 completes; shard 1 is mid-flight when the "crash" hits
+        for pos in 0..12u64 {
+            assert!(w.push(pos, target_for(pos)));
+        }
+        while w.backlog() > 0 {
+            std::thread::yield_now();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        w.abort();
+        assert!(!dir.join(INDEX_FILE).exists(), "abort must not save a manifest");
+        assert!(dir.join("shard-00000000.slc").exists(), "complete shard stays on disk");
+        assert!(!dir.join("shard-00000001.slc").exists(), "partial shard was in RAM only");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_after_abort_is_byte_identical_to_one_shot() {
+        // one-shot reference build
+        let one = tdir("writer-oneshot");
+        let w = CacheWriter::create_with_kind(
+            &one,
+            ProbCodec::Count { rounds: 50 },
+            8,
+            16,
+            Some("rs:rounds=50,temp=1".into()),
+        )
+        .unwrap();
+        for pos in 0..30u64 {
+            assert!(w.push(pos, target_for(pos)));
+        }
+        let stats_one = w.finish().unwrap();
+
+        // interrupted build: crash mid-shard, then resume and complete
+        let two = tdir("writer-resumed");
+        let w = CacheWriter::create_with_kind(
+            &two,
+            ProbCodec::Count { rounds: 50 },
+            8,
+            16,
+            Some("rs:rounds=50,temp=1".into()),
+        )
+        .unwrap();
+        for pos in 0..12u64 {
+            assert!(w.push(pos, target_for(pos)));
+        }
+        while w.backlog() > 0 {
+            std::thread::yield_now();
+        }
+        std::thread::sleep(std::time::Duration::from_millis(50));
+        w.abort();
+        let (w, coverage) = CacheWriter::resume(
+            &two,
+            ProbCodec::Count { rounds: 50 },
+            8,
+            16,
+            Some("rs:rounds=50,temp=1".into()),
+        )
+        .unwrap();
+        assert!(coverage.covers(0, 8), "the flushed complete shard is covered");
+        assert!(!coverage.contains(8), "positions lost in RAM must not be covered");
+        for pos in 0..30u64 {
+            if coverage.contains(pos) {
+                continue; // the resumable-build contract: skip covered work
+            }
+            assert!(w.push(pos, target_for(pos)));
+        }
+        let stats_two = w.finish().unwrap();
+
+        assert_eq!(stats_one.positions, stats_two.positions);
+        assert_eq!(stats_one.slots, stats_two.slots);
+        assert_eq!(stats_one.bytes, stats_two.bytes);
+        assert_eq!(stats_one.shards, stats_two.shards);
+        let mut names: Vec<String> = std::fs::read_dir(&one)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        names.sort();
+        let mut names_two: Vec<String> = std::fs::read_dir(&two)
+            .unwrap()
+            .map(|e| e.unwrap().file_name().into_string().unwrap())
+            .collect();
+        names_two.sort();
+        assert_eq!(names, names_two);
+        for name in &names {
+            let a = std::fs::read(one.join(name)).unwrap();
+            let b = std::fs::read(two.join(name)).unwrap();
+            assert_eq!(a, b, "{name} must be byte-identical across one-shot and resumed");
+        }
+        let _ = std::fs::remove_dir_all(&one);
+        let _ = std::fs::remove_dir_all(&two);
+    }
+
+    #[test]
+    fn resume_reloads_partial_trailing_shard() {
+        // a *finished* cache with a trailing partial shard reopens with that
+        // shard back in an assembly buffer, so it can still be extended
+        let dir = tdir("writer-extend");
+        let w = CacheWriter::create(&dir, ProbCodec::Ratio, 8, 4).unwrap();
+        for pos in 0..10u64 {
+            assert!(w.push(pos, SparseTarget { ids: vec![pos as u32], probs: vec![0.5] }));
+        }
+        w.finish().unwrap();
+        let (w, coverage) =
+            CacheWriter::resume(&dir, ProbCodec::Ratio, 8, 4, None).unwrap();
+        assert!(coverage.covers(0, 10));
+        assert!(!coverage.contains(10));
+        for pos in 10..16u64 {
+            assert!(w.push(pos, SparseTarget { ids: vec![pos as u32], probs: vec![0.5] }));
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.positions, 16);
+        assert_eq!(stats.shards, 2);
+        let m = CacheManifest::load(&dir).unwrap();
+        assert_eq!(m.shards[1].count, 8, "the trailing shard grew to completion");
+        assert!(m.shards[1].covered.is_none());
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_recovery_discards_unmanifested_partial_shards() {
+        let dir = tdir("writer-scan-partial");
+        let w = CacheWriter::create(&dir, ProbCodec::Ratio, 8, 4).unwrap();
+        for pos in 0..12u64 {
+            assert!(w.push(pos, SparseTarget { ids: vec![pos as u32], probs: vec![0.5] }));
+        }
+        w.finish().unwrap(); // shard 0 complete, shard 1 partial (manifested)
+        // simulate a crash window between the partial flush and the manifest
+        // save: the file exists, its coverage record does not
+        std::fs::remove_file(dir.join(INDEX_FILE)).unwrap();
+        let (w, coverage) = CacheWriter::resume(&dir, ProbCodec::Ratio, 8, 4, None).unwrap();
+        assert!(coverage.covers(0, 8), "the complete shard is trustworthy without a manifest");
+        assert!(
+            !coverage.contains(8),
+            "an unmanifested partial must be recomputed, never adopted as covered"
+        );
+        for pos in 8..16u64 {
+            assert!(w.push(pos, SparseTarget { ids: vec![pos as u32], probs: vec![0.5] }));
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.positions, 16);
+        assert_eq!(stats.shards, 2);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_untagged_adopts_recorded_kind_and_rejects_conflicts() {
+        let dir = tdir("writer-kindkeep");
+        let w = CacheWriter::create_with_kind(
+            &dir,
+            ProbCodec::Ratio,
+            8,
+            4,
+            Some("rs:rounds=50,temp=0.8".into()),
+        )
+        .unwrap();
+        assert!(w.push(0, SparseTarget { ids: vec![1], probs: vec![0.5] }));
+        w.finish().unwrap();
+        // resuming without a kind must not erase the recorded tag
+        let (w, _) = CacheWriter::resume(&dir, ProbCodec::Ratio, 8, 4, None).unwrap();
+        assert!(w.push(1, SparseTarget { ids: vec![2], probs: vec![0.5] }));
+        w.finish().unwrap();
+        let m = CacheManifest::load(&dir).unwrap();
+        assert_eq!(m.kind.as_deref(), Some("rs:rounds=50,temp=0.8"));
+        // a *different* kind is a refusal, not an overwrite
+        let err = CacheWriter::resume(&dir, ProbCodec::Ratio, 8, 4, Some("topk".into()))
+            .unwrap_err();
+        assert!(err.to_string().contains("kind"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn resume_rejects_codec_mismatch() {
+        let dir = tdir("writer-codecmix");
+        let w = CacheWriter::create(&dir, ProbCodec::Ratio, 8, 4).unwrap();
+        assert!(w.push(0, SparseTarget { ids: vec![1], probs: vec![0.5] }));
+        w.finish().unwrap();
+        let err =
+            CacheWriter::resume(&dir, ProbCodec::Count { rounds: 50 }, 8, 4, None).unwrap_err();
+        assert!(err.to_string().contains("codec"), "{err}");
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -1,39 +1,75 @@
-//! Cache-building stage: one teacher inference pass over the packed stream,
-//! sparsify every position, quantize, and write shards through the async
-//! ring-buffer writer (paper Figure 1 + Appendix D).
+//! Cache-building stage: drive the target pipeline to *full coverage* of
+//! the packed stream — teacher inference, sparsify every uncovered
+//! position, quantize, and write shards through the async ring-buffer
+//! writer (paper Figure 1 + Appendix D).
 //!
 //! What to build is a [`CacheKind`], derived from a `DistillSpec` via
 //! `cache_plan()` — this module no longer owns a taxonomy of its own. The
 //! kind (and its codec) is recorded in the cache's `index.json`, so readers
 //! can enforce spec/cache compatibility before training starts.
 //!
-//! Sparsification runs on-device via the AOT graphs: `sample_topk`
-//! (jax.lax.top_k) or `sample_rs` (the L1 Pallas importance sampler, fed
-//! rust-generated uniforms so the draw is deterministic in the seed).
+//! The teacher-forward + sampling loop lives in
+//! [`teacher::TeacherSampler`](crate::coordinator::teacher::TeacherSampler)
+//! (shared with the on-demand `TeacherSource`); randomness is
+//! position-keyed, so a build produces the same draws no matter how it is
+//! split across sessions. Builds are **resumable**: the writer reopens via
+//! [`CacheWriter::resume`], and batches whose rows are already covered are
+//! skipped outright — an interrupted build continues from where its last
+//! complete shard left off and finishes byte-identical to a one-shot build
+//! (pinned by `rust/tests/cache_tiering.rs`).
 //!
-//! Host-side post-processing (slot merge + quantize + encode) runs on a small
-//! worker pool: the teacher thread only copies each output row into a job
-//! queue, workers push finished targets straight into the out-of-order
-//! [`CacheWriter`], which reassembles them by position range. The cache
-//! content is identical to a serial build — targets are position-keyed, and
-//! all randomness is drawn on the teacher thread in stream order.
+//! Host-side post-processing (slot merge + quantize + encode) runs on a
+//! worker pool sized by [`BuildOpts`]: the teacher thread only copies each
+//! output row into a job queue, workers push finished targets straight into
+//! the out-of-order [`CacheWriter`], which reassembles them by position
+//! range. The cache content is identical to a serial build — targets are
+//! position-keyed, and so is the randomness.
 
 use std::path::Path;
 use std::sync::Arc;
 
-use anyhow::{ensure, Result};
+use anyhow::Result;
 
-use crate::cache::{CacheStats, CacheWriter, RingBuffer, SparseTarget};
+use crate::cache::{CacheStats, CacheWriter, RingBuffer};
+use crate::coordinator::teacher::{merge_slots, TeacherSampler};
 use crate::data::loader::Loader;
 use crate::model::ModelState;
-use crate::runtime::{Engine, HostTensor};
+use crate::runtime::Engine;
 use crate::spec::CacheKind;
-use crate::util::rng::Pcg;
+
+/// Build-stage knobs, threaded from the CLI (`--build-workers`).
+#[derive(Clone, Copy, Debug)]
+pub struct BuildOpts {
+    /// sparsify/encode worker threads; 0 = available parallelism
+    pub workers: usize,
+    /// job-queue depth *per worker* between the teacher thread and the pool
+    pub queue_depth: usize,
+}
+
+impl Default for BuildOpts {
+    fn default() -> BuildOpts {
+        BuildOpts { workers: 0, queue_depth: 4 }
+    }
+}
+
+impl BuildOpts {
+    /// The resolved worker count (0 = available parallelism).
+    pub fn resolved_workers(&self) -> usize {
+        if self.workers > 0 {
+            self.workers
+        } else {
+            std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1)
+        }
+    }
+}
 
 #[derive(Clone, Debug, Default)]
 pub struct BuildStats {
     pub cache: CacheStats,
+    /// teacher batches actually computed this session
     pub teacher_batches: u64,
+    /// batches skipped because every row was already covered (resume)
+    pub skipped_batches: u64,
     pub avg_unique_tokens: f64,
 }
 
@@ -51,7 +87,49 @@ struct RowJob {
     keep: usize,
 }
 
-/// Run the teacher over `loader` (stream order) and cache sparse targets.
+/// Resumability provenance: draws are position-keyed in the *build seed*,
+/// so resuming a directory built under a different seed would silently mix
+/// two draw streams in one cache (covered ranges keep the old seed's
+/// targets, gaps get the new one's). The seed is recorded alongside the
+/// shards and a mismatch is a refusal, not a merge. (Coarser config-level
+/// provenance — teacher training inputs, artifacts — is `Pipeline`'s
+/// `build-meta.txt` fingerprint; this guards the public build API itself.)
+pub(crate) fn guard_build_seed(dir: &Path, kind: CacheKind, seed: u64) -> Result<()> {
+    use anyhow::bail;
+    const SEED_FILE: &str = "build-seed.txt";
+    let tag = format!("{kind} seed={seed}");
+    match std::fs::read_to_string(dir.join(SEED_FILE)) {
+        Ok(prev) if prev != tag => bail!(
+            "cache {} was built as `{prev}` but this build is `{tag}`; position-keyed \
+             draws cannot be mixed — delete the directory or match the seed",
+            dir.display()
+        ),
+        Ok(_) => {}
+        Err(_) => {
+            // no provenance record: only a directory with no shard data may
+            // proceed — pre-provenance caches (e.g. the old sequential-RNG
+            // builds) must not be silently mixed with position-keyed draws
+            let has_shards = dir.exists()
+                && std::fs::read_dir(dir)?.filter_map(|e| e.ok()).any(|e| {
+                    let p = e.path();
+                    p.extension().map(|x| x == "slc").unwrap_or(false)
+                        || p.file_name().map(|n| n == "index.json").unwrap_or(false)
+                });
+            if has_shards {
+                bail!(
+                    "cache {} holds shards but records no build provenance; refusing to \
+                     resume over unknown draws — delete the directory to rebuild",
+                    dir.display()
+                );
+            }
+        }
+    }
+    std::fs::create_dir_all(dir)?;
+    std::fs::write(dir.join(SEED_FILE), tag)?;
+    Ok(())
+}
+
+/// [`build_cache_with`] under the default [`BuildOpts`].
 pub fn build_cache(
     engine: &Engine,
     teacher: &ModelState,
@@ -60,36 +138,40 @@ pub fn build_cache(
     dir: &Path,
     seed: u64,
 ) -> Result<BuildStats> {
+    build_cache_with(engine, teacher, loader, kind, dir, seed, &BuildOpts::default())
+}
+
+/// Run the teacher over `loader` (stream order) and cache sparse targets,
+/// resuming from whatever coverage `dir` already holds: fully-covered
+/// batches skip the teacher forward entirely, partially-covered batches
+/// recompute but enqueue only their uncovered rows.
+pub fn build_cache_with(
+    engine: &Engine,
+    teacher: &ModelState,
+    loader: &Loader,
+    kind: CacheKind,
+    dir: &Path,
+    seed: u64,
+    opts: &BuildOpts,
+) -> Result<BuildStats> {
     let m = engine.manifest();
-    let (b, s, n) = (m.batch, m.seq, m.n_rounds);
-    if let CacheKind::Rs { rounds, .. } = kind {
-        // the AOT sampler graph emits a fixed n_rounds slots per position;
-        // a draw of `rounds <= n_rounds` is an exact truncation of it, but
-        // more rounds than the graph provides cannot be synthesized here.
-        ensure!(rounds > 0, "CacheKind::Rs requires rounds >= 1");
-        ensure!(
-            rounds as usize <= n,
-            "CacheKind::Rs rounds={rounds} exceeds the AOT sampler's n_rounds={n}; \
-             re-export artifacts with a larger n_rounds or lower the draw"
-        );
-    }
-    let writer =
-        CacheWriter::create_with_kind(dir, kind.codec(), 4096, 1024, Some(kind.to_string()))?;
-    let mut rng = Pcg::new(seed);
-    let fwd = format!("fwd_{}", teacher.role);
+    let (b, s) = (m.batch, m.seq);
+    let sampler = TeacherSampler::new(engine, teacher, kind, seed)?;
+    guard_build_seed(dir, kind, seed)?;
+    let (writer, coverage) =
+        CacheWriter::resume(dir, kind.codec(), 4096, 1024, Some(kind.to_string()))?;
 
-    let n_workers = std::thread::available_parallelism().map(|p| p.get()).unwrap_or(1).clamp(1, 4);
-    let jobs: Arc<RingBuffer<RowJob>> = RingBuffer::new(4 * n_workers);
+    let n_workers = opts.resolved_workers();
+    let jobs: Arc<RingBuffer<RowJob>> = RingBuffer::new(opts.queue_depth.max(1) * n_workers);
 
-    let (batches, unique_sum, positions) = std::thread::scope(|scope| -> Result<(u64, u64, u64)> {
+    let (batches, skipped) = std::thread::scope(|scope| -> Result<(u64, u64)> {
         let writer_ref = &writer;
         let workers: Vec<_> = (0..n_workers)
             .map(|_| {
                 let jobs = Arc::clone(&jobs);
                 scope.spawn(move || {
-                    let (mut uniq, mut npos) = (0u64, 0u64);
-                    // if the writer dies (I/O error) keep draining jobs so the
-                    // teacher thread never blocks; finish() reports the error
+                    // if the writer dies (I/O error) keep draining jobs so
+                    // the teacher thread never blocks; finish() reports it
                     let mut writer_alive = true;
                     while let Some(job) = jobs.pop() {
                         for pos in 0..s {
@@ -97,59 +179,39 @@ pub fn build_cache(
                             let ids = &job.ids[at..at + job.keep];
                             let vals = &job.vals[at..at + job.keep];
                             let target = merge_slots(ids, vals, kind);
-                            uniq += target.ids.len() as u64;
-                            npos += 1;
                             if writer_alive {
                                 writer_alive = writer_ref.push(job.base_off + pos as u64, target);
                             }
                         }
                     }
-                    (uniq, npos)
                 })
             })
             .collect();
 
-        // teacher pass on this thread; close the job queue even on error so
-        // the workers always drain and join
-        let mut feed = || -> Result<u64> {
-            let mut batches = 0u64;
+        // teacher pass on this thread; close the job queue even on error
+        // so the workers always drain and join
+        let mut feed = || -> Result<(u64, u64)> {
+            let (mut batches, mut skipped) = (0u64, 0u64);
             for batch in loader.iter_eval() {
-                let probs = engine
-                    .call(
-                        &fwd,
-                        &[teacher.params_tensor(), HostTensor::i32(batch.tokens.clone(), &[b, s])],
-                    )?
-                    .remove(0);
-                let (ids_t, vals_t) = match kind {
-                    CacheKind::TopK => {
-                        let mut outs = engine.call("sample_topk", &[probs])?;
-                        let vals = outs.remove(1);
-                        let ids = outs.remove(0);
-                        (ids, vals)
-                    }
-                    CacheKind::Rs { temp, .. } => {
-                        // rust drives the randomness: uniforms in, samples out
-                        let mut unif = vec![0.0f32; b * s * n];
-                        rng.fill_f32(&mut unif);
-                        let unif_t = HostTensor::f32(unif, &[b, s, n]);
-                        let mut outs = engine
-                            .call("sample_rs", &[probs, unif_t, HostTensor::scalar_f32(temp)])?;
-                        let w = outs.remove(1);
-                        let ids = outs.remove(0);
-                        (ids, w)
-                    }
-                };
-                let ids = ids_t.as_i32()?;
-                let vals = vals_t.as_f32()?;
-                let slots = ids.len() / (b * s);
-                // the graph emits `n_rounds` slots; a smaller `rounds` draw is
-                // the exact prefix (weights are 1/n each at temp=1, and
-                // merge_slots renormalizes)
-                let keep = match kind {
-                    CacheKind::Rs { rounds, .. } => (rounds as usize).min(slots),
-                    CacheKind::TopK => slots,
-                };
+                let row_covered: Vec<bool> = batch
+                    .offsets
+                    .iter()
+                    .map(|&off| coverage.covers(off as u64, off as u64 + s as u64))
+                    .collect();
+                if row_covered.iter().all(|&c| c) {
+                    // the resumable-build contract: covered ranges cost
+                    // nothing, not even the teacher forward
+                    skipped += 1;
+                    continue;
+                }
+                let offsets: Vec<u64> = batch.offsets.iter().map(|&o| o as u64).collect();
+                let samples = sampler.sample_batch(batch.tokens, &offsets)?;
+                let (ids, vals) = (samples.ids(), samples.vals());
+                let (slots, keep) = (samples.slots, samples.keep);
                 for row in 0..b {
+                    if row_covered[row] {
+                        continue;
+                    }
                     let at = row * s * slots;
                     let (row_ids, row_vals) = if keep == slots {
                         (ids[at..at + s * slots].to_vec(), vals[at..at + s * slots].to_vec())
@@ -166,7 +228,7 @@ pub fn build_cache(
                         (ri, rv)
                     };
                     jobs.push(RowJob {
-                        base_off: batch.offsets[row] as u64,
+                        base_off: offsets[row],
                         ids: row_ids,
                         vals: row_vals,
                         keep,
@@ -174,75 +236,25 @@ pub fn build_cache(
                 }
                 batches += 1;
             }
-            Ok(batches)
+            Ok((batches, skipped))
         };
         let fed = feed();
         jobs.close();
-        let (mut unique_sum, mut positions) = (0u64, 0u64);
         for w in workers {
-            let (u, p) = w.join().expect("cache worker panicked");
-            unique_sum += u;
-            positions += p;
+            w.join().expect("cache worker panicked");
         }
-        Ok((fed?, unique_sum, positions))
+        fed
     })?;
 
     let cache = writer.finish()?;
     Ok(BuildStats {
+        // slots/positions IS the mean unique sampled tokens per position
+        // (merge_slots stores one slot per unique id), and unlike a
+        // this-session counter it stays meaningful for resumed builds that
+        // skipped already-covered batches
+        avg_unique_tokens: cache.slots as f64 / cache.positions.max(1) as f64,
         cache,
         teacher_batches: batches,
-        avg_unique_tokens: unique_sum as f64 / positions.max(1) as f64,
+        skipped_batches: skipped,
     })
-}
-
-/// Merge duplicate sampled ids (RS emits one slot per draw) and drop zeros;
-/// for truncated RS draws, renormalize so weights stay x/keep.
-fn merge_slots(ids: &[i32], vals: &[f32], kind: CacheKind) -> SparseTarget {
-    let mut pairs: Vec<(u32, f32)> = Vec::with_capacity(ids.len());
-    for (&i, &w) in ids.iter().zip(vals.iter()) {
-        if w <= 0.0 {
-            continue;
-        }
-        pairs.push((i as u32, w));
-    }
-    pairs.sort_by_key(|&(i, _)| i);
-    let mut out = SparseTarget::default();
-    for (i, w) in pairs {
-        if out.ids.last() == Some(&i) {
-            *out.probs.last_mut().unwrap() += w;
-        } else {
-            out.ids.push(i);
-            out.probs.push(w);
-        }
-    }
-    if let CacheKind::Rs { .. } = kind {
-        let mass = out.mass();
-        if mass > 0.0 {
-            out.probs.iter_mut().for_each(|p| *p /= mass);
-        }
-    }
-    out
-}
-
-#[cfg(test)]
-mod tests {
-    use super::*;
-
-    #[test]
-    fn merge_slots_merges_duplicates() {
-        let ids = [3, 3, 5, 1];
-        let vals = [0.25, 0.25, 0.25, 0.25];
-        let t = merge_slots(&ids, &vals, CacheKind::Rs { rounds: 4, temp: 1.0 });
-        assert_eq!(t.ids, vec![1, 3, 5]);
-        assert!((t.probs[1] - 0.5).abs() < 1e-6);
-        assert!((t.mass() - 1.0).abs() < 1e-6);
-    }
-
-    #[test]
-    fn merge_slots_drops_zeros() {
-        let ids = [3, 4, 5];
-        let vals = [0.5, 0.0, 0.2];
-        let t = merge_slots(&ids, &vals, CacheKind::TopK);
-        assert_eq!(t.ids, vec![3, 5]);
-    }
 }

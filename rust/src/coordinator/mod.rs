@@ -21,10 +21,11 @@ pub mod schedule;
 pub mod teacher;
 pub mod trainer;
 
-pub use cachebuild::{build_cache, BuildStats};
+pub use cachebuild::{build_cache, build_cache_with, BuildOpts, BuildStats};
 pub use evaluator::{evaluate, EvalResult};
 pub use pipeline::{pct_ce_to_fullkd, CacheHandle, Pipeline, PipelineConfig};
 pub use schedule::LrSchedule;
+pub use teacher::{TeacherSampler, TeacherSource};
 pub use trainer::{
     assemble_sparse_block, assemble_sparse_block_into, train_student, train_student_with,
     AssembleScratch, SparseBlock, TrainOpts, TrainResult,

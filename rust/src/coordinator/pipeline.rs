@@ -14,19 +14,19 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cache::{CacheReader, TargetSource};
-use crate::coordinator::cachebuild::{build_cache, BuildStats};
+use crate::cache::{CacheReader, MemoryTier, TargetSource, TierCounters, WriteThrough};
+use crate::coordinator::cachebuild::{build_cache_with, BuildOpts, BuildStats};
 use crate::coordinator::evaluator::{evaluate, EvalResult};
 use crate::coordinator::schedule::LrSchedule;
-use crate::coordinator::teacher;
-use crate::coordinator::trainer::{train_student, TrainResult};
+use crate::coordinator::teacher::{self, TeacherSource};
+use crate::coordinator::trainer::{train_student_with, TrainOpts, TrainResult};
 use crate::data::corpus::CorpusConfig;
 use crate::data::loader::Loader;
 use crate::data::packing::pack;
 use crate::data::TextDataset;
 use crate::model::ModelState;
 use crate::runtime::Engine;
-use crate::spec::{CacheKind, DistillSpec, Objective, SpecError, Variant};
+use crate::spec::{CacheKind, CacheMode, DistillSpec, Objective, SpecError, Variant};
 
 #[derive(Clone, Debug)]
 pub struct PipelineConfig {
@@ -45,6 +45,8 @@ pub struct PipelineConfig {
     pub eval_frac: f64,
     pub eval_batches: usize,
     pub work_dir: PathBuf,
+    /// cache-build worker pool knobs (`--build-workers`)
+    pub build: BuildOpts,
 }
 
 impl Default for PipelineConfig {
@@ -63,6 +65,7 @@ impl Default for PipelineConfig {
             eval_frac: 0.06,
             eval_batches: 8,
             work_dir: PathBuf::from("target/pipeline"),
+            build: BuildOpts::default(),
         }
     }
 }
@@ -192,20 +195,89 @@ impl Pipeline {
                              LrSchedule::Constant { base: lr })
     }
 
+    /// Directory of a `tag`'s cache under the work dir, with the current
+    /// `clear_caches` generation suffix (on-demand stacks and offline builds
+    /// of one tag share it — both fill it with identical, position-keyed
+    /// bytes).
+    pub fn cache_dir(&self, tag: &str) -> PathBuf {
+        if self.cache_gen == 0 {
+            self.cfg.work_dir.join(format!("cache-{tag}"))
+        } else {
+            self.cfg.work_dir.join(format!("cache-{tag}-g{}", self.cache_gen))
+        }
+    }
+
     /// Build a cache of `kind` under the work dir, addressed in the teacher
     /// packing's position space. The returned reader is lazy: shards decode
     /// on first touch and stay resident in a bounded LRU (see
     /// `cache::reader`), so handing it to several student runs is cheap.
-    /// Rebuilding a `tag` deletes and rewrites its directory — do not keep
-    /// using a reader from a previous build of the same tag. Most callers
-    /// want [`Pipeline::ensure_cache`], which memoizes and generation-
-    /// suffixes directories across `clear_caches`.
+    /// The build **resumes**: coverage already in the directory (a previous
+    /// interrupted build, or an on-demand run's write-through backfill) is
+    /// skipped, not recomputed — `build_cache` drives the stack to full
+    /// coverage. Rebuilding from scratch is `clear_caches` (generation
+    /// suffix) or deleting the directory. Most callers want
+    /// [`Pipeline::ensure_cache`], which memoizes.
     pub fn build_cache(&self, kind: CacheKind, tag: &str, seed: u64) -> Result<(CacheReader, BuildStats)> {
         let dir = self.cfg.work_dir.join(format!("cache-{tag}"));
-        let _ = std::fs::remove_dir_all(&dir);
+        self.prepare_cache_dir(&dir, kind, seed)?;
         let loader = self.packed_loader(self.cfg.teacher_shuffle_seed, false, 0);
-        let stats = build_cache(&self.engine, &self.teacher, &loader, kind, &dir, seed)?;
+        let stats = build_cache_with(
+            &self.engine,
+            &self.teacher,
+            &loader,
+            kind,
+            &dir,
+            seed,
+            &self.cfg.build,
+        )?;
         Ok((CacheReader::open(&dir)?, stats))
+    }
+
+    /// Resumability guard: a cache directory may only be resumed by a
+    /// pipeline whose deterministic inputs (data, teacher training, kind,
+    /// build seed) match the ones that filled it — the same config always
+    /// regenerates the same teacher and hence the same targets. A directory
+    /// with a different (or missing) fingerprint is deleted and rebuilt
+    /// fresh, preserving the old "caches never go stale" semantics across
+    /// config changes that share a work dir.
+    fn prepare_cache_dir(&self, dir: &std::path::Path, kind: CacheKind, seed: u64) -> Result<()> {
+        const META: &str = "build-meta.txt";
+        let c = &self.cfg;
+        let m = self.engine.manifest();
+        // the artifact/engine identity matters as much as the data config: a
+        // cache built by artifacts/small must not be resumed under
+        // artifacts/large even if every data knob matches
+        let fp = format!(
+            "artifacts={} config={} b={} s={} vocab={} nrounds={} kslots={} \
+             tokens={} tsteps={} tlr={} tseed={} dseed={} evalfrac={} corpus={:?} \
+             kind={kind} seed={seed}",
+            c.artifact_dir.display(),
+            m.config,
+            m.batch,
+            m.seq,
+            m.vocab,
+            m.n_rounds,
+            m.k_slots,
+            c.target_tokens,
+            c.teacher_steps,
+            c.teacher_lr,
+            c.teacher_shuffle_seed,
+            c.data_seed,
+            c.eval_frac,
+            c.corpus,
+        );
+        let meta = dir.join(META);
+        match std::fs::read_to_string(&meta) {
+            Ok(prev) if prev == fp => {} // safe to resume
+            Err(_) if !dir.exists() => {}
+            _ => {
+                // unknown or mismatched provenance: rebuild from scratch
+                std::fs::remove_dir_all(dir)?;
+            }
+        }
+        std::fs::create_dir_all(dir)?;
+        std::fs::write(meta, fp)?;
+        Ok(())
     }
 
     /// The cache `spec` needs, building it on first use and reusing it for
@@ -271,6 +343,92 @@ impl Pipeline {
         self.run_student(spec, cache, seed)
     }
 
+    /// [`Pipeline::run_spec`] with an explicit [`CacheMode`]: `Prebuilt`
+    /// builds/reuses the registry cache offline first; `OnDemand` starts the
+    /// student against a cold write-through stack instead
+    /// ([`Pipeline::run_spec_on_demand`]). The mode is applied to the spec's
+    /// [`CachePlan`](crate::spec::CachePlan) and dispatch reads `plan.mode`
+    /// — cache-free specs have no plan and always take the plain path.
+    pub fn run_spec_mode(
+        &mut self,
+        spec: &DistillSpec,
+        seed: i32,
+        mode: CacheMode,
+    ) -> Result<(ModelState, TrainResult, EvalResult, TierCounters)> {
+        let plan = spec.cache_plan().map(|p| match mode {
+            CacheMode::OnDemand => p.on_demand(),
+            CacheMode::Prebuilt => p,
+        });
+        match plan {
+            Some(p) if p.mode == CacheMode::OnDemand => self.run_spec_on_demand(spec, seed),
+            _ => {
+                let (st, tr, ev) = self.run_spec(spec, seed)?;
+                Ok((st, tr, ev, TierCounters::default()))
+            }
+        }
+    }
+
+    /// Train a student against a **cold** tiered target stack: the spec's
+    /// registry cache directory behind a `WriteThrough` tier whose origin is
+    /// the live teacher ([`TeacherSource`]), fronted by an in-RAM
+    /// [`MemoryTier`]. No offline cache build runs; a cold range is
+    /// teacher-computed on first touch, quantized, backfilled into the same
+    /// shard files `build_cache` writes, and served — so the first epoch
+    /// fills the cache and later epochs (or later runs: the directory
+    /// persists and is resumable) serve entirely from disk with
+    /// `origin_computes == 0`. Position-keyed sampling makes the losses
+    /// bit-identical to a run against a fully pre-built cache of the same
+    /// `(spec, seed)` (pinned by `pipeline_integration`).
+    ///
+    /// Trains with the synchronous loop (`prefetch: false`): the miss path
+    /// calls the engine, which must not run concurrently with the training
+    /// step (see the `TeacherSource` safety note). Cache-free specs fall
+    /// through to a plain [`Pipeline::run_student`].
+    pub fn run_spec_on_demand(
+        &self,
+        spec: &DistillSpec,
+        seed: i32,
+    ) -> Result<(ModelState, TrainResult, EvalResult, TierCounters)> {
+        self.preflight(spec)?;
+        let Some(plan) = spec.cache_plan() else {
+            let (st, tr, ev) = self.run_student(spec, None, seed)?;
+            return Ok((st, tr, ev, TierCounters::default()));
+        };
+        let tag = plan.dir_tag();
+        let dir = self.cache_dir(&tag);
+        self.prepare_cache_dir(&dir, plan.kind, seed_for_tag(&tag))?;
+        // stamp the same draw-stream provenance an offline build would, so
+        // the two fill modes can hand a directory back and forth
+        crate::coordinator::cachebuild::guard_build_seed(&dir, plan.kind, seed_for_tag(&tag))?;
+        let m = self.engine.manifest();
+        let seqs = pack(&self.train_docs, m.seq, self.cfg.teacher_shuffle_seed);
+        let teacher_src = TeacherSource::new(
+            &self.engine,
+            &self.teacher,
+            seqs,
+            plan.kind,
+            seed_for_tag(&tag),
+        )?;
+        let write_through = WriteThrough::open(
+            &teacher_src,
+            &dir,
+            plan.kind.codec(),
+            4096,
+            Some(plan.kind.to_string()),
+        )?
+        .with_align(m.seq as u64);
+        let stack = MemoryTier::new(&write_through);
+        let opts = TrainOpts { prefetch: false, assemble_workers: 1 };
+        let (st, tr, ev) = self.run_student_with(spec, Some(&stack), seed, opts)?;
+        // persist partial shards + coverage so the next session resumes
+        // instead of recomputing
+        write_through.checkpoint()?;
+        let mut counters = write_through.counters();
+        let (mem_hits, _) = stack.counters();
+        counters.hits += mem_hits; // a memory hit never reaches the disk tier
+        Ok((st, tr, ev, counters))
+    }
+
     /// Served-cache mode: train a student whose sparse targets come from a
     /// remote `serve::Server` instead of a local directory. The spec is
     /// validated with `check_cache` against the server's *advertised*
@@ -300,6 +458,19 @@ impl Pipeline {
         cache: Option<&dyn TargetSource>,
         seed: i32,
     ) -> Result<(ModelState, TrainResult, EvalResult)> {
+        self.run_student_with(spec, cache, seed, TrainOpts::default())
+    }
+
+    /// [`Pipeline::run_student`] with explicit [`TrainOpts`] — the on-demand
+    /// path uses this to select the synchronous training loop (which is
+    /// loss-bit-identical to the prefetched default).
+    pub fn run_student_with(
+        &self,
+        spec: &DistillSpec,
+        cache: Option<&dyn TargetSource>,
+        seed: i32,
+        opts: TrainOpts,
+    ) -> Result<(ModelState, TrainResult, EvalResult)> {
         self.preflight(spec)?;
         if spec.requires_cache() {
             let Some(cache) = cache else {
@@ -310,7 +481,7 @@ impl Pipeline {
         let mut student = ModelState::init(&self.engine, "student", seed)?;
         let mut loader = self.train_loader(self.cfg.student_shuffle_seed);
         let schedule = LrSchedule::paper_default(self.cfg.student_lr, self.cfg.student_steps);
-        let tr = train_student(
+        let tr = train_student_with(
             &self.engine,
             &mut student,
             &mut loader,
@@ -319,6 +490,7 @@ impl Pipeline {
             spec,
             cache,
             Some(&self.teacher),
+            opts,
         )?;
         let ev = evaluate(&self.engine, &student, &self.eval_loader(), Some(&self.teacher),
                           self.cfg.eval_batches)?;

@@ -1,13 +1,35 @@
-//! Teacher stage: CE pre-training of the teacher model, plus the short
+//! Teacher stage: CE pre-training of the teacher model, the short
 //! adaptation fine-tune of Table 11 (Sreenivas et al.: adapt the teacher on
-//! the student's data distribution before distilling).
+//! the student's data distribution before distilling) — and the teacher as a
+//! *target source*.
+//!
+//! [`TeacherSampler`] is the teacher-forward + RS/Top-K sampling core that
+//! used to live inline in `coordinator::cachebuild`: one `fwd` call over a
+//! `[B, S]` token batch, then the on-device sampler graph (`sample_topk`, or
+//! `sample_rs` fed rust-generated uniforms). Randomness is *position-keyed*
+//! ([`Pcg::mix_seed`] of the build seed and each row's stream offset), so
+//! the draw at a stream position is identical whether it is computed by a
+//! sequential cache build, a resumed build that skips covered ranges, or an
+//! on-demand miss-path compute — the determinism contract the tiered target
+//! sources rely on.
+//!
+//! [`TeacherSource`] wraps the sampler as a [`TargetSource`]: a student can
+//! start distilling against a *cold* cache, with every range computed from
+//! the teacher on first touch (normally behind a `cache::WriteThrough` tier
+//! that persists the answers — see `Pipeline::run_spec_on_demand`).
 
-use anyhow::Result;
+use std::sync::Mutex;
 
+use anyhow::{ensure, Result};
+
+use crate::cache::{RangeBlock, TargetSource};
 use crate::coordinator::schedule::LrSchedule;
 use crate::data::loader::Loader;
+use crate::data::packing::Sequence;
 use crate::model::ModelState;
 use crate::runtime::{Engine, HostTensor};
+use crate::spec::CacheKind;
+use crate::util::rng::Pcg;
 
 /// Pre-train `role` with CE for `steps`. Returns the state and loss curve.
 pub fn pretrain(
@@ -54,4 +76,347 @@ pub fn continue_ce(
         losses.push(outs[0].scalar()?);
     }
     Ok(losses)
+}
+
+/// Merge duplicate sampled ids (RS emits one slot per draw) and drop zeros;
+/// for truncated RS draws, renormalize so weights stay x/keep. This is the
+/// single host-side post-processing step between the device sampler and a
+/// [`SparseTarget`](crate::cache::SparseTarget) — shared by the cache build
+/// worker pool and the on-demand [`TeacherSource`].
+pub(crate) fn merge_slots(
+    ids: &[i32],
+    vals: &[f32],
+    kind: CacheKind,
+) -> crate::cache::SparseTarget {
+    let mut pairs: Vec<(u32, f32)> = Vec::with_capacity(ids.len());
+    for (&i, &w) in ids.iter().zip(vals.iter()) {
+        if w <= 0.0 {
+            continue;
+        }
+        pairs.push((i as u32, w));
+    }
+    pairs.sort_by_key(|&(i, _)| i);
+    let mut out = crate::cache::SparseTarget::default();
+    for (i, w) in pairs {
+        if out.ids.last() == Some(&i) {
+            *out.probs.last_mut().unwrap() += w;
+        } else {
+            out.ids.push(i);
+            out.probs.push(w);
+        }
+    }
+    if let CacheKind::Rs { .. } = kind {
+        let mass = out.mass();
+        if mass > 0.0 {
+            out.probs.iter_mut().for_each(|p| *p /= mass);
+        }
+    }
+    out
+}
+
+/// One sampled `[B, S]` batch of teacher outputs: per-position slot blocks
+/// of sampled ids/weights, still on the graph's full `slots` stride. The
+/// draw keeps only the first `keep` slots of each position (an exact prefix
+/// truncation for RS draws with `rounds < n_rounds`).
+pub struct BatchSamples {
+    ids_t: HostTensor,
+    vals_t: HostTensor,
+    /// per-position slot stride of `ids()`/`vals()`
+    pub slots: usize,
+    /// slots of each position that the draw actually uses (`<= slots`)
+    pub keep: usize,
+}
+
+impl BatchSamples {
+    /// `[B * S * slots]` sampled token ids.
+    pub fn ids(&self) -> &[i32] {
+        self.ids_t.as_i32().expect("validated at construction")
+    }
+
+    /// `[B * S * slots]` sampled weights.
+    pub fn vals(&self) -> &[f32] {
+        self.vals_t.as_f32().expect("validated at construction")
+    }
+}
+
+/// The teacher-forward + sparsify sampling core (extracted from
+/// `cachebuild`): computes sparse teacher targets for one token batch.
+/// Not `Sync` — the `Engine` is single-threaded; concurrent consumers go
+/// through [`TeacherSource`], which serializes on a mutex.
+pub struct TeacherSampler<'a> {
+    engine: &'a Engine,
+    teacher: &'a ModelState,
+    kind: CacheKind,
+    seed: u64,
+    fwd: String,
+}
+
+impl<'a> TeacherSampler<'a> {
+    /// Validates that the AOT sampler graphs can produce `kind`'s draws.
+    pub fn new(
+        engine: &'a Engine,
+        teacher: &'a ModelState,
+        kind: CacheKind,
+        seed: u64,
+    ) -> Result<TeacherSampler<'a>> {
+        if let CacheKind::Rs { rounds, .. } = kind {
+            // the AOT sampler graph emits a fixed n_rounds slots per
+            // position; a draw of `rounds <= n_rounds` is an exact
+            // truncation of it, but more rounds than the graph provides
+            // cannot be synthesized here.
+            let n = engine.manifest().n_rounds;
+            ensure!(rounds > 0, "CacheKind::Rs requires rounds >= 1");
+            ensure!(
+                rounds as usize <= n,
+                "CacheKind::Rs rounds={rounds} exceeds the AOT sampler's n_rounds={n}; \
+                 re-export artifacts with a larger n_rounds or lower the draw"
+            );
+        }
+        let fwd = format!("fwd_{}", teacher.role);
+        Ok(TeacherSampler { engine, teacher, kind, seed, fwd })
+    }
+
+    /// Teacher-forward + sample one `[B, S]` token batch. `offsets[row]` is
+    /// each row's stream offset — the key of its uniform draws, which is
+    /// what makes the sampling order-independent across build sessions.
+    pub fn sample_batch(&self, tokens: Vec<i32>, offsets: &[u64]) -> Result<BatchSamples> {
+        let m = self.engine.manifest();
+        let (b, s, n) = (m.batch, m.seq, m.n_rounds);
+        ensure!(tokens.len() == b * s, "tokens must be a full [B, S] batch");
+        ensure!(offsets.len() == b, "one stream offset per row");
+        let probs = self
+            .engine
+            .call(&self.fwd, &[self.teacher.params_tensor(), HostTensor::i32(tokens, &[b, s])])?
+            .remove(0);
+        let (ids_t, vals_t) = match self.kind {
+            CacheKind::TopK => {
+                let mut outs = self.engine.call("sample_topk", &[probs])?;
+                let vals = outs.remove(1);
+                let ids = outs.remove(0);
+                (ids, vals)
+            }
+            CacheKind::Rs { temp, .. } => {
+                // rust drives the randomness: uniforms in, samples out —
+                // each row's `s * n` slice comes from its own offset-keyed
+                // stream, so rows draw identically in any batch composition.
+                // (The buffer is handed to the tensor, so it is built fresh
+                // per call — the engine transfer dwarfs this allocation.)
+                let mut unif = vec![0.0f32; b * s * n];
+                for row in 0..b {
+                    let mut rng = Pcg::new(Pcg::mix_seed(self.seed, offsets[row]));
+                    rng.fill_f32(&mut unif[row * s * n..(row + 1) * s * n]);
+                }
+                let unif_t = HostTensor::f32(unif, &[b, s, n]);
+                let mut outs = self
+                    .engine
+                    .call("sample_rs", &[probs, unif_t, HostTensor::scalar_f32(temp)])?;
+                let w = outs.remove(1);
+                let ids = outs.remove(0);
+                (ids, w)
+            }
+        };
+        // validate both tensors now so the accessors can borrow infallibly
+        vals_t.as_f32()?;
+        let slots = ids_t.as_i32()?.len() / (b * s);
+        // the graph emits `n_rounds` slots; a smaller `rounds` draw is the
+        // exact prefix (weights are 1/n each at temp=1, and merge_slots
+        // renormalizes)
+        let keep = match self.kind {
+            CacheKind::Rs { rounds, .. } => (rounds as usize).min(slots),
+            CacheKind::TopK => slots,
+        };
+        Ok(BatchSamples { ids_t, vals_t, slots, keep })
+    }
+}
+
+fn io_other(e: anyhow::Error) -> std::io::Error {
+    std::io::Error::new(std::io::ErrorKind::Other, format!("{e:#}"))
+}
+
+/// The teacher as an on-demand [`TargetSource`]: `read_range_into` maps
+/// stream positions back to packed rows (the teacher packing's position
+/// space), runs the teacher forward + sampler over the rows it needs, and
+/// merges slots into sparse targets — the same values a pre-built cache of
+/// the same `(kind, seed)` stores, *before* quantization. Behind a
+/// `cache::WriteThrough` tier (which quantizes on the way in) the answers
+/// are therefore bit-identical to a full offline build.
+///
+/// Rows beyond the last complete `[B, S]` batch of the packing mirror
+/// `Loader::iter_eval`'s coverage (a full build never caches them) and
+/// decode as empty targets, as do positions past the packed stream.
+///
+/// Reads serialize on an internal mutex — see the safety note below.
+pub struct TeacherSource<'a> {
+    inner: Mutex<TeacherInner<'a>>,
+    kind: CacheKind,
+    seq: usize,
+    batch: usize,
+    /// rows a full cache build would cover (complete batches only)
+    covered_rows: usize,
+}
+
+struct TeacherInner<'a> {
+    sampler: TeacherSampler<'a>,
+    seqs: Vec<Sequence>,
+    computes: u64,
+}
+
+// SAFETY: `Engine` is deliberately single-threaded (`RefCell` executable
+// cache), so it is neither `Send` nor `Sync` — but every engine access this
+// type performs goes through the `inner` mutex, so no two threads ever touch
+// the engine concurrently *through this source*, and the mutex's
+// acquire/release ordering makes the sequential cross-thread accesses sound.
+// The remaining obligation falls on callers: do not run other work on the
+// same `Engine` concurrently with reads through a `TeacherSource`. The
+// pipeline's on-demand mode therefore trains with the synchronous loop
+// (`TrainOpts { prefetch: false, .. }`), keeping the training `engine.call`
+// and the miss-path teacher computes on one thread.
+unsafe impl Send for TeacherSource<'_> {}
+unsafe impl Sync for TeacherSource<'_> {}
+
+impl<'a> TeacherSource<'a> {
+    /// `seqs` is the *teacher* packing (its `stream_offset`s define the
+    /// cache position space); `seed` matches the cache-build seed so
+    /// on-demand draws reproduce a pre-built cache exactly.
+    ///
+    /// Crate-private on purpose: the `unsafe Sync` above is sound only
+    /// under the no-concurrent-engine-use obligation, which the crate's own
+    /// call sites (`Pipeline::run_spec_on_demand`, which pins the
+    /// synchronous training loop) uphold structurally. Arbitrary safe
+    /// external code could otherwise share this source across threads while
+    /// also calling the engine directly.
+    pub(crate) fn new(
+        engine: &'a Engine,
+        teacher: &'a ModelState,
+        seqs: Vec<Sequence>,
+        kind: CacheKind,
+        seed: u64,
+    ) -> Result<TeacherSource<'a>> {
+        let m = engine.manifest();
+        let (b, s) = (m.batch, m.seq);
+        for (i, sq) in seqs.iter().enumerate() {
+            ensure!(
+                sq.stream_offset == i * s,
+                "teacher packing must be contiguous: row {i} sits at stream offset {} \
+                 (expected {})",
+                sq.stream_offset,
+                i * s
+            );
+        }
+        let covered_rows = (seqs.len() / b) * b;
+        let sampler = TeacherSampler::new(engine, teacher, kind, seed)?;
+        Ok(TeacherSource {
+            inner: Mutex::new(TeacherInner { sampler, seqs, computes: 0 }),
+            kind,
+            seq: s,
+            batch: b,
+            covered_rows,
+        })
+    }
+
+    /// Teacher batches computed so far (the acceptance counter: a warm
+    /// tier stack repeats a run with this still at its pre-run value).
+    pub fn computes(&self) -> u64 {
+        self.inner.lock().unwrap().computes
+    }
+}
+
+impl TargetSource for TeacherSource<'_> {
+    fn read_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> std::io::Result<()> {
+        out.clear();
+        if len == 0 {
+            return Ok(());
+        }
+        let mut guard = self.inner.lock().unwrap();
+        let inner = &mut *guard;
+        let (b, s) = (self.batch, self.seq);
+        let end = start.saturating_add(len as u64);
+        let covered_end = (self.covered_rows * s) as u64;
+        let row_lo = (start / s as u64) as usize;
+        let row_hi = (end.min(covered_end).div_euclid(s as u64) as usize)
+            + usize::from(end.min(covered_end) % s as u64 != 0);
+        let rows: Vec<usize> =
+            (row_lo..row_hi.min(self.covered_rows)).filter(|r| *r < inner.seqs.len()).collect();
+        // compute whole rows, batched `b` at a time (the fwd graph's fixed
+        // batch), padding short chunks by repeating the first row
+        let mut row_targets: Vec<(usize, Vec<crate::cache::SparseTarget>)> =
+            Vec::with_capacity(rows.len());
+        for chunk in rows.chunks(b) {
+            let mut tokens = vec![0i32; b * s];
+            let mut offsets = vec![0u64; b];
+            for i in 0..b {
+                let r = chunk.get(i).copied().unwrap_or(chunk[0]);
+                let sq = &inner.seqs[r];
+                for (j, &t) in sq.tokens.iter().enumerate() {
+                    tokens[i * s + j] = t as i32;
+                }
+                offsets[i] = sq.stream_offset as u64;
+            }
+            let samples = inner.sampler.sample_batch(tokens, &offsets).map_err(io_other)?;
+            inner.computes += 1;
+            let (ids, vals) = (samples.ids(), samples.vals());
+            for (i, &r) in chunk.iter().enumerate() {
+                let mut ts = Vec::with_capacity(s);
+                for pos in 0..s {
+                    let at = (i * s + pos) * samples.slots;
+                    ts.push(merge_slots(
+                        &ids[at..at + samples.keep],
+                        &vals[at..at + samples.keep],
+                        self.kind,
+                    ));
+                }
+                row_targets.push((r, ts));
+            }
+        }
+        for off in 0..len as u64 {
+            let Some(pos) = start.checked_add(off) else {
+                out.push_empty();
+                continue;
+            };
+            let row = (pos / s as u64) as usize;
+            match row_targets.iter().find(|(r, _)| *r == row) {
+                Some((_, ts)) => out.push_target(&ts[(pos % s as u64) as usize]),
+                None => out.push_empty(),
+            }
+        }
+        Ok(())
+    }
+
+    fn cache_kind(&self) -> Result<CacheKind, crate::spec::SpecError> {
+        Ok(self.kind)
+    }
+
+    fn positions(&self) -> u64 {
+        (self.covered_rows * self.seq) as u64
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn merge_slots_merges_duplicates() {
+        let ids = [3, 3, 5, 1];
+        let vals = [0.25, 0.25, 0.25, 0.25];
+        let t = merge_slots(&ids, &vals, CacheKind::Rs { rounds: 4, temp: 1.0 });
+        assert_eq!(t.ids, vec![1, 3, 5]);
+        assert!((t.probs[1] - 0.5).abs() < 1e-6);
+        assert!((t.mass() - 1.0).abs() < 1e-6);
+    }
+
+    #[test]
+    fn merge_slots_drops_zeros() {
+        let ids = [3, 4, 5];
+        let vals = [0.5, 0.0, 0.2];
+        let t = merge_slots(&ids, &vals, CacheKind::TopK);
+        assert_eq!(t.ids, vec![3, 5]);
+    }
+
+    #[test]
+    fn mix_seed_is_stable_and_keyed() {
+        assert_eq!(Pcg::mix_seed(7, 128), Pcg::mix_seed(7, 128));
+        assert_ne!(Pcg::mix_seed(7, 128), Pcg::mix_seed(7, 192));
+        assert_ne!(Pcg::mix_seed(7, 128), Pcg::mix_seed(8, 128));
+    }
 }

@@ -1,9 +1,10 @@
 //! rskd launcher: run pipeline stages and experiments from the command line.
 //!
 //! ```text
-//! rskd pipeline [--method <spec>] [--steps N] [--quick=true]
+//! rskd pipeline [--method <spec>] [--steps N] [--quick=true] [--on-demand]
 //! rskd serve    [--cache DIR | --method <spec>] [--port N | --unix PATH]
-//! rskd load-gen [--cache DIR | --method <spec> | --synthetic N] [--clients N]
+//!               [--backfill --synthetic N]
+//! rskd load-gen [--cache DIR | --method <spec> | --synthetic N [--backfill]]
 //! rskd toy      [--task gauss|image]
 //! rskd zipf     [--k N] [--rounds N]
 //! rskd info     [--artifacts DIR]
@@ -25,11 +26,12 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use rskd::cache::{CacheReader, CacheWriter, ProbCodec, SparseTarget};
+use rskd::cache::{CacheReader, CacheWriter, DynSource, ProbCodec, SparseTarget, WriteThrough};
 use rskd::coordinator::{pct_ce_to_fullkd, Pipeline, PipelineConfig};
 use rskd::report::{final_loss, Report};
+use rskd::sampling::SyntheticZipfSource;
 use rskd::serve::{Endpoint, ServeClient, ServeConfig, Server};
-use rskd::spec::{DistillSpec, SpecDefaults, Variant};
+use rskd::spec::{CacheMode, DistillSpec, SpecDefaults, Variant};
 use rskd::toynn::train::train_teacher;
 use rskd::toynn::{train_toy, GaussianClasses, ToyImages, ToyMethod, ToyTrainConfig};
 use rskd::util::bench::quantile;
@@ -68,6 +70,14 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     if let Some(s) = args.get("teacher-steps") {
         cfg.teacher_steps = s.parse()?;
     }
+    if let Some(w) = args.get("build-workers") {
+        cfg.build.workers = w.parse()?;
+    }
+    let mode = if args.bool_or("on-demand", false) {
+        CacheMode::OnDemand
+    } else {
+        CacheMode::Prebuilt
+    };
     let spec = parse_spec(args)?;
     println!("spec: {spec}  ({})", spec.to_json());
 
@@ -79,21 +89,36 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
         pipe.teacher_losses.last().copied().unwrap_or(f32::NAN)
     );
 
-    if let Some(plan) = spec.cache_plan() {
-        println!("== building sparse logit cache ({plan}) ==");
-        let handle = pipe.ensure_cache(&spec)?.expect("plan implies a cache");
-        let stats = &handle.stats;
+    if mode == CacheMode::Prebuilt {
+        if let Some(plan) = spec.cache_plan() {
+            println!("== building sparse logit cache ({plan}) ==");
+            let handle = pipe.ensure_cache(&spec)?.expect("plan implies a cache");
+            let stats = &handle.stats;
+            println!(
+                "cache: {} positions ({} batches skipped via resume), {:.1} avg unique tokens, \
+                 {} bytes ({:.2} B/token)",
+                stats.cache.positions,
+                stats.skipped_batches,
+                stats.avg_unique_tokens,
+                stats.cache.bytes,
+                stats.cache.bytes as f64 / stats.cache.positions.max(1) as f64,
+            );
+        }
+        println!("== training student ({}) ==", spec.name());
+    } else {
         println!(
-            "cache: {} positions, {:.1} avg unique tokens, {} bytes ({:.2} B/token)",
-            stats.cache.positions,
-            stats.avg_unique_tokens,
-            stats.cache.bytes,
-            stats.cache.bytes as f64 / stats.cache.positions.max(1) as f64,
+            "== training student ({}) on a cold write-through stack (no offline build) ==",
+            spec.name()
         );
     }
-
-    println!("== training student ({}) ==", spec.name());
-    let (_student, tr, ev) = pipe.run_spec(&spec, 3)?;
+    let (_student, tr, ev, tiers) = pipe.run_spec_mode(&spec, 3, mode)?;
+    if mode == CacheMode::OnDemand {
+        println!(
+            "tiers: {} range hits / {} misses, {} positions backfilled, \
+             {} teacher computes (a repeat run over the now-covered cache reports 0)",
+            tiers.hits, tiers.misses, tiers.backfilled, tiers.origin_computes
+        );
+    }
     println!(
         "train: {} steps, final loss {:.3}, {:.0} tokens/sec{}",
         tr.steps,
@@ -157,18 +182,75 @@ fn open_reader(dir: &Path, args: &Args) -> Result<Arc<CacheReader>> {
     Ok(reader)
 }
 
-fn cmd_serve(args: &Args) -> Result<()> {
-    let dir = resolve_cache_dir(args)?;
-    let reader = open_reader(&dir, args)?;
-    let cfg = serve_config_from_args(args);
+/// The serve layer's cold-start stack: a write-through tier over `dir`
+/// whose origin is the deterministic synthetic RS-50 zipf source. Reopening
+/// an existing directory resumes its coverage — only never-requested ranges
+/// ever reach the origin.
+fn open_backfill_stack(args: &Args) -> Result<(Arc<WriteThrough<DynSource>>, PathBuf, u64)> {
+    if !args.has("synthetic") {
+        bail!(
+            "--backfill currently serves the synthetic origin: pass --synthetic N \
+             (an in-process *teacher* origin is `rskd pipeline --on-demand`)"
+        );
+    }
+    let n = args.u64_or("synthetic", 16_384);
+    let dir = match args.get("cache") {
+        Some(d) => PathBuf::from(d),
+        None => std::env::temp_dir().join(format!("rskd-backfill-{}", std::process::id())),
+    };
+    let origin: DynSource = Box::new(SyntheticZipfSource::new(512, n, 50, 7));
+    let stack = WriteThrough::open(
+        origin,
+        &dir,
+        ProbCodec::Count { rounds: 50 },
+        512,
+        Some("rs:rounds=50,temp=1".into()),
+    )?;
+    Ok((Arc::new(stack), dir, n))
+}
+
+fn print_snapshot(s: &rskd::serve::StatsSnapshot) {
     println!(
-        "cache {}: {} positions, {} shards, kind {}",
-        dir.display(),
-        reader.positions,
-        reader.shard_count(),
-        reader.kind.as_deref().unwrap_or("<untagged>")
+        "served {} ranges (p50 {} µs, p99 {} µs) | rejected {} | errors {} | \
+         shard loads {} ({} coalesced) | tier {}h/{}m, {} backfilled, {} computes",
+        s.requests,
+        s.p50_us().unwrap_or(0),
+        s.p99_us().unwrap_or(0),
+        s.rejected,
+        s.errors,
+        s.shard_loads,
+        s.coalesced,
+        s.tier.hits,
+        s.tier.misses,
+        s.tier.backfilled,
+        s.tier.origin_computes
     );
-    let server = Server::start(Arc::clone(&reader), endpoint_from_args(args, 7411), cfg.clone())?;
+}
+
+fn cmd_serve(args: &Args) -> Result<()> {
+    let cfg = serve_config_from_args(args);
+    let endpoint = endpoint_from_args(args, 7411);
+    let server = if args.bool_or("backfill", false) {
+        let (stack, dir, n) = open_backfill_stack(args)?;
+        println!(
+            "cold-start stack over {}: {} positions target, {} already covered (resumed)",
+            dir.display(),
+            n,
+            stack.coverage().count()
+        );
+        Server::start(stack, endpoint, cfg.clone())?
+    } else {
+        let dir = resolve_cache_dir(args)?;
+        let reader = open_reader(&dir, args)?;
+        println!(
+            "cache {}: {} positions, {} shards, kind {}",
+            dir.display(),
+            reader.positions,
+            reader.shard_count(),
+            reader.kind.as_deref().unwrap_or("<untagged>")
+        );
+        Server::start(reader, endpoint, cfg.clone())?
+    };
     println!(
         "serving on {} ({} workers, queue {} per worker, max range {})",
         server.endpoint(),
@@ -179,30 +261,19 @@ fn cmd_serve(args: &Args) -> Result<()> {
     println!("stats: cargo run --release --example cache_inspect -- --stats [--port/--unix]");
     loop {
         std::thread::sleep(Duration::from_secs(30));
-        let s = server.stats_snapshot();
-        println!(
-            "served {} ranges (p50 {} µs, p99 {} µs) | rejected {} | errors {} | \
-             shard loads {} ({} coalesced)",
-            s.requests,
-            s.p50_us().unwrap_or(0),
-            s.p99_us().unwrap_or(0),
-            s.rejected,
-            s.errors,
-            s.shard_loads,
-            s.coalesced
-        );
+        print_snapshot(&server.stats_snapshot());
     }
 }
 
 /// Build the synthetic RS-50 zipf cache `load-gen --synthetic N` serves, so
 /// the load test runs on machines with no artifacts and no prior pipeline
-/// run (this is also what the CI smoke test exercises).
+/// run (this is also what the CI smoke test exercises). Content comes from
+/// the same position-keyed [`SyntheticZipfSource`] the `--backfill` stack
+/// computes on demand, so a prebuilt and a backfilled synthetic cache hold
+/// identical bytes.
 fn build_synthetic_cache(dir: &Path, n_positions: u64) -> Result<()> {
-    use rskd::sampling::random_sampling;
-    use rskd::sampling::zipf::zipf;
     let _ = std::fs::remove_dir_all(dir);
-    let p = zipf(512, 1.0);
-    let mut rng = Pcg::new(7);
+    let origin = SyntheticZipfSource::new(512, n_positions, 50, 7);
     let w = CacheWriter::create_with_kind(
         dir,
         ProbCodec::Count { rounds: 50 },
@@ -211,7 +282,7 @@ fn build_synthetic_cache(dir: &Path, n_positions: u64) -> Result<()> {
         Some("rs:rounds=50,temp=1".into()),
     )?;
     for pos in 0..n_positions {
-        let t: SparseTarget = random_sampling(&p, 50, 1.0, &mut rng);
+        let t: SparseTarget = origin.target_at(pos);
         if !w.push(pos, t) {
             break; // writer died; finish() reports the error
         }
@@ -223,71 +294,137 @@ fn build_synthetic_cache(dir: &Path, n_positions: u64) -> Result<()> {
 fn cmd_load_gen(args: &Args) -> Result<()> {
     // resolve or synthesize the cache to serve
     let synthetic = args.has("synthetic");
-    let dir = if synthetic {
+    let backfill = args.bool_or("backfill", false);
+    let dir = if backfill {
+        // open_backfill_stack resolves its own directory
+        PathBuf::new()
+    } else if synthetic {
         std::env::temp_dir().join(format!("rskd-loadgen-{}", std::process::id()))
     } else {
         resolve_cache_dir(args)?
     };
-    if synthetic {
-        let n = args.u64_or("synthetic", 16_384);
-        println!("building synthetic RS-50 cache ({n} positions) in {}", dir.display());
-        build_synthetic_cache(&dir, n)?;
-    }
-    let reader = open_reader(&dir, args)?;
-    let positions = reader.positions;
 
     // self-hosted loopback server (ephemeral port unless --port/--unix given)
     let ep = endpoint_from_args(args, 0);
     let cfg = serve_config_from_args(args);
-    let server = Server::start(Arc::clone(&reader), ep, cfg.clone())?;
+    // `direct` verifies served bytes against an independent reader on the
+    // prebuilt paths; the backfill path instead verifies pass-2 == pass-1
+    // (there is nothing on disk to read until the server fills it)
+    let (server, positions, direct, dir) = if backfill {
+        let (stack, dir, n) = open_backfill_stack(args)?;
+        println!(
+            "cold-start stack over {} ({} positions target, {} covered at open)",
+            dir.display(),
+            n,
+            stack.coverage().count()
+        );
+        (Server::start(stack, ep, cfg.clone())?, n, None, dir)
+    } else {
+        if synthetic {
+            let n = args.u64_or("synthetic", 16_384);
+            println!("building synthetic RS-50 cache ({n} positions) in {}", dir.display());
+            build_synthetic_cache(&dir, n)?;
+        }
+        let reader = open_reader(&dir, args)?;
+        let positions = reader.positions;
+        let server = Server::start(Arc::clone(&reader), ep, cfg.clone())?;
+        (server, positions, Some(CacheReader::open(&dir)?), dir)
+    };
     let endpoint = server.endpoint().clone();
 
     let clients = args.usize_or("clients", 4).max(1);
     let requests = args.usize_or("requests", 200).max(1);
     let range = (args.usize_or("range", 512) as u64).min(positions.max(1)) as usize;
     let span = positions.saturating_sub(range as u64).max(1);
+    let passes = if backfill { 2 } else { 1 };
     println!(
-        "load-gen: {clients} clients x {requests} requests of {range} positions on {endpoint}"
+        "load-gen: {passes} pass(es) x {clients} clients x {requests} requests of \
+         {range} positions on {endpoint}"
     );
 
-    // an independent direct reader to verify served bytes against
-    let direct = CacheReader::open(&dir)?;
-    let barrier = Barrier::new(clients);
     let t0 = Instant::now();
     let mut all_lats: Vec<Duration> = Vec::new();
     let mut served = 0u64;
-    std::thread::scope(|s| -> Result<()> {
-        let mut handles = Vec::new();
-        for c in 0..clients {
-            let endpoint = &endpoint;
-            let direct = &direct;
-            let barrier = &barrier;
-            handles.push(s.spawn(move || -> Result<Vec<Duration>> {
-                let mut client = ServeClient::connect(endpoint)?;
-                let mut rng = Pcg::new(0xC0FFEE ^ c as u64);
-                let mut lats = Vec::with_capacity(requests);
-                barrier.wait();
-                for i in 0..requests {
-                    let start = rng.below(span);
-                    let t = Instant::now();
-                    let targets = client.get_range(start, range)?;
-                    lats.push(t.elapsed());
-                    if i == 0 && targets != direct.get_range(start, range) {
-                        bail!("served range [{start}, +{range}) differs from direct read");
+    // first response of each client, compared across passes in backfill mode
+    let mut pass_firsts: Vec<Vec<Vec<SparseTarget>>> = Vec::new();
+    let mut cold_snap: Option<rskd::serve::StatsSnapshot> = None;
+    for pass in 0..passes {
+        let barrier = Barrier::new(clients);
+        let mut firsts: Vec<Vec<SparseTarget>> = Vec::new();
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let endpoint = &endpoint;
+                let direct = direct.as_ref();
+                let barrier = &barrier;
+                handles.push(s.spawn(move || -> Result<(Vec<Duration>, Vec<SparseTarget>)> {
+                    let mut client = ServeClient::connect(endpoint)?;
+                    // per-pass identical seeds: pass 2 re-requests pass 1's
+                    // exact ranges, so a warm tier must answer all of them
+                    let mut rng = Pcg::new(0xC0FFEE ^ c as u64);
+                    let mut lats = Vec::with_capacity(requests);
+                    let mut first = Vec::new();
+                    barrier.wait();
+                    for i in 0..requests {
+                        let start = rng.below(span);
+                        let t = Instant::now();
+                        let targets = client.get_range(start, range)?;
+                        lats.push(t.elapsed());
+                        if i == 0 {
+                            if let Some(direct) = direct {
+                                if targets != direct.get_range(start, range) {
+                                    bail!(
+                                        "served range [{start}, +{range}) differs from \
+                                         direct read"
+                                    );
+                                }
+                            }
+                            first = targets;
+                        }
                     }
-                }
-                Ok(lats)
-            }));
+                    Ok((lats, first))
+                }));
+            }
+            for h in handles {
+                let (lats, first) = h.join().expect("client thread panicked")?;
+                served += lats.len() as u64;
+                all_lats.extend(lats);
+                firsts.push(first);
+            }
+            Ok(())
+        })?;
+        pass_firsts.push(firsts);
+        if backfill && pass == 0 {
+            cold_snap = Some(server.stats_snapshot());
         }
-        for h in handles {
-            let lats = h.join().expect("client thread panicked")?;
-            served += lats.len() as u64;
-            all_lats.extend(lats);
-        }
-        Ok(())
-    })?;
+    }
     let wall = t0.elapsed();
     let snap = server.stats_snapshot();
+
+    if backfill {
+        // the cold-start contract (CI smoke gate): the second pass re-issues
+        // the first pass's ranges and must be served entirely from the disk
+        // tier — zero new misses, zero new origin computes, same bytes
+        let cold = cold_snap.expect("pass-1 snapshot");
+        if snap.tier.misses != cold.tier.misses
+            || snap.tier.origin_computes != cold.tier.origin_computes
+        {
+            bail!(
+                "cold-start contract violated: pass 2 added {} tier misses and {} origin \
+                 computes (expected 0)",
+                snap.tier.misses - cold.tier.misses,
+                snap.tier.origin_computes - cold.tier.origin_computes
+            );
+        }
+        if pass_firsts[0] != pass_firsts[1] {
+            bail!("cold-start contract violated: pass 2 served different bytes than pass 1");
+        }
+        println!(
+            "cold-start contract: pass 2 added 0 misses / 0 origin computes over pass 1's \
+             ({} misses, {} computes, {} backfilled) and served identical bytes: OK",
+            cold.tier.misses, cold.tier.origin_computes, cold.tier.backfilled
+        );
+    }
 
     let mut report = Report::new("serve_loadgen", "Sparse-logit serving load test");
     let mut rows: Vec<Vec<String>> = Vec::new();
@@ -310,6 +447,13 @@ fn cmd_load_gen(args: &Args) -> Result<()> {
         "shard loads (coalesced)".into(),
         format!("{} ({} coalesced)", snap.shard_loads, snap.coalesced),
     ]);
+    rows.push(vec![
+        "tier hits / misses".into(),
+        format!(
+            "{} / {} ({} backfilled, {} origin computes)",
+            snap.tier.hits, snap.tier.misses, snap.tier.backfilled, snap.tier.origin_computes
+        ),
+    ]);
     rows.push(vec!["rejected / errors".into(), format!("{} / {}", snap.rejected, snap.errors)]);
     report.table(&["load-gen", "value"], &rows);
     let hot: Vec<String> = snap
@@ -318,17 +462,25 @@ fn cmd_load_gen(args: &Args) -> Result<()> {
         .map(|(i, n)| format!("shard {i}: {n}"))
         .collect();
     report.line(format!("hot shards: {}", hot.join(", ")));
-    report.line("verify: first response per client byte-identical to direct reader: OK");
-    if snap.shard_loads > reader.shard_count() as u64 {
-        report.line(format!(
-            "note: {} loads > {} shards (LRU eviction churn; raise reader capacity)",
-            snap.shard_loads,
-            reader.shard_count()
-        ));
+    if backfill {
+        report.line("verify: pass-2 responses byte-identical to pass-1, 0 new misses: OK");
+    } else {
+        report.line("verify: first response per client byte-identical to direct reader: OK");
+    }
+    if let Some(direct) = &direct {
+        if snap.shard_loads > direct.shard_count() as u64 {
+            report.line(format!(
+                "note: {} loads > {} shards (LRU eviction churn; raise reader capacity)",
+                snap.shard_loads,
+                direct.shard_count()
+            ));
+        }
     }
     report.finish();
     drop(server);
-    if synthetic {
+    // temp-dir caches are disposable; an explicit --cache dir is kept (a
+    // backfilled one resumes warm on the next run)
+    if synthetic && args.get("cache").is_none() {
         let _ = std::fs::remove_dir_all(&dir);
     }
     Ok(())
@@ -434,10 +586,14 @@ fn run() -> Result<()> {
             println!("           riders: alpha=A (CE mix), adapt=RATIO@FRAC (Table 9)");
             println!("           bare heads use --k N --rounds N --temp T --alpha A");
             println!("           plus: --steps N --teacher-steps N --quick=true");
+            println!("           --on-demand (cold write-through stack, no offline build)");
+            println!("           --build-workers N (cache-build pool; default: all cores)");
             println!("  serve    --cache DIR | --method <spec> [--work-dir D]");
             println!("           --port N | --unix PATH, --workers N --queue N --max-range N");
-            println!("  load-gen --cache DIR | --method <spec> | --synthetic N");
+            println!("           --backfill --synthetic N (cold-start: misses compute+fill)");
+            println!("  load-gen --cache DIR | --method <spec> | --synthetic N [--backfill]");
             println!("           --clients N --requests N --range N --simulate-disk-ms N");
+            println!("           (--backfill runs 2 passes and asserts pass 2 misses == 0)");
             println!("           (docs/SERVING.md: wire format, backpressure, SLO knobs)");
             println!("  toy      --task gauss|image");
             println!("  zipf     --k N --rounds N");

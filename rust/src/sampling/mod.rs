@@ -149,6 +149,58 @@ pub fn random_sampling_into(
     }
 }
 
+/// A deterministic, *position-keyed* synthetic target source: the RS-50
+/// draw over a zipf(vocab) distribution at stream position `pos` depends
+/// only on `(seed, pos)`, never on request order — the same addressability
+/// contract real teacher sampling honors ([`Pcg::mix_seed`]). Used as the
+/// origin of the serve layer's `--synthetic --backfill` write-through stack
+/// and by `load-gen`/CI cold-start smoke tests, so the whole tier pipeline
+/// runs on machines with no artifacts and no prior pipeline run.
+pub struct SyntheticZipfSource {
+    p: Vec<f32>,
+    positions: u64,
+    rounds: usize,
+    seed: u64,
+}
+
+impl SyntheticZipfSource {
+    pub fn new(vocab: usize, positions: u64, rounds: usize, seed: u64) -> SyntheticZipfSource {
+        SyntheticZipfSource { p: zipf::zipf(vocab, 1.0), positions, rounds, seed }
+    }
+
+    /// The target at `pos` (identical no matter when or how often asked).
+    pub fn target_at(&self, pos: u64) -> SparseTarget {
+        let mut rng = Pcg::new(Pcg::mix_seed(self.seed, pos));
+        random_sampling(&self.p, self.rounds, 1.0, &mut rng)
+    }
+}
+
+impl crate::cache::TargetSource for SyntheticZipfSource {
+    fn read_range_into(
+        &self,
+        start: u64,
+        len: usize,
+        out: &mut crate::cache::RangeBlock,
+    ) -> std::io::Result<()> {
+        out.clear();
+        for off in 0..len as u64 {
+            match start.checked_add(off) {
+                Some(pos) if pos < self.positions => out.push_target(&self.target_at(pos)),
+                _ => out.push_empty(),
+            }
+        }
+        Ok(())
+    }
+
+    fn cache_kind(&self) -> Result<crate::spec::CacheKind, crate::spec::SpecError> {
+        Ok(crate::spec::CacheKind::Rs { rounds: self.rounds as u32, temp: 1.0 })
+    }
+
+    fn positions(&self) -> u64 {
+        self.positions
+    }
+}
+
 #[cfg(test)]
 mod tests {
     use super::*;

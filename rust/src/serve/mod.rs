@@ -6,12 +6,15 @@
 //! * [`protocol`] — versioned wire format (`GetRange` / `GetManifest` /
 //!   `Stats` + typed error frames).
 //! * [`server`] — shard-affinity worker pool over a shared
-//!   [`CacheReader`](crate::cache::CacheReader), bounded per-worker queues
-//!   with admission control (overload is a typed, retryable error frame, not
-//!   an unbounded queue), and in-flight request coalescing: duplicate or
-//!   overlapping range requests trigger one disk fetch (shard-affine routing
-//!   serializes same-shard work; the reader's single-flight loads collapse
-//!   cross-worker overlap).
+//!   [`ServeSource`]: a plain [`CacheReader`](crate::cache::CacheReader), or
+//!   a write-through tier stack whose cold ranges compute via an origin and
+//!   backfill the cache (`serve --backfill` — students can start against a
+//!   cold cache; the second pass serves entirely from disk). Bounded
+//!   per-worker queues with admission control (overload is a typed,
+//!   retryable error frame, not an unbounded queue), and in-flight request
+//!   coalescing: duplicate or overlapping range requests trigger one disk
+//!   fetch (shard-affine routing serializes same-shard work; the reader's
+//!   single-flight loads collapse cross-worker overlap).
 //! * [`client`] — blocking client with reconnect + overload backoff, and
 //!   [`ServedReader`], a [`TargetSource`](crate::cache::TargetSource)
 //!   adapter so `trainer::train_student` consumes a remote cache unchanged.
@@ -25,7 +28,7 @@ pub mod stats;
 
 pub use client::{ServeClient, ServedReader};
 pub use protocol::{ErrCode, RemoteManifest, Request, Response, PROTOCOL_VERSION};
-pub use server::{ServeConfig, Server};
+pub use server::{ServeConfig, ServeSource, Server};
 pub use stats::{LatencyHistogram, ServeStats, StatsSnapshot, HIST_BUCKETS};
 
 use std::fmt;

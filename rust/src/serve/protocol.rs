@@ -22,7 +22,9 @@ use crate::serve::stats::{StatsSnapshot, HIST_BUCKETS};
 use crate::spec::{CacheKind, SpecError};
 
 /// Current wire protocol version; bumped on any incompatible change.
-pub const PROTOCOL_VERSION: u8 = 1;
+/// v2 extended the `Stats` frame with the tiered-source counters
+/// (hits/misses/backfilled/origin_computes — docs/SERVING.md).
+pub const PROTOCOL_VERSION: u8 = 2;
 
 /// Hard cap on a frame payload (16 MiB): a corrupt or hostile length prefix
 /// must not allocate unboundedly.
@@ -312,7 +314,17 @@ impl Response {
             }
             Response::Stats(s) => {
                 let mut p = preamble(OP_STATS);
-                for v in [s.requests, s.rejected, s.errors, s.shard_loads, s.coalesced] {
+                for v in [
+                    s.requests,
+                    s.rejected,
+                    s.errors,
+                    s.shard_loads,
+                    s.coalesced,
+                    s.tier.hits,
+                    s.tier.misses,
+                    s.tier.backfilled,
+                    s.tier.origin_computes,
+                ] {
                     p.extend_from_slice(&v.to_le_bytes());
                 }
                 debug_assert_eq!(s.hist.len(), HIST_BUCKETS);
@@ -437,6 +449,12 @@ impl Response {
                 let errors = c.u64()?;
                 let shard_loads = c.u64()?;
                 let coalesced = c.u64()?;
+                let tier = crate::cache::TierCounters {
+                    hits: c.u64()?,
+                    misses: c.u64()?,
+                    backfilled: c.u64()?,
+                    origin_computes: c.u64()?,
+                };
                 let nb = c.u8()? as usize;
                 if nb != HIST_BUCKETS {
                     return Err(bad(format!(
@@ -458,6 +476,7 @@ impl Response {
                     errors,
                     shard_loads,
                     coalesced,
+                    tier,
                     hist,
                     hot,
                 })
@@ -603,6 +622,12 @@ mod tests {
             errors: 1,
             shard_loads: 8,
             coalesced: 5,
+            tier: crate::cache::TierCounters {
+                hits: 90,
+                misses: 10,
+                backfilled: 4096,
+                origin_computes: 7,
+            },
             hist: (0..HIST_BUCKETS as u64).collect(),
             hot: vec![40, 0, 60],
         }));

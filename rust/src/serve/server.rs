@@ -3,13 +3,16 @@
 //! # Architecture
 //!
 //! One accept thread, one thread per connection, and a fixed pool of
-//! *shard-affine* workers over the shared [`CacheReader`]:
+//! *shard-affine* workers over a shared [`ServeSource`] — either a plain
+//! disk [`CacheReader`] or a write-through tier stack
+//! ([`WriteThrough<DynSource>`]) whose misses compute via an origin and
+//! backfill the cache:
 //!
 //! ```text
 //! conn thread:  read frame -> decode -> route by owning shard of `start`
 //!                 -> try_push onto worker queue (bounded)  --full--> Error{Overloaded}
 //!                 -> wait for the worker's reply -> write response frame
-//! worker i:     pop job -> reader.read_range_into (reused RangeBlock)
+//! worker i:     pop job -> source.read_range_into (reused RangeBlock)
 //!                 -> encode_targets straight from the block -> send payload
 //! ```
 //!
@@ -24,6 +27,14 @@
 //!   per worker, admission-checked with `RingBuffer::try_push`). A full
 //!   queue answers [`ErrCode::Overloaded`] immediately — the server sheds
 //!   load instead of queueing unboundedly, and the client backs off.
+//! * **Miss path.** Serving a write-through stack, a cold `GetRange`
+//!   computes the gap via the stack's origin, quantizes, backfills the
+//!   shard, and answers — so students can start distilling against a cold
+//!   cache, and a second pass over the same ranges is served entirely from
+//!   disk. The `Stats` frame carries the tier's hit/miss/backfill counters
+//!   (`tier.*`); shard affinity doubles as miss coalescing (duplicate cold
+//!   requests for one region serialize on one worker, and the tier's
+//!   internal lock makes the compute single-flight regardless).
 //! * **Latency accounting.** The connection thread measures accept-to-reply
 //!   time (queue wait included — what a client experiences) into the
 //!   log₂-bucket histogram; `Stats` exposes p50/p99 and hot-shard counters.
@@ -39,7 +50,10 @@ use std::sync::{mpsc, Arc, Mutex};
 use std::thread::JoinHandle;
 use std::time::{Duration, Instant};
 
-use crate::cache::{CacheReader, RangeBlock, RingBuffer};
+use crate::cache::{
+    CacheReader, DynSource, ProbCodec, RangeBlock, RingBuffer, TargetSource, TierCounters,
+    WriteThrough,
+};
 use crate::serve::protocol::{
     read_frame, write_frame, ErrCode, RemoteManifest, Request, Response, MAX_FRAME,
     PROTOCOL_VERSION,
@@ -51,6 +65,139 @@ use crate::serve::{Endpoint, Stream};
 /// immediately, so a write blocked this long means the peer stopped reading
 /// — drop the connection instead of pinning its thread (and shutdown).
 const WRITE_TIMEOUT: Duration = Duration::from_secs(10);
+
+/// What a [`Server`] can serve: range reads plus the routing/observability
+/// surface the serving layer needs. Implemented by the plain disk
+/// [`CacheReader`] and by the write-through tier stack
+/// ([`WriteThrough<DynSource>`]) — the server code is identical either way;
+/// only the cold-read behavior differs (error vs compute-and-backfill).
+pub trait ServeSource: Send + Sync + 'static {
+    /// Fill `out` with `[start, start + len)` — the worker-pool hot path.
+    fn read_range_into(&self, start: u64, len: usize, out: &mut RangeBlock)
+        -> std::io::Result<()>;
+
+    /// The manifest advertised to clients (spec/cache compatibility checks).
+    fn remote_manifest(&self) -> RemoteManifest;
+
+    /// Shard owning `pos`, if any — the worker-affinity routing key.
+    fn shard_index_of(&self, pos: u64) -> Option<usize>;
+
+    /// Shards in the hot-counter index space.
+    fn shard_count(&self) -> usize;
+
+    /// Visit the index of every shard overlapping `[start, end)` (hot-shard
+    /// accounting).
+    fn for_each_overlapping(&self, start: u64, end: u64, f: &mut dyn FnMut(usize));
+
+    /// `(shard_loads, coalesced_loads)` of the underlying disk reader.
+    fn load_counters(&self) -> (u64, u64);
+
+    /// Tier hit/miss/backfill counters; all zero for a plain disk cache.
+    fn tier_counters(&self) -> TierCounters {
+        TierCounters::default()
+    }
+}
+
+impl ServeSource for CacheReader {
+    fn read_range_into(
+        &self,
+        start: u64,
+        len: usize,
+        out: &mut RangeBlock,
+    ) -> std::io::Result<()> {
+        CacheReader::read_range_into(self, start, len, out)
+    }
+
+    fn remote_manifest(&self) -> RemoteManifest {
+        RemoteManifest {
+            cache_version: self.version,
+            positions: self.positions,
+            rounds: self.rounds,
+            bytes: self.bytes,
+            shard_count: self.shard_count() as u32,
+            kind: self.kind.clone(),
+        }
+    }
+
+    fn shard_index_of(&self, pos: u64) -> Option<usize> {
+        CacheReader::shard_index_of(self, pos)
+    }
+
+    fn shard_count(&self) -> usize {
+        CacheReader::shard_count(self)
+    }
+
+    fn for_each_overlapping(&self, start: u64, end: u64, f: &mut dyn FnMut(usize)) {
+        let entries = self.entries();
+        let first = entries.partition_point(|e| e.start + e.count <= start);
+        for (i, e) in entries.iter().enumerate().skip(first) {
+            if e.start >= end {
+                break;
+            }
+            f(i);
+        }
+    }
+
+    fn load_counters(&self) -> (u64, u64) {
+        (self.shard_loads(), self.coalesced_loads())
+    }
+}
+
+impl ServeSource for WriteThrough<DynSource> {
+    fn read_range_into(
+        &self,
+        start: u64,
+        len: usize,
+        out: &mut RangeBlock,
+    ) -> std::io::Result<()> {
+        TargetSource::read_range_into(self, start, len, out)
+    }
+
+    fn remote_manifest(&self) -> RemoteManifest {
+        let rounds = match self.codec() {
+            ProbCodec::Count { rounds } => rounds,
+            _ => 0,
+        };
+        RemoteManifest {
+            cache_version: 2,
+            positions: TargetSource::positions(self),
+            rounds,
+            bytes: self.flushed_bytes(),
+            shard_count: ServeSource::shard_count(self) as u32,
+            kind: self.kind_tag().map(|s| s.to_string()),
+        }
+    }
+
+    fn shard_index_of(&self, pos: u64) -> Option<usize> {
+        // the write-through partition is static: every position has an
+        // owning shard, cold or not — exactly what affinity routing wants
+        Some((pos / self.positions_per_shard() as u64) as usize)
+    }
+
+    fn shard_count(&self) -> usize {
+        let pps = self.positions_per_shard() as u64;
+        (TargetSource::positions(self).div_euclid(pps)
+            + u64::from(TargetSource::positions(self) % pps != 0)) as usize
+    }
+
+    fn for_each_overlapping(&self, start: u64, end: u64, f: &mut dyn FnMut(usize)) {
+        if start >= end {
+            return;
+        }
+        let pps = self.positions_per_shard() as u64;
+        for shard in (start / pps)..=((end - 1) / pps) {
+            f(shard as usize);
+        }
+    }
+
+    fn load_counters(&self) -> (u64, u64) {
+        self.reader_counters()
+    }
+
+    fn tier_counters(&self) -> TierCounters {
+        self.counters()
+    }
+}
 
 #[derive(Clone, Debug)]
 pub struct ServeConfig {
@@ -86,7 +233,7 @@ struct Job {
 }
 
 struct Shared {
-    reader: Arc<CacheReader>,
+    source: Arc<dyn ServeSource>,
     cfg: ServeConfig,
     stats: ServeStats,
     queues: Vec<Arc<RingBuffer<Job>>>,
@@ -112,14 +259,17 @@ pub struct Server {
 }
 
 impl Server {
-    /// Bind `endpoint` and start serving `reader`. `Endpoint::Tcp` with port
-    /// 0 binds an ephemeral port — read the actual one back from
-    /// [`Server::endpoint`].
-    pub fn start(
-        reader: Arc<CacheReader>,
+    /// Bind `endpoint` and start serving `source` — an
+    /// `Arc<CacheReader>` (plain disk cache) or an
+    /// `Arc<WriteThrough<DynSource>>` (cold-start backfill stack).
+    /// `Endpoint::Tcp` with port 0 binds an ephemeral port — read the actual
+    /// one back from [`Server::endpoint`].
+    pub fn start<S: ServeSource>(
+        source: Arc<S>,
         endpoint: Endpoint,
         cfg: ServeConfig,
     ) -> std::io::Result<Server> {
+        let source: Arc<dyn ServeSource> = source;
         let workers = cfg.workers.max(1);
         let (listener, endpoint, unix_path) = match &endpoint {
             Endpoint::Tcp(addr) => {
@@ -137,8 +287,8 @@ impl Server {
         let queues: Vec<Arc<RingBuffer<Job>>> =
             (0..workers).map(|_| RingBuffer::new(cfg.queue_cap.max(1))).collect();
         let shared = Arc::new(Shared {
-            stats: ServeStats::new(reader.shard_count()),
-            reader,
+            stats: ServeStats::new(source.shard_count()),
+            source,
             cfg,
             queues,
             shutdown: AtomicBool::new(false),
@@ -168,12 +318,11 @@ impl Server {
         &self.endpoint
     }
 
-    /// Freeze every counter (serving stats + the reader's load/coalesce
+    /// Freeze every counter (serving stats + the source's load and tier
     /// counters) — same data the `Stats` wire frame carries.
     pub fn stats_snapshot(&self) -> StatsSnapshot {
-        self.shared
-            .stats
-            .snapshot_with(self.shared.reader.shard_loads(), self.shared.reader.coalesced_loads())
+        let (loads, coalesced) = self.shared.source.load_counters();
+        self.shared.stats.snapshot_with(loads, coalesced, self.shared.source.tier_counters())
     }
 
     /// Stop accepting, drain in-flight requests, join every thread, and (for
@@ -249,7 +398,7 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize) {
         // jobs nobody pops, wedging every connection routed to it
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
             shared
-                .reader
+                .source
                 .read_range_into(job.start, job.len, &mut block)
                 .map(|()| Response::encode_targets(&block))
         }))
@@ -268,8 +417,8 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize) {
 /// Worker index for a range starting at `start`: the owning shard of the
 /// first position, or a spread over workers for positions outside every
 /// shard (still a valid request — it answers empty targets).
-fn route(reader: &CacheReader, start: u64, workers: usize) -> usize {
-    match reader.shard_index_of(start) {
+fn route(source: &dyn ServeSource, start: u64, workers: usize) -> usize {
+    match source.shard_index_of(start) {
         Some(shard) => shard % workers,
         None => (start as usize) % workers,
     }
@@ -331,24 +480,16 @@ fn conn_loop(mut stream: Stream, shared: &Arc<Shared>) {
 fn handle_request(req: Request, shared: &Arc<Shared>) -> Vec<u8> {
     match req {
         Request::Ping => Response::Pong.encode(),
-        Request::GetManifest => {
-            let r = &shared.reader;
-            Response::Manifest(RemoteManifest {
-                cache_version: r.version,
-                positions: r.positions,
-                rounds: r.rounds,
-                bytes: r.bytes,
-                shard_count: r.shard_count() as u32,
-                kind: r.kind.clone(),
-            })
+        Request::GetManifest => Response::Manifest(shared.source.remote_manifest()).encode(),
+        Request::GetStats => {
+            let (loads, coalesced) = shared.source.load_counters();
+            Response::Stats(shared.stats.snapshot_with(
+                loads,
+                coalesced,
+                shared.source.tier_counters(),
+            ))
             .encode()
         }
-        Request::GetStats => Response::Stats(
-            shared
-                .stats
-                .snapshot_with(shared.reader.shard_loads(), shared.reader.coalesced_loads()),
-        )
-        .encode(),
         Request::GetRange { start, len } => serve_range(shared, start, len as usize),
     }
 }
@@ -372,7 +513,7 @@ fn serve_range(shared: &Arc<Shared>, start: u64, len: usize) -> Vec<u8> {
         .encode();
     };
     let t0 = Instant::now();
-    let worker = route(&shared.reader, start, shared.queues.len());
+    let worker = route(&*shared.source, start, shared.queues.len());
     let (tx, rx) = mpsc::sync_channel(1);
     let job = Job { start, len, done: tx };
     if shared.queues[worker].try_push(job).is_err() {
@@ -388,14 +529,9 @@ fn serve_range(shared: &Arc<Shared>, start: u64, len: usize) -> Vec<u8> {
             shared.stats.requests.fetch_add(1, Ordering::Relaxed);
             shared.stats.hist.record(t0.elapsed());
             // hot-shard accounting: every shard the range overlaps
-            let entries = shared.reader.entries();
-            let first = entries.partition_point(|e| e.start + e.count <= start);
-            for (i, e) in entries.iter().enumerate().skip(first) {
-                if e.start >= end {
-                    break;
-                }
-                shared.stats.touch_shard(i);
-            }
+            shared
+                .source
+                .for_each_overlapping(start, end, &mut |i| shared.stats.touch_shard(i));
             payload
         }
         Ok(Err(msg)) => {

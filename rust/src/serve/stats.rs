@@ -11,6 +11,8 @@
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::time::Duration;
 
+use crate::cache::TierCounters;
+
 /// Number of log₂ microsecond buckets: bucket 31 covers ~35 minutes — far
 /// beyond any sane request — so the top bucket never saturates in practice.
 pub const HIST_BUCKETS: usize = 32;
@@ -79,14 +81,21 @@ impl ServeStats {
     }
 
     /// Freeze every counter, folding in the reader-level counters the server
-    /// tracks (total shard decodes; in-flight loads coalesced away).
-    pub fn snapshot_with(&self, shard_loads: u64, coalesced: u64) -> StatsSnapshot {
+    /// tracks (total shard decodes; in-flight loads coalesced away) and the
+    /// tier counters of the served source (all zero for a plain disk cache).
+    pub fn snapshot_with(
+        &self,
+        shard_loads: u64,
+        coalesced: u64,
+        tier: TierCounters,
+    ) -> StatsSnapshot {
         StatsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
             shard_loads,
             coalesced,
+            tier,
             hist: self.hist.snapshot(),
             hot: self.hot.iter().map(|h| h.load(Ordering::Relaxed)).collect(),
         }
@@ -103,6 +112,12 @@ pub struct StatsSnapshot {
     pub shard_loads: u64,
     /// shard requests coalesced onto another thread's in-flight decode
     pub coalesced: u64,
+    /// tiered-source counters: range hits/misses, positions backfilled, and
+    /// origin computes — all zero when serving a plain disk cache. The
+    /// cold-start smoke contract reads these: after a full first pass, a
+    /// repeated pass must leave `tier.misses` and `tier.origin_computes`
+    /// unchanged (everything served from the disk tier).
+    pub tier: TierCounters,
     /// log₂ µs latency buckets ([`HIST_BUCKETS`] entries)
     pub hist: Vec<u64>,
     /// per-shard request-overlap counters, indexed like the manifest shards
@@ -178,7 +193,7 @@ mod tests {
             stats.hist.record(Duration::from_micros(8));
         }
         stats.hist.record(Duration::from_micros(2000));
-        let s = stats.snapshot_with(0, 0);
+        let s = stats.snapshot_with(0, 0, TierCounters::default());
         assert_eq!(s.samples(), 100);
         assert_eq!(s.p50_us(), Some(16)); // upper edge of bucket 3
         assert_eq!(s.p99_us(), Some(16)); // rank 99 is still a fast sample
@@ -194,7 +209,7 @@ mod tests {
         }
         stats.touch_shard(0);
         stats.touch_shard(99); // out of range: ignored, not a panic
-        let s = stats.snapshot_with(0, 0);
+        let s = stats.snapshot_with(0, 0, TierCounters::default());
         assert_eq!(s.hot_shards(10), vec![(2, 5), (0, 1)]);
         assert_eq!(s.hot_shards(1), vec![(2, 5)]);
     }

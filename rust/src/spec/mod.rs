@@ -246,7 +246,7 @@ impl DistillSpec {
             | Variant::GhostToken { .. }
             | Variant::NaiveFix { .. } => CacheKind::TopK,
         };
-        Some(CachePlan { kind })
+        Some(CachePlan::prebuilt(kind))
     }
 
     /// Typed compatibility check: can a cache of `cache` kind serve this
@@ -395,14 +395,40 @@ impl fmt::Display for CacheKind {
     }
 }
 
+/// How a spec's cache requirement is satisfied: built offline to full
+/// coverage before training starts (the paper's pre-computed setting), or
+/// filled on demand through a write-through tier stack whose misses compute
+/// from the live teacher (`Pipeline::run_spec_on_demand`, `--on-demand`).
+/// Both modes fill the *same* registry directory with the *same* bytes —
+/// position-keyed sampling makes the cache content order-independent — so a
+/// run can start on-demand and a later offline build resumes from whatever
+/// coverage it left behind.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub enum CacheMode {
+    #[default]
+    Prebuilt,
+    OnDemand,
+}
+
 /// Resolved cache requirement of a spec: the kind to build plus derived
-/// metadata (codec, registry/directory tag).
+/// metadata (codec, registry/directory tag) and the fill mode.
 #[derive(Clone, Copy, Debug, PartialEq)]
 pub struct CachePlan {
     pub kind: CacheKind,
+    pub mode: CacheMode,
 }
 
 impl CachePlan {
+    pub fn prebuilt(kind: CacheKind) -> CachePlan {
+        CachePlan { kind, mode: CacheMode::Prebuilt }
+    }
+
+    /// The same plan, filled on demand through the write-through stack.
+    pub fn on_demand(mut self) -> CachePlan {
+        self.mode = CacheMode::OnDemand;
+        self
+    }
+
     pub fn codec(&self) -> ProbCodec {
         self.kind.codec()
     }

@@ -34,6 +34,19 @@ impl Pcg {
         Pcg::new(self.next_u64() ^ tag.wrapping_mul(0x9E3779B97F4A7C15))
     }
 
+    /// Stateless key derivation: a decorrelated seed for the `(seed, key)`
+    /// pair (SplitMix64 finalizer). Position-keyed randomness is what makes
+    /// teacher sampling *addressable*: the draw at a stream position is the
+    /// same whether it is computed by a sequential cache build, a resumed
+    /// build, or an on-demand miss-path compute — order independence is the
+    /// determinism contract of the tiered target sources.
+    pub fn mix_seed(seed: u64, key: u64) -> u64 {
+        let mut z = seed ^ key.wrapping_mul(0x9E3779B97F4A7C15).wrapping_add(0xD1B54A32D192ED03);
+        z = (z ^ (z >> 30)).wrapping_mul(0xBF58476D1CE4E5B9);
+        z = (z ^ (z >> 27)).wrapping_mul(0x94D049BB133111EB);
+        z ^ (z >> 31)
+    }
+
     #[inline]
     pub fn next_u64(&mut self) -> u64 {
         // SplitMix64 finalizer over an LCG-advanced state: statistically

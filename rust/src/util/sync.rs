@@ -1,0 +1,177 @@
+//! Shared synchronization primitives.
+//!
+//! [`RingBuffer`] started life inside `cache::writer` as the producer queue
+//! feeding the async shard writer, but it is a general bounded MPMC queue:
+//! `coordinator::cachebuild` feeds its sparsify/encode worker pool through
+//! one and `serve::Server` uses `try_push` as its admission-control gate.
+//! It lives here so neither module has to reach into the writer's innards;
+//! `cache` re-exports it for compatibility.
+
+use std::collections::VecDeque;
+use std::sync::{Arc, Condvar, Mutex};
+
+/// Bounded MPMC ring buffer (Mutex + Condvar; crossbeam not needed at our
+/// throughput). `push` blocks when full — that *is* the backpressure the
+/// paper's shared-memory ring buffers provide.
+pub struct RingBuffer<T> {
+    inner: Mutex<RingInner<T>>,
+    not_full: Condvar,
+    not_empty: Condvar,
+    cap: usize,
+}
+
+struct RingInner<T> {
+    queue: VecDeque<T>,
+    closed: bool,
+}
+
+impl<T> RingBuffer<T> {
+    pub fn new(cap: usize) -> Arc<RingBuffer<T>> {
+        Arc::new(RingBuffer {
+            inner: Mutex::new(RingInner { queue: VecDeque::with_capacity(cap), closed: false }),
+            not_full: Condvar::new(),
+            not_empty: Condvar::new(),
+            cap,
+        })
+    }
+
+    /// Blocking push; returns false if the buffer is closed.
+    pub fn push(&self, item: T) -> bool {
+        let mut g = self.inner.lock().unwrap();
+        while g.queue.len() >= self.cap && !g.closed {
+            g = self.not_full.wait(g).unwrap();
+        }
+        if g.closed {
+            return false;
+        }
+        g.queue.push_back(item);
+        self.not_empty.notify_one();
+        true
+    }
+
+    /// Non-blocking push for admission-control callers (the serving layer's
+    /// bounded work queues): hands the item back instead of parking when the
+    /// buffer is full or closed, so the caller can reject the request with a
+    /// typed overload error rather than queue unboundedly.
+    pub fn try_push(&self, item: T) -> Result<(), T> {
+        let mut g = self.inner.lock().unwrap();
+        if g.closed || g.queue.len() >= self.cap {
+            return Err(item);
+        }
+        g.queue.push_back(item);
+        self.not_empty.notify_one();
+        Ok(())
+    }
+
+    /// Blocking pop; None once closed and drained.
+    pub fn pop(&self) -> Option<T> {
+        let mut g = self.inner.lock().unwrap();
+        loop {
+            if let Some(x) = g.queue.pop_front() {
+                self.not_full.notify_one();
+                return Some(x);
+            }
+            if g.closed {
+                return None;
+            }
+            g = self.not_empty.wait(g).unwrap();
+        }
+    }
+
+    pub fn close(&self) {
+        let mut g = self.inner.lock().unwrap();
+        g.closed = true;
+        self.not_empty.notify_all();
+        self.not_full.notify_all();
+    }
+
+    pub fn len(&self) -> usize {
+        self.inner.lock().unwrap().queue.len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn ring_fifo_order() {
+        let ring = RingBuffer::new(4);
+        for i in 0..4 {
+            ring.push(i);
+        }
+        ring.close();
+        let got: Vec<i32> = std::iter::from_fn(|| ring.pop()).collect();
+        assert_eq!(got, vec![0, 1, 2, 3]);
+    }
+
+    #[test]
+    fn ring_try_push_rejects_when_full_or_closed() {
+        let ring = RingBuffer::new(2);
+        assert!(ring.try_push(1).is_ok());
+        assert!(ring.try_push(2).is_ok());
+        assert_eq!(ring.try_push(3), Err(3), "full buffer hands the item back");
+        assert_eq!(ring.pop(), Some(1));
+        assert!(ring.try_push(3).is_ok(), "a pop frees a slot");
+        ring.close();
+        assert_eq!(ring.try_push(4), Err(4), "closed buffer rejects");
+    }
+
+    #[test]
+    fn ring_backpressure_blocks_then_drains() {
+        let ring = RingBuffer::new(2);
+        let r2 = Arc::clone(&ring);
+        let producer = std::thread::spawn(move || {
+            for i in 0..100 {
+                assert!(r2.push(i));
+            }
+            r2.close();
+        });
+        let mut got = Vec::new();
+        while let Some(x) = ring.pop() {
+            got.push(x);
+        }
+        producer.join().unwrap();
+        assert_eq!(got, (0..100).collect::<Vec<_>>());
+    }
+
+    #[test]
+    fn ring_concurrent_producers_fifo_per_producer() {
+        let ring: Arc<RingBuffer<(u32, u32)>> = RingBuffer::new(8);
+        let mut handles = Vec::new();
+        for p in 0..4u32 {
+            let r = Arc::clone(&ring);
+            handles.push(std::thread::spawn(move || {
+                for i in 0..50u32 {
+                    r.push((p, i));
+                }
+            }));
+        }
+        let consumer = {
+            let r = Arc::clone(&ring);
+            std::thread::spawn(move || {
+                let mut got = Vec::new();
+                while got.len() < 200 {
+                    if let Some(x) = r.pop() {
+                        got.push(x);
+                    }
+                }
+                got
+            })
+        };
+        for h in handles {
+            h.join().unwrap();
+        }
+        let got = consumer.join().unwrap();
+        ring.close();
+        // per-producer order preserved (FIFO invariant under concurrency)
+        for p in 0..4u32 {
+            let seq: Vec<u32> = got.iter().filter(|(q, _)| *q == p).map(|&(_, i)| i).collect();
+            assert_eq!(seq, (0..50).collect::<Vec<_>>());
+        }
+    }
+}

@@ -1,0 +1,273 @@
+//! Integration tests for the tiered target-source stack (DESIGN.md §Tiered
+//! sources), reusing the golden-block harness style of
+//! `rust/tests/trainer_hotpath.rs` (zipf RS-50 targets through the real
+//! writer/reader):
+//!
+//! * crash-resume — interrupt a build mid-shard (writer dropped without
+//!   `finish`), reopen, complete, and the resulting cache directory is
+//!   **byte-identical** to a one-shot build, `index.json` included;
+//! * determinism across tiers — `assemble_sparse_block` over a cold
+//!   write-through stack produces bit-identical tensor blocks to the same
+//!   assembly over the fully pre-built cache, and a reopened (warm) stack
+//!   reports zero origin computes;
+//! * the `MemoryTier` front is transparent and its counters move.
+
+use std::path::{Path, PathBuf};
+use std::sync::atomic::{AtomicU64, Ordering};
+
+use rskd::cache::{
+    CacheReader, CacheWriter, MemoryTier, ProbCodec, RangeBlock, TargetSource, WriteThrough,
+};
+use rskd::coordinator::{
+    assemble_sparse_block, assemble_sparse_block_into, AssembleScratch, SparseBlock,
+};
+use rskd::data::loader::Batch;
+use rskd::sampling::random_sampling;
+use rskd::sampling::zipf::zipf;
+use rskd::spec::{CacheKind, SpecError, Variant};
+use rskd::util::rng::Pcg;
+
+const VOCAB: usize = 512;
+const CODEC: ProbCodec = ProbCodec::Count { rounds: 50 };
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rskd-tiering-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+/// Position-keyed RS-50 zipf target — the golden-block harness draw, made
+/// addressable (seeded per position) so any build order produces it.
+fn target_at(pos: u64) -> rskd::cache::SparseTarget {
+    let p = zipf(VOCAB, 1.0);
+    random_sampling(&p, 50, 1.0, &mut Pcg::new(Pcg::mix_seed(5, pos)))
+}
+
+/// Origin serving [0, positions) of `target_at`, counting its compute calls.
+struct GoldenOrigin {
+    positions: u64,
+    computes: AtomicU64,
+}
+
+impl GoldenOrigin {
+    fn new(positions: u64) -> GoldenOrigin {
+        GoldenOrigin { positions, computes: AtomicU64::new(0) }
+    }
+}
+
+impl TargetSource for GoldenOrigin {
+    fn read_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> std::io::Result<()> {
+        self.computes.fetch_add(1, Ordering::Relaxed);
+        out.clear();
+        for off in 0..len as u64 {
+            match start.checked_add(off) {
+                Some(pos) if pos < self.positions => out.push_target(&target_at(pos)),
+                _ => out.push_empty(),
+            }
+        }
+        Ok(())
+    }
+
+    fn cache_kind(&self) -> Result<CacheKind, SpecError> {
+        Ok(CacheKind::Rs { rounds: 50, temp: 1.0 })
+    }
+
+    fn positions(&self) -> u64 {
+        self.positions
+    }
+}
+
+/// One-shot golden build over [0, n) with shard span `pps`.
+fn build_golden(dir: &Path, n: u64, pps: usize) {
+    let w = CacheWriter::create_with_kind(dir, CODEC, pps, 64, Some("rs:rounds=50,temp=1".into()))
+        .unwrap();
+    for pos in 0..n {
+        assert!(w.push(pos, target_at(pos)));
+    }
+    w.finish().unwrap();
+}
+
+fn dir_bytes(dir: &Path) -> Vec<(String, Vec<u8>)> {
+    let mut files: Vec<(String, Vec<u8>)> = std::fs::read_dir(dir)
+        .unwrap()
+        .map(|e| {
+            let e = e.unwrap();
+            (e.file_name().into_string().unwrap(), std::fs::read(e.path()).unwrap())
+        })
+        .collect();
+    files.sort_by(|a, b| a.0.cmp(&b.0));
+    files
+}
+
+/// Satellite: interrupt a build mid-shard, reopen, complete — byte-identical
+/// to a one-shot build (shards *and* manifest).
+#[test]
+fn crash_resume_build_is_byte_identical_to_one_shot() {
+    let (n, pps) = (90u64, 32usize);
+    let golden = tmp_dir("golden");
+    build_golden(&golden, n, pps);
+
+    let resumed = tmp_dir("resumed");
+    let w =
+        CacheWriter::create_with_kind(&resumed, CODEC, pps, 64, Some("rs:rounds=50,temp=1".into()))
+            .unwrap();
+    // shard 0 completes; shard 1 is mid-flight when the "crash" hits
+    for pos in 0..40u64 {
+        assert!(w.push(pos, target_at(pos)));
+    }
+    while w.backlog() > 0 {
+        std::thread::yield_now();
+    }
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    w.abort(); // drop without finish(): no trailing flush, no manifest
+    assert!(!resumed.join("index.json").exists());
+
+    let (w, coverage) =
+        CacheWriter::resume(&resumed, CODEC, pps, 64, Some("rs:rounds=50,temp=1".into())).unwrap();
+    assert!(coverage.covers(0, 32), "completed shard must be covered");
+    assert!(!coverage.contains(32), "mid-flight shard was lost with the crash");
+    for pos in 0..n {
+        if !coverage.contains(pos) {
+            assert!(w.push(pos, target_at(pos)));
+        }
+    }
+    let stats = w.finish().unwrap();
+    assert_eq!(stats.positions, n);
+
+    assert_eq!(dir_bytes(&golden), dir_bytes(&resumed), "resumed build must be byte-identical");
+    let _ = std::fs::remove_dir_all(&golden);
+    let _ = std::fs::remove_dir_all(&resumed);
+}
+
+/// Acceptance criterion (engine-free form): assembling training blocks
+/// against a cold write-through stack is bit-identical to assembling against
+/// a fully pre-built cache, and once the stack has covered the ranges, a
+/// reopened stack serves them with zero origin computes.
+#[test]
+fn cold_stack_assembles_bit_identical_blocks_and_reopens_warm() {
+    let (n, pps) = (160u64, 32usize);
+    let prebuilt = tmp_dir("prebuilt");
+    build_golden(&prebuilt, n, pps);
+    let reader = CacheReader::open(&prebuilt).unwrap();
+
+    let (b, s, k_slots) = (4usize, 16usize, 24usize);
+    let mut rng = Pcg::new(9);
+    let batch = Batch {
+        tokens: vec![1i32; b * s],
+        labels: (0..b * s).map(|_| rng.below(VOCAB as u64) as i32).collect(),
+        // rows: shard-interior, shard-spanning, tail-padding, plain
+        offsets: vec![3, 56, 150, 100],
+        batch: b,
+        seq: s,
+    };
+    let variant = Variant::Rs { rounds: 50, temp: 1.0 };
+    let legacy = assemble_sparse_block(&reader, &batch, VOCAB, k_slots, variant, None);
+
+    let cold_dir = tmp_dir("coldstack");
+    {
+        let wt = WriteThrough::open(
+            GoldenOrigin::new(n),
+            &cold_dir,
+            CODEC,
+            pps,
+            Some("rs:rounds=50,temp=1".into()),
+        )
+        .unwrap()
+        .with_align(s as u64);
+        let stack = MemoryTier::new(&wt);
+        let mut scratch = AssembleScratch::serial();
+        let mut blk = SparseBlock::default();
+        assemble_sparse_block_into(
+            &stack, &batch, VOCAB, k_slots, variant, None, &mut scratch, &mut blk,
+        )
+        .unwrap();
+        assert_eq!(blk.idx, legacy.idx, "cold-stack assembly must match the prebuilt cache");
+        let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+        assert_eq!(bits(&blk.val), bits(&legacy.val));
+        assert_eq!(bits(&blk.smooth), bits(&legacy.smooth));
+        let c = wt.counters();
+        assert!(c.misses > 0 && c.backfilled > 0 && c.origin_computes > 0);
+
+        // second epoch over the same rows: memory tier absorbs the reads
+        let (hits0, _) = stack.counters();
+        assemble_sparse_block_into(
+            &stack, &batch, VOCAB, k_slots, variant, None, &mut scratch, &mut blk,
+        )
+        .unwrap();
+        let (hits1, _) = stack.counters();
+        assert_eq!(hits1, hits0 + b as u64, "every row must hit the memory tier");
+        assert_eq!(
+            wt.counters().origin_computes,
+            c.origin_computes,
+            "the second epoch must not touch the origin"
+        );
+        wt.checkpoint().unwrap();
+    }
+    // a new session over the backfilled directory: still bit-identical to
+    // the prebuilt cache, and the origin is never consulted
+    {
+        let origin = GoldenOrigin::new(n);
+        let wt = WriteThrough::open(&origin, &cold_dir, CODEC, pps, None).unwrap();
+        let mut scratch = AssembleScratch::serial();
+        let mut blk = SparseBlock::default();
+        assemble_sparse_block_into(
+            &wt, &batch, VOCAB, k_slots, variant, None, &mut scratch, &mut blk,
+        )
+        .unwrap();
+        assert_eq!(blk.idx, legacy.idx);
+        assert_eq!(origin.computes.load(Ordering::Relaxed), 0, "warm reopen must not recompute");
+        assert_eq!(wt.counters().origin_computes, 0);
+    }
+    let _ = std::fs::remove_dir_all(&prebuilt);
+    let _ = std::fs::remove_dir_all(&cold_dir);
+}
+
+/// A resumable offline build can *finish* what an on-demand session started:
+/// write-through coverage from a partial session is adopted by
+/// `CacheWriter::resume`, and the completed directory reads back identical
+/// to a one-shot golden build at every position.
+#[test]
+fn offline_build_resumes_from_write_through_coverage() {
+    let (n, pps) = (96u64, 32usize);
+    let golden = tmp_dir("golden-handoff");
+    build_golden(&golden, n, pps);
+
+    let dir = tmp_dir("handoff");
+    {
+        // an "on-demand session": only the middle of the stream was touched
+        let wt = WriteThrough::open(
+            GoldenOrigin::new(n),
+            &dir,
+            CODEC,
+            pps,
+            Some("rs:rounds=50,temp=1".into()),
+        )
+        .unwrap();
+        let mut blk = RangeBlock::new();
+        wt.read_range_into(20, 50, &mut blk).unwrap(); // covers [20, 70)
+        wt.checkpoint().unwrap();
+    }
+    // the offline build drives the rest to full coverage
+    let (w, coverage) =
+        CacheWriter::resume(&dir, CODEC, pps, 64, Some("rs:rounds=50,temp=1".into())).unwrap();
+    assert!(coverage.covers(20, 70));
+    let skipped = coverage.count();
+    assert_eq!(skipped, 50);
+    for pos in 0..n {
+        if !coverage.contains(pos) {
+            assert!(w.push(pos, target_at(pos)));
+        }
+    }
+    let stats = w.finish().unwrap();
+    assert_eq!(stats.positions, n);
+
+    // every position decodes identically to the one-shot golden build
+    let a = CacheReader::open(&golden).unwrap();
+    let b = CacheReader::open(&dir).unwrap();
+    let (mut ba, mut bb) = (RangeBlock::new(), RangeBlock::new());
+    a.read_range_into(0, n as usize, &mut ba).unwrap();
+    b.read_range_into(0, n as usize, &mut bb).unwrap();
+    assert_eq!(ba, bb, "handoff build must decode identical to one-shot");
+    let _ = std::fs::remove_dir_all(&golden);
+    let _ = std::fs::remove_dir_all(&dir);
+}

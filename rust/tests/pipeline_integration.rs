@@ -219,3 +219,50 @@ fn cache_range_consistency() {
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// The tiered-sources acceptance criterion, end to end: a student trained
+/// against a **cold** write-through stack (teacher-computed misses,
+/// quantize-on-the-way-in backfill) produces bit-identical losses to one
+/// trained against a fully pre-built cache of the same spec/seed — and once
+/// the stack has seen a full pass, a repeat run computes nothing
+/// (`teacher_computes == 0`; everything served from the disk tier).
+#[test]
+fn cold_on_demand_stack_matches_prebuilt_cache() {
+    let Some(dir) = artifacts() else {
+        eprintln!("skipping: artifacts/small not built");
+        return;
+    };
+    let mut cfg = micro_cfg(dir);
+    cfg.work_dir = PathBuf::from("target/test-ondemand");
+    let mut pipe = Pipeline::prepare(cfg).unwrap();
+    let bits = |v: &[f32]| v.iter().map(|x| x.to_bits()).collect::<Vec<u32>>();
+
+    // rounds=25 truncates the AOT sampler's draw; distinct from the rs(50)
+    // registry entries other tests build
+    let spec = DistillSpec::rs(25);
+    let tag = spec.cache_plan().unwrap().dir_tag();
+    // make the stack genuinely cold across test re-runs
+    let _ = std::fs::remove_dir_all(pipe.cache_dir(&tag));
+
+    let (_s1, tr_cold, ev_cold, tiers_cold) = pipe.run_spec_on_demand(&spec, 5).unwrap();
+    assert!(!tr_cold.diverged);
+    assert!(tiers_cold.origin_computes > 0, "a cold stack must compute via the teacher");
+    assert!(tiers_cold.backfilled > 0);
+    assert!(ev_cold.lm_loss.is_finite());
+
+    // the offline path resumes the partially-backfilled directory to full
+    // coverage, then trains with the default (prefetched) loop
+    let (_s2, tr_pre, _ev_pre) = pipe.run_spec(&spec, 5).unwrap();
+    assert_eq!(
+        bits(&tr_cold.losses),
+        bits(&tr_pre.losses),
+        "cold write-through stack must train bit-identically to the prebuilt cache"
+    );
+    assert_eq!(bits(&tr_cold.kd_losses), bits(&tr_pre.kd_losses));
+
+    // warm repeat: the directory is fully covered now — zero teacher computes
+    let (_s3, tr_warm, _ev_warm, tiers_warm) = pipe.run_spec_on_demand(&spec, 5).unwrap();
+    assert_eq!(tiers_warm.origin_computes, 0, "warm stack must not touch the teacher");
+    assert_eq!(tiers_warm.backfilled, 0);
+    assert_eq!(bits(&tr_warm.losses), bits(&tr_cold.losses));
+}

@@ -8,7 +8,10 @@ use std::path::PathBuf;
 use std::sync::{Arc, Barrier};
 use std::time::Duration;
 
-use rskd::cache::{CacheReader, CacheWriter, ProbCodec, SparseTarget, TargetSource};
+use rskd::cache::{
+    CacheReader, CacheWriter, DynSource, ProbCodec, SparseTarget, TargetSource, WriteThrough,
+};
+use rskd::sampling::SyntheticZipfSource;
 use rskd::serve::{
     Endpoint, ErrCode, Request, Response, ServeClient, ServeConfig, ServedReader, Server,
 };
@@ -252,5 +255,69 @@ fn typed_error_frames_for_bad_requests() {
     let snap = server.stats_snapshot();
     assert!(snap.errors >= 3);
     drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// The serve-layer miss path: a server over a *cold* write-through stack
+/// answers `GetRange` by computing via the origin, backfilling the shard,
+/// and serving — then a repeat of the same ranges is served entirely from
+/// the disk tier (`tier.misses` and `tier.origin_computes` stop moving),
+/// byte-identical, and the directory reopens warm across servers.
+#[test]
+fn cold_backfill_server_warms_up_and_serves_from_disk() {
+    let dir = tdir("backfill");
+    let stack = |computed_dir: &std::path::Path| -> Arc<WriteThrough<DynSource>> {
+        let origin: DynSource = Box::new(SyntheticZipfSource::new(128, 256, 50, 7));
+        Arc::new(
+            WriteThrough::open(
+                origin,
+                computed_dir,
+                ProbCodec::Count { rounds: 50 },
+                16,
+                Some("rs:rounds=50,temp=1".into()),
+            )
+            .unwrap(),
+        )
+    };
+    let first_pass: Vec<Vec<SparseTarget>>;
+    {
+        let server = Server::start(stack(&dir), tcp0(), ServeConfig::default()).unwrap();
+        let mut client = ServeClient::connect(server.endpoint()).unwrap();
+        // the advertised manifest lets spec checks run against a cold cache
+        let served = ServedReader::connect(server.endpoint()).unwrap();
+        assert_eq!(served.cache_kind().unwrap(), CacheKind::Rs { rounds: 50, temp: 1.0 });
+        assert_eq!(served.manifest().positions, 256);
+
+        let ranges = [(0u64, 40usize), (100, 40), (30, 90), (240, 32)];
+        first_pass = ranges.iter().map(|&(s, l)| client.get_range(s, l).unwrap()).collect();
+        let cold = server.stats_snapshot();
+        assert!(cold.tier.misses > 0, "a cold server must miss");
+        assert!(cold.tier.backfilled > 0);
+        assert!(cold.tier.origin_computes > 0);
+
+        // repeat: zero new misses / computes, identical bytes
+        let warm_pass: Vec<Vec<SparseTarget>> =
+            ranges.iter().map(|&(s, l)| client.get_range(s, l).unwrap()).collect();
+        assert_eq!(warm_pass, first_pass, "warm answers must be byte-identical");
+        let warm = server.stats_snapshot();
+        assert_eq!(warm.tier.misses, cold.tier.misses, "second pass must not miss");
+        assert_eq!(warm.tier.origin_computes, cold.tier.origin_computes);
+        assert_eq!(warm.tier.hits, cold.tier.hits + ranges.len() as u64);
+        drop(server);
+    }
+    // a brand-new server over the same directory reopens with the coverage
+    // intact: same bytes, still zero origin computes
+    {
+        let reopened = stack(&dir);
+        let server = Server::start(Arc::clone(&reopened), tcp0(), ServeConfig::default()).unwrap();
+        let mut client = ServeClient::connect(server.endpoint()).unwrap();
+        let again: Vec<Vec<SparseTarget>> = [(0u64, 40usize), (100, 40), (30, 90), (240, 32)]
+            .iter()
+            .map(|&(s, l)| client.get_range(s, l).unwrap())
+            .collect();
+        assert_eq!(again, first_pass, "a reopened cache must serve the same bytes");
+        assert_eq!(server.stats_snapshot().tier.origin_computes, 0);
+        drop(server);
+    }
     let _ = std::fs::remove_dir_all(&dir);
 }

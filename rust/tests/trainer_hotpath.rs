@@ -18,7 +18,7 @@
 use std::path::PathBuf;
 use std::sync::Arc;
 
-use rskd::cache::{CacheReader, CacheWriter, ProbCodec, RangeBlock, TargetSource};
+use rskd::cache::{CacheReader, CacheWriter, MemoryTier, ProbCodec, RangeBlock, TargetSource};
 use rskd::coordinator::{
     assemble_sparse_block, assemble_sparse_block_into, AssembleScratch, SparseBlock, TrainOpts,
 };
@@ -131,7 +131,11 @@ fn golden_assembly_matches_legacy_for_every_variant_and_source() {
         Variant::NaiveFix { k: 8 },
     ];
     let adaptives = [None, Some(AdaptiveLr { ratio: 2.0, hard_frac: 0.3 })];
-    let sources: [(&str, &dyn TargetSource); 2] = [("local", &*reader), ("served", &served)];
+    // the in-RAM tier must be assembly-transparent too (hits are memcpys of
+    // the same decoded blocks)
+    let tiered = MemoryTier::new(&*reader);
+    let sources: [(&str, &dyn TargetSource); 3] =
+        [("local", &*reader), ("served", &served), ("tiered", &tiered)];
     let mut blk = SparseBlock::default();
     for (name, source) in sources {
         for &variant in &variants {
