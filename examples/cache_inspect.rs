@@ -13,7 +13,7 @@
 use anyhow::Result;
 use rskd::cache::format::CacheManifest;
 use rskd::cache::quant::{self, ProbCodec};
-use rskd::cache::{CacheReader, CacheWriter, SparseTarget};
+use rskd::cache::{CacheReader, CacheWriter, RangeBlock, ShardCodec, SparseTarget};
 use rskd::report::Report;
 use rskd::sampling::zipf::zipf;
 use rskd::sampling::{random_sampling, topk};
@@ -146,10 +146,12 @@ fn main() -> Result<()> {
     report.line("--- index.json manifest (v2 shard directory) ---");
     let manifest = CacheManifest::load(&dir)?;
     report.line(format!(
-        "version {} | codec tag {} (rounds {}) | kind {} | {} positions, {} slots, {} bytes",
+        "version {} | codec tag {} (rounds {}) | shard codec {} | kind {} | \
+         {} positions, {} slots, {} bytes",
         manifest.version,
         manifest.codec.tag(),
         manifest.rounds(),
+        manifest.shard_codec,
         manifest.kind.as_deref().unwrap_or("<untagged>"),
         manifest.positions,
         manifest.slots,
@@ -167,6 +169,47 @@ fn main() -> Result<()> {
         })
         .collect();
     report.table(&["shard file", "position range", "size"], &rows);
+
+    report.line("--- byte-level shard codecs (v3; docs/CACHE_FORMAT.md §Codec) ---");
+    let raw_bytes = stats.bytes;
+    let mut rows = vec![vec![
+        "raw (v2)".to_string(),
+        format!("{raw_bytes} B"),
+        format!("{:.2}", raw_bytes as f64 / stats.slots as f64),
+        "1.00x".to_string(),
+    ]];
+    let mut raw_block = RangeBlock::new();
+    CacheReader::open(&dir)?.read_range_into(0, n_positions as usize, &mut raw_block)?;
+    for sc in [ShardCodec::Delta, ShardCodec::DeltaPacked, ShardCodec::DeltaPackedLz] {
+        let cdir = std::env::temp_dir().join(format!("rskd-cache-inspect-{sc}"));
+        let _ = std::fs::remove_dir_all(&cdir);
+        let w = CacheWriter::create_coded(
+            &cdir,
+            ProbCodec::Count { rounds: 50 },
+            sc,
+            512,
+            64,
+            Some("rs:rounds=50,temp=1".into()),
+        )?;
+        for pos in 0..n_positions {
+            assert!(w.push(pos, targets[pos as usize].clone()));
+        }
+        let cstats = w.finish()?;
+        // same records, smaller files — and bit-identical decoded blocks
+        let cr = CacheReader::open(&cdir)?;
+        let mut block = RangeBlock::new();
+        cr.read_range_into(0, n_positions as usize, &mut block)?;
+        assert_eq!(block, raw_block, "{sc} decode must be bit-identical to raw");
+        rows.push(vec![
+            format!("{sc} (v3)"),
+            format!("{} B", cstats.bytes),
+            format!("{:.2}", cstats.bytes as f64 / cstats.slots as f64),
+            format!("{:.2}x", raw_bytes as f64 / cstats.bytes as f64),
+        ]);
+        let _ = std::fs::remove_dir_all(&cdir);
+    }
+    report.table(&["shard codec", "bytes", "B/slot", "ratio vs raw"], &rows);
+    report.line("decoded RangeBlocks verified bit-identical across all codecs");
 
     report.line("--- inferred cache plan (spec-layer view of this directory) ---");
     let r = CacheReader::open(&dir)?;

@@ -350,14 +350,133 @@ fn assembly_benches(report: &mut Report, smoke: bool) -> Json {
     ])
 }
 
+/// Byte-level shard codec section (runs in smoke mode too): bytes at rest
+/// per codec over the same synthetic RS-50 zipf corpus, compression ratio vs
+/// raw, warm range-decode timing, and the steady-state allocation count of a
+/// compressed-directory read. Returns the `BENCH_hotpath.json` compression
+/// object (schema: docs/BENCH_SCHEMA.md). Under `RSKD_PERF_SMOKE=1` this
+/// *asserts* the zero-alloc decode contract on the compressed hot path and a
+/// > 1.5x ratio for delta-packed-lz — the codec half of the CI perf gate.
+fn compression_benches(report: &mut Report, smoke: bool) -> Json {
+    use rskd::cache::{RangeBlock, ShardCodec};
+    let n_positions = if smoke { 2048usize } else { 16_384 };
+    let win = 512usize; // one full shard: the steady-state training window
+    let vocab = 512usize;
+    let p = zipf(vocab, 1.0);
+    let mut rng = Pcg::new(33);
+    let targets: Vec<SparseTarget> =
+        (0..n_positions).map(|_| random_sampling(&p, 50, 1.0, &mut rng)).collect();
+    let total_slots: u64 = targets.iter().map(|t| t.k() as u64).sum();
+
+    let budget = Duration::from_millis(if smoke { 200 } else { 800 });
+    let counting = alloc_count::is_counting();
+    report.line("--- shard codecs: bytes at rest + warm decode (docs/CACHE_FORMAT.md §Codec) ---");
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut codecs_json: Vec<(&'static str, Json)> = Vec::new();
+    let mut raw_bytes = 0u64;
+    let mut raw_block = RangeBlock::new();
+    let mut lz_gate: Option<(f64, u64, bool)> = None; // (ratio, allocs, bit_identical)
+    let swept =
+        [ShardCodec::Raw, ShardCodec::Delta, ShardCodec::DeltaPacked, ShardCodec::DeltaPackedLz];
+    for sc in swept {
+        let dir = std::env::temp_dir()
+            .join(format!("rskd-perf-codec-{}-{}", sc.name(), std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        let w = CacheWriter::create_coded(&dir, ProbCodec::Count { rounds: 50 }, sc, 512, 256, None)
+            .unwrap();
+        for (pos, t) in targets.iter().enumerate() {
+            assert!(w.push(pos as u64, t.clone()));
+        }
+        let stats = w.finish().unwrap();
+        if sc == ShardCodec::Raw {
+            raw_bytes = stats.bytes;
+        }
+        let ratio = raw_bytes as f64 / stats.bytes as f64;
+
+        // warm decode: shard resident, block capacity grown — the zero-alloc
+        // steady state the decode contract promises even for compressed dirs
+        let r = CacheReader::open_with_capacity(&dir, n_positions / 512 + 1).unwrap();
+        let mut block = RangeBlock::new();
+        r.read_range_into(0, win, &mut block).unwrap();
+        if sc == ShardCodec::Raw {
+            raw_block = block.clone();
+        }
+        let identical = block == raw_block;
+        assert!(identical, "{sc} decode differs from raw");
+        let st = bench(2, budget, || {
+            r.read_range_into(0, win, &mut block).unwrap();
+            std::hint::black_box(block.len());
+        });
+        let (allocs, _) = alloc_count::measure(|| {
+            r.read_range_into(0, win, &mut block).unwrap();
+            std::hint::black_box(block.len());
+        });
+        if sc == ShardCodec::DeltaPackedLz {
+            lz_gate = Some((ratio, allocs, identical));
+        }
+
+        rows.push(vec![
+            sc.to_string(),
+            format!("{} B", stats.bytes),
+            format!("{:.2}", stats.bytes as f64 / n_positions as f64),
+            format!("{ratio:.2}x"),
+            format!("{:.3} ms", st.per_iter_ms()),
+            if counting { format!("{allocs}") } else { "n/a".into() },
+        ]);
+        let mut pairs = vec![
+            ("bytes", Json::num(stats.bytes as f64)),
+            ("bytes_per_token", Json::num(stats.bytes as f64 / n_positions as f64)),
+            ("bytes_per_slot", Json::num(stats.bytes as f64 / total_slots.max(1) as f64)),
+            ("ratio_vs_raw", Json::num(ratio)),
+            ("warm_ms_per_range", Json::num(st.per_iter_ms())),
+        ];
+        if counting {
+            pairs.push(("allocs_per_range", Json::num(allocs as f64)));
+        }
+        codecs_json.push((sc.name(), Json::obj(pairs)));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    report.table(
+        &["shard codec", "bytes", "B/token", "ratio vs raw", "warm range", "allocs/range"],
+        &rows,
+    );
+    report.line("decoded RangeBlocks verified bit-identical across all codecs");
+
+    if smoke {
+        assert!(counting, "smoke mode requires the counting allocator to be installed");
+        let (ratio, allocs, identical) = lz_gate.expect("delta-packed-lz must have run");
+        assert!(identical, "compressed-origin decode must be bit-identical to raw");
+        assert_eq!(allocs, 0, "warm compressed-dir decode must not allocate at steady state");
+        assert!(ratio > 1.5, "delta-packed-lz ratio {ratio:.2} must exceed 1.5x");
+        report.line(format!(
+            "[smoke gate passed: 0 allocs/range on compressed decode, lz ratio {ratio:.2}x > 1.5x]"
+        ));
+    }
+
+    Json::obj(vec![
+        ("config", Json::obj(vec![
+            ("vocab", Json::num(vocab as f64)),
+            ("positions", Json::num(n_positions as f64)),
+            ("range", Json::num(win as f64)),
+            ("rounds", Json::num(50.0)),
+            ("slots", Json::num(total_slots as f64)),
+            ("smoke", Json::Bool(smoke)),
+            ("alloc_counting", Json::Bool(counting)),
+        ])),
+        ("codecs", Json::obj(codecs_json)),
+    ])
+}
+
 fn main() {
     let smoke = std::env::var("RSKD_PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
     let mut report = Report::new("perf_hotpath", "Hot-path timings per layer");
     let assembly = assembly_benches(&mut report, smoke);
+    let compression = compression_benches(&mut report, smoke);
     let bench_json = Json::obj(vec![
         ("schema_version", Json::num(1.0)),
         ("bench", Json::str("perf_hotpath")),
         ("assembly", assembly),
+        ("compression", compression),
     ]);
     // the repo-root perf trajectory point (schema: docs/BENCH_SCHEMA.md)
     match std::fs::write("BENCH_hotpath.json", bench_json.to_string()) {

@@ -1,0 +1,966 @@
+//! Byte-level shard payload codecs (format v3) — see `docs/CACHE_FORMAT.md`
+//! §Codec for the normative spec.
+//!
+//! The raw v2 record encoding spends 3 bytes per slot (`quant::pack_slot`)
+//! plus one length byte per position. Sparse targets have exploitable
+//! structure on top of that: token ids within a record are small-ish
+//! integers with small gaps, slot counts per position cluster tightly, and
+//! neighbouring positions repeat id/code patterns. The v3 codecs peel those
+//! layers off *at rest only*:
+//!
+//! * [`ShardCodec::Delta`] — per record, prob codes as raw bytes followed by
+//!   token ids as varints (first absolute, rest zigzag-encoded gaps). Order
+//!   is preserved exactly (Ratio records are descending-probability, not
+//!   id-sorted), so a decoded record is bit-identical to its raw twin.
+//! * [`ShardCodec::DeltaPacked`] — additionally strips the per-record length
+//!   byte: all slot counts are bit-packed up front at the width of the
+//!   largest count.
+//! * [`ShardCodec::DeltaPackedLz`] — the DeltaPacked payload run through a
+//!   built-in LZ77 byte compressor ([`rlz`]), which recovers the
+//!   cross-record redundancy delta coding alone cannot see.
+//! * [`ShardCodec::DeltaPackedZstd`] — the DeltaPacked payload in a zstd
+//!   frame, behind the `zstd` cargo feature. The container has no external
+//!   dependency: [`zstd_stub`] emits spec-conformant frames using raw
+//!   blocks only (a store-mode zstd), and reads raw/RLE blocks. Swapping in
+//!   a real `zstd` crate is a drop-in change confined to that module.
+//!
+//! Compression is invisible to the hot path: payloads are decompressed once
+//! at shard-load time (a cold, already-allocating path) into the identical
+//! in-memory `Shard` representation, so `decode_into` and the steady-state
+//! zero-allocation contract are untouched.
+//!
+//! Every non-raw shard carries a CRC32 over header + payload, so truncations
+//! and bit flips surface as typed [`CacheError`]s instead of silently
+//! decoding wrong probabilities.
+
+use std::io;
+
+use crate::cache::quant::{MAX_ID, PROB_LEVELS};
+
+/// One position's encoded record, as stored in `Shard::records`.
+type Record = (Vec<u32>, Vec<u8>);
+
+/// Upper bound on a single shard's payload, enforced before allocation so a
+/// corrupt length field cannot ask for gigabytes.
+pub(crate) const MAX_PAYLOAD_BYTES: usize = 1 << 30;
+
+/// Byte-level shard payload codec, selected per cache directory and recorded
+/// both in each shard header (byte 7) and in the `index.json` manifest
+/// (`shard_codec`). Raw directories keep writing v2 files bit-identical to
+/// every earlier release; any other codec switches the directory to v3.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq, Hash)]
+pub enum ShardCodec {
+    /// v2 record stream: `n u8` + `n` 3-byte packed slots per position.
+    #[default]
+    Raw,
+    /// per record: `n u8`, `n` prob-code bytes, ids as gap varints.
+    Delta,
+    /// bit-packed slot counts up front, then per-record codes + id varints.
+    DeltaPacked,
+    /// the DeltaPacked payload compressed with the built-in LZ77 coder.
+    DeltaPackedLz,
+    /// the DeltaPacked payload in a zstd frame (`zstd` cargo feature).
+    DeltaPackedZstd,
+}
+
+impl ShardCodec {
+    /// Every codec, in tag order (property tests sweep this).
+    pub const ALL: [ShardCodec; 5] = [
+        ShardCodec::Raw,
+        ShardCodec::Delta,
+        ShardCodec::DeltaPacked,
+        ShardCodec::DeltaPackedLz,
+        ShardCodec::DeltaPackedZstd,
+    ];
+
+    /// Header byte-7 tag. Byte 7 was "reserved, write 0" in v1/v2, so every
+    /// existing shard already carries the Raw tag.
+    pub fn tag(self) -> u8 {
+        match self {
+            ShardCodec::Raw => 0,
+            ShardCodec::Delta => 1,
+            ShardCodec::DeltaPacked => 2,
+            ShardCodec::DeltaPackedLz => 3,
+            ShardCodec::DeltaPackedZstd => 4,
+        }
+    }
+
+    pub fn from_tag(tag: u8) -> Option<ShardCodec> {
+        match tag {
+            0 => Some(ShardCodec::Raw),
+            1 => Some(ShardCodec::Delta),
+            2 => Some(ShardCodec::DeltaPacked),
+            3 => Some(ShardCodec::DeltaPackedLz),
+            4 => Some(ShardCodec::DeltaPackedZstd),
+            _ => None,
+        }
+    }
+
+    /// Canonical manifest / CLI name.
+    pub fn name(self) -> &'static str {
+        match self {
+            ShardCodec::Raw => "raw",
+            ShardCodec::Delta => "delta",
+            ShardCodec::DeltaPacked => "delta-packed",
+            ShardCodec::DeltaPackedLz => "delta-packed-lz",
+            ShardCodec::DeltaPackedZstd => "delta-packed-zstd",
+        }
+    }
+
+    /// Parse a manifest / CLI name; unknown names are a typed refusal that
+    /// lists the valid spellings.
+    pub fn parse(name: &str) -> Result<ShardCodec, CacheError> {
+        ShardCodec::ALL
+            .into_iter()
+            .find(|c| c.name() == name)
+            .ok_or_else(|| CacheError::BadShardCodecName { name: name.to_string() })
+    }
+}
+
+impl std::fmt::Display for ShardCodec {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        f.write_str(self.name())
+    }
+}
+
+impl std::str::FromStr for ShardCodec {
+    type Err = CacheError;
+
+    fn from_str(s: &str) -> Result<ShardCodec, CacheError> {
+        ShardCodec::parse(s)
+    }
+}
+
+/// Typed cache-format error. Carried as the *source* of an
+/// `io::Error` (`ErrorKind::InvalidData`, or `UnexpectedEof` for
+/// truncations), so existing `io::Result` signatures are unchanged and
+/// callers that care can downcast via [`cache_error_of`].
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub enum CacheError {
+    /// The file/stream ended inside the named structure.
+    Truncated { what: &'static str },
+    /// Unknown shard magic word.
+    BadMagic { magic: u32 },
+    /// Unknown probability-codec tag (header byte 4).
+    BadProbCodec { tag: u8 },
+    /// Unknown shard-codec tag (header byte 7 of a v3 shard).
+    BadShardCodec { tag: u8 },
+    /// Unknown shard-codec name in a manifest or CLI flag.
+    BadShardCodecName { name: String },
+    /// A shard header disagrees with what the directory manifest declares.
+    ShardCodecMismatch { expected: ShardCodec, found: ShardCodec },
+    /// CRC32 over header + payload failed: the shard was torn or bit-flipped.
+    ChecksumMismatch { expected: u32, found: u32 },
+    /// Tag-4 shards need the `zstd` cargo feature (or, for frames holding
+    /// compressed blocks, a real zstd backend behind it).
+    ZstdUnavailable,
+    /// Structurally invalid payload (bad varint, id/code out of range,
+    /// overrunning match, trailing bytes, ...).
+    Corrupt(String),
+}
+
+impl std::fmt::Display for CacheError {
+    fn fmt(&self, f: &mut std::fmt::Formatter<'_>) -> std::fmt::Result {
+        match self {
+            CacheError::Truncated { what } => write!(f, "truncated shard: {what} cut short"),
+            CacheError::BadMagic { magic } => write!(
+                f,
+                "unsupported shard magic {magic:#010x}: expected \"SLC1\" (v1), \
+                 \"SLC2\" (v2) or \"SLC3\" (v3)"
+            ),
+            CacheError::BadProbCodec { tag } => write!(f, "bad codec tag {tag}"),
+            CacheError::BadShardCodec { tag } => write!(f, "bad shard codec tag {tag}"),
+            CacheError::BadShardCodecName { name } => {
+                write!(f, "unknown shard codec `{name}`: expected one of ")?;
+                for (i, c) in ShardCodec::ALL.iter().enumerate() {
+                    if i > 0 {
+                        f.write_str(", ")?;
+                    }
+                    write!(f, "`{}`", c.name())?;
+                }
+                Ok(())
+            }
+            CacheError::ShardCodecMismatch { expected, found } => write!(
+                f,
+                "shard codec mismatch: manifest declares `{expected}` but the shard \
+                 header carries `{found}`"
+            ),
+            CacheError::ChecksumMismatch { expected, found } => write!(
+                f,
+                "shard checksum mismatch: stored {expected:#010x}, computed {found:#010x} \
+                 (torn or bit-flipped file)"
+            ),
+            CacheError::ZstdUnavailable => write!(
+                f,
+                "zstd shard codec unavailable: rebuild with `--features zstd` (the \
+                 built-in stub reads raw/RLE zstd blocks only)"
+            ),
+            CacheError::Corrupt(what) => write!(f, "corrupt shard payload: {what}"),
+        }
+    }
+}
+
+impl std::error::Error for CacheError {}
+
+impl From<CacheError> for io::Error {
+    fn from(e: CacheError) -> io::Error {
+        let kind = match e {
+            CacheError::Truncated { .. } => io::ErrorKind::UnexpectedEof,
+            _ => io::ErrorKind::InvalidData,
+        };
+        io::Error::new(kind, e)
+    }
+}
+
+/// The typed [`CacheError`] behind an `io::Error`, if any — what the
+/// corruption-fuzz suite asserts on.
+pub fn cache_error_of(err: &io::Error) -> Option<&CacheError> {
+    err.get_ref().and_then(|e| e.downcast_ref::<CacheError>())
+}
+
+/// `read_exact` with a typed truncation error instead of a bare
+/// `UnexpectedEof`.
+pub(crate) fn read_exact_ctx(
+    r: &mut impl io::Read,
+    buf: &mut [u8],
+    what: &'static str,
+) -> io::Result<()> {
+    r.read_exact(buf).map_err(|e| {
+        if e.kind() == io::ErrorKind::UnexpectedEof {
+            CacheError::Truncated { what }.into()
+        } else {
+            e
+        }
+    })
+}
+
+// ---------------------------------------------------------------------------
+// CRC32 (IEEE, reflected — the zlib/binascii convention)
+// ---------------------------------------------------------------------------
+
+const fn crc_table() -> [u32; 256] {
+    let mut table = [0u32; 256];
+    let mut i = 0;
+    while i < 256 {
+        let mut c = i as u32;
+        let mut k = 0;
+        while k < 8 {
+            c = if c & 1 != 0 { 0xEDB8_8320 ^ (c >> 1) } else { c >> 1 };
+            k += 1;
+        }
+        table[i] = c;
+        i += 1;
+    }
+    table
+}
+
+const CRC_TABLE: [u32; 256] = crc_table();
+
+/// CRC32 over the concatenation of `chunks` (header and payload are hashed
+/// without copying them into one buffer).
+pub(crate) fn crc32(chunks: &[&[u8]]) -> u32 {
+    let mut c = 0xFFFF_FFFFu32;
+    for chunk in chunks {
+        for &b in *chunk {
+            c = CRC_TABLE[((c ^ b as u32) & 0xFF) as usize] ^ (c >> 8);
+        }
+    }
+    c ^ 0xFFFF_FFFF
+}
+
+// ---------------------------------------------------------------------------
+// varint / zigzag primitives
+// ---------------------------------------------------------------------------
+
+pub(crate) fn put_varint(out: &mut Vec<u8>, mut v: u64) {
+    while v >= 0x80 {
+        out.push((v as u8) | 0x80);
+        v >>= 7;
+    }
+    out.push(v as u8);
+}
+
+pub(crate) fn get_varint(buf: &[u8], pos: &mut usize) -> Result<u64, CacheError> {
+    let mut v = 0u64;
+    let mut shift = 0u32;
+    loop {
+        let b = *buf.get(*pos).ok_or(CacheError::Truncated { what: "varint" })?;
+        *pos += 1;
+        if shift == 63 && b > 1 {
+            return Err(CacheError::Corrupt("varint overflows u64".into()));
+        }
+        v |= ((b & 0x7F) as u64) << shift;
+        if b & 0x80 == 0 {
+            return Ok(v);
+        }
+        shift += 7;
+        if shift > 63 {
+            return Err(CacheError::Corrupt("varint longer than 10 bytes".into()));
+        }
+    }
+}
+
+fn zigzag(v: i64) -> u64 {
+    ((v << 1) ^ (v >> 63)) as u64
+}
+
+fn unzigzag(v: u64) -> i64 {
+    ((v >> 1) as i64) ^ -((v & 1) as i64)
+}
+
+// ---------------------------------------------------------------------------
+// record payload encode/decode
+// ---------------------------------------------------------------------------
+
+/// Append one record's prob codes and gap-varint ids.
+fn put_record_body(out: &mut Vec<u8>, ids: &[u32], codes: &[u8]) {
+    debug_assert_eq!(ids.len(), codes.len());
+    out.extend_from_slice(codes);
+    let mut prev = 0i64;
+    for (j, &id) in ids.iter().enumerate() {
+        debug_assert!(id <= MAX_ID);
+        if j == 0 {
+            put_varint(out, id as u64);
+        } else {
+            put_varint(out, zigzag(id as i64 - prev));
+        }
+        prev = id as i64;
+    }
+}
+
+/// Parse one record's body given its slot count `n`. Validates that codes
+/// stay below 128 and ids stay in the 17-bit id space — a flipped payload
+/// must never decode to out-of-range probabilities or tokens.
+fn get_record_body(buf: &[u8], pos: &mut usize, n: usize) -> Result<Record, CacheError> {
+    let end = pos
+        .checked_add(n)
+        .filter(|&e| e <= buf.len())
+        .ok_or(CacheError::Truncated { what: "record prob codes" })?;
+    let codes = buf[*pos..end].to_vec();
+    if codes.iter().any(|&c| (c as u32) >= PROB_LEVELS) {
+        return Err(CacheError::Corrupt("prob code out of 7-bit range".into()));
+    }
+    *pos = end;
+    let mut ids = Vec::with_capacity(n);
+    let mut prev = 0i64;
+    for j in 0..n {
+        let id = if j == 0 {
+            get_varint(buf, pos)? as i64
+        } else {
+            prev
+                .checked_add(unzigzag(get_varint(buf, pos)?))
+                .ok_or_else(|| CacheError::Corrupt("token id gap overflows".into()))?
+        };
+        if id < 0 || id > MAX_ID as i64 {
+            return Err(CacheError::Corrupt("token id out of 17-bit range".into()));
+        }
+        ids.push(id as u32);
+        prev = id;
+    }
+    Ok((ids, codes))
+}
+
+/// Delta payload: per record `n u8`, then codes + gap-varint ids.
+fn delta_encode(records: &[Record]) -> Vec<u8> {
+    let mut out = Vec::new();
+    for (ids, codes) in records {
+        debug_assert!(ids.len() < 256);
+        out.push(ids.len() as u8);
+        put_record_body(&mut out, ids, codes);
+    }
+    out
+}
+
+fn delta_decode(buf: &[u8], count: usize) -> Result<Vec<Record>, CacheError> {
+    let mut records = Vec::with_capacity(count.min(1 << 20));
+    let mut pos = 0usize;
+    for _ in 0..count {
+        let n = *buf.get(pos).ok_or(CacheError::Truncated { what: "record length byte" })?;
+        pos += 1;
+        records.push(get_record_body(buf, &mut pos, n as usize)?);
+    }
+    if pos != buf.len() {
+        return Err(CacheError::Corrupt("trailing bytes after last record".into()));
+    }
+    Ok(records)
+}
+
+/// DeltaPacked payload: `count_bits u8`, the bit-packed slot counts
+/// (LSB-first within each byte), then each non-empty record's codes +
+/// gap-varint ids.
+fn packed_encode(records: &[Record]) -> Vec<u8> {
+    let mut out = Vec::new();
+    let max = records.iter().map(|(ids, _)| ids.len()).max().unwrap_or(0);
+    debug_assert!(max < 256);
+    let count_bits = (usize::BITS - max.leading_zeros()) as u8;
+    out.push(count_bits);
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    for (ids, _) in records {
+        acc |= (ids.len() as u64) << nbits;
+        nbits += count_bits as u32;
+        while nbits >= 8 {
+            out.push(acc as u8);
+            acc >>= 8;
+            nbits -= 8;
+        }
+    }
+    if nbits > 0 {
+        out.push(acc as u8);
+    }
+    for (ids, codes) in records {
+        put_record_body(&mut out, ids, codes);
+    }
+    out
+}
+
+fn packed_decode(buf: &[u8], count: usize) -> Result<Vec<Record>, CacheError> {
+    let mut pos = 0usize;
+    let count_bits =
+        *buf.get(pos).ok_or(CacheError::Truncated { what: "count-bits byte" })? as u32;
+    pos += 1;
+    if count_bits > 8 {
+        return Err(CacheError::Corrupt("count width exceeds 8 bits".into()));
+    }
+    let mut counts = Vec::with_capacity(count.min(1 << 20));
+    let mut acc = 0u64;
+    let mut nbits = 0u32;
+    for _ in 0..count {
+        while nbits < count_bits {
+            let b = *buf.get(pos).ok_or(CacheError::Truncated { what: "packed counts" })?;
+            pos += 1;
+            acc |= (b as u64) << nbits;
+            nbits += 8;
+        }
+        counts.push((acc & ((1u64 << count_bits) - 1)) as usize);
+        acc >>= count_bits;
+        nbits -= count_bits;
+    }
+    let mut records = Vec::with_capacity(count.min(1 << 20));
+    for n in counts {
+        records.push(get_record_body(buf, &mut pos, n)?);
+    }
+    if pos != buf.len() {
+        return Err(CacheError::Corrupt("trailing bytes after last record".into()));
+    }
+    Ok(records)
+}
+
+/// Serialize records as the payload of a non-raw codec ([`ShardCodec::Raw`]
+/// never reaches here — `Shard::write_to_flagged` owns the v2 stream).
+pub(crate) fn encode_records(records: &[Record], codec: ShardCodec) -> io::Result<Vec<u8>> {
+    match codec {
+        ShardCodec::Raw => unreachable!("raw shards use the v2 record stream"),
+        ShardCodec::Delta => Ok(delta_encode(records)),
+        ShardCodec::DeltaPacked => Ok(packed_encode(records)),
+        ShardCodec::DeltaPackedLz => {
+            let raw = packed_encode(records);
+            let mut out = Vec::with_capacity(raw.len() / 2 + 16);
+            put_varint(&mut out, raw.len() as u64);
+            out.extend_from_slice(&rlz::compress(&raw));
+            Ok(out)
+        }
+        ShardCodec::DeltaPackedZstd => {
+            #[cfg(feature = "zstd")]
+            {
+                Ok(zstd_stub::compress(&packed_encode(records)))
+            }
+            #[cfg(not(feature = "zstd"))]
+            {
+                Err(CacheError::ZstdUnavailable.into())
+            }
+        }
+    }
+}
+
+/// Parse a non-raw payload back into records. `count` comes from the
+/// (checksummed) header.
+pub(crate) fn decode_records(
+    payload: &[u8],
+    count: usize,
+    codec: ShardCodec,
+) -> io::Result<Vec<Record>> {
+    let records = match codec {
+        ShardCodec::Raw => unreachable!("raw shards use the v2 record stream"),
+        ShardCodec::Delta => delta_decode(payload, count)?,
+        ShardCodec::DeltaPacked => packed_decode(payload, count)?,
+        ShardCodec::DeltaPackedLz => {
+            let mut pos = 0usize;
+            let raw_len = get_varint(payload, &mut pos)? as usize;
+            if raw_len > MAX_PAYLOAD_BYTES {
+                return Err(CacheError::Corrupt("decompressed payload too large".into()).into());
+            }
+            let raw = rlz::decompress(&payload[pos..], raw_len)?;
+            packed_decode(&raw, count)?
+        }
+        ShardCodec::DeltaPackedZstd => {
+            #[cfg(feature = "zstd")]
+            {
+                let raw = zstd_stub::decompress(payload)?;
+                packed_decode(&raw, count)?
+            }
+            #[cfg(not(feature = "zstd"))]
+            {
+                return Err(CacheError::ZstdUnavailable.into());
+            }
+        }
+    };
+    Ok(records)
+}
+
+// ---------------------------------------------------------------------------
+// rlz: built-in LZ77 byte compressor
+// ---------------------------------------------------------------------------
+
+/// LZ4-block-style byte compressor: sequences of `(literals, match)` where a
+/// token byte holds 4-bit literal/match length nibbles (value 15 = read
+/// 255-extension bytes), matches are `u16` little-endian offsets into the
+/// previous 64 KiB of output with minimum length 4, and the final sequence
+/// carries literals only (the decoder stops at the known output length).
+/// Greedy hash-table matcher on 4-byte prefixes — a few hundred MB/s either
+/// way, and the format stays simple enough to pin byte-for-byte in the
+/// golden fixtures.
+pub(crate) mod rlz {
+    use super::CacheError;
+
+    pub(crate) const MIN_MATCH: usize = 4;
+    const MAX_OFFSET: usize = 65_535;
+    const HASH_BITS: u32 = 15;
+
+    fn hash4(window: &[u8]) -> usize {
+        let v = u32::from_le_bytes([window[0], window[1], window[2], window[3]]);
+        (v.wrapping_mul(2_654_435_761) >> (32 - HASH_BITS)) as usize
+    }
+
+    fn put_len_ext(out: &mut Vec<u8>, mut v: usize) {
+        while v >= 255 {
+            out.push(255);
+            v -= 255;
+        }
+        out.push(v as u8);
+    }
+
+    fn emit(out: &mut Vec<u8>, literals: &[u8], m: Option<(u16, usize)>) {
+        let lit = literals.len();
+        let mnib = match m {
+            Some((_, len)) => (len - MIN_MATCH).min(15) as u8,
+            None => 0,
+        };
+        out.push(((lit.min(15) as u8) << 4) | mnib);
+        if lit >= 15 {
+            put_len_ext(out, lit - 15);
+        }
+        out.extend_from_slice(literals);
+        if let Some((off, len)) = m {
+            out.extend_from_slice(&off.to_le_bytes());
+            if len - MIN_MATCH >= 15 {
+                put_len_ext(out, len - MIN_MATCH - 15);
+            }
+        }
+    }
+
+    pub(crate) fn compress(src: &[u8]) -> Vec<u8> {
+        if src.is_empty() {
+            return Vec::new();
+        }
+        let mut out = Vec::with_capacity(src.len() / 2 + 16);
+        let mut table = vec![usize::MAX; 1 << HASH_BITS];
+        let mut anchor = 0usize;
+        let mut i = 0usize;
+        while i + MIN_MATCH <= src.len() {
+            let h = hash4(&src[i..]);
+            let cand = table[h];
+            table[h] = i;
+            if cand != usize::MAX
+                && i - cand <= MAX_OFFSET
+                && src[cand..cand + MIN_MATCH] == src[i..i + MIN_MATCH]
+            {
+                let mut mlen = MIN_MATCH;
+                while i + mlen < src.len() && src[cand + mlen] == src[i + mlen] {
+                    mlen += 1;
+                }
+                emit(&mut out, &src[anchor..i], Some(((i - cand) as u16, mlen)));
+                i += mlen;
+                anchor = i;
+            } else {
+                i += 1;
+            }
+        }
+        if anchor < src.len() {
+            emit(&mut out, &src[anchor..], None);
+        }
+        out
+    }
+
+    fn read_len_ext(src: &[u8], pos: &mut usize) -> Result<usize, CacheError> {
+        let mut total = 0usize;
+        loop {
+            let b = *src.get(*pos).ok_or(CacheError::Truncated { what: "length extension" })?;
+            *pos += 1;
+            total += b as usize;
+            if b != 255 {
+                return Ok(total);
+            }
+            if total > super::MAX_PAYLOAD_BYTES {
+                return Err(CacheError::Corrupt("runaway length extension".into()));
+            }
+        }
+    }
+
+    pub(crate) fn decompress(src: &[u8], raw_len: usize) -> Result<Vec<u8>, CacheError> {
+        let mut out = Vec::with_capacity(raw_len);
+        let mut pos = 0usize;
+        while out.len() < raw_len {
+            let token =
+                *src.get(pos).ok_or(CacheError::Truncated { what: "sequence token" })?;
+            pos += 1;
+            let mut lit = (token >> 4) as usize;
+            if lit == 15 {
+                lit += read_len_ext(src, &mut pos)?;
+            }
+            let end = pos
+                .checked_add(lit)
+                .filter(|&e| e <= src.len())
+                .ok_or(CacheError::Truncated { what: "sequence literals" })?;
+            if out.len() + lit > raw_len {
+                return Err(CacheError::Corrupt("literals overrun declared length".into()));
+            }
+            out.extend_from_slice(&src[pos..end]);
+            pos = end;
+            if out.len() == raw_len {
+                break; // the final sequence carries no match
+            }
+            if pos + 2 > src.len() {
+                return Err(CacheError::Truncated { what: "match offset" });
+            }
+            let off = u16::from_le_bytes([src[pos], src[pos + 1]]) as usize;
+            pos += 2;
+            if off == 0 || off > out.len() {
+                return Err(CacheError::Corrupt("match offset outside output window".into()));
+            }
+            let mut mlen = (token & 0x0F) as usize;
+            if mlen == 15 {
+                mlen += read_len_ext(src, &mut pos)?;
+            }
+            mlen += MIN_MATCH;
+            if out.len() + mlen > raw_len {
+                return Err(CacheError::Corrupt("match overruns declared length".into()));
+            }
+            let from = out.len() - off;
+            for k in 0..mlen {
+                let b = out[from + k]; // overlap-safe byte-by-byte copy
+                out.push(b);
+            }
+        }
+        if pos != src.len() {
+            return Err(CacheError::Corrupt("trailing bytes after compressed stream".into()));
+        }
+        Ok(out)
+    }
+}
+
+// ---------------------------------------------------------------------------
+// zstd container (feature-gated, dependency-free stub)
+// ---------------------------------------------------------------------------
+
+/// Dependency-free zstd *container*: writes spec-conformant single-segment
+/// frames using raw (stored) blocks only, and reads frames made of raw and
+/// RLE blocks. Frames produced here are readable by any real zstd; frames
+/// holding zstd-compressed blocks need a real backend and surface
+/// [`CacheError::ZstdUnavailable`]. Swapping in the `zstd` crate replaces
+/// exactly these two functions.
+#[cfg(feature = "zstd")]
+pub(crate) mod zstd_stub {
+    use super::CacheError;
+
+    const MAGIC: u32 = 0xFD2F_B528;
+    /// stay under the 128 KiB block ceiling and any content-sized window
+    const BLOCK: usize = 1 << 16;
+
+    pub(crate) fn compress(src: &[u8]) -> Vec<u8> {
+        let mut out = Vec::with_capacity(src.len() + src.len() / BLOCK * 3 + 16);
+        out.extend_from_slice(&MAGIC.to_le_bytes());
+        // descriptor 0xE0: 8-byte frame content size, single segment, no
+        // checksum, no dictionary
+        out.push(0xE0);
+        out.extend_from_slice(&(src.len() as u64).to_le_bytes());
+        let mut chunks = src.chunks(BLOCK).peekable();
+        if src.is_empty() {
+            out.extend_from_slice(&1u32.to_le_bytes()[..3]); // last empty raw block
+        }
+        while let Some(chunk) = chunks.next() {
+            let last = chunks.peek().is_none() as u32;
+            let header = ((chunk.len() as u32) << 3) | last; // type 0 = raw
+            out.extend_from_slice(&header.to_le_bytes()[..3]);
+            out.extend_from_slice(chunk);
+        }
+        out
+    }
+
+    pub(crate) fn decompress(src: &[u8]) -> Result<Vec<u8>, CacheError> {
+        let mut pos = 0usize;
+        let take = |pos: &mut usize, n: usize, what: &'static str| {
+            let end = pos
+                .checked_add(n)
+                .filter(|&e| e <= src.len())
+                .ok_or(CacheError::Truncated { what })?;
+            let s = &src[*pos..end];
+            *pos = end;
+            Ok::<&[u8], CacheError>(s)
+        };
+        let magic = take(&mut pos, 4, "zstd magic")?;
+        if u32::from_le_bytes(magic.try_into().unwrap()) != MAGIC {
+            return Err(CacheError::Corrupt("not a zstd frame".into()));
+        }
+        let desc = take(&mut pos, 1, "zstd frame header")?[0];
+        if desc & 0x03 != 0 {
+            return Err(CacheError::Corrupt("zstd dictionary frames unsupported".into()));
+        }
+        if desc & 0x08 != 0 {
+            return Err(CacheError::Corrupt("reserved zstd descriptor bit set".into()));
+        }
+        let single_segment = desc & 0x20 != 0;
+        let has_checksum = desc & 0x04 != 0;
+        if !single_segment {
+            take(&mut pos, 1, "zstd window descriptor")?;
+        }
+        let fcs_bytes = match desc >> 6 {
+            0 => usize::from(single_segment),
+            1 => 2,
+            2 => 4,
+            _ => 8,
+        };
+        let content_size = if fcs_bytes > 0 {
+            let mut b = [0u8; 8];
+            b[..fcs_bytes].copy_from_slice(take(&mut pos, fcs_bytes, "zstd content size")?);
+            let v = u64::from_le_bytes(b);
+            Some(if fcs_bytes == 2 { v + 256 } else { v })
+        } else {
+            None
+        };
+        if let Some(n) = content_size {
+            if n > super::MAX_PAYLOAD_BYTES as u64 {
+                return Err(CacheError::Corrupt("zstd content size too large".into()));
+            }
+        }
+        let mut out = Vec::with_capacity(content_size.unwrap_or(0) as usize);
+        loop {
+            let h = take(&mut pos, 3, "zstd block header")?;
+            let header = u32::from_le_bytes([h[0], h[1], h[2], 0]);
+            let last = header & 1 != 0;
+            let btype = (header >> 1) & 3;
+            let bsize = (header >> 3) as usize;
+            match btype {
+                0 => out.extend_from_slice(take(&mut pos, bsize, "zstd raw block")?),
+                1 => {
+                    let b = take(&mut pos, 1, "zstd RLE block")?[0];
+                    out.resize(out.len() + bsize, b);
+                }
+                2 => return Err(CacheError::ZstdUnavailable),
+                _ => return Err(CacheError::Corrupt("reserved zstd block type".into())),
+            }
+            if out.len() > super::MAX_PAYLOAD_BYTES {
+                return Err(CacheError::Corrupt("zstd output exceeds payload cap".into()));
+            }
+            if last {
+                break;
+            }
+        }
+        if has_checksum {
+            take(&mut pos, 4, "zstd content checksum")?;
+        }
+        if pos != src.len() {
+            return Err(CacheError::Corrupt("trailing bytes after zstd frame".into()));
+        }
+        if let Some(n) = content_size {
+            if out.len() as u64 != n {
+                return Err(CacheError::Corrupt("zstd content size mismatch".into()));
+            }
+        }
+        Ok(out)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::util::rng::Pcg;
+
+    #[test]
+    fn crc32_check_value() {
+        // the standard CRC-32/ISO-HDLC check vector
+        assert_eq!(crc32(&[b"123456789".as_slice()]), 0xCBF4_3926);
+        // chunked hashing equals contiguous hashing
+        assert_eq!(crc32(&[b"1234".as_slice(), b"56789".as_slice()]), 0xCBF4_3926);
+        assert_eq!(crc32(&[]), 0);
+    }
+
+    #[test]
+    fn varint_roundtrip_and_overflow() {
+        let mut buf = Vec::new();
+        let values = [0u64, 1, 127, 128, 300, 16_383, 16_384, u32::MAX as u64, u64::MAX];
+        for &v in &values {
+            put_varint(&mut buf, v);
+        }
+        let mut pos = 0;
+        for &v in &values {
+            assert_eq!(get_varint(&buf, &mut pos).unwrap(), v);
+        }
+        assert_eq!(pos, buf.len());
+        // an unterminated varint is a truncation, not a panic
+        assert!(matches!(
+            get_varint(&[0x80, 0x80], &mut 0),
+            Err(CacheError::Truncated { .. })
+        ));
+        // an 11-byte varint is corrupt
+        let long = [0xFFu8; 11];
+        assert!(matches!(get_varint(&long, &mut 0), Err(CacheError::Corrupt(_))));
+    }
+
+    #[test]
+    fn zigzag_roundtrip() {
+        for v in [0i64, 1, -1, 2, -2, 1 << 20, -(1 << 20), i64::MAX, i64::MIN] {
+            assert_eq!(unzigzag(zigzag(v)), v);
+        }
+        // small magnitudes stay small on the wire
+        assert!(zigzag(-1) < 4 && zigzag(1) < 4);
+    }
+
+    fn random_records(rng: &mut Pcg, count: usize) -> Vec<Record> {
+        (0..count)
+            .map(|_| {
+                let n = match rng.usize_below(5) {
+                    0 => 0,
+                    1 => 1,
+                    2 => 255, // max-k row
+                    _ => 1 + rng.usize_below(40),
+                };
+                let mut ids: Vec<u32> = (0..n).map(|_| rng.next_u32() % (MAX_ID + 1)).collect();
+                if n > 1 {
+                    // force an id gap >= 2^16 so wide deltas are exercised
+                    ids[0] = 0;
+                    ids[1] = MAX_ID;
+                }
+                let codes: Vec<u8> = (0..n).map(|_| (rng.next_u32() % 128) as u8).collect();
+                (ids, codes)
+            })
+            .collect()
+    }
+
+    #[test]
+    fn payload_roundtrip_every_codec() {
+        let mut rng = Pcg::new(7);
+        for case in 0..20 {
+            let records = random_records(&mut rng, case % 7);
+            for codec in [ShardCodec::Delta, ShardCodec::DeltaPacked, ShardCodec::DeltaPackedLz]
+            {
+                let payload = encode_records(&records, codec).unwrap();
+                let back = decode_records(&payload, records.len(), codec).unwrap();
+                assert_eq!(back, records, "{codec} case {case}");
+            }
+            #[cfg(feature = "zstd")]
+            {
+                let payload = encode_records(&records, ShardCodec::DeltaPackedZstd).unwrap();
+                let back =
+                    decode_records(&payload, records.len(), ShardCodec::DeltaPackedZstd)
+                        .unwrap();
+                assert_eq!(back, records, "zstd case {case}");
+            }
+        }
+    }
+
+    #[test]
+    fn packed_counts_handle_all_zero_and_max() {
+        // all-empty records: count_bits = 0, no packed bytes at all
+        let empties: Vec<Record> = vec![(vec![], vec![]); 9];
+        let payload = packed_encode(&empties);
+        assert_eq!(payload, vec![0u8]);
+        assert_eq!(packed_decode(&payload, 9).unwrap(), empties);
+    }
+
+    #[test]
+    fn rlz_roundtrip_and_ratio() {
+        let mut rng = Pcg::new(3);
+        // compressible: repeated structured rows
+        let mut src = Vec::new();
+        for i in 0..400u32 {
+            src.extend_from_slice(&(i % 16).to_le_bytes());
+            src.extend_from_slice(b"sparse-logit");
+        }
+        let comp = rlz::compress(&src);
+        assert!(comp.len() * 2 < src.len(), "{} vs {}", comp.len(), src.len());
+        assert_eq!(rlz::decompress(&comp, src.len()).unwrap(), src);
+        // incompressible: random bytes still roundtrip
+        let rand: Vec<u8> = (0..1000).map(|_| (rng.next_u32() >> 13) as u8).collect();
+        let comp = rlz::compress(&rand);
+        assert_eq!(rlz::decompress(&comp, rand.len()).unwrap(), rand);
+        // empty input
+        assert!(rlz::compress(&[]).is_empty());
+        assert_eq!(rlz::decompress(&[], 0).unwrap(), Vec::<u8>::new());
+        // overlapping match (RLE-like run) roundtrips
+        let run = vec![7u8; 500];
+        let comp = rlz::compress(&run);
+        assert!(comp.len() < 32);
+        assert_eq!(rlz::decompress(&comp, run.len()).unwrap(), run);
+    }
+
+    #[test]
+    fn rlz_rejects_corruption_without_panicking() {
+        let src: Vec<u8> = (0..600u32).flat_map(|i| (i % 50).to_le_bytes()).collect();
+        let comp = rlz::compress(&src);
+        // every truncation errors
+        for cut in 0..comp.len() {
+            assert!(rlz::decompress(&comp[..cut], src.len()).is_err(), "cut {cut}");
+        }
+        // declared length longer than the stream produces errors too
+        assert!(rlz::decompress(&comp, src.len() + 1).is_err());
+    }
+
+    #[test]
+    fn shard_codec_tags_and_names_roundtrip() {
+        for codec in ShardCodec::ALL {
+            assert_eq!(ShardCodec::from_tag(codec.tag()), Some(codec));
+            assert_eq!(ShardCodec::parse(codec.name()).unwrap(), codec);
+        }
+        assert_eq!(ShardCodec::from_tag(9), None);
+        let err = ShardCodec::parse("gzip").unwrap_err();
+        assert!(err.to_string().contains("delta-packed-lz"), "{err}");
+    }
+
+    #[test]
+    fn cache_error_downcasts_from_io_error() {
+        let io_err: io::Error = CacheError::ChecksumMismatch { expected: 1, found: 2 }.into();
+        assert_eq!(io_err.kind(), io::ErrorKind::InvalidData);
+        assert!(matches!(
+            cache_error_of(&io_err),
+            Some(CacheError::ChecksumMismatch { expected: 1, found: 2 })
+        ));
+        let io_err: io::Error = CacheError::Truncated { what: "x" }.into();
+        assert_eq!(io_err.kind(), io::ErrorKind::UnexpectedEof);
+    }
+
+    #[cfg(feature = "zstd")]
+    #[test]
+    fn zstd_stub_frames_roundtrip() {
+        for src in [
+            Vec::new(),
+            vec![42u8; 3],
+            (0..200_000u32).map(|i| (i % 251) as u8).collect::<Vec<u8>>(),
+        ] {
+            let frame = zstd_stub::compress(&src);
+            assert_eq!(&frame[..4], &0xFD2F_B528u32.to_le_bytes());
+            assert_eq!(zstd_stub::decompress(&frame).unwrap(), src);
+        }
+        // truncations are typed errors
+        let frame = zstd_stub::compress(&[1, 2, 3, 4, 5]);
+        for cut in 0..frame.len() {
+            assert!(zstd_stub::decompress(&frame[..cut]).is_err(), "cut {cut}");
+        }
+        // a compressed-block frame is refused, not misread
+        let mut bad = zstd_stub::compress(&[9u8; 8]);
+        // block header starts at 4 (magic) + 1 (descriptor) + 8 (FCS) = 13;
+        // set block type bits to 2 (compressed)
+        bad[13] |= 0b100;
+        assert_eq!(zstd_stub::decompress(&bad), Err(CacheError::ZstdUnavailable));
+    }
+}

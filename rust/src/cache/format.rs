@@ -1,5 +1,5 @@
-//! Sparse-logit cache shard format (v2) — see `docs/CACHE_FORMAT.md` for the
-//! normative byte-level spec.
+//! Sparse-logit cache shard format (v2/v3) — see `docs/CACHE_FORMAT.md` for
+//! the normative byte-level spec.
 //!
 //! A cache directory holds `shard-*.slc` files plus an `index.json` manifest.
 //! Each shard covers a contiguous range of *stream positions* (global token
@@ -7,11 +7,14 @@
 //! packing is exactly the Table 13 experiment). Shard layout (little-endian):
 //!
 //! ```text
-//! magic  u32 = 0x534C4332 ("SLC2"; v1 files carry "SLC1")
-//! codec  u8, rounds u8, flags u8 (bit 0 = fully covered), reserved u8
+//! magic  u32 = 0x534C4332 ("SLC2"; v1 files carry "SLC1", v3 "SLC3")
+//! codec  u8, rounds u8, flags u8 (bit 0 = fully covered), shard_codec u8
 //! start  u64   first stream position
 //! count  u64   number of positions
-//! then per position: n u8, n * 3-byte slots (quant::pack_slot)
+//! then, raw (v1/v2, or v3 with shard_codec 0):
+//!   per position: n u8, n * 3-byte slots (quant::pack_slot)
+//! or, v3 with a compressing shard codec:
+//!   payload_len u32, crc32 u32 (over header + payload), payload bytes
 //! ```
 //!
 //! v2 differs from v1 only in the magic and in the directory-level contract:
@@ -20,10 +23,17 @@
 //! discovered in any order; v1 directories carry a `cache.json` with totals
 //! only and rely on lexicographic filename order. Both record encodings are
 //! byte-identical, which is why [`Shard::read_from`] accepts either magic.
+//!
+//! v3 adds the byte-level payload codecs of [`crate::cache::codec`]
+//! (delta-varint ids, bit-packed counts, optional LZ/zstd), selected
+//! per-directory via the manifest's `shard_codec` field. Raw directories
+//! keep writing v2 files bit-identical to earlier releases; only a
+//! compressing codec switches the directory to v3.
 
 use std::io::{self, Read, Write};
 use std::path::Path;
 
+use crate::cache::codec::{self, read_exact_ctx, CacheError, ShardCodec};
 use crate::cache::quant::{self, ProbCodec};
 use crate::util::json::Json;
 
@@ -31,8 +41,12 @@ use crate::util::json::Json;
 pub const MAGIC_V1: u32 = 0x534C_4331;
 /// Current (v2) shard magic: ASCII "SLC2" as a little-endian u32.
 pub const MAGIC_V2: u32 = 0x534C_4332;
-/// Current format version written by [`Shard::write_to`].
+/// Compressed (v3) shard magic: ASCII "SLC3" as a little-endian u32.
+pub const MAGIC_V3: u32 = 0x534C_4333;
+/// Format version written by [`Shard::write_to`] (raw directories).
 pub const FORMAT_VERSION: u32 = 2;
+/// Format version written for directories with a compressing shard codec.
+pub const FORMAT_VERSION_V3: u32 = 3;
 /// Fixed shard header size in bytes (magic + codec word + start + count).
 pub const HEADER_BYTES: usize = 24;
 /// Directory-level manifest filename for v2 caches.
@@ -68,12 +82,15 @@ pub const FLAG_FULLY_COVERED: u8 = 1;
 /// Decoded fixed-size shard header.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub struct ShardHeader {
-    /// 1 for "SLC1" files, 2 for "SLC2" files.
+    /// 1 for "SLC1" files, 2 for "SLC2" files, 3 for "SLC3" files.
     pub version: u32,
     pub codec: ProbCodec,
     /// [`FLAG_FULLY_COVERED`] and future bits (the old reserved byte; v1
     /// and early-v2 files carry 0).
     pub flags: u8,
+    /// Byte-level payload codec (header byte 7). v1/v2 files wrote 0 there,
+    /// so every pre-v3 shard parses as [`ShardCodec::Raw`].
+    pub shard_codec: ShardCodec,
     /// First stream position covered by the shard.
     pub start: u64,
     /// Number of consecutive positions stored.
@@ -84,32 +101,48 @@ pub struct ShardHeader {
 /// index a shard; record decoding can be deferred until first touch.
 pub fn read_header(r: &mut impl Read) -> io::Result<ShardHeader> {
     let mut u32b = [0u8; 4];
-    r.read_exact(&mut u32b)?;
+    read_exact_ctx(r, &mut u32b, "shard magic")?;
     let magic = u32::from_le_bytes(u32b);
     let version = match magic {
         MAGIC_V1 => 1,
         MAGIC_V2 => 2,
-        other => {
-            return Err(io::Error::new(
-                io::ErrorKind::InvalidData,
-                format!(
-                    "unsupported shard magic {other:#010x}: expected \
-                     {MAGIC_V1:#010x} (\"SLC1\", v1) or {MAGIC_V2:#010x} (\"SLC2\", v2)"
-                ),
-            ))
-        }
+        MAGIC_V3 => 3,
+        other => return Err(CacheError::BadMagic { magic: other }.into()),
     };
     let mut hdr = [0u8; 4];
-    r.read_exact(&mut hdr)?;
+    read_exact_ctx(r, &mut hdr, "shard codec word")?;
     let codec = ProbCodec::from_tag(hdr[0], hdr[1] as u32)
-        .ok_or_else(|| io::Error::new(io::ErrorKind::InvalidData, "bad codec tag"))?;
+        .ok_or(CacheError::BadProbCodec { tag: hdr[0] })?;
     let flags = hdr[2];
+    // byte 7 was "reserved, write 0, ignore on read" before v3; keep
+    // ignoring it there so pre-v3 files with stray bytes stay readable
+    let shard_codec = if version >= 3 {
+        ShardCodec::from_tag(hdr[3]).ok_or(CacheError::BadShardCodec { tag: hdr[3] })?
+    } else {
+        ShardCodec::Raw
+    };
     let mut u64b = [0u8; 8];
-    r.read_exact(&mut u64b)?;
+    read_exact_ctx(r, &mut u64b, "shard start")?;
     let start = u64::from_le_bytes(u64b);
-    r.read_exact(&mut u64b)?;
+    read_exact_ctx(r, &mut u64b, "shard count")?;
     let count = u64::from_le_bytes(u64b);
-    Ok(ShardHeader { version, codec, flags, start, count })
+    Ok(ShardHeader { version, codec, flags, shard_codec, start, count })
+}
+
+/// The exact 24 header bytes of a v3 shard — shared by the writer and by
+/// the reader's CRC check, so a header bit flip that survives parsing
+/// (i.e. changes the decoded meaning) always fails the checksum.
+fn header_bytes(hdr: &ShardHeader) -> [u8; HEADER_BYTES] {
+    let rounds = match hdr.codec {
+        ProbCodec::Count { rounds } => rounds as u8,
+        _ => 0,
+    };
+    let mut b = [0u8; HEADER_BYTES];
+    b[0..4].copy_from_slice(&MAGIC_V3.to_le_bytes());
+    b[4..8].copy_from_slice(&[hdr.codec.tag(), rounds, hdr.flags, hdr.shard_codec.tag()]);
+    b[8..16].copy_from_slice(&hdr.start.to_le_bytes());
+    b[16..24].copy_from_slice(&hdr.count.to_le_bytes());
+    b
 }
 
 /// In-memory shard: encoded records for [start, start+records.len()).
@@ -172,33 +205,98 @@ impl Shard {
         Ok(())
     }
 
-    /// Deserialize a full shard. Accepts both v1 and v2 magics (the record
-    /// encoding is identical); unknown magics fail with a versioned error.
+    /// Serialize under an explicit byte-level payload codec. Raw delegates
+    /// to the v2 stream (bit-identical to every earlier release); any other
+    /// codec writes a v3 file: header, payload length, CRC32 over
+    /// header + payload, then the encoded payload.
+    pub fn write_to_coded(
+        &self,
+        w: &mut impl Write,
+        flags: u8,
+        shard_codec: ShardCodec,
+    ) -> io::Result<()> {
+        if shard_codec == ShardCodec::Raw {
+            return self.write_to_flagged(w, flags);
+        }
+        let hdr = ShardHeader {
+            version: 3,
+            codec: self.codec,
+            flags,
+            shard_codec,
+            start: self.start,
+            count: self.records.len() as u64,
+        };
+        let header = header_bytes(&hdr);
+        let payload = codec::encode_records(&self.records, shard_codec)?;
+        if payload.len() > codec::MAX_PAYLOAD_BYTES {
+            return Err(CacheError::Corrupt("shard payload exceeds the size cap".into()).into());
+        }
+        let crc = codec::crc32(&[&header[..], &payload[..]]);
+        w.write_all(&header)?;
+        w.write_all(&(payload.len() as u32).to_le_bytes())?;
+        w.write_all(&crc.to_le_bytes())?;
+        w.write_all(&payload)
+    }
+
+    /// Deserialize a full shard. Accepts v1, v2 and v3 magics; unknown
+    /// magics fail with a versioned error.
     pub fn read_from(r: &mut impl Read) -> io::Result<Shard> {
         let hdr = read_header(r)?;
+        Shard::read_body(&hdr, r)
+    }
+
+    /// Deserialize the record body after [`read_header`] has consumed the
+    /// 24 header bytes (lazy readers validate the header separately first).
+    pub(crate) fn read_body(hdr: &ShardHeader, r: &mut impl Read) -> io::Result<Shard> {
         let count = hdr.count as usize;
-        let mut records = Vec::with_capacity(count);
-        for _ in 0..count {
-            let mut nb = [0u8; 1];
-            r.read_exact(&mut nb)?;
-            let n = nb[0] as usize;
-            let mut ids = Vec::with_capacity(n);
-            let mut codes = Vec::with_capacity(n);
-            for _ in 0..n {
-                let mut slot = [0u8; 3];
-                r.read_exact(&mut slot)?;
-                let (id, c) = quant::unpack_slot(slot);
-                ids.push(id);
-                codes.push(c);
+        if hdr.shard_codec == ShardCodec::Raw {
+            // capacity is clamped: `count` in a v2 header is unchecksummed,
+            // and a corrupt value must not turn into a giant allocation
+            let mut records = Vec::with_capacity(count.min(1 << 20));
+            for _ in 0..count {
+                let mut nb = [0u8; 1];
+                read_exact_ctx(r, &mut nb, "record length byte")?;
+                let n = nb[0] as usize;
+                let mut ids = Vec::with_capacity(n);
+                let mut codes = Vec::with_capacity(n);
+                for _ in 0..n {
+                    let mut slot = [0u8; 3];
+                    read_exact_ctx(r, &mut slot, "record slot")?;
+                    let (id, c) = quant::unpack_slot(slot);
+                    ids.push(id);
+                    codes.push(c);
+                }
+                records.push((ids, codes));
             }
-            records.push((ids, codes));
+            return Ok(Shard { codec: hdr.codec, start: hdr.start, records });
         }
+        let mut trailer = [0u8; 8];
+        read_exact_ctx(r, &mut trailer, "payload length and checksum")?;
+        let payload_len = u32::from_le_bytes(trailer[0..4].try_into().unwrap()) as usize;
+        let stored_crc = u32::from_le_bytes(trailer[4..8].try_into().unwrap());
+        if payload_len > codec::MAX_PAYLOAD_BYTES {
+            return Err(CacheError::Corrupt("declared payload length exceeds cap".into()).into());
+        }
+        let mut payload = vec![0u8; payload_len];
+        read_exact_ctx(r, &mut payload, "shard payload")?;
+        let crc = codec::crc32(&[&header_bytes(hdr)[..], &payload[..]]);
+        if crc != stored_crc {
+            return Err(CacheError::ChecksumMismatch { expected: stored_crc, found: crc }.into());
+        }
+        let records = codec::decode_records(&payload, count, hdr.shard_codec)?;
         Ok(Shard { codec: hdr.codec, start: hdr.start, records })
     }
 
-    /// Bytes on disk for this shard (header + records).
+    /// Bytes on disk for this shard under the *raw* record stream (header +
+    /// records). Compressed sizes depend on the payload; callers that need
+    /// them measure the serialized buffer instead.
     pub fn byte_size(&self) -> usize {
         HEADER_BYTES + self.records.iter().map(|(ids, _)| 1 + 3 * ids.len()).sum::<usize>()
+    }
+
+    /// Stored `(id, prob)` slots across all records.
+    pub fn slot_count(&self) -> u64 {
+        self.records.iter().map(|(ids, _)| ids.len() as u64).sum()
     }
 }
 
@@ -222,6 +320,10 @@ pub struct ShardMeta {
     /// gaps) record exact ranges so an interrupted cache reopens cleanly:
     /// resumable builds skip covered ranges and recompute only the rest.
     pub covered: Option<Vec<(u64, u64)>>,
+    /// Stored `(id, prob)` slots, recorded explicitly in v3 manifests —
+    /// compressed shard bytes no longer determine the slot total. `None`
+    /// (v2 manifests) falls back to the raw byte-layout inversion.
+    pub stored_slots: Option<u64>,
 }
 
 impl ShardMeta {
@@ -233,13 +335,17 @@ impl ShardMeta {
         }
     }
 
-    /// Stored `(id, prob)` slots, recovered from the byte layout: a shard is
+    /// Stored `(id, prob)` slots: the explicit v3 record when present,
+    /// otherwise recovered from the raw byte layout — a raw shard is
     /// `HEADER_BYTES + count * 1 + slots * 3` bytes (one length byte per
     /// position, 3 bytes per slot), so the slot total needs no decode.
     /// Saturating as a belt — `from_json` already rejects entries whose
     /// `bytes` cannot hold `count` records.
     pub fn slots(&self) -> u64 {
-        self.bytes.saturating_sub(HEADER_BYTES as u64 + self.count) / 3
+        match self.stored_slots {
+            Some(s) => s,
+            None => self.bytes.saturating_sub(HEADER_BYTES as u64 + self.count) / 3,
+        }
     }
 }
 
@@ -252,6 +358,10 @@ impl ShardMeta {
 pub struct CacheManifest {
     pub version: u32,
     pub codec: ProbCodec,
+    /// Byte-level payload codec shared by every shard in the directory.
+    /// Recorded explicitly in v3 manifests; v2 manifests (which predate the
+    /// field) are always [`ShardCodec::Raw`].
+    pub shard_codec: ShardCodec,
     /// Canonical cache-kind string (`topk`, `rs:rounds=50,temp=1`) recorded
     /// by the builder so readers can enforce spec/cache compatibility
     /// (`spec::DistillSpec::check_cache`). Absent in caches written before
@@ -286,6 +396,9 @@ impl CacheManifest {
                     ("count", Json::num(s.count as f64)),
                     ("bytes", Json::num(s.bytes as f64)),
                 ];
+                if self.version >= FORMAT_VERSION_V3 {
+                    pairs.push(("slots", Json::num(s.slots() as f64)));
+                }
                 if let Some(ranges) = &s.covered {
                     let arr = ranges
                         .iter()
@@ -307,6 +420,9 @@ impl CacheManifest {
             ("bytes", Json::num(self.bytes as f64)),
             ("shards", Json::Arr(shards)),
         ];
+        if self.version >= FORMAT_VERSION_V3 {
+            pairs.push(("shard_codec", Json::str(self.shard_codec.name())));
+        }
         if let Some(kind) = &self.kind {
             pairs.push(("kind", Json::str(kind)));
         }
@@ -318,15 +434,25 @@ impl CacheManifest {
         let num =
             |key: &str| j.get(key).and_then(|v| v.as_f64()).ok_or_else(|| bad("missing field"));
         let version = num("version")? as u32;
-        if version != FORMAT_VERSION {
+        if version != FORMAT_VERSION && version != FORMAT_VERSION_V3 {
             return Err(io::Error::new(
                 io::ErrorKind::InvalidData,
-                format!("unsupported cache manifest version {version} (expected {FORMAT_VERSION})"),
+                format!(
+                    "unsupported cache manifest version {version} \
+                     (expected {FORMAT_VERSION} or {FORMAT_VERSION_V3})"
+                ),
             ));
         }
         let tag = num("codec")? as u8;
         let rounds = num("rounds")? as u32;
         let codec = ProbCodec::from_tag(tag, rounds).ok_or_else(|| bad("bad codec tag"))?;
+        let shard_codec = match j.get("shard_codec").and_then(|v| v.as_str()) {
+            Some(name) => ShardCodec::parse(name)?,
+            None if version >= FORMAT_VERSION_V3 => {
+                return Err(bad("v3 manifest is missing its shard_codec field"));
+            }
+            None => ShardCodec::Raw,
+        };
         let mut shards = Vec::new();
         for s in j.get("shards").and_then(|v| v.as_arr()).ok_or_else(|| bad("missing shards"))? {
             let snum = |key: &str| {
@@ -361,11 +487,22 @@ impl CacheManifest {
                 count: snum("count")? as u64,
                 bytes: snum("bytes")? as u64,
                 covered,
+                stored_slots: match s.get("slots").and_then(|v| v.as_f64()) {
+                    Some(v) => Some(v as u64),
+                    None if version >= FORMAT_VERSION_V3 => {
+                        return Err(bad("bad shard entry: v3 entry is missing slots"));
+                    }
+                    None => None,
+                },
             };
-            // a shard is at least header + one length byte per record; an
-            // entry violating that would poison every derived total
-            if meta.bytes < HEADER_BYTES as u64 + meta.count {
+            // a raw shard is at least header + one length byte per record;
+            // an entry violating that would poison every derived total.
+            // Compressed shards only guarantee the fixed header.
+            if version == FORMAT_VERSION && meta.bytes < HEADER_BYTES as u64 + meta.count {
                 return Err(bad("bad shard entry: bytes too small for count"));
+            }
+            if meta.bytes < HEADER_BYTES as u64 {
+                return Err(bad("bad shard entry: bytes smaller than a header"));
             }
             shards.push(meta);
         }
@@ -373,6 +510,7 @@ impl CacheManifest {
         Ok(CacheManifest {
             version,
             codec,
+            shard_codec,
             kind: j.get("kind").and_then(|v| v.as_str()).map(|s| s.to_string()),
             positions: num("positions")? as u64,
             slots: num("slots")? as u64,
@@ -450,7 +588,14 @@ mod tests {
         let hdr = read_header(&mut buf.as_slice()).unwrap();
         assert_eq!(
             hdr,
-            ShardHeader { version: 2, codec: ProbCodec::Ratio, flags: 0, start: 4096, count: 5 }
+            ShardHeader {
+                version: 2,
+                codec: ProbCodec::Ratio,
+                flags: 0,
+                shard_codec: ShardCodec::Raw,
+                start: 4096,
+                count: 5
+            }
         );
         // the flags byte roundtrips (crash recovery keys off it)
         let mut buf = Vec::new();
@@ -533,6 +678,7 @@ mod tests {
         let m = CacheManifest {
             version: FORMAT_VERSION,
             codec: ProbCodec::Count { rounds: 50 },
+            shard_codec: ShardCodec::Raw,
             kind: Some("rs:rounds=50,temp=1".into()),
             positions: 100,
             slots: 4200,
@@ -544,6 +690,7 @@ mod tests {
                     count: 36,
                     bytes: 525,
                     covered: Some(vec![(64, 70), (80, 100)]),
+                    stored_slots: None,
                 },
                 ShardMeta {
                     file: "shard-00000000.slc".into(),
@@ -551,6 +698,7 @@ mod tests {
                     count: 64,
                     bytes: 900,
                     covered: None,
+                    stored_slots: None,
                 },
             ],
         };
@@ -572,14 +720,19 @@ mod tests {
     #[test]
     fn shard_meta_slots_from_byte_layout() {
         // bytes = header + count + 3 * slots, so slots() inverts exactly
-        let m = ShardMeta {
+        let mut m = ShardMeta {
             file: "shard-00000000.slc".into(),
             start: 0,
             count: 10,
             bytes: HEADER_BYTES as u64 + 10 + 3 * 42,
             covered: None,
+            stored_slots: None,
         };
         assert_eq!(m.slots(), 42);
+        // an explicit record (v3 manifests) overrides the inversion —
+        // compressed bytes say nothing about the slot total
+        m.stored_slots = Some(7);
+        assert_eq!(m.slots(), 7);
     }
 
     #[test]
@@ -587,6 +740,7 @@ mod tests {
         let mut m = CacheManifest {
             version: FORMAT_VERSION,
             codec: ProbCodec::Ratio,
+            shard_codec: ShardCodec::Raw,
             kind: None,
             positions: 0,
             slots: 0,
@@ -596,5 +750,112 @@ mod tests {
         m.version = 99;
         let err = CacheManifest::from_json(&m.to_json()).unwrap_err();
         assert!(err.to_string().contains("version 99"), "got: {err}");
+    }
+
+    #[test]
+    fn v3_shard_roundtrip_every_codec() {
+        for codec in [ProbCodec::Interval, ProbCodec::Ratio, ProbCodec::Count { rounds: 50 }] {
+            let mut shard = Shard::new(codec, 192);
+            for i in 0..12 {
+                // i % 4 == 0 rows are empty so gap records are exercised
+                shard.push(&target(if i % 4 == 0 { 0 } else { 2 + i % 9 }, i as u64));
+            }
+            for sc in
+                [ShardCodec::Delta, ShardCodec::DeltaPacked, ShardCodec::DeltaPackedLz]
+            {
+                let mut buf = Vec::new();
+                shard.write_to_coded(&mut buf, FLAG_FULLY_COVERED, sc).unwrap();
+                let hdr = read_header(&mut buf.as_slice()).unwrap();
+                assert_eq!(hdr.version, 3);
+                assert_eq!(hdr.shard_codec, sc);
+                assert_eq!(hdr.flags, FLAG_FULLY_COVERED);
+                assert_eq!((hdr.start, hdr.count), (192, 12));
+                let back = Shard::read_from(&mut buf.as_slice()).unwrap();
+                assert_eq!(back.records, shard.records, "{codec:?} via {sc}");
+                assert_eq!(back.start, shard.start);
+            }
+            // Raw through the coded entry point is the v2 stream, unchanged
+            let mut coded = Vec::new();
+            shard.write_to_coded(&mut coded, 0, ShardCodec::Raw).unwrap();
+            let mut plain = Vec::new();
+            shard.write_to(&mut plain).unwrap();
+            assert_eq!(coded, plain);
+        }
+    }
+
+    #[test]
+    fn v3_magic_and_codec_tag_pinned() {
+        // docs/CACHE_FORMAT.md pins the wire bytes: "SLC3" little-endian,
+        // shard-codec tag in header byte 7
+        assert_eq!(MAGIC_V3, 0x534C_4333);
+        let mut shard = Shard::new(ProbCodec::Count { rounds: 50 }, 7);
+        shard.push(&target(3, 0));
+        let mut buf = Vec::new();
+        shard.write_to_coded(&mut buf, 0, ShardCodec::DeltaPacked).unwrap();
+        assert_eq!(&buf[0..4], &[0x33, 0x43, 0x4C, 0x53]); // "3CLS" on the wire
+        assert_eq!(buf[4], 2); // codec tag Count
+        assert_eq!(buf[5], 50); // rounds
+        assert_eq!(buf[6], 0); // flags
+        assert_eq!(buf[7], ShardCodec::DeltaPacked.tag());
+        let payload_len = u32::from_le_bytes(buf[24..28].try_into().unwrap()) as usize;
+        assert_eq!(buf.len(), HEADER_BYTES + 8 + payload_len);
+    }
+
+    #[test]
+    fn v3_checksum_catches_flips_and_truncations() {
+        use crate::cache::codec::cache_error_of;
+        let mut shard = Shard::new(ProbCodec::Count { rounds: 50 }, 0);
+        for i in 0..6 {
+            shard.push(&target(5, i));
+        }
+        let mut buf = Vec::new();
+        shard.write_to_coded(&mut buf, 0, ShardCodec::DeltaPackedLz).unwrap();
+        // every truncation is an error, never a short decode
+        for cut in 0..buf.len() {
+            assert!(Shard::read_from(&mut &buf[..cut]).is_err(), "cut {cut}");
+        }
+        // a payload bit flip fails the checksum before any decode
+        let mut bad = buf.clone();
+        let at = bad.len() - 3;
+        bad[at] ^= 0x10;
+        let err = Shard::read_from(&mut bad.as_slice()).unwrap_err();
+        assert!(
+            matches!(cache_error_of(&err), Some(CacheError::ChecksumMismatch { .. })),
+            "got: {err}"
+        );
+    }
+
+    #[test]
+    fn manifest_v3_records_shard_codec_and_slots() {
+        let m = CacheManifest {
+            version: FORMAT_VERSION_V3,
+            codec: ProbCodec::Count { rounds: 50 },
+            shard_codec: ShardCodec::DeltaPackedLz,
+            kind: Some("rs:rounds=50,temp=1".into()),
+            positions: 64,
+            slots: 777,
+            bytes: 310,
+            shards: vec![ShardMeta {
+                file: "shard-00000000.slc".into(),
+                start: 0,
+                count: 64,
+                bytes: 310,
+                covered: None,
+                stored_slots: Some(777),
+            }],
+        };
+        let j = m.to_json();
+        let back = CacheManifest::from_json(&Json::parse(&j.to_string()).unwrap()).unwrap();
+        assert_eq!(back, m);
+        assert_eq!(back.shards[0].slots(), 777);
+        // a v3 manifest without the codec name is rejected, not guessed at
+        let stripped = j.to_string().replace(",\"shard_codec\":\"delta-packed-lz\"", "");
+        let err =
+            CacheManifest::from_json(&Json::parse(&stripped).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("shard_codec"), "got: {err}");
+        // an unknown codec name is a typed refusal listing the options
+        let renamed = j.to_string().replace("delta-packed-lz", "brotli");
+        let err = CacheManifest::from_json(&Json::parse(&renamed).unwrap()).unwrap_err();
+        assert!(err.to_string().contains("unknown shard codec"), "got: {err}");
     }
 }

@@ -1,5 +1,7 @@
 //! Quantized sparse-logit cache (paper Appendix D.1/D.2): 24-bit slots,
-//! three probability codecs, sharded v2 files with a directory manifest, a
+//! three probability codecs, optional byte-level shard compression
+//! ([`codec`]: delta-varint ids, bit-packed counts, LZ/zstd blocks),
+//! sharded v2/v3 files with a directory manifest, a
 //! bounded ring buffer feeding an out-of-order *resumable* async writer, a
 //! lazy LRU range reader for the student trainer, and the composable tier
 //! stack ([`tier`]: write-through backfill over any origin + an in-RAM
@@ -25,6 +27,7 @@
 //! The byte-level format is specified in `docs/CACHE_FORMAT.md`.
 
 pub mod block;
+pub mod codec;
 pub mod format;
 pub mod quant;
 pub mod reader;
@@ -32,6 +35,7 @@ pub mod tier;
 pub mod writer;
 
 pub use block::RangeBlock;
+pub use codec::{cache_error_of, CacheError, ShardCodec};
 pub use format::{CacheManifest, ShardMeta, SparseTarget};
 pub use quant::ProbCodec;
 pub use reader::{CacheReader, ShardEntry, DEFAULT_RESIDENT_SHARDS};

@@ -15,6 +15,12 @@
 pub const ID_BITS: u32 = 17;
 pub const PROB_BITS: u32 = 7;
 pub const PROB_LEVELS: u32 = 1 << PROB_BITS; // 128
+/// Largest representable token id. The byte-level shard codecs
+/// ([`crate::cache::codec`]) validate decoded ids against this bound and
+/// decoded prob codes against [`PROB_LEVELS`] — both invariants are
+/// structural in the packed 24-bit slot, but a decompressed v3 payload has
+/// to re-establish them explicitly.
+pub const MAX_ID: u32 = (1 << ID_BITS) - 1;
 
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ProbCodec {

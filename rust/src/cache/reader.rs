@@ -26,6 +26,7 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Condvar, Mutex};
 
 use crate::cache::block::RangeBlock;
+use crate::cache::codec::{CacheError, ShardCodec};
 use crate::cache::format::{
     self, CacheManifest, Shard, SparseTarget, INDEX_FILE, LEGACY_META_FILE,
 };
@@ -82,6 +83,12 @@ pub struct CacheReader {
     /// canonical cache-kind string from the manifest (`topk`,
     /// `rs:rounds=50,temp=1`); `None` for legacy/untagged directories
     pub kind: Option<String>,
+    /// byte-level shard codec declared by the manifest (`Raw` for v1/v2
+    /// directories). Every shard header must agree: a file whose header
+    /// carries a different codec tag than the manifest fails the load with
+    /// [`CacheError::ShardCodecMismatch`] instead of decoding under the
+    /// wrong scheme.
+    pub shard_codec: ShardCodec,
 }
 
 impl CacheReader {
@@ -93,7 +100,7 @@ impl CacheReader {
     /// Open a cache directory, reading metadata only. `capacity` bounds how
     /// many decoded shards stay resident at once (min 1).
     pub fn open_with_capacity(dir: &Path, capacity: usize) -> std::io::Result<CacheReader> {
-        let (version, positions, rounds, bytes, kind, mut entries) = if dir
+        let (version, positions, rounds, bytes, kind, shard_codec, mut entries) = if dir
             .join(INDEX_FILE)
             .exists()
         {
@@ -103,10 +110,10 @@ impl CacheReader {
                 .iter()
                 .map(|s| ShardEntry { path: dir.join(&s.file), start: s.start, count: s.count })
                 .collect();
-            (m.version, m.positions, m.rounds(), m.bytes, m.kind, entries)
+            (m.version, m.positions, m.rounds(), m.bytes, m.kind, m.shard_codec, entries)
         } else if dir.join(LEGACY_META_FILE).exists() {
             let (version, positions, rounds, bytes, entries) = Self::open_legacy_v1(dir)?;
-            (version, positions, rounds, bytes, None, entries)
+            (version, positions, rounds, bytes, None, ShardCodec::Raw, entries)
         } else {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::NotFound,
@@ -133,6 +140,7 @@ impl CacheReader {
             bytes,
             version,
             kind,
+            shard_codec,
         })
     }
 
@@ -215,7 +223,18 @@ impl CacheReader {
         }
         let entry = &self.entries[idx];
         let mut f = std::io::BufReader::new(std::fs::File::open(&entry.path)?);
-        let shard = Arc::new(Shard::read_from(&mut f)?);
+        let hdr = format::read_header(&mut f)?;
+        // the manifest declares one codec for the whole directory; a shard
+        // header disagreeing (stale index.json, files copied between
+        // directories) must fail typed, not decode under the wrong scheme
+        if hdr.shard_codec != self.shard_codec {
+            return Err(CacheError::ShardCodecMismatch {
+                expected: self.shard_codec,
+                found: hdr.shard_codec,
+            }
+            .into());
+        }
+        let shard = Arc::new(Shard::read_body(&hdr, &mut f)?);
         // positions are bounds-checked against the manifest's `count`, so a
         // shard holding fewer records than declared must fail here, cleanly,
         // not as an index panic inside decode()
@@ -650,6 +669,83 @@ mod tests {
         let err = CacheReader::open(&dir4).unwrap().cache_kind().unwrap_err();
         assert!(err.to_string().contains("hologram"), "{err}");
         let _ = std::fs::remove_dir_all(&dir4);
+    }
+
+    #[test]
+    fn compressed_dir_decodes_bit_identically_to_raw() {
+        use crate::cache::codec::{cache_error_of, CacheError, ShardCodec};
+        let stamp = std::process::id();
+        let raw_dir = std::env::temp_dir().join(format!("rskd-rdraw-test-{stamp}"));
+        build_cache(&raw_dir, 40);
+        let raw = CacheReader::open(&raw_dir).unwrap();
+        assert_eq!(raw.shard_codec, ShardCodec::Raw);
+
+        for codec in [ShardCodec::Delta, ShardCodec::DeltaPacked, ShardCodec::DeltaPackedLz] {
+            let dir = std::env::temp_dir().join(format!("rskd-rdcoded-{codec}-test-{stamp}"));
+            let _ = std::fs::remove_dir_all(&dir);
+            let w = CacheWriter::create_coded(
+                &dir,
+                ProbCodec::Count { rounds: 50 },
+                codec,
+                16,
+                8,
+                None,
+            )
+            .unwrap();
+            for pos in 0..40u64 {
+                let t = SparseTarget {
+                    ids: vec![pos as u32 % 100, 200, 300],
+                    probs: vec![20.0 / 50.0, 10.0 / 50.0, 5.0 / 50.0],
+                };
+                assert!(w.push(pos, t));
+            }
+            w.finish().unwrap();
+            let r = CacheReader::open(&dir).unwrap();
+            assert_eq!(r.shard_codec, codec);
+            assert_eq!(r.version, 3);
+            let (mut a, mut b) = (RangeBlock::new(), RangeBlock::new());
+            for start in [0u64, 3, 17, 35] {
+                raw.read_range_into(start, 10, &mut a).unwrap();
+                r.read_range_into(start, 10, &mut b).unwrap();
+                assert_eq!(a.ids, b.ids, "{codec} start {start}");
+                assert_eq!(a.probs, b.probs, "{codec} start {start}");
+                assert_eq!(a.offsets, b.offsets, "{codec} start {start}");
+            }
+            let _ = std::fs::remove_dir_all(&dir);
+        }
+
+        // a manifest lying about the codec must fail typed, not mis-decode:
+        // build a delta dir, then rewrite its manifest to claim delta-packed
+        let lie_dir = std::env::temp_dir().join(format!("rskd-rdlie-test-{stamp}"));
+        let _ = std::fs::remove_dir_all(&lie_dir);
+        let w = CacheWriter::create_coded(
+            &lie_dir,
+            ProbCodec::Count { rounds: 50 },
+            ShardCodec::Delta,
+            16,
+            8,
+            None,
+        )
+        .unwrap();
+        for pos in 0..16u64 {
+            assert!(w.push(pos, SparseTarget { ids: vec![pos as u32], probs: vec![0.4] }));
+        }
+        w.finish().unwrap();
+        let text = std::fs::read_to_string(lie_dir.join(INDEX_FILE)).unwrap();
+        let lied = text.replace("\"shard_codec\":\"delta\"", "\"shard_codec\":\"delta-packed\"");
+        assert_ne!(text, lied);
+        std::fs::write(lie_dir.join(INDEX_FILE), lied).unwrap();
+        let r = CacheReader::open(&lie_dir).unwrap();
+        let err = r.try_get(0).unwrap_err();
+        match cache_error_of(&err) {
+            Some(CacheError::ShardCodecMismatch { expected, found }) => {
+                assert_eq!(*expected, ShardCodec::DeltaPacked);
+                assert_eq!(*found, ShardCodec::Delta);
+            }
+            other => panic!("expected ShardCodecMismatch, got {other:?} ({err})"),
+        }
+        let _ = std::fs::remove_dir_all(&lie_dir);
+        let _ = std::fs::remove_dir_all(&raw_dir);
     }
 
     #[test]

@@ -41,10 +41,11 @@ use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::{Arc, Mutex};
 
 use crate::cache::block::RangeBlock;
+use crate::cache::codec::ShardCodec;
 use crate::cache::format::{ShardMeta, INDEX_FILE};
 use crate::cache::quant::{self, ProbCodec};
 use crate::cache::reader::CacheReader;
-use crate::cache::writer::{manifest_of, merge_kind, recover_dir, Pending};
+use crate::cache::writer::{manifest_of, merge_kind, merge_shard_codec, recover_dir, Pending};
 use crate::cache::TargetSource;
 use crate::spec::{CacheKind, SpecError};
 
@@ -257,6 +258,10 @@ pub struct WriteThrough<O: TargetSource> {
     origin: O,
     dir: PathBuf,
     codec: ProbCodec,
+    /// byte-level codec every backfilled shard is written with — the
+    /// directory's codec, adopted on open (mixing codecs in one directory
+    /// is refused by [`merge_shard_codec`])
+    shard_codec: ShardCodec,
     pps: usize,
     kind: Option<String>,
     /// gap-compute windows expand to this alignment (set it to the packed
@@ -296,17 +301,35 @@ impl<O: TargetSource> WriteThrough<O> {
         positions_per_shard: usize,
         kind: Option<String>,
     ) -> std::io::Result<WriteThrough<O>> {
+        WriteThrough::open_coded(origin, dir, codec, None, positions_per_shard, kind)
+    }
+
+    /// [`WriteThrough::open`] with an explicit shard-codec request: every
+    /// backfilled shard (and the manifest) is written with it. `Some(c)`
+    /// must match the directory's existing shards — mixing codecs in one
+    /// directory is refused — and `None` adopts whatever the directory
+    /// already uses (Raw for a fresh one).
+    pub fn open_coded(
+        origin: O,
+        dir: &Path,
+        codec: ProbCodec,
+        shard_codec: Option<ShardCodec>,
+        positions_per_shard: usize,
+        kind: Option<String>,
+    ) -> std::io::Result<WriteThrough<O>> {
         assert!(positions_per_shard > 0, "positions_per_shard must be positive");
         std::fs::create_dir_all(dir)?;
         let recovered = recover_dir(dir, codec, positions_per_shard)?;
         // adopt the directory's recorded kind when the caller passes none
         // (a checkpoint must never erase the tag); conflicts are refused
         let kind = merge_kind(dir, kind, recovered.kind.clone())?;
+        let shard_codec = merge_shard_codec(dir, shard_codec, recovered.shard_codec)?;
         let dirty = !recovered.entries.is_empty() && !dir.join(INDEX_FILE).exists();
         Ok(WriteThrough {
             origin,
             dir: dir.to_path_buf(),
             codec,
+            shard_codec,
             pps: positions_per_shard,
             kind,
             align: 1,
@@ -340,6 +363,11 @@ impl<O: TargetSource> WriteThrough<O> {
 
     pub fn codec(&self) -> ProbCodec {
         self.codec
+    }
+
+    /// Byte-level codec backfilled shards are written with.
+    pub fn shard_codec(&self) -> ShardCodec {
+        self.shard_codec
     }
 
     pub fn positions_per_shard(&self) -> usize {
@@ -393,9 +421,11 @@ impl<O: TargetSource> WriteThrough<O> {
             if p.filled == 0 {
                 continue;
             }
-            metas.push(p.flush_partial(&self.dir, shard_id, self.codec, self.pps)?);
+            metas.push(
+                p.flush_partial(&self.dir, shard_id, self.codec, self.shard_codec, self.pps)?,
+            );
         }
-        manifest_of(self.codec, self.kind.clone(), metas).save(&self.dir)?;
+        manifest_of(self.codec, self.shard_codec, self.kind.clone(), metas).save(&self.dir)?;
         st.dirty = false;
         Ok(())
     }
@@ -459,8 +489,13 @@ impl<O: TargetSource> WriteThrough<O> {
                 st.dirty = true;
                 if p.filled == self.pps {
                     let done = st.pending.remove(&shard_id).unwrap();
-                    st.entries
-                        .push(done.flush_complete(&self.dir, shard_id, self.codec, self.pps)?);
+                    st.entries.push(done.flush_complete(
+                        &self.dir,
+                        shard_id,
+                        self.codec,
+                        self.shard_codec,
+                        self.pps,
+                    )?);
                     st.reader = None; // the next disk read must see the new shard
                     flushed_any = true;
                 }
@@ -814,6 +849,77 @@ mod tests {
         // conflicting kinds are refused outright
         assert!(WriteThrough::open(origin(32), &dir, CODEC, 16, Some("topk".into())).is_err());
         let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn coded_write_through_backfills_directory_codec_bit_identically() {
+        use crate::cache::format::read_header;
+
+        // raw baseline tier
+        let raw_dir = tdir("wt-codec-raw");
+        let raw = WriteThrough::open(origin(48), &raw_dir, CODEC, 16, None).unwrap();
+        // compressed tier over the same origin
+        let dir = tdir("wt-codec-lz");
+        let wt = WriteThrough::open_coded(
+            origin(48),
+            &dir,
+            CODEC,
+            Some(ShardCodec::DeltaPackedLz),
+            16,
+            None,
+        )
+        .unwrap();
+        assert_eq!(wt.shard_codec(), ShardCodec::DeltaPackedLz);
+        let (mut a, mut b) = (RangeBlock::new(), RangeBlock::new());
+        for (start, len) in [(0u64, 16usize), (5, 30), (40, 8), (0, 48)] {
+            raw.read_range_into(start, len, &mut a).unwrap();
+            wt.read_range_into(start, len, &mut b).unwrap();
+            assert_eq!(a, b, "start {start} len {len}");
+        }
+        wt.checkpoint().unwrap();
+        drop(wt);
+        drop(raw);
+
+        // every flushed shard (complete and partial) carries the codec tag
+        let m = CacheManifest::load(&dir).unwrap();
+        assert_eq!(m.shard_codec, ShardCodec::DeltaPackedLz);
+        assert_eq!(m.version, 3);
+        assert!(!m.shards.is_empty());
+        for s in &m.shards {
+            let mut f = std::fs::File::open(dir.join(&s.file)).unwrap();
+            let hdr = read_header(&mut f).unwrap();
+            assert_eq!(hdr.shard_codec, ShardCodec::DeltaPackedLz, "{}", s.file);
+            assert_eq!(hdr.version, 3);
+        }
+
+        // reopening untagged adopts the codec and serves warm, identically
+        let wt = WriteThrough::open(origin(48), &dir, CODEC, 16, None).unwrap();
+        assert_eq!(wt.shard_codec(), ShardCodec::DeltaPackedLz);
+        raw_read_matches(&raw_dir, &wt);
+        assert_eq!(wt.origin().computes.load(Ordering::Relaxed), 0);
+        // a conflicting explicit codec is refused
+        let err = WriteThrough::open_coded(
+            origin(48),
+            &dir,
+            CODEC,
+            Some(ShardCodec::Raw),
+            16,
+            None,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("shard codec"), "{err}");
+        let _ = std::fs::remove_dir_all(&raw_dir);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    fn raw_read_matches(raw_dir: &Path, wt: &WriteThrough<KeyedOrigin>) {
+        let direct = CacheReader::open(raw_dir).unwrap();
+        let (mut a, mut b) = (RangeBlock::new(), RangeBlock::new());
+        for (start, len) in [(0u64, 48usize), (7, 20)] {
+            direct.read_range_into(start, len, &mut a).unwrap();
+            wt.read_range_into(start, len, &mut b).unwrap();
+            assert_eq!(a, b, "start {start} len {len}");
+        }
     }
 
     #[test]

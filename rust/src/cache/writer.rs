@@ -50,9 +50,10 @@ use std::sync::atomic::{AtomicBool, Ordering};
 use std::sync::Arc;
 use std::thread::JoinHandle;
 
+use crate::cache::codec::{CacheError, ShardCodec};
 use crate::cache::format::{
     CacheManifest, Shard, ShardMeta, SparseTarget, FLAG_FULLY_COVERED, FORMAT_VERSION,
-    HEADER_BYTES,
+    FORMAT_VERSION_V3, HEADER_BYTES,
 };
 use crate::cache::quant::{self, ProbCodec};
 use crate::cache::tier::Coverage;
@@ -89,6 +90,7 @@ impl Pending {
         dir: &Path,
         shard_id: u64,
         codec: ProbCodec,
+        shard_codec: ShardCodec,
         pps: usize,
     ) -> std::io::Result<ShardMeta> {
         let start = shard_id * pps as u64;
@@ -96,7 +98,7 @@ impl Pending {
         let covered = covered_ranges_of(start, &self.records, count);
         let records: Vec<EncodedRecord> =
             self.records[..count].iter().map(|r| r.clone().unwrap_or_default()).collect();
-        flush_shard_records(dir, shard_id, codec, start, records, covered)
+        flush_shard_records(dir, shard_id, codec, shard_codec, start, records, covered)
     }
 
     /// Flush this buffer as a *complete* shard (every slot filled),
@@ -106,12 +108,14 @@ impl Pending {
         dir: &Path,
         shard_id: u64,
         codec: ProbCodec,
+        shard_codec: ShardCodec,
         pps: usize,
     ) -> std::io::Result<ShardMeta> {
         debug_assert_eq!(self.filled, pps, "complete flush requires a full buffer");
         let records: Vec<EncodedRecord> =
             self.records.into_iter().map(|r| r.unwrap_or_default()).collect();
-        flush_shard_records(dir, shard_id, codec, shard_id * pps as u64, records, None)
+        let start = shard_id * pps as u64;
+        flush_shard_records(dir, shard_id, codec, shard_codec, start, records, None)
     }
 }
 
@@ -130,6 +134,7 @@ pub(crate) fn flush_shard_records(
     dir: &Path,
     shard_id: u64,
     codec: ProbCodec,
+    shard_codec: ShardCodec,
     start: u64,
     records: Vec<EncodedRecord>,
     covered: Option<Vec<(u64, u64)>>,
@@ -138,16 +143,18 @@ pub(crate) fn flush_shard_records(
     let flags = if covered.is_none() { FLAG_FULLY_COVERED } else { 0 };
     let shard = Shard { codec, start, records };
     let file = shard_file_name(shard_id);
-    let mut f = std::io::BufWriter::new(std::fs::File::create(dir.join(&file))?);
-    shard.write_to_flagged(&mut f, flags)?;
-    use std::io::Write;
-    f.flush()?;
+    // serialize into memory first: compressed sizes are only known after
+    // encoding, and the manifest entry records the exact on-disk byte count
+    let mut buf = Vec::with_capacity(shard.byte_size());
+    shard.write_to_coded(&mut buf, flags, shard_codec)?;
+    std::fs::write(dir.join(&file), &buf)?;
     Ok(ShardMeta {
         file,
         start,
         count: count as u64,
-        bytes: shard.byte_size() as u64,
+        bytes: buf.len() as u64,
         covered,
+        stored_slots: Some(shard.slot_count()),
     })
 }
 
@@ -181,13 +188,17 @@ pub(crate) fn covered_ranges_of(
 /// contract).
 pub(crate) fn manifest_of(
     codec: ProbCodec,
+    shard_codec: ShardCodec,
     kind: Option<String>,
     mut entries: Vec<ShardMeta>,
 ) -> CacheManifest {
     entries.sort_by_key(|s| s.start);
     CacheManifest {
-        version: FORMAT_VERSION,
+        // raw directories keep writing v2 manifests byte-identical to
+        // earlier releases; only a compressing codec switches to v3
+        version: if shard_codec == ShardCodec::Raw { FORMAT_VERSION } else { FORMAT_VERSION_V3 },
         codec,
+        shard_codec,
         kind,
         positions: entries.iter().map(|e| e.covered_positions()).sum(),
         slots: entries.iter().map(|e| e.slots()).sum(),
@@ -212,6 +223,9 @@ pub(crate) struct Recovered {
     /// callers that pass no kind of their own must adopt it rather than
     /// erase it on the next manifest save
     pub(crate) kind: Option<String>,
+    /// the byte-level codec the directory's existing shards use (from the
+    /// manifest, or from scanned headers); `None` for a fresh directory
+    pub(crate) shard_codec: Option<ShardCodec>,
 }
 
 impl Recovered {
@@ -221,6 +235,7 @@ impl Recovered {
             pending: HashMap::new(),
             coverage: Coverage::new(),
             kind: None,
+            shard_codec: None,
         }
     }
 }
@@ -242,6 +257,27 @@ pub(crate) fn merge_kind(
         ))),
         (Some(c), _) => Ok(Some(c)),
         (None, r) => Ok(r),
+    }
+}
+
+/// Merge a caller-requested shard codec with the one the directory already
+/// uses: an explicit request must match existing shards (one directory, one
+/// codec — the manifest records a single `shard_codec`); no request adopts
+/// the directory's codec, or Raw for a fresh directory.
+pub(crate) fn merge_shard_codec(
+    dir: &Path,
+    caller: Option<ShardCodec>,
+    recovered: Option<ShardCodec>,
+) -> std::io::Result<ShardCodec> {
+    match (caller, recovered) {
+        (Some(c), Some(r)) if c != r => Err(bad_data(format!(
+            "cache {} stores `{r}` shards but the writer was opened for `{c}` — refusing \
+             to mix shard codecs in one directory",
+            dir.display()
+        ))),
+        (Some(c), _) => Ok(c),
+        (None, Some(r)) => Ok(r),
+        (None, None) => Ok(ShardCodec::Raw),
     }
 }
 
@@ -275,6 +311,7 @@ pub(crate) fn recover_dir(
             )));
         }
         rec.kind = m.kind;
+        rec.shard_codec = Some(m.shard_codec);
         m.shards
     } else {
         // crash recovery: scan shard headers. Partials are normally flushed
@@ -293,18 +330,17 @@ pub(crate) fn recover_dir(
         paths.sort();
         let mut metas = Vec::with_capacity(paths.len());
         for p in paths {
-            let bytes = std::fs::metadata(&p)?.len();
             // a kill can tear a file anywhere (half a header, half a record
-            // body): adopt a shard only if it parses end to end; anything
-            // else — torn, pre-flag, unmanifested partial — is discarded
-            // and recomputed. Full parses here are fine: resume is a cold
-            // path and adopted shards get read during serving anyway.
-            let parsed = std::fs::File::open(&p)
-                .map(std::io::BufReader::new)
-                .and_then(|mut f| Shard::read_from(&mut f));
-            let Ok(shard) = parsed else { continue };
-            let mut f = std::io::BufReader::new(std::fs::File::open(&p)?);
-            let hdr = crate::cache::format::read_header(&mut f)?;
+            // body): adopt a shard only if it parses end to end with no
+            // trailing bytes; anything else — torn, pre-flag, unmanifested
+            // partial — is discarded and recomputed. Full parses here are
+            // fine: resume is a cold path and adopted shards get read during
+            // serving anyway. The whole file is read so "consumed exactly"
+            // works for compressed payloads too, where byte counts cannot be
+            // predicted from the record totals.
+            let data = std::fs::read(&p)?;
+            let mut cursor: &[u8] = &data;
+            let Ok(hdr) = crate::cache::format::read_header(&mut cursor) else { continue };
             if hdr.codec != codec {
                 // same refusal the manifest path gives: this directory
                 // belongs to a different build, resuming over it is an error
@@ -315,12 +351,26 @@ pub(crate) fn recover_dir(
                     hdr.codec
                 )));
             }
+            let Ok(shard) = Shard::read_body(&hdr, &mut cursor) else { continue };
             if hdr.count < pps as u64
                 || hdr.flags & FLAG_FULLY_COVERED == 0
                 || shard.records.len() as u64 != hdr.count
-                || bytes != shard.byte_size() as u64
+                || !cursor.is_empty()
             {
                 continue;
+            }
+            match rec.shard_codec {
+                None => rec.shard_codec = Some(hdr.shard_codec),
+                Some(expect) if expect != hdr.shard_codec => {
+                    return Err(bad_data(format!(
+                        "cannot resume {}: shard {} uses shard codec `{}` while earlier \
+                         shards use `{expect}` — a directory holds exactly one codec",
+                        dir.display(),
+                        p.display(),
+                        hdr.shard_codec
+                    )));
+                }
+                Some(_) => {}
             }
             let file = p
                 .file_name()
@@ -331,8 +381,9 @@ pub(crate) fn recover_dir(
                 file,
                 start: hdr.start,
                 count: hdr.count,
-                bytes,
+                bytes: data.len() as u64,
                 covered: None,
+                stored_slots: Some(shard.slot_count()),
             });
         }
         metas
@@ -363,8 +414,21 @@ pub(crate) fn recover_dir(
         }
         // partially-covered shard: reload its records into an assembly
         // buffer so this session can extend and re-flush it
-        let mut f = std::io::BufReader::new(std::fs::File::open(dir.join(&meta.file))?);
-        let shard = Shard::read_from(&mut f)?;
+        let data = std::fs::read(dir.join(&meta.file))?;
+        let mut cursor: &[u8] = &data;
+        let hdr = crate::cache::format::read_header(&mut cursor)?;
+        if let Some(expect) = rec.shard_codec {
+            if hdr.shard_codec != expect {
+                // the wrong-codec case the manifest cannot express: a file
+                // whose header disagrees with the directory's declared codec
+                return Err(CacheError::ShardCodecMismatch {
+                    expected: expect,
+                    found: hdr.shard_codec,
+                }
+                .into());
+            }
+        }
+        let shard = Shard::read_body(&hdr, &mut cursor)?;
         if (shard.records.len() as u64) < meta.count {
             return Err(bad_data(format!(
                 "cannot resume: {} holds {} records but the manifest declares {}",
@@ -443,7 +507,37 @@ impl CacheWriter {
         ring_cap: usize,
         kind: Option<String>,
     ) -> std::io::Result<CacheWriter> {
-        CacheWriter::start(dir, codec, positions_per_shard, ring_cap, kind, Recovered::empty())
+        CacheWriter::start(
+            dir,
+            codec,
+            ShardCodec::Raw,
+            positions_per_shard,
+            ring_cap,
+            kind,
+            Recovered::empty(),
+        )
+    }
+
+    /// Like [`CacheWriter::create_with_kind`], additionally selecting the
+    /// byte-level shard codec the directory will use (Raw keeps the v2
+    /// format; anything else writes compressed v3 shards).
+    pub fn create_coded(
+        dir: &Path,
+        codec: ProbCodec,
+        shard_codec: ShardCodec,
+        positions_per_shard: usize,
+        ring_cap: usize,
+        kind: Option<String>,
+    ) -> std::io::Result<CacheWriter> {
+        CacheWriter::start(
+            dir,
+            codec,
+            shard_codec,
+            positions_per_shard,
+            ring_cap,
+            kind,
+            Recovered::empty(),
+        )
     }
 
     /// Reopen a partially-built cache directory for more writes, returning
@@ -458,17 +552,42 @@ impl CacheWriter {
         ring_cap: usize,
         kind: Option<String>,
     ) -> std::io::Result<(CacheWriter, Coverage)> {
+        CacheWriter::resume_coded(dir, codec, None, positions_per_shard, ring_cap, kind)
+    }
+
+    /// [`CacheWriter::resume`] with an explicit shard-codec request:
+    /// `Some(c)` must match the directory's existing shards (mixing codecs
+    /// in one directory is refused), `None` adopts whatever the directory
+    /// already uses — Raw for a fresh one.
+    pub fn resume_coded(
+        dir: &Path,
+        codec: ProbCodec,
+        shard_codec: Option<ShardCodec>,
+        positions_per_shard: usize,
+        ring_cap: usize,
+        kind: Option<String>,
+    ) -> std::io::Result<(CacheWriter, Coverage)> {
         let recovered = recover_dir(dir, codec, positions_per_shard)?;
         // never erase an existing kind tag by resuming untagged
         let kind = merge_kind(dir, kind, recovered.kind.clone())?;
+        let shard_codec = merge_shard_codec(dir, shard_codec, recovered.shard_codec)?;
         let coverage = recovered.coverage.clone();
-        let w = CacheWriter::start(dir, codec, positions_per_shard, ring_cap, kind, recovered)?;
+        let w = CacheWriter::start(
+            dir,
+            codec,
+            shard_codec,
+            positions_per_shard,
+            ring_cap,
+            kind,
+            recovered,
+        )?;
         Ok((w, coverage))
     }
 
     fn start(
         dir: &Path,
         codec: ProbCodec,
+        shard_codec: ShardCodec,
         positions_per_shard: usize,
         ring_cap: usize,
         kind: Option<String>,
@@ -483,7 +602,8 @@ impl CacheWriter {
         let dir: PathBuf = dir.to_path_buf();
         let pps = positions_per_shard;
         let handle = std::thread::spawn(move || -> std::io::Result<CacheStats> {
-            let result = write_loop(&ring2, codec, pps, &dir, kind, recovered, &abort2);
+            let result =
+                write_loop(&ring2, codec, shard_codec, pps, &dir, kind, recovered, &abort2);
             // close on *every* exit path: an I/O error must unblock any
             // producer parked on a full ring (push then returns false) so
             // `finish` can report the error instead of deadlocking
@@ -539,9 +659,11 @@ impl Drop for CacheWriter {
 /// each as it completes, then flush trailing partials and save the manifest
 /// (totals recomputed from the manifest entries so resumed builds finish
 /// byte-identical to one-shot builds).
+#[allow(clippy::too_many_arguments)]
 fn write_loop(
     ring: &RingBuffer<(u64, SparseTarget)>,
     codec: ProbCodec,
+    shard_codec: ShardCodec,
     pps: usize,
     dir: &Path,
     kind: Option<String>,
@@ -573,7 +695,7 @@ fn write_loop(
         if p.filled == pps {
             let done = pending.remove(&shard_id).unwrap();
             flushed.insert(shard_id);
-            entries.push(done.flush_complete(dir, shard_id, codec, pps)?);
+            entries.push(done.flush_complete(dir, shard_id, codec, shard_codec, pps)?);
         }
     }
     if abort.load(Ordering::SeqCst) {
@@ -588,9 +710,9 @@ fn write_loop(
         if p.filled == 0 {
             continue;
         }
-        entries.push(p.flush_partial(dir, shard_id, codec, pps)?);
+        entries.push(p.flush_partial(dir, shard_id, codec, shard_codec, pps)?);
     }
-    let manifest = manifest_of(codec, kind, entries);
+    let manifest = manifest_of(codec, shard_codec, kind, entries);
     manifest.save(dir)?;
     Ok(CacheStats::of_entries(&manifest.shards))
 }
@@ -936,6 +1058,86 @@ mod tests {
         let err =
             CacheWriter::resume(&dir, ProbCodec::Count { rounds: 50 }, 8, 4, None).unwrap_err();
         assert!(err.to_string().contains("codec"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn coded_writer_roundtrips_and_resume_adopts_codec() {
+        let dir = tdir("writer-coded");
+        let w = CacheWriter::create_coded(
+            &dir,
+            ProbCodec::Count { rounds: 50 },
+            ShardCodec::DeltaPackedLz,
+            8,
+            4,
+            Some("rs:rounds=50,temp=1".into()),
+        )
+        .unwrap();
+        for pos in 0..12u64 {
+            assert!(w.push(pos, target_for(pos)));
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.positions, 12);
+        let m = CacheManifest::load(&dir).unwrap();
+        assert_eq!(m.version, FORMAT_VERSION_V3);
+        assert_eq!(m.shard_codec, ShardCodec::DeltaPackedLz);
+        assert_eq!(m.slots, stats.slots, "v3 manifests record slot totals explicitly");
+        // untagged resume adopts the directory's codec; the reloaded v3
+        // trailing partial extends to completion
+        let (w, coverage) =
+            CacheWriter::resume(&dir, ProbCodec::Count { rounds: 50 }, 8, 4, None).unwrap();
+        assert!(coverage.covers(0, 12));
+        for pos in 12..16u64 {
+            assert!(w.push(pos, target_for(pos)));
+        }
+        w.finish().unwrap();
+        let m = CacheManifest::load(&dir).unwrap();
+        assert_eq!(m.shard_codec, ShardCodec::DeltaPackedLz);
+        assert_eq!(m.positions, 16);
+        assert!(m.shards.iter().all(|s| s.covered.is_none()));
+        // an explicit conflicting codec is a refusal, not a mixed directory
+        let err = CacheWriter::resume_coded(
+            &dir,
+            ProbCodec::Count { rounds: 50 },
+            Some(ShardCodec::Raw),
+            8,
+            4,
+            None,
+        )
+        .unwrap_err();
+        assert!(err.to_string().contains("shard codec"), "{err}");
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn scan_recovery_adopts_complete_v3_shards_and_discards_torn_ones() {
+        let dir = tdir("writer-scan-v3");
+        let w =
+            CacheWriter::create_coded(&dir, ProbCodec::Ratio, ShardCodec::DeltaPacked, 8, 4, None)
+                .unwrap();
+        for pos in 0..16u64 {
+            assert!(w.push(pos, SparseTarget { ids: vec![pos as u32], probs: vec![0.5] }));
+        }
+        w.finish().unwrap();
+        std::fs::remove_file(dir.join(INDEX_FILE)).unwrap();
+        // tear the second shard mid-payload: it must be discarded, not adopted
+        let torn = dir.join("shard-00000001.slc");
+        let data = std::fs::read(&torn).unwrap();
+        std::fs::write(&torn, &data[..data.len() - 3]).unwrap();
+        let (w, coverage) = CacheWriter::resume(&dir, ProbCodec::Ratio, 8, 4, None).unwrap();
+        assert!(coverage.covers(0, 8), "the intact v3 shard parses end to end and is adopted");
+        assert!(!coverage.contains(8), "the torn v3 shard must be recomputed");
+        for pos in 8..16u64 {
+            assert!(w.push(pos, SparseTarget { ids: vec![pos as u32], probs: vec![0.5] }));
+        }
+        let stats = w.finish().unwrap();
+        assert_eq!(stats.shards, 2);
+        let m = CacheManifest::load(&dir).unwrap();
+        assert_eq!(
+            m.shard_codec,
+            ShardCodec::DeltaPacked,
+            "scan recovery re-learns the codec from shard headers"
+        );
         let _ = std::fs::remove_dir_all(&dir);
     }
 }

@@ -30,7 +30,7 @@ use std::sync::Arc;
 
 use anyhow::Result;
 
-use crate::cache::{CacheStats, CacheWriter, RingBuffer};
+use crate::cache::{CacheStats, CacheWriter, RingBuffer, ShardCodec};
 use crate::coordinator::teacher::{merge_slots, TeacherSampler};
 use crate::data::loader::Loader;
 use crate::model::ModelState;
@@ -44,11 +44,15 @@ pub struct BuildOpts {
     pub workers: usize,
     /// job-queue depth *per worker* between the teacher thread and the pool
     pub queue_depth: usize,
+    /// byte-level shard codec (`--shard-codec`); `None` adopts whatever the
+    /// directory already uses — Raw for a fresh one. `Some(c)` on a resumed
+    /// directory must match its existing shards (mixing is refused).
+    pub shard_codec: Option<ShardCodec>,
 }
 
 impl Default for BuildOpts {
     fn default() -> BuildOpts {
-        BuildOpts { workers: 0, queue_depth: 4 }
+        BuildOpts { workers: 0, queue_depth: 4, shard_codec: None }
     }
 }
 
@@ -158,8 +162,14 @@ pub fn build_cache_with(
     let (b, s) = (m.batch, m.seq);
     let sampler = TeacherSampler::new(engine, teacher, kind, seed)?;
     guard_build_seed(dir, kind, seed)?;
-    let (writer, coverage) =
-        CacheWriter::resume(dir, kind.codec(), 4096, 1024, Some(kind.to_string()))?;
+    let (writer, coverage) = CacheWriter::resume_coded(
+        dir,
+        kind.codec(),
+        opts.shard_codec,
+        4096,
+        1024,
+        Some(kind.to_string()),
+    )?;
 
     let n_workers = opts.resolved_workers();
     let jobs: Arc<RingBuffer<RowJob>> = RingBuffer::new(opts.queue_depth.max(1) * n_workers);

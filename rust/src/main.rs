@@ -26,7 +26,9 @@ use std::time::{Duration, Instant};
 
 use anyhow::{bail, Context, Result};
 
-use rskd::cache::{CacheReader, CacheWriter, DynSource, ProbCodec, SparseTarget, WriteThrough};
+use rskd::cache::{
+    CacheReader, CacheWriter, DynSource, ProbCodec, ShardCodec, SparseTarget, WriteThrough,
+};
 use rskd::coordinator::{pct_ce_to_fullkd, Pipeline, PipelineConfig};
 use rskd::report::{final_loss, Report};
 use rskd::sampling::SyntheticZipfSource;
@@ -57,6 +59,16 @@ fn parse_spec(args: &Args) -> Result<DistillSpec> {
     Ok(DistillSpec::parse_with(&args.str_or("method", "rs"), &defaults)?)
 }
 
+/// `--shard-codec <raw|delta|delta-packed|delta-packed-lz|delta-packed-zstd>`:
+/// the byte-level compression shards are written with. `None` (flag absent)
+/// adopts whatever an existing directory uses — Raw for a fresh one.
+fn shard_codec_from_args(args: &Args) -> Result<Option<ShardCodec>> {
+    match args.get("shard-codec") {
+        Some(name) => Ok(Some(name.parse::<ShardCodec>()?)),
+        None => Ok(None),
+    }
+}
+
 fn cmd_pipeline(args: &Args) -> Result<()> {
     let mut cfg = if args.bool_or("quick", false) {
         PipelineConfig::quick()
@@ -73,6 +85,7 @@ fn cmd_pipeline(args: &Args) -> Result<()> {
     if let Some(w) = args.get("build-workers") {
         cfg.build.workers = w.parse()?;
     }
+    cfg.build.shard_codec = shard_codec_from_args(args)?;
     let mode = if args.bool_or("on-demand", false) {
         CacheMode::OnDemand
     } else {
@@ -199,10 +212,11 @@ fn open_backfill_stack(args: &Args) -> Result<(Arc<WriteThrough<DynSource>>, Pat
         None => std::env::temp_dir().join(format!("rskd-backfill-{}", std::process::id())),
     };
     let origin: DynSource = Box::new(SyntheticZipfSource::new(512, n, 50, 7));
-    let stack = WriteThrough::open(
+    let stack = WriteThrough::open_coded(
         origin,
         &dir,
         ProbCodec::Count { rounds: 50 },
+        shard_codec_from_args(args)?,
         512,
         Some("rs:rounds=50,temp=1".into()),
     )?;
@@ -271,12 +285,13 @@ fn cmd_serve(args: &Args) -> Result<()> {
 /// the same position-keyed [`SyntheticZipfSource`] the `--backfill` stack
 /// computes on demand, so a prebuilt and a backfilled synthetic cache hold
 /// identical bytes.
-fn build_synthetic_cache(dir: &Path, n_positions: u64) -> Result<()> {
+fn build_synthetic_cache(dir: &Path, n_positions: u64, shard_codec: ShardCodec) -> Result<()> {
     let _ = std::fs::remove_dir_all(dir);
     let origin = SyntheticZipfSource::new(512, n_positions, 50, 7);
-    let w = CacheWriter::create_with_kind(
+    let w = CacheWriter::create_coded(
         dir,
         ProbCodec::Count { rounds: 50 },
+        shard_codec,
         512,
         256,
         Some("rs:rounds=50,temp=1".into()),
@@ -322,8 +337,12 @@ fn cmd_load_gen(args: &Args) -> Result<()> {
     } else {
         if synthetic {
             let n = args.u64_or("synthetic", 16_384);
-            println!("building synthetic RS-50 cache ({n} positions) in {}", dir.display());
-            build_synthetic_cache(&dir, n)?;
+            let sc = shard_codec_from_args(args)?.unwrap_or_default();
+            println!(
+                "building synthetic RS-50 cache ({n} positions, {sc} shards) in {}",
+                dir.display()
+            );
+            build_synthetic_cache(&dir, n, sc)?;
         }
         let reader = open_reader(&dir, args)?;
         let positions = reader.positions;
@@ -588,6 +607,8 @@ fn run() -> Result<()> {
             println!("           plus: --steps N --teacher-steps N --quick=true");
             println!("           --on-demand (cold write-through stack, no offline build)");
             println!("           --build-workers N (cache-build pool; default: all cores)");
+            println!("           --shard-codec raw|delta|delta-packed|delta-packed-lz");
+            println!("           (byte-level shard compression; also for serve/load-gen)");
             println!("  serve    --cache DIR | --method <spec> [--work-dir D]");
             println!("           --port N | --unix PATH, --workers N --queue N --max-range N");
             println!("           --backfill --synthetic N (cold-start: misses compute+fill)");

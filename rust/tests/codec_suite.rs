@@ -1,0 +1,507 @@
+//! Codec suite for the v3 compressed shard tier (docs/CACHE_FORMAT.md
+//! §Codec): property roundtrips over every cache kind × shard codec,
+//! corruption fuzz (truncations, bit flips, lying manifests) that must
+//! surface typed [`CacheError`]s and never silently decode wrong
+//! probabilities, golden v2/v3 byte fixtures under `rust/tests/fixtures/`,
+//! and served bit-exactness over raw vs compressed directories.
+//!
+//! Runs twice in CI: default features, and `--features zstd` to include
+//! [`ShardCodec::DeltaPackedZstd`].
+
+use std::path::{Path, PathBuf};
+use std::sync::Arc;
+
+use rskd::cache::format::{read_header, CacheManifest, Shard, FLAG_FULLY_COVERED};
+use rskd::cache::{
+    cache_error_of, CacheError, CacheReader, CacheWriter, ProbCodec, RangeBlock, ShardCodec,
+    SparseTarget,
+};
+use rskd::serve::{Endpoint, ServeClient, ServeConfig, Server};
+use rskd::util::rng::Pcg;
+use rskd::util::testing::forall;
+
+const CODEC: ProbCodec = ProbCodec::Count { rounds: 50 };
+const KIND: &str = "rs:rounds=50,temp=1";
+const MAX_ID: u32 = (1 << 17) - 1;
+
+fn tmp_dir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rskd-codec-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn fixtures_dir() -> PathBuf {
+    Path::new(env!("CARGO_MANIFEST_DIR")).join("rust/tests/fixtures")
+}
+
+/// The non-raw codecs compiled into this build (CI runs the suite with and
+/// without the `zstd` feature).
+fn compressing_codecs() -> Vec<ShardCodec> {
+    let mut v = vec![ShardCodec::Delta, ShardCodec::DeltaPacked, ShardCodec::DeltaPackedLz];
+    if cfg!(feature = "zstd") {
+        v.push(ShardCodec::DeltaPackedZstd);
+    }
+    v
+}
+
+/// One record with `shape` slots: ids ascending in the 17-bit space with a
+/// forced gap ≥ 2^16 whenever there are two or more slots, probs exact
+/// multiples of 1/50 (lossless under `Count {{ rounds: 50 }}`).
+fn record_of_shape(rng: &mut Pcg, shape: usize) -> SparseTarget {
+    let mut ids: Vec<u32> = (0..shape).map(|_| rng.next_u32() & MAX_ID).collect();
+    if ids.len() >= 2 {
+        ids[0] = rng.next_u32() % 100; // head low, tail high: gap >= 2^16
+        let last = ids.len() - 1;
+        ids[last] = 70_000 + rng.next_u32() % (MAX_ID - 70_000);
+    }
+    ids.sort_unstable();
+    ids.dedup();
+    let probs: Vec<f32> = ids.iter().map(|_| (rng.next_u32() % 51) as f32 / 50.0).collect();
+    SparseTarget { ids, probs }
+}
+
+/// Slot-count shapes covering the satellite cases: empty positions,
+/// single-slot rows, max-k (255-slot) rows, and ordinary rows.
+fn fuzz_shape(rng: &mut Pcg) -> usize {
+    match rng.usize_below(6) {
+        0 => 0,
+        1 => 1,
+        2 => 255,
+        _ => 1 + rng.usize_below(60),
+    }
+}
+
+/// Deterministic position-keyed target for directory builds.
+fn target_at(pos: u64) -> SparseTarget {
+    let mut rng = Pcg::new(Pcg::mix_seed(0xC0DEC, pos));
+    let shape = fuzz_shape(&mut rng);
+    record_of_shape(&mut rng, shape)
+}
+
+fn build_dir(dir: &Path, shard_codec: ShardCodec, n: u64, pps: usize) {
+    let w =
+        CacheWriter::create_coded(dir, CODEC, shard_codec, pps, 64, Some(KIND.into())).unwrap();
+    for pos in 0..n {
+        assert!(w.push(pos, target_at(pos)));
+    }
+    w.finish().unwrap();
+}
+
+fn read_all(dir: &Path, n: usize) -> RangeBlock {
+    let mut block = RangeBlock::new();
+    CacheReader::open(dir).unwrap().read_range_into(0, n, &mut block).unwrap();
+    block
+}
+
+// ---------------------------------------------------------------------------
+// property roundtrips (satellite: every CacheKind × every codec)
+// ---------------------------------------------------------------------------
+
+/// Shard-file roundtrip property: random record sets — empty positions,
+/// single-slot rows, max-k rows, ≥2^16 id gaps — survive every prob codec
+/// (`topk` caches use Ratio, `rs:*` caches use Count) × every shard codec
+/// with records preserved exactly; Raw through the coded entry point stays
+/// byte-identical to the v2 stream.
+#[test]
+fn property_shard_roundtrip_every_kind_and_codec() {
+    forall(
+        24,
+        |rng| {
+            let shapes: Vec<usize> = (0..rng.usize_below(9)).map(|_| fuzz_shape(rng)).collect();
+            (shapes, rng.next_u32() as u64)
+        },
+        |(shapes, seed)| {
+            for codec in [ProbCodec::Interval, ProbCodec::Ratio, ProbCodec::Count { rounds: 50 }]
+            {
+                let mut shard = Shard::new(codec, 96);
+                let mut rng = Pcg::new(*seed);
+                for &n in shapes {
+                    shard.push(&record_of_shape(&mut rng, n));
+                }
+                for sc in compressing_codecs() {
+                    let mut buf = Vec::new();
+                    shard.write_to_coded(&mut buf, FLAG_FULLY_COVERED, sc).unwrap();
+                    let hdr = read_header(&mut buf.as_slice()).unwrap();
+                    if hdr.version != 3 || hdr.shard_codec != sc {
+                        return Err(format!("{codec:?}/{sc}: bad header {hdr:?}"));
+                    }
+                    let back = Shard::read_from(&mut buf.as_slice()).unwrap();
+                    if back.records != shard.records || back.start != shard.start {
+                        return Err(format!("{codec:?}/{sc}: records changed in roundtrip"));
+                    }
+                }
+                let (mut coded, mut raw) = (Vec::new(), Vec::new());
+                shard.write_to_coded(&mut coded, 0, ShardCodec::Raw).unwrap();
+                shard.write_to(&mut raw).unwrap();
+                if coded != raw {
+                    return Err(format!("{codec:?}: Raw coded stream diverged from v2"));
+                }
+            }
+            Ok(())
+        },
+    );
+}
+
+/// Directory-level bit-exactness per cache kind: a compressed directory's
+/// decoded `RangeBlock`s — full range, shard-spanning sub-ranges, and the
+/// partial tail shard — are identical to the raw directory's, and the
+/// manifest records the codec at version 3.
+#[test]
+fn directory_decode_bit_identical_per_kind() {
+    let (n, pps) = (120u64, 32usize); // 3 full shards + a partial 24-position tail
+    for (kind, codec) in [(Some(KIND.to_string()), CODEC), (Some("topk".into()), ProbCodec::Ratio)]
+    {
+        let raw_dir = tmp_dir(&format!("dir-raw-{}", codec.tag()));
+        let w = CacheWriter::create_coded(
+            &raw_dir,
+            codec,
+            ShardCodec::Raw,
+            pps,
+            64,
+            kind.clone(),
+        )
+        .unwrap();
+        for pos in 0..n {
+            assert!(w.push(pos, target_at(pos)));
+        }
+        w.finish().unwrap();
+        let raw = CacheReader::open(&raw_dir).unwrap();
+
+        for sc in compressing_codecs() {
+            let cdir = tmp_dir(&format!("dir-{sc}-{}", codec.tag()));
+            let w =
+                CacheWriter::create_coded(&cdir, codec, sc, pps, 64, kind.clone()).unwrap();
+            for pos in 0..n {
+                assert!(w.push(pos, target_at(pos)));
+            }
+            let stats = w.finish().unwrap();
+            assert_eq!(stats.positions, n);
+
+            let m = CacheManifest::load(&cdir).unwrap();
+            assert_eq!((m.version, m.shard_codec), (3, sc));
+            let r = CacheReader::open(&cdir).unwrap();
+            assert_eq!(r.shard_codec, sc);
+            for (start, len) in [(0u64, n as usize), (25, 40), (96, 24), (110, 30)] {
+                let (mut a, mut b) = (RangeBlock::new(), RangeBlock::new());
+                raw.read_range_into(start, len, &mut a).unwrap();
+                r.read_range_into(start, len, &mut b).unwrap();
+                assert_eq!(a, b, "{sc} [{start}, +{len}) must be bit-identical to raw");
+            }
+            let _ = std::fs::remove_dir_all(&cdir);
+        }
+        let _ = std::fs::remove_dir_all(&raw_dir);
+    }
+}
+
+/// A coded build interrupted mid-shard resumes to a directory byte-identical
+/// to a one-shot coded build — v3 crash recovery (manifest-less scan, CRC
+/// validation, codec adoption) composes with the resumable-build contract.
+#[test]
+fn interrupted_coded_build_resumes_byte_identical() {
+    let (n, pps, sc) = (90u64, 32usize, ShardCodec::DeltaPackedLz);
+    let golden = tmp_dir("resume-golden");
+    build_dir(&golden, sc, n, pps);
+
+    let resumed = tmp_dir("resume-crash");
+    let w = CacheWriter::create_coded(&resumed, CODEC, sc, pps, 64, Some(KIND.into())).unwrap();
+    for pos in 0..40u64 {
+        assert!(w.push(pos, target_at(pos)));
+    }
+    while w.backlog() > 0 {
+        std::thread::yield_now();
+    }
+    std::thread::sleep(std::time::Duration::from_millis(50));
+    w.abort(); // no trailing flush, no manifest
+    assert!(!resumed.join("index.json").exists());
+
+    // an untagged resume adopts the codec from the surviving v3 shards; a
+    // conflicting tag is refused before any bytes are written
+    let err = match CacheWriter::resume_coded(
+        &resumed,
+        CODEC,
+        Some(ShardCodec::Delta),
+        pps,
+        64,
+        Some(KIND.into()),
+    ) {
+        Err(e) => e,
+        Ok(_) => panic!("conflicting codec must be refused"),
+    };
+    assert!(err.to_string().contains("refusing to mix shard codecs"), "{err}");
+    let (w, coverage) =
+        CacheWriter::resume_coded(&resumed, CODEC, None, pps, 64, Some(KIND.into())).unwrap();
+    assert!(coverage.covers(0, 32), "completed shard must be recovered from its CRC'd file");
+    for pos in 0..n {
+        if !coverage.contains(pos) {
+            assert!(w.push(pos, target_at(pos)));
+        }
+    }
+    w.finish().unwrap();
+
+    let files = |dir: &Path| -> Vec<(String, Vec<u8>)> {
+        let mut v: Vec<_> = std::fs::read_dir(dir)
+            .unwrap()
+            .map(|e| {
+                let e = e.unwrap();
+                (e.file_name().into_string().unwrap(), std::fs::read(e.path()).unwrap())
+            })
+            .collect();
+        v.sort_by(|a, b| a.0.cmp(&b.0));
+        v
+    };
+    assert_eq!(files(&golden), files(&resumed), "resumed coded build must be byte-identical");
+    let _ = std::fs::remove_dir_all(&golden);
+    let _ = std::fs::remove_dir_all(&resumed);
+}
+
+// ---------------------------------------------------------------------------
+// corruption fuzz (satellite: truncations, bit flips, lying manifests)
+// ---------------------------------------------------------------------------
+
+/// Read the whole directory through a fresh reader (the LRU would otherwise
+/// hide on-disk corruption behind a cached shard).
+fn try_read_all(dir: &Path, n: usize) -> std::io::Result<RangeBlock> {
+    let mut block = RangeBlock::new();
+    CacheReader::open(dir)?.read_range_into(0, n, &mut block)?;
+    Ok(block)
+}
+
+/// Every truncation and every bit flip of a compressed shard file either
+/// fails with a *typed* [`CacheError`] or (never observed, but permitted)
+/// decodes bit-identically — wrong probabilities can never come out of a
+/// torn or flipped v3 shard, and nothing panics.
+#[test]
+fn corruption_fuzz_compressed_shard_never_misdecodes() {
+    let (n, pps) = (12u64, 16usize); // one shard, small enough to sweep
+    let dir = tmp_dir("fuzz");
+    build_dir(&dir, ShardCodec::DeltaPackedLz, n, pps);
+    let golden = read_all(&dir, n as usize);
+    let manifest = CacheManifest::load(&dir).unwrap();
+    let shard_path = dir.join(&manifest.shards[0].file);
+    let pristine = std::fs::read(&shard_path).unwrap();
+
+    let mut verdict = |bytes: &[u8], what: String| {
+        std::fs::write(&shard_path, bytes).unwrap();
+        match try_read_all(&dir, n as usize) {
+            Ok(block) => assert_eq!(block, golden, "{what}: silently decoded wrong data"),
+            Err(e) => assert!(
+                cache_error_of(&e).is_some(),
+                "{what}: untyped error `{e}` (kind {:?})",
+                e.kind()
+            ),
+        }
+    };
+    // every truncation point
+    for cut in 0..pristine.len() {
+        verdict(&pristine[..cut], format!("truncated to {cut} bytes"));
+    }
+    // every bit of the header + length/checksum trailer; one rotating bit
+    // per payload byte (any payload flip is a CRC mismatch regardless of bit)
+    for i in 0..pristine.len() {
+        let bits: &[u8] = if i < 32 { &[0, 1, 2, 3, 4, 5, 6, 7] } else { &[(i % 8) as u8] };
+        for &bit in bits {
+            let mut bad = pristine.clone();
+            bad[i] ^= 1 << bit;
+            verdict(&bad, format!("byte {i} bit {bit} flipped"));
+        }
+    }
+    std::fs::write(&shard_path, &pristine).unwrap();
+
+    // a lying manifest: the codec tag says delta, the shards are
+    // delta-packed-lz — refused as a mismatch, not decoded as garbage
+    let index = dir.join("index.json");
+    let text = std::fs::read_to_string(&index).unwrap();
+    assert!(text.contains("\"shard_codec\":\"delta-packed-lz\""), "{text}");
+    std::fs::write(&index, text.replace("delta-packed-lz", "delta")).unwrap();
+    let err = try_read_all(&dir, n as usize).unwrap_err();
+    assert!(
+        matches!(
+            cache_error_of(&err),
+            Some(CacheError::ShardCodecMismatch {
+                expected: ShardCodec::Delta,
+                found: ShardCodec::DeltaPackedLz,
+            })
+        ),
+        "got: {err}"
+    );
+    // an unknown codec name in the manifest is a typed refusal at open
+    std::fs::write(&index, text.replace("delta-packed-lz", "brotli")).unwrap();
+    let err = try_read_all(&dir, n as usize).unwrap_err();
+    assert!(
+        matches!(
+            cache_error_of(&err),
+            Some(CacheError::BadShardCodecName { name }) if name.as_str() == "brotli"
+        ),
+        "got: {err}"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+/// Raw v2 shards predate the CRC, but truncations must still surface as
+/// typed errors (never a panic or a short silent decode).
+#[test]
+fn corruption_fuzz_raw_shard_truncations_are_typed() {
+    let (n, pps) = (12u64, 16usize);
+    let dir = tmp_dir("fuzz-raw");
+    build_dir(&dir, ShardCodec::Raw, n, pps);
+    let manifest = CacheManifest::load(&dir).unwrap();
+    assert_eq!(manifest.version, 2, "raw directories must stay v2");
+    let shard_path = dir.join(&manifest.shards[0].file);
+    let pristine = std::fs::read(&shard_path).unwrap();
+    for cut in 0..pristine.len() {
+        std::fs::write(&shard_path, &pristine[..cut]).unwrap();
+        let err = try_read_all(&dir, n as usize).unwrap_err();
+        assert!(
+            cache_error_of(&err).is_some() || err.kind() == std::io::ErrorKind::InvalidData,
+            "cut {cut}: untyped error `{err}`"
+        );
+    }
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+// ---------------------------------------------------------------------------
+// golden byte fixtures (satellite: pinned v2 + v3 wire bytes)
+// ---------------------------------------------------------------------------
+
+/// The records every golden fixture encodes (Count{50}, start = 7): an empty
+/// position, a single-slot row at the largest 17-bit id, and a row whose id
+/// gaps include a ≥2^16 jump.
+fn golden_records() -> Vec<(Vec<u32>, Vec<u8>)> {
+    vec![
+        (vec![], vec![]),
+        (vec![MAX_ID], vec![50]),
+        (vec![3, 70_000, 70_001, 100_000], vec![25, 13, 7, 5]),
+    ]
+}
+
+fn golden_shard() -> Shard {
+    let mut shard = Shard::new(CODEC, 7);
+    shard.records = golden_records();
+    shard
+}
+
+/// Decode a fixture and pin its semantic content: records, exact x/50
+/// probabilities, header fields.
+fn check_fixture_decodes(bytes: &[u8], sc: ShardCodec) {
+    let hdr = read_header(&mut &bytes[..]).unwrap();
+    assert_eq!(hdr.version, if sc == ShardCodec::Raw { 2 } else { 3 });
+    assert_eq!(hdr.shard_codec, sc);
+    assert_eq!(hdr.flags, FLAG_FULLY_COVERED);
+    assert_eq!((hdr.start, hdr.count), (7, 3));
+    let shard = Shard::read_from(&mut &bytes[..]).unwrap();
+    assert_eq!(shard.records, golden_records(), "{sc}");
+    let t = shard.decode(2);
+    assert_eq!(t.ids, vec![3, 70_000, 70_001, 100_000]);
+    let exact: Vec<f32> = [25u8, 13, 7, 5].iter().map(|&c| c as f32 / 50.0).collect();
+    assert_eq!(t.probs, exact, "Count{{50}} decode must be exact x/50");
+}
+
+/// The v2 fixture pins the legacy wire format: any byte drift in the raw
+/// record stream is a format break for every pre-v3 cache on disk.
+#[test]
+fn golden_v2_fixture_pinned() {
+    let bytes = std::fs::read(fixtures_dir().join("golden_v2_count50.slc")).unwrap();
+    check_fixture_decodes(&bytes, ShardCodec::Raw);
+    let mut re = Vec::new();
+    golden_shard().write_to_flagged(&mut re, FLAG_FULLY_COVERED).unwrap();
+    assert_eq!(re, bytes, "v2 encoder drifted from the golden bytes");
+}
+
+/// The v3 fixtures pin the compressed wire formats byte-for-byte: varint /
+/// zigzag layout, bit-packed counts, the rlz stream, the CRC trailer.
+#[test]
+fn golden_v3_fixtures_pinned() {
+    for (file, sc) in [
+        ("golden_v3_delta.slc", ShardCodec::Delta),
+        ("golden_v3_delta_packed.slc", ShardCodec::DeltaPacked),
+        ("golden_v3_delta_packed_lz.slc", ShardCodec::DeltaPackedLz),
+    ] {
+        let bytes = std::fs::read(fixtures_dir().join(file)).unwrap();
+        check_fixture_decodes(&bytes, sc);
+        let mut re = Vec::new();
+        golden_shard().write_to_coded(&mut re, FLAG_FULLY_COVERED, sc).unwrap();
+        assert_eq!(re, bytes, "{sc} encoder drifted from {file}");
+    }
+}
+
+/// The zstd fixture is readable only with the feature; without it the file
+/// is *refused* (typed), never misread. With it, the stub's raw-block frame
+/// is pinned byte-for-byte.
+#[test]
+fn golden_zstd_fixture_gated_by_feature() {
+    let bytes = std::fs::read(fixtures_dir().join("golden_v3_delta_packed_zstd.slc")).unwrap();
+    let hdr = read_header(&mut &bytes[..]).unwrap();
+    assert_eq!(hdr.shard_codec, ShardCodec::DeltaPackedZstd);
+    #[cfg(feature = "zstd")]
+    {
+        check_fixture_decodes(&bytes, ShardCodec::DeltaPackedZstd);
+        let mut re = Vec::new();
+        golden_shard()
+            .write_to_coded(&mut re, FLAG_FULLY_COVERED, ShardCodec::DeltaPackedZstd)
+            .unwrap();
+        assert_eq!(re, bytes, "zstd stub encoder drifted from the golden bytes");
+    }
+    #[cfg(not(feature = "zstd"))]
+    {
+        let err = match Shard::read_from(&mut &bytes[..]) {
+            Err(e) => e,
+            Ok(_) => panic!("tag-4 shards must be refused without the zstd feature"),
+        };
+        assert!(
+            matches!(cache_error_of(&err), Some(CacheError::ZstdUnavailable)),
+            "got: {err}"
+        );
+        let mut out = Vec::new();
+        let err = golden_shard()
+            .write_to_coded(&mut out, FLAG_FULLY_COVERED, ShardCodec::DeltaPackedZstd)
+            .unwrap_err();
+        assert!(matches!(cache_error_of(&err), Some(CacheError::ZstdUnavailable)), "got: {err}");
+    }
+}
+
+// ---------------------------------------------------------------------------
+// served bit-exactness (tentpole acceptance: the wire is codec-invisible)
+// ---------------------------------------------------------------------------
+
+/// `Response::encode_targets` / `decode_targets_into` stay bit-exact over
+/// compressed-origin shards: a server over a delta-packed-lz directory
+/// answers every range with exactly the bytes a raw-directory server (and a
+/// direct reader) produces.
+#[test]
+fn served_ranges_bit_identical_over_raw_and_compressed_dirs() {
+    let (n, pps) = (96u64, 16usize);
+    let raw_dir = tmp_dir("serve-raw");
+    let lz_dir = tmp_dir("serve-lz");
+    build_dir(&raw_dir, ShardCodec::Raw, n, pps);
+    build_dir(&lz_dir, ShardCodec::DeltaPackedLz, n, pps);
+    let direct = CacheReader::open(&raw_dir).unwrap();
+
+    let tcp0 = || Endpoint::Tcp(std::net::SocketAddr::from(([127, 0, 0, 1], 0)));
+    let raw_srv = Server::start(
+        Arc::new(CacheReader::open(&raw_dir).unwrap()),
+        tcp0(),
+        ServeConfig::default(),
+    )
+    .unwrap();
+    let lz_srv = Server::start(
+        Arc::new(CacheReader::open(&lz_dir).unwrap()),
+        tcp0(),
+        ServeConfig::default(),
+    )
+    .unwrap();
+    let mut raw_client = ServeClient::connect(raw_srv.endpoint()).unwrap();
+    let mut lz_client = ServeClient::connect(lz_srv.endpoint()).unwrap();
+
+    // shard-interior, shard-spanning, past-the-end, and full-stream ranges
+    for (start, len) in [(0u64, 10usize), (12, 40), (90, 16), (0, n as usize)] {
+        let from_raw = raw_client.get_range(start, len).unwrap();
+        let from_lz = lz_client.get_range(start, len).unwrap();
+        let local = direct.get_range(start, len);
+        assert_eq!(from_lz, from_raw, "[{start}, +{len}): served bytes must match raw origin");
+        assert_eq!(from_lz, local, "[{start}, +{len}): served bytes must match a direct read");
+    }
+    drop(raw_srv);
+    drop(lz_srv);
+    let _ = std::fs::remove_dir_all(&raw_dir);
+    let _ = std::fs::remove_dir_all(&lz_dir);
+}
