@@ -9,6 +9,10 @@
 //!             direct reader call, and a 4-client concurrent burst with
 //!             server-side p50/p99 (the `load-gen` subcommand is the
 //!             heavier, configurable version of this section).
+//!  cluster  — routed p50/p99 against a 3-server range-partitioned cluster
+//!             under Zipf-skewed load, with and without hot-shard
+//!             replication landed via a mid-run epoch bump (the `load-gen
+//!             --cluster` subcommand is the multi-process version).
 //!
 //! The cache-layer, serve, and assembly sections are host-only and run even
 //! when `artifacts/` is missing, so the storage + serving + block-assembly
@@ -467,16 +471,197 @@ fn compression_benches(report: &mut Report, smoke: bool) -> Json {
     ])
 }
 
+/// Cluster section (runs in smoke mode too): p50/p99 of routed range reads
+/// under a Zipf-skewed start distribution against a 3-server in-process
+/// cluster, before and after hot-shard replication lands via an epoch bump
+/// mid-run. Every response is byte-verified against a direct reader — any
+/// mismatch would be an accepted stale read. Returns the `BENCH_hotpath.json`
+/// cluster object (schema: docs/BENCH_SCHEMA.md). Under `RSKD_PERF_SMOKE=1`
+/// this *asserts* zero failed requests, zero stale reads, that the epoch bump
+/// was actually observed (stale pins rejected, manifest refetched), and that
+/// replication serves > 20% of segments from replicas — the cluster third of
+/// the CI perf gate.
+fn cluster_benches(report: &mut Report, smoke: bool) -> Json {
+    use rskd::cluster::{partition, replicate_hot, ClusterControl, ClusterReader};
+
+    let n_positions: u64 = if smoke { 4096 } else { 16_384 };
+    let range = 256usize;
+    let requests = if smoke { 96usize } else { 768 };
+    let servers = 3usize;
+
+    let p = zipf(512, 1.0);
+    let mut rng = Pcg::new(17);
+    let base = std::env::temp_dir().join(format!("rskd-perf-cluster-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base).unwrap();
+    let dir = base.join("cache");
+    let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 512, 256).unwrap();
+    for pos in 0..n_positions {
+        assert!(w.push(pos, random_sampling(&p, 50, 1.0, &mut rng)));
+    }
+    w.finish().unwrap();
+
+    let eps: Vec<Endpoint> =
+        (0..servers).map(|i| Endpoint::Unix(base.join(format!("m{i}.sock")))).collect();
+    let manifest = partition(n_positions, &eps).unwrap();
+    let members: Vec<(Server, Arc<ClusterControl>)> = eps
+        .iter()
+        .map(|ep| {
+            let r = Arc::new(CacheReader::open(&dir).unwrap());
+            let ctl = Arc::new(ClusterControl::new(manifest.clone(), ep.clone()));
+            let srv =
+                Server::start_cluster(r, ep.clone(), ServeConfig::default(), Arc::clone(&ctl))
+                    .unwrap();
+            (srv, ctl)
+        })
+        .collect();
+    let direct = CacheReader::open(&dir).unwrap();
+
+    // Zipf-skewed starts over 64 buckets: low positions are hot, so the
+    // cluster's first shard carries most of the load and is the one
+    // `replicate_hot` should pick
+    let buckets = 64usize;
+    let weights = zipf(buckets, 1.0);
+    let mut cdf = Vec::with_capacity(buckets);
+    let mut acc = 0.0f32;
+    for w in &weights {
+        acc += w;
+        cdf.push(acc);
+    }
+    let span = n_positions - range as u64;
+    let mut draw_rng = Pcg::new(29);
+    let mut draw_start = move || {
+        let u = draw_rng.below(1 << 20) as f32 / (1u64 << 20) as f32 * acc;
+        let b = cdf.partition_point(|&c| c < u).min(buckets - 1);
+        (b as u64 * span) / buckets as u64 + draw_rng.below(span / buckets as u64 + 1)
+    };
+    let starts_a: Vec<u64> = (0..requests).map(|_| draw_start()).collect();
+    let starts_b: Vec<u64> = (0..requests).map(|_| draw_start()).collect();
+
+    let reader = ClusterReader::from_manifest(manifest.clone()).unwrap();
+    let mut failed = 0u64;
+    let mut stale_reads = 0u64; // responses whose bytes differ from a direct read
+    let mut run_pass = |starts: &[u64]| -> Vec<Duration> {
+        let mut lat = Vec::with_capacity(starts.len());
+        for &start in starts {
+            let t0 = Instant::now();
+            match reader.try_get_range(start, range) {
+                Ok(got) => {
+                    lat.push(t0.elapsed());
+                    if got != direct.get_range(start, range) {
+                        stale_reads += 1;
+                    }
+                }
+                Err(_) => failed += 1,
+            }
+        }
+        lat
+    };
+
+    report.line("--- cluster: 3-server routed reads under Zipf skew, +- hot-shard replication ---");
+    let mut lat_a = run_pass(&starts_a);
+    let c_a = reader.counters();
+
+    // replicate the hottest shard (by the load phase A actually generated)
+    // onto a second member and land it as an epoch bump while the reader is
+    // still pinned to epoch 1
+    let heat: Vec<(u64, u64, u64)> = manifest
+        .shards()
+        .iter()
+        .map(|s| {
+            let hits = starts_a.iter().filter(|&&st| st >= s.lo && st < s.hi).count() as u64;
+            (s.lo, s.hi, hits)
+        })
+        .collect();
+    let replicated = replicate_hot(&manifest, &heat, 1, 2).unwrap();
+    for (_, ctl) in &members {
+        ctl.update(replicated.clone()).unwrap();
+    }
+    let mut lat_b = run_pass(&starts_b);
+    let c_b = reader.counters();
+    let hit_rate = (c_b.replica_served - c_a.replica_served) as f64
+        / (c_b.requests - c_a.requests).max(1) as f64;
+
+    let pct = |lat: &mut Vec<Duration>, q: f64| -> f64 {
+        lat.sort_unstable();
+        lat[((lat.len() as f64 - 1.0) * q).round() as usize].as_secs_f64() * 1e3
+    };
+    let (a50, a99) = (pct(&mut lat_a, 0.50), pct(&mut lat_a, 0.99));
+    let (b50, b99) = (pct(&mut lat_b, 0.50), pct(&mut lat_b, 0.99));
+    report.table(
+        &["cluster pass", "p50", "p99", "replica hit rate"],
+        &[
+            vec!["epoch 1, no replication".into(), format!("{a50:.3} ms"),
+                 format!("{a99:.3} ms"), "-".into()],
+            vec!["epoch 2, hot shard x2".into(), format!("{b50:.3} ms"),
+                 format!("{b99:.3} ms"), format!("{hit_rate:.2}")],
+        ],
+    );
+    report.line(format!(
+        "cluster: {} requests, {} failed, {} stale reads accepted, {} stale pins rejected, \
+         {} manifest refetches, final epoch {}",
+        2 * requests,
+        failed,
+        stale_reads,
+        c_b.stale_rejected,
+        c_b.refetches,
+        reader.manifest_epoch()
+    ));
+
+    if smoke {
+        assert_eq!(failed, 0, "no routed request may fail");
+        assert_eq!(stale_reads, 0, "no stale response may ever be accepted");
+        assert!(c_b.stale_rejected >= 1, "the mid-run epoch bump must have been observed");
+        assert!(c_b.refetches >= 1, "the reader must have refetched the manifest");
+        assert_eq!(reader.manifest_epoch(), replicated.epoch());
+        assert!(hit_rate > 0.2, "replica hit rate {hit_rate:.2} must exceed 0.2 under skew");
+        report.line(format!(
+            "[smoke gate passed: 0 failed, 0 stale, replica hit rate {hit_rate:.2} > 0.2]"
+        ));
+    }
+    drop(members);
+    let _ = std::fs::remove_dir_all(&base);
+
+    Json::obj(vec![
+        ("config", Json::obj(vec![
+            ("servers", Json::num(servers as f64)),
+            ("positions", Json::num(n_positions as f64)),
+            ("range", Json::num(range as f64)),
+            ("requests_per_phase", Json::num(requests as f64)),
+            ("zipf_buckets", Json::num(buckets as f64)),
+            ("hot_top_n", Json::num(1.0)),
+            ("replicas", Json::num(2.0)),
+            ("smoke", Json::Bool(smoke)),
+        ])),
+        ("no_replication", Json::obj(vec![
+            ("p50_ms", Json::num(a50)),
+            ("p99_ms", Json::num(a99)),
+        ])),
+        ("replication", Json::obj(vec![
+            ("p50_ms", Json::num(b50)),
+            ("p99_ms", Json::num(b99)),
+            ("replica_hit_rate", Json::num(hit_rate)),
+        ])),
+        ("failed_requests", Json::num(failed as f64)),
+        ("stale_reads", Json::num(stale_reads as f64)),
+        ("stale_rejected", Json::num(c_b.stale_rejected as f64)),
+        ("manifest_refetches", Json::num(c_b.refetches as f64)),
+        ("epoch", Json::num(reader.manifest_epoch() as f64)),
+    ])
+}
+
 fn main() {
     let smoke = std::env::var("RSKD_PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
     let mut report = Report::new("perf_hotpath", "Hot-path timings per layer");
     let assembly = assembly_benches(&mut report, smoke);
     let compression = compression_benches(&mut report, smoke);
+    let cluster = cluster_benches(&mut report, smoke);
     let bench_json = Json::obj(vec![
         ("schema_version", Json::num(1.0)),
         ("bench", Json::str("perf_hotpath")),
         ("assembly", assembly),
         ("compression", compression),
+        ("cluster", cluster),
     ]);
     // the repo-root perf trajectory point (schema: docs/BENCH_SCHEMA.md)
     match std::fs::write("BENCH_hotpath.json", bench_json.to_string()) {

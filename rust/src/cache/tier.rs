@@ -620,6 +620,34 @@ mod tests {
     }
 
     #[test]
+    fn coverage_adjacency_and_degenerate_inserts() {
+        // adjacent on the right: [30, 40) absorbs a touching [25, 30)
+        let mut c = Coverage::new();
+        c.insert(30, 40);
+        c.insert(25, 30);
+        assert_eq!(c.ranges(), &[(25, 40)]);
+        // adjacent on both sides at once: the bridge collapses three runs
+        c.insert(10, 20);
+        c.insert(20, 25);
+        assert_eq!(c.ranges(), &[(10, 40)]);
+        // zero-length inserts are no-ops anywhere: inside a run, at a run
+        // boundary, in a gap, at position 0, and inverted bounds
+        let before = c.clone();
+        for (lo, hi) in [(15, 15), (10, 10), (40, 40), (0, 0), (7, 3), (u64::MAX, u64::MAX)] {
+            c.insert(lo, hi);
+            assert_eq!(c, before, "insert({lo}, {hi}) must be a no-op");
+        }
+        assert!(!c.contains(u64::MAX));
+        // growing cover to the full keyspace leaves exactly one run
+        c.insert(0, 10);
+        c.insert(40, 64);
+        assert_eq!(c.ranges(), &[(0, 64)]);
+        assert_eq!(c.count(), 64);
+        assert!(c.covers(0, 64));
+        assert_eq!(c.gaps_within(0, 64), vec![]);
+    }
+
+    #[test]
     fn coverage_gaps_within() {
         let mut c = Coverage::new();
         c.insert(10, 20);

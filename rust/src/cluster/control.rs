@@ -1,0 +1,171 @@
+//! Server-side cluster state: which manifest generation this member serves
+//! under and which keyspace ranges it owns. One [`ClusterControl`] is shared
+//! between a member's `Server` (which consults it on every `GetRange`) and
+//! whatever applies rebalances — the `cluster-serve` manifest-file poller in
+//! production, or a test bumping epochs directly via
+//! [`ClusterControl::update`].
+
+use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+
+use crate::cache::Coverage;
+use crate::cluster::ClusterManifest;
+use crate::serve::protocol::NO_EPOCH;
+use crate::serve::Endpoint;
+
+struct State {
+    manifest: ClusterManifest,
+    /// ranges `me` serves under `manifest` (primary or replica), pre-merged
+    owned: Coverage,
+}
+
+/// A cluster member's live view of the manifest. `check_range` is on the
+/// request path (one mutex lock + a coverage binary search); `update` is the
+/// rare path, called once per epoch bump.
+pub struct ClusterControl {
+    me: Endpoint,
+    /// mirror of `state.manifest.epoch()` for lock-free stats reads
+    epoch: AtomicU64,
+    state: Mutex<State>,
+}
+
+impl ClusterControl {
+    /// `me` is this member's serving endpoint as written in the manifest —
+    /// identity is by endpoint, so the same string must appear in both
+    /// places. A member absent from every shard is legal (a drained member
+    /// answers everything with `WrongEpoch` until a later epoch re-adds it).
+    pub fn new(manifest: ClusterManifest, me: Endpoint) -> ClusterControl {
+        let owned = manifest.owned_coverage(&me);
+        ClusterControl {
+            me,
+            epoch: AtomicU64::new(manifest.epoch()),
+            state: Mutex::new(State { manifest, owned }),
+        }
+    }
+
+    pub fn me(&self) -> &Endpoint {
+        &self.me
+    }
+
+    /// The epoch currently served under (lock-free; stats path).
+    pub fn epoch(&self) -> u64 {
+        self.epoch.load(Ordering::Acquire)
+    }
+
+    /// A clone of the current manifest (the `GetCluster` answer).
+    pub fn manifest(&self) -> ClusterManifest {
+        self.state.lock().unwrap().manifest.clone()
+    }
+
+    /// Admission check for `GetRange { start, .., epoch: req_epoch }` over
+    /// `[start, end)`: `Ok(current_epoch)` if the request may be served
+    /// (stamped with that epoch), `Err(current_epoch)` if it must be
+    /// answered `WrongEpoch` — either the request pinned a superseded
+    /// generation, or this member does not serve some position in the range.
+    /// `req_epoch == NO_EPOCH` skips the pin check (unpinned probe) but
+    /// ownership is still enforced. The range is clipped to the keyspace
+    /// first: positions at or past `positions()` belong to no shard and
+    /// decode empty on any member, so they never fail the check.
+    pub fn check_range(&self, req_epoch: u64, start: u64, end: u64) -> Result<u64, u64> {
+        let st = self.state.lock().unwrap();
+        let current = st.manifest.epoch();
+        if req_epoch != NO_EPOCH && req_epoch != current {
+            return Err(current);
+        }
+        let positions = st.manifest.positions();
+        let (lo, hi) = (start.min(positions), end.min(positions));
+        if st.owned.covers(lo, hi) {
+            Ok(current)
+        } else {
+            Err(current)
+        }
+    }
+
+    /// Adopt a newer manifest generation. Epochs are strictly monotonic: a
+    /// same-or-older epoch is refused, so replayed or reordered manifest
+    /// writes cannot roll a member backwards.
+    pub fn update(&self, manifest: ClusterManifest) -> io::Result<()> {
+        let mut st = self.state.lock().unwrap();
+        if manifest.epoch() <= st.manifest.epoch() {
+            return Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "manifest epoch {} does not supersede current epoch {}",
+                    manifest.epoch(),
+                    st.manifest.epoch()
+                ),
+            ));
+        }
+        st.owned = manifest.owned_coverage(&self.me);
+        // publish the epoch only after the coverage it governs is in place
+        self.epoch.store(manifest.epoch(), Ordering::Release);
+        st.manifest = manifest;
+        Ok(())
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use crate::cluster::ShardSpec;
+
+    fn ep(i: usize) -> Endpoint {
+        Endpoint::parse(&format!("unix:///tmp/rskd-ctl-{i}.sock")).unwrap()
+    }
+
+    fn manifest(epoch: u64) -> ClusterManifest {
+        ClusterManifest::new(
+            epoch,
+            vec![
+                ShardSpec { lo: 0, hi: 100, endpoints: vec![ep(0), ep(1)] },
+                ShardSpec { lo: 100, hi: 200, endpoints: vec![ep(1)] },
+            ],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn check_range_enforces_epoch_and_ownership() {
+        let ctl = ClusterControl::new(manifest(1), ep(0));
+        assert_eq!(ctl.epoch(), 1);
+        // owned range, correctly pinned or unpinned
+        assert_eq!(ctl.check_range(1, 0, 100), Ok(1));
+        assert_eq!(ctl.check_range(NO_EPOCH, 10, 50), Ok(1));
+        // stale pin on an owned range
+        assert_eq!(ctl.check_range(9, 0, 10), Err(1));
+        // unowned range (member 0 does not serve [100, 200))
+        assert_eq!(ctl.check_range(1, 100, 110), Err(1));
+        // a range spanning owned into unowned fails
+        assert_eq!(ctl.check_range(1, 90, 110), Err(1));
+        // past-the-end clips away: [90, 100) owned, rest of range is empty
+        assert_eq!(ctl.check_range(1, 90, 5000), Err(1), "spans unowned [100,200)");
+        let ctl1 = ClusterControl::new(manifest(1), ep(1));
+        assert_eq!(ctl1.check_range(1, 90, 5000), Ok(1), "member 1 serves [0,200)");
+        assert_eq!(ctl1.check_range(1, 200, 5000), Ok(1), "fully past the end: empties");
+    }
+
+    #[test]
+    fn update_is_strictly_monotonic_and_reowns() {
+        let ctl = ClusterControl::new(manifest(1), ep(1));
+        assert_eq!(ctl.check_range(1, 100, 200), Ok(1));
+        // stale and same-epoch updates refused
+        assert!(ctl.update(manifest(1)).is_err());
+        assert_eq!(ctl.epoch(), 1);
+        // epoch 2 moves [100, 200) away from member 1
+        let next = ClusterManifest::new(
+            2,
+            vec![
+                ShardSpec { lo: 0, hi: 100, endpoints: vec![ep(1)] },
+                ShardSpec { lo: 100, hi: 200, endpoints: vec![ep(0)] },
+            ],
+        )
+        .unwrap();
+        ctl.update(next).unwrap();
+        assert_eq!(ctl.epoch(), 2);
+        assert_eq!(ctl.check_range(2, 100, 200), Err(2), "moved-away range now refused");
+        assert_eq!(ctl.check_range(2, 0, 100), Ok(2));
+        assert_eq!(ctl.check_range(1, 0, 100), Err(2), "old pins refused after the bump");
+        assert_eq!(ctl.manifest().epoch(), 2);
+    }
+}

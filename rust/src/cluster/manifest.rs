@@ -1,0 +1,361 @@
+//! The versioned cluster manifest: a range partition of the token-offset
+//! keyspace onto server endpoints, plus per-shard replica sets.
+//!
+//! The manifest is the *only* piece of routing state in the system. Servers
+//! load it (and poll the file for epoch bumps), clients fetch it once over
+//! the wire (`GetCluster`) and route requests themselves — there is no
+//! proxy or coordinator process on the request path. Every mutation writes a
+//! **new generation** with a strictly larger `epoch`; servers answer ranges
+//! they no longer own (or requests pinned to a superseded epoch) with a
+//! typed `WrongEpoch` frame, so a reader holding a stale map always finds
+//! out and refetches instead of silently reading from the wrong member.
+//!
+//! On disk and on the wire the manifest is canonical JSON (`cluster.json`):
+//!
+//! ```json
+//! {
+//!   "version": 1,
+//!   "epoch": 2,
+//!   "shards": [
+//!     {"lo": 0, "hi": 1365,
+//!      "endpoints": ["unix:///tmp/m0.sock", "unix:///tmp/m1.sock"]},
+//!     {"lo": 1365, "hi": 2731, "endpoints": ["unix:///tmp/m1.sock"]},
+//!     {"lo": 2731, "hi": 4096, "endpoints": ["unix:///tmp/m2.sock"]}
+//!   ]
+//! }
+//! ```
+//!
+//! Invariants (enforced by [`ClusterManifest::new`] and on every load):
+//! shards tile `[0, positions)` contiguously from 0 with no gaps or
+//! overlaps, every shard has at least one endpoint (`endpoints[0]` is the
+//! primary; the rest are replicas), no endpoint repeats within a shard, and
+//! `epoch >= 1` (epoch 0 is the wire's "no cluster" sentinel). Contiguous
+//! tiling is what makes client-side routing total: every position below
+//! `positions()` has exactly one owning shard, and positions at or past the
+//! end decode empty locally (misaligned-packing semantics) without touching
+//! the wire.
+
+use std::io;
+use std::path::Path;
+
+use crate::cache::Coverage;
+use crate::serve::Endpoint;
+use crate::util::json::Json;
+
+/// On-disk / on-wire format version of the manifest JSON itself (independent
+/// of the epoch, which versions the *assignment*, not the schema).
+pub const CLUSTER_FORMAT_VERSION: u32 = 1;
+
+/// One contiguous keyspace range `[lo, hi)` and the members serving it.
+/// `endpoints[0]` is the primary; any further entries are replicas added by
+/// hot-shard replication, equally authoritative for reads (every member
+/// serves the same immutable cache directory).
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ShardSpec {
+    pub lo: u64,
+    pub hi: u64,
+    pub endpoints: Vec<Endpoint>,
+}
+
+impl ShardSpec {
+    pub fn contains(&self, pos: u64) -> bool {
+        self.lo <= pos && pos < self.hi
+    }
+
+    pub fn primary(&self) -> &Endpoint {
+        &self.endpoints[0]
+    }
+
+    /// Whether `ep` serves this shard (as primary or replica).
+    pub fn served_by(&self, ep: &Endpoint) -> bool {
+        self.endpoints.iter().any(|e| e == ep)
+    }
+}
+
+/// A validated cluster manifest generation. Construction goes through
+/// [`ClusterManifest::new`] (or a load/decode path that calls it), so a held
+/// manifest always satisfies the tiling invariants.
+#[derive(Clone, Debug, PartialEq, Eq)]
+pub struct ClusterManifest {
+    epoch: u64,
+    shards: Vec<ShardSpec>,
+}
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidData, msg)
+}
+
+impl ClusterManifest {
+    /// Validate and seal a manifest generation. Shards must be sorted,
+    /// contiguous from 0 (`shards[0].lo == 0`, `shards[i].hi ==
+    /// shards[i+1].lo`), non-empty (`lo < hi`), each with at least one
+    /// endpoint and no duplicate endpoints; `epoch` must be at least 1.
+    pub fn new(epoch: u64, shards: Vec<ShardSpec>) -> io::Result<ClusterManifest> {
+        if epoch == 0 {
+            return Err(invalid("cluster epoch 0 is reserved (wire 'no cluster' sentinel)".into()));
+        }
+        if shards.is_empty() {
+            return Err(invalid("cluster manifest has no shards".into()));
+        }
+        let mut expect_lo = 0u64;
+        for (i, s) in shards.iter().enumerate() {
+            if s.lo != expect_lo {
+                return Err(invalid(format!(
+                    "shard {i} starts at {} but the keyspace is covered up to {expect_lo} \
+                     (shards must tile [0, positions) contiguously)",
+                    s.lo
+                )));
+            }
+            if s.lo >= s.hi {
+                return Err(invalid(format!("shard {i} range [{}, {}) is empty", s.lo, s.hi)));
+            }
+            if s.endpoints.is_empty() {
+                return Err(invalid(format!("shard {i} has no endpoints")));
+            }
+            for (a, ea) in s.endpoints.iter().enumerate() {
+                if s.endpoints[..a].contains(ea) {
+                    return Err(invalid(format!("shard {i} lists endpoint {ea} twice")));
+                }
+            }
+            expect_lo = s.hi;
+        }
+        Ok(ClusterManifest { epoch, shards })
+    }
+
+    pub fn epoch(&self) -> u64 {
+        self.epoch
+    }
+
+    pub fn shards(&self) -> &[ShardSpec] {
+        &self.shards
+    }
+
+    /// Total keyspace positions the partition covers (`last.hi`).
+    pub fn positions(&self) -> u64 {
+        self.shards.last().map(|s| s.hi).unwrap_or(0)
+    }
+
+    /// Index of the shard owning `pos`, `None` at or past the end of the
+    /// keyspace (those positions decode empty — no shard to ask).
+    pub fn shard_of(&self, pos: u64) -> Option<usize> {
+        let i = self.shards.partition_point(|s| s.hi <= pos);
+        (i < self.shards.len() && self.shards[i].contains(pos)).then_some(i)
+    }
+
+    /// Every distinct endpoint in the manifest, in first-appearance order.
+    pub fn endpoints(&self) -> Vec<Endpoint> {
+        let mut out: Vec<Endpoint> = Vec::new();
+        for s in &self.shards {
+            for e in &s.endpoints {
+                if !out.contains(e) {
+                    out.push(e.clone());
+                }
+            }
+        }
+        out
+    }
+
+    /// The keyspace ranges `me` serves (primary or replica) as a
+    /// [`Coverage`] — what a member's owned-range enforcement checks
+    /// requests against.
+    pub fn owned_coverage(&self, me: &Endpoint) -> Coverage {
+        let mut cov = Coverage::new();
+        for s in &self.shards {
+            if s.served_by(me) {
+                cov.insert(s.lo, s.hi);
+            }
+        }
+        cov
+    }
+
+    pub fn to_json(&self) -> Json {
+        Json::obj(vec![
+            ("version", Json::num(CLUSTER_FORMAT_VERSION as f64)),
+            ("epoch", Json::num(self.epoch as f64)),
+            (
+                "shards",
+                Json::Arr(
+                    self.shards
+                        .iter()
+                        .map(|s| {
+                            Json::obj(vec![
+                                ("lo", Json::num(s.lo as f64)),
+                                ("hi", Json::num(s.hi as f64)),
+                                (
+                                    "endpoints",
+                                    Json::Arr(
+                                        s.endpoints
+                                            .iter()
+                                            .map(|e| Json::str(&e.to_string()))
+                                            .collect(),
+                                    ),
+                                ),
+                            ])
+                        })
+                        .collect(),
+                ),
+            ),
+        ])
+    }
+
+    pub fn to_json_string(&self) -> String {
+        self.to_json().to_string()
+    }
+
+    pub fn from_json(v: &Json) -> Result<ClusterManifest, String> {
+        let version = v
+            .get("version")
+            .and_then(Json::as_f64)
+            .ok_or("cluster manifest missing 'version'")? as u32;
+        if version != CLUSTER_FORMAT_VERSION {
+            return Err(format!(
+                "cluster manifest format v{version} unsupported (expected v{CLUSTER_FORMAT_VERSION})"
+            ));
+        }
+        let epoch = v.get("epoch").and_then(Json::as_f64).ok_or("missing 'epoch'")? as u64;
+        let mut shards = Vec::new();
+        for (i, s) in
+            v.get("shards").and_then(Json::as_arr).ok_or("missing 'shards'")?.iter().enumerate()
+        {
+            let lo = s.get("lo").and_then(Json::as_f64).ok_or(format!("shard {i}: missing 'lo'"))?
+                as u64;
+            let hi = s.get("hi").and_then(Json::as_f64).ok_or(format!("shard {i}: missing 'hi'"))?
+                as u64;
+            let mut endpoints = Vec::new();
+            for e in s
+                .get("endpoints")
+                .and_then(Json::as_arr)
+                .ok_or(format!("shard {i}: missing 'endpoints'"))?
+            {
+                let text = e.as_str().ok_or(format!("shard {i}: non-string endpoint"))?;
+                endpoints.push(Endpoint::parse(text).map_err(|e| e.to_string())?);
+            }
+            shards.push(ShardSpec { lo, hi, endpoints });
+        }
+        ClusterManifest::new(epoch, shards).map_err(|e| e.to_string())
+    }
+
+    pub fn from_json_str(text: &str) -> Result<ClusterManifest, String> {
+        ClusterManifest::from_json(&Json::parse(text)?)
+    }
+
+    /// Atomically write this generation to `path` (temp file + rename), so a
+    /// server polling the file never observes a half-written manifest.
+    pub fn save(&self, path: &Path) -> io::Result<()> {
+        let tmp = path.with_extension("json.tmp");
+        std::fs::write(&tmp, self.to_json_string().as_bytes())?;
+        std::fs::rename(&tmp, path)
+    }
+
+    pub fn load(path: &Path) -> io::Result<ClusterManifest> {
+        let text = std::fs::read_to_string(path)?;
+        ClusterManifest::from_json_str(&text)
+            .map_err(|e| invalid(format!("{}: {e}", path.display())))
+    }
+
+    /// The same partition under a strictly newer epoch but with `shards`
+    /// replaced — the rebalance planners build successors through this so
+    /// the monotonic-epoch rule is structural.
+    pub fn successor(&self, shards: Vec<ShardSpec>) -> io::Result<ClusterManifest> {
+        ClusterManifest::new(self.epoch + 1, shards)
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ep(i: usize) -> Endpoint {
+        Endpoint::parse(&format!("unix:///tmp/rskd-test-{i}.sock")).unwrap()
+    }
+
+    fn spec(lo: u64, hi: u64, eps: &[usize]) -> ShardSpec {
+        ShardSpec { lo, hi, endpoints: eps.iter().map(|&i| ep(i)).collect() }
+    }
+
+    fn three_shard() -> ClusterManifest {
+        ClusterManifest::new(
+            2,
+            vec![spec(0, 100, &[0, 1]), spec(100, 250, &[1]), spec(250, 400, &[2])],
+        )
+        .unwrap()
+    }
+
+    #[test]
+    fn validation_rejects_bad_partitions() {
+        // epoch 0 reserved
+        assert!(ClusterManifest::new(0, vec![spec(0, 10, &[0])]).is_err());
+        // empty shard list
+        assert!(ClusterManifest::new(1, vec![]).is_err());
+        // gap in the tiling
+        assert!(ClusterManifest::new(1, vec![spec(0, 10, &[0]), spec(20, 30, &[1])]).is_err());
+        // overlap
+        assert!(ClusterManifest::new(1, vec![spec(0, 10, &[0]), spec(5, 30, &[1])]).is_err());
+        // must start at 0
+        assert!(ClusterManifest::new(1, vec![spec(5, 30, &[0])]).is_err());
+        // empty range
+        assert!(ClusterManifest::new(1, vec![spec(0, 0, &[0])]).is_err());
+        // no endpoints
+        assert!(ClusterManifest::new(1, vec![spec(0, 10, &[])]).is_err());
+        // duplicate endpoint within a shard
+        assert!(ClusterManifest::new(1, vec![spec(0, 10, &[0, 0])]).is_err());
+        // a well-formed one passes
+        assert!(ClusterManifest::new(1, vec![spec(0, 10, &[0]), spec(10, 30, &[1, 2])]).is_ok());
+    }
+
+    #[test]
+    fn shard_of_routes_boundaries() {
+        let m = three_shard();
+        assert_eq!(m.positions(), 400);
+        assert_eq!(m.shard_of(0), Some(0));
+        assert_eq!(m.shard_of(99), Some(0));
+        assert_eq!(m.shard_of(100), Some(1));
+        assert_eq!(m.shard_of(249), Some(1));
+        assert_eq!(m.shard_of(250), Some(2));
+        assert_eq!(m.shard_of(399), Some(2));
+        assert_eq!(m.shard_of(400), None, "past-the-end positions have no owner");
+        assert_eq!(m.shard_of(u64::MAX), None);
+    }
+
+    #[test]
+    fn endpoints_and_owned_coverage() {
+        let m = three_shard();
+        assert_eq!(m.endpoints(), vec![ep(0), ep(1), ep(2)]);
+        let owned1 = m.owned_coverage(&ep(1));
+        // member 1 replicates shard 0 and owns shard 1: adjacent ranges merge
+        assert_eq!(owned1.ranges(), &[(0, 250)]);
+        assert!(owned1.covers(50, 200));
+        assert!(!owned1.covers(200, 300));
+        assert!(m.owned_coverage(&ep(9)).is_empty());
+    }
+
+    #[test]
+    fn json_roundtrip_preserves_everything() {
+        let m = three_shard();
+        let back = ClusterManifest::from_json_str(&m.to_json_string()).unwrap();
+        assert_eq!(back, m);
+        // malformed documents are refused with context, not defaulted
+        assert!(ClusterManifest::from_json_str("{}").is_err());
+        assert!(ClusterManifest::from_json_str("{\"version\":1,\"epoch\":0,\"shards\":[]}")
+            .is_err());
+        assert!(ClusterManifest::from_json_str(
+            "{\"version\":99,\"epoch\":1,\"shards\":[]}"
+        )
+        .is_err());
+    }
+
+    #[test]
+    fn save_load_roundtrip_and_successor_bumps_epoch() {
+        let dir = std::env::temp_dir().join(format!("rskd-cm-{}", std::process::id()));
+        let _ = std::fs::create_dir_all(&dir);
+        let path = dir.join("cluster.json");
+        let m = three_shard();
+        m.save(&path).unwrap();
+        assert_eq!(ClusterManifest::load(&path).unwrap(), m);
+        let next = m.successor(m.shards().to_vec()).unwrap();
+        assert_eq!(next.epoch(), 3);
+        next.save(&path).unwrap();
+        assert_eq!(ClusterManifest::load(&path).unwrap().epoch(), 3);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -1,0 +1,36 @@
+//! Sharded cache cluster: range-partitioned multi-server serving with
+//! client-side routing, hot-shard replication, and epoch-bumped
+//! rebalancing (docs/SERVING.md §Cluster).
+//!
+//! The design has exactly one piece of routing state — the versioned
+//! [`ClusterManifest`] — and no coordinator on the request path:
+//!
+//! * [`manifest`] — the shard map itself: a validated contiguous range
+//!   partition of the token-offset keyspace onto server endpoints, with
+//!   per-shard replica sets and a strictly monotonic `epoch`. Saved
+//!   atomically to `cluster.json`; servers poll the file, clients fetch it
+//!   over the wire (`GetCluster`).
+//! * [`control`] — a member's live view ([`ClusterControl`]): owned-range +
+//!   epoch enforcement for `Server::start_cluster`, and the `update` entry
+//!   point a manifest poller drives on epoch bumps.
+//! * [`reader`] — [`ClusterReader`], the client-side routing tier behind
+//!   the [`TargetSource`](crate::cache::TargetSource) surface: splits
+//!   ranges at shard boundaries, pins every segment to the manifest epoch,
+//!   walks replica sets round-robin with failover, and on any `WrongEpoch`
+//!   (or epoch-mismatched answer) discards the in-progress range, refetches
+//!   the manifest, and re-routes — a completed read never mixes
+//!   generations. Drops under `MemoryTier` unchanged.
+//! * [`rebalance`] — pure planners producing successor generations:
+//!   [`partition`] (initial even split), [`rotate`] (maximal-churn owner
+//!   shift), [`replicate_hot`] (extend the hottest shards' replica sets
+//!   from observed hot-shard counters).
+
+pub mod control;
+pub mod manifest;
+pub mod reader;
+pub mod rebalance;
+
+pub use control::ClusterControl;
+pub use manifest::{ClusterManifest, ShardSpec, CLUSTER_FORMAT_VERSION};
+pub use reader::{ClusterCounters, ClusterReader};
+pub use rebalance::{partition, replicate_hot, rotate};

@@ -1,0 +1,360 @@
+//! Client-side routing tier: [`ClusterReader`] implements
+//! [`TargetSource`](crate::cache::TargetSource) over a whole cluster, so a
+//! trainer (or a `MemoryTier` stacked on top) consumes a range-partitioned
+//! fleet exactly like one local `CacheReader`.
+//!
+//! Routing is entirely client-side: the reader holds a [`ClusterManifest`],
+//! splits each requested range at shard boundaries, and sends every segment
+//! pinned to the manifest's epoch. Replica sets are walked round-robin
+//! (spreading hot-shard load) with failover: a dead replica is skipped and
+//! its pooled connection dropped, and a request is lost only when *every*
+//! replica of a shard is down. Epoch safety is enforced here, not trusted to
+//! the wire: any `WrongEpoch` frame — or a `Targets` frame stamped with a
+//! different epoch than the pin — discards the whole in-progress range,
+//! refetches the manifest from the fleet (adopting the highest epoch any
+//! member reports), and re-routes from scratch. A completed read therefore
+//! never mixes positions from two manifest generations.
+
+use std::collections::{BTreeMap, HashMap};
+use std::io;
+use std::sync::Mutex;
+use std::time::Duration;
+
+use crate::cache::{RangeBlock, SparseTarget, TargetSource};
+use crate::cluster::ClusterManifest;
+use crate::serve::protocol::RemoteManifest;
+use crate::serve::{Backoff, Endpoint, RangeRead, ServeClient};
+
+/// Observability counters for one reader (snapshot via
+/// [`ClusterReader::counters`]).
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ClusterCounters {
+    /// shard segments served successfully (one per (range, shard) pair)
+    pub requests: u64,
+    /// responses discarded for carrying a superseded epoch (each discard
+    /// restarts the whole range — accepted results never count here)
+    pub stale_rejected: u64,
+    /// manifest refetch rounds triggered by epoch mismatches
+    pub refetches: u64,
+    /// replicas skipped because the connection failed
+    pub failovers: u64,
+    /// segments answered by a non-primary replica
+    pub replica_served: u64,
+}
+
+/// How many times one range read may observe an epoch change (refetch +
+/// re-route) before giving up. Each retry means a rebalance landed mid-read;
+/// more than a handful in one call is manifest churn, not racing.
+const MAX_EPOCH_RETRIES: u32 = 8;
+
+/// Pool clients retry fast: failover to the next replica is cheaper than
+/// waiting out a long reconnect schedule on a dead member.
+fn tune(c: &mut ServeClient) {
+    c.reconnect = Backoff::new(Duration::from_millis(2), Duration::from_millis(100), 2);
+}
+
+struct Inner {
+    manifest: ClusterManifest,
+    /// pooled connections, keyed by endpoint display form
+    clients: HashMap<String, ServeClient>,
+    /// per-segment receive buffer, reused across calls (zero-alloc steady
+    /// state, same contract as `RangeBlock` itself)
+    scratch: RangeBlock,
+    /// round-robin cursor over replica sets
+    rr: usize,
+    counters: ClusterCounters,
+    /// segments served per endpoint (display form) — what the perf harness
+    /// reads to verify replication actually spread the hot shard
+    served_by: BTreeMap<String, u64>,
+}
+
+enum Fetch {
+    Served,
+    EpochChanged,
+}
+
+/// Get-or-connect on the pool. A free function over the map field (not a
+/// method) so callers can hold the returned client alongside `&mut` borrows
+/// of the reader's other fields (`scratch`, counters).
+fn client_for<'p>(
+    pool: &'p mut HashMap<String, ServeClient>,
+    ep: &Endpoint,
+) -> io::Result<&'p mut ServeClient> {
+    let key = ep.to_string();
+    if !pool.contains_key(&key) {
+        let mut c = ServeClient::connect(ep)?;
+        tune(&mut c);
+        pool.insert(key.clone(), c);
+    }
+    Ok(pool.get_mut(&key).unwrap())
+}
+
+impl Inner {
+    /// Fetch `[pos, pos + seg)` — guaranteed inside shard `si` — into
+    /// `self.scratch`, pinned to `epoch`, walking the replica set round-robin
+    /// with failover.
+    fn fetch_segment(&mut self, si: usize, pos: u64, seg: usize, epoch: u64) -> io::Result<Fetch> {
+        let shard = self.manifest.shards()[si].clone();
+        let n = shard.endpoints.len();
+        let first = self.rr % n;
+        self.rr = self.rr.wrapping_add(1);
+        let mut last_err: Option<io::Error> = None;
+        for k in 0..n {
+            let idx = (first + k) % n;
+            let ep = &shard.endpoints[idx];
+            let key = ep.to_string();
+            let client = match client_for(&mut self.clients, ep) {
+                Ok(c) => c,
+                Err(e) => {
+                    self.counters.failovers += 1;
+                    last_err = Some(e);
+                    continue;
+                }
+            };
+            match client.read_range_at(pos, seg, epoch, &mut self.scratch) {
+                Ok(RangeRead::Targets { epoch: got }) if got == epoch => {
+                    if self.scratch.len() != seg {
+                        return Err(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!(
+                                "{key} answered {} positions for a {seg}-position segment",
+                                self.scratch.len()
+                            ),
+                        ));
+                    }
+                    self.counters.requests += 1;
+                    if idx != 0 {
+                        self.counters.replica_served += 1;
+                    }
+                    *self.served_by.entry(key).or_insert(0) += 1;
+                    return Ok(Fetch::Served);
+                }
+                Ok(RangeRead::Targets { .. }) | Ok(RangeRead::WrongEpoch { .. }) => {
+                    // never accept data from another generation
+                    self.counters.stale_rejected += 1;
+                    return Ok(Fetch::EpochChanged);
+                }
+                Err(e) => {
+                    // dead replica: drop its pooled connection, try the next
+                    self.clients.remove(&key);
+                    self.counters.failovers += 1;
+                    last_err = Some(e);
+                }
+            }
+        }
+        Err(io::Error::new(
+            io::ErrorKind::NotConnected,
+            format!(
+                "all {n} replicas of shard {si} [{}, {}) failed (last: {})",
+                shard.lo,
+                shard.hi,
+                last_err.map_or_else(|| "none reachable".into(), |e| e.to_string()),
+            ),
+        ))
+    }
+
+    /// Ask every member in the current manifest for its shard map and adopt
+    /// the highest epoch reported. Unreachable members are skipped — one
+    /// live member is enough to learn the new generation.
+    fn refetch_manifest(&mut self) {
+        self.counters.refetches += 1;
+        let mut best: Option<ClusterManifest> = None;
+        for ep in self.manifest.endpoints() {
+            let key = ep.to_string();
+            let client = match client_for(&mut self.clients, &ep) {
+                Ok(c) => c,
+                Err(_) => continue,
+            };
+            match client.cluster_manifest() {
+                Ok(m) => {
+                    if best.as_ref().map_or(true, |b| m.epoch() > b.epoch()) {
+                        best = Some(m);
+                    }
+                }
+                Err(_) => {
+                    self.clients.remove(&key);
+                }
+            }
+        }
+        if let Some(m) = best {
+            if m.epoch() > self.manifest.epoch() {
+                self.manifest = m;
+            }
+        }
+    }
+}
+
+/// A whole serving cluster behind the [`TargetSource`] surface. One mutex
+/// guards the connection pool and routing state — same single-caller
+/// contract as `ServedReader` (the trainer reads ranges from one thread;
+/// `Sync` is required structurally, not for parallel wire traffic).
+pub struct ClusterReader {
+    inner: Mutex<Inner>,
+    /// the served cache's identity (kind, positions, codec) — fetched once
+    /// at connect time from a cluster member
+    remote: RemoteManifest,
+}
+
+impl ClusterReader {
+    /// Bootstrap from any one cluster member: fetch the shard map and the
+    /// cache manifest from `seed`, then route to the whole fleet. Fails with
+    /// `InvalidInput` if `seed` is a standalone (non-cluster) server.
+    pub fn connect(seed: &Endpoint) -> io::Result<ClusterReader> {
+        let mut client = ServeClient::connect(seed)?;
+        tune(&mut client);
+        let manifest = client.cluster_manifest()?;
+        let remote = client.manifest()?;
+        let mut clients = HashMap::new();
+        clients.insert(seed.to_string(), client);
+        Ok(ClusterReader {
+            inner: Mutex::new(Inner {
+                manifest,
+                clients,
+                scratch: RangeBlock::new(),
+                rr: 0,
+                counters: ClusterCounters::default(),
+                served_by: BTreeMap::new(),
+            }),
+            remote,
+        })
+    }
+
+    /// Route with an already-loaded shard map (e.g. straight from
+    /// `cluster.json`), fetching the cache manifest from the first reachable
+    /// member.
+    pub fn from_manifest(manifest: ClusterManifest) -> io::Result<ClusterReader> {
+        let mut clients = HashMap::new();
+        let mut remote: Option<RemoteManifest> = None;
+        let mut last_err: Option<io::Error> = None;
+        for ep in manifest.endpoints() {
+            match ServeClient::connect(&ep) {
+                Ok(mut c) => {
+                    tune(&mut c);
+                    match c.manifest() {
+                        Ok(m) => {
+                            clients.insert(ep.to_string(), c);
+                            remote = Some(m);
+                            break;
+                        }
+                        Err(e) => last_err = Some(e),
+                    }
+                }
+                Err(e) => last_err = Some(e),
+            }
+        }
+        let remote = remote.ok_or_else(|| {
+            io::Error::new(
+                io::ErrorKind::NotConnected,
+                format!(
+                    "no cluster member reachable (last: {})",
+                    last_err.map_or_else(|| "no endpoints".into(), |e| e.to_string()),
+                ),
+            )
+        })?;
+        Ok(ClusterReader {
+            inner: Mutex::new(Inner {
+                manifest,
+                clients,
+                scratch: RangeBlock::new(),
+                rr: 0,
+                counters: ClusterCounters::default(),
+                served_by: BTreeMap::new(),
+            }),
+            remote,
+        })
+    }
+
+    /// The epoch this reader is currently routing under.
+    pub fn manifest_epoch(&self) -> u64 {
+        self.inner.lock().unwrap().manifest.epoch()
+    }
+
+    pub fn counters(&self) -> ClusterCounters {
+        self.inner.lock().unwrap().counters
+    }
+
+    /// Segments served per endpoint, busiest-agnostic (sorted by endpoint).
+    pub fn served_by(&self) -> Vec<(String, u64)> {
+        self.inner.lock().unwrap().served_by.iter().map(|(k, &v)| (k.clone(), v)).collect()
+    }
+
+    /// The cache identity advertised by the fleet.
+    pub fn remote_manifest(&self) -> &RemoteManifest {
+        &self.remote
+    }
+
+    fn route_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> io::Result<()> {
+        let inner = &mut *self.inner.lock().unwrap();
+        let end = start.saturating_add(len as u64);
+        for round in 0..=MAX_EPOCH_RETRIES {
+            if round > 0 {
+                // a rebalance is landing: give slower members a beat to
+                // adopt the new generation before re-asking the fleet
+                std::thread::sleep(Duration::from_millis(2 * round as u64));
+                inner.refetch_manifest();
+            }
+            out.clear();
+            let epoch = inner.manifest.epoch();
+            let mut pos = start;
+            let mut stale = false;
+            while pos < end {
+                let Some(si) = inner.manifest.shard_of(pos) else {
+                    // at/past the partitioned keyspace: misaligned-packing
+                    // semantics, every remaining position decodes empty
+                    for _ in pos..end {
+                        out.push_empty();
+                    }
+                    pos = end;
+                    break;
+                };
+                let shard_hi = inner.manifest.shards()[si].hi;
+                let seg = (end.min(shard_hi) - pos) as usize;
+                match inner.fetch_segment(si, pos, seg, epoch)? {
+                    Fetch::Served => {
+                        for i in 0..inner.scratch.len() {
+                            let (ids, probs) = inner.scratch.get(i);
+                            out.ids.extend_from_slice(ids);
+                            out.probs.extend_from_slice(probs);
+                            out.end_position();
+                        }
+                        pos += seg as u64;
+                    }
+                    Fetch::EpochChanged => {
+                        stale = true;
+                        break;
+                    }
+                }
+            }
+            if !stale {
+                return Ok(());
+            }
+        }
+        Err(io::Error::new(
+            io::ErrorKind::TimedOut,
+            format!(
+                "cluster epoch kept changing across {MAX_EPOCH_RETRIES} refetches \
+                 while reading [{start}, {end}) — manifest churn, not a race"
+            ),
+        ))
+    }
+}
+
+impl TargetSource for ClusterReader {
+    fn read_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> io::Result<()> {
+        self.route_range_into(start, len, out)
+    }
+
+    fn try_get_range(&self, start: u64, len: usize) -> io::Result<Vec<SparseTarget>> {
+        let mut block = RangeBlock::new();
+        self.route_range_into(start, len, &mut block)?;
+        Ok(block.to_targets())
+    }
+
+    fn cache_kind(&self) -> Result<crate::spec::CacheKind, crate::spec::SpecError> {
+        self.remote.cache_kind()
+    }
+
+    fn positions(&self) -> u64 {
+        self.remote.positions
+    }
+}

@@ -1,0 +1,226 @@
+//! Pure rebalance planners: functions from a manifest (plus observed load)
+//! to its successor generation. Nothing here touches the network or the
+//! filesystem — the `rskd rebalance` CLI composes these with
+//! [`ClusterManifest::save`] and the servers' manifest-file polling, and
+//! tests drive them directly against in-process `ClusterControl`s.
+//!
+//! * [`partition`] — the initial generation: split `[0, positions)` evenly
+//!   across members, remainder to the earliest shards.
+//! * [`rotate`] — move every shard to the next member. Deliberately maximal
+//!   churn: every owner changes, so a mid-run rotation deterministically
+//!   exercises the `WrongEpoch` → refetch → re-route path on every shard.
+//! * [`replicate_hot`] — extend the hottest shards' replica sets with the
+//!   least-loaded members, using the server fleet's hot-shard counters
+//!   apportioned onto the cluster partition.
+
+use std::io;
+
+use crate::cluster::{ClusterManifest, ShardSpec};
+use crate::serve::Endpoint;
+
+fn invalid(msg: String) -> io::Error {
+    io::Error::new(io::ErrorKind::InvalidInput, msg)
+}
+
+/// The initial (epoch 1) generation: `positions` keyspace slots split as
+/// evenly as possible across `members`, one shard per member, remainder
+/// spread one-each over the earliest shards. With more members than
+/// positions the surplus members get no shard (they join on a later
+/// rebalance). Members must be distinct.
+pub fn partition(positions: u64, members: &[Endpoint]) -> io::Result<ClusterManifest> {
+    if positions == 0 {
+        return Err(invalid("cannot partition an empty keyspace".into()));
+    }
+    if members.is_empty() {
+        return Err(invalid("cannot partition across zero members".into()));
+    }
+    for (i, m) in members.iter().enumerate() {
+        if members[..i].contains(m) {
+            return Err(invalid(format!("member {m} listed twice")));
+        }
+    }
+    let k = members.len() as u64;
+    let (base, rem) = (positions / k, positions % k);
+    let mut shards = Vec::new();
+    let mut lo = 0u64;
+    for (i, m) in members.iter().enumerate() {
+        let size = base + u64::from((i as u64) < rem);
+        if size == 0 {
+            continue;
+        }
+        shards.push(ShardSpec { lo, hi: lo + size, endpoints: vec![m.clone()] });
+        lo += size;
+    }
+    ClusterManifest::new(1, shards)
+}
+
+/// The successor generation in which shard `i` is served by old shard
+/// `(i + 1) % n`'s members: same partition, every range under a new owner.
+pub fn rotate(m: &ClusterManifest) -> io::Result<ClusterManifest> {
+    let old = m.shards();
+    let n = old.len();
+    let shards = (0..n)
+        .map(|i| ShardSpec {
+            lo: old[i].lo,
+            hi: old[i].hi,
+            endpoints: old[(i + 1) % n].endpoints.clone(),
+        })
+        .collect();
+    m.successor(shards)
+}
+
+/// The successor generation in which the `top_n` hottest shards have their
+/// replica sets extended to `replicas` members each, drawing from the
+/// least-loaded members not already serving them.
+///
+/// `heat` is observed request load as `(lo, hi, hits)` ranges — the server
+/// fleet's hot-shard counters keyed by *cache* shard ranges, which need not
+/// align with the cluster partition; each range's hits are apportioned onto
+/// overlapping cluster shards by overlap fraction. A shard with no observed
+/// heat is never replicated (an idle cluster yields an error: there is
+/// nothing to act on, and epochs must not bump for no-ops).
+pub fn replicate_hot(
+    m: &ClusterManifest,
+    heat: &[(u64, u64, u64)],
+    top_n: usize,
+    replicas: usize,
+) -> io::Result<ClusterManifest> {
+    if replicas < 2 {
+        return Err(invalid(format!("--replicas {replicas} adds nothing (need at least 2)")));
+    }
+    let shards = m.shards();
+    let mut load = vec![0f64; shards.len()];
+    for &(lo, hi, hits) in heat {
+        if hi <= lo || hits == 0 {
+            continue;
+        }
+        let span = (hi - lo) as f64;
+        for (i, s) in shards.iter().enumerate() {
+            let (olo, ohi) = (lo.max(s.lo), hi.min(s.hi));
+            if olo < ohi {
+                load[i] += hits as f64 * ((ohi - olo) as f64 / span);
+            }
+        }
+    }
+    let members = m.endpoints();
+    // a member's load: its shards' heat, split evenly across each replica set
+    let member_load = |cur: &[ShardSpec], e: &Endpoint| -> f64 {
+        cur.iter()
+            .enumerate()
+            .filter(|(_, s)| s.served_by(e))
+            .map(|(i, s)| load[i] / s.endpoints.len() as f64)
+            .sum()
+    };
+    let mut order: Vec<usize> = (0..shards.len()).collect();
+    order.sort_by(|&a, &b| load[b].partial_cmp(&load[a]).unwrap().then(a.cmp(&b)));
+    let mut next: Vec<ShardSpec> = shards.to_vec();
+    let mut grew = false;
+    for &si in order.iter().take(top_n) {
+        if load[si] <= 0.0 {
+            break; // ranked order: everything after this is cold too
+        }
+        while next[si].endpoints.len() < replicas {
+            let candidate = members
+                .iter()
+                .filter(|e| !next[si].served_by(e))
+                .min_by(|a, b| {
+                    member_load(&next, a).partial_cmp(&member_load(&next, b)).unwrap()
+                })
+                .cloned();
+            match candidate {
+                Some(e) => {
+                    next[si].endpoints.push(e);
+                    grew = true;
+                }
+                None => break, // every member already serves this shard
+            }
+        }
+    }
+    if !grew {
+        return Err(invalid(
+            "no shard gained a replica (no observed heat, or replica sets already full) — \
+             refusing to bump the epoch for a no-op"
+                .into(),
+        ));
+    }
+    m.successor(next)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    fn ep(i: usize) -> Endpoint {
+        Endpoint::parse(&format!("unix:///tmp/rskd-rb-{i}.sock")).unwrap()
+    }
+
+    fn eps(n: usize) -> Vec<Endpoint> {
+        (0..n).map(ep).collect()
+    }
+
+    #[test]
+    fn partition_splits_evenly_with_remainder_first() {
+        let m = partition(10, &eps(3)).unwrap();
+        assert_eq!(m.epoch(), 1);
+        let ranges: Vec<(u64, u64)> = m.shards().iter().map(|s| (s.lo, s.hi)).collect();
+        assert_eq!(ranges, vec![(0, 4), (4, 7), (7, 10)]); // 10 = 4 + 3 + 3
+        for (i, s) in m.shards().iter().enumerate() {
+            assert_eq!(s.endpoints, vec![ep(i)]);
+        }
+        // exact division
+        let even = partition(9, &eps(3)).unwrap();
+        assert!(even.shards().iter().all(|s| s.hi - s.lo == 3));
+        // more members than positions: surplus members get no shard
+        let tiny = partition(2, &eps(3)).unwrap();
+        assert_eq!(tiny.shards().len(), 2);
+        assert_eq!(tiny.positions(), 2);
+        // degenerate inputs refused
+        assert!(partition(0, &eps(2)).is_err());
+        assert!(partition(10, &[]).is_err());
+        assert!(partition(10, &[ep(0), ep(0)]).is_err());
+    }
+
+    #[test]
+    fn rotate_moves_every_owner_and_bumps_epoch() {
+        let m = partition(300, &eps(3)).unwrap();
+        let r = rotate(&m).unwrap();
+        assert_eq!(r.epoch(), 2);
+        for (i, s) in r.shards().iter().enumerate() {
+            let old = m.shards();
+            assert_eq!((s.lo, s.hi), (old[i].lo, old[i].hi), "partition unchanged");
+            assert_eq!(s.endpoints, old[(i + 1) % 3].endpoints, "owner shifted");
+            assert_ne!(s.endpoints, old[i].endpoints, "every shard changed hands");
+        }
+        // three rotations restore the original assignment, three epochs later
+        let back = rotate(&rotate(&r).unwrap()).unwrap();
+        assert_eq!(back.epoch(), 4);
+        assert_eq!(back.shards(), m.shards());
+    }
+
+    #[test]
+    fn replicate_hot_extends_hottest_shard_with_least_loaded_member() {
+        let m = partition(300, &eps(3)).unwrap(); // [0,100) @0, [100,200) @1, [200,300) @2
+        // heat ranges misaligned with the partition: [0, 150) is hot, which
+        // apportions 2/3 onto shard 0 and 1/3 onto shard 1; shard 2 idles
+        let heat = [(0u64, 150u64, 900u64), (200, 300, 30)];
+        let r = replicate_hot(&m, &heat, 1, 2).unwrap();
+        assert_eq!(r.epoch(), 2);
+        // shard 0 (600 hits) is hottest; member 2 (30 hits) is least loaded
+        assert_eq!(r.shards()[0].endpoints, vec![ep(0), ep(2)]);
+        assert_eq!(r.shards()[1].endpoints, vec![ep(1)], "only top_n shards grow");
+        assert_eq!(r.shards()[2].endpoints, vec![ep(2)]);
+    }
+
+    #[test]
+    fn replicate_hot_refuses_no_ops() {
+        let m = partition(300, &eps(3)).unwrap();
+        // no heat at all: nothing to replicate, epoch must not bump
+        assert!(replicate_hot(&m, &[], 2, 2).is_err());
+        assert!(replicate_hot(&m, &[(0, 100, 5)], 1, 1).is_err(), "replicas < 2");
+        // replica sets already saturated: also a no-op
+        let full = replicate_hot(&m, &[(0, 300, 99)], 3, 3).unwrap();
+        assert_eq!(full.epoch(), 2);
+        assert!(full.shards().iter().all(|s| s.endpoints.len() == 3));
+        assert!(replicate_hot(&full, &[(0, 300, 99)], 3, 3).is_err());
+    }
+}

@@ -14,7 +14,8 @@
 //! and the cache manifests; `coordinator::Pipeline::run_spec` resolves a
 //! spec's cache plan and trains a student under it. A built cache can also
 //! be *served* to concurrent consumers over a binary wire protocol
-//! ([`serve`], `docs/SERVING.md`); students consume remote caches through
+//! ([`serve`], `docs/SERVING.md`) — by one server or by a range-partitioned
+//! cluster of them ([`cluster`]); students consume remote caches through
 //! the same [`cache::TargetSource`] surface as local ones.
 //!
 //! Start at the repo-root `README.md`; see `DESIGN.md` for the architecture,
@@ -23,6 +24,7 @@
 //! the on-disk sparse-logit cache spec.
 
 pub mod cache;
+pub mod cluster;
 pub mod coordinator;
 pub mod data;
 pub mod evalsuite;

@@ -5,6 +5,10 @@
 //! rskd serve    [--cache DIR | --method <spec>] [--port N | --unix PATH]
 //!               [--backfill --synthetic N]
 //! rskd load-gen [--cache DIR | --method <spec> | --synthetic N [--backfill]]
+//!               [--cluster N]
+//! rskd cluster-serve --cache DIR --manifest FILE --me ENDPOINT [--poll-ms N]
+//! rskd rebalance --manifest FILE (--partition ... | --rotate=true |
+//!                --replicate-hot N --replicas R)
 //! rskd toy      [--task gauss|image]
 //! rskd zipf     [--k N] [--rounds N]
 //! rskd info     [--artifacts DIR]
@@ -27,7 +31,11 @@ use std::time::{Duration, Instant};
 use anyhow::{bail, Context, Result};
 
 use rskd::cache::{
-    CacheReader, CacheWriter, DynSource, ProbCodec, ShardCodec, SparseTarget, WriteThrough,
+    CacheReader, CacheWriter, DynSource, ProbCodec, ShardCodec, SparseTarget, TargetSource,
+    WriteThrough,
+};
+use rskd::cluster::{
+    partition, replicate_hot, rotate, ClusterControl, ClusterManifest, ClusterReader,
 };
 use rskd::coordinator::{pct_ce_to_fullkd, Pipeline, PipelineConfig};
 use rskd::report::{final_loss, Report};
@@ -505,6 +513,295 @@ fn cmd_load_gen(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `rskd cluster-serve --cache DIR --manifest FILE --me ENDPOINT`: serve the
+/// cache as one member of a cluster. The manifest file is polled
+/// (`--poll-ms`, default 500) and any strictly newer epoch is adopted live —
+/// `rskd rebalance` writing the file is all it takes to move ranges.
+fn cmd_cluster_serve(args: &Args) -> Result<()> {
+    let dir = resolve_cache_dir(args)?;
+    let manifest_path =
+        PathBuf::from(args.get("manifest").context("--manifest FILE is required")?);
+    let me = Endpoint::parse(&args.get("me").context("--me ENDPOINT is required")?)?;
+    let manifest = ClusterManifest::load(&manifest_path)?;
+    let reader = open_reader(&dir, args)?;
+    let control = Arc::new(ClusterControl::new(manifest, me.clone()));
+    let cfg = serve_config_from_args(args);
+    let server = Server::start_cluster(reader, me.clone(), cfg, Arc::clone(&control))?;
+    println!(
+        "cluster member {me} serving epoch {} (owned ranges per {})",
+        control.epoch(),
+        manifest_path.display()
+    );
+    let poll = Duration::from_millis(args.usize_or("poll-ms", 500) as u64);
+    let mut last_print = Instant::now();
+    loop {
+        std::thread::sleep(poll);
+        if let Ok(m) = ClusterManifest::load(&manifest_path) {
+            if m.epoch() > control.epoch() {
+                let epoch = m.epoch();
+                match control.update(m) {
+                    Ok(()) => println!("{me}: adopted manifest epoch {epoch}"),
+                    Err(e) => eprintln!("{me}: refusing manifest: {e}"),
+                }
+            }
+        }
+        if last_print.elapsed() >= Duration::from_secs(30) {
+            print_snapshot(&server.stats_snapshot());
+            last_print = Instant::now();
+        }
+    }
+}
+
+/// Observed hot-range load across the fleet, as `(lo, hi, hits)` heat items
+/// for [`replicate_hot`]: each member's hot-shard counters (indexed by
+/// *cache* shard) mapped back to position ranges via its advertised
+/// manifest. Unreachable members are skipped — rebalancing must work with a
+/// partially-down fleet.
+fn gather_heat(m: &ClusterManifest) -> Vec<(u64, u64, u64)> {
+    let mut heat = Vec::new();
+    for ep in m.endpoints() {
+        let snap = ServeClient::connect(&ep)
+            .and_then(|mut c| Ok((c.manifest()?, c.stats()?)));
+        let (rm, stats) = match snap {
+            Ok(pair) => pair,
+            Err(e) => {
+                eprintln!("skipping unreachable member {ep}: {e}");
+                continue;
+            }
+        };
+        let shards = stats.hot.len().max(1) as u64;
+        let pps = (rm.positions + shards - 1) / shards;
+        for (i, &hits) in stats.hot.iter().enumerate() {
+            if hits == 0 || pps == 0 {
+                continue;
+            }
+            let lo = i as u64 * pps;
+            let hi = (lo + pps).min(rm.positions);
+            if lo < hi {
+                heat.push((lo, hi, hits));
+            }
+        }
+    }
+    heat
+}
+
+/// `rskd rebalance --manifest FILE` + one planner flag: write the successor
+/// manifest generation (atomic rename — polling members adopt it live).
+fn cmd_rebalance(args: &Args) -> Result<()> {
+    let path = PathBuf::from(args.get("manifest").context("--manifest FILE is required")?);
+    if args.has("partition") {
+        let n = args.u64_or("positions", 0);
+        let servers = args.get("servers").context("--partition needs --servers ep,ep,...")?;
+        let eps = servers
+            .split(',')
+            .map(|s| Endpoint::parse(s.trim()))
+            .collect::<std::io::Result<Vec<_>>>()?;
+        let m = partition(n, &eps)?;
+        m.save(&path)?;
+        println!(
+            "wrote epoch-1 partition of {n} positions over {} members to {}",
+            eps.len(),
+            path.display()
+        );
+        return Ok(());
+    }
+    let m = ClusterManifest::load(&path)?;
+    let next = if args.bool_or("rotate", false) {
+        rotate(&m)?
+    } else if args.has("replicate-hot") {
+        let top_n = args.usize_or("replicate-hot", 1);
+        let replicas = args.usize_or("replicas", 2);
+        replicate_hot(&m, &gather_heat(&m), top_n, replicas)?
+    } else {
+        bail!("pass one of --partition / --rotate / --replicate-hot N [--replicas R]");
+    };
+    next.save(&path)?;
+    println!("epoch {} -> {}: wrote {}", m.epoch(), next.epoch(), path.display());
+    for (i, s) in next.shards().iter().enumerate() {
+        let eps: Vec<String> = s.endpoints.iter().map(|e| e.to_string()).collect();
+        println!("  shard {i} [{}, {}): {}", s.lo, s.hi, eps.join(", "));
+    }
+    Ok(())
+}
+
+/// Child member processes of `load-gen --cluster N`, killed on every exit
+/// path (including assertion failures unwinding through `?`).
+struct ChildGuard(Vec<std::process::Child>);
+
+impl Drop for ChildGuard {
+    fn drop(&mut self) {
+        for c in &mut self.0 {
+            let _ = c.kill();
+            let _ = c.wait();
+        }
+    }
+}
+
+/// Block until a member answers `Ping` on `ep` (children need a beat to
+/// open the cache and bind their socket).
+fn wait_member_ready(ep: &Endpoint, timeout: Duration) -> Result<()> {
+    let t0 = Instant::now();
+    loop {
+        if let Ok(mut c) = ServeClient::connect(ep) {
+            if c.ping().is_ok() {
+                return Ok(());
+            }
+        }
+        if t0.elapsed() > timeout {
+            bail!("cluster member {ep} not ready within {timeout:?}");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// Block until every member advertises `epoch` via `GetManifest`.
+fn wait_epoch_adopted(eps: &[Endpoint], epoch: u64, timeout: Duration) -> Result<()> {
+    let t0 = Instant::now();
+    loop {
+        let adopted = eps.iter().all(|ep| {
+            ServeClient::connect(ep)
+                .and_then(|mut c| c.manifest())
+                .map(|m| m.epoch >= epoch)
+                .unwrap_or(false)
+        });
+        if adopted {
+            return Ok(());
+        }
+        if t0.elapsed() > timeout {
+            bail!("not every member adopted epoch {epoch} within {timeout:?}");
+        }
+        std::thread::sleep(Duration::from_millis(25));
+    }
+}
+
+/// `load-gen --cluster N`: the multi-process smoke test. Builds a synthetic
+/// cache, spawns N real `cluster-serve` child processes over unix sockets,
+/// and asserts the cluster contract end to end:
+///
+/// 1. every routed response is byte-identical to a direct `CacheReader`
+///    over the same directory;
+/// 2. a mid-run rebalance (`rotate`: every shard changes owner, written to
+///    the polled manifest file) completes with zero stale reads — the
+///    routing reader observes `WrongEpoch`, refetches, finishes at the new
+///    epoch, and still serves bytes identical to the direct reader.
+fn cmd_load_gen_cluster(args: &Args) -> Result<()> {
+    let members = args.usize_or("cluster", 3).max(1);
+    let n = args.u64_or("synthetic", 4096);
+    let base = std::env::temp_dir().join(format!("rskd-cluster-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base)?;
+    let cache_dir = base.join("cache");
+    let sc = shard_codec_from_args(args)?.unwrap_or_default();
+    println!("building synthetic RS-50 cache ({n} positions, {sc} shards) in {}",
+        cache_dir.display());
+    build_synthetic_cache(&cache_dir, n, sc)?;
+
+    let eps: Vec<Endpoint> =
+        (0..members).map(|i| Endpoint::Unix(base.join(format!("m{i}.sock")))).collect();
+    let manifest_path = base.join("cluster.json");
+    let manifest = partition(n, &eps)?;
+    manifest.save(&manifest_path)?;
+
+    let exe = std::env::current_exe()?;
+    let mut children = ChildGuard(Vec::new());
+    for ep in &eps {
+        let child = std::process::Command::new(&exe)
+            .arg("cluster-serve")
+            .arg(format!("--cache={}", cache_dir.display()))
+            .arg(format!("--manifest={}", manifest_path.display()))
+            .arg(format!("--me={ep}"))
+            .arg("--poll-ms=50")
+            .spawn()
+            .with_context(|| format!("spawning cluster member {ep}"))?;
+        children.0.push(child);
+    }
+    for ep in &eps {
+        wait_member_ready(ep, Duration::from_secs(10))?;
+    }
+    println!("{members} members up (epoch {})", manifest.epoch());
+
+    let reader = ClusterReader::from_manifest(manifest.clone())?;
+    let direct = CacheReader::open(&cache_dir)?;
+    let clients = args.usize_or("clients", 2).max(1);
+    let requests = args.usize_or("requests", 40).max(1);
+    let range = (args.usize_or("range", 128) as u64).min(n.max(1)) as usize;
+    let span = n.saturating_sub(range as u64).max(1);
+
+    // pass closure: `clients` threads of `requests` routed reads each, every
+    // response compared byte-for-byte against the direct reader
+    let run_pass = |pass: u64| -> Result<u64> {
+        let served = std::sync::atomic::AtomicU64::new(0);
+        std::thread::scope(|s| -> Result<()> {
+            let mut handles = Vec::new();
+            for c in 0..clients {
+                let (reader, direct, served) = (&reader, &direct, &served);
+                handles.push(s.spawn(move || -> Result<()> {
+                    let mut rng = Pcg::new(Pcg::mix_seed(0xC10C + pass, c as u64));
+                    for _ in 0..requests {
+                        let start = rng.below(span);
+                        let routed = reader.try_get_range(start, range)?;
+                        if routed != direct.get_range(start, range) {
+                            bail!("routed range [{start}, +{range}) differs from direct read");
+                        }
+                        served.fetch_add(1, std::sync::atomic::Ordering::Relaxed);
+                    }
+                    Ok(())
+                }));
+            }
+            for h in handles {
+                h.join().expect("client thread panicked")?;
+            }
+            Ok(())
+        })?;
+        Ok(served.into_inner())
+    };
+
+    let t0 = Instant::now();
+    let pass1 = run_pass(1)?;
+    println!(
+        "pass 1: {pass1} routed ranges byte-identical to direct reads (epoch {})",
+        reader.manifest_epoch()
+    );
+
+    // mid-run rebalance: rotate every shard to a new owner and let the
+    // members pick it up off the manifest file
+    let rotated = rotate(&manifest)?;
+    rotated.save(&manifest_path)?;
+    wait_epoch_adopted(&eps, rotated.epoch(), Duration::from_secs(10))?;
+    println!("rebalance written: epoch {} adopted by all members", rotated.epoch());
+
+    let pass2 = run_pass(2)?;
+    let counters = reader.counters();
+    if reader.manifest_epoch() != rotated.epoch() {
+        bail!(
+            "reader finished at epoch {} (expected {})",
+            reader.manifest_epoch(),
+            rotated.epoch()
+        );
+    }
+    if counters.stale_rejected == 0 {
+        bail!("rebalance was never observed: expected at least one WrongEpoch rejection");
+    }
+    let wall = t0.elapsed();
+    println!(
+        "pass 2: {pass2} routed ranges byte-identical after rebalance; \
+         {} stale responses rejected (zero accepted), {} manifest refetches, epoch {}",
+        counters.stale_rejected,
+        counters.refetches,
+        reader.manifest_epoch()
+    );
+    println!(
+        "cluster smoke OK: {} ranges in {:.2}s across {members} members ({} served by {:?})",
+        pass1 + pass2,
+        wall.as_secs_f64(),
+        counters.requests,
+        reader.served_by().iter().map(|(_, c)| *c).collect::<Vec<_>>()
+    );
+    drop(children);
+    let _ = std::fs::remove_dir_all(&base);
+    Ok(())
+}
+
 fn cmd_toy(args: &Args) -> Result<()> {
     let task = args.str_or("task", "gauss");
     let cfg = ToyTrainConfig { steps: args.usize_or("steps", 600), ..Default::default() };
@@ -592,6 +889,9 @@ fn run() -> Result<()> {
     match cmd {
         "pipeline" => cmd_pipeline(&args),
         "serve" => cmd_serve(&args),
+        "cluster-serve" => cmd_cluster_serve(&args),
+        "rebalance" => cmd_rebalance(&args),
+        "load-gen" if args.has("cluster") => cmd_load_gen_cluster(&args),
         "load-gen" => cmd_load_gen(&args),
         "toy" => cmd_toy(&args),
         "zipf" => cmd_zipf(&args),
@@ -615,7 +915,17 @@ fn run() -> Result<()> {
             println!("  load-gen --cache DIR | --method <spec> | --synthetic N [--backfill]");
             println!("           --clients N --requests N --range N --simulate-disk-ms N");
             println!("           (--backfill runs 2 passes and asserts pass 2 misses == 0)");
+            println!("           --cluster N: multi-process smoke — N cluster-serve children,");
+            println!("           byte-identity vs a direct reader + zero-stale mid-run rebalance");
             println!("           (docs/SERVING.md: wire format, backpressure, SLO knobs)");
+            println!("  cluster-serve --cache DIR --manifest FILE --me tcp://..|unix://..");
+            println!("           serve as a cluster member; polls FILE (--poll-ms) for");
+            println!("           epoch bumps (docs/SERVING.md §Cluster)");
+            println!("  rebalance --manifest FILE + one of:");
+            println!("           --partition --positions N --servers ep,ep,..  (epoch 1)");
+            println!("           --rotate=true                 (every shard to the next owner)");
+            println!("           --replicate-hot N --replicas R  (grow hot shards' replica sets");
+            println!("           from the live fleet's hot-shard counters)");
             println!("  toy      --task gauss|image");
             println!("  zipf     --k N --rounds N");
             println!("  info     --artifacts DIR");

@@ -3,46 +3,115 @@
 //! `trainer::train_student` consume a remote cache exactly like a local
 //! [`CacheReader`](crate::cache::CacheReader).
 //!
-//! Failure handling is deliberately simple and explicit:
-//! * a transport error (server restarted, connection dropped) triggers one
-//!   reconnect + resend per call — requests are idempotent reads;
+//! Failure handling is explicit and bounded, governed by two [`Backoff`]
+//! schedules (exponential growth, a hard cap, and uniform jitter so a fleet
+//! of clients never retries in lockstep):
+//! * a transport error (server restarted, connection dropped) reconnects and
+//!   resends — requests are idempotent reads — up to
+//!   [`ServeClient::reconnect`]`.retries` times (the first reconnect is
+//!   immediate, later ones back off);
 //! * an [`ErrCode::Overloaded`] error frame (admission control shed the
-//!   request) backs off linearly and retries up to
-//!   [`ServeClient::overload_retries`] times;
+//!   request) retries per [`ServeClient::overload`];
+//! * a [`Response::WrongEpoch`] frame is *not* an error at this layer:
+//!   [`ServeClient::read_range_at`] surfaces it as [`RangeRead::WrongEpoch`]
+//!   for the cluster routing tier to act on, and only the unpinned
+//!   [`ServeClient::read_range_into`] convenience path turns it into
+//!   `io::Error`;
 //! * every other error frame is permanent and surfaces as `io::Error`.
 
 use std::io;
+use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
 use std::time::Duration;
 
 use crate::cache::{RangeBlock, SparseTarget, TargetSource};
+use crate::cluster::ClusterManifest;
 use crate::serve::protocol::{
-    read_frame, write_frame, ErrCode, RemoteManifest, Request, Response,
+    read_frame, write_frame, ErrCode, RangeFrame, RemoteManifest, Request, Response, NO_EPOCH,
 };
 use crate::serve::stats::StatsSnapshot;
 use crate::serve::{Endpoint, Stream};
+use crate::util::rng::Pcg;
+
+/// A capped-exponential retry schedule with uniform jitter. Attempt `k`
+/// (0-based) draws its delay uniformly from `[d/2, d)` where
+/// `d = min(cap, base * 2^k)` — full delays are deterministic upper bounds,
+/// jitter decorrelates concurrent clients hammering a recovering server.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Backoff {
+    /// delay bound for attempt 0 (zero disables sleeping entirely)
+    pub base: Duration,
+    /// upper bound the exponential curve saturates at
+    pub cap: Duration,
+    /// how many retries the schedule allows (0 = fail on the first error)
+    pub retries: u32,
+}
+
+impl Backoff {
+    pub fn new(base: Duration, cap: Duration, retries: u32) -> Backoff {
+        Backoff { base, cap, retries }
+    }
+
+    /// The jittered delay for 0-based `attempt`. Exponent is clamped so the
+    /// doubling can never overflow; the result is always `< cap + 1ns` and
+    /// at least half the deterministic bound.
+    pub fn delay(&self, attempt: u32, rng: &mut Pcg) -> Duration {
+        let full = self
+            .base
+            .checked_mul(1u32 << attempt.min(20))
+            .map_or(self.cap, |d| d.min(self.cap));
+        let nanos = full.as_nanos() as u64;
+        let half = nanos / 2;
+        if nanos - half == 0 {
+            return full; // sub-2ns bound: nothing to jitter
+        }
+        Duration::from_nanos(half + rng.below(nanos - half))
+    }
+}
+
+/// What a pinned range read produced: decoded targets stamped with the
+/// epoch the server answered under, or a typed refusal carrying the
+/// server's current epoch (stale pin or unowned range — refetch the
+/// cluster manifest and re-route).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum RangeRead {
+    Targets { epoch: u64 },
+    WrongEpoch { epoch: u64 },
+}
+
+/// Per-process connection counter: combined with the PID it seeds each
+/// client's jitter stream, so neither two clients in one process nor the
+/// same client index across `load-gen` worker processes share a schedule.
+static CLIENT_SEQ: AtomicU64 = AtomicU64::new(0);
 
 pub struct ServeClient {
     endpoint: Endpoint,
     stream: Stream,
-    /// max retries for `Overloaded` responses (0 = surface the first one)
-    pub overload_retries: u32,
-    /// base backoff between overload retries (attempt k sleeps k * base)
-    pub backoff: Duration,
+    /// retry schedule for `Overloaded` (shed) responses
+    pub overload: Backoff,
+    /// retry schedule for transport failures (reconnect + resend)
+    pub reconnect: Backoff,
+    rng: Pcg,
 }
 
 impl ServeClient {
     pub fn connect(endpoint: &Endpoint) -> io::Result<ServeClient> {
+        let seq = CLIENT_SEQ.fetch_add(1, Ordering::Relaxed);
         Ok(ServeClient {
             stream: Stream::connect(endpoint)?,
             endpoint: endpoint.clone(),
-            overload_retries: 5,
-            backoff: Duration::from_millis(5),
+            overload: Backoff::new(Duration::from_millis(5), Duration::from_millis(200), 5),
+            reconnect: Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 3),
+            rng: Pcg::new(Pcg::mix_seed(std::process::id() as u64, seq)),
         })
     }
 
-    /// One request/response exchange, reconnecting + resending once if the
-    /// transport fails mid-call.
+    pub fn endpoint(&self) -> &Endpoint {
+        &self.endpoint
+    }
+
+    /// One request/response exchange, reconnecting + resending on transport
+    /// failure per [`ServeClient::reconnect`].
     fn call(&mut self, req: &Request) -> io::Result<Response> {
         Response::decode(&self.call_raw(req)?)
     }
@@ -51,26 +120,38 @@ impl ServeClient {
     /// paths can decode straight into caller-owned buffers.
     fn call_raw(&mut self, req: &Request) -> io::Result<Vec<u8>> {
         let payload = req.encode();
-        for attempt in 0..2 {
+        let mut failures = 0u32;
+        loop {
             let res = write_frame(&mut self.stream, &payload)
                 .and_then(|()| read_frame(&mut self.stream));
-            match res {
+            let err = match res {
                 Ok(Some(frame)) => return Ok(frame),
-                Ok(None) => {
-                    // server hung up between frames
-                    if attempt == 1 {
-                        return Err(io::Error::new(
-                            io::ErrorKind::ConnectionReset,
-                            format!("server at {} closed the connection", self.endpoint),
-                        ));
-                    }
+                Ok(None) => io::Error::new(
+                    io::ErrorKind::ConnectionReset,
+                    format!("server at {} closed the connection", self.endpoint),
+                ),
+                Err(e) => e,
+            };
+            // The first reconnect is immediate (a restarted server is the
+            // common case); later rounds back off. Failed connects burn the
+            // same budget as failed exchanges so a dead server can't loop.
+            loop {
+                if failures >= self.reconnect.retries {
+                    return Err(err);
                 }
-                Err(e) if attempt == 1 => return Err(e),
-                Err(_) => {}
+                if failures > 0 {
+                    std::thread::sleep(self.reconnect.delay(failures - 1, &mut self.rng));
+                }
+                failures += 1;
+                match Stream::connect(&self.endpoint) {
+                    Ok(s) => {
+                        self.stream = s;
+                        break;
+                    }
+                    Err(_) => continue,
+                }
             }
-            self.stream = Stream::connect(&self.endpoint)?;
         }
-        unreachable!("both attempts return or reconnect")
     }
 
     /// Map an error frame to `io::Error` (overload → `WouldBlock`, so
@@ -95,36 +176,69 @@ impl ServeClient {
     }
 
     /// Targets for `[start, start + len)` decoded straight off the wire into
-    /// a caller-owned CSR block (bit-identical to a local decode), retrying
-    /// shed (`Overloaded`) requests with linear backoff. The transport still
-    /// allocates one frame buffer per response; what this removes is the
-    /// per-position `SparseTarget` vectors.
-    pub fn read_range_into(
+    /// a caller-owned CSR block (bit-identical to a local decode), with the
+    /// request pinned to cluster `epoch` ([`NO_EPOCH`] = unpinned). Shed
+    /// (`Overloaded`) requests retry per [`ServeClient::overload`];
+    /// `WrongEpoch` answers return as data, leaving `out` cleared. The
+    /// transport still allocates one frame buffer per response; what this
+    /// removes is the per-position `SparseTarget` vectors.
+    pub fn read_range_at(
         &mut self,
         start: u64,
         len: usize,
+        epoch: u64,
         out: &mut RangeBlock,
-    ) -> io::Result<()> {
-        let req = Request::GetRange { start, len: len as u32 };
+    ) -> io::Result<RangeRead> {
+        let req = Request::GetRange { start, len: len as u32, epoch };
         let mut attempt = 0u32;
         loop {
             let frame = self.call_raw(&req)?;
             match Response::decode_targets_into(&frame, out)? {
-                None => return Ok(()),
-                Some(Response::Error { code: ErrCode::Overloaded, msg: _ })
-                    if attempt < self.overload_retries =>
-                {
-                    attempt += 1;
-                    std::thread::sleep(self.backoff * attempt);
+                RangeFrame::Targets { epoch } => return Ok(RangeRead::Targets { epoch }),
+                RangeFrame::Other(Response::WrongEpoch { epoch }) => {
+                    out.clear();
+                    return Ok(RangeRead::WrongEpoch { epoch });
                 }
-                Some(Response::Error { code, msg }) => return Err(Self::err_of(code, msg)),
-                Some(other) => {
+                RangeFrame::Other(Response::Error { code: ErrCode::Overloaded, msg: _ })
+                    if attempt < self.overload.retries =>
+                {
+                    let wait = self.overload.delay(attempt, &mut self.rng);
+                    attempt += 1;
+                    std::thread::sleep(wait);
+                }
+                RangeFrame::Other(Response::Error { code, msg }) => {
+                    return Err(Self::err_of(code, msg))
+                }
+                RangeFrame::Other(other) => {
                     return Err(io::Error::new(
                         io::ErrorKind::InvalidData,
                         format!("unexpected response to GetRange: {other:?}"),
                     ))
                 }
             }
+        }
+    }
+
+    /// Unpinned [`ServeClient::read_range_at`]: the standalone-server path,
+    /// where a `WrongEpoch` answer means the caller is talking to a cluster
+    /// member directly and should route via `cluster::ClusterReader`.
+    pub fn read_range_into(
+        &mut self,
+        start: u64,
+        len: usize,
+        out: &mut RangeBlock,
+    ) -> io::Result<()> {
+        match self.read_range_at(start, len, NO_EPOCH, out)? {
+            RangeRead::Targets { epoch: _ } => Ok(()),
+            RangeRead::WrongEpoch { epoch } => Err(io::Error::new(
+                io::ErrorKind::InvalidInput,
+                format!(
+                    "{} is a cluster member (epoch {epoch}) that does not own \
+                     [{start}, {}); route through cluster::ClusterReader",
+                    self.endpoint,
+                    start.saturating_add(len as u64),
+                ),
+            )),
         }
     }
 
@@ -135,6 +249,20 @@ impl ServeClient {
             other => Err(io::Error::new(
                 io::ErrorKind::InvalidData,
                 format!("unexpected response to GetManifest: {other:?}"),
+            )),
+        }
+    }
+
+    /// The serving cluster's shard map. Standalone servers answer
+    /// `BadRequest` (surfaced as `InvalidInput`), which is how
+    /// `ClusterReader::connect` tells a seed member from a lone server.
+    pub fn cluster_manifest(&mut self) -> io::Result<ClusterManifest> {
+        match self.call(&Request::GetCluster)? {
+            Response::Cluster(m) => Ok(m),
+            Response::Error { code, msg } => Err(Self::err_of(code, msg)),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected response to GetCluster: {other:?}"),
             )),
         }
     }
@@ -202,5 +330,56 @@ impl TargetSource for ServedReader {
 
     fn positions(&self) -> u64 {
         self.manifest.positions
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn backoff_doubles_within_jitter_band_and_caps() {
+        let b = Backoff::new(Duration::from_millis(4), Duration::from_millis(50), 8);
+        let mut rng = Pcg::new(11);
+        for attempt in 0..4 {
+            let full = Duration::from_millis(4 << attempt); // 4, 8, 16, 32 ms
+            for _ in 0..200 {
+                let d = b.delay(attempt, &mut rng);
+                assert!(d >= full / 2, "attempt {attempt}: {d:?} below half of {full:?}");
+                assert!(d < full, "attempt {attempt}: {d:?} not below {full:?}");
+            }
+        }
+        // the curve saturates at the cap (attempt 4 would be 64 ms > cap)
+        for attempt in [4, 10, 31, u32::MAX] {
+            let d = b.delay(attempt, &mut rng);
+            assert!(d >= Duration::from_millis(25) && d < Duration::from_millis(50), "{d:?}");
+        }
+    }
+
+    #[test]
+    fn backoff_huge_base_saturates_to_cap_without_overflow() {
+        let b = Backoff::new(Duration::from_secs(u64::MAX / 4), Duration::from_secs(1), 2);
+        let mut rng = Pcg::new(3);
+        let d = b.delay(20, &mut rng);
+        assert!(d >= Duration::from_millis(500) && d < Duration::from_secs(1), "{d:?}");
+    }
+
+    #[test]
+    fn backoff_zero_base_never_sleeps() {
+        let b = Backoff::new(Duration::ZERO, Duration::from_secs(1), 5);
+        let mut rng = Pcg::new(7);
+        for attempt in 0..25 {
+            assert_eq!(b.delay(attempt, &mut rng), Duration::ZERO);
+        }
+    }
+
+    #[test]
+    fn backoff_jitter_differs_across_seeds() {
+        let b = Backoff::new(Duration::from_secs(1), Duration::from_secs(60), 3);
+        let mut a = Pcg::new(1);
+        let mut c = Pcg::new(2);
+        let draws_a: Vec<Duration> = (0..8).map(|k| b.delay(k, &mut a)).collect();
+        let draws_c: Vec<Duration> = (0..8).map(|k| b.delay(k, &mut c)).collect();
+        assert_ne!(draws_a, draws_c, "independent seeds must not retry in lockstep");
     }
 }

@@ -15,19 +15,27 @@
 //!   coalescing: duplicate or overlapping range requests trigger one disk
 //!   fetch (shard-affine routing serializes same-shard work; the reader's
 //!   single-flight loads collapse cross-worker overlap).
-//! * [`client`] — blocking client with reconnect + overload backoff, and
-//!   [`ServedReader`], a [`TargetSource`](crate::cache::TargetSource)
-//!   adapter so `trainer::train_student` consumes a remote cache unchanged.
+//! * [`client`] — blocking client with jittered-backoff reconnect/overload
+//!   retries ([`Backoff`]), and [`ServedReader`], a
+//!   [`TargetSource`](crate::cache::TargetSource) adapter so
+//!   `trainer::train_student` consumes a remote cache unchanged.
 //! * [`stats`] — log₂-bucket latency histogram (p50/p99 SLO readout) and
 //!   hot-shard counters.
+//!
+//! Multiple servers over one cache directory compose into a range-partitioned
+//! cluster via [`crate::cluster`]: `Server::start_cluster` enforces shard
+//! ownership + the manifest epoch, and `cluster::ClusterReader` is the
+//! client-side routing tier (docs/SERVING.md §Cluster).
 
 pub mod client;
 pub mod protocol;
 pub mod server;
 pub mod stats;
 
-pub use client::{ServeClient, ServedReader};
-pub use protocol::{ErrCode, RemoteManifest, Request, Response, PROTOCOL_VERSION};
+pub use client::{Backoff, RangeRead, ServeClient, ServedReader};
+pub use protocol::{
+    ErrCode, RangeFrame, RemoteManifest, Request, Response, NO_EPOCH, PROTOCOL_VERSION,
+};
 pub use server::{ServeConfig, ServeSource, Server};
 pub use stats::{LatencyHistogram, ServeStats, StatsSnapshot, HIST_BUCKETS};
 
@@ -55,6 +63,28 @@ impl Endpoint {
         match unix {
             Some(p) => Endpoint::Unix(PathBuf::from(p)),
             None => Endpoint::Tcp(SocketAddr::from(([127, 0, 0, 1], port))),
+        }
+    }
+
+    /// Parse the tagged string form the `Display` impl emits
+    /// (`tcp://127.0.0.1:7400`, `unix:///run/rskd.sock`) — how endpoints are
+    /// written in cluster manifests and `--me` CLI flags. Round-trips with
+    /// `to_string` for any endpoint whose Unix path is valid UTF-8.
+    pub fn parse(s: &str) -> io::Result<Endpoint> {
+        let invalid = |msg: String| io::Error::new(io::ErrorKind::InvalidInput, msg);
+        if let Some(rest) = s.strip_prefix("tcp://") {
+            rest.parse::<SocketAddr>()
+                .map(Endpoint::Tcp)
+                .map_err(|e| invalid(format!("bad tcp endpoint {s:?}: {e}")))
+        } else if let Some(rest) = s.strip_prefix("unix://") {
+            if rest.is_empty() {
+                return Err(invalid(format!("empty unix endpoint path in {s:?}")));
+            }
+            Ok(Endpoint::Unix(PathBuf::from(rest)))
+        } else {
+            Err(invalid(format!(
+                "endpoint {s:?} must start with tcp:// or unix://"
+            )))
         }
     }
 }
@@ -118,6 +148,31 @@ impl Write for Stream {
         match self {
             Stream::Tcp(s) => s.flush(),
             Stream::Unix(s) => s.flush(),
+        }
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn endpoint_parse_roundtrips_display() {
+        for text in ["tcp://127.0.0.1:7400", "unix:///run/rskd/a.sock"] {
+            let ep = Endpoint::parse(text).unwrap();
+            assert_eq!(ep.to_string(), text);
+            assert_eq!(Endpoint::parse(&ep.to_string()).unwrap(), ep);
+        }
+        assert_eq!(
+            Endpoint::parse("tcp://127.0.0.1:7400").unwrap(),
+            Endpoint::Tcp(SocketAddr::from(([127, 0, 0, 1], 7400)))
+        );
+    }
+
+    #[test]
+    fn endpoint_parse_rejects_malformed() {
+        for text in ["", "127.0.0.1:7400", "tcp://", "tcp://nonsense", "unix://", "http://x"] {
+            assert!(Endpoint::parse(text).is_err(), "{text:?} must not parse");
         }
     }
 }

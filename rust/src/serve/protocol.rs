@@ -8,23 +8,30 @@
 //! travel as raw `f32` bits, so a served target is bit-identical to a local
 //! [`CacheReader`](crate::cache::CacheReader) decode.
 //!
-//! Requests: `GetRange` (a contiguous position range), `GetManifest` (the
-//! directory totals + kind tag, for spec/cache compatibility checks before
-//! training), `GetStats` (latency histogram + counters), `Ping`. Errors come
-//! back as typed [`Response::Error`] frames with an [`ErrCode`] — a client
-//! can distinguish transient overload (retry with backoff) from a request it
-//! must not repeat.
+//! Requests: `GetRange` (a contiguous position range, optionally pinned to a
+//! cluster-manifest epoch), `GetManifest` (the directory totals + kind tag,
+//! for spec/cache compatibility checks before training), `GetStats` (latency
+//! histogram + counters), `GetCluster` (the cluster shard map), `Ping`.
+//! Errors come back as typed [`Response::Error`] frames with an [`ErrCode`]
+//! — a client can distinguish transient overload (retry with backoff) from a
+//! request it must not repeat. A cluster member answers ranges it no longer
+//! owns — or requests pinned to a superseded epoch — with a typed
+//! [`Response::WrongEpoch`] frame carrying its current epoch, so a routed
+//! reader refetches the manifest instead of silently using a stale map.
 
 use std::io::{self, Read, Write};
 
 use crate::cache::SparseTarget;
+use crate::cluster::ClusterManifest;
 use crate::serve::stats::{StatsSnapshot, HIST_BUCKETS};
 use crate::spec::{CacheKind, SpecError};
 
 /// Current wire protocol version; bumped on any incompatible change.
-/// v2 extended the `Stats` frame with the tiered-source counters
-/// (hits/misses/backfilled/origin_computes — docs/SERVING.md).
-pub const PROTOCOL_VERSION: u8 = 2;
+/// v3 added the cluster epoch to `GetRange`/`Targets`/`Manifest`/`Stats`,
+/// plus the `GetCluster`/`Cluster` manifest exchange and the `WrongEpoch`
+/// frame (docs/SERVING.md §Cluster). v2 extended the `Stats` frame with the
+/// tiered-source counters (hits/misses/backfilled/origin_computes).
+pub const PROTOCOL_VERSION: u8 = 3;
 
 /// Hard cap on a frame payload (16 MiB): a corrupt or hostile length prefix
 /// must not allocate unboundedly.
@@ -41,13 +48,21 @@ pub const OP_GET_RANGE: u8 = 0x01;
 pub const OP_GET_MANIFEST: u8 = 0x02;
 pub const OP_GET_STATS: u8 = 0x03;
 pub const OP_PING: u8 = 0x04;
+pub const OP_GET_CLUSTER: u8 = 0x05;
 
 /// Response opcodes (high bit set).
 pub const OP_TARGETS: u8 = 0x81;
 pub const OP_MANIFEST: u8 = 0x82;
 pub const OP_STATS: u8 = 0x83;
 pub const OP_PONG: u8 = 0x84;
+pub const OP_CLUSTER: u8 = 0x85;
+pub const OP_WRONG_EPOCH: u8 = 0x86;
 pub const OP_ERROR: u8 = 0xEE;
+
+/// The epoch value meaning "no cluster": standalone servers stamp it on
+/// every `Targets` frame, and a `GetRange` carrying it skips the epoch
+/// check on cluster members (ownership is still enforced).
+pub const NO_EPOCH: u64 = 0;
 
 /// Typed error codes carried by [`Response::Error`] frames.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
@@ -92,6 +107,9 @@ pub struct RemoteManifest {
     /// canonical cache-kind string (`topk`, `rs:rounds=50,temp=1`); `None`
     /// for untagged directories
     pub kind: Option<String>,
+    /// cluster-manifest epoch the server is serving under ([`NO_EPOCH`] for
+    /// a standalone server)
+    pub epoch: u64,
 }
 
 impl RemoteManifest {
@@ -106,20 +124,41 @@ impl RemoteManifest {
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Request {
-    /// targets for `[start, start + len)`
-    GetRange { start: u64, len: u32 },
+    /// targets for `[start, start + len)`; `epoch` pins the request to a
+    /// cluster-manifest generation ([`NO_EPOCH`] = unpinned — standalone
+    /// clients, or a routed reader probing after a manifest refetch)
+    GetRange { start: u64, len: u32, epoch: u64 },
     GetManifest,
     GetStats,
+    GetCluster,
     Ping,
 }
 
 #[derive(Clone, Debug, PartialEq)]
 pub enum Response {
-    Targets(Vec<SparseTarget>),
+    /// `epoch` echoes the manifest generation the server answered under
+    /// ([`NO_EPOCH`] standalone) — a routed reader discards any answer whose
+    /// epoch disagrees with its manifest instead of mixing generations
+    Targets { epoch: u64, targets: Vec<SparseTarget> },
     Manifest(RemoteManifest),
     Stats(StatsSnapshot),
+    /// the cluster shard map (range partition + replica sets)
+    Cluster(ClusterManifest),
     Pong,
+    /// the range is pinned to a superseded epoch, or this member no longer
+    /// owns it; `epoch` is the server's current generation — refetch the
+    /// cluster manifest and re-route
+    WrongEpoch { epoch: u64 },
     Error { code: ErrCode, msg: String },
+}
+
+/// What [`Response::decode_targets_into`] found: a `Targets` frame decoded
+/// into the caller's block (with the answering epoch), or any other frame
+/// decoded normally.
+#[derive(Debug)]
+pub enum RangeFrame {
+    Targets { epoch: u64 },
+    Other(Response),
 }
 
 fn bad(msg: impl Into<String>) -> io::Error {
@@ -253,14 +292,16 @@ fn open_payload(payload: &[u8]) -> io::Result<(u8, Cursor<'_>)> {
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         match self {
-            Request::GetRange { start, len } => {
+            Request::GetRange { start, len, epoch } => {
                 let mut p = preamble(OP_GET_RANGE);
                 p.extend_from_slice(&start.to_le_bytes());
                 p.extend_from_slice(&len.to_le_bytes());
+                p.extend_from_slice(&epoch.to_le_bytes());
                 p
             }
             Request::GetManifest => preamble(OP_GET_MANIFEST),
             Request::GetStats => preamble(OP_GET_STATS),
+            Request::GetCluster => preamble(OP_GET_CLUSTER),
             Request::Ping => preamble(OP_PING),
         }
     }
@@ -268,9 +309,12 @@ impl Request {
     pub fn decode(payload: &[u8]) -> io::Result<Request> {
         let (op, mut c) = open_payload(payload)?;
         let req = match op {
-            OP_GET_RANGE => Request::GetRange { start: c.u64()?, len: c.u32()? },
+            OP_GET_RANGE => {
+                Request::GetRange { start: c.u64()?, len: c.u32()?, epoch: c.u64()? }
+            }
             OP_GET_MANIFEST => Request::GetManifest,
             OP_GET_STATS => Request::GetStats,
+            OP_GET_CLUSTER => Request::GetCluster,
             OP_PING => Request::Ping,
             other => return Err(bad(format!("unknown request opcode {other:#04x}"))),
         };
@@ -282,8 +326,9 @@ impl Request {
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
         match self {
-            Response::Targets(targets) => {
+            Response::Targets { epoch, targets } => {
                 let mut p = preamble(OP_TARGETS);
+                p.extend_from_slice(&epoch.to_le_bytes());
                 p.extend_from_slice(&(targets.len() as u32).to_le_bytes());
                 for t in targets {
                     debug_assert!(t.ids.len() < u16::MAX as usize);
@@ -310,6 +355,7 @@ impl Response {
                         p.extend_from_slice(k.as_bytes());
                     }
                 }
+                p.extend_from_slice(&m.epoch.to_le_bytes());
                 p
             }
             Response::Stats(s) => {
@@ -318,6 +364,8 @@ impl Response {
                     s.requests,
                     s.rejected,
                     s.errors,
+                    s.wrong_epoch,
+                    s.epoch,
                     s.shard_loads,
                     s.coalesced,
                     s.tier.hits,
@@ -338,7 +386,22 @@ impl Response {
                 }
                 p
             }
+            Response::Cluster(m) => {
+                // the manifest travels in its canonical JSON form — a cold,
+                // once-per-epoch exchange where self-description beats a
+                // hand-rolled binary body
+                let mut p = preamble(OP_CLUSTER);
+                let text = m.to_json_string();
+                p.extend_from_slice(&(text.len() as u32).to_le_bytes());
+                p.extend_from_slice(text.as_bytes());
+                p
+            }
             Response::Pong => preamble(OP_PONG),
+            Response::WrongEpoch { epoch } => {
+                let mut p = preamble(OP_WRONG_EPOCH);
+                p.extend_from_slice(&epoch.to_le_bytes());
+                p
+            }
             Response::Error { code, msg } => {
                 let mut p = preamble(OP_ERROR);
                 p.extend_from_slice(&(*code as u16).to_le_bytes());
@@ -352,12 +415,13 @@ impl Response {
 
     /// Encode an `OP_TARGETS` payload straight from a CSR block — the
     /// server-side symmetric of [`Response::decode_targets_into`]: byte-
-    /// identical to `Response::Targets(block.to_targets()).encode()` without
-    /// materializing the per-position vectors. Server workers call this with
-    /// a reused block, so a served range costs one decode and one encode,
-    /// no intermediate `Vec<SparseTarget>`.
-    pub fn encode_targets(block: &crate::cache::RangeBlock) -> Vec<u8> {
+    /// identical to `Response::Targets { epoch, targets: block.to_targets() }
+    /// .encode()` without materializing the per-position vectors. Server
+    /// workers call this with a reused block, so a served range costs one
+    /// decode and one encode, no intermediate `Vec<SparseTarget>`.
+    pub fn encode_targets(block: &crate::cache::RangeBlock, epoch: u64) -> Vec<u8> {
         let mut p = preamble(OP_TARGETS);
+        p.extend_from_slice(&epoch.to_le_bytes());
         p.extend_from_slice(&(block.len() as u32).to_le_bytes());
         for i in 0..block.len() {
             let (ids, probs) = block.get(i);
@@ -373,19 +437,21 @@ impl Response {
 
     /// Decode an `OP_TARGETS` frame straight into a caller-owned CSR block
     /// (probabilities from raw bits — bit-identical to [`Response::decode`]),
-    /// returning `Ok(None)`. Any other frame decodes normally and comes back
-    /// as `Ok(Some(response))` so callers can handle typed error frames.
-    /// This is the zero-allocation receive path of
+    /// returning [`RangeFrame::Targets`] with the server's answering epoch.
+    /// Any other frame decodes normally and comes back as
+    /// [`RangeFrame::Other`] so callers can handle typed error and
+    /// `WrongEpoch` frames. This is the zero-allocation receive path of
     /// `serve::ServedReader::read_range_into`.
     pub fn decode_targets_into(
         payload: &[u8],
         out: &mut crate::cache::RangeBlock,
-    ) -> io::Result<Option<Response>> {
+    ) -> io::Result<RangeFrame> {
         let (op, mut c) = open_payload(payload)?;
         if op != OP_TARGETS {
-            return Response::decode(payload).map(Some);
+            return Response::decode(payload).map(RangeFrame::Other);
         }
         out.clear();
+        let epoch = c.u64()?;
         let count = c.u32()? as usize;
         for _ in 0..count {
             let k = c.u16()? as usize;
@@ -397,13 +463,14 @@ impl Response {
             out.end_position();
         }
         c.done()?;
-        Ok(None)
+        Ok(RangeFrame::Targets { epoch })
     }
 
     pub fn decode(payload: &[u8]) -> io::Result<Response> {
         let (op, mut c) = open_payload(payload)?;
         let resp = match op {
             OP_TARGETS => {
+                let epoch = c.u64()?;
                 let count = c.u32()? as usize;
                 let mut targets = Vec::with_capacity(count.min(1 << 20));
                 for _ in 0..count {
@@ -416,7 +483,7 @@ impl Response {
                     }
                     targets.push(SparseTarget { ids, probs });
                 }
-                Response::Targets(targets)
+                Response::Targets { epoch, targets }
             }
             OP_MANIFEST => {
                 let cache_version = c.u32()?;
@@ -434,6 +501,7 @@ impl Response {
                     }
                     _ => return Err(bad("bad kind-presence flag")),
                 };
+                let epoch = c.u64()?;
                 Response::Manifest(RemoteManifest {
                     cache_version,
                     positions,
@@ -441,12 +509,15 @@ impl Response {
                     bytes,
                     shard_count,
                     kind,
+                    epoch,
                 })
             }
             OP_STATS => {
                 let requests = c.u64()?;
                 let rejected = c.u64()?;
                 let errors = c.u64()?;
+                let wrong_epoch = c.u64()?;
+                let epoch = c.u64()?;
                 let shard_loads = c.u64()?;
                 let coalesced = c.u64()?;
                 let tier = crate::cache::TierCounters {
@@ -474,6 +545,8 @@ impl Response {
                     requests,
                     rejected,
                     errors,
+                    wrong_epoch,
+                    epoch,
                     shard_loads,
                     coalesced,
                     tier,
@@ -481,7 +554,14 @@ impl Response {
                     hot,
                 })
             }
+            OP_CLUSTER => {
+                let n = c.u32()? as usize;
+                let text = std::str::from_utf8(c.take(n)?)
+                    .map_err(|_| bad("non-utf8 cluster manifest"))?;
+                Response::Cluster(ClusterManifest::from_json_str(text).map_err(bad)?)
+            }
             OP_PONG => Response::Pong,
+            OP_WRONG_EPOCH => Response::WrongEpoch { epoch: c.u64()? },
             OP_ERROR => {
                 let code = ErrCode::from_u16(c.u16()?).unwrap_or(ErrCode::Internal);
                 let n = c.u16()? as usize;
@@ -509,9 +589,11 @@ mod tests {
 
     #[test]
     fn request_roundtrip() {
-        roundtrip_req(Request::GetRange { start: 123_456_789, len: 512 });
+        roundtrip_req(Request::GetRange { start: 123_456_789, len: 512, epoch: NO_EPOCH });
+        roundtrip_req(Request::GetRange { start: 7, len: 1, epoch: u64::MAX });
         roundtrip_req(Request::GetManifest);
         roundtrip_req(Request::GetStats);
+        roundtrip_req(Request::GetCluster);
         roundtrip_req(Request::Ping);
     }
 
@@ -522,10 +604,12 @@ mod tests {
             SparseTarget::default(), // empty target (missing position)
             SparseTarget { ids: vec![7], probs: vec![f32::MIN_POSITIVE] },
         ];
-        let encoded = Response::Targets(targets.clone()).encode();
-        let Response::Targets(back) = Response::decode(&encoded).unwrap() else {
+        let encoded = Response::Targets { epoch: 7, targets: targets.clone() }.encode();
+        let Response::Targets { epoch, targets: back } = Response::decode(&encoded).unwrap()
+        else {
             panic!("wrong variant")
         };
+        assert_eq!(epoch, 7);
         assert_eq!(back, targets);
         // bit-exactness, not approximate equality
         assert_eq!(back[2].probs[0].to_bits(), f32::MIN_POSITIVE.to_bits());
@@ -543,11 +627,13 @@ mod tests {
         for t in &targets {
             block.push_target(t);
         }
-        assert_eq!(
-            Response::encode_targets(&block),
-            Response::Targets(targets).encode(),
-            "block encode must be byte-identical to the Vec<SparseTarget> encode"
-        );
+        for epoch in [NO_EPOCH, 3] {
+            assert_eq!(
+                Response::encode_targets(&block, epoch),
+                Response::Targets { epoch, targets: targets.clone() }.encode(),
+                "block encode must be byte-identical to the Vec<SparseTarget> encode"
+            );
+        }
     }
 
     #[test]
@@ -558,18 +644,34 @@ mod tests {
             SparseTarget::default(),
             SparseTarget { ids: vec![7], probs: vec![1e-7] },
         ];
-        let payload = Response::Targets(targets.clone()).encode();
+        let payload = Response::Targets { epoch: 5, targets: targets.clone() }.encode();
         let mut block = RangeBlock::new();
-        assert!(Response::decode_targets_into(&payload, &mut block).unwrap().is_none());
+        let RangeFrame::Targets { epoch } =
+            Response::decode_targets_into(&payload, &mut block).unwrap()
+        else {
+            panic!("expected a decoded Targets frame")
+        };
+        assert_eq!(epoch, 5);
         assert_eq!(block.to_targets(), targets);
         let (_, probs0) = block.get(0);
         assert_eq!(probs0[1].to_bits(), f32::MIN_POSITIVE.to_bits());
         // non-Targets frames decode normally and are handed back
         let err = Response::Error { code: ErrCode::Overloaded, msg: "full".into() }.encode();
-        let back = Response::decode_targets_into(&err, &mut block).unwrap();
-        assert_eq!(back, Some(Response::Error { code: ErrCode::Overloaded, msg: "full".into() }));
+        let RangeFrame::Other(back) =
+            Response::decode_targets_into(&err, &mut block).unwrap()
+        else {
+            panic!("expected a passed-through frame")
+        };
+        assert_eq!(back, Response::Error { code: ErrCode::Overloaded, msg: "full".into() });
+        // WrongEpoch is a passed-through frame too, not a decode error
+        let we = Response::WrongEpoch { epoch: 9 }.encode();
+        let RangeFrame::Other(back) = Response::decode_targets_into(&we, &mut block).unwrap()
+        else {
+            panic!("expected a passed-through frame")
+        };
+        assert_eq!(back, Response::WrongEpoch { epoch: 9 });
         // trailing garbage in a Targets frame is rejected
-        let mut bad = Response::Targets(targets).encode();
+        let mut bad = Response::Targets { epoch: 5, targets }.encode();
         bad.push(0);
         assert!(Response::decode_targets_into(&bad, &mut block).is_err());
     }
@@ -583,6 +685,7 @@ mod tests {
             bytes: 2_473_917,
             shard_count: 4,
             kind: Some("rs:rounds=50,temp=1".into()),
+            epoch: 12,
         }));
         roundtrip_resp(Response::Manifest(RemoteManifest {
             cache_version: 1,
@@ -591,7 +694,40 @@ mod tests {
             bytes: 100,
             shard_count: 1,
             kind: None,
+            epoch: NO_EPOCH,
         }));
+    }
+
+    #[test]
+    fn wrong_epoch_roundtrip() {
+        roundtrip_resp(Response::WrongEpoch { epoch: 1 });
+        roundtrip_resp(Response::WrongEpoch { epoch: u64::MAX });
+    }
+
+    #[test]
+    fn cluster_manifest_roundtrip() {
+        use crate::cluster::{ClusterManifest, ShardSpec};
+        use crate::serve::Endpoint;
+        let m = ClusterManifest::new(
+            3,
+            vec![
+                ShardSpec {
+                    lo: 0,
+                    hi: 1024,
+                    endpoints: vec![
+                        Endpoint::parse("unix:///tmp/a.sock").unwrap(),
+                        Endpoint::parse("tcp://127.0.0.1:7401").unwrap(),
+                    ],
+                },
+                ShardSpec {
+                    lo: 1024,
+                    hi: 4096,
+                    endpoints: vec![Endpoint::parse("tcp://127.0.0.1:7402").unwrap()],
+                },
+            ],
+        )
+        .unwrap();
+        roundtrip_resp(Response::Cluster(m));
     }
 
     #[test]
@@ -604,6 +740,7 @@ mod tests {
             bytes: 1,
             shard_count: 1,
             kind: kind.map(|s| s.to_string()),
+            epoch: NO_EPOCH,
         };
         assert_eq!(
             m(Some("rs:rounds=50,temp=0.8"), 0).cache_kind().unwrap(),
@@ -620,6 +757,8 @@ mod tests {
             requests: 100,
             rejected: 3,
             errors: 1,
+            wrong_epoch: 2,
+            epoch: 4,
             shard_loads: 8,
             coalesced: 5,
             tier: crate::cache::TierCounters {

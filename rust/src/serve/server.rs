@@ -41,6 +41,13 @@
 //!
 //! Manifest/stats/ping requests are answered inline on the connection
 //! thread; only range reads go through the worker pool.
+//!
+//! Started via [`Server::start_cluster`], the same server becomes a cluster
+//! member: each `GetRange` is admission-checked against a shared
+//! [`ClusterControl`] (manifest epoch + owned ranges; failures answer a
+//! typed `WrongEpoch` frame), responses carry the admission-time epoch, and
+//! `GetCluster` serves the shard map (standalone servers answer it
+//! `BadRequest`). See [`crate::cluster`].
 
 use std::net::{TcpListener, TcpStream};
 use std::os::unix::net::{UnixListener, UnixStream};
@@ -54,8 +61,9 @@ use crate::cache::{
     CacheReader, DynSource, ProbCodec, RangeBlock, RingBuffer, TargetSource, TierCounters,
     WriteThrough,
 };
+use crate::cluster::ClusterControl;
 use crate::serve::protocol::{
-    read_frame, write_frame, ErrCode, RemoteManifest, Request, Response, MAX_FRAME,
+    read_frame, write_frame, ErrCode, RemoteManifest, Request, Response, MAX_FRAME, NO_EPOCH,
     PROTOCOL_VERSION,
 };
 use crate::serve::stats::{ServeStats, StatsSnapshot};
@@ -116,6 +124,7 @@ impl ServeSource for CacheReader {
             bytes: self.bytes,
             shard_count: self.shard_count() as u32,
             kind: self.kind.clone(),
+            epoch: NO_EPOCH,
         }
     }
 
@@ -165,6 +174,7 @@ impl ServeSource for WriteThrough<DynSource> {
             bytes: self.flushed_bytes(),
             shard_count: ServeSource::shard_count(self) as u32,
             kind: self.kind_tag().map(|s| s.to_string()),
+            epoch: NO_EPOCH,
         }
     }
 
@@ -229,6 +239,9 @@ impl Default for ServeConfig {
 struct Job {
     start: u64,
     len: usize,
+    /// cluster epoch stamped at admission time (the epoch the request was
+    /// checked against); `NO_EPOCH` on standalone servers
+    epoch: u64,
     done: mpsc::SyncSender<Result<Vec<u8>, String>>,
 }
 
@@ -240,6 +253,9 @@ struct Shared {
     shutdown: AtomicBool,
     /// connection threads, joined at shutdown (accept thread pushes)
     conns: Mutex<Vec<JoinHandle<()>>>,
+    /// cluster membership: epoch + owned-range enforcement
+    /// (`None` = standalone server, everything admitted under `NO_EPOCH`)
+    cluster: Option<Arc<ClusterControl>>,
 }
 
 enum Listener {
@@ -269,6 +285,30 @@ impl Server {
         endpoint: Endpoint,
         cfg: ServeConfig,
     ) -> std::io::Result<Server> {
+        Server::start_with(source, endpoint, cfg, None)
+    }
+
+    /// Like [`Server::start`], but as a member of a cluster: every
+    /// `GetRange` is admission-checked against `control` (manifest epoch +
+    /// owned ranges — failures answer a typed `WrongEpoch` frame), responses
+    /// are stamped with the admission-time epoch, and `GetCluster` serves
+    /// the shard map. The caller keeps its own `Arc` to the control and
+    /// drives [`ClusterControl::update`] on rebalances.
+    pub fn start_cluster<S: ServeSource>(
+        source: Arc<S>,
+        endpoint: Endpoint,
+        cfg: ServeConfig,
+        control: Arc<ClusterControl>,
+    ) -> std::io::Result<Server> {
+        Server::start_with(source, endpoint, cfg, Some(control))
+    }
+
+    fn start_with<S: ServeSource>(
+        source: Arc<S>,
+        endpoint: Endpoint,
+        cfg: ServeConfig,
+        cluster: Option<Arc<ClusterControl>>,
+    ) -> std::io::Result<Server> {
         let source: Arc<dyn ServeSource> = source;
         let workers = cfg.workers.max(1);
         let (listener, endpoint, unix_path) = match &endpoint {
@@ -293,6 +333,7 @@ impl Server {
             queues,
             shutdown: AtomicBool::new(false),
             conns: Mutex::new(Vec::new()),
+            cluster,
         });
         let worker_handles = (0..workers)
             .map(|i| {
@@ -322,7 +363,12 @@ impl Server {
     /// counters) — same data the `Stats` wire frame carries.
     pub fn stats_snapshot(&self) -> StatsSnapshot {
         let (loads, coalesced) = self.shared.source.load_counters();
-        self.shared.stats.snapshot_with(loads, coalesced, self.shared.source.tier_counters())
+        self.shared.stats.snapshot_with(
+            loads,
+            coalesced,
+            self.shared.source.tier_counters(),
+            epoch_of(&self.shared),
+        )
     }
 
     /// Stop accepting, drain in-flight requests, join every thread, and (for
@@ -400,7 +446,7 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize) {
             shared
                 .source
                 .read_range_into(job.start, job.len, &mut block)
-                .map(|()| Response::encode_targets(&block))
+                .map(|()| Response::encode_targets(&block, job.epoch))
         }))
         .unwrap_or_else(|_| {
             Err(std::io::Error::new(
@@ -477,24 +523,50 @@ fn conn_loop(mut stream: Stream, shared: &Arc<Shared>) {
 /// Answer one request with a fully encoded response payload (range reads
 /// come back pre-encoded from the worker pool, so the connection thread
 /// never re-materializes targets).
+/// The cluster epoch this server currently serves under (`NO_EPOCH` when
+/// standalone).
+fn epoch_of(shared: &Shared) -> u64 {
+    shared.cluster.as_ref().map_or(NO_EPOCH, |c| c.epoch())
+}
+
 fn handle_request(req: Request, shared: &Arc<Shared>) -> Vec<u8> {
     match req {
         Request::Ping => Response::Pong.encode(),
-        Request::GetManifest => Response::Manifest(shared.source.remote_manifest()).encode(),
+        Request::GetManifest => {
+            let mut m = shared.source.remote_manifest();
+            // a cluster member advertises the epoch it serves under, so
+            // manifest-level health checks can see a rebalance land
+            m.epoch = epoch_of(shared);
+            Response::Manifest(m).encode()
+        }
         Request::GetStats => {
             let (loads, coalesced) = shared.source.load_counters();
             Response::Stats(shared.stats.snapshot_with(
                 loads,
                 coalesced,
                 shared.source.tier_counters(),
+                epoch_of(shared),
             ))
             .encode()
         }
-        Request::GetRange { start, len } => serve_range(shared, start, len as usize),
+        Request::GetCluster => match &shared.cluster {
+            Some(ctl) => Response::Cluster(ctl.manifest()).encode(),
+            None => {
+                shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                Response::Error {
+                    code: ErrCode::BadRequest,
+                    msg: "not a cluster member (standalone server)".into(),
+                }
+                .encode()
+            }
+        },
+        Request::GetRange { start, len, epoch } => {
+            serve_range(shared, start, len as usize, epoch)
+        }
     }
 }
 
-fn serve_range(shared: &Arc<Shared>, start: u64, len: usize) -> Vec<u8> {
+fn serve_range(shared: &Arc<Shared>, start: u64, len: usize, req_epoch: u64) -> Vec<u8> {
     if len > shared.cfg.max_range {
         shared.stats.errors.fetch_add(1, Ordering::Relaxed);
         return Response::Error {
@@ -512,10 +584,26 @@ fn serve_range(shared: &Arc<Shared>, start: u64, len: usize) -> Vec<u8> {
         }
         .encode();
     };
+    // Cluster admission: refuse stale epoch pins and unowned ranges with a
+    // typed WrongEpoch frame. The admitted epoch is stamped into the job
+    // (and thus the response) *here* — if a rebalance lands while the job is
+    // queued, the response still carries the epoch it was admitted under,
+    // and the reader-side pin check discards it. Standalone servers admit
+    // everything under NO_EPOCH.
+    let epoch = match &shared.cluster {
+        None => NO_EPOCH,
+        Some(ctl) => match ctl.check_range(req_epoch, start, end) {
+            Ok(current) => current,
+            Err(current) => {
+                shared.stats.wrong_epoch.fetch_add(1, Ordering::Relaxed);
+                return Response::WrongEpoch { epoch: current }.encode();
+            }
+        },
+    };
     let t0 = Instant::now();
     let worker = route(&*shared.source, start, shared.queues.len());
     let (tx, rx) = mpsc::sync_channel(1);
-    let job = Job { start, len, done: tx };
+    let job = Job { start, len, epoch, done: tx };
     if shared.queues[worker].try_push(job).is_err() {
         shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
         return Response::Error {

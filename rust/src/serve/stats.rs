@@ -59,6 +59,9 @@ pub struct ServeStats {
     pub rejected: AtomicU64,
     /// requests answered with a non-overload error frame
     pub errors: AtomicU64,
+    /// requests answered `WrongEpoch` (stale manifest pin, or a range this
+    /// cluster member no longer owns) — zero on standalone servers
+    pub wrong_epoch: AtomicU64,
     pub hist: LatencyHistogram,
     hot: Vec<AtomicU64>,
 }
@@ -69,6 +72,7 @@ impl ServeStats {
             requests: AtomicU64::new(0),
             rejected: AtomicU64::new(0),
             errors: AtomicU64::new(0),
+            wrong_epoch: AtomicU64::new(0),
             hist: LatencyHistogram::default(),
             hot: (0..shard_count).map(|_| AtomicU64::new(0)).collect(),
         }
@@ -81,18 +85,23 @@ impl ServeStats {
     }
 
     /// Freeze every counter, folding in the reader-level counters the server
-    /// tracks (total shard decodes; in-flight loads coalesced away) and the
-    /// tier counters of the served source (all zero for a plain disk cache).
+    /// tracks (total shard decodes; in-flight loads coalesced away), the
+    /// tier counters of the served source (all zero for a plain disk cache),
+    /// and the cluster epoch the server currently serves under
+    /// (`NO_EPOCH` = standalone).
     pub fn snapshot_with(
         &self,
         shard_loads: u64,
         coalesced: u64,
         tier: TierCounters,
+        epoch: u64,
     ) -> StatsSnapshot {
         StatsSnapshot {
             requests: self.requests.load(Ordering::Relaxed),
             rejected: self.rejected.load(Ordering::Relaxed),
             errors: self.errors.load(Ordering::Relaxed),
+            wrong_epoch: self.wrong_epoch.load(Ordering::Relaxed),
+            epoch,
             shard_loads,
             coalesced,
             tier,
@@ -108,6 +117,10 @@ pub struct StatsSnapshot {
     pub requests: u64,
     pub rejected: u64,
     pub errors: u64,
+    /// requests answered with a `WrongEpoch` frame (cluster members only)
+    pub wrong_epoch: u64,
+    /// the cluster-manifest epoch served under (`NO_EPOCH` = standalone)
+    pub epoch: u64,
     /// underlying shard decodes performed by the served `CacheReader`
     pub shard_loads: u64,
     /// shard requests coalesced onto another thread's in-flight decode
@@ -193,7 +206,7 @@ mod tests {
             stats.hist.record(Duration::from_micros(8));
         }
         stats.hist.record(Duration::from_micros(2000));
-        let s = stats.snapshot_with(0, 0, TierCounters::default());
+        let s = stats.snapshot_with(0, 0, TierCounters::default(), 0);
         assert_eq!(s.samples(), 100);
         assert_eq!(s.p50_us(), Some(16)); // upper edge of bucket 3
         assert_eq!(s.p99_us(), Some(16)); // rank 99 is still a fast sample
@@ -209,7 +222,8 @@ mod tests {
         }
         stats.touch_shard(0);
         stats.touch_shard(99); // out of range: ignored, not a panic
-        let s = stats.snapshot_with(0, 0, TierCounters::default());
+        let s = stats.snapshot_with(0, 0, TierCounters::default(), 7);
+        assert_eq!((s.epoch, s.wrong_epoch), (7, 0));
         assert_eq!(s.hot_shards(10), vec![(2, 5), (0, 1)]);
         assert_eq!(s.hot_shards(1), vec![(2, 5)]);
     }

@@ -271,3 +271,75 @@ fn offline_build_resumes_from_write_through_coverage() {
     let _ = std::fs::remove_dir_all(&golden);
     let _ = std::fs::remove_dir_all(&dir);
 }
+
+/// Satellite: `Coverage` round-trips through the `index.json` `covered`
+/// field. A checkpointed partial session's exact runs — including a run
+/// produced by merging two adjacent reads — survive the manifest and are
+/// re-adopted by a reopened stack; full coverage round-trips as the single
+/// `[0, n)` run with every `covered` entry elided (fully-covered shards
+/// carry no range list).
+#[test]
+fn coverage_round_trips_through_index_json_covered_field() {
+    use rskd::cache::CacheManifest;
+
+    let (n, pps) = (128u64, 32usize);
+    let dir = tmp_dir("covjson");
+    let partial = {
+        let wt = WriteThrough::open(
+            GoldenOrigin::new(n),
+            &dir,
+            CODEC,
+            pps,
+            Some("rs:rounds=50,temp=1".into()),
+        )
+        .unwrap();
+        let mut blk = RangeBlock::new();
+        wt.read_range_into(10, 20, &mut blk).unwrap(); // [10, 30)
+        wt.read_range_into(30, 10, &mut blk).unwrap(); // adjacent: merges to [10, 40)
+        wt.read_range_into(90, 12, &mut blk).unwrap(); // [90, 102), spans shards 2 and 3
+        wt.read_range_into(5, 0, &mut blk).unwrap(); // zero-length: must not mark anything
+        wt.checkpoint().unwrap();
+        wt.coverage()
+    };
+    assert_eq!(partial.ranges(), &[(10, 40), (90, 102)]);
+
+    // the manifest records exactly those runs, clipped per shard
+    let manifest = CacheManifest::load(&dir).unwrap();
+    let mut persisted = rskd::cache::Coverage::new();
+    for s in &manifest.shards {
+        match &s.covered {
+            Some(runs) => {
+                for &(lo, hi) in runs {
+                    assert!(s.start <= lo && hi <= s.start + s.count, "covered run outside shard");
+                    persisted.insert(lo, hi);
+                }
+            }
+            None => persisted.insert(s.start, s.start + s.count),
+        }
+    }
+    assert_eq!(persisted, partial, "index.json must carry the exact coverage");
+
+    // a reopened stack adopts the persisted coverage and serves those runs
+    // without recomputing them
+    {
+        let origin = GoldenOrigin::new(n);
+        let wt = WriteThrough::open(&origin, &dir, CODEC, pps, None).unwrap();
+        assert_eq!(wt.coverage(), partial, "reopen must adopt the persisted runs");
+        let mut blk = RangeBlock::new();
+        wt.read_range_into(10, 30, &mut blk).unwrap();
+        wt.read_range_into(90, 12, &mut blk).unwrap();
+        assert_eq!(origin.computes.load(Ordering::Relaxed), 0, "covered runs must not recompute");
+
+        // drive to full coverage and checkpoint again
+        wt.read_range_into(0, n as usize, &mut blk).unwrap();
+        wt.checkpoint().unwrap();
+        assert_eq!(wt.coverage().ranges(), &[(0, n)], "full keyspace must be one run");
+    }
+    let manifest = CacheManifest::load(&dir).unwrap();
+    assert!(
+        manifest.shards.iter().all(|s| s.covered.is_none()),
+        "fully-covered shards must elide the `covered` list"
+    );
+    assert_eq!(manifest.shards.iter().map(|s| s.count).sum::<u64>(), n);
+    let _ = std::fs::remove_dir_all(&dir);
+}

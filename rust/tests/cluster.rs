@@ -1,0 +1,266 @@
+//! Integration tests for the sharded cache cluster (`rskd::cluster`):
+//! in-process multi-server fleets over unix sockets, asserting the three
+//! cluster contracts end to end —
+//!
+//! 1. a 3-server range-partitioned cluster is byte-identical to a single
+//!    `CacheReader` over the same directory (including shard-spanning and
+//!    past-the-end ranges);
+//! 2. killing one replica of a hot shard loses no requests (failover to the
+//!    surviving replica);
+//! 3. a mid-run rebalance (epoch bump) completes with zero stale reads:
+//!    every accepted response carries the new epoch, stale answers are
+//!    rejected and re-routed.
+//!
+//! Plus wire-level checks of the epoch protocol (`WrongEpoch` frames,
+//! `GetCluster` on members vs standalone servers).
+
+use std::path::PathBuf;
+use std::sync::Arc;
+
+use rskd::cache::{CacheReader, CacheWriter, ProbCodec, RangeBlock, SparseTarget, TargetSource};
+use rskd::cluster::{partition, rotate, ClusterControl, ClusterManifest, ClusterReader, ShardSpec};
+use rskd::serve::{Endpoint, RangeRead, ServeClient, ServeConfig, Server, NO_EPOCH};
+
+fn tdir(tag: &str) -> PathBuf {
+    let dir = std::env::temp_dir().join(format!("rskd-cluster-{tag}-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    dir
+}
+
+fn target_for(pos: u64) -> SparseTarget {
+    SparseTarget {
+        ids: vec![pos as u32 % 97, 200 + (pos as u32 % 7), 400],
+        probs: vec![20.0 / 50.0, 10.0 / 50.0, 5.0 / 50.0],
+    }
+}
+
+/// `n` positions in shards of 16, tagged as an RS-50 cache.
+fn build_cache(dir: &std::path::Path, n: u64) {
+    let w = CacheWriter::create_with_kind(
+        dir,
+        ProbCodec::Count { rounds: 50 },
+        16,
+        32,
+        Some("rs:rounds=50,temp=1".into()),
+    )
+    .unwrap();
+    for pos in 0..n {
+        assert!(w.push(pos, target_for(pos)));
+    }
+    w.finish().unwrap();
+}
+
+fn sock(dir: &std::path::Path, i: usize) -> Endpoint {
+    Endpoint::Unix(dir.join(format!("m{i}.sock")))
+}
+
+/// Start one cluster member: its own `CacheReader` over the shared
+/// directory, its own control. Returns `(server, control)`.
+fn start_member(
+    dir: &std::path::Path,
+    manifest: &ClusterManifest,
+    me: Endpoint,
+) -> (Server, Arc<ClusterControl>) {
+    let reader = Arc::new(CacheReader::open(dir).unwrap());
+    let control = Arc::new(ClusterControl::new(manifest.clone(), me.clone()));
+    let server =
+        Server::start_cluster(reader, me, ServeConfig::default(), Arc::clone(&control)).unwrap();
+    (server, control)
+}
+
+#[test]
+fn three_server_cluster_byte_identical_to_single_reader() {
+    let dir = tdir("ident");
+    build_cache(&dir, 400);
+    let eps: Vec<Endpoint> = (0..3).map(|i| sock(&dir, i)).collect();
+    let manifest = partition(400, &eps).unwrap();
+    let _members: Vec<(Server, Arc<ClusterControl>)> =
+        eps.iter().map(|ep| start_member(&dir, &manifest, ep.clone())).collect();
+
+    // bootstrap from a single seed member (GetCluster + GetManifest)
+    let cluster = ClusterReader::connect(&eps[1]).unwrap();
+    assert_eq!(cluster.manifest_epoch(), 1);
+    assert_eq!(TargetSource::positions(&cluster), 400);
+    assert_eq!(cluster.cache_kind().unwrap().to_string(), "rs:rounds=50,temp=1");
+
+    let direct = CacheReader::open(&dir).unwrap();
+    // in-shard, shard-spanning, whole-keyspace, tail-into-empty, and fully
+    // past-the-end ranges — all must match a local reader byte-for-byte
+    let sweep: &[(u64, usize)] =
+        &[(0, 40), (120, 60), (100, 300), (0, 400), (390, 40), (400, 8), (1000, 4), (7, 1)];
+    for &(start, len) in sweep {
+        let routed = cluster.try_get_range(start, len).unwrap();
+        let local = direct.get_range(start, len);
+        assert_eq!(routed, local, "range [{start}, +{len}) must be byte-identical");
+    }
+    // the zero-allocation path answers the same bytes as the vec path
+    let mut block = RangeBlock::new();
+    TargetSource::read_range_into(&cluster, 100, 300, &mut block).unwrap();
+    assert_eq!(block.to_targets(), direct.get_range(100, 300));
+
+    let counters = cluster.counters();
+    assert!(counters.requests >= sweep.len() as u64, "{counters:?}");
+    assert_eq!(counters.stale_rejected, 0, "no rebalance ran: {counters:?}");
+    assert_eq!(counters.failovers, 0, "every member stayed up: {counters:?}");
+    // the whole-keyspace reads touched every member
+    assert_eq!(cluster.served_by().len(), 3, "{:?}", cluster.served_by());
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn replica_failover_loses_no_requests() {
+    let dir = tdir("failover");
+    build_cache(&dir, 320);
+    let (a, b, c) = (sock(&dir, 0), sock(&dir, 1), sock(&dir, 2));
+    // shard 0 is "hot": replicated on A and B; shard 1 only on C
+    let manifest = ClusterManifest::new(
+        1,
+        vec![
+            ShardSpec { lo: 0, hi: 200, endpoints: vec![a.clone(), b.clone()] },
+            ShardSpec { lo: 200, hi: 320, endpoints: vec![c.clone()] },
+        ],
+    )
+    .unwrap();
+    let (_sa, _ca) = start_member(&dir, &manifest, a);
+    let (sb, _cb) = start_member(&dir, &manifest, b);
+    let (_sc, _cc) = start_member(&dir, &manifest, c);
+
+    let cluster = ClusterReader::from_manifest(manifest).unwrap();
+    let direct = CacheReader::open(&dir).unwrap();
+
+    // with both replicas up, round-robin spreads the hot range across them
+    for i in 0..8u64 {
+        let start = (i * 13) % 150;
+        assert_eq!(cluster.try_get_range(start, 40).unwrap(), direct.get_range(start, 40));
+    }
+    let warm = cluster.counters();
+    assert!(warm.replica_served > 0, "round-robin must use the replica: {warm:?}");
+    assert_eq!(warm.failovers, 0, "{warm:?}");
+
+    // kill replica B mid-run: every subsequent hot-range request must still
+    // succeed (failover to A) — degraded latency, zero lost requests
+    drop(sb);
+    for i in 0..16u64 {
+        let start = (i * 11) % 150;
+        assert_eq!(
+            cluster.try_get_range(start, 40).unwrap(),
+            direct.get_range(start, 40),
+            "request after replica death must be served by the survivor"
+        );
+    }
+    let after = cluster.counters();
+    assert!(after.failovers > 0, "the dead replica must have been skipped: {after:?}");
+    assert_eq!(after.stale_rejected, 0, "failover is not an epoch event: {after:?}");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn rebalance_epoch_bump_zero_stale_reads() {
+    let dir = tdir("rebalance");
+    build_cache(&dir, 256);
+    let eps: Vec<Endpoint> = (0..2).map(|i| sock(&dir, i)).collect();
+    let manifest = partition(256, &eps).unwrap();
+    let members: Vec<(Server, Arc<ClusterControl>)> =
+        eps.iter().map(|ep| start_member(&dir, &manifest, ep.clone())).collect();
+
+    let cluster = ClusterReader::from_manifest(manifest.clone()).unwrap();
+    let direct = CacheReader::open(&dir).unwrap();
+    assert_eq!(cluster.try_get_range(0, 256).unwrap(), direct.get_range(0, 256));
+    assert_eq!(cluster.manifest_epoch(), 1);
+
+    // mid-run rebalance: every shard changes owner, epoch 1 -> 2; the test
+    // applies it straight to the members' controls (the CLI's manifest-file
+    // poller is just another caller of the same update path)
+    let rotated = rotate(&manifest).unwrap();
+    for (_, control) in &members {
+        control.update(rotated.clone()).unwrap();
+    }
+
+    // the reader still holds the epoch-1 map: its next pinned request must
+    // be refused, the manifest refetched, and the read completed under
+    // epoch 2 with identical bytes — stale data is never accepted
+    for &(start, len) in &[(0u64, 96usize), (64, 128), (0, 256), (200, 80)] {
+        assert_eq!(
+            cluster.try_get_range(start, len).unwrap(),
+            direct.get_range(start, len),
+            "range [{start}, +{len}) after rebalance"
+        );
+    }
+    assert_eq!(cluster.manifest_epoch(), 2, "reader must finish on the new epoch");
+    let counters = cluster.counters();
+    assert!(counters.stale_rejected >= 1, "the bump must have been observed: {counters:?}");
+    assert!(counters.refetches >= 1, "{counters:?}");
+
+    // server-side observability agrees: WrongEpoch answers were counted and
+    // both members now serve (and stamp stats with) epoch 2
+    let snaps: Vec<_> = members.iter().map(|(s, _)| s.stats_snapshot()).collect();
+    assert!(snaps.iter().any(|s| s.wrong_epoch > 0), "no member refused the stale pin");
+    assert!(snaps.iter().all(|s| s.epoch == 2), "all members must report epoch 2");
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
+fn wire_level_epoch_protocol() {
+    let dir = tdir("wire");
+    build_cache(&dir, 200);
+    let eps: Vec<Endpoint> = (0..2).map(|i| sock(&dir, i)).collect();
+    let manifest = partition(200, &eps).unwrap();
+    // member 0 owns [0, 100); member 1 owns [100, 200)
+    let (_s0, _c0) = start_member(&dir, &manifest, eps[0].clone());
+
+    let mut client = ServeClient::connect(&eps[0]).unwrap();
+    let mut block = RangeBlock::new();
+
+    // correctly pinned owned range: targets stamped with the epoch
+    assert_eq!(
+        client.read_range_at(10, 20, 1, &mut block).unwrap(),
+        RangeRead::Targets { epoch: 1 }
+    );
+    assert_eq!(block.len(), 20);
+    // stale pin on an owned range: typed WrongEpoch carrying the current epoch
+    assert_eq!(
+        client.read_range_at(10, 20, 99, &mut block).unwrap(),
+        RangeRead::WrongEpoch { epoch: 1 }
+    );
+    assert!(block.is_empty(), "WrongEpoch must leave the block cleared");
+    // unpinned probe: epoch check skipped, ownership still enforced
+    assert_eq!(
+        client.read_range_at(10, 20, NO_EPOCH, &mut block).unwrap(),
+        RangeRead::Targets { epoch: 1 }
+    );
+    assert_eq!(
+        client.read_range_at(150, 20, NO_EPOCH, &mut block).unwrap(),
+        RangeRead::WrongEpoch { epoch: 1 },
+        "member 0 does not own [100, 200)"
+    );
+    // a member serves its shard map over the wire
+    assert_eq!(client.cluster_manifest().unwrap(), manifest);
+    assert_eq!(client.manifest().unwrap().epoch, 1);
+
+    // a standalone server: no epochs anywhere, GetCluster is a typed error
+    let sdir = tdir("wire-standalone");
+    build_cache(&sdir, 64);
+    let reader = Arc::new(CacheReader::open(&sdir).unwrap());
+    let server = Server::start(
+        reader,
+        Endpoint::Tcp(std::net::SocketAddr::from(([127, 0, 0, 1], 0))),
+        ServeConfig::default(),
+    )
+    .unwrap();
+    let mut lone = ServeClient::connect(server.endpoint()).unwrap();
+    let err = lone.cluster_manifest().unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput, "{err}");
+    assert_eq!(lone.manifest().unwrap().epoch, NO_EPOCH);
+    assert_eq!(
+        lone.read_range_at(0, 8, NO_EPOCH, &mut block).unwrap(),
+        RangeRead::Targets { epoch: NO_EPOCH }
+    );
+    // pinning an epoch at a standalone server is meaningless but answered
+    // (NO_EPOCH servers admit everything; the response carries NO_EPOCH)
+    assert_eq!(
+        lone.read_range_at(0, 8, 7, &mut block).unwrap(),
+        RangeRead::Targets { epoch: NO_EPOCH }
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+    let _ = std::fs::remove_dir_all(&sdir);
+}

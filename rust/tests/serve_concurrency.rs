@@ -160,7 +160,7 @@ fn admission_control_sheds_load_with_typed_overload() {
             let overloaded = &overloaded;
             s.spawn(move || {
                 let mut client = ServeClient::connect(endpoint).unwrap();
-                client.overload_retries = 0; // surface the first shed
+                client.overload.retries = 0; // surface the first shed
                 barrier.wait();
                 // all clients hammer the same cold shard
                 match client.get_range(c % 4, 8) {
