@@ -8,6 +8,8 @@
 //! # live serving stats from a running `rskd serve` (docs/SERVING.md):
 //! cargo run --release --example cache_inspect -- --stats --port 7411
 //! cargo run --release --example cache_inspect -- --stats --unix /tmp/rskd.sock
+//! # the unified cross-layer metrics registry (docs/OBSERVABILITY.md):
+//! cargo run --release --example cache_inspect -- --metrics --port 7411
 //! ```
 
 use anyhow::Result;
@@ -84,10 +86,55 @@ fn stats_mode(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--metrics`: fetch the remote process's unified registry (`GetMetrics`,
+/// docs/OBSERVABILITY.md) and render every series — the cross-layer view
+/// (serve + cache tier + cluster + trainer) that the per-snapshot `--stats`
+/// screen cannot show. Histogram buckets are summarized to quantiles; the
+/// raw cumulative buckets are one `rskd metrics` away.
+fn metrics_mode(args: &Args) -> Result<()> {
+    let endpoint = Endpoint::from_cli(args.get("unix"), args.usize_or("port", 7411) as u16);
+    let mut client = ServeClient::connect(&endpoint)?;
+    let text = client.metrics()?;
+    let parsed = rskd::obs::parse_prometheus(&text)
+        .map_err(|e| anyhow::anyhow!("unparseable metrics exposition: {e}"))?;
+    let snap = rskd::obs::Snapshot::from_prometheus(&text)
+        .map_err(|e| anyhow::anyhow!("unparseable metrics exposition: {e}"))?;
+    let mut report = Report::new("cache_inspect_metrics", "Unified metrics registry snapshot");
+    report.line(format!("server {endpoint} | {} exposition lines parsed", parsed.len()));
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    for s in &snap.series {
+        let labels = s
+            .labels
+            .iter()
+            .map(|(k, v)| format!("{k}={v}"))
+            .collect::<Vec<_>>()
+            .join(",");
+        let value = match &s.data {
+            rskd::obs::SeriesData::Num(v) => v.to_string(),
+            rskd::obs::SeriesData::Buckets(b) => {
+                let total: u64 = b.iter().sum();
+                format!(
+                    "{} obs, p50 {} µs, p99 {} µs",
+                    total,
+                    rskd::obs::hist_quantile_us(b, 0.50).unwrap_or(0),
+                    rskd::obs::hist_quantile_us(b, 0.99).unwrap_or(0)
+                )
+            }
+        };
+        rows.push(vec![s.name.clone(), labels, value]);
+    }
+    report.table(&["series", "labels", "value"], &rows);
+    report.finish();
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     if args.bool_or("stats", false) {
         return stats_mode(&args);
+    }
+    if args.bool_or("metrics", false) {
+        return metrics_mode(&args);
     }
     let mut report = Report::new("cache_inspect", "Sparse-logit cache internals (Appendix D.1)");
 

@@ -13,6 +13,9 @@
 //!             under Zipf-skewed load, with and without hot-shard
 //!             replication landed via a mid-run epoch bump (the `load-gen
 //!             --cluster` subcommand is the multi-process version).
+//!  observability — span-recording cost and traced-vs-untraced warm serve
+//!             round-trips; under `RSKD_PERF_SMOKE=1` gates 0 allocs per
+//!             recorded span and < 3% recording overhead per request.
 //!
 //! The cache-layer, serve, and assembly sections are host-only and run even
 //! when `artifacts/` is missing, so the storage + serving + block-assembly
@@ -31,12 +34,13 @@ use std::sync::Arc;
 use std::time::{Duration, Instant};
 
 use rskd::cache::quant::ProbCodec;
-use rskd::cache::{CacheReader, CacheWriter, SparseTarget};
+use rskd::cache::{CacheReader, CacheWriter, RangeBlock, SparseTarget};
 use rskd::coordinator::{
     assemble_sparse_block, assemble_sparse_block_into, AssembleScratch, Pipeline, SparseBlock,
 };
 use rskd::data::loader::Batch;
 use rskd::expt;
+use rskd::obs;
 use rskd::report::Report;
 use rskd::runtime::HostTensor;
 use rskd::sampling::random_sampling;
@@ -650,18 +654,178 @@ fn cluster_benches(report: &mut Report, smoke: bool) -> Json {
     ])
 }
 
+/// Observability section (runs in smoke mode too): the cost of recording one
+/// finished span into the bounded ring, the steady-state allocation count of
+/// that recording path, and the end-to-end cost of tracing a warm served
+/// range read (Root + Segment + Server spans per request) against the same
+/// read untraced. Returns the `BENCH_hotpath.json` observability object.
+/// With `RSKD_PERF_SMOKE=1` it *asserts* span recording allocates nothing at
+/// steady state and that the computed per-request recording overhead stays
+/// under 3% of the warm serve round-trip — the observability CI perf gate.
+fn observability_benches(report: &mut Report, smoke: bool) -> Json {
+    let budget = Duration::from_millis(if smoke { 200 } else { 800 });
+    let counting = alloc_count::is_counting();
+    report.line("--- observability: span recording + traced serve round-trips ---");
+
+    // (1) raw span recording on a private ring (the global one keeps serving
+    // the traced section below). Warm past capacity first: the ring buffer
+    // is reserved up front, so steady state is pure overwrite.
+    let ring = obs::SpanRing::new();
+    for i in 0..obs::SPAN_RING_CAP as u64 {
+        obs::SpanScope::begin(&ring, obs::SpanKind::Root, obs::mint_trace(), 0, 0, i, 1)
+            .finish();
+    }
+    let batch = 64u64;
+    let st_span = bench(2, budget, || {
+        for i in 0..batch {
+            let mut scope = obs::SpanScope::begin(
+                &ring,
+                obs::SpanKind::Segment,
+                obs::mint_trace(),
+                0,
+                3,
+                i,
+                64,
+            );
+            scope.span_phase(obs::Phase::Network, Duration::from_nanos(50));
+            scope.finish();
+        }
+    });
+    let ns_per_span = st_span.median.as_nanos() as f64 / batch as f64;
+    let (span_allocs, _) = alloc_count::measure(|| {
+        for i in 0..256u64 {
+            obs::SpanScope::begin(&ring, obs::SpanKind::Segment, obs::mint_trace(), 0, 3, i, 64)
+                .finish();
+        }
+    });
+
+    // (2) traced vs untraced warm serve round-trips over a loopback socket.
+    // A traced request records three spans (client Root + Segment, server
+    // Server), all landing in this process's global ring, and carries 8
+    // extra bytes each way on the wire.
+    let n_positions = if smoke { 2048usize } else { 8192 };
+    let range = 256usize;
+    let p = zipf(512, 1.0);
+    let mut rng = Pcg::new(33);
+    let dir = std::env::temp_dir().join(format!("rskd-perf-obs-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 512, 256).unwrap();
+    for pos in 0..n_positions as u64 {
+        assert!(w.push(pos, random_sampling(&p, 50, 1.0, &mut rng)));
+    }
+    w.finish().unwrap();
+    let reader = Arc::new(CacheReader::open(&dir).unwrap());
+    let server =
+        Server::start(reader, Endpoint::Unix(dir.join("s.sock")), ServeConfig::default())
+            .unwrap();
+    let mut client = ServeClient::connect(server.endpoint()).unwrap();
+    let mut block = RangeBlock::new();
+    client.read_range_into(256, range, &mut block).unwrap(); // warm the shard
+
+    let st_plain = bench(2, budget, || {
+        client.read_range_into(256, range, &mut block).unwrap();
+        std::hint::black_box(block.len());
+    });
+    let st_traced = bench(2, budget, || {
+        let root = obs::SpanScope::begin(
+            obs::spans(),
+            obs::SpanKind::Root,
+            obs::mint_trace(),
+            0,
+            u32::MAX,
+            256,
+            range as u32,
+        );
+        client.read_range_into(256, range, &mut block).unwrap();
+        std::hint::black_box(block.len());
+        root.finish();
+    });
+    drop(client);
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // the gated number: what recording three spans costs relative to the
+    // warm round-trip it annotates. The direct traced-vs-untraced delta is
+    // reported too, but loopback noise makes it a poor hard gate at 3%.
+    let spans_per_request = 3.0;
+    let untraced_ns = st_plain.median.as_nanos() as f64;
+    let overhead_pct = 100.0 * spans_per_request * ns_per_span / untraced_ns.max(1.0);
+    let measured_pct =
+        100.0 * (st_traced.median.as_secs_f64() / st_plain.median.as_secs_f64().max(1e-12) - 1.0);
+
+    let alloc_cell = |n: u64| {
+        if counting { format!("{n}") } else { "n/a".into() }
+    };
+    report.table(
+        &["observability", "value"],
+        &[
+            vec!["span record (begin+phase+finish)".into(), format!("{ns_per_span:.0} ns/span")],
+            vec!["allocs / 256 recorded spans".into(), alloc_cell(span_allocs)],
+            vec!["untraced warm read_range_into(256)".into(),
+                 format!("{:.3} ms", st_plain.per_iter_ms())],
+            vec!["traced warm read_range_into(256)".into(),
+                 format!("{:.3} ms", st_traced.per_iter_ms())],
+            vec!["recording overhead (3 spans/request)".into(), format!("{overhead_pct:.3} %")],
+            vec!["measured traced-vs-untraced delta".into(), format!("{measured_pct:+.2} %")],
+        ],
+    );
+
+    if smoke {
+        assert!(counting, "smoke mode requires the counting allocator to be installed");
+        assert_eq!(span_allocs, 0, "span recording must not allocate at steady state");
+        assert!(
+            overhead_pct < 3.0,
+            "span recording overhead {overhead_pct:.3}% >= 3% of a warm serve round-trip \
+             ({ns_per_span:.0} ns/span x {spans_per_request} spans vs {untraced_ns:.0} ns)"
+        );
+        // 10% noise margin on the direct comparison: catches a gross
+        // regression (an accidental lock or allocation on the traced path)
+        // without making the gate flaky on loopback jitter
+        assert!(
+            st_traced.median.as_secs_f64() <= st_plain.median.as_secs_f64() * 1.10,
+            "traced round-trip regressed: {:?} > {:?} (+10% margin)",
+            st_traced.median,
+            st_plain.median
+        );
+        report.line("[smoke gate passed: 0 allocs/span, recording overhead < 3%]");
+    }
+
+    Json::obj(vec![
+        ("config", Json::obj(vec![
+            ("positions", Json::num(n_positions as f64)),
+            ("range_len", Json::num(range as f64)),
+            ("span_batch", Json::num(batch as f64)),
+            ("spans_per_request", Json::num(spans_per_request)),
+            ("smoke", Json::Bool(smoke)),
+            ("alloc_counting", Json::Bool(counting)),
+        ])),
+        ("span_record", Json::obj(vec![
+            ("ns_per_span", Json::num(ns_per_span)),
+            ("allocs_per_span", Json::num(if counting { span_allocs as f64 / 256.0 } else { -1.0 })),
+        ])),
+        ("traced_serve", Json::obj(vec![
+            ("untraced_ms", Json::num(st_plain.per_iter_ms())),
+            ("traced_ms", Json::num(st_traced.per_iter_ms())),
+            ("measured_overhead_pct", Json::num(measured_pct)),
+        ])),
+        ("overhead_pct", Json::num(overhead_pct)),
+    ])
+}
+
 fn main() {
     let smoke = std::env::var("RSKD_PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
     let mut report = Report::new("perf_hotpath", "Hot-path timings per layer");
     let assembly = assembly_benches(&mut report, smoke);
     let compression = compression_benches(&mut report, smoke);
     let cluster = cluster_benches(&mut report, smoke);
+    let observability = observability_benches(&mut report, smoke);
     let bench_json = Json::obj(vec![
         ("schema_version", Json::num(1.0)),
         ("bench", Json::str("perf_hotpath")),
         ("assembly", assembly),
         ("compression", compression),
         ("cluster", cluster),
+        ("observability", observability),
     ]);
     // the repo-root perf trajectory point (schema: docs/BENCH_SCHEMA.md)
     match std::fs::write("BENCH_hotpath.json", bench_json.to_string()) {

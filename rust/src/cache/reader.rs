@@ -217,6 +217,10 @@ impl CacheReader {
 
     /// Decode shard `idx` from disk (no LRU interaction).
     fn load_shard(&self, idx: usize) -> std::io::Result<Arc<Shard>> {
+        // cold decode time feeds the unified registry (one-time series
+        // registration, lock-free recording afterwards)
+        static DECODE_US: std::sync::OnceLock<crate::obs::Hist> = std::sync::OnceLock::new();
+        let t0 = std::time::Instant::now();
         let delay = self.load_delay_us.load(Ordering::Relaxed);
         if delay > 0 {
             std::thread::sleep(std::time::Duration::from_micros(delay));
@@ -250,6 +254,9 @@ impl CacheReader {
             ));
         }
         self.loads.fetch_add(1, Ordering::Relaxed);
+        DECODE_US
+            .get_or_init(|| crate::obs::registry().hist("rskd_shard_decode_us", &[]))
+            .record(t0.elapsed());
         Ok(shard)
     }
 

@@ -466,7 +466,11 @@ impl<O: TargetSource> WriteThrough<O> {
                 ghi.checked_add(self.align - rem).unwrap_or(ghi)
             };
             let n = (hi - lo) as usize;
+            // credit origin compute to the span open on this thread (a
+            // traced server worker serving a cold range) — no-op untraced
+            let t0 = std::time::Instant::now();
             self.origin.read_range_into(lo, n, &mut st.origin_block)?;
+            crate::obs::phase_add(crate::obs::Phase::Origin, t0.elapsed());
             st.counters.origin_computes += 1;
             for i in 0..n {
                 let pos = lo + i as u64;

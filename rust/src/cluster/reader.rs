@@ -17,11 +17,13 @@
 
 use std::collections::{BTreeMap, HashMap};
 use std::io;
-use std::sync::Mutex;
-use std::time::Duration;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::{Duration, Instant};
 
 use crate::cache::{RangeBlock, SparseTarget, TargetSource};
 use crate::cluster::ClusterManifest;
+use crate::obs::{self, SpanKind, SpanScope};
 use crate::serve::protocol::RemoteManifest;
 use crate::serve::{Backoff, Endpoint, RangeRead, ServeClient};
 
@@ -73,6 +75,17 @@ enum Fetch {
     EpochChanged,
 }
 
+/// Ordinal of `ep` in the manifest's member list (for span attribution);
+/// replica endpoints outside the list report `u32::MAX`. Only computed on
+/// traced requests.
+fn member_ordinal(manifest: &ClusterManifest, ep: &Endpoint) -> u32 {
+    manifest
+        .endpoints()
+        .iter()
+        .position(|e| e == ep)
+        .map_or(u32::MAX, |i| i as u32)
+}
+
 /// Get-or-connect on the pool. A free function over the map field (not a
 /// method) so callers can hold the returned client alongside `&mut` borrows
 /// of the reader's other fields (`scratch`, counters).
@@ -111,8 +124,27 @@ impl Inner {
                     continue;
                 }
             };
+            // per-replica child span: the routed read's fan-out, decomposed
+            // into the server's echoed phases + the wire remainder
+            let trace = obs::current_trace();
+            let scope = (trace != 0).then(|| {
+                SpanScope::begin(
+                    obs::spans(),
+                    SpanKind::Segment,
+                    trace,
+                    member_ordinal(&self.manifest, ep),
+                    si as u32,
+                    pos,
+                    seg as u32,
+                )
+            });
+            let t0 = Instant::now();
             match client.read_range_at(pos, seg, epoch, &mut self.scratch) {
-                Ok(RangeRead::Targets { epoch: got }) if got == epoch => {
+                Ok(RangeRead::Targets { epoch: got, timing }) if got == epoch => {
+                    if let Some(mut s) = scope {
+                        obs::attribute_rtt(&mut s, t0.elapsed(), timing);
+                        s.finish();
+                    }
                     if self.scratch.len() != seg {
                         return Err(io::Error::new(
                             io::ErrorKind::InvalidData,
@@ -189,10 +221,38 @@ impl Inner {
 /// contract as `ServedReader` (the trainer reads ranges from one thread;
 /// `Sync` is required structurally, not for parallel wire traffic).
 pub struct ClusterReader {
-    inner: Mutex<Inner>,
+    /// `Arc` so the metrics registry's collector can observe the counters
+    /// through a `Weak` without keeping a dropped reader alive
+    inner: Arc<Mutex<Inner>>,
     /// the served cache's identity (kind, positions, codec) — fetched once
     /// at connect time from a cluster member
     remote: RemoteManifest,
+}
+
+/// Per-process reader ordinal, labeling each reader's series in the
+/// registry so two routed readers in one process stay distinguishable.
+static READER_SEQ: AtomicU64 = AtomicU64::new(0);
+
+/// Re-register this reader's [`ClusterCounters`] (and routing epoch) into
+/// the process-wide metrics registry via a pruning `Weak` collector.
+fn register_collector(inner: &Arc<Mutex<Inner>>) {
+    let weak = Arc::downgrade(inner);
+    let reader = READER_SEQ.fetch_add(1, Ordering::Relaxed).to_string();
+    obs::registry().register_collector(Box::new(move |c| {
+        let Some(inner) = weak.upgrade() else { return false };
+        let (counters, epoch) = {
+            let g = inner.lock().unwrap();
+            (g.counters, g.manifest.epoch())
+        };
+        let labels: &[(&str, &str)] = &[("reader", reader.as_str())];
+        c.counter("rskd_cluster_requests_total", labels, counters.requests);
+        c.counter("rskd_cluster_stale_rejected_total", labels, counters.stale_rejected);
+        c.counter("rskd_cluster_refetches_total", labels, counters.refetches);
+        c.counter("rskd_cluster_failovers_total", labels, counters.failovers);
+        c.counter("rskd_cluster_replica_served_total", labels, counters.replica_served);
+        c.gauge("rskd_cluster_epoch", labels, epoch);
+        true
+    }));
 }
 
 impl ClusterReader {
@@ -206,17 +266,16 @@ impl ClusterReader {
         let remote = client.manifest()?;
         let mut clients = HashMap::new();
         clients.insert(seed.to_string(), client);
-        Ok(ClusterReader {
-            inner: Mutex::new(Inner {
-                manifest,
-                clients,
-                scratch: RangeBlock::new(),
-                rr: 0,
-                counters: ClusterCounters::default(),
-                served_by: BTreeMap::new(),
-            }),
-            remote,
-        })
+        let inner = Arc::new(Mutex::new(Inner {
+            manifest,
+            clients,
+            scratch: RangeBlock::new(),
+            rr: 0,
+            counters: ClusterCounters::default(),
+            served_by: BTreeMap::new(),
+        }));
+        register_collector(&inner);
+        Ok(ClusterReader { inner, remote })
     }
 
     /// Route with an already-loaded shard map (e.g. straight from
@@ -251,17 +310,16 @@ impl ClusterReader {
                 ),
             )
         })?;
-        Ok(ClusterReader {
-            inner: Mutex::new(Inner {
-                manifest,
-                clients,
-                scratch: RangeBlock::new(),
-                rr: 0,
-                counters: ClusterCounters::default(),
-                served_by: BTreeMap::new(),
-            }),
-            remote,
-        })
+        let inner = Arc::new(Mutex::new(Inner {
+            manifest,
+            clients,
+            scratch: RangeBlock::new(),
+            rr: 0,
+            counters: ClusterCounters::default(),
+            served_by: BTreeMap::new(),
+        }));
+        register_collector(&inner);
+        Ok(ClusterReader { inner, remote })
     }
 
     /// The epoch this reader is currently routing under.

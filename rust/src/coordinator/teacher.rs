@@ -354,6 +354,10 @@ impl TargetSource for TeacherSource<'_> {
             }
             let samples = inner.sampler.sample_batch(tokens, &offsets).map_err(io_other)?;
             inner.computes += 1;
+            static FORWARDS: std::sync::OnceLock<crate::obs::Counter> = std::sync::OnceLock::new();
+            FORWARDS
+                .get_or_init(|| crate::obs::registry().counter("rskd_teacher_forwards_total", &[]))
+                .inc();
             let (ids, vals) = (samples.ids(), samples.vals());
             for (i, &r) in chunk.iter().enumerate() {
                 let mut ts = Vec::with_capacity(s);

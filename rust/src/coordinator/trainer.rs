@@ -200,7 +200,27 @@ fn assemble_row(
 ) -> std::io::Result<()> {
     let (idx, val, smooth, confs) = view;
     let s = batch.seq;
-    cache.read_range_into(batch.offsets[row] as u64, s, range)?;
+    let start = batch.offsets[row] as u64;
+    // root of the end-to-end trace (docs/OBSERVABILITY.md): a fresh trace id
+    // per trainer-side range read, alive across the fetch so the serve
+    // client and cluster router record child spans under it. Minting is
+    // gated on the process-wide tracing flag; the span machinery allocates
+    // nothing in steady state (perf-smoke-gated).
+    let root = crate::obs::tracing_enabled().then(|| {
+        crate::obs::SpanScope::begin(
+            crate::obs::spans(),
+            crate::obs::SpanKind::Root,
+            crate::obs::mint_trace(),
+            0,
+            u32::MAX,
+            start,
+            s as u32,
+        )
+    });
+    cache.read_range_into(start, s, range)?;
+    if let Some(scope) = root {
+        scope.finish();
+    }
     for pos in 0..s {
         let (ids, probs) = range.get(pos);
         let label = batch.labels[row * s + pos] as u32;
@@ -659,5 +679,15 @@ fn train_sparse(
     result.prefetch_hits = hits;
     result.prefetch_misses = misses;
     result.prefetch_wait = wait;
+    // Mirror the per-run totals into the unified registry so one `metrics`
+    // snapshot covers trainer-side assembly alongside serve/cluster/cache.
+    let reg = crate::obs::registry();
+    reg.counter("rskd_train_steps_total", &[]).add(result.steps as u64);
+    reg.counter("rskd_train_prefetch_hits_total", &[]).add(hits);
+    reg.counter("rskd_train_prefetch_misses_total", &[]).add(misses);
+    reg.counter("rskd_train_prefetch_wait_us_total", &[])
+        .add(wait.as_micros() as u64);
+    reg.counter("rskd_train_assemble_us_total", &[])
+        .add(result.assemble_time.as_micros() as u64);
     Ok(result)
 }

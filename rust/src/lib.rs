@@ -33,6 +33,7 @@ pub mod report;
 pub mod specdecode;
 pub mod metrics;
 pub mod model;
+pub mod obs;
 pub mod runtime;
 pub mod sampling;
 pub mod serve;

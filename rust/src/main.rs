@@ -9,6 +9,8 @@
 //! rskd cluster-serve --cache DIR --manifest FILE --me ENDPOINT [--poll-ms N]
 //! rskd rebalance --manifest FILE (--partition ... | --rotate=true |
 //!                --replicate-hot N --replicas R)
+//! rskd metrics    [--endpoint EP | --port N | --unix PATH] [--check]
+//! rskd trace-dump [--endpoint EP | --port N | --unix PATH] [--out FILE]
 //! rskd toy      [--task gauss|image]
 //! rskd zipf     [--k N] [--rounds N]
 //! rskd info     [--artifacts DIR]
@@ -28,7 +30,7 @@ use std::path::{Path, PathBuf};
 use std::sync::{Arc, Barrier};
 use std::time::{Duration, Instant};
 
-use anyhow::{bail, Context, Result};
+use anyhow::{bail, ensure, Context, Result};
 
 use rskd::cache::{
     CacheReader, CacheWriter, DynSource, ProbCodec, ShardCodec, SparseTarget, TargetSource,
@@ -38,6 +40,7 @@ use rskd::cluster::{
     partition, replicate_hot, rotate, ClusterControl, ClusterManifest, ClusterReader,
 };
 use rskd::coordinator::{pct_ce_to_fullkd, Pipeline, PipelineConfig};
+use rskd::obs;
 use rskd::report::{final_loss, Report};
 use rskd::sampling::SyntheticZipfSource;
 use rskd::serve::{Endpoint, ServeClient, ServeConfig, Server};
@@ -364,6 +367,10 @@ fn cmd_load_gen(args: &Args) -> Result<()> {
     let range = (args.usize_or("range", 512) as u64).min(positions.max(1)) as usize;
     let span = positions.saturating_sub(range as u64).max(1);
     let passes = if backfill { 2 } else { 1 };
+    let trace_on = args.bool_or("trace", false);
+    if trace_on {
+        obs::set_tracing(true);
+    }
     println!(
         "load-gen: {passes} pass(es) x {clients} clients x {requests} requests of \
          {range} positions on {endpoint}"
@@ -394,9 +401,25 @@ fn cmd_load_gen(args: &Args) -> Result<()> {
                     barrier.wait();
                     for i in 0..requests {
                         let start = rng.below(span);
+                        // a root span per request: `get_range` picks the
+                        // active trace up and records the segment child
+                        let root = trace_on.then(|| {
+                            obs::SpanScope::begin(
+                                obs::spans(),
+                                obs::SpanKind::Root,
+                                obs::mint_trace(),
+                                0,
+                                u32::MAX,
+                                start,
+                                range as u32,
+                            )
+                        });
                         let t = Instant::now();
                         let targets = client.get_range(start, range)?;
                         lats.push(t.elapsed());
+                        if let Some(scope) = root {
+                            scope.finish();
+                        }
                         if i == 0 {
                             if let Some(direct) = direct {
                                 if targets != direct.get_range(start, range) {
@@ -502,6 +525,24 @@ fn cmd_load_gen(args: &Args) -> Result<()> {
                 direct.shard_count()
             ));
         }
+    }
+    if args.bool_or("metrics-check", false) {
+        // over the wire on purpose: exercises the v4 `GetMetrics` frame
+        let mut mc = ServeClient::connect(&endpoint)?;
+        check_metrics_text(&mc.metrics()?, served)?;
+        report.line(format!(
+            "metrics-check: exposition parsed, {served} requests visible in the registry: OK"
+        ));
+    }
+    if trace_on {
+        // server + clients share this process, so the one global ring holds
+        // the whole tree: Root -> Segment -> Server
+        let spans = obs::spans().drain_ordered();
+        check_trace_decomposition(&spans)?;
+        if let Some(path) = args.get("trace-out") {
+            write_trace_jsonl(&path, &spans)?;
+        }
+        report.line(format!("trace: {} span(s) recorded, decomposition OK", spans.len()));
     }
     report.finish();
     drop(server);
@@ -726,6 +767,10 @@ fn cmd_load_gen_cluster(args: &Args) -> Result<()> {
     let requests = args.usize_or("requests", 40).max(1);
     let range = (args.usize_or("range", 128) as u64).min(n.max(1)) as usize;
     let span = n.saturating_sub(range as u64).max(1);
+    let trace_on = args.bool_or("trace", false);
+    if trace_on {
+        obs::set_tracing(true);
+    }
 
     // pass closure: `clients` threads of `requests` routed reads each, every
     // response compared byte-for-byte against the direct reader
@@ -739,7 +784,23 @@ fn cmd_load_gen_cluster(args: &Args) -> Result<()> {
                     let mut rng = Pcg::new(Pcg::mix_seed(0xC10C + pass, c as u64));
                     for _ in 0..requests {
                         let start = rng.below(span);
+                        // root span per routed request: the cluster reader
+                        // propagates the active trace to every member fetch
+                        let root = trace_on.then(|| {
+                            obs::SpanScope::begin(
+                                obs::spans(),
+                                obs::SpanKind::Root,
+                                obs::mint_trace(),
+                                0,
+                                u32::MAX,
+                                start,
+                                range as u32,
+                            )
+                        });
                         let routed = reader.try_get_range(start, range)?;
+                        if let Some(scope) = root {
+                            scope.finish();
+                        }
                         if routed != direct.get_range(start, range) {
                             bail!("routed range [{start}, +{range}) differs from direct read");
                         }
@@ -797,8 +858,204 @@ fn cmd_load_gen_cluster(args: &Args) -> Result<()> {
         counters.requests,
         reader.served_by().iter().map(|(_, c)| *c).collect::<Vec<_>>()
     );
+    if trace_on {
+        // the local ring holds Root spans + per-member Segment children;
+        // each member's ring holds the Server spans those segments landed on
+        let mut spans = obs::spans().drain_ordered();
+        for ep in &eps {
+            let mut c = ServeClient::connect(ep)?;
+            spans.extend(c.trace_spans()?);
+        }
+        check_trace_decomposition(&spans)?;
+        if let Some(path) = args.get("trace-out") {
+            write_trace_jsonl(&path, &spans)?;
+        }
+    }
+    if args.bool_or("metrics-check", false) {
+        for ep in &eps {
+            let mut c = ServeClient::connect(ep)?;
+            check_metrics_text(&c.metrics()?, 1)
+                .with_context(|| format!("member {ep}"))?;
+        }
+        println!("metrics-check: all {members} members expose a parsing registry: OK");
+    }
     drop(children);
     let _ = std::fs::remove_dir_all(&base);
+    Ok(())
+}
+
+/// The endpoint a *client-side* subcommand (`metrics`, `trace-dump`) talks
+/// to: `--endpoint tcp://..|unix://..` verbatim, else the `--unix`/`--port`
+/// pair with the `serve` default port.
+fn client_endpoint(args: &Args) -> Result<Endpoint> {
+    if let Some(e) = args.get("endpoint") {
+        return Ok(Endpoint::parse(&e)?);
+    }
+    Ok(endpoint_from_args(args, 7411))
+}
+
+/// `rskd metrics [--endpoint EP | --port N | --unix PATH] [--check]`: fetch
+/// the remote process's unified registry (`GetMetrics`) and print the
+/// Prometheus-style exposition text.
+fn cmd_metrics(args: &Args) -> Result<()> {
+    let ep = client_endpoint(args)?;
+    let mut client = ServeClient::connect(&ep)?;
+    let text = client.metrics()?;
+    if args.bool_or("check", false) {
+        let series = obs::parse_prometheus(&text)
+            .map_err(|e| anyhow::anyhow!("metrics --check: {e}"))?;
+        eprintln!("parsed {} series OK", series.len());
+    }
+    print!("{text}");
+    Ok(())
+}
+
+/// `rskd trace-dump [--endpoint EP | --port N | --unix PATH] [--out FILE]`:
+/// read the remote finished-span ring (`GetTrace`) and emit one JSONL line
+/// per span (docs/OBSERVABILITY.md §Span dumps).
+fn cmd_trace_dump(args: &Args) -> Result<()> {
+    let ep = client_endpoint(args)?;
+    let mut client = ServeClient::connect(&ep)?;
+    let spans = client.trace_spans()?;
+    let mut out = String::with_capacity(spans.len() * 160);
+    for s in &spans {
+        out.push_str(&s.to_jsonl());
+        out.push('\n');
+    }
+    match args.get("out") {
+        Some(path) => {
+            std::fs::write(&path, &out)?;
+            eprintln!("wrote {} span(s) to {path}", spans.len());
+        }
+        None => print!("{out}"),
+    }
+    Ok(())
+}
+
+/// Write collected spans as JSONL (the `--trace-out FILE` flag).
+fn write_trace_jsonl(path: &str, spans: &[obs::Span]) -> Result<()> {
+    let mut out = String::with_capacity(spans.len() * 160);
+    for s in spans {
+        out.push_str(&s.to_jsonl());
+        out.push('\n');
+    }
+    std::fs::write(path, out)?;
+    println!("wrote {} span(s) to {path}", spans.len());
+    Ok(())
+}
+
+/// `--metrics-check`: the exposition text must parse, the serve-layer series
+/// the run exercised must be present, and the request counter must account
+/// for at least `min_requests` served ranges.
+fn check_metrics_text(text: &str, min_requests: u64) -> Result<()> {
+    let series =
+        obs::parse_prometheus(text).map_err(|e| anyhow::anyhow!("--metrics-check: {e}"))?;
+    ensure!(!series.is_empty(), "--metrics-check: metrics output is empty");
+    for required in [
+        "rskd_serve_requests_total",
+        "rskd_serve_latency_us_count",
+        "rskd_serve_epoch",
+        "rskd_shard_loads_total",
+        "rskd_tier_hits_total",
+    ] {
+        ensure!(
+            series.iter().any(|(n, _, _)| n == required),
+            "--metrics-check: series `{required}` missing from exposition"
+        );
+    }
+    let sum = |name: &str| -> f64 {
+        series.iter().filter(|(n, _, _)| n == name).map(|(_, _, v)| *v).sum()
+    };
+    let req = sum("rskd_serve_requests_total");
+    ensure!(
+        req >= min_requests as f64,
+        "--metrics-check: rskd_serve_requests_total = {req}, expected >= {min_requests}"
+    );
+    ensure!(
+        sum("rskd_serve_latency_us_count") > 0.0,
+        "--metrics-check: rskd_serve_latency_us recorded no observations"
+    );
+    Ok(())
+}
+
+/// `--trace` acceptance check: pick the root span whose child segments are
+/// best preserved in the ring and assert the decomposition contract — each
+/// child's queue/decode/origin/network phases sum to its measured rtt (never
+/// more than its span total), and the children together account for most of
+/// the parent's wall time (the remainder is routing, manifest refetches, and
+/// local CSR decode). Prints the chosen trace as a per-member breakdown.
+fn check_trace_decomposition(spans: &[obs::Span]) -> Result<()> {
+    ensure!(!spans.is_empty(), "--trace: no spans recorded");
+    // best-covered root: children of older roots may have been overwritten
+    // by the bounded ring, so judge each candidate by its observed coverage
+    let mut best: Option<(&obs::Span, Vec<&obs::Span>, u64)> = None;
+    for root in spans.iter().filter(|s| s.kind == obs::SpanKind::Root) {
+        let children: Vec<&obs::Span> = spans
+            .iter()
+            .filter(|s| s.trace == root.trace && s.kind == obs::SpanKind::Segment)
+            .collect();
+        if children.is_empty() {
+            continue;
+        }
+        let child_sum: u64 = children.iter().map(|c| c.total_ns).sum();
+        let better = match &best {
+            Some((r, _, s)) => {
+                child_sum * r.total_ns.max(1) > *s * root.total_ns.max(1)
+            }
+            None => true,
+        };
+        if better {
+            best = Some((root, children, child_sum));
+        }
+    }
+    let (root, children, child_sum) =
+        best.context("--trace: no root span with surviving child segments")?;
+    for c in &children {
+        let phases: u64 = c.phases.iter().sum();
+        ensure!(
+            phases <= c.total_ns,
+            "--trace: segment phases ({phases} ns) exceed the span total ({} ns)",
+            c.total_ns
+        );
+    }
+    ensure!(
+        child_sum <= root.total_ns,
+        "--trace: child segments ({child_sum} ns) exceed the parent root ({} ns)",
+        root.total_ns
+    );
+    ensure!(
+        child_sum.saturating_mul(5) >= root.total_ns.saturating_mul(3),
+        "--trace: child segments cover only {child_sum} of {} ns (< 60%) of the parent",
+        root.total_ns
+    );
+    let servers = spans
+        .iter()
+        .filter(|s| s.trace == root.trace && s.kind == obs::SpanKind::Server)
+        .count();
+    println!(
+        "trace {:016x}: root [{}, +{}) {} µs over {} segment(s) covering {} µs \
+         ({} server span(s))",
+        root.trace,
+        root.start,
+        root.len,
+        root.total_ns / 1_000,
+        children.len(),
+        child_sum / 1_000,
+        servers
+    );
+    for c in &children {
+        println!(
+            "  member {} [{}, +{}): {} µs = queue {} + decode {} + origin {} + network {} µs",
+            c.member,
+            c.start,
+            c.len,
+            c.total_ns / 1_000,
+            c.phases[0] / 1_000,
+            c.phases[1] / 1_000,
+            c.phases[2] / 1_000,
+            c.phases[3] / 1_000,
+        );
+    }
     Ok(())
 }
 
@@ -893,11 +1150,13 @@ fn run() -> Result<()> {
         "rebalance" => cmd_rebalance(&args),
         "load-gen" if args.has("cluster") => cmd_load_gen_cluster(&args),
         "load-gen" => cmd_load_gen(&args),
+        "metrics" => cmd_metrics(&args),
+        "trace-dump" => cmd_trace_dump(&args),
         "toy" => cmd_toy(&args),
         "zipf" => cmd_zipf(&args),
         "info" => cmd_info(&args),
         _ => {
-            println!("usage: rskd <pipeline|serve|load-gen|toy|zipf|info> [--flags]");
+            println!("usage: rskd <pipeline|serve|load-gen|metrics|trace-dump|toy|zipf|info>");
             println!("  pipeline --method <spec>   spec grammar (docs/SPEC.md):");
             println!("           ce | fullkd | rkl | frkl | mse | l1");
             println!("           topk:k=12[,norm] | topp:p=0.98,k=50 | smooth:k=50");
@@ -918,6 +1177,14 @@ fn run() -> Result<()> {
             println!("           --cluster N: multi-process smoke — N cluster-serve children,");
             println!("           byte-identity vs a direct reader + zero-stale mid-run rebalance");
             println!("           (docs/SERVING.md: wire format, backpressure, SLO knobs)");
+            println!("           --trace (end-to-end spans + decomposition check)");
+            println!("           --trace-out FILE (JSONL span dump)");
+            println!("           --metrics-check (registry exposition must parse + count)");
+            println!("  metrics  --endpoint EP | --port N | --unix PATH [--check]");
+            println!("           print a remote process's unified metrics registry");
+            println!("  trace-dump --endpoint EP | --port N | --unix PATH [--out FILE]");
+            println!("           dump a remote finished-span ring as JSONL");
+            println!("           (docs/OBSERVABILITY.md: registry, spans, wire frames)");
             println!("  cluster-serve --cache DIR --manifest FILE --me tcp://..|unix://..");
             println!("           serve as a cluster member; polls FILE (--poll-ms) for");
             println!("           epoch bumps (docs/SERVING.md §Cluster)");

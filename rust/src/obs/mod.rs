@@ -1,0 +1,62 @@
+//! Process-wide observability: one metrics [`Registry`] covering trainer,
+//! cache tiers, serve, and cluster, plus end-to-end request tracing
+//! (docs/OBSERVABILITY.md).
+//!
+//! Layout:
+//! - [`registry`] (module) — typed, labeled counter/gauge/log₂-histogram
+//!   series behind relaxed atomics, snapshot-time collectors for legacy
+//!   counter structs, Prometheus-style exposition and parsing.
+//! - [`span`] (module) — 64-bit trace ids, thread-local propagation,
+//!   scoped phase timers, and the bounded finished-span ring.
+//!
+//! Two process-wide singletons, lazily built on first touch:
+//! [`registry()`] and [`spans()`]. Everything is also constructible
+//! privately (tests build their own `Registry`/`SpanRing`).
+
+pub mod registry;
+pub mod span;
+
+pub use registry::{
+    hist_quantile_us, obs_bucket_upper_us, parse_prometheus, Collect, Counter, Gauge, Hist,
+    Kind, ParsedSeries, Registry, SeriesData, SeriesValue, Snapshot, OBS_HIST_BUCKETS,
+};
+pub use span::{
+    attribute_rtt, current_trace, mint_trace, phase_add, phase_scratch, Phase, ServerTiming,
+    Span, SpanKind, SpanRing, SpanScope, PHASE_COUNT, PHASE_NAMES, SPAN_RING_CAP,
+};
+
+use std::sync::atomic::{AtomicBool, Ordering};
+use std::sync::OnceLock;
+
+static REGISTRY: OnceLock<Registry> = OnceLock::new();
+static SPANS: OnceLock<SpanRing> = OnceLock::new();
+static TRACING: AtomicBool = AtomicBool::new(false);
+
+/// Turn root-span minting on or off process-wide (`load-gen --trace`, the
+/// perf harness). Off (the default), the trainer hot path pays one relaxed
+/// atomic load per range read and nothing else; servers still honor trace
+/// ids arriving over the wire either way.
+pub fn set_tracing(on: bool) {
+    TRACING.store(on, Ordering::Relaxed);
+}
+
+/// Whether trainer-side root spans should be minted.
+pub fn tracing_enabled() -> bool {
+    TRACING.load(Ordering::Relaxed)
+}
+
+/// The process-wide metrics registry.
+pub fn registry() -> &'static Registry {
+    REGISTRY.get_or_init(Registry::new)
+}
+
+/// The process-wide finished-span ring.
+pub fn spans() -> &'static SpanRing {
+    SPANS.get_or_init(SpanRing::new)
+}
+
+/// Render the global registry as Prometheus-style text (the body of the
+/// `Metrics` wire frame and the `metrics` CLI output).
+pub fn render_global() -> String {
+    registry().snapshot().render_prometheus()
+}

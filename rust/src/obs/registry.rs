@@ -1,0 +1,679 @@
+//! Unified metrics registry: typed, labeled series behind lock-free relaxed
+//! atomics, one snapshot covering the whole process.
+//!
+//! Three series kinds exist — monotonic [`Counter`]s, last-value [`Gauge`]s,
+//! and log₂-bucket [`Hist`]ograms (the general form of the serve layer's
+//! `LatencyHistogram`, same ≤2x-overestimate quantile contract). A handle is
+//! an `Arc` around the atomics, so recording on the hot path is one relaxed
+//! atomic op with no lock and no allocation; the registry's mutex is taken
+//! only at registration and snapshot time (both cold).
+//!
+//! Subsystems whose counters predate the registry (`ServeStats`,
+//! `TierCounters`, `ClusterCounters`) re-register via *collectors*: closures
+//! run at snapshot time that read the existing structures and emit series.
+//! A collector returns `false` once its subject is gone (they hold `Weak`
+//! references) and is pruned — a process that started and stopped many
+//! servers does not accumulate dead series.
+//!
+//! Exposition is Prometheus-style text ([`Snapshot::render_prometheus`]);
+//! [`parse_prometheus`] is the matching reader used by the CI metrics smoke
+//! and the merge tests.
+
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::{Arc, Mutex};
+use std::time::Duration;
+
+/// Log₂ µs buckets per histogram; bucket `i` counts `[2^i, 2^{i+1})` µs
+/// (bucket 0 absorbs sub-µs samples). Matches `serve::stats::HIST_BUCKETS`
+/// so serve histograms re-register without rebucketing.
+pub const OBS_HIST_BUCKETS: usize = 32;
+
+/// Upper edge (exclusive) of bucket `i`, in microseconds.
+pub fn obs_bucket_upper_us(i: usize) -> u64 {
+    1u64 << (i + 1).min(63)
+}
+
+fn bucket_of_us(us: u64) -> usize {
+    if us == 0 {
+        return 0;
+    }
+    ((63 - us.leading_zeros()) as usize).min(OBS_HIST_BUCKETS - 1)
+}
+
+/// Quantile over a log₂ bucket vector, read as the holding bucket's *upper
+/// edge* — a reported p99 is a ≤2x overestimate (never under-promises tail
+/// latency). `None` when the histogram is empty. The same contract as
+/// `serve::StatsSnapshot::quantile_us`, shared here so merged registry
+/// snapshots quantile identically.
+pub fn hist_quantile_us(buckets: &[u64], q: f64) -> Option<u64> {
+    let total: u64 = buckets.iter().sum();
+    if total == 0 {
+        return None;
+    }
+    let rank = ((q * total as f64).ceil() as u64).clamp(1, total);
+    let mut seen = 0u64;
+    for (i, &c) in buckets.iter().enumerate() {
+        seen += c;
+        if seen >= rank {
+            return Some(obs_bucket_upper_us(i));
+        }
+    }
+    Some(obs_bucket_upper_us(buckets.len().saturating_sub(1)))
+}
+
+/// Monotonic counter handle; clone freely, record lock-free.
+#[derive(Clone)]
+pub struct Counter(Arc<AtomicU64>);
+
+impl Counter {
+    pub fn inc(&self) {
+        self.0.fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn add(&self, n: u64) {
+        self.0.fetch_add(n, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+/// Last-value gauge handle.
+#[derive(Clone)]
+pub struct Gauge(Arc<AtomicU64>);
+
+impl Gauge {
+    pub fn set(&self, v: u64) {
+        self.0.store(v, Ordering::Relaxed);
+    }
+
+    pub fn get(&self) -> u64 {
+        self.0.load(Ordering::Relaxed)
+    }
+}
+
+struct HistCore {
+    buckets: [AtomicU64; OBS_HIST_BUCKETS],
+}
+
+/// Log₂-bucket histogram handle; `record` is one relaxed increment.
+#[derive(Clone)]
+pub struct Hist(Arc<HistCore>);
+
+impl Hist {
+    pub fn record(&self, d: Duration) {
+        self.record_us(d.as_micros() as u64);
+    }
+
+    pub fn record_us(&self, us: u64) {
+        self.0.buckets[bucket_of_us(us)].fetch_add(1, Ordering::Relaxed);
+    }
+
+    pub fn buckets(&self) -> Vec<u64> {
+        self.0.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect()
+    }
+}
+
+/// Series kind tag (drives the Prometheus `# TYPE` line and merge rules).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Kind {
+    Counter,
+    Gauge,
+    Hist,
+}
+
+impl Kind {
+    fn type_name(self) -> &'static str {
+        match self {
+            Kind::Counter => "counter",
+            Kind::Gauge => "gauge",
+            Kind::Hist => "histogram",
+        }
+    }
+}
+
+/// One series' frozen value.
+#[derive(Clone, Debug, PartialEq)]
+pub enum SeriesData {
+    Num(u64),
+    Buckets(Vec<u64>),
+}
+
+/// One series in a [`Snapshot`].
+#[derive(Clone, Debug, PartialEq)]
+pub struct SeriesValue {
+    pub name: String,
+    pub labels: Vec<(String, String)>,
+    pub kind: Kind,
+    pub data: SeriesData,
+}
+
+impl SeriesValue {
+    /// Scalar view: counters/gauges as-is, histograms as their sample count.
+    pub fn total(&self) -> u64 {
+        match &self.data {
+            SeriesData::Num(n) => *n,
+            SeriesData::Buckets(b) => b.iter().sum(),
+        }
+    }
+}
+
+enum Handle {
+    Counter(Arc<AtomicU64>),
+    Gauge(Arc<AtomicU64>),
+    Hist(Arc<HistCore>),
+}
+
+struct Series {
+    name: String,
+    labels: Vec<(String, String)>,
+    handle: Handle,
+}
+
+type Collector = Box<dyn Fn(&mut Collect) -> bool + Send + Sync>;
+
+#[derive(Default)]
+struct RegInner {
+    series: Vec<Series>,
+    collectors: Vec<Collector>,
+}
+
+/// The process-wide registry (or a private one in tests). Handle creation is
+/// get-or-create on `(name, labels)`, so two subsystems asking for the same
+/// series share one set of atomics.
+#[derive(Default)]
+pub struct Registry {
+    inner: Mutex<RegInner>,
+}
+
+/// Snapshot builder handed to collectors: emit series by value.
+pub struct Collect {
+    out: Vec<SeriesValue>,
+}
+
+impl Collect {
+    pub fn counter(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
+        self.push(name, labels, Kind::Counter, SeriesData::Num(value));
+    }
+
+    pub fn gauge(&mut self, name: &str, labels: &[(&str, &str)], value: u64) {
+        self.push(name, labels, Kind::Gauge, SeriesData::Num(value));
+    }
+
+    pub fn hist(&mut self, name: &str, labels: &[(&str, &str)], buckets: &[u64]) {
+        self.push(name, labels, Kind::Hist, SeriesData::Buckets(buckets.to_vec()));
+    }
+
+    fn push(&mut self, name: &str, labels: &[(&str, &str)], kind: Kind, data: SeriesData) {
+        self.out.push(SeriesValue {
+            name: name.to_string(),
+            labels: labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect(),
+            kind,
+            data,
+        });
+    }
+}
+
+fn owned_labels(labels: &[(&str, &str)]) -> Vec<(String, String)> {
+    labels.iter().map(|(k, v)| (k.to_string(), v.to_string())).collect()
+}
+
+impl Registry {
+    pub fn new() -> Registry {
+        Registry::default()
+    }
+
+    /// Get-or-create a counter series.
+    pub fn counter(&self, name: &str, labels: &[(&str, &str)]) -> Counter {
+        let mut g = self.inner.lock().unwrap();
+        let labels = owned_labels(labels);
+        for s in &g.series {
+            if s.name == name && s.labels == labels {
+                if let Handle::Counter(a) = &s.handle {
+                    return Counter(Arc::clone(a));
+                }
+                panic!("series {name} re-registered with a different kind");
+            }
+        }
+        let a = Arc::new(AtomicU64::new(0));
+        g.series.push(Series {
+            name: name.to_string(),
+            labels,
+            handle: Handle::Counter(Arc::clone(&a)),
+        });
+        Counter(a)
+    }
+
+    /// Get-or-create a gauge series.
+    pub fn gauge(&self, name: &str, labels: &[(&str, &str)]) -> Gauge {
+        let mut g = self.inner.lock().unwrap();
+        let labels = owned_labels(labels);
+        for s in &g.series {
+            if s.name == name && s.labels == labels {
+                if let Handle::Gauge(a) = &s.handle {
+                    return Gauge(Arc::clone(a));
+                }
+                panic!("series {name} re-registered with a different kind");
+            }
+        }
+        let a = Arc::new(AtomicU64::new(0));
+        g.series.push(Series {
+            name: name.to_string(),
+            labels,
+            handle: Handle::Gauge(Arc::clone(&a)),
+        });
+        Gauge(a)
+    }
+
+    /// Get-or-create a histogram series.
+    pub fn hist(&self, name: &str, labels: &[(&str, &str)]) -> Hist {
+        let mut g = self.inner.lock().unwrap();
+        let labels = owned_labels(labels);
+        for s in &g.series {
+            if s.name == name && s.labels == labels {
+                if let Handle::Hist(h) = &s.handle {
+                    return Hist(Arc::clone(h));
+                }
+                panic!("series {name} re-registered with a different kind");
+            }
+        }
+        let h = Arc::new(HistCore {
+            buckets: std::array::from_fn(|_| AtomicU64::new(0)),
+        });
+        g.series.push(Series {
+            name: name.to_string(),
+            labels,
+            handle: Handle::Hist(Arc::clone(&h)),
+        });
+        Hist(h)
+    }
+
+    /// Register a snapshot-time collector. The closure reads its subject
+    /// (usually through a `Weak`) and emits series into [`Collect`]; return
+    /// `false` once the subject is dropped and the collector is pruned.
+    pub fn register_collector(&self, f: Collector) {
+        self.inner.lock().unwrap().collectors.push(f);
+    }
+
+    /// Freeze every direct series plus everything live collectors emit.
+    pub fn snapshot(&self) -> Snapshot {
+        let mut g = self.inner.lock().unwrap();
+        let mut c = Collect { out: Vec::new() };
+        for s in &g.series {
+            let (kind, data) = match &s.handle {
+                Handle::Counter(a) => (Kind::Counter, SeriesData::Num(a.load(Ordering::Relaxed))),
+                Handle::Gauge(a) => (Kind::Gauge, SeriesData::Num(a.load(Ordering::Relaxed))),
+                Handle::Hist(h) => (
+                    Kind::Hist,
+                    SeriesData::Buckets(
+                        h.buckets.iter().map(|b| b.load(Ordering::Relaxed)).collect(),
+                    ),
+                ),
+            };
+            c.out.push(SeriesValue {
+                name: s.name.clone(),
+                labels: s.labels.clone(),
+                kind,
+                data,
+            });
+        }
+        g.collectors.retain(|f| f(&mut c));
+        Snapshot { series: c.out }
+    }
+}
+
+/// A frozen view of every registered series.
+#[derive(Clone, Debug, Default, PartialEq)]
+pub struct Snapshot {
+    pub series: Vec<SeriesValue>,
+}
+
+fn fmt_labels(labels: &[(String, String)]) -> String {
+    if labels.is_empty() {
+        return String::new();
+    }
+    let body: Vec<String> =
+        labels.iter().map(|(k, v)| format!("{k}=\"{}\"", v.replace('"', "'"))).collect();
+    format!("{{{}}}", body.join(","))
+}
+
+impl Snapshot {
+    /// Look a series up by name (first label set wins).
+    pub fn get(&self, name: &str) -> Option<&SeriesValue> {
+        self.series.iter().find(|s| s.name == name)
+    }
+
+    /// Sum a counter/gauge series (or histogram sample count) across all
+    /// label sets sharing `name`.
+    pub fn sum(&self, name: &str) -> u64 {
+        self.series.iter().filter(|s| s.name == name).map(|s| s.total()).sum()
+    }
+
+    /// Quantile of a histogram series (summed across label sets). `None`
+    /// when absent or empty.
+    pub fn quantile_us(&self, name: &str, q: f64) -> Option<u64> {
+        let mut acc = vec![0u64; OBS_HIST_BUCKETS];
+        let mut found = false;
+        for s in self.series.iter().filter(|s| s.name == name) {
+            if let SeriesData::Buckets(b) = &s.data {
+                found = true;
+                for (a, v) in acc.iter_mut().zip(b) {
+                    *a += v;
+                }
+            }
+        }
+        if !found {
+            return None;
+        }
+        hist_quantile_us(&acc, q)
+    }
+
+    /// Merge two snapshots (e.g. from two cluster members' registries):
+    /// counters and histogram buckets add, gauges keep the maximum —
+    /// series are matched on `(name, labels)`, unmatched ones pass through.
+    pub fn merge(&self, other: &Snapshot) -> Snapshot {
+        let mut out = self.clone();
+        'next: for o in &other.series {
+            for s in out.series.iter_mut() {
+                if s.name == o.name && s.labels == o.labels && s.kind == o.kind {
+                    match (&mut s.data, &o.data) {
+                        (SeriesData::Num(a), SeriesData::Num(b)) => match s.kind {
+                            Kind::Gauge => *a = (*a).max(*b),
+                            _ => *a += *b,
+                        },
+                        (SeriesData::Buckets(a), SeriesData::Buckets(b)) => {
+                            for (x, y) in a.iter_mut().zip(b) {
+                                *x += y;
+                            }
+                        }
+                        _ => continue,
+                    }
+                    continue 'next;
+                }
+            }
+            out.series.push(o.clone());
+        }
+        out
+    }
+
+    /// Prometheus-style text exposition: `# TYPE` lines, `{label="v"}`
+    /// sets, histograms as cumulative `_bucket{le="…"}` series plus a
+    /// `_count`. Series render in registration order.
+    pub fn render_prometheus(&self) -> String {
+        use std::fmt::Write as _;
+        let mut out = String::new();
+        let mut typed: Vec<&str> = Vec::new();
+        for s in &self.series {
+            if !typed.contains(&s.name.as_str()) {
+                let _ = writeln!(out, "# TYPE {} {}", s.name, s.kind.type_name());
+                typed.push(&s.name);
+            }
+            let labels = fmt_labels(&s.labels);
+            match &s.data {
+                SeriesData::Num(v) => {
+                    let _ = writeln!(out, "{}{labels} {v}", s.name);
+                }
+                SeriesData::Buckets(b) => {
+                    let mut cum = 0u64;
+                    for (i, &c) in b.iter().enumerate() {
+                        cum += c;
+                        let mut ls = s.labels.clone();
+                        ls.push(("le".into(), obs_bucket_upper_us(i).to_string()));
+                        let _ = writeln!(out, "{}_bucket{} {cum}", s.name, fmt_labels(&ls));
+                    }
+                    let mut ls = s.labels.clone();
+                    ls.push(("le".into(), "+Inf".into()));
+                    let _ = writeln!(out, "{}_bucket{} {cum}", s.name, fmt_labels(&ls));
+                    let _ = writeln!(out, "{}_count{labels} {cum}", s.name);
+                }
+            }
+        }
+        out
+    }
+
+    /// Rebuild a snapshot from exposition text — the inverse of
+    /// [`Snapshot::render_prometheus`], so a remote registry (the `Metrics`
+    /// wire frame) merges and quantiles like a local one. Histogram
+    /// `_bucket`/`_count` sub-series fold back into bucket vectors; kinds
+    /// come from the `# TYPE` lines (untyped series read as counters).
+    pub fn from_prometheus(text: &str) -> Result<Snapshot, String> {
+        let mut kinds: Vec<(String, Kind)> = Vec::new();
+        for line in text.lines() {
+            if let Some(rest) = line.trim().strip_prefix("# TYPE ") {
+                let mut it = rest.split_whitespace();
+                let (name, ty) = match (it.next(), it.next()) {
+                    (Some(n), Some(t)) => (n, t),
+                    _ => return Err(format!("bad TYPE line: {line:?}")),
+                };
+                let kind = match ty {
+                    "counter" => Kind::Counter,
+                    "gauge" => Kind::Gauge,
+                    "histogram" => Kind::Hist,
+                    other => return Err(format!("unknown series type `{other}`")),
+                };
+                kinds.push((name.to_string(), kind));
+            }
+        }
+        let kind_of = |name: &str| kinds.iter().find(|(n, _)| n == name).map(|(_, k)| *k);
+        let mut snap = Snapshot::default();
+        for (name, labels, value) in parse_prometheus(text)? {
+            if let Some(base) = name.strip_suffix("_bucket") {
+                if kind_of(base) == Some(Kind::Hist) {
+                    let le = labels
+                        .iter()
+                        .find(|(k, _)| k == "le")
+                        .map(|(_, v)| v.clone())
+                        .ok_or_else(|| format!("{name}: bucket without an le label"))?;
+                    let labels: Vec<(String, String)> =
+                        labels.into_iter().filter(|(k, _)| k != "le").collect();
+                    if le == "+Inf" {
+                        continue; // redundant with the last finite bucket
+                    }
+                    let edge: u64 =
+                        le.parse().map_err(|_| format!("{name}: bad le edge `{le}`"))?;
+                    if !edge.is_power_of_two() || edge < 2 {
+                        return Err(format!("{name}: le edge {edge} is not a log2 bucket"));
+                    }
+                    let bi = ((edge.trailing_zeros() - 1) as usize).min(OBS_HIST_BUCKETS - 1);
+                    let at = match snap
+                        .series
+                        .iter()
+                        .position(|s| s.name == base && s.labels == labels)
+                    {
+                        Some(p) => p,
+                        None => {
+                            snap.series.push(SeriesValue {
+                                name: base.to_string(),
+                                labels,
+                                kind: Kind::Hist,
+                                data: SeriesData::Buckets(vec![0; OBS_HIST_BUCKETS]),
+                            });
+                            snap.series.len() - 1
+                        }
+                    };
+                    if let SeriesData::Buckets(b) = &mut snap.series[at].data {
+                        b[bi] = value as u64; // cumulative; de-cumulated below
+                    }
+                    continue;
+                }
+            }
+            if let Some(base) = name.strip_suffix("_count") {
+                if kind_of(base) == Some(Kind::Hist) {
+                    continue; // derived from the buckets
+                }
+            }
+            let kind = kind_of(&name).unwrap_or(Kind::Counter);
+            snap.series.push(SeriesValue {
+                name,
+                labels,
+                kind,
+                data: SeriesData::Num(value as u64),
+            });
+        }
+        for s in &mut snap.series {
+            if let SeriesData::Buckets(b) = &mut s.data {
+                for i in (1..b.len()).rev() {
+                    b[i] = b[i].saturating_sub(b[i - 1]);
+                }
+            }
+        }
+        Ok(snap)
+    }
+}
+
+/// One parsed exposition line: `(name, labels, value)`.
+pub type ParsedSeries = (String, Vec<(String, String)>, f64);
+
+/// Parse Prometheus-style text back into `(name, labels, value)` triples —
+/// the reader half of [`Snapshot::render_prometheus`], used by the CI
+/// metrics smoke to assert the exposition actually parses. Comment and
+/// blank lines are skipped; any other malformed line is an error.
+pub fn parse_prometheus(text: &str) -> Result<Vec<ParsedSeries>, String> {
+    let mut out = Vec::new();
+    for (ln, line) in text.lines().enumerate() {
+        let line = line.trim();
+        if line.is_empty() || line.starts_with('#') {
+            continue;
+        }
+        let err = |msg: &str| format!("line {}: {msg}: {line:?}", ln + 1);
+        let (head, value) =
+            line.rsplit_once(' ').ok_or_else(|| err("expected `name[{labels}] value`"))?;
+        let value: f64 = value.parse().map_err(|_| err("bad sample value"))?;
+        let (name, labels) = match head.split_once('{') {
+            None => (head.to_string(), Vec::new()),
+            Some((name, rest)) => {
+                let body = rest.strip_suffix('}').ok_or_else(|| err("unclosed label set"))?;
+                let mut labels = Vec::new();
+                for pair in body.split(',').filter(|p| !p.is_empty()) {
+                    let (k, v) = pair.split_once('=').ok_or_else(|| err("bad label pair"))?;
+                    let v = v
+                        .strip_prefix('"')
+                        .and_then(|v| v.strip_suffix('"'))
+                        .ok_or_else(|| err("unquoted label value"))?;
+                    labels.push((k.to_string(), v.to_string()));
+                }
+                (name.to_string(), labels)
+            }
+        };
+        if name.is_empty() || !name.chars().all(|c| c.is_ascii_alphanumeric() || c == '_') {
+            return Err(err("bad series name"));
+        }
+        out.push((name, labels, value));
+    }
+    Ok(out)
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn handles_share_series_and_record_lock_free() {
+        let r = Registry::new();
+        let a = r.counter("rskd_test_total", &[("role", "x")]);
+        let b = r.counter("rskd_test_total", &[("role", "x")]);
+        let other = r.counter("rskd_test_total", &[("role", "y")]);
+        a.inc();
+        b.add(2);
+        other.inc();
+        assert_eq!(a.get(), 3, "same (name, labels) must share one atomic");
+        let snap = r.snapshot();
+        assert_eq!(snap.sum("rskd_test_total"), 4);
+        assert_eq!(snap.get("rskd_test_total").unwrap().total(), 3);
+    }
+
+    #[test]
+    fn gauge_and_hist_series() {
+        let r = Registry::new();
+        let g = r.gauge("rskd_epoch", &[]);
+        g.set(7);
+        let h = r.hist("rskd_lat_us", &[]);
+        h.record(Duration::from_micros(8)); // bucket 3
+        h.record(Duration::from_micros(2000)); // bucket 10
+        let snap = r.snapshot();
+        assert_eq!(snap.get("rskd_epoch").unwrap().total(), 7);
+        assert_eq!(snap.sum("rskd_lat_us"), 2);
+        assert_eq!(snap.quantile_us("rskd_lat_us", 0.5), Some(16));
+        assert_eq!(snap.quantile_us("rskd_lat_us", 1.0), Some(2048));
+    }
+
+    #[test]
+    fn collectors_emit_and_prune() {
+        let r = Registry::new();
+        let subject = Arc::new(AtomicU64::new(41));
+        let weak = Arc::downgrade(&subject);
+        r.register_collector(Box::new(move |c| match weak.upgrade() {
+            Some(s) => {
+                c.counter("rskd_collected_total", &[], s.load(Ordering::Relaxed));
+                true
+            }
+            None => false,
+        }));
+        assert_eq!(r.snapshot().sum("rskd_collected_total"), 41);
+        drop(subject);
+        assert_eq!(r.snapshot().get("rskd_collected_total"), None, "dead collector pruned");
+        assert_eq!(r.snapshot().series.len(), 0);
+    }
+
+    #[test]
+    fn render_parse_roundtrip() {
+        let r = Registry::new();
+        r.counter("rskd_req_total", &[("endpoint", "unix:///tmp/a.sock")]).add(9);
+        r.gauge("rskd_epoch", &[]).set(3);
+        let h = r.hist("rskd_lat_us", &[]);
+        h.record_us(1);
+        h.record_us(1000);
+        let text = r.snapshot().render_prometheus();
+        let parsed = parse_prometheus(&text).unwrap();
+        let find = |n: &str| parsed.iter().find(|(name, _, _)| name == n);
+        let (_, labels, v) = find("rskd_req_total").unwrap();
+        assert_eq!(*v, 9.0);
+        assert_eq!(labels[0], ("endpoint".into(), "unix:///tmp/a.sock".into()));
+        assert_eq!(find("rskd_epoch").unwrap().2, 3.0);
+        assert_eq!(find("rskd_lat_us_count").unwrap().2, 2.0);
+        // cumulative buckets: the +Inf bucket equals the count
+        let inf = parsed
+            .iter()
+            .find(|(n, ls, _)| {
+                n == "rskd_lat_us_bucket" && ls.iter().any(|(k, v)| k == "le" && v == "+Inf")
+            })
+            .unwrap();
+        assert_eq!(inf.2, 2.0);
+        assert!(parse_prometheus("not a metric line!!!").is_err());
+    }
+
+    #[test]
+    fn from_prometheus_reconstructs_the_snapshot() {
+        let r = Registry::new();
+        r.counter("rskd_req_total", &[("endpoint", "tcp://1.2.3.4:7")]).add(9);
+        r.gauge("rskd_epoch", &[]).set(3);
+        let h = r.hist("rskd_lat_us", &[("endpoint", "a")]);
+        h.record_us(1);
+        h.record_us(1);
+        h.record_us(1000);
+        let snap = r.snapshot();
+        let back = Snapshot::from_prometheus(&snap.render_prometheus()).unwrap();
+        assert_eq!(back, snap, "render -> parse must be lossless");
+        assert_eq!(back.quantile_us("rskd_lat_us", 0.5), snap.quantile_us("rskd_lat_us", 0.5));
+        assert!(Snapshot::from_prometheus("# TYPE x made_up_type\nx 1").is_err());
+    }
+
+    #[test]
+    fn merge_sums_counters_and_buckets_maxes_gauges() {
+        let a = Registry::new();
+        a.counter("rskd_req_total", &[]).add(5);
+        a.gauge("rskd_epoch", &[]).set(2);
+        a.hist("rskd_lat_us", &[]).record_us(4);
+        let b = Registry::new();
+        b.counter("rskd_req_total", &[]).add(7);
+        b.gauge("rskd_epoch", &[]).set(9);
+        b.hist("rskd_lat_us", &[]).record_us(4000);
+        b.counter("rskd_only_b_total", &[]).inc();
+        let m = a.snapshot().merge(&b.snapshot());
+        assert_eq!(m.sum("rskd_req_total"), 12);
+        assert_eq!(m.get("rskd_epoch").unwrap().total(), 9);
+        assert_eq!(m.sum("rskd_lat_us"), 2);
+        assert_eq!(m.sum("rskd_only_b_total"), 1);
+    }
+}

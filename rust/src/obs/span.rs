@@ -1,0 +1,486 @@
+//! Span tracing: a 64-bit trace id minted per trainer-side range read,
+//! carried across the serve wire and the cluster fan-out, with scoped
+//! timers decomposing each request into queue / decode / origin / network
+//! phases.
+//!
+//! A trace is born at the trainer ([`mint_trace`], stamped by the root
+//! [`SpanScope`]), rides the thread via a thread-local (so no `TargetSource`
+//! signature changes), is written into the v4 `GetRange` frame by the serve
+//! client, and re-opened on the server worker from the job it decoded.
+//! Finished spans land in a bounded, preallocated [`SpanRing`] — recording
+//! is a couple of `Cell` stores plus one mutex'd copy into existing
+//! storage, with **zero steady-state allocation** (the perf smoke asserts
+//! this with the counting allocator).
+//!
+//! Phase accounting uses per-thread scratch: code that knows a phase
+//! (`cache/tier.rs` timing an origin compute, the server worker timing the
+//! queue wait) calls [`phase_add`]; the call is a no-op unless a scope is
+//! open on the thread, so untraced traffic pays two thread-local reads and
+//! nothing else.
+
+use std::cell::Cell;
+use std::sync::atomic::{AtomicU64, Ordering};
+use std::sync::Mutex;
+use std::time::{Duration, Instant};
+
+/// Capacity of the finished-span ring: old spans are overwritten, never
+/// reallocated. 4096 spans × 64 B ≈ 256 KiB, and a full ring still fits a
+/// single `Trace` response frame well under `MAX_FRAME`.
+pub const SPAN_RING_CAP: usize = 4096;
+
+/// Number of phase slots on every span.
+pub const PHASE_COUNT: usize = 4;
+
+/// Phase slots within a span. `Network` is client-side derived (rtt minus
+/// the server-reported phases), the rest are measured where they happen.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum Phase {
+    /// Time a job waited in a worker queue before being popped.
+    Queue = 0,
+    /// Shard decode + response encode on the server worker.
+    Decode = 1,
+    /// Teacher/origin compute on a cache-tier miss.
+    Origin = 2,
+    /// Wire + framing time: rtt not attributed to a server phase.
+    Network = 3,
+}
+
+/// Display names, indexed by `Phase as usize`.
+pub const PHASE_NAMES: [&str; PHASE_COUNT] = ["queue", "decode", "origin", "network"];
+
+/// What a span covers.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum SpanKind {
+    /// One trainer-side `read_range_into` (the whole traced request).
+    Root = 0,
+    /// One per-shard segment fetch inside the cluster router's fan-out.
+    Segment = 1,
+    /// One server worker handling of a `GetRange`.
+    Server = 2,
+}
+
+impl SpanKind {
+    pub fn name(self) -> &'static str {
+        match self {
+            SpanKind::Root => "root",
+            SpanKind::Segment => "segment",
+            SpanKind::Server => "server",
+        }
+    }
+
+    pub fn from_u8(v: u8) -> Option<SpanKind> {
+        match v {
+            0 => Some(SpanKind::Root),
+            1 => Some(SpanKind::Segment),
+            2 => Some(SpanKind::Server),
+            _ => None,
+        }
+    }
+}
+
+/// One finished span. `Copy` and fixed-size so ring writes and the wire
+/// codec never allocate.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub struct Span {
+    /// Trace id this span belongs to (never 0 for a recorded span).
+    pub trace: u64,
+    pub kind: SpanKind,
+    /// Cluster member ordinal serving a `Segment` span (0 otherwise).
+    pub member: u32,
+    /// Shard index for `Segment`/`Server` spans (u32::MAX when unknown).
+    pub shard: u32,
+    /// Requested range start position.
+    pub start: u64,
+    /// Requested range length in positions.
+    pub len: u32,
+    /// Wall time of the whole span.
+    pub total_ns: u64,
+    /// Phase decomposition, indexed by `Phase as usize`.
+    pub phases: [u64; PHASE_COUNT],
+}
+
+impl Span {
+    /// Render one JSONL line (exposition path — allocation is fine here).
+    pub fn to_jsonl(&self) -> String {
+        format!(
+            concat!(
+                "{{\"trace\":\"{:016x}\",\"kind\":\"{}\",\"member\":{},\"shard\":{},",
+                "\"start\":{},\"len\":{},\"total_ns\":{},",
+                "\"queue_ns\":{},\"decode_ns\":{},\"origin_ns\":{},\"network_ns\":{}}}"
+            ),
+            self.trace,
+            self.kind.name(),
+            self.member,
+            if self.shard == u32::MAX { -1i64 } else { self.shard as i64 },
+            self.start,
+            self.len,
+            self.total_ns,
+            self.phases[0],
+            self.phases[1],
+            self.phases[2],
+            self.phases[3],
+        )
+    }
+}
+
+/// Bounded ring of finished spans: preallocated at first use, overwrites
+/// the oldest entry when full. Push is a mutex lock + one `Span` copy.
+pub struct SpanRing {
+    inner: Mutex<RingInner>,
+}
+
+struct RingInner {
+    buf: Vec<Span>,
+    /// Next write position; wraps at `SPAN_RING_CAP` once full.
+    head: usize,
+    /// Total spans ever pushed (so `len = pushed.min(cap)`).
+    pushed: u64,
+}
+
+impl Default for SpanRing {
+    fn default() -> SpanRing {
+        SpanRing::new()
+    }
+}
+
+impl SpanRing {
+    pub fn new() -> SpanRing {
+        SpanRing {
+            inner: Mutex::new(RingInner {
+                buf: Vec::with_capacity(SPAN_RING_CAP),
+                head: 0,
+                pushed: 0,
+            }),
+        }
+    }
+
+    /// Record a finished span. Zero allocation once the ring is full-grown
+    /// (the buffer is reserved up front; `push` within capacity never
+    /// reallocates).
+    pub fn push(&self, span: Span) {
+        let mut g = self.inner.lock().unwrap();
+        if g.buf.len() < SPAN_RING_CAP {
+            g.buf.push(span);
+        } else {
+            let h = g.head;
+            g.buf[h] = span;
+        }
+        g.head = (g.head + 1) % SPAN_RING_CAP;
+        g.pushed += 1;
+    }
+
+    /// Copy out all retained spans, oldest first.
+    pub fn drain_ordered(&self) -> Vec<Span> {
+        let g = self.inner.lock().unwrap();
+        let n = g.buf.len();
+        let mut out = Vec::with_capacity(n);
+        if n < SPAN_RING_CAP {
+            out.extend_from_slice(&g.buf);
+        } else {
+            out.extend_from_slice(&g.buf[g.head..]);
+            out.extend_from_slice(&g.buf[..g.head]);
+        }
+        out
+    }
+
+    /// Total spans ever recorded (including overwritten ones).
+    pub fn recorded(&self) -> u64 {
+        self.inner.lock().unwrap().pushed
+    }
+}
+
+/// Server-side phase timings echoed on a v4 `Targets` response, so the
+/// client can attribute its rtt: `network = rtt − (queue + decode +
+/// origin)`. The serve-layer analogue of a `Server-Timing` header.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct ServerTiming {
+    pub queue_ns: u64,
+    pub decode_ns: u64,
+    pub origin_ns: u64,
+}
+
+impl ServerTiming {
+    pub fn total_ns(&self) -> u64 {
+        self.queue_ns + self.decode_ns + self.origin_ns
+    }
+}
+
+/// Attribute a measured round trip onto `scope`: the server's echoed
+/// queue/decode/origin phases verbatim, and whatever the echo does not
+/// account for as `Network` — so a segment span's phases sum to exactly its
+/// measured rtt.
+pub fn attribute_rtt(scope: &mut SpanScope<'_>, rtt: Duration, timing: ServerTiming) {
+    scope.span_phase(Phase::Queue, Duration::from_nanos(timing.queue_ns));
+    scope.span_phase(Phase::Decode, Duration::from_nanos(timing.decode_ns));
+    scope.span_phase(Phase::Origin, Duration::from_nanos(timing.origin_ns));
+    let network = (rtt.as_nanos() as u64).saturating_sub(timing.total_ns());
+    scope.span_phase(Phase::Network, Duration::from_nanos(network));
+}
+
+static TRACE_SEQ: AtomicU64 = AtomicU64::new(0);
+
+fn splitmix64(mut x: u64) -> u64 {
+    x = x.wrapping_add(0x9E37_79B9_7F4A_7C15);
+    x = (x ^ (x >> 30)).wrapping_mul(0xBF58_476D_1CE4_E5B9);
+    x = (x ^ (x >> 27)).wrapping_mul(0x94D0_49BB_1331_11EB);
+    x ^ (x >> 31)
+}
+
+/// Mint a fresh process-unique trace id. Never returns 0 — 0 on the wire
+/// means "untraced".
+pub fn mint_trace() -> u64 {
+    let seq = TRACE_SEQ.fetch_add(1, Ordering::Relaxed);
+    let id = splitmix64(seq ^ ((std::process::id() as u64) << 32));
+    if id == 0 {
+        1
+    } else {
+        id
+    }
+}
+
+thread_local! {
+    static ACTIVE_TRACE: Cell<u64> = const { Cell::new(0) };
+    static PHASE_SCRATCH: [Cell<u64>; PHASE_COUNT] =
+        const { [Cell::new(0), Cell::new(0), Cell::new(0), Cell::new(0)] };
+}
+
+/// The trace id active on this thread (0 when untraced). The serve client
+/// stamps this onto outgoing `GetRange` frames.
+pub fn current_trace() -> u64 {
+    ACTIVE_TRACE.with(|t| t.get())
+}
+
+/// Nanoseconds accumulated so far into `phase` of the span open on this
+/// thread (0 when untraced). Lets the scope owner split a wall-clock
+/// measurement: a server worker reads the `Origin` credit the tier stack
+/// deposited during `read_range_into` and attributes the remainder to
+/// `Decode`.
+pub fn phase_scratch(phase: Phase) -> u64 {
+    PHASE_SCRATCH.with(|s| s[phase as usize].get())
+}
+
+/// Credit `d` to `phase` of the span open on this thread. No-op (two
+/// thread-local reads) when no scope is active — untraced hot-path traffic
+/// pays essentially nothing.
+pub fn phase_add(phase: Phase, d: Duration) {
+    if ACTIVE_TRACE.with(|t| t.get()) == 0 {
+        return;
+    }
+    PHASE_SCRATCH.with(|s| {
+        let c = &s[phase as usize];
+        c.set(c.get() + d.as_nanos() as u64);
+    });
+}
+
+/// RAII scope for one span: sets the thread's active trace, accumulates
+/// [`phase_add`] credits, and on [`finish`](SpanScope::finish) (or drop)
+/// pushes the finished span into `ring` and restores the previous scope —
+/// scopes nest (a `Segment` inside a `Root` on the trainer thread).
+pub struct SpanScope<'a> {
+    ring: &'a SpanRing,
+    span: Span,
+    began: Instant,
+    prev_trace: u64,
+    prev_scratch: [u64; PHASE_COUNT],
+    finished: bool,
+}
+
+impl<'a> SpanScope<'a> {
+    /// Open a scope. `trace` must be nonzero (mint one at the root; inner
+    /// scopes pass the propagated id).
+    pub fn begin(
+        ring: &'a SpanRing,
+        kind: SpanKind,
+        trace: u64,
+        member: u32,
+        shard: u32,
+        start: u64,
+        len: u32,
+    ) -> SpanScope<'a> {
+        debug_assert!(trace != 0, "span scopes require a minted trace id");
+        let prev_trace = ACTIVE_TRACE.with(|t| t.replace(trace));
+        let prev_scratch = PHASE_SCRATCH.with(|s| {
+            let mut prev = [0u64; PHASE_COUNT];
+            for (p, c) in prev.iter_mut().zip(s.iter()) {
+                *p = c.replace(0);
+            }
+            prev
+        });
+        SpanScope {
+            ring,
+            span: Span {
+                trace,
+                kind,
+                member,
+                shard,
+                start,
+                len,
+                total_ns: 0,
+                phases: [0; PHASE_COUNT],
+            },
+            began: Instant::now(),
+            prev_trace,
+            prev_scratch,
+            finished: false,
+        }
+    }
+
+    /// Add `d` straight onto one of this span's phases (for phases the
+    /// scope owner measures itself, e.g. the client-derived network share).
+    pub fn span_phase(&mut self, phase: Phase, d: Duration) {
+        self.span.phases[phase as usize] += d.as_nanos() as u64;
+    }
+
+    /// Back-date the scope's start by `d`: time that belongs to this span
+    /// but passed before the scope could open (a job's queue wait — the
+    /// worker only gets to open the `Server` scope after popping the job).
+    pub fn backdate(&mut self, d: Duration) {
+        self.began = self.began.checked_sub(d).unwrap_or(self.began);
+    }
+
+    /// Close the scope now and record the span.
+    pub fn finish(mut self) {
+        self.close();
+    }
+
+    fn close(&mut self) {
+        if self.finished {
+            return;
+        }
+        self.finished = true;
+        self.span.total_ns = self.began.elapsed().as_nanos() as u64;
+        PHASE_SCRATCH.with(|s| {
+            for (i, c) in s.iter().enumerate() {
+                self.span.phases[i] += c.get();
+                c.set(self.prev_scratch[i]);
+            }
+        });
+        ACTIVE_TRACE.with(|t| t.set(self.prev_trace));
+        self.ring.push(self.span);
+    }
+}
+
+impl Drop for SpanScope<'_> {
+    fn drop(&mut self) {
+        self.close();
+    }
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn mint_is_unique_and_nonzero() {
+        let a = mint_trace();
+        let b = mint_trace();
+        assert_ne!(a, 0);
+        assert_ne!(b, 0);
+        assert_ne!(a, b);
+    }
+
+    #[test]
+    fn scope_sets_trace_collects_phases_and_restores() {
+        let ring = SpanRing::new();
+        assert_eq!(current_trace(), 0);
+        let t = mint_trace();
+        {
+            let mut scope = SpanScope::begin(&ring, SpanKind::Root, t, 0, u32::MAX, 100, 8);
+            assert_eq!(current_trace(), t);
+            phase_add(Phase::Origin, Duration::from_nanos(500));
+            phase_add(Phase::Origin, Duration::from_nanos(250));
+            scope.span_phase(Phase::Network, Duration::from_nanos(40));
+            scope.finish();
+        }
+        assert_eq!(current_trace(), 0, "scope restores the previous trace");
+        let spans = ring.drain_ordered();
+        assert_eq!(spans.len(), 1);
+        let s = &spans[0];
+        assert_eq!((s.trace, s.kind, s.start, s.len), (t, SpanKind::Root, 100, 8));
+        assert_eq!(s.phases[Phase::Origin as usize], 750);
+        assert_eq!(s.phases[Phase::Network as usize], 40);
+        assert!(s.total_ns > 0);
+    }
+
+    #[test]
+    fn scopes_nest_with_independent_scratch() {
+        let ring = SpanRing::new();
+        let root = mint_trace();
+        let outer = SpanScope::begin(&ring, SpanKind::Root, root, 0, u32::MAX, 0, 4);
+        phase_add(Phase::Network, Duration::from_nanos(10));
+        {
+            let inner = SpanScope::begin(&ring, SpanKind::Segment, root, 2, 5, 0, 2);
+            assert_eq!(current_trace(), root);
+            phase_add(Phase::Queue, Duration::from_nanos(99));
+            inner.finish();
+        }
+        // the inner scope's queue credit must not leak into the outer span
+        phase_add(Phase::Network, Duration::from_nanos(5));
+        outer.finish();
+        let spans = ring.drain_ordered();
+        assert_eq!(spans.len(), 2);
+        assert_eq!(spans[0].kind, SpanKind::Segment);
+        assert_eq!(spans[0].phases[Phase::Queue as usize], 99);
+        assert_eq!(spans[0].member, 2);
+        assert_eq!(spans[1].kind, SpanKind::Root);
+        assert_eq!(spans[1].phases[Phase::Network as usize], 15);
+        assert_eq!(spans[1].phases[Phase::Queue as usize], 0);
+    }
+
+    #[test]
+    fn drop_records_like_finish() {
+        let ring = SpanRing::new();
+        {
+            let _scope = SpanScope::begin(&ring, SpanKind::Server, mint_trace(), 0, 3, 64, 16);
+        }
+        assert_eq!(ring.drain_ordered().len(), 1);
+    }
+
+    #[test]
+    fn ring_overwrites_oldest_and_keeps_order() {
+        let ring = SpanRing::new();
+        let mk = |i: u64| Span {
+            trace: i + 1,
+            kind: SpanKind::Server,
+            member: 0,
+            shard: 0,
+            start: i,
+            len: 1,
+            total_ns: 1,
+            phases: [0; PHASE_COUNT],
+        };
+        for i in 0..(SPAN_RING_CAP as u64 + 10) {
+            ring.push(mk(i));
+        }
+        let spans = ring.drain_ordered();
+        assert_eq!(spans.len(), SPAN_RING_CAP);
+        assert_eq!(spans[0].start, 10, "oldest 10 overwritten");
+        assert_eq!(spans.last().unwrap().start, SPAN_RING_CAP as u64 + 9);
+        assert_eq!(ring.recorded(), SPAN_RING_CAP as u64 + 10);
+        // ordered: strictly increasing starts
+        assert!(spans.windows(2).all(|w| w[0].start < w[1].start));
+    }
+
+    #[test]
+    fn jsonl_line_shape() {
+        let s = Span {
+            trace: 0xABCD,
+            kind: SpanKind::Segment,
+            member: 1,
+            shard: 7,
+            start: 42,
+            len: 8,
+            total_ns: 1000,
+            phases: [1, 2, 3, 4],
+        };
+        let line = s.to_jsonl();
+        assert!(line.contains("\"trace\":\"000000000000abcd\""));
+        assert!(line.contains("\"kind\":\"segment\""));
+        assert!(line.contains("\"queue_ns\":1"));
+        assert!(line.contains("\"network_ns\":4"));
+        // unknown shard renders as -1
+        let mut u = s;
+        u.shard = u32::MAX;
+        assert!(u.to_jsonl().contains("\"shard\":-1"));
+    }
+}

@@ -26,6 +26,7 @@ use std::time::Duration;
 
 use crate::cache::{RangeBlock, SparseTarget, TargetSource};
 use crate::cluster::ClusterManifest;
+use crate::obs::{self, ServerTiming, Span};
 use crate::serve::protocol::{
     read_frame, write_frame, ErrCode, RangeFrame, RemoteManifest, Request, Response, NO_EPOCH,
 };
@@ -70,12 +71,13 @@ impl Backoff {
 }
 
 /// What a pinned range read produced: decoded targets stamped with the
-/// epoch the server answered under, or a typed refusal carrying the
+/// epoch the server answered under (plus the server's phase-timing echo —
+/// all zero for untraced requests), or a typed refusal carrying the
 /// server's current epoch (stale pin or unowned range — refetch the
 /// cluster manifest and re-route).
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum RangeRead {
-    Targets { epoch: u64 },
+    Targets { epoch: u64, timing: ServerTiming },
     WrongEpoch { epoch: u64 },
 }
 
@@ -189,12 +191,17 @@ impl ServeClient {
         epoch: u64,
         out: &mut RangeBlock,
     ) -> io::Result<RangeRead> {
-        let req = Request::GetRange { start, len: len as u32, epoch };
+        // stamp the trace active on this thread (0 = untraced) so a routed
+        // read minted at the trainer is followable into the server worker
+        let req =
+            Request::GetRange { start, len: len as u32, epoch, trace: obs::current_trace() };
         let mut attempt = 0u32;
         loop {
             let frame = self.call_raw(&req)?;
             match Response::decode_targets_into(&frame, out)? {
-                RangeFrame::Targets { epoch } => return Ok(RangeRead::Targets { epoch }),
+                RangeFrame::Targets { epoch, trace: _, timing } => {
+                    return Ok(RangeRead::Targets { epoch, timing })
+                }
                 RangeFrame::Other(Response::WrongEpoch { epoch }) => {
                     out.clear();
                     return Ok(RangeRead::WrongEpoch { epoch });
@@ -222,14 +229,37 @@ impl ServeClient {
     /// Unpinned [`ServeClient::read_range_at`]: the standalone-server path,
     /// where a `WrongEpoch` answer means the caller is talking to a cluster
     /// member directly and should route via `cluster::ClusterReader`.
+    ///
+    /// Under an active trace this records a `Segment` child span: the
+    /// server's echoed queue/decode/origin phases, plus `network` = the
+    /// measured rtt minus the server's share.
     pub fn read_range_into(
         &mut self,
         start: u64,
         len: usize,
         out: &mut RangeBlock,
     ) -> io::Result<()> {
+        let trace = obs::current_trace();
+        let scope = (trace != 0).then(|| {
+            obs::SpanScope::begin(
+                obs::spans(),
+                obs::SpanKind::Segment,
+                trace,
+                0,
+                u32::MAX,
+                start,
+                len as u32,
+            )
+        });
+        let t0 = std::time::Instant::now();
         match self.read_range_at(start, len, NO_EPOCH, out)? {
-            RangeRead::Targets { epoch: _ } => Ok(()),
+            RangeRead::Targets { epoch: _, timing } => {
+                if let Some(mut scope) = scope {
+                    obs::attribute_rtt(&mut scope, t0.elapsed(), timing);
+                    scope.finish();
+                }
+                Ok(())
+            }
             RangeRead::WrongEpoch { epoch } => Err(io::Error::new(
                 io::ErrorKind::InvalidInput,
                 format!(
@@ -274,6 +304,32 @@ impl ServeClient {
             other => Err(io::Error::new(
                 io::ErrorKind::InvalidData,
                 format!("unexpected response to GetStats: {other:?}"),
+            )),
+        }
+    }
+
+    /// The server process's unified metrics registry as Prometheus-style
+    /// text (docs/OBSERVABILITY.md §Exposition) — the `metrics` CLI body.
+    pub fn metrics(&mut self) -> io::Result<String> {
+        match self.call(&Request::GetMetrics)? {
+            Response::Metrics(text) => Ok(text),
+            Response::Error { code, msg } => Err(Self::err_of(code, msg)),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected response to GetMetrics: {other:?}"),
+            )),
+        }
+    }
+
+    /// The server process's retained finished spans, oldest first — the
+    /// `trace-dump` CLI body.
+    pub fn trace_spans(&mut self) -> io::Result<Vec<Span>> {
+        match self.call(&Request::GetTrace)? {
+            Response::Trace(spans) => Ok(spans),
+            Response::Error { code, msg } => Err(Self::err_of(code, msg)),
+            other => Err(io::Error::new(
+                io::ErrorKind::InvalidData,
+                format!("unexpected response to GetTrace: {other:?}"),
             )),
         }
     }

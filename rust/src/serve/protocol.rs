@@ -9,9 +9,12 @@
 //! [`CacheReader`](crate::cache::CacheReader) decode.
 //!
 //! Requests: `GetRange` (a contiguous position range, optionally pinned to a
-//! cluster-manifest epoch), `GetManifest` (the directory totals + kind tag,
-//! for spec/cache compatibility checks before training), `GetStats` (latency
-//! histogram + counters), `GetCluster` (the cluster shard map), `Ping`.
+//! cluster-manifest epoch and optionally carrying a trace id), `GetManifest`
+//! (the directory totals + kind tag, for spec/cache compatibility checks
+//! before training), `GetStats` (latency histogram + counters),
+//! `GetMetrics` (the unified registry as Prometheus-style text),
+//! `GetTrace` (the server's finished-span ring), `GetCluster` (the cluster
+//! shard map), `Ping`.
 //! Errors come back as typed [`Response::Error`] frames with an [`ErrCode`]
 //! — a client can distinguish transient overload (retry with backoff) from a
 //! request it must not repeat. A cluster member answers ranges it no longer
@@ -23,15 +26,20 @@ use std::io::{self, Read, Write};
 
 use crate::cache::SparseTarget;
 use crate::cluster::ClusterManifest;
+use crate::obs::{ServerTiming, Span, SpanKind};
 use crate::serve::stats::{StatsSnapshot, HIST_BUCKETS};
 use crate::spec::{CacheKind, SpecError};
 
 /// Current wire protocol version; bumped on any incompatible change.
-/// v3 added the cluster epoch to `GetRange`/`Targets`/`Manifest`/`Stats`,
-/// plus the `GetCluster`/`Cluster` manifest exchange and the `WrongEpoch`
-/// frame (docs/SERVING.md §Cluster). v2 extended the `Stats` frame with the
-/// tiered-source counters (hits/misses/backfilled/origin_computes).
-pub const PROTOCOL_VERSION: u8 = 3;
+/// v4 added request tracing and exposition (docs/OBSERVABILITY.md): a trace
+/// id on `GetRange`, a trace-id + server-phase-timing echo on `Targets`, the
+/// `GetMetrics`/`Metrics` and `GetTrace`/`Trace` exchanges, and the
+/// `hot_overflow` counter on `Stats`. v3 added the cluster epoch to
+/// `GetRange`/`Targets`/`Manifest`/`Stats`, plus the `GetCluster`/`Cluster`
+/// manifest exchange and the `WrongEpoch` frame (docs/SERVING.md §Cluster).
+/// v2 extended the `Stats` frame with the tiered-source counters
+/// (hits/misses/backfilled/origin_computes).
+pub const PROTOCOL_VERSION: u8 = 4;
 
 /// Hard cap on a frame payload (16 MiB): a corrupt or hostile length prefix
 /// must not allocate unboundedly.
@@ -49,6 +57,8 @@ pub const OP_GET_MANIFEST: u8 = 0x02;
 pub const OP_GET_STATS: u8 = 0x03;
 pub const OP_PING: u8 = 0x04;
 pub const OP_GET_CLUSTER: u8 = 0x05;
+pub const OP_GET_METRICS: u8 = 0x06;
+pub const OP_GET_TRACE: u8 = 0x07;
 
 /// Response opcodes (high bit set).
 pub const OP_TARGETS: u8 = 0x81;
@@ -57,7 +67,13 @@ pub const OP_STATS: u8 = 0x83;
 pub const OP_PONG: u8 = 0x84;
 pub const OP_CLUSTER: u8 = 0x85;
 pub const OP_WRONG_EPOCH: u8 = 0x86;
+pub const OP_METRICS: u8 = 0x87;
+pub const OP_TRACE: u8 = 0x88;
 pub const OP_ERROR: u8 = 0xEE;
+
+/// The trace id meaning "untraced": standalone/unpinned requests carry it,
+/// and a server answering it opens no span scope.
+pub const NO_TRACE: u64 = 0;
 
 /// The epoch value meaning "no cluster": standalone servers stamp it on
 /// every `Targets` frame, and a `GetRange` carrying it skips the epoch
@@ -126,10 +142,18 @@ impl RemoteManifest {
 pub enum Request {
     /// targets for `[start, start + len)`; `epoch` pins the request to a
     /// cluster-manifest generation ([`NO_EPOCH`] = unpinned — standalone
-    /// clients, or a routed reader probing after a manifest refetch)
-    GetRange { start: u64, len: u32, epoch: u64 },
+    /// clients, or a routed reader probing after a manifest refetch).
+    /// `trace` is the 64-bit trace id minted at the trainer root span
+    /// ([`NO_TRACE`] = untraced) — a traced server opens a `Server` span and
+    /// echoes the id plus its phase timings on the answering `Targets` frame
+    GetRange { start: u64, len: u32, epoch: u64, trace: u64 },
     GetManifest,
     GetStats,
+    /// the server's unified metrics registry snapshot, as Prometheus-style
+    /// text (docs/OBSERVABILITY.md §Exposition)
+    GetMetrics,
+    /// the server's finished-span ring, oldest first
+    GetTrace,
     GetCluster,
     Ping,
 }
@@ -138,10 +162,18 @@ pub enum Request {
 pub enum Response {
     /// `epoch` echoes the manifest generation the server answered under
     /// ([`NO_EPOCH`] standalone) — a routed reader discards any answer whose
-    /// epoch disagrees with its manifest instead of mixing generations
-    Targets { epoch: u64, targets: Vec<SparseTarget> },
+    /// epoch disagrees with its manifest instead of mixing generations.
+    /// `trace` echoes the request's trace id and `timing` the server's
+    /// queue/decode/origin phase split (all-zero when untraced) — the
+    /// serve-layer `Server-Timing` header, letting the client attribute
+    /// `network = rtt − timing.total_ns()`
+    Targets { epoch: u64, trace: u64, timing: ServerTiming, targets: Vec<SparseTarget> },
     Manifest(RemoteManifest),
     Stats(StatsSnapshot),
+    /// Prometheus-style text rendering of the server's metrics registry
+    Metrics(String),
+    /// the server's retained finished spans, oldest first
+    Trace(Vec<Span>),
     /// the cluster shard map (range partition + replica sets)
     Cluster(ClusterManifest),
     Pong,
@@ -157,7 +189,7 @@ pub enum Response {
 /// decoded normally.
 #[derive(Debug)]
 pub enum RangeFrame {
-    Targets { epoch: u64 },
+    Targets { epoch: u64, trace: u64, timing: ServerTiming },
     Other(Response),
 }
 
@@ -275,6 +307,25 @@ fn preamble(opcode: u8) -> Vec<u8> {
     vec![PROTOCOL_VERSION, opcode]
 }
 
+/// The v4 trace/timing echo block shared by every `Targets` body: trace id,
+/// then the server's queue/decode/origin phase nanoseconds.
+fn put_trace_timing(p: &mut Vec<u8>, trace: u64, timing: ServerTiming) {
+    p.extend_from_slice(&trace.to_le_bytes());
+    p.extend_from_slice(&timing.queue_ns.to_le_bytes());
+    p.extend_from_slice(&timing.decode_ns.to_le_bytes());
+    p.extend_from_slice(&timing.origin_ns.to_le_bytes());
+}
+
+fn get_trace_timing(c: &mut Cursor<'_>) -> io::Result<(u64, ServerTiming)> {
+    let trace = c.u64()?;
+    let timing = ServerTiming {
+        queue_ns: c.u64()?,
+        decode_ns: c.u64()?,
+        origin_ns: c.u64()?,
+    };
+    Ok((trace, timing))
+}
+
 /// Split a payload into (opcode, body), validating the version byte.
 fn open_payload(payload: &[u8]) -> io::Result<(u8, Cursor<'_>)> {
     if payload.len() < 2 {
@@ -292,15 +343,18 @@ fn open_payload(payload: &[u8]) -> io::Result<(u8, Cursor<'_>)> {
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         match self {
-            Request::GetRange { start, len, epoch } => {
+            Request::GetRange { start, len, epoch, trace } => {
                 let mut p = preamble(OP_GET_RANGE);
                 p.extend_from_slice(&start.to_le_bytes());
                 p.extend_from_slice(&len.to_le_bytes());
                 p.extend_from_slice(&epoch.to_le_bytes());
+                p.extend_from_slice(&trace.to_le_bytes());
                 p
             }
             Request::GetManifest => preamble(OP_GET_MANIFEST),
             Request::GetStats => preamble(OP_GET_STATS),
+            Request::GetMetrics => preamble(OP_GET_METRICS),
+            Request::GetTrace => preamble(OP_GET_TRACE),
             Request::GetCluster => preamble(OP_GET_CLUSTER),
             Request::Ping => preamble(OP_PING),
         }
@@ -309,11 +363,16 @@ impl Request {
     pub fn decode(payload: &[u8]) -> io::Result<Request> {
         let (op, mut c) = open_payload(payload)?;
         let req = match op {
-            OP_GET_RANGE => {
-                Request::GetRange { start: c.u64()?, len: c.u32()?, epoch: c.u64()? }
-            }
+            OP_GET_RANGE => Request::GetRange {
+                start: c.u64()?,
+                len: c.u32()?,
+                epoch: c.u64()?,
+                trace: c.u64()?,
+            },
             OP_GET_MANIFEST => Request::GetManifest,
             OP_GET_STATS => Request::GetStats,
+            OP_GET_METRICS => Request::GetMetrics,
+            OP_GET_TRACE => Request::GetTrace,
             OP_GET_CLUSTER => Request::GetCluster,
             OP_PING => Request::Ping,
             other => return Err(bad(format!("unknown request opcode {other:#04x}"))),
@@ -326,9 +385,10 @@ impl Request {
 impl Response {
     pub fn encode(&self) -> Vec<u8> {
         match self {
-            Response::Targets { epoch, targets } => {
+            Response::Targets { epoch, trace, timing, targets } => {
                 let mut p = preamble(OP_TARGETS);
                 p.extend_from_slice(&epoch.to_le_bytes());
+                put_trace_timing(&mut p, *trace, *timing);
                 p.extend_from_slice(&(targets.len() as u32).to_le_bytes());
                 for t in targets {
                     debug_assert!(t.ids.len() < u16::MAX as usize);
@@ -384,6 +444,7 @@ impl Response {
                 for h in &s.hot {
                     p.extend_from_slice(&h.to_le_bytes());
                 }
+                p.extend_from_slice(&s.hot_overflow.to_le_bytes());
                 p
             }
             Response::Cluster(m) => {
@@ -394,6 +455,29 @@ impl Response {
                 let text = m.to_json_string();
                 p.extend_from_slice(&(text.len() as u32).to_le_bytes());
                 p.extend_from_slice(text.as_bytes());
+                p
+            }
+            Response::Metrics(text) => {
+                let mut p = preamble(OP_METRICS);
+                p.extend_from_slice(&(text.len() as u32).to_le_bytes());
+                p.extend_from_slice(text.as_bytes());
+                p
+            }
+            Response::Trace(spans) => {
+                let mut p = preamble(OP_TRACE);
+                p.extend_from_slice(&(spans.len() as u32).to_le_bytes());
+                for s in spans {
+                    p.extend_from_slice(&s.trace.to_le_bytes());
+                    p.push(s.kind as u8);
+                    p.extend_from_slice(&s.member.to_le_bytes());
+                    p.extend_from_slice(&s.shard.to_le_bytes());
+                    p.extend_from_slice(&s.start.to_le_bytes());
+                    p.extend_from_slice(&s.len.to_le_bytes());
+                    p.extend_from_slice(&s.total_ns.to_le_bytes());
+                    for ph in &s.phases {
+                        p.extend_from_slice(&ph.to_le_bytes());
+                    }
+                }
                 p
             }
             Response::Pong => preamble(OP_PONG),
@@ -415,13 +499,20 @@ impl Response {
 
     /// Encode an `OP_TARGETS` payload straight from a CSR block — the
     /// server-side symmetric of [`Response::decode_targets_into`]: byte-
-    /// identical to `Response::Targets { epoch, targets: block.to_targets() }
-    /// .encode()` without materializing the per-position vectors. Server
-    /// workers call this with a reused block, so a served range costs one
-    /// decode and one encode, no intermediate `Vec<SparseTarget>`.
-    pub fn encode_targets(block: &crate::cache::RangeBlock, epoch: u64) -> Vec<u8> {
+    /// identical to the equivalent `Response::Targets { .. }.encode()`
+    /// without materializing the per-position vectors. Server workers call
+    /// this with a reused block, so a served range costs one decode and one
+    /// encode, no intermediate `Vec<SparseTarget>`. `trace`/`timing` are the
+    /// v4 trace echo ([`NO_TRACE`] and zeros for untraced requests).
+    pub fn encode_targets(
+        block: &crate::cache::RangeBlock,
+        epoch: u64,
+        trace: u64,
+        timing: ServerTiming,
+    ) -> Vec<u8> {
         let mut p = preamble(OP_TARGETS);
         p.extend_from_slice(&epoch.to_le_bytes());
+        put_trace_timing(&mut p, trace, timing);
         p.extend_from_slice(&(block.len() as u32).to_le_bytes());
         for i in 0..block.len() {
             let (ids, probs) = block.get(i);
@@ -452,6 +543,7 @@ impl Response {
         }
         out.clear();
         let epoch = c.u64()?;
+        let (trace, timing) = get_trace_timing(&mut c)?;
         let count = c.u32()? as usize;
         for _ in 0..count {
             let k = c.u16()? as usize;
@@ -463,7 +555,7 @@ impl Response {
             out.end_position();
         }
         c.done()?;
-        Ok(RangeFrame::Targets { epoch })
+        Ok(RangeFrame::Targets { epoch, trace, timing })
     }
 
     pub fn decode(payload: &[u8]) -> io::Result<Response> {
@@ -471,6 +563,7 @@ impl Response {
         let resp = match op {
             OP_TARGETS => {
                 let epoch = c.u64()?;
+                let (trace, timing) = get_trace_timing(&mut c)?;
                 let count = c.u32()? as usize;
                 let mut targets = Vec::with_capacity(count.min(1 << 20));
                 for _ in 0..count {
@@ -483,7 +576,7 @@ impl Response {
                     }
                     targets.push(SparseTarget { ids, probs });
                 }
-                Response::Targets { epoch, targets }
+                Response::Targets { epoch, trace, timing, targets }
             }
             OP_MANIFEST => {
                 let cache_version = c.u32()?;
@@ -541,6 +634,7 @@ impl Response {
                 for _ in 0..nh {
                     hot.push(c.u64()?);
                 }
+                let hot_overflow = c.u64()?;
                 Response::Stats(StatsSnapshot {
                     requests,
                     rejected,
@@ -552,6 +646,7 @@ impl Response {
                     tier,
                     hist,
                     hot,
+                    hot_overflow,
                 })
             }
             OP_CLUSTER => {
@@ -559,6 +654,32 @@ impl Response {
                 let text = std::str::from_utf8(c.take(n)?)
                     .map_err(|_| bad("non-utf8 cluster manifest"))?;
                 Response::Cluster(ClusterManifest::from_json_str(text).map_err(bad)?)
+            }
+            OP_METRICS => {
+                let n = c.u32()? as usize;
+                let text = std::str::from_utf8(c.take(n)?)
+                    .map_err(|_| bad("non-utf8 metrics text"))?;
+                Response::Metrics(text.to_string())
+            }
+            OP_TRACE => {
+                let count = c.u32()? as usize;
+                let mut spans = Vec::with_capacity(count.min(1 << 16));
+                for _ in 0..count {
+                    let trace = c.u64()?;
+                    let kind = SpanKind::from_u8(c.u8()?)
+                        .ok_or_else(|| bad("unknown span kind"))?;
+                    let member = c.u32()?;
+                    let shard = c.u32()?;
+                    let start = c.u64()?;
+                    let len = c.u32()?;
+                    let total_ns = c.u64()?;
+                    let mut phases = [0u64; crate::obs::PHASE_COUNT];
+                    for ph in phases.iter_mut() {
+                        *ph = c.u64()?;
+                    }
+                    spans.push(Span { trace, kind, member, shard, start, len, total_ns, phases });
+                }
+                Response::Trace(spans)
             }
             OP_PONG => Response::Pong,
             OP_WRONG_EPOCH => Response::WrongEpoch { epoch: c.u64()? },
@@ -589,10 +710,22 @@ mod tests {
 
     #[test]
     fn request_roundtrip() {
-        roundtrip_req(Request::GetRange { start: 123_456_789, len: 512, epoch: NO_EPOCH });
-        roundtrip_req(Request::GetRange { start: 7, len: 1, epoch: u64::MAX });
+        roundtrip_req(Request::GetRange {
+            start: 123_456_789,
+            len: 512,
+            epoch: NO_EPOCH,
+            trace: NO_TRACE,
+        });
+        roundtrip_req(Request::GetRange {
+            start: 7,
+            len: 1,
+            epoch: u64::MAX,
+            trace: 0xDEAD_BEEF_CAFE_F00D,
+        });
         roundtrip_req(Request::GetManifest);
         roundtrip_req(Request::GetStats);
+        roundtrip_req(Request::GetMetrics);
+        roundtrip_req(Request::GetTrace);
         roundtrip_req(Request::GetCluster);
         roundtrip_req(Request::Ping);
     }
@@ -604,12 +737,20 @@ mod tests {
             SparseTarget::default(), // empty target (missing position)
             SparseTarget { ids: vec![7], probs: vec![f32::MIN_POSITIVE] },
         ];
-        let encoded = Response::Targets { epoch: 7, targets: targets.clone() }.encode();
-        let Response::Targets { epoch, targets: back } = Response::decode(&encoded).unwrap()
+        let timing = ServerTiming { queue_ns: 11, decode_ns: 22, origin_ns: 33 };
+        let encoded = Response::Targets {
+            epoch: 7,
+            trace: 0xABCD,
+            timing,
+            targets: targets.clone(),
+        }
+        .encode();
+        let Response::Targets { epoch, trace, timing: t2, targets: back } =
+            Response::decode(&encoded).unwrap()
         else {
             panic!("wrong variant")
         };
-        assert_eq!(epoch, 7);
+        assert_eq!((epoch, trace, t2), (7, 0xABCD, timing));
         assert_eq!(back, targets);
         // bit-exactness, not approximate equality
         assert_eq!(back[2].probs[0].to_bits(), f32::MIN_POSITIVE.to_bits());
@@ -627,10 +768,11 @@ mod tests {
         for t in &targets {
             block.push_target(t);
         }
-        for epoch in [NO_EPOCH, 3] {
+        let timing = ServerTiming { queue_ns: 5, decode_ns: 9, origin_ns: 0 };
+        for (epoch, trace) in [(NO_EPOCH, NO_TRACE), (3, 0x1234_5678_9ABC_DEF0)] {
             assert_eq!(
-                Response::encode_targets(&block, epoch),
-                Response::Targets { epoch, targets: targets.clone() }.encode(),
+                Response::encode_targets(&block, epoch, trace, timing),
+                Response::Targets { epoch, trace, timing, targets: targets.clone() }.encode(),
                 "block encode must be byte-identical to the Vec<SparseTarget> encode"
             );
         }
@@ -644,14 +786,21 @@ mod tests {
             SparseTarget::default(),
             SparseTarget { ids: vec![7], probs: vec![1e-7] },
         ];
-        let payload = Response::Targets { epoch: 5, targets: targets.clone() }.encode();
+        let timing = ServerTiming { queue_ns: 1, decode_ns: 2, origin_ns: 3 };
+        let payload = Response::Targets {
+            epoch: 5,
+            trace: 0xFEED,
+            timing,
+            targets: targets.clone(),
+        }
+        .encode();
         let mut block = RangeBlock::new();
-        let RangeFrame::Targets { epoch } =
+        let RangeFrame::Targets { epoch, trace, timing: t2 } =
             Response::decode_targets_into(&payload, &mut block).unwrap()
         else {
             panic!("expected a decoded Targets frame")
         };
-        assert_eq!(epoch, 5);
+        assert_eq!((epoch, trace, t2), (5, 0xFEED, timing));
         assert_eq!(block.to_targets(), targets);
         let (_, probs0) = block.get(0);
         assert_eq!(probs0[1].to_bits(), f32::MIN_POSITIVE.to_bits());
@@ -671,7 +820,13 @@ mod tests {
         };
         assert_eq!(back, Response::WrongEpoch { epoch: 9 });
         // trailing garbage in a Targets frame is rejected
-        let mut bad = Response::Targets { epoch: 5, targets }.encode();
+        let mut bad = Response::Targets {
+            epoch: 5,
+            trace: NO_TRACE,
+            timing: ServerTiming::default(),
+            targets,
+        }
+        .encode();
         bad.push(0);
         assert!(Response::decode_targets_into(&bad, &mut block).is_err());
     }
@@ -769,7 +924,66 @@ mod tests {
             },
             hist: (0..HIST_BUCKETS as u64).collect(),
             hot: vec![40, 0, 60],
+            hot_overflow: 2,
         }));
+    }
+
+    #[test]
+    fn metrics_roundtrip() {
+        roundtrip_resp(Response::Metrics(String::new()));
+        roundtrip_resp(Response::Metrics(
+            "# TYPE rskd_serve_requests_total counter\nrskd_serve_requests_total 42\n".into(),
+        ));
+        // non-utf8 body is rejected
+        let mut p = preamble(OP_METRICS);
+        p.extend_from_slice(&2u32.to_le_bytes());
+        p.extend_from_slice(&[0xFF, 0xFE]);
+        assert!(Response::decode(&p).is_err());
+    }
+
+    #[test]
+    fn trace_roundtrip() {
+        use crate::obs::PHASE_COUNT;
+        roundtrip_resp(Response::Trace(Vec::new()));
+        roundtrip_resp(Response::Trace(vec![
+            Span {
+                trace: 0x1111_2222_3333_4444,
+                kind: SpanKind::Root,
+                member: 0,
+                shard: u32::MAX,
+                start: 9_000,
+                len: 256,
+                total_ns: 1_234_567,
+                phases: [0, 0, 0, 1_000],
+            },
+            Span {
+                trace: 0x1111_2222_3333_4444,
+                kind: SpanKind::Segment,
+                member: 2,
+                shard: 7,
+                start: 9_000,
+                len: 128,
+                total_ns: 600_000,
+                phases: [10, 20, 30, 40],
+            },
+            Span {
+                trace: 5,
+                kind: SpanKind::Server,
+                member: 0,
+                shard: 3,
+                start: 0,
+                len: 1,
+                total_ns: 0,
+                phases: [0; PHASE_COUNT],
+            },
+        ]));
+        // unknown span kind byte is a decode error
+        let mut p = preamble(OP_TRACE);
+        p.extend_from_slice(&1u32.to_le_bytes());
+        p.extend_from_slice(&7u64.to_le_bytes());
+        p.push(99); // bad kind
+        p.extend_from_slice(&[0u8; 4 + 4 + 8 + 4 + 8 + 8 * PHASE_COUNT]);
+        assert!(Response::decode(&p).is_err());
     }
 
     #[test]

@@ -62,9 +62,10 @@ use crate::cache::{
     WriteThrough,
 };
 use crate::cluster::ClusterControl;
+use crate::obs::{self, Phase, ServerTiming, SpanKind, SpanScope};
 use crate::serve::protocol::{
     read_frame, write_frame, ErrCode, RemoteManifest, Request, Response, MAX_FRAME, NO_EPOCH,
-    PROTOCOL_VERSION,
+    NO_TRACE, PROTOCOL_VERSION,
 };
 use crate::serve::stats::{ServeStats, StatsSnapshot};
 use crate::serve::{Endpoint, Stream};
@@ -242,6 +243,12 @@ struct Job {
     /// cluster epoch stamped at admission time (the epoch the request was
     /// checked against); `NO_EPOCH` on standalone servers
     epoch: u64,
+    /// trace id from the request ([`NO_TRACE`] = untraced; nonzero makes the
+    /// worker open a `Server` span and echo phase timings on the response)
+    trace: u64,
+    /// when the connection thread queued the job — the worker measures its
+    /// queue-wait phase from this
+    enqueued: Instant,
     done: mpsc::SyncSender<Result<Vec<u8>, String>>,
 }
 
@@ -335,6 +342,7 @@ impl Server {
             conns: Mutex::new(Vec::new()),
             cluster,
         });
+        register_collector(&shared, &endpoint);
         let worker_handles = (0..workers)
             .map(|i| {
                 let shared = Arc::clone(&shared);
@@ -411,6 +419,48 @@ impl Drop for Server {
     }
 }
 
+/// Re-register this server's stats into the process-wide metrics registry
+/// (docs/OBSERVABILITY.md): a snapshot-time collector reading the same
+/// counters the `Stats` frame carries, labeled by bound endpoint so several
+/// servers in one process (cluster tests, self-hosted load-gen) stay
+/// distinguishable. The collector holds a `Weak` — once the server is
+/// dropped it reports dead and is pruned from the registry.
+fn register_collector(shared: &Arc<Shared>, endpoint: &Endpoint) {
+    let weak = Arc::downgrade(shared);
+    let ep = endpoint.to_string();
+    obs::registry().register_collector(Box::new(move |c| {
+        let Some(sh) = weak.upgrade() else { return false };
+        let labels: &[(&str, &str)] = &[("endpoint", ep.as_str())];
+        let s = &sh.stats;
+        c.counter("rskd_serve_requests_total", labels, s.requests.load(Ordering::Relaxed));
+        c.counter("rskd_serve_rejected_total", labels, s.rejected.load(Ordering::Relaxed));
+        c.counter("rskd_serve_errors_total", labels, s.errors.load(Ordering::Relaxed));
+        c.counter(
+            "rskd_serve_wrong_epoch_total",
+            labels,
+            s.wrong_epoch.load(Ordering::Relaxed),
+        );
+        c.gauge("rskd_serve_epoch", labels, epoch_of(&sh));
+        let snap = sh.stats.snapshot_with(
+            0,
+            0,
+            sh.source.tier_counters(),
+            NO_EPOCH, // counters below come from the source, not this snapshot
+        );
+        c.counter("rskd_serve_hot_overflow_total", labels, snap.hot_overflow);
+        c.hist("rskd_serve_latency_us", labels, &snap.hist);
+        let (loads, coalesced) = sh.source.load_counters();
+        c.counter("rskd_shard_loads_total", labels, loads);
+        c.counter("rskd_coalesced_loads_total", labels, coalesced);
+        let t = snap.tier;
+        c.counter("rskd_tier_hits_total", labels, t.hits);
+        c.counter("rskd_tier_misses_total", labels, t.misses);
+        c.counter("rskd_tier_backfilled_total", labels, t.backfilled);
+        c.counter("rskd_tier_origin_computes_total", labels, t.origin_computes);
+        true
+    }));
+}
+
 fn accept_loop(listener: Listener, shared: &Arc<Shared>) {
     loop {
         let stream = match &listener {
@@ -440,13 +490,11 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize) {
     // decode leaves it in a state the next clear fixes)
     let mut block = RangeBlock::new();
     while let Some(job) = queue.pop() {
+        let queue_wait = job.enqueued.elapsed();
         // a panic must not kill the worker: its queue would keep accepting
         // jobs nobody pops, wedging every connection routed to it
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
-            shared
-                .source
-                .read_range_into(job.start, job.len, &mut block)
-                .map(|()| Response::encode_targets(&block, job.epoch))
+            serve_job(shared, &job, queue_wait, &mut block)
         }))
         .unwrap_or_else(|_| {
             Err(std::io::Error::new(
@@ -458,6 +506,50 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize) {
         // a dead connection just drops the receiver; nothing to do
         let _ = job.done.send(res);
     }
+}
+
+/// One range read on a worker: decode into the reused block, encode the
+/// `Targets` payload. A traced job additionally opens a `Server` span
+/// (back-dated over its queue wait), lets the tier stack credit origin
+/// compute via [`obs::phase_add`], attributes the rest of the read to
+/// `Decode`, and echoes the phase split on the wire so the client can
+/// derive its network share.
+fn serve_job(
+    shared: &Shared,
+    job: &Job,
+    queue_wait: Duration,
+    block: &mut RangeBlock,
+) -> std::io::Result<Vec<u8>> {
+    if job.trace == NO_TRACE {
+        shared.source.read_range_into(job.start, job.len, block)?;
+        return Ok(Response::encode_targets(block, job.epoch, NO_TRACE, ServerTiming::default()));
+    }
+    let shard = shared.source.shard_index_of(job.start).map_or(u32::MAX, |s| s as u32);
+    let mut scope = SpanScope::begin(
+        obs::spans(),
+        SpanKind::Server,
+        job.trace,
+        0,
+        shard,
+        job.start,
+        job.len as u32,
+    );
+    scope.backdate(queue_wait);
+    scope.span_phase(Phase::Queue, queue_wait);
+    let t0 = Instant::now();
+    let res = shared.source.read_range_into(job.start, job.len, block);
+    let read_ns = t0.elapsed().as_nanos() as u64;
+    // whatever the tier stack spent in origin compute already sits in the
+    // scope's scratch; the rest of the read is decode + copy
+    let origin_ns = obs::phase_scratch(Phase::Origin);
+    let decode_ns = read_ns.saturating_sub(origin_ns);
+    scope.span_phase(Phase::Decode, Duration::from_nanos(decode_ns));
+    res?; // a failed read still records its span via the scope's Drop
+    let timing =
+        ServerTiming { queue_ns: queue_wait.as_nanos() as u64, decode_ns, origin_ns };
+    let payload = Response::encode_targets(block, job.epoch, job.trace, timing);
+    scope.finish();
+    Ok(payload)
 }
 
 /// Worker index for a range starting at `start`: the owning shard of the
@@ -549,6 +641,12 @@ fn handle_request(req: Request, shared: &Arc<Shared>) -> Vec<u8> {
             ))
             .encode()
         }
+        Request::GetMetrics => {
+            // the process-wide registry: this server's collector plus every
+            // other subsystem registered in-process
+            Response::Metrics(obs::render_global()).encode()
+        }
+        Request::GetTrace => Response::Trace(obs::spans().drain_ordered()).encode(),
         Request::GetCluster => match &shared.cluster {
             Some(ctl) => Response::Cluster(ctl.manifest()).encode(),
             None => {
@@ -560,13 +658,19 @@ fn handle_request(req: Request, shared: &Arc<Shared>) -> Vec<u8> {
                 .encode()
             }
         },
-        Request::GetRange { start, len, epoch } => {
-            serve_range(shared, start, len as usize, epoch)
+        Request::GetRange { start, len, epoch, trace } => {
+            serve_range(shared, start, len as usize, epoch, trace)
         }
     }
 }
 
-fn serve_range(shared: &Arc<Shared>, start: u64, len: usize, req_epoch: u64) -> Vec<u8> {
+fn serve_range(
+    shared: &Arc<Shared>,
+    start: u64,
+    len: usize,
+    req_epoch: u64,
+    trace: u64,
+) -> Vec<u8> {
     if len > shared.cfg.max_range {
         shared.stats.errors.fetch_add(1, Ordering::Relaxed);
         return Response::Error {
@@ -603,7 +707,7 @@ fn serve_range(shared: &Arc<Shared>, start: u64, len: usize, req_epoch: u64) -> 
     let t0 = Instant::now();
     let worker = route(&*shared.source, start, shared.queues.len());
     let (tx, rx) = mpsc::sync_channel(1);
-    let job = Job { start, len, epoch, done: tx };
+    let job = Job { start, len, epoch, trace, enqueued: t0, done: tx };
     if shared.queues[worker].try_push(job).is_err() {
         shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
         return Response::Error {

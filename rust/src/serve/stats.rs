@@ -64,6 +64,12 @@ pub struct ServeStats {
     pub wrong_epoch: AtomicU64,
     pub hist: LatencyHistogram,
     hot: Vec<AtomicU64>,
+    /// `touch_shard` calls whose index fell outside the manifest-sized hot
+    /// table. Previously dropped silently — which starved
+    /// `rebalance --replicate-hot` of heat data whenever a source grew past
+    /// the shard count the table was sized from; now every lost touch is at
+    /// least visible here.
+    hot_overflow: AtomicU64,
 }
 
 impl ServeStats {
@@ -75,13 +81,15 @@ impl ServeStats {
             wrong_epoch: AtomicU64::new(0),
             hist: LatencyHistogram::default(),
             hot: (0..shard_count).map(|_| AtomicU64::new(0)).collect(),
+            hot_overflow: AtomicU64::new(0),
         }
     }
 
     pub fn touch_shard(&self, idx: usize) {
-        if let Some(h) = self.hot.get(idx) {
-            h.fetch_add(1, Ordering::Relaxed);
-        }
+        match self.hot.get(idx) {
+            Some(h) => h.fetch_add(1, Ordering::Relaxed),
+            None => self.hot_overflow.fetch_add(1, Ordering::Relaxed),
+        };
     }
 
     /// Freeze every counter, folding in the reader-level counters the server
@@ -107,6 +115,7 @@ impl ServeStats {
             tier,
             hist: self.hist.snapshot(),
             hot: self.hot.iter().map(|h| h.load(Ordering::Relaxed)).collect(),
+            hot_overflow: self.hot_overflow.load(Ordering::Relaxed),
         }
     }
 }
@@ -135,6 +144,10 @@ pub struct StatsSnapshot {
     pub hist: Vec<u64>,
     /// per-shard request-overlap counters, indexed like the manifest shards
     pub hot: Vec<u64>,
+    /// shard touches whose index fell outside the hot table — nonzero means
+    /// the served source grew past the shard count the table was sized from
+    /// and heat rankings are undercounting
+    pub hot_overflow: u64,
 }
 
 impl StatsSnapshot {
@@ -221,10 +234,11 @@ mod tests {
             stats.touch_shard(2);
         }
         stats.touch_shard(0);
-        stats.touch_shard(99); // out of range: ignored, not a panic
+        stats.touch_shard(99); // out of range: counted as overflow, not lost
         let s = stats.snapshot_with(0, 0, TierCounters::default(), 7);
         assert_eq!((s.epoch, s.wrong_epoch), (7, 0));
         assert_eq!(s.hot_shards(10), vec![(2, 5), (0, 1)]);
         assert_eq!(s.hot_shards(1), vec![(2, 5)]);
+        assert_eq!(s.hot_overflow, 1, "out-of-range touches must be visible");
     }
 }

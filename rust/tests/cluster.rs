@@ -211,11 +211,10 @@ fn wire_level_epoch_protocol() {
     let mut client = ServeClient::connect(&eps[0]).unwrap();
     let mut block = RangeBlock::new();
 
-    // correctly pinned owned range: targets stamped with the epoch
-    assert_eq!(
-        client.read_range_at(10, 20, 1, &mut block).unwrap(),
-        RangeRead::Targets { epoch: 1 }
-    );
+    // correctly pinned owned range: targets stamped with the epoch (the v4
+    // timing echo rides along; its values are wall-clock, not asserted)
+    let r = client.read_range_at(10, 20, 1, &mut block).unwrap();
+    assert!(matches!(r, RangeRead::Targets { epoch: 1, .. }), "{r:?}");
     assert_eq!(block.len(), 20);
     // stale pin on an owned range: typed WrongEpoch carrying the current epoch
     assert_eq!(
@@ -224,10 +223,8 @@ fn wire_level_epoch_protocol() {
     );
     assert!(block.is_empty(), "WrongEpoch must leave the block cleared");
     // unpinned probe: epoch check skipped, ownership still enforced
-    assert_eq!(
-        client.read_range_at(10, 20, NO_EPOCH, &mut block).unwrap(),
-        RangeRead::Targets { epoch: 1 }
-    );
+    let r = client.read_range_at(10, 20, NO_EPOCH, &mut block).unwrap();
+    assert!(matches!(r, RangeRead::Targets { epoch: 1, .. }), "{r:?}");
     assert_eq!(
         client.read_range_at(150, 20, NO_EPOCH, &mut block).unwrap(),
         RangeRead::WrongEpoch { epoch: 1 },
@@ -251,16 +248,12 @@ fn wire_level_epoch_protocol() {
     let err = lone.cluster_manifest().unwrap_err();
     assert_eq!(err.kind(), std::io::ErrorKind::InvalidInput, "{err}");
     assert_eq!(lone.manifest().unwrap().epoch, NO_EPOCH);
-    assert_eq!(
-        lone.read_range_at(0, 8, NO_EPOCH, &mut block).unwrap(),
-        RangeRead::Targets { epoch: NO_EPOCH }
-    );
+    let r = lone.read_range_at(0, 8, NO_EPOCH, &mut block).unwrap();
+    assert!(matches!(r, RangeRead::Targets { epoch: NO_EPOCH, .. }), "{r:?}");
     // pinning an epoch at a standalone server is meaningless but answered
     // (NO_EPOCH servers admit everything; the response carries NO_EPOCH)
-    assert_eq!(
-        lone.read_range_at(0, 8, 7, &mut block).unwrap(),
-        RangeRead::Targets { epoch: NO_EPOCH }
-    );
+    let r = lone.read_range_at(0, 8, 7, &mut block).unwrap();
+    assert!(matches!(r, RangeRead::Targets { epoch: NO_EPOCH, .. }), "{r:?}");
     let _ = std::fs::remove_dir_all(&dir);
     let _ = std::fs::remove_dir_all(&sdir);
 }
