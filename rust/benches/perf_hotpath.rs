@@ -16,6 +16,9 @@
 //!  observability — span-recording cost and traced-vs-untraced warm serve
 //!             round-trips; under `RSKD_PERF_SMOKE=1` gates 0 allocs per
 //!             recorded span and < 3% recording overhead per request.
+//!  resilience — disabled fault-hook cost and deadline plumbing on the warm
+//!             served path; under `RSKD_PERF_SMOKE=1` gates < 1% hook
+//!             overhead per request and 0 extra allocs with a budget set.
 //!
 //! The cache-layer, serve, and assembly sections are host-only and run even
 //! when `artifacts/` is missing, so the storage + serving + block-assembly
@@ -812,6 +815,149 @@ fn observability_benches(report: &mut Report, smoke: bool) -> Json {
     ])
 }
 
+/// Resilience section (runs in smoke mode too): what the fault-injection
+/// hooks and deadline plumbing cost when *nothing is armed* — the
+/// zero-cost-when-disabled contract of docs/RESILIENCE.md. Measures one
+/// disabled hook (a relaxed load + branch), then a warm served range read
+/// with and without a deadline budget. Returns the `BENCH_hotpath.json`
+/// resilience object. Under `RSKD_PERF_SMOKE=1` it *asserts* the per-request
+/// hook overhead stays under 1% of the warm round-trip and that carrying a
+/// deadline budget adds zero allocations per range — the resilience CI gate.
+fn resilience_benches(report: &mut Report, smoke: bool) -> Json {
+    use rskd::fault::{self, FaultSite};
+    let budget = Duration::from_millis(if smoke { 200 } else { 800 });
+    let counting = alloc_count::is_counting();
+    report.line("--- resilience: disabled fault hooks + deadline plumbing on the warm path ---");
+    assert!(!fault::enabled(), "perf must run with no fault plan installed");
+
+    // (1) one disabled hook: a relaxed load and a branch
+    let batch = 1024u64;
+    let st_check = bench(2, budget, || {
+        for _ in 0..batch {
+            std::hint::black_box(fault::fires(FaultSite::ServeJobDelay));
+        }
+    });
+    let ns_per_check = st_check.median.as_nanos() as f64 / batch as f64;
+
+    // (2) warm served range read, with and without a deadline budget (the
+    // budget is generous — what is measured is the stamping, not expiry)
+    let n_positions = if smoke { 2048usize } else { 8192 };
+    let range = 256usize;
+    let p = zipf(512, 1.0);
+    let mut rng = Pcg::new(41);
+    let dir = std::env::temp_dir().join(format!("rskd-perf-res-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 512, 256).unwrap();
+    for pos in 0..n_positions as u64 {
+        assert!(w.push(pos, random_sampling(&p, 50, 1.0, &mut rng)));
+    }
+    w.finish().unwrap();
+    let reader = Arc::new(CacheReader::open(&dir).unwrap());
+    let server =
+        Server::start(reader, Endpoint::Unix(dir.join("s.sock")), ServeConfig::default())
+            .unwrap();
+    let mut client = ServeClient::connect(server.endpoint()).unwrap();
+    let mut block = RangeBlock::new();
+    client.read_range_into(256, range, &mut block).unwrap(); // warm the shard
+
+    let reads = 32u64;
+    let st_plain = bench(2, budget, || {
+        client.read_range_into(256, range, &mut block).unwrap();
+        std::hint::black_box(block.len());
+    });
+    let (allocs_plain, _) = alloc_count::measure(|| {
+        for _ in 0..reads {
+            client.read_range_into(256, range, &mut block).unwrap();
+        }
+        std::hint::black_box(block.len());
+    });
+    client.deadline = Some(Duration::from_secs(5));
+    let st_budget = bench(2, budget, || {
+        client.read_range_into(256, range, &mut block).unwrap();
+        std::hint::black_box(block.len());
+    });
+    let (allocs_budget, _) = alloc_count::measure(|| {
+        for _ in 0..reads {
+            client.read_range_into(256, range, &mut block).unwrap();
+        }
+        std::hint::black_box(block.len());
+    });
+    client.deadline = None;
+    drop(client);
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    // the gated number: a warm served read crosses four disabled sites
+    // (client drop; server drop, stall, job delay) plus the deadline-None
+    // branch — what that costs relative to the round-trip it rides on. The
+    // direct with-vs-without-budget delta is reported too, but loopback
+    // noise makes it a poor hard gate at 1%.
+    let checks_per_request = 5.0;
+    let plain_ns = st_plain.median.as_nanos() as f64;
+    let overhead_pct = 100.0 * checks_per_request * ns_per_check / plain_ns.max(1.0);
+    let measured_pct =
+        100.0 * (st_budget.median.as_secs_f64() / st_plain.median.as_secs_f64().max(1e-12) - 1.0);
+    let alloc_cell = |n: u64| {
+        if counting { format!("{n}") } else { "n/a".into() }
+    };
+    report.table(
+        &["resilience", "value"],
+        &[
+            vec!["disabled fault hook".into(), format!("{ns_per_check:.2} ns/check")],
+            vec!["warm served read, no deadline".into(),
+                 format!("{:.3} ms", st_plain.per_iter_ms())],
+            vec!["warm served read, 5s budget".into(),
+                 format!("{:.3} ms", st_budget.per_iter_ms())],
+            vec![format!("allocs / {reads} reads (no deadline)"), alloc_cell(allocs_plain)],
+            vec![format!("allocs / {reads} reads (5s budget)"), alloc_cell(allocs_budget)],
+            vec!["hook overhead (5 checks/request)".into(), format!("{overhead_pct:.4} %")],
+            vec!["measured budget-vs-none delta".into(), format!("{measured_pct:+.2} %")],
+        ],
+    );
+
+    if smoke {
+        assert!(counting, "smoke mode requires the counting allocator to be installed");
+        assert!(
+            overhead_pct < 1.0,
+            "disabled fault hooks cost {overhead_pct:.4}% >= 1% of a warm serve round-trip \
+             ({ns_per_check:.2} ns/check x {checks_per_request} checks vs {plain_ns:.0} ns)"
+        );
+        assert_eq!(
+            allocs_budget, allocs_plain,
+            "carrying a deadline budget must not allocate on the warm read path"
+        );
+        // 10% noise margin on the direct comparison: catches a gross
+        // regression (a syscall or lock on the budget path) without making
+        // the gate flaky on loopback jitter
+        assert!(
+            st_budget.median.as_secs_f64() <= st_plain.median.as_secs_f64() * 1.10,
+            "budgeted round-trip regressed: {:?} > {:?} (+10% margin)",
+            st_budget.median,
+            st_plain.median
+        );
+        report.line("[smoke gate passed: hook overhead < 1%, 0 extra allocs/range with a budget]");
+    }
+
+    Json::obj(vec![
+        ("config", Json::obj(vec![
+            ("positions", Json::num(n_positions as f64)),
+            ("range_len", Json::num(range as f64)),
+            ("checks_per_request", Json::num(checks_per_request)),
+            ("smoke", Json::Bool(smoke)),
+            ("alloc_counting", Json::Bool(counting)),
+        ])),
+        ("hook", Json::obj(vec![("ns_per_check", Json::num(ns_per_check))])),
+        ("deadline_plumbing", Json::obj(vec![
+            ("plain_ms", Json::num(st_plain.per_iter_ms())),
+            ("budget_ms", Json::num(st_budget.per_iter_ms())),
+            ("measured_delta_pct", Json::num(measured_pct)),
+            ("allocs_plain", Json::num(if counting { allocs_plain as f64 } else { -1.0 })),
+            ("allocs_budget", Json::num(if counting { allocs_budget as f64 } else { -1.0 })),
+        ])),
+        ("overhead_pct", Json::num(overhead_pct)),
+    ])
+}
+
 fn main() {
     let smoke = std::env::var("RSKD_PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
     let mut report = Report::new("perf_hotpath", "Hot-path timings per layer");
@@ -819,6 +965,7 @@ fn main() {
     let compression = compression_benches(&mut report, smoke);
     let cluster = cluster_benches(&mut report, smoke);
     let observability = observability_benches(&mut report, smoke);
+    let resilience = resilience_benches(&mut report, smoke);
     let bench_json = Json::obj(vec![
         ("schema_version", Json::num(1.0)),
         ("bench", Json::str("perf_hotpath")),
@@ -826,6 +973,7 @@ fn main() {
         ("compression", compression),
         ("cluster", cluster),
         ("observability", observability),
+        ("resilience", resilience),
     ]);
     // the repo-root perf trajectory point (schema: docs/BENCH_SCHEMA.md)
     match std::fs::write("BENCH_hotpath.json", bench_json.to_string()) {

@@ -72,9 +72,11 @@ pub struct CacheReader {
     loads: AtomicU64,
     /// shard requests that piggybacked on another thread's in-flight decode
     coalesced: AtomicU64,
-    /// artificial per-decode delay in microseconds (fault injection: lets
-    /// serving tests and `load-gen` simulate slow disks deterministically)
-    load_delay_us: AtomicU64,
+    /// per-reader fault plan (docs/RESILIENCE.md): `set_load_delay` is a
+    /// compat wrapper over its `CacheLoadDelay` site, and chaos runs can
+    /// tune torn-read/delay schedules per reader. The process-global plan
+    /// (`fault::install`) is consulted independently in `load_shard`.
+    faults: crate::fault::FaultPlan,
     pub positions: u64,
     pub rounds: u32,
     pub bytes: u64,
@@ -134,7 +136,7 @@ impl CacheReader {
             inflight: Mutex::new(HashMap::new()),
             loads: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
-            load_delay_us: AtomicU64::new(0),
+            faults: crate::fault::FaultPlan::new(0),
             positions,
             rounds,
             bytes,
@@ -221,11 +223,18 @@ impl CacheReader {
         // registration, lock-free recording afterwards)
         static DECODE_US: std::sync::OnceLock<crate::obs::Hist> = std::sync::OnceLock::new();
         let t0 = std::time::Instant::now();
-        let delay = self.load_delay_us.load(Ordering::Relaxed);
-        if delay > 0 {
-            std::thread::sleep(std::time::Duration::from_micros(delay));
-        }
+        // fault sites (docs/RESILIENCE.md): the per-reader plan carries the
+        // `set_load_delay` compat delay; the process-global plan drives
+        // chaos schedules. Both fast paths are one relaxed load.
+        use crate::fault::{self, FaultSite};
+        self.faults.maybe_fire(FaultSite::CacheLoadDelay);
+        fault::fires(FaultSite::CacheLoadDelay);
         let entry = &self.entries[idx];
+        if self.faults.maybe_fire(FaultSite::CacheTornRead)
+            || fault::fires(FaultSite::CacheTornRead)
+        {
+            return Err(Self::torn_read(&entry.path));
+        }
         let mut f = std::io::BufReader::new(std::fs::File::open(&entry.path)?);
         let hdr = format::read_header(&mut f)?;
         // the manifest declares one codec for the whole directory; a shard
@@ -434,8 +443,47 @@ impl CacheReader {
     /// knob for the serving tests and `load-gen --simulate-disk-ms`: it makes
     /// in-flight windows wide enough to exercise coalescing and backpressure
     /// deterministically. Zero (the default) disables it.
+    ///
+    /// Thin compat wrapper over the per-reader [`fault::FaultPlan`]'s
+    /// `CacheLoadDelay` site (the general knob: [`CacheReader::faults`]).
     pub fn set_load_delay(&self, delay: std::time::Duration) {
-        self.load_delay_us.store(delay.as_micros() as u64, Ordering::Relaxed);
+        use crate::fault::{FaultRule, FaultSite};
+        let rule = if delay.is_zero() {
+            FaultRule::never()
+        } else {
+            FaultRule::always_delay(delay)
+        };
+        self.faults.set_rule(FaultSite::CacheLoadDelay, rule);
+    }
+
+    /// This reader's private fault plan: per-instance delay/torn-read
+    /// schedules without touching the process-global plan.
+    pub fn faults(&self) -> &crate::fault::FaultPlan {
+        &self.faults
+    }
+
+    /// A torn shard read: decode a half-truncated image of the file. The
+    /// injected outcome must be a typed error — if the truncated prefix
+    /// happens to decode cleanly we refuse it explicitly, so the fault can
+    /// never surface as wrong probabilities.
+    fn torn_read(path: &Path) -> std::io::Error {
+        let bytes = match std::fs::read(path) {
+            Ok(b) => b,
+            Err(e) => return e,
+        };
+        let torn = &bytes[..bytes.len() / 2];
+        let mut cur = std::io::Cursor::new(torn);
+        match format::read_header(&mut cur).and_then(|hdr| Shard::read_body(&hdr, &mut cur)) {
+            Err(e) => e,
+            Ok(_) => std::io::Error::new(
+                std::io::ErrorKind::InvalidData,
+                format!(
+                    "torn read of {}: truncated shard image decoded cleanly; \
+                     refusing partial data",
+                    path.display()
+                ),
+            ),
+        }
     }
 }
 

@@ -466,6 +466,9 @@ impl<O: TargetSource> WriteThrough<O> {
                 ghi.checked_add(self.align - rem).unwrap_or(ghi)
             };
             let n = (hi - lo) as usize;
+            // fault site (docs/RESILIENCE.md): chaos plans can stretch the
+            // origin/backfill path — one relaxed load when disabled
+            crate::fault::fires(crate::fault::FaultSite::OriginDelay);
             // credit origin compute to the span open on this thread (a
             // traced server worker serving a cold range) — no-op untraced
             let t0 = std::time::Instant::now();

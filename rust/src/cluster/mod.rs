@@ -19,7 +19,11 @@
 //!   walks replica sets round-robin with failover, and on any `WrongEpoch`
 //!   (or epoch-mismatched answer) discards the in-progress range, refetches
 //!   the manifest, and re-routes — a completed read never mixes
-//!   generations. Drops under `MemoryTier` unchanged.
+//!   generations. Degradation is graceful and bounded: per-endpoint circuit
+//!   breakers eject failing members (re-admitted via `Ping` probes), p95-
+//!   tracked hedged reads re-issue straggling segments to the next replica,
+//!   and an optional deadline budget decomposes across the fan-out
+//!   (docs/RESILIENCE.md). Drops under `MemoryTier` unchanged.
 //! * [`rebalance`] — pure planners producing successor generations:
 //!   [`partition`] (initial even split), [`rotate`] (maximal-churn owner
 //!   shift), [`replicate_hot`] (extend the hottest shards' replica sets

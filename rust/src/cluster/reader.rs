@@ -14,15 +14,30 @@
 //! refetches the manifest from the fleet (adopting the highest epoch any
 //! member reports), and re-routes from scratch. A completed read therefore
 //! never mixes positions from two manifest generations.
+//!
+//! Three graceful-degradation mechanisms sit on top of the routing walk
+//! (docs/RESILIENCE.md):
+//! * **Hedged reads** — once a p95 latency estimate exists for recent
+//!   segments and a shard has ≥2 breaker-admitted replicas, a segment whose
+//!   primary has not answered within the hedge delay is re-issued to the
+//!   next replica; the first answer wins and the loser's connection is
+//!   discarded ([`ClusterCounters::hedges_launched`] / `hedges_won`).
+//! * **Circuit breakers** — per-endpoint failure tracking ejects a member
+//!   from rotation after consecutive failures; after a cooldown it is
+//!   re-admitted only once a live `Ping` probe succeeds.
+//! * **Deadline decomposition** — [`ClusterReader::set_deadline`] gives each
+//!   routed range a relative budget; every segment request (and every
+//!   failover/hedge retry) carries the *remaining* budget, so the whole
+//!   fan-out degrades into one typed `TimedOut`, never an unbounded hang.
 
 use std::collections::{BTreeMap, HashMap};
 use std::io;
 use std::sync::atomic::{AtomicU64, Ordering};
-use std::sync::{Arc, Mutex};
+use std::sync::{mpsc, Arc, Mutex};
 use std::time::{Duration, Instant};
 
 use crate::cache::{RangeBlock, SparseTarget, TargetSource};
-use crate::cluster::ClusterManifest;
+use crate::cluster::{ClusterManifest, ShardSpec};
 use crate::obs::{self, SpanKind, SpanScope};
 use crate::serve::protocol::RemoteManifest;
 use crate::serve::{Backoff, Endpoint, RangeRead, ServeClient};
@@ -42,6 +57,17 @@ pub struct ClusterCounters {
     pub failovers: u64,
     /// segments answered by a non-primary replica
     pub replica_served: u64,
+    /// hedge requests issued because a primary straggled past the p95 delay
+    pub hedges_launched: u64,
+    /// hedge requests that answered before their straggling primary
+    pub hedges_won: u64,
+    /// circuit breakers tripped open (endpoint ejected from rotation)
+    pub breaker_trips: u64,
+    /// breakers closed again after a successful half-open `Ping` probe
+    pub breaker_recoveries: u64,
+    /// segments abandoned with a typed `TimedOut` because the routed
+    /// range's deadline budget ran out
+    pub deadline_exceeded: u64,
 }
 
 /// How many times one range read may observe an epoch change (refetch +
@@ -53,6 +79,125 @@ const MAX_EPOCH_RETRIES: u32 = 8;
 /// waiting out a long reconnect schedule on a dead member.
 fn tune(c: &mut ServeClient) {
     c.reconnect = Backoff::new(Duration::from_millis(2), Duration::from_millis(100), 2);
+}
+
+/// Consecutive failures that trip an endpoint's breaker open.
+const BREAKER_TRIP_AFTER: u32 = 3;
+/// How long a tripped breaker stays open before a half-open `Ping` probe
+/// may re-admit the endpoint.
+const BREAKER_COOLDOWN: Duration = Duration::from_millis(250);
+/// Segment latency samples required before hedging arms.
+const HEDGE_MIN_SAMPLES: usize = 16;
+/// Sliding window of recent segment latencies the p95 is computed over.
+const HEDGE_WINDOW: usize = 64;
+/// Clamp band for the hedge delay: never hedge inside the floor (duplicate
+/// traffic for healthy sub-millisecond reads), never wait longer than the
+/// ceiling for a straggler.
+const HEDGE_DELAY_MIN: Duration = Duration::from_millis(1);
+const HEDGE_DELAY_MAX: Duration = Duration::from_millis(100);
+/// Hard cap on how long a detached racer thread may live when the caller
+/// set no deadline — guarantees the loser of a race always terminates
+/// instead of leaking a thread blocked on a silent straggler.
+const HEDGE_RACE_CAP: Duration = Duration::from_secs(30);
+
+/// Per-endpoint health state: `Closed` (in rotation) → `Open` after
+/// [`BREAKER_TRIP_AFTER`] consecutive failures (ejected) → half-open after
+/// [`BREAKER_COOLDOWN`], re-admitted only by a successful `Ping` probe.
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+enum BreakerState {
+    Closed,
+    Open { until: Instant },
+}
+
+#[derive(Clone, Copy, Debug)]
+struct Breaker {
+    state: BreakerState,
+    consecutive_failures: u32,
+}
+
+impl Breaker {
+    fn new() -> Breaker {
+        Breaker { state: BreakerState::Closed, consecutive_failures: 0 }
+    }
+}
+
+/// Fixed-window p95 tracker for segment latencies. The delay is recomputed
+/// on `record` (a 64-element stack sort, trivial next to a network RTT), so
+/// the read side is a plain field load.
+struct LatencyTrack {
+    samples: [u64; HEDGE_WINDOW],
+    next: usize,
+    filled: usize,
+    cached: Option<Duration>,
+}
+
+impl LatencyTrack {
+    fn new() -> LatencyTrack {
+        LatencyTrack { samples: [0; HEDGE_WINDOW], next: 0, filled: 0, cached: None }
+    }
+
+    fn record(&mut self, d: Duration) {
+        self.samples[self.next] = d.as_micros().min(u64::MAX as u128) as u64;
+        self.next = (self.next + 1) % HEDGE_WINDOW;
+        self.filled = (self.filled + 1).min(HEDGE_WINDOW);
+        if self.filled >= HEDGE_MIN_SAMPLES {
+            let mut v = self.samples;
+            let v = &mut v[..self.filled];
+            v.sort_unstable();
+            let p95 = v[(v.len() * 95 / 100).min(v.len() - 1)];
+            self.cached =
+                Some(Duration::from_micros(p95).clamp(HEDGE_DELAY_MIN, HEDGE_DELAY_MAX));
+        }
+    }
+
+    /// The armed hedge delay (clamped p95) — `None` until
+    /// [`HEDGE_MIN_SAMPLES`] segments have been timed.
+    fn hedge_delay(&self) -> Option<Duration> {
+        self.cached
+    }
+}
+
+/// Everything a detached racer thread needs, by value.
+#[derive(Clone, Copy)]
+struct RaceJob {
+    pos: u64,
+    seg: usize,
+    epoch: u64,
+    si: u32,
+    /// trace captured *before* spawning, so hedged duplicates share the
+    /// parent read's trace id across threads
+    trace: u64,
+    deadline: Option<Duration>,
+}
+
+/// One racer's report: sent exactly once; the loser's message is never
+/// received (the channel is gone) and its connection drops with it.
+struct RaceMsg {
+    hedge: bool,
+    /// index into the shard's endpoint list (0 = primary replica)
+    idx: usize,
+    key: String,
+    elapsed: Duration,
+    res: io::Result<RangeRead>,
+    client: ServeClient,
+    block: RangeBlock,
+}
+
+enum RaceOutcome {
+    Done(Fetch),
+    /// every racer failed; the sequential fallback should skip the first
+    /// `skip` rotation candidates (already tried and recorded)
+    Failed { skip: usize, last_err: io::Error },
+}
+
+fn deadline_err(si: usize, pos: u64, seg: usize) -> io::Error {
+    io::Error::new(
+        io::ErrorKind::TimedOut,
+        format!(
+            "cluster deadline budget expired before shard {si} segment [{pos}, {}) was served",
+            pos.saturating_add(seg as u64),
+        ),
+    )
 }
 
 struct Inner {
@@ -68,6 +213,12 @@ struct Inner {
     /// segments served per endpoint (display form) — what the perf harness
     /// reads to verify replication actually spread the hot shard
     served_by: BTreeMap<String, u64>,
+    /// per-endpoint circuit breakers, keyed by endpoint display form
+    breakers: HashMap<String, Breaker>,
+    /// recent segment latencies — the hedge-delay estimator
+    latency: LatencyTrack,
+    /// relative budget applied to each routed range read (`None` = unbounded)
+    deadline: Option<Duration>,
 }
 
 enum Fetch {
@@ -103,27 +254,317 @@ fn client_for<'p>(
 }
 
 impl Inner {
+    /// Record one failure against `key`'s breaker, tripping it open after
+    /// [`BREAKER_TRIP_AFTER`] consecutive failures.
+    fn breaker_failure(&mut self, key: &str) {
+        let b = self.breakers.entry(key.to_string()).or_insert_with(Breaker::new);
+        b.consecutive_failures += 1;
+        if b.consecutive_failures >= BREAKER_TRIP_AFTER && b.state == BreakerState::Closed {
+            b.state = BreakerState::Open { until: Instant::now() + BREAKER_COOLDOWN };
+            self.counters.breaker_trips += 1;
+        }
+    }
+
+    fn breaker_success(&mut self, key: &str) {
+        if let Some(b) = self.breakers.get_mut(key) {
+            b.state = BreakerState::Closed;
+            b.consecutive_failures = 0;
+        }
+    }
+
+    /// Is `ep` admitted to the data path right now? Closed → yes. Open and
+    /// cooling down → no. Open past its cooldown → half-open: re-admitted
+    /// (and its pool slot refreshed) only if a live `Ping` round-trips.
+    fn breaker_admits(&mut self, ep: &Endpoint) -> bool {
+        let key = ep.to_string();
+        match self.breakers.get(&key).map(|b| b.state) {
+            None | Some(BreakerState::Closed) => true,
+            Some(BreakerState::Open { until }) => {
+                if Instant::now() < until {
+                    return false;
+                }
+                let probed = ServeClient::connect(ep).and_then(|mut c| {
+                    tune(&mut c);
+                    c.ping().map(|()| c)
+                });
+                let b = self.breakers.get_mut(&key).unwrap();
+                match probed {
+                    Ok(c) => {
+                        b.state = BreakerState::Closed;
+                        b.consecutive_failures = 0;
+                        self.counters.breaker_recoveries += 1;
+                        self.clients.insert(key, c);
+                        true
+                    }
+                    Err(_) => {
+                        b.state = BreakerState::Open { until: Instant::now() + BREAKER_COOLDOWN };
+                        false
+                    }
+                }
+            }
+        }
+    }
+
+    /// Rotation order over `shard`'s replicas, filtered through the
+    /// breakers. If *every* breaker is open the full rotation is returned
+    /// anyway: total lockout would turn one bad cooldown into an outage.
+    fn replica_order(&mut self, shard: &ShardSpec, first: usize) -> Vec<usize> {
+        let n = shard.endpoints.len();
+        let mut order: Vec<usize> = (0..n).map(|k| (first + k) % n).collect();
+        order.retain(|&i| self.breaker_admits(&shard.endpoints[i]));
+        if order.is_empty() {
+            order = (0..n).map(|k| (first + k) % n).collect();
+        }
+        order
+    }
+
+    /// Detach one racer thread: it owns its connection and receive buffer,
+    /// reports exactly once on `tx`, and is bounded by `job.deadline` — the
+    /// loser of a race is simply never read, and its connection is dropped
+    /// with it (a response landing mid-frame must never desync a pooled
+    /// stream).
+    fn spawn_racer(
+        &mut self,
+        tx: &mpsc::Sender<RaceMsg>,
+        ep: &Endpoint,
+        idx: usize,
+        hedge: bool,
+        job: RaceJob,
+    ) -> io::Result<()> {
+        let key = ep.to_string();
+        let mut client = match self.clients.remove(&key) {
+            Some(c) => c,
+            None => {
+                let mut c = ServeClient::connect(ep)?;
+                tune(&mut c);
+                c
+            }
+        };
+        client.deadline = job.deadline;
+        let member = member_ordinal(&self.manifest, ep);
+        let tx = tx.clone();
+        std::thread::spawn(move || {
+            // hedged duplicates share the parent read's trace id: the span
+            // ring shows both Segment children under one routed read
+            let scope = (job.trace != 0).then(|| {
+                SpanScope::begin(
+                    obs::spans(),
+                    SpanKind::Segment,
+                    job.trace,
+                    member,
+                    job.si,
+                    job.pos,
+                    job.seg as u32,
+                )
+            });
+            let t0 = Instant::now();
+            let mut block = RangeBlock::new();
+            let res = client.read_range_at(job.pos, job.seg, job.epoch, &mut block);
+            if let Some(mut s) = scope {
+                if let Ok(RangeRead::Targets { timing, .. }) = &res {
+                    obs::attribute_rtt(&mut s, t0.elapsed(), *timing);
+                    s.finish();
+                }
+            }
+            let _ = tx.send(RaceMsg { hedge, idx, key, elapsed: t0.elapsed(), res, client, block });
+        });
+        Ok(())
+    }
+
+    /// Hedged race over the first two candidates of `order`: the primary is
+    /// issued immediately; if it has not answered within `delay`, the same
+    /// segment is re-issued to the next replica and the first answer wins.
+    fn race_segment(
+        &mut self,
+        order: &[usize],
+        shard: &ShardSpec,
+        delay: Duration,
+        job: RaceJob,
+        seg: usize,
+        epoch: u64,
+    ) -> io::Result<RaceOutcome> {
+        let (tx, rx) = mpsc::channel::<RaceMsg>();
+        let ep0 = shard.endpoints[order[0]].clone();
+        if let Err(e) = self.spawn_racer(&tx, &ep0, order[0], false, job) {
+            self.counters.failovers += 1;
+            self.breaker_failure(&ep0.to_string());
+            return Ok(RaceOutcome::Failed { skip: 1, last_err: e });
+        }
+        let mut outstanding = 1usize;
+        let mut hedge_launched = false;
+        let mut tried = 1usize;
+        let mut last_err: Option<io::Error> = None;
+        // every racer is deadline-bounded, so waiting slightly past the cap
+        // can only mean a lost thread — fail rather than block forever
+        let drain_cap = job.deadline.unwrap_or(HEDGE_RACE_CAP) + Duration::from_secs(1);
+        loop {
+            let msg = if !hedge_launched {
+                match rx.recv_timeout(delay) {
+                    Ok(m) => Some(m),
+                    Err(mpsc::RecvTimeoutError::Timeout) => {
+                        // primary straggled past the hedge delay: duplicate
+                        // the segment to the next replica
+                        hedge_launched = true;
+                        tried = 2;
+                        self.counters.hedges_launched += 1;
+                        let ep1 = shard.endpoints[order[1]].clone();
+                        match self.spawn_racer(&tx, &ep1, order[1], true, job) {
+                            Ok(()) => outstanding += 1,
+                            Err(e) => {
+                                self.counters.failovers += 1;
+                                self.breaker_failure(&ep1.to_string());
+                                last_err = Some(e);
+                            }
+                        }
+                        None
+                    }
+                    Err(mpsc::RecvTimeoutError::Disconnected) => unreachable!("tx held locally"),
+                }
+            } else if outstanding > 0 {
+                match rx.recv_timeout(drain_cap) {
+                    Ok(m) => Some(m),
+                    Err(_) => {
+                        last_err = Some(io::Error::new(
+                            io::ErrorKind::TimedOut,
+                            "hedged racers never reported (lost thread?)",
+                        ));
+                        outstanding = 0;
+                        None
+                    }
+                }
+            } else {
+                let err = last_err.unwrap_or_else(|| {
+                    io::Error::new(io::ErrorKind::NotConnected, "no racer reachable")
+                });
+                return Ok(RaceOutcome::Failed { skip: tried, last_err: err });
+            };
+            let Some(m) = msg else { continue };
+            outstanding -= 1;
+            match m.res {
+                Ok(RangeRead::Targets { epoch: got, timing: _ }) if got == epoch => {
+                    if m.block.len() != seg {
+                        self.breaker_failure(&m.key);
+                        last_err = Some(io::Error::new(
+                            io::ErrorKind::InvalidData,
+                            format!(
+                                "{} answered {} positions for a {seg}-position segment",
+                                m.key,
+                                m.block.len()
+                            ),
+                        ));
+                        continue;
+                    }
+                    self.breaker_success(&m.key);
+                    self.latency.record(m.elapsed);
+                    self.counters.requests += 1;
+                    if m.idx != 0 {
+                        self.counters.replica_served += 1;
+                    }
+                    if m.hedge {
+                        self.counters.hedges_won += 1;
+                    }
+                    *self.served_by.entry(m.key.clone()).or_insert(0) += 1;
+                    self.scratch = m.block;
+                    // the winner's stream is clean (full frame consumed):
+                    // back into the pool it goes
+                    self.clients.insert(m.key, m.client);
+                    return Ok(RaceOutcome::Done(Fetch::Served));
+                }
+                Ok(RangeRead::Targets { .. }) | Ok(RangeRead::WrongEpoch { .. }) => {
+                    self.counters.stale_rejected += 1;
+                    return Ok(RaceOutcome::Done(Fetch::EpochChanged));
+                }
+                Err(e) => {
+                    // failed racer: connection discarded (not reinserted)
+                    self.counters.failovers += 1;
+                    self.breaker_failure(&m.key);
+                    last_err = Some(e);
+                    if outstanding == 0 {
+                        let err = last_err.take().unwrap();
+                        return Ok(RaceOutcome::Failed { skip: tried, last_err: err });
+                    }
+                }
+            }
+        }
+    }
+
     /// Fetch `[pos, pos + seg)` — guaranteed inside shard `si` — into
-    /// `self.scratch`, pinned to `epoch`, walking the replica set round-robin
-    /// with failover.
-    fn fetch_segment(&mut self, si: usize, pos: u64, seg: usize, epoch: u64) -> io::Result<Fetch> {
+    /// `self.scratch`, pinned to `epoch`: breaker-filtered rotation, a
+    /// hedged race when armed, sequential failover as the final fallback,
+    /// all bounded by `op_deadline`.
+    fn fetch_segment(
+        &mut self,
+        si: usize,
+        pos: u64,
+        seg: usize,
+        epoch: u64,
+        op_deadline: Option<Instant>,
+    ) -> io::Result<Fetch> {
         let shard = self.manifest.shards()[si].clone();
         let n = shard.endpoints.len();
         let first = self.rr % n;
         self.rr = self.rr.wrapping_add(1);
+        let order = self.replica_order(&shard, first);
         let mut last_err: Option<io::Error> = None;
-        for k in 0..n {
-            let idx = (first + k) % n;
+        let mut skip = 0usize;
+        // hedged race over the first two admitted replicas, armed only once
+        // the latency window can place a p95 delay
+        if order.len() >= 2 {
+            if let Some(delay) = self.latency.hedge_delay() {
+                let budget = match op_deadline {
+                    None => None,
+                    Some(d) => {
+                        let left = d.saturating_duration_since(Instant::now());
+                        if left.is_zero() {
+                            self.counters.deadline_exceeded += 1;
+                            return Err(deadline_err(si, pos, seg));
+                        }
+                        Some(left)
+                    }
+                };
+                let job = RaceJob {
+                    pos,
+                    seg,
+                    epoch,
+                    si: si as u32,
+                    trace: obs::current_trace(),
+                    deadline: Some(budget.unwrap_or(HEDGE_RACE_CAP).min(HEDGE_RACE_CAP)),
+                };
+                match self.race_segment(&order, &shard, delay, job, seg, epoch)? {
+                    RaceOutcome::Done(f) => return Ok(f),
+                    RaceOutcome::Failed { skip: s, last_err: e } => {
+                        skip = s;
+                        last_err = Some(e);
+                    }
+                }
+            }
+        }
+        // sequential walk: the always-correct fallback, and the only path
+        // while hedging is unarmed (keeps the steady state zero-extra-work)
+        for &idx in order.iter().skip(skip) {
+            let budget = match op_deadline {
+                None => None,
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        self.counters.deadline_exceeded += 1;
+                        return Err(deadline_err(si, pos, seg));
+                    }
+                    Some(left)
+                }
+            };
             let ep = &shard.endpoints[idx];
             let key = ep.to_string();
             let client = match client_for(&mut self.clients, ep) {
                 Ok(c) => c,
                 Err(e) => {
                     self.counters.failovers += 1;
+                    self.breaker_failure(&key);
                     last_err = Some(e);
                     continue;
                 }
             };
+            client.deadline = budget;
             // per-replica child span: the routed read's fan-out, decomposed
             // into the server's echoed phases + the wire remainder
             let trace = obs::current_trace();
@@ -154,6 +595,8 @@ impl Inner {
                             ),
                         ));
                     }
+                    self.breaker_success(&key);
+                    self.latency.record(t0.elapsed());
                     self.counters.requests += 1;
                     if idx != 0 {
                         self.counters.replica_served += 1;
@@ -166,10 +609,16 @@ impl Inner {
                     self.counters.stale_rejected += 1;
                     return Ok(Fetch::EpochChanged);
                 }
+                Err(e) if e.kind() == io::ErrorKind::TimedOut && op_deadline.is_some() => {
+                    // the budget died inside the exchange: typed, terminal
+                    self.counters.deadline_exceeded += 1;
+                    return Err(e);
+                }
                 Err(e) => {
                     // dead replica: drop its pooled connection, try the next
                     self.clients.remove(&key);
                     self.counters.failovers += 1;
+                    self.breaker_failure(&key);
                     last_err = Some(e);
                 }
             }
@@ -240,9 +689,13 @@ fn register_collector(inner: &Arc<Mutex<Inner>>) {
     let reader = READER_SEQ.fetch_add(1, Ordering::Relaxed).to_string();
     obs::registry().register_collector(Box::new(move |c| {
         let Some(inner) = weak.upgrade() else { return false };
-        let (counters, epoch) = {
+        let (counters, epoch, hedge_us) = {
             let g = inner.lock().unwrap();
-            (g.counters, g.manifest.epoch())
+            (
+                g.counters,
+                g.manifest.epoch(),
+                g.latency.hedge_delay().map_or(0, |d| d.as_micros() as u64),
+            )
         };
         let labels: &[(&str, &str)] = &[("reader", reader.as_str())];
         c.counter("rskd_cluster_requests_total", labels, counters.requests);
@@ -250,6 +703,12 @@ fn register_collector(inner: &Arc<Mutex<Inner>>) {
         c.counter("rskd_cluster_refetches_total", labels, counters.refetches);
         c.counter("rskd_cluster_failovers_total", labels, counters.failovers);
         c.counter("rskd_cluster_replica_served_total", labels, counters.replica_served);
+        c.counter("rskd_cluster_hedges_launched_total", labels, counters.hedges_launched);
+        c.counter("rskd_cluster_hedges_won_total", labels, counters.hedges_won);
+        c.counter("rskd_cluster_breaker_trips_total", labels, counters.breaker_trips);
+        c.counter("rskd_cluster_breaker_recoveries_total", labels, counters.breaker_recoveries);
+        c.counter("rskd_cluster_deadline_exceeded_total", labels, counters.deadline_exceeded);
+        c.gauge("rskd_cluster_hedge_delay_us", labels, hedge_us);
         c.gauge("rskd_cluster_epoch", labels, epoch);
         true
     }));
@@ -273,6 +732,9 @@ impl ClusterReader {
             rr: 0,
             counters: ClusterCounters::default(),
             served_by: BTreeMap::new(),
+            breakers: HashMap::new(),
+            latency: LatencyTrack::new(),
+            deadline: None,
         }));
         register_collector(&inner);
         Ok(ClusterReader { inner, remote })
@@ -317,6 +779,9 @@ impl ClusterReader {
             rr: 0,
             counters: ClusterCounters::default(),
             served_by: BTreeMap::new(),
+            breakers: HashMap::new(),
+            latency: LatencyTrack::new(),
+            deadline: None,
         }));
         register_collector(&inner);
         Ok(ClusterReader { inner, remote })
@@ -341,8 +806,25 @@ impl ClusterReader {
         &self.remote
     }
 
+    /// Give every routed range read a relative deadline budget, decomposed
+    /// across its segment fan-out: each segment request (and each
+    /// failover/hedge within it) carries the *remaining* budget, and an
+    /// exhausted budget surfaces as one typed `TimedOut`
+    /// ([`ClusterCounters::deadline_exceeded`]). `None` (the default)
+    /// restores unbounded pre-v5 behaviour.
+    pub fn set_deadline(&self, budget: Option<Duration>) {
+        self.inner.lock().unwrap().deadline = budget;
+    }
+
+    /// The hedge delay currently armed (clamped p95 of the recent segment
+    /// latency window) — `None` until enough segments have been timed.
+    pub fn hedge_delay(&self) -> Option<Duration> {
+        self.inner.lock().unwrap().latency.hedge_delay()
+    }
+
     fn route_range_into(&self, start: u64, len: usize, out: &mut RangeBlock) -> io::Result<()> {
         let inner = &mut *self.inner.lock().unwrap();
+        let op_deadline = inner.deadline.map(|b| Instant::now() + b);
         let end = start.saturating_add(len as u64);
         for round in 0..=MAX_EPOCH_RETRIES {
             if round > 0 {
@@ -367,7 +849,7 @@ impl ClusterReader {
                 };
                 let shard_hi = inner.manifest.shards()[si].hi;
                 let seg = (end.min(shard_hi) - pos) as usize;
-                match inner.fetch_segment(si, pos, seg, epoch)? {
+                match inner.fetch_segment(si, pos, seg, epoch, op_deadline)? {
                     Fetch::Served => {
                         for i in 0..inner.scratch.len() {
                             let (ids, probs) = inner.scratch.get(i);

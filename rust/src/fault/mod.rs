@@ -1,0 +1,482 @@
+//! Deterministic, seed-keyed fault injection (docs/RESILIENCE.md).
+//!
+//! A [`FaultPlan`] assigns each injection **site** (a named point in the
+//! cache/serve/cluster stack, [`FaultSite`]) a [`FaultRule`]: fire with a
+//! probability, on a fixed every-Nth schedule, or both, optionally with an
+//! injected delay. Decisions are a pure function of
+//! `(seed, site, decision ordinal)` — the embedded [`FaultClock`] counts
+//! decisions per site, so the same seed replays the same fault schedule
+//! and a chaos run is reproducible bit-for-bit (the deterministic-replay
+//! test in `rust/tests/chaos.rs` pins this).
+//!
+//! Hooks are zero-cost when disabled: every site consults
+//! [`fires`]/[`maybe_delay`], whose fast path is **one relaxed atomic
+//! load** (the same pattern as `obs::set_tracing`). Only when a plan is
+//! installed does the slow path take a lock and hash the decision.
+//!
+//! Two scopes:
+//! * a **process-global** plan ([`install`]/[`clear`], or the RAII
+//!   [`ScopedPlan`]) — what `load-gen --chaos` and the chaos suite use;
+//! * **per-instance** plans (e.g. `CacheReader` owns one for its
+//!   `set_load_delay` compat surface) — consulted via
+//!   [`FaultPlan::maybe_fire`] with the same armed-flag fast path.
+
+use std::sync::atomic::{AtomicBool, AtomicU64, Ordering};
+use std::sync::{Arc, Mutex, OnceLock};
+use std::time::Duration;
+
+use crate::util::rng::Pcg;
+
+/// A named fault-injection point. The variants are grouped by the five
+/// fault *classes* the chaos suite must cover (delay, connection drop,
+/// stalled write, torn read, member kill); sites are finer-grained so a
+/// plan can, say, delay shard loads without delaying origin computes.
+#[derive(Clone, Copy, Debug, PartialEq, Eq, Hash)]
+pub enum FaultSite {
+    /// Extra latency before a shard decode in `CacheReader::load_shard`
+    /// (the fold-in of the old ad-hoc `set_load_delay` hook).
+    CacheLoadDelay = 0,
+    /// Hand the shard decoder a truncated byte image (torn read): must
+    /// surface as a typed decode error, never wrong probabilities.
+    CacheTornRead = 1,
+    /// Extra latency on the write-through origin/backfill path.
+    OriginDelay = 2,
+    /// Server drops the connection instead of writing the response.
+    ServerConnDrop = 3,
+    /// Server writes a partial frame, stalls, then drops the connection —
+    /// the mid-frame-stall case `MAX_FRAME_STALLS` exists for.
+    ServerStallWrite = 4,
+    /// Client drops its pooled connection before sending a request
+    /// (exercises the reconnect-resend path).
+    ClientConnDrop = 5,
+    /// Consulted by chaos *drivers* (`load-gen --chaos`, tests) to decide
+    /// when to kill a cluster member; never fired inside the data path.
+    MemberKill = 6,
+    /// Extra latency inside the server worker before a job computes —
+    /// fires per *request* (shard decodes are cached after first load, so
+    /// `CacheLoadDelay` alone cannot make warm reads straggle). This is
+    /// the straggler injector the hedged-read path is tested against.
+    ServeJobDelay = 7,
+}
+
+/// Number of distinct injection sites.
+pub const SITE_COUNT: usize = 8;
+
+/// All sites, in index order (for snapshots and expositions).
+pub const ALL_SITES: [FaultSite; SITE_COUNT] = [
+    FaultSite::CacheLoadDelay,
+    FaultSite::CacheTornRead,
+    FaultSite::OriginDelay,
+    FaultSite::ServerConnDrop,
+    FaultSite::ServerStallWrite,
+    FaultSite::ClientConnDrop,
+    FaultSite::MemberKill,
+    FaultSite::ServeJobDelay,
+];
+
+impl FaultSite {
+    #[inline]
+    pub fn index(self) -> usize {
+        self as usize
+    }
+
+    pub fn name(self) -> &'static str {
+        match self {
+            FaultSite::CacheLoadDelay => "cache_load_delay",
+            FaultSite::CacheTornRead => "cache_torn_read",
+            FaultSite::OriginDelay => "origin_delay",
+            FaultSite::ServerConnDrop => "server_conn_drop",
+            FaultSite::ServerStallWrite => "server_stall_write",
+            FaultSite::ClientConnDrop => "client_conn_drop",
+            FaultSite::MemberKill => "member_kill",
+            FaultSite::ServeJobDelay => "serve_job_delay",
+        }
+    }
+}
+
+/// When (and how hard) a site fires. `every` and `prob` compose with OR:
+/// a decision fires if it lands on the every-Nth schedule *or* its hash
+/// draw clears `prob`. `delay_us` is slept by the site when it fires
+/// (delay sites); pure drop/tear sites leave it 0.
+#[derive(Clone, Copy, Debug, Default, PartialEq)]
+pub struct FaultRule {
+    /// Per-decision fire probability in `[0, 1]`.
+    pub prob: f64,
+    /// If nonzero, fire on every Nth decision (1-based ordinals), a
+    /// deterministic schedule independent of the seed.
+    pub every: u64,
+    /// Injected sleep when the site fires, in microseconds.
+    pub delay_us: u64,
+}
+
+impl FaultRule {
+    /// Never fires (the default for every site).
+    pub fn never() -> FaultRule {
+        FaultRule::default()
+    }
+
+    /// Fire on every decision, sleeping `d` — the `set_load_delay` compat
+    /// shape.
+    pub fn always_delay(d: Duration) -> FaultRule {
+        FaultRule { prob: 0.0, every: 1, delay_us: d.as_micros() as u64 }
+    }
+
+    /// Fire on every Nth decision (`n ≥ 1`), sleeping `delay_us` if set.
+    pub fn every_nth(n: u64, delay_us: u64) -> FaultRule {
+        assert!(n >= 1, "every-Nth schedule needs n >= 1");
+        FaultRule { prob: 0.0, every: n, delay_us }
+    }
+
+    /// Fire with probability `p` per decision, sleeping `delay_us` if set.
+    pub fn with_prob(p: f64, delay_us: u64) -> FaultRule {
+        assert!((0.0..=1.0).contains(&p), "probability must be in [0, 1]");
+        FaultRule { prob: p, every: 0, delay_us }
+    }
+
+    fn active(&self) -> bool {
+        self.prob > 0.0 || self.every > 0
+    }
+}
+
+/// Per-site decision ordinals and fire counts. The ordinal is the *only*
+/// state a decision depends on besides the seed, which is what makes a
+/// fault schedule replayable: run the same (deterministic) workload twice
+/// under the same seed and every site sees the same ordinals, hence the
+/// same fires.
+#[derive(Debug, Default)]
+pub struct FaultClock {
+    decisions: [AtomicU64; SITE_COUNT],
+    fired: [AtomicU64; SITE_COUNT],
+}
+
+impl FaultClock {
+    /// Total decisions consulted at `site` so far.
+    pub fn decisions(&self, site: FaultSite) -> u64 {
+        self.decisions[site.index()].load(Ordering::Relaxed)
+    }
+
+    /// Times `site` actually fired.
+    pub fn fired(&self, site: FaultSite) -> u64 {
+        self.fired[site.index()].load(Ordering::Relaxed)
+    }
+}
+
+/// A point-in-time copy of a plan's clock, for replay assertions and the
+/// `--chaos` end-of-run report.
+#[derive(Clone, Copy, Debug, Default, PartialEq, Eq)]
+pub struct FaultSnapshot {
+    pub decisions: [u64; SITE_COUNT],
+    pub fired: [u64; SITE_COUNT],
+}
+
+impl FaultSnapshot {
+    pub fn total_fired(&self) -> u64 {
+        self.fired.iter().sum()
+    }
+}
+
+/// Mixed-in per-site salt so nearby sites draw independent streams even
+/// under the same seed.
+const SITE_SALT: u64 = 0xA076_1D64_78BD_642F;
+
+/// Interior-mutable rule storage so a shared `&FaultPlan` can be retuned
+/// mid-run (chaos drivers flip sites on and off between phases).
+#[derive(Debug, Default)]
+struct SiteRule {
+    prob_bits: AtomicU64,
+    every: AtomicU64,
+    delay_us: AtomicU64,
+}
+
+impl SiteRule {
+    fn store(&self, r: FaultRule) {
+        self.prob_bits.store(r.prob.to_bits(), Ordering::Relaxed);
+        self.every.store(r.every, Ordering::Relaxed);
+        self.delay_us.store(r.delay_us, Ordering::Relaxed);
+    }
+
+    fn load(&self) -> FaultRule {
+        FaultRule {
+            prob: f64::from_bits(self.prob_bits.load(Ordering::Relaxed)),
+            every: self.every.load(Ordering::Relaxed),
+            delay_us: self.delay_us.load(Ordering::Relaxed),
+        }
+    }
+}
+
+/// A seed-keyed fault schedule over every [`FaultSite`].
+#[derive(Debug)]
+pub struct FaultPlan {
+    seed: u64,
+    /// Fast path: false until the first active rule is installed, so a
+    /// per-instance plan with no rules costs one relaxed load per site.
+    armed: AtomicBool,
+    rules: [SiteRule; SITE_COUNT],
+    clock: FaultClock,
+}
+
+impl FaultPlan {
+    pub fn new(seed: u64) -> FaultPlan {
+        FaultPlan {
+            seed,
+            armed: AtomicBool::new(false),
+            rules: Default::default(),
+            clock: FaultClock::default(),
+        }
+    }
+
+    pub fn seed(&self) -> u64 {
+        self.seed
+    }
+
+    /// Install (or replace) the rule for one site. Builder-style `self`
+    /// return for plan literals: `FaultPlan::new(7).with(site, rule)`.
+    pub fn with(self, site: FaultSite, rule: FaultRule) -> FaultPlan {
+        self.set_rule(site, rule);
+        self
+    }
+
+    /// Retune one site on a shared plan.
+    pub fn set_rule(&self, site: FaultSite, rule: FaultRule) {
+        self.rules[site.index()].store(rule);
+        if rule.active() {
+            self.armed.store(true, Ordering::Release);
+        } else {
+            // Re-derive: only disarm when *no* site is active.
+            let any = ALL_SITES.iter().any(|s| self.rules[s.index()].load().active());
+            self.armed.store(any, Ordering::Release);
+        }
+    }
+
+    pub fn rule(&self, site: FaultSite) -> FaultRule {
+        self.rules[site.index()].load()
+    }
+
+    /// One decision at `site`: advances the clock, returns whether the
+    /// fault fires. Does **not** sleep — callers that want the rule's
+    /// delay applied use [`FaultPlan::maybe_fire`].
+    pub fn fire(&self, site: FaultSite) -> bool {
+        let i = site.index();
+        let ordinal = self.clock.decisions[i].fetch_add(1, Ordering::Relaxed) + 1;
+        let rule = self.rules[i].load();
+        let scheduled = rule.every > 0 && ordinal % rule.every == 0;
+        let drawn = rule.prob > 0.0 && {
+            // Uniform draw in [0, 1) keyed by (seed, site, ordinal):
+            // replayable, order-independent across sites.
+            let h = Pcg::mix_seed(self.seed ^ SITE_SALT.wrapping_mul(i as u64 + 1), ordinal);
+            ((h >> 11) as f64) * (1.0 / (1u64 << 53) as f64) < rule.prob
+        };
+        let fired = scheduled || drawn;
+        if fired {
+            self.clock.fired[i].fetch_add(1, Ordering::Relaxed);
+        }
+        fired
+    }
+
+    /// One decision at `site`, sleeping the rule's delay when it fires.
+    /// Fast path (unarmed plan): one relaxed load, no clock advance.
+    #[inline]
+    pub fn maybe_fire(&self, site: FaultSite) -> bool {
+        if !self.armed.load(Ordering::Relaxed) {
+            return false;
+        }
+        self.maybe_fire_slow(site)
+    }
+
+    #[cold]
+    fn maybe_fire_slow(&self, site: FaultSite) -> bool {
+        if !self.fire(site) {
+            return false;
+        }
+        let delay = self.rules[site.index()].delay_us.load(Ordering::Relaxed);
+        if delay > 0 {
+            std::thread::sleep(Duration::from_micros(delay));
+        }
+        true
+    }
+
+    /// The plan's clock so far.
+    pub fn snapshot(&self) -> FaultSnapshot {
+        let mut s = FaultSnapshot::default();
+        for site in ALL_SITES {
+            s.decisions[site.index()] = self.clock.decisions(site);
+            s.fired[site.index()] = self.clock.fired(site);
+        }
+        s
+    }
+}
+
+// ---------------------------------------------------------------------------
+// Process-global plan (what the data-path hooks consult)
+// ---------------------------------------------------------------------------
+
+static ENABLED: AtomicBool = AtomicBool::new(false);
+
+fn global_slot() -> &'static Mutex<Option<Arc<FaultPlan>>> {
+    static SLOT: OnceLock<Mutex<Option<Arc<FaultPlan>>>> = OnceLock::new();
+    SLOT.get_or_init(|| Mutex::new(None))
+}
+
+/// Is a global plan installed? One relaxed load — the hot-path gate.
+#[inline]
+pub fn enabled() -> bool {
+    ENABLED.load(Ordering::Relaxed)
+}
+
+/// Install `plan` process-wide. Every data-path site starts consulting it.
+pub fn install(plan: Arc<FaultPlan>) {
+    *global_slot().lock().unwrap() = Some(plan);
+    ENABLED.store(true, Ordering::Release);
+}
+
+/// Remove the global plan; all sites return to the one-load fast path.
+pub fn clear() {
+    ENABLED.store(false, Ordering::Release);
+    *global_slot().lock().unwrap() = None;
+}
+
+/// The installed plan, if any (for end-of-run snapshots).
+pub fn plan() -> Option<Arc<FaultPlan>> {
+    if !enabled() {
+        return None;
+    }
+    global_slot().lock().unwrap().clone()
+}
+
+/// One decision at `site` against the global plan; sleeps the rule's
+/// delay when it fires. `false` (after one relaxed load) when disabled.
+#[inline]
+pub fn fires(site: FaultSite) -> bool {
+    if !enabled() {
+        return false;
+    }
+    fires_slow(site)
+}
+
+#[cold]
+fn fires_slow(site: FaultSite) -> bool {
+    match plan() {
+        Some(p) => p.maybe_fire(site),
+        None => false,
+    }
+}
+
+/// RAII install: the plan is global while the guard lives, cleared on
+/// drop. Chaos tests serialize on [`test_mutex`] and wrap their plan in
+/// one of these so a panicking test cannot leak faults into the next.
+pub struct ScopedPlan {
+    plan: Arc<FaultPlan>,
+}
+
+impl ScopedPlan {
+    pub fn install(plan: FaultPlan) -> ScopedPlan {
+        let plan = Arc::new(plan);
+        install(Arc::clone(&plan));
+        ScopedPlan { plan }
+    }
+
+    pub fn plan(&self) -> &FaultPlan {
+        &self.plan
+    }
+}
+
+impl Drop for ScopedPlan {
+    fn drop(&mut self) {
+        clear();
+    }
+}
+
+/// The global plan is process-wide state; tests that install one must not
+/// interleave. Lock this (ignoring poisoning — a chaos test that panics
+/// should not cascade) around any `ScopedPlan`.
+pub fn test_mutex() -> &'static Mutex<()> {
+    static M: OnceLock<Mutex<()>> = OnceLock::new();
+    M.get_or_init(|| Mutex::new(()))
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+
+    #[test]
+    fn unarmed_plan_never_fires_and_keeps_clock_still() {
+        let p = FaultPlan::new(1);
+        for _ in 0..100 {
+            assert!(!p.maybe_fire(FaultSite::CacheLoadDelay));
+        }
+        // fast path: no decisions were even recorded
+        assert_eq!(p.snapshot(), FaultSnapshot::default());
+    }
+
+    #[test]
+    fn every_nth_schedule_is_exact() {
+        let p = FaultPlan::new(9).with(FaultSite::ClientConnDrop, FaultRule::every_nth(3, 0));
+        let fires: Vec<bool> = (0..9).map(|_| p.fire(FaultSite::ClientConnDrop)).collect();
+        assert_eq!(
+            fires,
+            [false, false, true, false, false, true, false, false, true]
+        );
+        let s = p.snapshot();
+        assert_eq!(s.decisions[FaultSite::ClientConnDrop.index()], 9);
+        assert_eq!(s.fired[FaultSite::ClientConnDrop.index()], 3);
+    }
+
+    #[test]
+    fn same_seed_replays_the_same_schedule() {
+        let schedule = |seed: u64| -> Vec<bool> {
+            let p = FaultPlan::new(seed)
+                .with(FaultSite::ServerConnDrop, FaultRule::with_prob(0.3, 0));
+            (0..256).map(|_| p.fire(FaultSite::ServerConnDrop)).collect()
+        };
+        let a = schedule(42);
+        assert_eq!(a, schedule(42), "same seed must replay the same fault schedule");
+        assert_ne!(a, schedule(43), "different seeds must diverge");
+        let fired = a.iter().filter(|&&f| f).count();
+        assert!(
+            (30..=120).contains(&fired),
+            "p=0.3 over 256 draws fired {fired} times — draw is not uniform"
+        );
+    }
+
+    #[test]
+    fn sites_draw_independent_streams() {
+        let p = FaultPlan::new(7)
+            .with(FaultSite::CacheTornRead, FaultRule::with_prob(0.5, 0))
+            .with(FaultSite::ServerStallWrite, FaultRule::with_prob(0.5, 0));
+        let a: Vec<bool> = (0..128).map(|_| p.fire(FaultSite::CacheTornRead)).collect();
+        let b: Vec<bool> = (0..128).map(|_| p.fire(FaultSite::ServerStallWrite)).collect();
+        assert_ne!(a, b, "two sites under one seed must not fire in lockstep");
+    }
+
+    #[test]
+    fn disarm_requires_all_sites_inactive() {
+        let p = FaultPlan::new(0)
+            .with(FaultSite::CacheLoadDelay, FaultRule::every_nth(1, 0))
+            .with(FaultSite::MemberKill, FaultRule::every_nth(2, 0));
+        assert!(p.maybe_fire(FaultSite::CacheLoadDelay));
+        p.set_rule(FaultSite::CacheLoadDelay, FaultRule::never());
+        // still armed: MemberKill is active
+        assert!(p.fire(FaultSite::MemberKill) || p.fire(FaultSite::MemberKill));
+        p.set_rule(FaultSite::MemberKill, FaultRule::never());
+        let before = p.snapshot();
+        assert!(!p.maybe_fire(FaultSite::CacheLoadDelay));
+        assert_eq!(p.snapshot(), before, "disarmed plan must not advance the clock");
+    }
+
+    #[test]
+    fn scoped_install_clears_on_drop() {
+        let _serial = test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+        assert!(!enabled());
+        {
+            let scoped = ScopedPlan::install(
+                FaultPlan::new(5).with(FaultSite::ClientConnDrop, FaultRule::every_nth(1, 0)),
+            );
+            assert!(enabled());
+            assert!(fires(FaultSite::ClientConnDrop));
+            assert!(!fires(FaultSite::ServerConnDrop));
+            assert_eq!(scoped.plan().snapshot().fired[FaultSite::ClientConnDrop.index()], 1);
+        }
+        assert!(!enabled());
+        assert!(!fires(FaultSite::ClientConnDrop));
+    }
+}

@@ -29,6 +29,7 @@ pub mod coordinator;
 pub mod data;
 pub mod evalsuite;
 pub mod expt;
+pub mod fault;
 pub mod report;
 pub mod specdecode;
 pub mod metrics;

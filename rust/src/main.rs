@@ -5,7 +5,7 @@
 //! rskd serve    [--cache DIR | --method <spec>] [--port N | --unix PATH]
 //!               [--backfill --synthetic N]
 //! rskd load-gen [--cache DIR | --method <spec> | --synthetic N [--backfill]]
-//!               [--cluster N]
+//!               [--cluster N [--chaos --seed S]]
 //! rskd cluster-serve --cache DIR --manifest FILE --me ENDPOINT [--poll-ms N]
 //! rskd rebalance --manifest FILE (--partition ... | --rotate=true |
 //!                --replicate-hot N --replicas R)
@@ -37,9 +37,10 @@ use rskd::cache::{
     WriteThrough,
 };
 use rskd::cluster::{
-    partition, replicate_hot, rotate, ClusterControl, ClusterManifest, ClusterReader,
+    partition, replicate_hot, rotate, ClusterControl, ClusterManifest, ClusterReader, ShardSpec,
 };
 use rskd::coordinator::{pct_ce_to_fullkd, Pipeline, PipelineConfig};
+use rskd::fault::{self, FaultPlan, FaultRule, FaultSite};
 use rskd::obs;
 use rskd::report::{final_loss, Report};
 use rskd::sampling::SyntheticZipfSource;
@@ -563,6 +564,20 @@ fn cmd_cluster_serve(args: &Args) -> Result<()> {
     let manifest_path =
         PathBuf::from(args.get("manifest").context("--manifest FILE is required")?);
     let me = Endpoint::parse(&args.get("me").context("--me ENDPOINT is required")?)?;
+    // `--chaos-seed S` (passed by `load-gen --chaos`): arm this member's
+    // server-side fault sites — per-request straggler delays (what hedged
+    // reads race against) plus response-drop and mid-frame-stall faults
+    // (docs/RESILIENCE.md §Chaos CLI)
+    if let Some(s) = args.get("chaos-seed") {
+        let seed: u64 = s.parse().context("--chaos-seed must be an integer")?;
+        fault::install(Arc::new(
+            FaultPlan::new(seed)
+                .with(FaultSite::ServeJobDelay, FaultRule::with_prob(0.05, 120_000))
+                .with(FaultSite::ServerConnDrop, FaultRule::every_nth(37, 0))
+                .with(FaultSite::ServerStallWrite, FaultRule::every_nth(53, 0)),
+        ));
+        println!("{me}: chaos plan armed (seed {seed})");
+    }
     let manifest = ClusterManifest::load(&manifest_path)?;
     let reader = open_reader(&dir, args)?;
     let control = Arc::new(ClusterControl::new(manifest, me.clone()));
@@ -884,6 +899,219 @@ fn cmd_load_gen_cluster(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `load-gen --cluster N --chaos [--seed S]`: the graceful-degradation
+/// smoke. Spawns a *fully replicated* cluster (every shard lists every
+/// member, so hedges and failovers always have somewhere to go), arms a
+/// seed-keyed fault plan on both sides of the wire (members: per-request
+/// straggler delays plus response-drop / mid-frame-stall faults via
+/// `--chaos-seed`; this process: pooled-connection drops), kills and
+/// restarts one member mid-run, and gates on the degradation contract:
+/// **zero** failed requests, **zero** byte mismatches, at least one hedge
+/// won, and at least one breaker trip *and* probe recovery
+/// (docs/RESILIENCE.md §Chaos CLI).
+fn cmd_load_gen_chaos(args: &Args) -> Result<()> {
+    let members = args.usize_or("cluster", 3).max(2);
+    let n = args.u64_or("synthetic", 4096);
+    let seed = args.u64_or("seed", 42);
+    let requests = args.usize_or("requests", 120).max(40);
+    let range = (args.usize_or("range", 128) as u64).min(n.max(1)) as usize;
+    let base = std::env::temp_dir().join(format!("rskd-chaos-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&base);
+    std::fs::create_dir_all(&base)?;
+    let cache_dir = base.join("cache");
+    let sc = shard_codec_from_args(args)?.unwrap_or_default();
+    println!("building synthetic RS-50 cache ({n} positions) in {}", cache_dir.display());
+    build_synthetic_cache(&cache_dir, n, sc)?;
+
+    let eps: Vec<Endpoint> =
+        (0..members).map(|i| Endpoint::Unix(base.join(format!("m{i}.sock")))).collect();
+    // fully replicated shard map: each shard keeps its partitioned primary
+    // and lists every other member as a replica
+    let shards: Vec<ShardSpec> = partition(n, &eps)?
+        .shards()
+        .iter()
+        .map(|s| {
+            let primary = s.endpoints[0].clone();
+            let mut endpoints = vec![primary.clone()];
+            endpoints.extend(eps.iter().filter(|e| **e != primary).cloned());
+            ShardSpec { lo: s.lo, hi: s.hi, endpoints }
+        })
+        .collect();
+    let manifest = ClusterManifest::new(1, shards)?;
+    let manifest_path = base.join("cluster.json");
+    manifest.save(&manifest_path)?;
+
+    let exe = std::env::current_exe()?;
+    let spawn_member = |ep: &Endpoint| -> Result<std::process::Child> {
+        std::process::Command::new(&exe)
+            .arg("cluster-serve")
+            .arg(format!("--cache={}", cache_dir.display()))
+            .arg(format!("--manifest={}", manifest_path.display()))
+            .arg(format!("--me={ep}"))
+            .arg("--poll-ms=50")
+            .arg(format!("--chaos-seed={seed}"))
+            .spawn()
+            .with_context(|| format!("spawning chaos member {ep}"))
+    };
+    let mut children = ChildGuard(Vec::new());
+    for ep in &eps {
+        children.0.push(spawn_member(ep)?);
+    }
+    for ep in &eps {
+        wait_member_ready(ep, Duration::from_secs(10))?;
+    }
+    println!("{members} chaos members up (seed {seed}, every shard fully replicated)");
+
+    // client-side plan: pooled-connection drops on the wire (absorbed by
+    // reconnect-resend) and the MemberKill schedule this driver consults
+    let plan = Arc::new(
+        FaultPlan::new(seed)
+            .with(FaultSite::ClientConnDrop, FaultRule::every_nth(23, 0))
+            .with(FaultSite::MemberKill, FaultRule::every_nth((requests / 3).max(1) as u64, 0)),
+    );
+    fault::install(Arc::clone(&plan));
+
+    let reader = ClusterReader::from_manifest(manifest.clone())?;
+    reader.set_deadline(Some(Duration::from_secs(5)));
+    let direct = CacheReader::open(&cache_dir)?;
+    let span = n.saturating_sub(range as u64).max(1);
+    let mut rng = Pcg::new(Pcg::mix_seed(seed, 0xC4A05));
+    let mut served = 0u64;
+    let check_one = |rng: &mut Pcg| -> Result<()> {
+        let start = rng.below(span);
+        let routed = reader.try_get_range(start, range)?;
+        ensure!(
+            routed == direct.get_range(start, range),
+            "routed range [{start}, +{range}) differs from direct read"
+        );
+        Ok(())
+    };
+
+    // warm pass: fill the latency window so the p95 hedge delay arms
+    for _ in 0..48 {
+        check_one(&mut rng)?;
+        served += 1;
+    }
+    ensure!(
+        reader.hedge_delay().is_some(),
+        "hedge delay did not arm after the warm pass"
+    );
+    println!(
+        "warm pass: {served} ranges byte-identical, hedge delay armed at {:?}",
+        reader.hedge_delay().unwrap()
+    );
+
+    // chaos pass: kill one member when the seeded MemberKill site fires,
+    // restart it a quarter-run later, and keep validating every byte
+    let victim = (seed as usize) % members;
+    let mut killed_at: Option<usize> = None;
+    let mut restarted = false;
+    let restart_victim = |children: &mut ChildGuard| -> Result<()> {
+        if let Endpoint::Unix(p) = &eps[victim] {
+            let _ = std::fs::remove_file(p);
+        }
+        children.0[victim] = spawn_member(&eps[victim])?;
+        wait_member_ready(&eps[victim], Duration::from_secs(10))?;
+        println!("chaos: restarted member {victim}");
+        Ok(())
+    };
+    for i in 0..requests {
+        if killed_at.is_none() && fault::fires(FaultSite::MemberKill) {
+            println!("chaos: killing member {victim} ({})", eps[victim]);
+            let _ = children.0[victim].kill();
+            let _ = children.0[victim].wait();
+            killed_at = Some(i);
+        }
+        if let Some(k) = killed_at {
+            if !restarted && i >= k + requests / 4 {
+                restart_victim(&mut children)?;
+                restarted = true;
+            }
+        }
+        check_one(&mut rng)?;
+        served += 1;
+    }
+    ensure!(killed_at.is_some(), "MemberKill never fired over {requests} requests");
+    if !restarted {
+        restart_victim(&mut children)?;
+    }
+
+    // degradation gates; top up with more validated traffic until the
+    // breaker has had a chance to probe the restarted member
+    let gate_t0 = Instant::now();
+    loop {
+        let c = reader.counters();
+        if c.hedges_won >= 1 && c.breaker_trips >= 1 && c.breaker_recoveries >= 1 {
+            break;
+        }
+        ensure!(
+            gate_t0.elapsed() < Duration::from_secs(30),
+            "chaos gates unmet after 30s of extra traffic: {c:?}"
+        );
+        std::thread::sleep(Duration::from_millis(20));
+        check_one(&mut rng)?;
+        served += 1;
+    }
+
+    // one read per shard so every member — including the restarted victim,
+    // whose stats reset with its process — serves at least one range before
+    // the per-member metrics floor below
+    for s in manifest.shards() {
+        let len = range.min((s.hi - s.lo) as usize).max(1);
+        let routed = reader.try_get_range(s.lo, len)?;
+        ensure!(
+            routed == direct.get_range(s.lo, len),
+            "post-chaos sweep: shard [{}, {}) differs from direct read",
+            s.lo,
+            s.hi
+        );
+        served += 1;
+    }
+
+    let c = reader.counters();
+    let snap = plan.snapshot();
+    println!(
+        "chaos smoke OK: {served} ranges byte-identical, 0 failed; hedges {}/{} won, \
+         breaker trips {}, recoveries {}, failovers {}, deadline misses {}",
+        c.hedges_won,
+        c.hedges_launched,
+        c.breaker_trips,
+        c.breaker_recoveries,
+        c.failovers,
+        c.deadline_exceeded
+    );
+    println!(
+        "fault clock: {} decisions, {} fired (seed {seed} replays this schedule)",
+        snap.decisions.iter().sum::<u64>(),
+        snap.total_fired()
+    );
+
+    // the routed reader's resilience series must be in the local registry…
+    let text = obs::render_global();
+    for required in [
+        "rskd_cluster_hedges_launched_total",
+        "rskd_cluster_hedges_won_total",
+        "rskd_cluster_breaker_trips_total",
+        "rskd_cluster_breaker_recoveries_total",
+        "rskd_cluster_deadline_exceeded_total",
+        "rskd_cluster_hedge_delay_us",
+    ] {
+        ensure!(text.contains(required), "local registry is missing `{required}`");
+    }
+    // …and every member must expose a parsing registry with the serve-side
+    // deadline counter (check_metrics_text requires it)
+    for ep in &eps {
+        let mut mc = ServeClient::connect(ep)?;
+        check_metrics_text(&mc.metrics()?, 1).with_context(|| format!("member {ep}"))?;
+    }
+    println!("metrics-check: resilience series present locally and on all {members} members");
+
+    fault::clear();
+    drop(children);
+    let _ = std::fs::remove_dir_all(&base);
+    Ok(())
+}
+
 /// The endpoint a *client-side* subcommand (`metrics`, `trace-dump`) talks
 /// to: `--endpoint tcp://..|unix://..` verbatim, else the `--unix`/`--port`
 /// pair with the `serve` default port.
@@ -955,6 +1183,7 @@ fn check_metrics_text(text: &str, min_requests: u64) -> Result<()> {
         "rskd_serve_requests_total",
         "rskd_serve_latency_us_count",
         "rskd_serve_epoch",
+        "rskd_serve_deadline_exceeded_total",
         "rskd_shard_loads_total",
         "rskd_tier_hits_total",
     ] {
@@ -1148,6 +1377,9 @@ fn run() -> Result<()> {
         "serve" => cmd_serve(&args),
         "cluster-serve" => cmd_cluster_serve(&args),
         "rebalance" => cmd_rebalance(&args),
+        "load-gen" if args.has("cluster") && args.bool_or("chaos", false) => {
+            cmd_load_gen_chaos(&args)
+        }
         "load-gen" if args.has("cluster") => cmd_load_gen_cluster(&args),
         "load-gen" => cmd_load_gen(&args),
         "metrics" => cmd_metrics(&args),
@@ -1177,6 +1409,10 @@ fn run() -> Result<()> {
             println!("           --cluster N: multi-process smoke — N cluster-serve children,");
             println!("           byte-identity vs a direct reader + zero-stale mid-run rebalance");
             println!("           (docs/SERVING.md: wire format, backpressure, SLO knobs)");
+            println!("           --cluster N --chaos [--seed S]: fault-injection smoke —");
+            println!("           seeded delays/drops/stalls + a mid-run member kill; gates on");
+            println!("           0 failures, 0 byte mismatches, ≥1 hedge won, ≥1 breaker");
+            println!("           trip + probe recovery (docs/RESILIENCE.md §Chaos CLI)");
             println!("           --trace (end-to-end spans + decomposition check)");
             println!("           --trace-out FILE (JSONL span dump)");
             println!("           --metrics-check (registry exposition must parse + count)");

@@ -18,17 +18,26 @@
 //!   [`ServeClient::read_range_into`] convenience path turns it into
 //!   `io::Error`;
 //! * every other error frame is permanent and surfaces as `io::Error`.
+//!
+//! Setting [`ServeClient::deadline`] gives every range read a relative
+//! budget: the remaining budget is stamped on the v5 `GetRange` frame (so
+//! the server sheds expired jobs with a typed `DeadlineExceeded`), bounds
+//! the blocking read via a socket read timeout, and caps both retry loops —
+//! a request can degrade into a typed `TimedOut`, never into an unbounded
+//! hang (docs/RESILIENCE.md §Deadlines).
 
 use std::io;
 use std::sync::atomic::{AtomicU64, Ordering};
 use std::sync::Mutex;
-use std::time::Duration;
+use std::time::{Duration, Instant};
 
 use crate::cache::{RangeBlock, SparseTarget, TargetSource};
 use crate::cluster::ClusterManifest;
+use crate::fault::{self, FaultSite};
 use crate::obs::{self, ServerTiming, Span};
 use crate::serve::protocol::{
-    read_frame, write_frame, ErrCode, RangeFrame, RemoteManifest, Request, Response, NO_EPOCH,
+    read_frame, write_frame, ErrCode, RangeFrame, RemoteManifest, Request, Response, NO_DEADLINE,
+    NO_EPOCH,
 };
 use crate::serve::stats::StatsSnapshot;
 use crate::serve::{Endpoint, Stream};
@@ -93,6 +102,11 @@ pub struct ServeClient {
     pub overload: Backoff,
     /// retry schedule for transport failures (reconnect + resend)
     pub reconnect: Backoff,
+    /// per-request deadline budget for range reads (`None` = unbounded,
+    /// the pre-v5 behaviour). The *remaining* budget at send time is
+    /// stamped on each `GetRange` frame and bounds retries and the
+    /// blocking read itself.
+    pub deadline: Option<Duration>,
     rng: Pcg,
 }
 
@@ -104,6 +118,7 @@ impl ServeClient {
             endpoint: endpoint.clone(),
             overload: Backoff::new(Duration::from_millis(5), Duration::from_millis(200), 5),
             reconnect: Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 3),
+            deadline: None,
             rng: Pcg::new(Pcg::mix_seed(std::process::id() as u64, seq)),
         })
     }
@@ -121,13 +136,43 @@ impl ServeClient {
     /// Like [`ServeClient::call`] but returns the raw response frame, so hot
     /// paths can decode straight into caller-owned buffers.
     fn call_raw(&mut self, req: &Request) -> io::Result<Vec<u8>> {
+        self.call_raw_by(req, None)
+    }
+
+    /// [`ServeClient::call_raw`] bounded by an absolute deadline: the
+    /// blocking read gets a socket timeout of the remaining budget, and the
+    /// reconnect loop gives up (typed `TimedOut`) once the deadline passes —
+    /// retries can shrink the budget but never outlive it.
+    fn call_raw_by(&mut self, req: &Request, deadline: Option<Instant>) -> io::Result<Vec<u8>> {
         let payload = req.encode();
         let mut failures = 0u32;
         loop {
-            let res = write_frame(&mut self.stream, &payload)
-                .and_then(|()| read_frame(&mut self.stream));
+            if let Some(d) = deadline {
+                let now = Instant::now();
+                if now >= d {
+                    return Err(self.deadline_expired());
+                }
+                let _ = self.stream.set_read_timeout(Some(d - now));
+            }
+            // Chaos hook: a fired ClientConnDrop behaves exactly like the
+            // server vanishing mid-exchange — the reconnect-resend path
+            // below must absorb it (requests are idempotent reads).
+            let res = if fault::fires(FaultSite::ClientConnDrop) {
+                Err(io::Error::new(
+                    io::ErrorKind::ConnectionReset,
+                    "injected connection drop (fault plan)",
+                ))
+            } else {
+                write_frame(&mut self.stream, &payload)
+                    .and_then(|()| read_frame(&mut self.stream))
+            };
             let err = match res {
-                Ok(Some(frame)) => return Ok(frame),
+                Ok(Some(frame)) => {
+                    if deadline.is_some() {
+                        let _ = self.stream.set_read_timeout(None);
+                    }
+                    return Ok(frame);
+                }
                 Ok(None) => io::Error::new(
                     io::ErrorKind::ConnectionReset,
                     format!("server at {} closed the connection", self.endpoint),
@@ -141,8 +186,15 @@ impl ServeClient {
                 if failures >= self.reconnect.retries {
                     return Err(err);
                 }
+                if deadline.is_some_and(|d| Instant::now() >= d) {
+                    return Err(self.deadline_expired());
+                }
                 if failures > 0 {
-                    std::thread::sleep(self.reconnect.delay(failures - 1, &mut self.rng));
+                    let mut wait = self.reconnect.delay(failures - 1, &mut self.rng);
+                    if let Some(d) = deadline {
+                        wait = wait.min(d.saturating_duration_since(Instant::now()));
+                    }
+                    std::thread::sleep(wait);
                 }
                 failures += 1;
                 match Stream::connect(&self.endpoint) {
@@ -156,6 +208,13 @@ impl ServeClient {
         }
     }
 
+    fn deadline_expired(&self) -> io::Error {
+        io::Error::new(
+            io::ErrorKind::TimedOut,
+            format!("deadline budget expired before {} answered", self.endpoint),
+        )
+    }
+
     /// Map an error frame to `io::Error` (overload → `WouldBlock`, so
     /// callers can tell shed load from hard failures).
     fn err_of(code: ErrCode, msg: String) -> io::Error {
@@ -164,6 +223,7 @@ impl ServeClient {
             ErrCode::BadRequest | ErrCode::RangeTooLarge | ErrCode::BadVersion => {
                 io::ErrorKind::InvalidInput
             }
+            ErrCode::DeadlineExceeded => io::ErrorKind::TimedOut,
             ErrCode::Internal => io::ErrorKind::Other,
         };
         io::Error::new(kind, format!("server error ({code:?}): {msg}"))
@@ -193,11 +253,26 @@ impl ServeClient {
     ) -> io::Result<RangeRead> {
         // stamp the trace active on this thread (0 = untraced) so a routed
         // read minted at the trainer is followable into the server worker
-        let req =
-            Request::GetRange { start, len: len as u32, epoch, trace: obs::current_trace() };
+        let trace = obs::current_trace();
+        let deadline = self.deadline.map(|budget| Instant::now() + budget);
         let mut attempt = 0u32;
         loop {
-            let frame = self.call_raw(&req)?;
+            // re-stamp the *remaining* budget each attempt: a retried
+            // request must not reset the clock the caller is holding.
+            // Clamped to ≥1 µs — an expired budget returns TimedOut here
+            // rather than encoding as NO_DEADLINE (= unbounded).
+            let deadline_us = match deadline {
+                None => NO_DEADLINE,
+                Some(d) => {
+                    let left = d.saturating_duration_since(Instant::now());
+                    if left.is_zero() {
+                        return Err(self.deadline_expired());
+                    }
+                    (left.as_micros().clamp(1, u32::MAX as u128)) as u32
+                }
+            };
+            let req = Request::GetRange { start, len: len as u32, epoch, trace, deadline_us };
+            let frame = self.call_raw_by(&req, deadline)?;
             match Response::decode_targets_into(&frame, out)? {
                 RangeFrame::Targets { epoch, trace: _, timing } => {
                     return Ok(RangeRead::Targets { epoch, timing })
@@ -209,8 +284,11 @@ impl ServeClient {
                 RangeFrame::Other(Response::Error { code: ErrCode::Overloaded, msg: _ })
                     if attempt < self.overload.retries =>
                 {
-                    let wait = self.overload.delay(attempt, &mut self.rng);
+                    let mut wait = self.overload.delay(attempt, &mut self.rng);
                     attempt += 1;
+                    if let Some(d) = deadline {
+                        wait = wait.min(d.saturating_duration_since(Instant::now()));
+                    }
                     std::thread::sleep(wait);
                 }
                 RangeFrame::Other(Response::Error { code, msg }) => {

@@ -34,7 +34,8 @@ pub mod stats;
 
 pub use client::{Backoff, RangeRead, ServeClient, ServedReader};
 pub use protocol::{
-    ErrCode, RangeFrame, RemoteManifest, Request, Response, NO_EPOCH, PROTOCOL_VERSION,
+    ErrCode, RangeFrame, RemoteManifest, Request, Response, NO_DEADLINE, NO_EPOCH,
+    PROTOCOL_VERSION,
 };
 pub use server::{ServeConfig, ServeSource, Server};
 pub use stats::{LatencyHistogram, ServeStats, StatsSnapshot, HIST_BUCKETS};

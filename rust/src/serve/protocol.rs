@@ -31,15 +31,20 @@ use crate::serve::stats::{StatsSnapshot, HIST_BUCKETS};
 use crate::spec::{CacheKind, SpecError};
 
 /// Current wire protocol version; bumped on any incompatible change.
-/// v4 added request tracing and exposition (docs/OBSERVABILITY.md): a trace
-/// id on `GetRange`, a trace-id + server-phase-timing echo on `Targets`, the
-/// `GetMetrics`/`Metrics` and `GetTrace`/`Trace` exchanges, and the
-/// `hot_overflow` counter on `Stats`. v3 added the cluster epoch to
+/// v5 added deadline propagation (docs/RESILIENCE.md): a relative
+/// microsecond deadline budget on `GetRange` ([`NO_DEADLINE`] = unbounded),
+/// the `DeadlineExceeded` error code for jobs the server sheds because
+/// their budget expired in queue, and the `deadline_exceeded` counter on
+/// `Stats`. v4 added request tracing and exposition
+/// (docs/OBSERVABILITY.md): a trace id on `GetRange`, a trace-id +
+/// server-phase-timing echo on `Targets`, the `GetMetrics`/`Metrics` and
+/// `GetTrace`/`Trace` exchanges, and the `hot_overflow` counter on
+/// `Stats`. v3 added the cluster epoch to
 /// `GetRange`/`Targets`/`Manifest`/`Stats`, plus the `GetCluster`/`Cluster`
 /// manifest exchange and the `WrongEpoch` frame (docs/SERVING.md §Cluster).
 /// v2 extended the `Stats` frame with the tiered-source counters
 /// (hits/misses/backfilled/origin_computes).
-pub const PROTOCOL_VERSION: u8 = 4;
+pub const PROTOCOL_VERSION: u8 = 5;
 
 /// Hard cap on a frame payload (16 MiB): a corrupt or hostile length prefix
 /// must not allocate unboundedly.
@@ -80,6 +85,13 @@ pub const NO_TRACE: u64 = 0;
 /// check on cluster members (ownership is still enforced).
 pub const NO_EPOCH: u64 = 0;
 
+/// The deadline value meaning "unbounded": a `GetRange` carrying it is
+/// never shed by the server's deadline check. Nonzero values are a
+/// *relative* budget in microseconds — measured from frame receipt, so no
+/// clock synchronization between client and server is assumed
+/// (docs/RESILIENCE.md §Deadlines).
+pub const NO_DEADLINE: u32 = 0;
+
 /// Typed error codes carried by [`Response::Error`] frames.
 #[derive(Clone, Copy, Debug, PartialEq, Eq)]
 pub enum ErrCode {
@@ -94,6 +106,11 @@ pub enum ErrCode {
     Internal = 4,
     /// frame carried an unsupported protocol version
     BadVersion = 5,
+    /// the request's deadline budget expired before the server could
+    /// answer (shed at admission or on worker pop) — not retryable on the
+    /// same budget; the caller's clock, not the server's, owns the retry
+    /// decision (docs/RESILIENCE.md §Deadlines)
+    DeadlineExceeded = 6,
 }
 
 impl ErrCode {
@@ -104,6 +121,7 @@ impl ErrCode {
             3 => Some(ErrCode::Overloaded),
             4 => Some(ErrCode::Internal),
             5 => Some(ErrCode::BadVersion),
+            6 => Some(ErrCode::DeadlineExceeded),
             _ => None,
         }
     }
@@ -145,8 +163,12 @@ pub enum Request {
     /// clients, or a routed reader probing after a manifest refetch).
     /// `trace` is the 64-bit trace id minted at the trainer root span
     /// ([`NO_TRACE`] = untraced) — a traced server opens a `Server` span and
-    /// echoes the id plus its phase timings on the answering `Targets` frame
-    GetRange { start: u64, len: u32, epoch: u64, trace: u64 },
+    /// echoes the id plus its phase timings on the answering `Targets`
+    /// frame. `deadline_us` is the request's remaining budget in
+    /// microseconds ([`NO_DEADLINE`] = unbounded): a server sheds the job
+    /// with a typed `DeadlineExceeded` frame once the budget expires in
+    /// queue, instead of doing work the client has already given up on
+    GetRange { start: u64, len: u32, epoch: u64, trace: u64, deadline_us: u32 },
     GetManifest,
     GetStats,
     /// the server's unified metrics registry snapshot, as Prometheus-style
@@ -343,12 +365,13 @@ fn open_payload(payload: &[u8]) -> io::Result<(u8, Cursor<'_>)> {
 impl Request {
     pub fn encode(&self) -> Vec<u8> {
         match self {
-            Request::GetRange { start, len, epoch, trace } => {
+            Request::GetRange { start, len, epoch, trace, deadline_us } => {
                 let mut p = preamble(OP_GET_RANGE);
                 p.extend_from_slice(&start.to_le_bytes());
                 p.extend_from_slice(&len.to_le_bytes());
                 p.extend_from_slice(&epoch.to_le_bytes());
                 p.extend_from_slice(&trace.to_le_bytes());
+                p.extend_from_slice(&deadline_us.to_le_bytes());
                 p
             }
             Request::GetManifest => preamble(OP_GET_MANIFEST),
@@ -368,6 +391,7 @@ impl Request {
                 len: c.u32()?,
                 epoch: c.u64()?,
                 trace: c.u64()?,
+                deadline_us: c.u32()?,
             },
             OP_GET_MANIFEST => Request::GetManifest,
             OP_GET_STATS => Request::GetStats,
@@ -445,6 +469,7 @@ impl Response {
                     p.extend_from_slice(&h.to_le_bytes());
                 }
                 p.extend_from_slice(&s.hot_overflow.to_le_bytes());
+                p.extend_from_slice(&s.deadline_exceeded.to_le_bytes());
                 p
             }
             Response::Cluster(m) => {
@@ -635,6 +660,7 @@ impl Response {
                     hot.push(c.u64()?);
                 }
                 let hot_overflow = c.u64()?;
+                let deadline_exceeded = c.u64()?;
                 Response::Stats(StatsSnapshot {
                     requests,
                     rejected,
@@ -647,6 +673,7 @@ impl Response {
                     hist,
                     hot,
                     hot_overflow,
+                    deadline_exceeded,
                 })
             }
             OP_CLUSTER => {
@@ -715,12 +742,14 @@ mod tests {
             len: 512,
             epoch: NO_EPOCH,
             trace: NO_TRACE,
+            deadline_us: NO_DEADLINE,
         });
         roundtrip_req(Request::GetRange {
             start: 7,
             len: 1,
             epoch: u64::MAX,
             trace: 0xDEAD_BEEF_CAFE_F00D,
+            deadline_us: 250_000,
         });
         roundtrip_req(Request::GetManifest);
         roundtrip_req(Request::GetStats);
@@ -925,6 +954,7 @@ mod tests {
             hist: (0..HIST_BUCKETS as u64).collect(),
             hot: vec![40, 0, 60],
             hot_overflow: 2,
+            deadline_exceeded: 6,
         }));
     }
 
@@ -989,6 +1019,11 @@ mod tests {
     #[test]
     fn error_roundtrip_and_unknown_code() {
         roundtrip_resp(Response::Error { code: ErrCode::Overloaded, msg: "queue full".into() });
+        roundtrip_resp(Response::Error {
+            code: ErrCode::DeadlineExceeded,
+            msg: "expired in queue".into(),
+        });
+        assert_eq!(ErrCode::from_u16(6), Some(ErrCode::DeadlineExceeded));
         // unknown code bytes decode to Internal rather than failing
         let mut p = preamble(OP_ERROR);
         p.extend_from_slice(&999u16.to_le_bytes());

@@ -62,10 +62,11 @@ use crate::cache::{
     WriteThrough,
 };
 use crate::cluster::ClusterControl;
+use crate::fault::{self, FaultSite};
 use crate::obs::{self, Phase, ServerTiming, SpanKind, SpanScope};
 use crate::serve::protocol::{
-    read_frame, write_frame, ErrCode, RemoteManifest, Request, Response, MAX_FRAME, NO_EPOCH,
-    NO_TRACE, PROTOCOL_VERSION,
+    read_frame, write_frame, ErrCode, RemoteManifest, Request, Response, MAX_FRAME, NO_DEADLINE,
+    NO_EPOCH, NO_TRACE, PROTOCOL_VERSION,
 };
 use crate::serve::stats::{ServeStats, StatsSnapshot};
 use crate::serve::{Endpoint, Stream};
@@ -246,10 +247,25 @@ struct Job {
     /// trace id from the request ([`NO_TRACE`] = untraced; nonzero makes the
     /// worker open a `Server` span and echo phase timings on the response)
     trace: u64,
+    /// remaining deadline budget in microseconds ([`NO_DEADLINE`] =
+    /// unbounded), measured from `enqueued`: a worker popping an
+    /// already-expired job sheds it instead of reading the cache for a
+    /// client that has given up (docs/RESILIENCE.md §Deadlines)
+    deadline_us: u32,
     /// when the connection thread queued the job — the worker measures its
     /// queue-wait phase from this
     enqueued: Instant,
-    done: mpsc::SyncSender<Result<Vec<u8>, String>>,
+    done: mpsc::SyncSender<Result<Vec<u8>, JobError>>,
+}
+
+/// Why a worker could not answer a job — kept typed so the connection
+/// thread can emit the matching wire error code and bump the right counter.
+enum JobError {
+    /// the job's deadline budget expired before (or while) a worker could
+    /// take it — answered as a typed `DeadlineExceeded` frame
+    Deadline { waited: Duration },
+    /// cache read failed (I/O error, panic, shutdown)
+    Internal(String),
 }
 
 struct Shared {
@@ -440,6 +456,11 @@ fn register_collector(shared: &Arc<Shared>, endpoint: &Endpoint) {
             labels,
             s.wrong_epoch.load(Ordering::Relaxed),
         );
+        c.counter(
+            "rskd_serve_deadline_exceeded_total",
+            labels,
+            s.deadline_exceeded.load(Ordering::Relaxed),
+        );
         c.gauge("rskd_serve_epoch", labels, epoch_of(&sh));
         let snap = sh.stats.snapshot_with(
             0,
@@ -491,6 +512,19 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize) {
     let mut block = RangeBlock::new();
     while let Some(job) = queue.pop() {
         let queue_wait = job.enqueued.elapsed();
+        // deadline admission at the worker: a job whose budget expired in
+        // queue is shed typed, not served — the client's clock has already
+        // moved on, and the cache read would be pure waste under overload
+        if job.deadline_us != NO_DEADLINE
+            && queue_wait >= Duration::from_micros(job.deadline_us as u64)
+        {
+            let _ = job.done.send(Err(JobError::Deadline { waited: queue_wait }));
+            continue;
+        }
+        // chaos hook: per-request straggler injection (sleeps the rule's
+        // delay) — what hedged reads are exercised against, since shard
+        // decodes are cached and cannot straggle warm reads
+        fault::fires(FaultSite::ServeJobDelay);
         // a panic must not kill the worker: its queue would keep accepting
         // jobs nobody pops, wedging every connection routed to it
         let res = std::panic::catch_unwind(std::panic::AssertUnwindSafe(|| {
@@ -502,7 +536,7 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize) {
                 "cache read panicked serving this range",
             ))
         })
-        .map_err(|e| e.to_string());
+        .map_err(|e| JobError::Internal(e.to_string()));
         // a dead connection just drops the receiver; nothing to do
         let _ = job.done.send(res);
     }
@@ -606,6 +640,23 @@ fn conn_loop(mut stream: Stream, shared: &Arc<Shared>) {
             }
             .encode();
         }
+        // fault sites (docs/RESILIENCE.md): one relaxed load each when no
+        // plan is installed. A chaos plan can make this server hang up
+        // before answering (conn drop) or emit a torn length prefix and
+        // hang up (stalled mid-frame write) — the client must recover via
+        // reconnect-resend or replica failover, never by desyncing.
+        if fault::fires(FaultSite::ServerConnDrop) {
+            return;
+        }
+        if fault::fires(FaultSite::ServerStallWrite) {
+            use std::io::Write as _;
+            let prefix = (payload.len() as u32).to_le_bytes();
+            let _ = stream.write_all(&prefix[..2]);
+            let _ = stream.flush();
+            // the rule's configured delay was already slept inside fires();
+            // dropping the connection now leaves the peer mid-frame
+            return;
+        }
         if write_frame(&mut stream, &payload).is_err() {
             return;
         }
@@ -658,8 +709,8 @@ fn handle_request(req: Request, shared: &Arc<Shared>) -> Vec<u8> {
                 .encode()
             }
         },
-        Request::GetRange { start, len, epoch, trace } => {
-            serve_range(shared, start, len as usize, epoch, trace)
+        Request::GetRange { start, len, epoch, trace, deadline_us } => {
+            serve_range(shared, start, len as usize, epoch, trace, deadline_us)
         }
     }
 }
@@ -670,6 +721,7 @@ fn serve_range(
     len: usize,
     req_epoch: u64,
     trace: u64,
+    deadline_us: u32,
 ) -> Vec<u8> {
     if len > shared.cfg.max_range {
         shared.stats.errors.fetch_add(1, Ordering::Relaxed);
@@ -707,7 +759,7 @@ fn serve_range(
     let t0 = Instant::now();
     let worker = route(&*shared.source, start, shared.queues.len());
     let (tx, rx) = mpsc::sync_channel(1);
-    let job = Job { start, len, epoch, trace, enqueued: t0, done: tx };
+    let job = Job { start, len, epoch, trace, deadline_us, enqueued: t0, done: tx };
     if shared.queues[worker].try_push(job).is_err() {
         shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
         return Response::Error {
@@ -726,7 +778,18 @@ fn serve_range(
                 .for_each_overlapping(start, end, &mut |i| shared.stats.touch_shard(i));
             payload
         }
-        Ok(Err(msg)) => {
+        Ok(Err(JobError::Deadline { waited })) => {
+            shared.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+            Response::Error {
+                code: ErrCode::DeadlineExceeded,
+                msg: format!(
+                    "deadline budget of {deadline_us} µs expired after {} µs in queue",
+                    waited.as_micros()
+                ),
+            }
+            .encode()
+        }
+        Ok(Err(JobError::Internal(msg))) => {
             shared.stats.errors.fetch_add(1, Ordering::Relaxed);
             Response::Error { code: ErrCode::Internal, msg }.encode()
         }

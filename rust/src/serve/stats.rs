@@ -62,6 +62,9 @@ pub struct ServeStats {
     /// requests answered `WrongEpoch` (stale manifest pin, or a range this
     /// cluster member no longer owns) — zero on standalone servers
     pub wrong_epoch: AtomicU64,
+    /// requests shed with a `DeadlineExceeded` frame because their budget
+    /// expired before a worker could answer (docs/RESILIENCE.md §Deadlines)
+    pub deadline_exceeded: AtomicU64,
     pub hist: LatencyHistogram,
     hot: Vec<AtomicU64>,
     /// `touch_shard` calls whose index fell outside the manifest-sized hot
@@ -79,6 +82,7 @@ impl ServeStats {
             rejected: AtomicU64::new(0),
             errors: AtomicU64::new(0),
             wrong_epoch: AtomicU64::new(0),
+            deadline_exceeded: AtomicU64::new(0),
             hist: LatencyHistogram::default(),
             hot: (0..shard_count).map(|_| AtomicU64::new(0)).collect(),
             hot_overflow: AtomicU64::new(0),
@@ -116,6 +120,7 @@ impl ServeStats {
             hist: self.hist.snapshot(),
             hot: self.hot.iter().map(|h| h.load(Ordering::Relaxed)).collect(),
             hot_overflow: self.hot_overflow.load(Ordering::Relaxed),
+            deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
         }
     }
 }
@@ -148,6 +153,9 @@ pub struct StatsSnapshot {
     /// the served source grew past the shard count the table was sized from
     /// and heat rankings are undercounting
     pub hot_overflow: u64,
+    /// requests shed with a typed `DeadlineExceeded` frame because their
+    /// v5 deadline budget expired in queue (docs/RESILIENCE.md §Deadlines)
+    pub deadline_exceeded: u64,
 }
 
 impl StatsSnapshot {
