@@ -24,7 +24,8 @@
 //!   discarded ([`ClusterCounters::hedges_launched`] / `hedges_won`).
 //! * **Circuit breakers** — per-endpoint failure tracking ejects a member
 //!   from rotation after consecutive failures; after a cooldown it is
-//!   re-admitted only once a live `Ping` probe succeeds.
+//!   re-admitted only once a live `Ping` probe succeeds (the probe is
+//!   time-bounded — it runs under the reader's lock).
 //! * **Deadline decomposition** — [`ClusterReader::set_deadline`] gives each
 //!   routed range a relative budget; every segment request (and every
 //!   failover/hedge retry) carries the *remaining* budget, so the whole
@@ -86,6 +87,12 @@ const BREAKER_TRIP_AFTER: u32 = 3;
 /// How long a tripped breaker stays open before a half-open `Ping` probe
 /// may re-admit the endpoint.
 const BREAKER_COOLDOWN: Duration = Duration::from_millis(250);
+/// Bound on the half-open connect+`Ping` probe (clamped further to the
+/// routed read's remaining deadline). The probe runs under the reader's
+/// single lock, so an unbounded connect to a blackholed member would stall
+/// every read through this reader — worse than the failure the breaker is
+/// protecting against.
+const PROBE_TIMEOUT: Duration = Duration::from_millis(100);
 /// Segment latency samples required before hedging arms.
 const HEDGE_MIN_SAMPLES: usize = 16;
 /// Sliding window of recent segment latencies the p95 is computed over.
@@ -95,9 +102,14 @@ const HEDGE_WINDOW: usize = 64;
 /// ceiling for a straggler.
 const HEDGE_DELAY_MIN: Duration = Duration::from_millis(1);
 const HEDGE_DELAY_MAX: Duration = Duration::from_millis(100);
-/// Hard cap on how long a detached racer thread may live when the caller
-/// set no deadline — guarantees the loser of a race always terminates
-/// instead of leaking a thread blocked on a silent straggler.
+/// How long `race_segment` waits for deadline-less racers to report before
+/// abandoning the race to the sequential fallback. Racers inherit the
+/// caller's remaining budget when one exists; with no budget they run as
+/// unbounded as the sequential path they replace (a >30 s segment read must
+/// not start failing just because hedging armed), so this cap bounds only
+/// the *wait* — an abandoned racer thread exits when its blocking read
+/// finally returns, and its connection (already out of the pool) drops
+/// with it.
 const HEDGE_RACE_CAP: Duration = Duration::from_secs(30);
 
 /// Per-endpoint health state: `Closed` (in rotation) → `Open` after
@@ -274,8 +286,11 @@ impl Inner {
 
     /// Is `ep` admitted to the data path right now? Closed → yes. Open and
     /// cooling down → no. Open past its cooldown → half-open: re-admitted
-    /// (and its pool slot refreshed) only if a live `Ping` round-trips.
-    fn breaker_admits(&mut self, ep: &Endpoint) -> bool {
+    /// (and its pool slot refreshed) only if a live `Ping` round-trips
+    /// within [`PROBE_TIMEOUT`], clamped to the routed read's remaining
+    /// budget — a budget already tighter than the probe skips it entirely,
+    /// leaving the breaker open for a later, roomier read to probe.
+    fn breaker_admits(&mut self, ep: &Endpoint, op_deadline: Option<Instant>) -> bool {
         let key = ep.to_string();
         match self.breakers.get(&key).map(|b| b.state) {
             None | Some(BreakerState::Closed) => true,
@@ -283,9 +298,16 @@ impl Inner {
                 if Instant::now() < until {
                     return false;
                 }
-                let probed = ServeClient::connect(ep).and_then(|mut c| {
+                let budget = match op_deadline {
+                    None => PROBE_TIMEOUT,
+                    Some(d) => PROBE_TIMEOUT.min(d.saturating_duration_since(Instant::now())),
+                };
+                if budget.is_zero() {
+                    return false;
+                }
+                let probed = ServeClient::probe(ep, budget).map(|mut c| {
                     tune(&mut c);
-                    c.ping().map(|()| c)
+                    c
                 });
                 let b = self.breakers.get_mut(&key).unwrap();
                 match probed {
@@ -308,10 +330,15 @@ impl Inner {
     /// Rotation order over `shard`'s replicas, filtered through the
     /// breakers. If *every* breaker is open the full rotation is returned
     /// anyway: total lockout would turn one bad cooldown into an outage.
-    fn replica_order(&mut self, shard: &ShardSpec, first: usize) -> Vec<usize> {
+    fn replica_order(
+        &mut self,
+        shard: &ShardSpec,
+        first: usize,
+        op_deadline: Option<Instant>,
+    ) -> Vec<usize> {
         let n = shard.endpoints.len();
         let mut order: Vec<usize> = (0..n).map(|k| (first + k) % n).collect();
-        order.retain(|&i| self.breaker_admits(&shard.endpoints[i]));
+        order.retain(|&i| self.breaker_admits(&shard.endpoints[i], op_deadline));
         if order.is_empty() {
             order = (0..n).map(|k| (first + k) % n).collect();
         }
@@ -319,10 +346,10 @@ impl Inner {
     }
 
     /// Detach one racer thread: it owns its connection and receive buffer,
-    /// reports exactly once on `tx`, and is bounded by `job.deadline` — the
-    /// loser of a race is simply never read, and its connection is dropped
-    /// with it (a response landing mid-frame must never desync a pooled
-    /// stream).
+    /// reports exactly once on `tx`, and is bounded by `job.deadline` when
+    /// the caller set a budget — the loser of a race is simply never read,
+    /// and its connection is dropped with it (a response landing mid-frame
+    /// must never desync a pooled stream).
     fn spawn_racer(
         &mut self,
         tx: &mpsc::Sender<RaceMsg>,
@@ -394,8 +421,9 @@ impl Inner {
         let mut hedge_launched = false;
         let mut tried = 1usize;
         let mut last_err: Option<io::Error> = None;
-        // every racer is deadline-bounded, so waiting slightly past the cap
-        // can only mean a lost thread — fail rather than block forever
+        // with a caller budget every racer is deadline-bounded, so waiting
+        // slightly past it can only mean a lost thread; without one the cap
+        // bounds only this wait, not the racers (see HEDGE_RACE_CAP)
         let drain_cap = job.deadline.unwrap_or(HEDGE_RACE_CAP) + Duration::from_secs(1);
         loop {
             let msg = if !hedge_launched {
@@ -424,12 +452,19 @@ impl Inner {
                 match rx.recv_timeout(drain_cap) {
                     Ok(m) => Some(m),
                     Err(_) => {
-                        last_err = Some(io::Error::new(
-                            io::ErrorKind::TimedOut,
-                            "hedged racers never reported (lost thread?)",
-                        ));
-                        outstanding = 0;
-                        None
+                        // racers still in flight past the cap: abandon the
+                        // race (each detached thread exits when its read
+                        // finally returns — its channel and connection are
+                        // gone). skip: 0 — these replicas are slow, not
+                        // proven dead, so the fallback may retry them (and
+                        // an exhausted caller budget fails typed there).
+                        return Ok(RaceOutcome::Failed {
+                            skip: 0,
+                            last_err: io::Error::new(
+                                io::ErrorKind::TimedOut,
+                                "hedged racers outlived the race cap; retrying sequentially",
+                            ),
+                        });
                     }
                 }
             } else {
@@ -444,14 +479,21 @@ impl Inner {
                 Ok(RangeRead::Targets { epoch: got, timing: _ }) if got == epoch => {
                     if m.block.len() != seg {
                         self.breaker_failure(&m.key);
-                        last_err = Some(io::Error::new(
+                        let err = io::Error::new(
                             io::ErrorKind::InvalidData,
                             format!(
                                 "{} answered {} positions for a {seg}-position segment",
                                 m.key,
                                 m.block.len()
                             ),
-                        ));
+                        );
+                        if outstanding == 0 {
+                            // nothing else in flight: fail over now instead
+                            // of sleeping out the rest of the hedge delay
+                            // (or drain wait) listening to an empty channel
+                            return Ok(RaceOutcome::Failed { skip: tried, last_err: err });
+                        }
+                        last_err = Some(err);
                         continue;
                     }
                     self.breaker_success(&m.key);
@@ -504,7 +546,7 @@ impl Inner {
         let n = shard.endpoints.len();
         let first = self.rr % n;
         self.rr = self.rr.wrapping_add(1);
-        let order = self.replica_order(&shard, first);
+        let order = self.replica_order(&shard, first, op_deadline);
         let mut last_err: Option<io::Error> = None;
         let mut skip = 0usize;
         // hedged race over the first two admitted replicas, armed only once
@@ -528,7 +570,11 @@ impl Inner {
                     epoch,
                     si: si as u32,
                     trace: obs::current_trace(),
-                    deadline: Some(budget.unwrap_or(HEDGE_RACE_CAP).min(HEDGE_RACE_CAP)),
+                    // racers inherit the caller's remaining budget only:
+                    // with no budget they run unbounded, exactly like the
+                    // sequential path (HEDGE_RACE_CAP bounds the race wait,
+                    // not the racers)
+                    deadline: budget,
                 };
                 match self.race_segment(&order, &shard, delay, job, seg, epoch)? {
                     RaceOutcome::Done(f) => return Ok(f),
@@ -610,7 +656,11 @@ impl Inner {
                     return Ok(Fetch::EpochChanged);
                 }
                 Err(e) if e.kind() == io::ErrorKind::TimedOut && op_deadline.is_some() => {
-                    // the budget died inside the exchange: typed, terminal
+                    // the budget died inside the exchange: typed, terminal.
+                    // The pooled client stays: ServeClient poisons its own
+                    // stream after a mid-exchange failure and reconnects
+                    // before its next use, so a stale in-flight response
+                    // can never be read back as a later request's answer.
                     self.counters.deadline_exceeded += 1;
                     return Err(e);
                 }
@@ -811,7 +861,9 @@ impl ClusterReader {
     /// failover/hedge within it) carries the *remaining* budget, and an
     /// exhausted budget surfaces as one typed `TimedOut`
     /// ([`ClusterCounters::deadline_exceeded`]). `None` (the default)
-    /// restores unbounded pre-v5 behaviour.
+    /// restores unbounded pre-v5 behaviour — hedge racers then run
+    /// unbounded too; only the race *wait* is capped (30 s) before falling
+    /// back to the sequential walk.
     pub fn set_deadline(&self, budget: Option<Duration>) {
         self.inner.lock().unwrap().deadline = budget;
     }

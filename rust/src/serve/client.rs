@@ -24,7 +24,10 @@
 //! the server sheds expired jobs with a typed `DeadlineExceeded`), bounds
 //! the blocking read via a socket read timeout, and caps both retry loops —
 //! a request can degrade into a typed `TimedOut`, never into an unbounded
-//! hang (docs/RESILIENCE.md §Deadlines).
+//! hang (docs/RESILIENCE.md §Deadlines). An exchange that dies after its
+//! request was written poisons the connection: the next call reconnects
+//! instead of reusing the stream, so a stale in-flight response can never
+//! be read as the answer to a later request (the wire has no request ids).
 
 use std::io;
 use std::sync::atomic::{AtomicU64, Ordering};
@@ -107,6 +110,14 @@ pub struct ServeClient {
     /// stamped on each `GetRange` frame and bounds retries and the
     /// blocking read itself.
     pub deadline: Option<Duration>,
+    /// Set while an exchange is in flight (request written, full response
+    /// frame not yet read) and left set if that exchange dies — on a
+    /// deadline expiry or exhausted retries the stream may still carry the
+    /// stale response, and the protocol has no request ids, so reusing the
+    /// stream would pair the old answer with the next request. A poisoned
+    /// client reconnects before its next exchange (which also sheds any
+    /// lingering socket read timeout).
+    poisoned: bool,
     rng: Pcg,
 }
 
@@ -119,8 +130,36 @@ impl ServeClient {
             overload: Backoff::new(Duration::from_millis(5), Duration::from_millis(200), 5),
             reconnect: Backoff::new(Duration::from_millis(10), Duration::from_secs(1), 3),
             deadline: None,
+            poisoned: false,
             rng: Pcg::new(Pcg::mix_seed(std::process::id() as u64, seq)),
         })
+    }
+
+    /// Connect and `Ping` within `timeout` — the half-open breaker probe.
+    /// Both the connect ([`Stream::connect_timeout`]) and the ping exchange
+    /// (socket read/write timeouts) are bounded, and no reconnect-resend is
+    /// attempted, so a blackholed endpoint costs the caller a bounded beat,
+    /// never the OS connect timeout. On success the socket timeouts are
+    /// cleared and the returned client is pool-ready (callers re-tune the
+    /// retry schedules to taste).
+    pub(crate) fn probe(endpoint: &Endpoint, timeout: Duration) -> io::Result<ServeClient> {
+        let seq = CLIENT_SEQ.fetch_add(1, Ordering::Relaxed);
+        let stream = Stream::connect_timeout(endpoint, timeout)?;
+        let _ = stream.set_read_timeout(Some(timeout));
+        let _ = stream.set_write_timeout(Some(timeout));
+        let mut c = ServeClient {
+            stream,
+            endpoint: endpoint.clone(),
+            overload: Backoff::new(Duration::ZERO, Duration::ZERO, 0),
+            reconnect: Backoff::new(Duration::ZERO, Duration::ZERO, 0),
+            deadline: None,
+            poisoned: false,
+            rng: Pcg::new(Pcg::mix_seed(std::process::id() as u64, seq)),
+        };
+        c.ping()?;
+        let _ = c.stream.set_read_timeout(None);
+        let _ = c.stream.set_write_timeout(None);
+        Ok(c)
     }
 
     pub fn endpoint(&self) -> &Endpoint {
@@ -154,17 +193,30 @@ impl ServeClient {
                 }
                 let _ = self.stream.set_read_timeout(Some(d - now));
             }
-            // Chaos hook: a fired ClientConnDrop behaves exactly like the
-            // server vanishing mid-exchange — the reconnect-resend path
-            // below must absorb it (requests are idempotent reads).
-            let res = if fault::fires(FaultSite::ClientConnDrop) {
+            let res = if self.poisoned {
+                // a previous exchange died after its request was written:
+                // the stream may still carry that stale response in flight,
+                // so it must never be reused — force the reconnect path
+                Err(io::Error::new(
+                    io::ErrorKind::ConnectionAborted,
+                    "stream poisoned by an earlier mid-exchange failure; reconnecting",
+                ))
+            } else if fault::fires(FaultSite::ClientConnDrop) {
+                // Chaos hook: a fired ClientConnDrop behaves exactly like
+                // the server vanishing mid-exchange — the reconnect-resend
+                // path below must absorb it (requests are idempotent reads).
                 Err(io::Error::new(
                     io::ErrorKind::ConnectionReset,
                     "injected connection drop (fault plan)",
                 ))
             } else {
-                write_frame(&mut self.stream, &payload)
-                    .and_then(|()| read_frame(&mut self.stream))
+                self.poisoned = true;
+                let r = write_frame(&mut self.stream, &payload)
+                    .and_then(|()| read_frame(&mut self.stream));
+                if matches!(r, Ok(Some(_))) {
+                    self.poisoned = false;
+                }
+                r
             };
             let err = match res {
                 Ok(Some(frame)) => {
@@ -200,6 +252,7 @@ impl ServeClient {
                 match Stream::connect(&self.endpoint) {
                     Ok(s) => {
                         self.stream = s;
+                        self.poisoned = false;
                         break;
                     }
                     Err(_) => continue,
@@ -505,6 +558,24 @@ mod tests {
         for attempt in 0..25 {
             assert_eq!(b.delay(attempt, &mut rng), Duration::ZERO);
         }
+    }
+
+    #[test]
+    fn probe_is_bounded_by_timeout_not_os_connect() {
+        // a listener that accepts (backlog) but never answers: the connect
+        // completes, the Ping write lands, and the read must give up within
+        // the probe budget — not the OS connect timeout, and with zero
+        // reconnect retries (a retry would re-block on a fresh socket)
+        let listener = std::net::TcpListener::bind("127.0.0.1:0").unwrap();
+        let ep = Endpoint::Tcp(listener.local_addr().unwrap());
+        let t0 = Instant::now();
+        let err = ServeClient::probe(&ep, Duration::from_millis(50));
+        assert!(err.is_err(), "a silent endpoint must fail the probe");
+        assert!(
+            t0.elapsed() < Duration::from_secs(2),
+            "probe must be bounded by its timeout: took {:?}",
+            t0.elapsed()
+        );
     }
 
     #[test]

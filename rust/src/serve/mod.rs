@@ -113,6 +113,18 @@ impl Stream {
         })
     }
 
+    /// Connect bounded by `timeout` instead of the OS connect timeout — a
+    /// blackholed TCP endpoint (SYN dropped) otherwise blocks for tens of
+    /// seconds. Unix connects are a local rendezvous, not a SYN exchange:
+    /// they either complete against the listener backlog immediately or
+    /// error, so there is no blackhole case to bound.
+    pub(crate) fn connect_timeout(ep: &Endpoint, timeout: Duration) -> io::Result<Stream> {
+        Ok(match ep {
+            Endpoint::Tcp(a) => Stream::Tcp(TcpStream::connect_timeout(a, timeout)?),
+            Endpoint::Unix(p) => Stream::Unix(UnixStream::connect(p)?),
+        })
+    }
+
     pub(crate) fn set_read_timeout(&self, d: Option<Duration>) -> io::Result<()> {
         match self {
             Stream::Tcp(s) => s.set_read_timeout(d),

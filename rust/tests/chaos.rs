@@ -235,6 +235,46 @@ fn client_deadline_expiry_is_typed_timeout() {
 }
 
 #[test]
+fn deadline_expired_connection_never_serves_stale_response() {
+    let _serial = fault::test_mutex().lock().unwrap_or_else(|e| e.into_inner());
+    let dir = tdir("deadline-desync");
+    build_cache(&dir, 64);
+    let server = start_standalone(&dir);
+    let direct = CacheReader::open(&dir).unwrap();
+    let mut client = ServeClient::connect(server.endpoint()).unwrap();
+    let mut block = RangeBlock::new();
+    client.read_range_at(0, 16, NO_EPOCH, &mut block).unwrap();
+
+    // the request for [0, 16) is written, then the budget dies while the
+    // server is still sleeping on the injected delay — the response is now
+    // in flight toward a connection the client has already given up on
+    let _scoped = ScopedPlan::install(
+        FaultPlan::new(37)
+            .with(FaultSite::ServeJobDelay, FaultRule::always_delay(Duration::from_millis(80))),
+    );
+    client.deadline = Some(Duration::from_millis(15));
+    let err = client.read_range_at(0, 16, NO_EPOCH, &mut block).unwrap_err();
+    assert_eq!(err.kind(), std::io::ErrorKind::TimedOut, "{err}");
+
+    // let the stale [0, 16) response land in the socket buffer, then ask
+    // the SAME client for a different range of the same length: the wire
+    // has no request ids, so reusing the stream would decode the stale
+    // frame as this answer — silently wrong bytes. The client must poison
+    // and reconnect instead.
+    fault::plan().unwrap().set_rule(FaultSite::ServeJobDelay, FaultRule::never());
+    client.deadline = None;
+    std::thread::sleep(Duration::from_millis(120));
+    let r = client.read_range_at(16, 16, NO_EPOCH, &mut block).unwrap();
+    assert!(matches!(r, RangeRead::Targets { .. }), "{r:?}");
+    assert_eq!(
+        block.to_targets(),
+        direct.get_range(16, 16),
+        "a reused connection served the previous request's stale response"
+    );
+    let _ = std::fs::remove_dir_all(&dir);
+}
+
+#[test]
 fn server_sheds_queue_expired_jobs_typed_and_counted() {
     let _serial = fault::test_mutex().lock().unwrap_or_else(|e| e.into_inner());
     let dir = tdir("deadline-shed");
