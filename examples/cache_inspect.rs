@@ -10,6 +10,9 @@
 //! cargo run --release --example cache_inspect -- --stats --unix /tmp/rskd.sock
 //! # the unified cross-layer metrics registry (docs/OBSERVABILITY.md):
 //! cargo run --release --example cache_inspect -- --metrics --port 7411
+//! # per-shard I/O residency: mapped vs heap + the bytes-copied ledger
+//! # (docs/CACHE_FORMAT.md §Mapped reads):
+//! cargo run --release --example cache_inspect -- --io [--dir PATH] [--heap]
 //! ```
 
 use anyhow::Result;
@@ -128,6 +131,92 @@ fn metrics_mode(args: &Args) -> Result<()> {
     Ok(())
 }
 
+/// `--io`: per-shard residency view of the zero-copy read path
+/// (docs/CACHE_FORMAT.md §Mapped reads). Opens a cache directory (`--dir`,
+/// or a freshly built demo cache), touches every shard once under the
+/// requested I/O mode (`--heap` forces the portable fallback), and prints
+/// which resident shards are mmap-backed vs heap-decoded, what they charge
+/// against the reader's byte budget, and the process-wide bytes-copied /
+/// bytes-mapped ledger the read path fed while doing it.
+fn io_mode_view(args: &Args) -> Result<()> {
+    use rskd::cache::{IoMode, ReadOptions};
+    let mut report = Report::new("cache_inspect_io", "Shard I/O residency (mapped vs heap)");
+    let (dir, ephemeral) = match args.get("dir") {
+        Some(d) => (std::path::PathBuf::from(d), false),
+        None => {
+            let dir = std::env::temp_dir().join("rskd-cache-inspect-io");
+            let _ = std::fs::remove_dir_all(&dir);
+            let p = zipf(512, 1.0);
+            let mut rng = Pcg::new(3);
+            let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 512, 64)?;
+            for pos in 0..1024u64 {
+                assert!(w.push(pos, random_sampling(&p, 50, 1.0, &mut rng)));
+            }
+            w.finish()?;
+            report.line("(no --dir given: built a 1024-position demo cache)");
+            (dir, true)
+        }
+    };
+    let io = if args.bool_or("heap", false) { IoMode::Heap } else { IoMode::auto() };
+    let r = CacheReader::open_with(&dir, ReadOptions { io, ..ReadOptions::default() })?;
+    report.line(format!(
+        "opened {} | requested {:?}, running as {:?} | {} shards",
+        dir.display(),
+        io,
+        r.io_mode(),
+        r.shard_count()
+    ));
+
+    // touch every shard once so the residency table has something to show
+    // (later touches may evict earlier shards — that is the point: the table
+    // below is the LRU's live view, not the manifest)
+    let mut block = RangeBlock::new();
+    for e in r.entries().to_vec() {
+        r.read_range_into(e.start, e.count.min(64) as usize, &mut block)?;
+    }
+
+    let rows: Vec<Vec<String>> = r
+        .entries()
+        .iter()
+        .zip(r.shard_io())
+        .map(|(e, io)| {
+            let file = e
+                .path
+                .file_name()
+                .map(|f| f.to_string_lossy().into_owned())
+                .unwrap_or_else(|| e.path.display().to_string());
+            let (state, bytes) = match io {
+                Some((true, b)) => ("mapped".to_string(), format!("{b} B")),
+                Some((false, b)) => ("heap".to_string(), format!("{b} B")),
+                None => ("cold".to_string(), "-".to_string()),
+            };
+            vec![file, format!("[{}, {})", e.start, e.start + e.count), state, bytes]
+        })
+        .collect();
+    report.table(&["shard file", "position range", "I/O", "resident"], &rows);
+    report.line(format!(
+        "resident: {} shard(s), {} bytes charged against the byte budget",
+        r.resident_shards(),
+        r.resident_bytes()
+    ));
+
+    // the process-wide ledger: what this process's reads copied through
+    // intermediate buffers vs served straight from mappings
+    let reg = rskd::obs::registry();
+    report.line(format!(
+        "ledger: {} bytes copied, {} bytes mapped (rskd_io_bytes_copied_total / \
+         rskd_io_bytes_mapped_total)",
+        reg.counter("rskd_io_bytes_copied_total", &[]).get(),
+        reg.counter("rskd_io_bytes_mapped_total", &[]).get()
+    ));
+    if ephemeral {
+        drop(r);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+    report.finish();
+    Ok(())
+}
+
 fn main() -> Result<()> {
     let args = Args::from_env();
     if args.bool_or("stats", false) {
@@ -135,6 +224,9 @@ fn main() -> Result<()> {
     }
     if args.bool_or("metrics", false) {
         return metrics_mode(&args);
+    }
+    if args.bool_or("io", false) {
+        return io_mode_view(&args);
     }
     let mut report = Report::new("cache_inspect", "Sparse-logit cache internals (Appendix D.1)");
 

@@ -19,6 +19,11 @@
 //!  resilience — disabled fault-hook cost and deadline plumbing on the warm
 //!             served path; under `RSKD_PERF_SMOKE=1` gates < 1% hook
 //!             overhead per request and 0 extra allocs with a budget set.
+//!  zero_copy — mapped vs heap shard I/O on warm and cold range reads, the
+//!             bytes-copied ledger per warm range, and a loopback serve
+//!             exchange over a mapped reader; under `RSKD_PERF_SMOKE=1`
+//!             gates 0 payload bytes copied + 0 allocs on a warm raw mapped
+//!             range and every served response scatter-written (`writev`).
 //!
 //! The cache-layer, serve, and assembly sections are host-only and run even
 //! when `artifacts/` is missing, so the storage + serving + block-assembly
@@ -958,6 +963,175 @@ fn resilience_benches(report: &mut Report, smoke: bool) -> Json {
     ])
 }
 
+/// Zero-copy I/O section (runs in smoke mode too): warm range reads under
+/// mmap-backed vs heap shard I/O with the bytes-copied ledger on each, cold
+/// open + first-range latency per mode, and a loopback serve exchange over a
+/// mapped reader whose responses must be scatter-written
+/// (`responses_vectored`) and byte-identical to a direct read. Returns the
+/// `BENCH_hotpath.json` zero_copy object (schema: docs/BENCH_SCHEMA.md).
+/// Under `RSKD_PERF_SMOKE=1` it *asserts* that a warm raw mapped range moves
+/// 0 payload bytes through intermediate buffers and allocates nothing, and
+/// that every served request on a little-endian host went out through the
+/// vectored send path — the zero-copy CI perf gate.
+fn zero_copy_benches(report: &mut Report, smoke: bool) -> Json {
+    use rskd::cache::{IoMode, ReadOptions};
+    use rskd::util::bench::copy_count;
+
+    let n_positions = if smoke { 2048usize } else { 16_384 };
+    let win = 512usize; // one full shard per range
+    let vocab = 512usize;
+    let p = zipf(vocab, 1.0);
+    let mut rng = Pcg::new(57);
+    let dir = std::env::temp_dir().join(format!("rskd-perf-zc-{}", std::process::id()));
+    let _ = std::fs::remove_dir_all(&dir);
+    let w = CacheWriter::create(&dir, ProbCodec::Count { rounds: 50 }, 512, 256).unwrap();
+    for pos in 0..n_positions as u64 {
+        assert!(w.push(pos, random_sampling(&p, 50, 1.0, &mut rng)));
+    }
+    w.finish().unwrap();
+
+    let budget = Duration::from_millis(if smoke { 200 } else { 800 });
+    let counting = alloc_count::is_counting();
+    report.line(
+        "--- zero-copy I/O: mapped vs heap shard reads + vectored serve \
+         (docs/CACHE_FORMAT.md §Mapped reads) ---",
+    );
+    let open_io = |io: IoMode| {
+        CacheReader::open_with(
+            &dir,
+            ReadOptions { capacity: n_positions / 512 + 1, io, ..ReadOptions::default() },
+        )
+        .unwrap()
+    };
+
+    let mut rows: Vec<Vec<String>> = Vec::new();
+    let mut modes_json: Vec<(&'static str, Json)> = Vec::new();
+    let mut baseline = RangeBlock::new();
+    let mut raw_gate: Option<(u64, u64)> = None; // (bytes copied, allocs) on warm mapped
+    for (name, io) in [("mapped", IoMode::Mapped), ("heap", IoMode::Heap)] {
+        // cold: reopen and decode the first shard every iteration
+        let st_cold = bench(1, budget, || {
+            let r = open_io(io);
+            let mut b = RangeBlock::new();
+            r.read_range_into(0, win, &mut b).unwrap();
+            std::hint::black_box(b.len());
+        });
+
+        // warm: shard resident, block capacity grown — the steady state
+        let r = open_io(io);
+        let mut block = RangeBlock::new();
+        r.read_range_into(0, win, &mut block).unwrap();
+        if io == IoMode::Mapped {
+            baseline = block.clone();
+        }
+        assert!(block == baseline, "heap decode differs from mapped");
+        let st_warm = bench(2, budget, || {
+            r.read_range_into(0, win, &mut block).unwrap();
+            std::hint::black_box(block.len());
+        });
+        let (copied, _) = copy_count::measure(|| {
+            r.read_range_into(0, win, &mut block).unwrap();
+            std::hint::black_box(block.len());
+        });
+        let (allocs, _) = alloc_count::measure(|| {
+            r.read_range_into(0, win, &mut block).unwrap();
+            std::hint::black_box(block.len());
+        });
+        let effective = r.io_mode();
+        if io == IoMode::Mapped && effective == IoMode::Mapped {
+            raw_gate = Some((copied, allocs));
+        }
+        let tps = win as f64 / st_warm.median.as_secs_f64();
+        rows.push(vec![
+            format!("{name} (runs as {effective:?})"),
+            format!("{:.3} ms", st_cold.per_iter_ms()),
+            format!("{:.3} ms", st_warm.per_iter_ms()),
+            format!("{:.0}", tps),
+            format!("{copied} B"),
+            if counting { format!("{allocs}") } else { "n/a".into() },
+        ]);
+        modes_json.push((
+            name,
+            Json::obj(vec![
+                ("effective_mapped", Json::Bool(effective == IoMode::Mapped)),
+                ("cold_ms_open_plus_range", Json::num(st_cold.per_iter_ms())),
+                ("warm_ms_per_range", Json::num(st_warm.per_iter_ms())),
+                ("warm_tokens_per_sec", Json::num(tps)),
+                ("warm_bytes_copied_per_range", Json::num(copied as f64)),
+                ("warm_allocs_per_range", Json::num(if counting { allocs as f64 } else { -1.0 })),
+            ]),
+        ));
+    }
+    report.table(
+        &["shard I/O mode", "cold open+range", "warm range", "tokens/s", "copied/range",
+          "allocs/range"],
+        &rows,
+    );
+
+    // loopback serve over a mapped reader: every response must decode to the
+    // same bytes a direct read produces, and on little-endian hosts must have
+    // been scatter-written from the worker's block
+    let reader = Arc::new(open_io(IoMode::Mapped));
+    let server =
+        Server::start(reader, Endpoint::Unix(dir.join("zc.sock")), ServeConfig::default())
+            .unwrap();
+    let mut client = ServeClient::connect(server.endpoint()).unwrap();
+    let mut served = RangeBlock::new();
+    client.read_range_into(0, win, &mut served).unwrap(); // warm
+    assert!(served == baseline, "served range differs from direct mapped read");
+    let st_serve = bench(2, budget, || {
+        client.read_range_into(0, win, &mut served).unwrap();
+        std::hint::black_box(served.len());
+    });
+    assert!(served == baseline, "served range differs from direct mapped read");
+    let snap = server.stats_snapshot();
+    let vectored_all = snap.responses_vectored == snap.requests && snap.requests > 0;
+    rows = vec![
+        vec!["served warm range, mapped reader".into(), format!("{:.3} ms", st_serve.per_iter_ms())],
+        vec!["responses vectored".into(),
+             format!("{} / {}", snap.responses_vectored, snap.requests)],
+    ];
+    report.table(&["vectored serve", "value"], &rows);
+    drop(client);
+    drop(server);
+    let _ = std::fs::remove_dir_all(&dir);
+
+    if smoke {
+        assert!(counting, "smoke mode requires the counting allocator to be installed");
+        if cfg!(unix) {
+            let (copied, allocs) =
+                raw_gate.expect("mapped mode must not degrade to heap on unix");
+            assert_eq!(copied, 0, "warm raw mapped range must copy 0 payload bytes");
+            assert_eq!(allocs, 0, "warm raw mapped range must not allocate at steady state");
+        }
+        if cfg!(target_endian = "little") {
+            assert!(
+                vectored_all,
+                "every served response must go out vectored on LE ({} of {})",
+                snap.responses_vectored, snap.requests
+            );
+        }
+        report.line("[smoke gate passed: 0 bytes copied + 0 allocs warm mapped, serve vectored]");
+    }
+
+    Json::obj(vec![
+        ("config", Json::obj(vec![
+            ("vocab", Json::num(vocab as f64)),
+            ("positions", Json::num(n_positions as f64)),
+            ("range", Json::num(win as f64)),
+            ("rounds", Json::num(50.0)),
+            ("smoke", Json::Bool(smoke)),
+            ("alloc_counting", Json::Bool(counting)),
+        ])),
+        ("modes", Json::obj(modes_json)),
+        ("serve", Json::obj(vec![
+            ("warm_ms_per_range", Json::num(st_serve.per_iter_ms())),
+            ("requests", Json::num(snap.requests as f64)),
+            ("responses_vectored", Json::num(snap.responses_vectored as f64)),
+        ])),
+    ])
+}
+
 fn main() {
     let smoke = std::env::var("RSKD_PERF_SMOKE").map(|v| v == "1").unwrap_or(false);
     let mut report = Report::new("perf_hotpath", "Hot-path timings per layer");
@@ -966,6 +1140,7 @@ fn main() {
     let cluster = cluster_benches(&mut report, smoke);
     let observability = observability_benches(&mut report, smoke);
     let resilience = resilience_benches(&mut report, smoke);
+    let zero_copy = zero_copy_benches(&mut report, smoke);
     let bench_json = Json::obj(vec![
         ("schema_version", Json::num(1.0)),
         ("bench", Json::str("perf_hotpath")),
@@ -974,6 +1149,7 @@ fn main() {
         ("cluster", cluster),
         ("observability", observability),
         ("resilience", resilience),
+        ("zero_copy", zero_copy),
     ]);
     // the repo-root perf trajectory point (schema: docs/BENCH_SCHEMA.md)
     match std::fs::write("BENCH_hotpath.json", bench_json.to_string()) {

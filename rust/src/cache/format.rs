@@ -132,7 +132,7 @@ pub fn read_header(r: &mut impl Read) -> io::Result<ShardHeader> {
 /// The exact 24 header bytes of a v3 shard — shared by the writer and by
 /// the reader's CRC check, so a header bit flip that survives parsing
 /// (i.e. changes the decoded meaning) always fails the checksum.
-fn header_bytes(hdr: &ShardHeader) -> [u8; HEADER_BYTES] {
+pub(crate) fn header_bytes(hdr: &ShardHeader) -> [u8; HEADER_BYTES] {
     let rounds = match hdr.codec {
         ProbCodec::Count { rounds } => rounds as u8,
         _ => 0,
@@ -279,11 +279,47 @@ impl Shard {
         }
         let mut payload = vec![0u8; payload_len];
         read_exact_ctx(r, &mut payload, "shard payload")?;
+        // streaming the payload through a heap buffer is a counted copy;
+        // the mapped path (`body_from_slice`) checksums in place instead
+        crate::cache::mapio::note_copied(payload.len());
         let crc = codec::crc32(&[&header_bytes(hdr)[..], &payload[..]]);
         if crc != stored_crc {
             return Err(CacheError::ChecksumMismatch { expected: stored_crc, found: crc }.into());
         }
         let records = codec::decode_records(&payload, count, hdr.shard_codec)?;
+        Ok(Shard { codec: hdr.codec, start: hdr.start, records })
+    }
+
+    /// Decode the record body from a full in-memory file image positioned
+    /// just past the 24 header bytes — the zero-copy twin of [`read_body`].
+    /// Typed errors, the size cap, and the CRC check are byte-for-byte the
+    /// same as the streaming path; the difference is that a compressed
+    /// payload is checksummed and decompressed directly out of `body`
+    /// (mapped pages or an already-loaded heap image) instead of being
+    /// staged through an intermediate buffer first.
+    pub(crate) fn body_from_slice(hdr: &ShardHeader, body: &[u8]) -> io::Result<Shard> {
+        if hdr.shard_codec == ShardCodec::Raw {
+            let mut r = body;
+            return Shard::read_body(hdr, &mut r);
+        }
+        if body.len() < 8 {
+            return Err(CacheError::Truncated { what: "payload length and checksum" }.into());
+        }
+        let payload_len = u32::from_le_bytes(body[0..4].try_into().unwrap()) as usize;
+        let stored_crc = u32::from_le_bytes(body[4..8].try_into().unwrap());
+        if payload_len > codec::MAX_PAYLOAD_BYTES {
+            return Err(CacheError::Corrupt("declared payload length exceeds cap".into()).into());
+        }
+        let rest = &body[8..];
+        if rest.len() < payload_len {
+            return Err(CacheError::Truncated { what: "shard payload" }.into());
+        }
+        let payload = &rest[..payload_len];
+        let crc = codec::crc32(&[&header_bytes(hdr)[..], payload]);
+        if crc != stored_crc {
+            return Err(CacheError::ChecksumMismatch { expected: stored_crc, found: crc }.into());
+        }
+        let records = codec::decode_records(payload, hdr.count as usize, hdr.shard_codec)?;
         Ok(Shard { codec: hdr.codec, start: hdr.start, records })
     }
 

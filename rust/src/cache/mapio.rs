@@ -1,0 +1,373 @@
+//! Zero-copy shard byte I/O: mmap-backed file images with a portable
+//! read-to-heap fallback, plus the process-wide bytes-copied / bytes-mapped
+//! ledger (`rskd_io_bytes_copied_total` / `rskd_io_bytes_mapped_total`).
+//!
+//! The cache read hot path wants shard bytes to flow from the page cache to
+//! the consumer's [`RangeBlock`](crate::cache::RangeBlock) without landing in
+//! an intermediate heap buffer. On Unix we get that by mapping the shard
+//! file read-only and decoding straight out of the mapped pages; everywhere
+//! else (and on any mmap failure) we fall back to a single `fs::read` into a
+//! heap buffer, which costs exactly one counted copy at cold load and is
+//! byte-for-byte equivalent from the decoder's point of view.
+//!
+//! # Safety argument for the `unsafe` mmap block
+//!
+//! The only `unsafe` in this module is the mmap/munmap syscall pair and the
+//! `slice::from_raw_parts` view over the mapping. The argument, mirrored in
+//! `docs/CACHE_FORMAT.md` §Mapped reads:
+//!
+//! * **Lifetime** — the slice is only handed out via `Mapping::as_slice`,
+//!   borrowing `&self`; the pages stay mapped until `Drop` runs `munmap`.
+//! * **Bounds** — `len` is read from `fstat` *at map time* and every access
+//!   goes through the length-checked slice; the shard record scan in
+//!   `reader.rs` validates all offsets against this length and surfaces
+//!   overruns as typed [`CacheError::Truncated`](crate::cache::CacheError)
+//!   errors, so a file truncated *before* open can never fault (that is the
+//!   explicit length check the format doc requires before mapping).
+//! * **Aliasing** — the mapping is `PROT_READ` + `MAP_PRIVATE`: nothing in
+//!   this process writes through it, and writes by other processes are not
+//!   reflected into a private mapping's already-faulted pages. Shard files
+//!   are written once and renamed into place (see `writer.rs`), so the
+//!   supported lifecycle never mutates a file that readers have mapped.
+//!   Truncating a mapped file out from under a live process is outside the
+//!   format's contract and can SIGBUS any mmap consumer; the reader guards
+//!   the cases the format can produce (partial writes, crashed writers) by
+//!   checking lengths before and during decode, not after.
+//! * **Alignment** — `mmap` returns page-aligned memory and the shard codec
+//!   reads bytes (`u8`), never wider loads, so there is no alignment UB.
+
+use std::fs::File;
+use std::io;
+use std::path::Path;
+use std::sync::OnceLock;
+
+use crate::obs::{registry, Counter};
+use crate::util::bench::copy_count;
+
+/// How `CacheReader` materializes shard bytes. Picked once at open time;
+/// `auto()` selects [`IoMode::Mapped`] where mmap exists and silently falls
+/// back per-file if a map attempt fails (exotic filesystems, exhausted maps).
+#[derive(Clone, Copy, Debug, PartialEq, Eq)]
+pub enum IoMode {
+    /// mmap the shard file and decode straight out of the page cache.
+    Mapped,
+    /// Read the whole file into a heap buffer (one counted copy per load).
+    Heap,
+}
+
+impl IoMode {
+    /// The best mode this platform supports.
+    pub fn auto() -> IoMode {
+        if cfg!(unix) {
+            IoMode::Mapped
+        } else {
+            IoMode::Heap
+        }
+    }
+}
+
+impl Default for IoMode {
+    fn default() -> IoMode {
+        IoMode::auto()
+    }
+}
+
+/// Record `n` payload bytes copied into an intermediate buffer (heap shard
+/// loads, compressed payload staging, copy-form response assembly). Feeds
+/// both the per-thread bench ledger and the process-wide obs counter.
+pub(crate) fn note_copied(n: usize) {
+    copy_count::add(n as u64);
+    static C: OnceLock<Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("rskd_io_bytes_copied_total", &[]))
+        .add(n as u64);
+}
+
+/// Record `n` shard bytes served via a mapping instead of a heap copy.
+pub(crate) fn note_mapped(n: usize) {
+    static C: OnceLock<Counter> = OnceLock::new();
+    C.get_or_init(|| registry().counter("rskd_io_bytes_mapped_total", &[]))
+        .add(n as u64);
+}
+
+/// The bytes of one shard file, either mapped or heap-resident. Both forms
+/// expose the identical `&[u8]` image, so every decoder and every corruption
+/// check behaves the same on either path.
+pub enum ShardBytes {
+    Mapped(Mapping),
+    Heap(Vec<u8>),
+}
+
+impl ShardBytes {
+    pub fn as_slice(&self) -> &[u8] {
+        match self {
+            ShardBytes::Mapped(m) => m.as_slice(),
+            ShardBytes::Heap(v) => v.as_slice(),
+        }
+    }
+
+    pub fn len(&self) -> usize {
+        self.as_slice().len()
+    }
+
+    pub fn is_empty(&self) -> bool {
+        self.len() == 0
+    }
+
+    pub fn is_mapped(&self) -> bool {
+        matches!(self, ShardBytes::Mapped(_))
+    }
+}
+
+/// Load a shard file's full byte image in the requested mode. `Mapped` falls
+/// back to a heap read if the map attempt fails; only the fallback counts
+/// toward the copied-bytes ledger.
+pub fn load_file(path: &Path, mode: IoMode) -> io::Result<ShardBytes> {
+    if mode == IoMode::Mapped {
+        match Mapping::map_file(path) {
+            Ok(m) => {
+                note_mapped(m.as_slice().len());
+                return Ok(ShardBytes::Mapped(m));
+            }
+            Err(e) if e.kind() == io::ErrorKind::NotFound => return Err(e),
+            Err(_) => {} // fall back to the heap path below
+        }
+    }
+    let bytes = std::fs::read(path)?;
+    note_copied(bytes.len());
+    Ok(ShardBytes::Heap(bytes))
+}
+
+#[cfg(unix)]
+pub use sys::Mapping;
+
+#[cfg(unix)]
+mod sys {
+    use std::fs::File;
+    use std::io;
+    use std::os::raw::{c_int, c_void};
+    use std::os::unix::io::AsRawFd;
+    use std::path::Path;
+
+    // Direct syscall bindings — the crate deliberately has no libc
+    // dependency. Constants below are identical on Linux and the BSDs/macOS
+    // for the subset we use (POSIX-specified values).
+    extern "C" {
+        fn mmap(
+            addr: *mut c_void,
+            len: usize,
+            prot: c_int,
+            flags: c_int,
+            fd: c_int,
+            offset: i64,
+        ) -> *mut c_void;
+        fn munmap(addr: *mut c_void, len: usize) -> c_int;
+        fn madvise(addr: *mut c_void, len: usize, advice: c_int) -> c_int;
+    }
+
+    const PROT_READ: c_int = 1;
+    const MAP_PRIVATE: c_int = 2;
+    const MADV_SEQUENTIAL: c_int = 2;
+    const MADV_WILLNEED: c_int = 3;
+
+    /// A read-only private mapping of an entire file. See the module-level
+    /// safety argument; the short version is: length fixed at map time,
+    /// access only through the bounds-checked slice, unmapped on drop.
+    pub struct Mapping {
+        ptr: *mut c_void,
+        len: usize,
+    }
+
+    // SAFETY: the mapping is immutable (PROT_READ | MAP_PRIVATE) and owned:
+    // concurrent `&self` reads from any thread see the same frozen bytes,
+    // and `munmap` only runs from `Drop` on the last owner.
+    unsafe impl Send for Mapping {}
+    unsafe impl Sync for Mapping {}
+
+    impl Mapping {
+        /// Map `path` read-only. The file length is taken from `fstat` on
+        /// the opened descriptor — the explicit length check before mapping:
+        /// the mapping is exactly that long, so decoder bounds checks against
+        /// `as_slice().len()` catch truncated files as typed errors rather
+        /// than letting a page fault surface as SIGBUS.
+        pub fn map_file(path: &Path) -> io::Result<Mapping> {
+            let file = File::open(path)?;
+            let len = file.metadata()?.len();
+            if len > usize::MAX as u64 {
+                return Err(io::Error::new(
+                    io::ErrorKind::InvalidData,
+                    format!("shard file {} too large to map", path.display()),
+                ));
+            }
+            let len = len as usize;
+            if len == 0 {
+                // mmap(len == 0) is EINVAL; an empty file is a valid (if
+                // always-truncated-looking) image.
+                return Ok(Mapping { ptr: std::ptr::null_mut(), len: 0 });
+            }
+            // SAFETY: fd is valid for the duration of the call; we request a
+            // fresh address (addr = null), read-only, private. The result is
+            // checked against MAP_FAILED before use.
+            let ptr = unsafe {
+                mmap(
+                    std::ptr::null_mut(),
+                    len,
+                    PROT_READ,
+                    MAP_PRIVATE,
+                    file.as_raw_fd(),
+                    0,
+                )
+            };
+            if ptr as isize == -1 {
+                return Err(io::Error::last_os_error());
+            }
+            let m = Mapping { ptr, len };
+            // Shard decode walks the file front to back; tell the kernel.
+            m.advise(MADV_SEQUENTIAL);
+            Ok(m)
+        }
+
+        /// Ask the kernel to start faulting these pages in (readahead hint
+        /// for the prefetcher's N+1 shard). Best-effort; errors ignored.
+        pub fn advise_willneed(&self) {
+            self.advise(MADV_WILLNEED);
+        }
+
+        fn advise(&self, advice: c_int) {
+            if !self.ptr.is_null() {
+                // SAFETY: (ptr, len) is exactly the live mapping.
+                unsafe {
+                    madvise(self.ptr, self.len, advice);
+                }
+            }
+        }
+
+        pub fn as_slice(&self) -> &[u8] {
+            if self.ptr.is_null() {
+                &[]
+            } else {
+                // SAFETY: (ptr, len) is a live PROT_READ mapping owned by
+                // `self`; the borrow ties the slice to the mapping lifetime.
+                unsafe { std::slice::from_raw_parts(self.ptr as *const u8, self.len) }
+            }
+        }
+    }
+
+    impl Drop for Mapping {
+        fn drop(&mut self) {
+            if !self.ptr.is_null() {
+                // SAFETY: exactly the region returned by mmap above.
+                unsafe {
+                    munmap(self.ptr, self.len);
+                }
+            }
+        }
+    }
+}
+
+#[cfg(not(unix))]
+pub use portable::Mapping;
+
+#[cfg(not(unix))]
+mod portable {
+    use std::io;
+    use std::path::Path;
+
+    /// Stub on platforms without mmap: `map_file` always errors, which makes
+    /// [`super::load_file`] take the heap path and `IoMode::auto()` never
+    /// selects `Mapped` here in the first place.
+    pub struct Mapping(());
+
+    impl Mapping {
+        pub fn map_file(_path: &Path) -> io::Result<Mapping> {
+            Err(io::Error::new(
+                io::ErrorKind::Unsupported,
+                "mmap unavailable on this platform",
+            ))
+        }
+
+        pub fn advise_willneed(&self) {}
+
+        pub fn as_slice(&self) -> &[u8] {
+            &[]
+        }
+    }
+}
+
+/// Best-effort WILLNEED hint on a file we have not loaded yet: map it,
+/// advise, and return the mapping so the caller can hold it until the real
+/// load consumes it (dropping it immediately would still leave the pages
+/// warm in the page cache, but keeping it lets `load_file` reuse the map).
+pub fn prefetch_file(path: &Path) -> Option<Mapping> {
+    let m = Mapping::map_file(path).ok()?;
+    m.advise_willneed();
+    Some(m)
+}
+
+/// Length of `path` without reading it — used by the reader to validate
+/// manifest byte counts before deciding to map.
+pub fn file_len(path: &Path) -> io::Result<u64> {
+    Ok(File::open(path)?.metadata()?.len())
+}
+
+#[cfg(test)]
+mod tests {
+    use super::*;
+    use std::path::PathBuf;
+
+    fn tmp_dir(tag: &str) -> PathBuf {
+        let dir = std::env::temp_dir().join(format!("rskd-{tag}-{}", std::process::id()));
+        let _ = std::fs::remove_dir_all(&dir);
+        std::fs::create_dir_all(&dir).unwrap();
+        dir
+    }
+
+    #[test]
+    fn mapped_and_heap_images_are_identical() {
+        let dir = tmp_dir("mapio");
+        let path = dir.join("blob.bin");
+        let data: Vec<u8> = (0..10_000u32).map(|i| (i * 7 % 251) as u8).collect();
+        std::fs::write(&path, &data).unwrap();
+
+        let heap = load_file(&path, IoMode::Heap).unwrap();
+        assert!(!heap.is_mapped());
+        assert_eq!(heap.as_slice(), &data[..]);
+
+        let mapped = load_file(&path, IoMode::Mapped).unwrap();
+        assert_eq!(mapped.as_slice(), &data[..]);
+        if cfg!(unix) {
+            assert!(mapped.is_mapped());
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn empty_and_missing_files() {
+        let dir = tmp_dir("mapio-edge");
+        let empty = dir.join("empty.bin");
+        std::fs::write(&empty, b"").unwrap();
+        for mode in [IoMode::Mapped, IoMode::Heap] {
+            let b = load_file(&empty, mode).unwrap();
+            assert!(b.as_slice().is_empty(), "{mode:?}");
+            let missing = load_file(&dir.join("nope.bin"), mode);
+            assert_eq!(missing.unwrap_err().kind(), io::ErrorKind::NotFound, "{mode:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn heap_loads_are_charged_to_the_copy_ledger_and_mapped_loads_are_not() {
+        let dir = tmp_dir("mapio-ledger");
+        let path = dir.join("blob.bin");
+        std::fs::write(&path, vec![0xABu8; 4096]).unwrap();
+
+        let (copied, _) = copy_count::measure(|| load_file(&path, IoMode::Heap).unwrap());
+        assert_eq!(copied, 4096);
+
+        if cfg!(unix) {
+            let (copied, b) = copy_count::measure(|| load_file(&path, IoMode::Mapped).unwrap());
+            assert!(b.is_mapped());
+            assert_eq!(copied, 0);
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+}

@@ -19,8 +19,10 @@
 //! listing every shard's `[start, count)` range and the directory totals.
 //!
 //! On the consumer side, [`CacheReader::open`] reads *metadata only* (the
-//! manifest, or per-file headers for legacy v1 directories); shard records
-//! decode on first touch and are held in a capacity-bounded LRU. Readers and
+//! manifest, or per-file headers for legacy v1 directories); shards load on
+//! first touch and are held in a count- and byte-bounded LRU — raw-codec
+//! shards as mmap'd file images decoded in place ([`mapio`], zero-copy),
+//! compressed shards decoded once at load. Readers and
 //! writers agree that a position absent from every shard decodes as an empty
 //! [`SparseTarget`] — the paper's misaligned-packing semantics (Table 13).
 //!
@@ -29,6 +31,7 @@
 pub mod block;
 pub mod codec;
 pub mod format;
+pub mod mapio;
 pub mod quant;
 pub mod reader;
 pub mod tier;
@@ -37,8 +40,11 @@ pub mod writer;
 pub use block::RangeBlock;
 pub use codec::{cache_error_of, CacheError, ShardCodec};
 pub use format::{CacheManifest, ShardMeta, SparseTarget};
+pub use mapio::{IoMode, ShardBytes};
 pub use quant::ProbCodec;
-pub use reader::{CacheReader, ShardEntry, DEFAULT_RESIDENT_SHARDS};
+pub use reader::{
+    CacheReader, ReadOptions, ShardEntry, DEFAULT_RESIDENT_BYTES, DEFAULT_RESIDENT_SHARDS,
+};
 pub use tier::{Coverage, MemoryTier, TierCounters, WriteThrough, DEFAULT_MEMORY_TIER_RANGES};
 pub use writer::{CacheStats, CacheWriter, RingBuffer};
 

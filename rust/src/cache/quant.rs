@@ -130,17 +130,38 @@ pub fn decode(codes: &[u8], codec: ProbCodec) -> Vec<f32> {
 /// entry point used by `Shard::decode_into` on the cached-target hot path
 /// (once `out` has grown, steady-state decodes never touch the heap).
 pub fn decode_into(codes: &[u8], codec: ProbCodec, out: &mut Vec<f32>) {
-    match codec {
-        ProbCodec::Interval => out.extend(codes.iter().map(|&c| dq_interval(c))),
-        ProbCodec::Ratio => {
-            let mut prev = 1.0f32;
-            out.extend(codes.iter().map(|&c| {
-                prev *= dq_interval(c);
-                prev
-            }));
-        }
-        ProbCodec::Count { rounds } => {
-            out.extend(codes.iter().map(|&c| c as f32 / rounds as f32));
+    let mut dec = ProbDecoder::new(codec);
+    out.extend(codes.iter().map(|&c| dec.next(c)));
+}
+
+/// Streaming one-record probability decoder: feed codes in slot order, read
+/// probabilities back one at a time. [`decode_into`] and the mapped-shard
+/// packed decode (`cache::reader`) both run through this, so the heap and
+/// zero-copy paths are bit-identical by construction — same ops, same order,
+/// same f32 rounding. Make a fresh decoder per record: `Ratio` carries the
+/// running product across calls.
+#[derive(Clone, Copy, Debug)]
+pub struct ProbDecoder {
+    codec: ProbCodec,
+    prev: f32,
+}
+
+impl ProbDecoder {
+    #[inline]
+    pub fn new(codec: ProbCodec) -> ProbDecoder {
+        ProbDecoder { codec, prev: 1.0 }
+    }
+
+    /// Decode the next code of the current record.
+    #[inline]
+    pub fn next(&mut self, code: u8) -> f32 {
+        match self.codec {
+            ProbCodec::Interval => dq_interval(code),
+            ProbCodec::Ratio => {
+                self.prev *= dq_interval(code);
+                self.prev
+            }
+            ProbCodec::Count { rounds } => code as f32 / rounds as f32,
         }
     }
 }
@@ -227,6 +248,23 @@ mod tests {
             decode_into(&codes, codec, &mut out);
             assert_eq!(out[0], 9.0);
             assert_eq!(&out[1..], full.as_slice(), "{codec:?}");
+        }
+    }
+
+    #[test]
+    fn streaming_decoder_is_bit_identical_to_decode() {
+        let probs = [0.4f32, 0.2, 0.1, 0.05, 0.01];
+        let ids = [1u32, 2, 3, 4, 5];
+        for codec in [ProbCodec::Interval, ProbCodec::Ratio, ProbCodec::Count { rounds: 50 }] {
+            let (_, codes) = encode(&ids, &probs, codec);
+            let full = decode(&codes, codec);
+            let mut dec = ProbDecoder::new(codec);
+            let streamed: Vec<f32> = codes.iter().map(|&c| dec.next(c)).collect();
+            // bit-identical, not just close: both paths must produce the
+            // same f32s or served ranges diverge between io modes
+            let a: Vec<u32> = full.iter().map(|p| p.to_bits()).collect();
+            let b: Vec<u32> = streamed.iter().map(|p| p.to_bits()).collect();
+            assert_eq!(a, b, "{codec:?}");
         }
     }
 

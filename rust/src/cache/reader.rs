@@ -5,19 +5,29 @@
 //! `open` is O(shards) metadata work only: for a v2 cache it parses the
 //! `index.json` manifest; for a legacy v1 cache it scans the 24-byte header
 //! of each `.slc` file. No shard *records* are decoded at open time. Shards
-//! are decoded on first touch and kept in a capacity-bounded LRU, so steady-
-//! state memory is `capacity * positions_per_shard` records regardless of
-//! cache size, and a trainer that only visits one partition of the stream
-//! never pays for the rest.
+//! load on first touch and are kept in an LRU bounded by both entry count
+//! and resident bytes ([`ReadOptions`]), so steady-state memory is capped
+//! regardless of cache size or shard geometry, and a trainer that only
+//! visits one partition of the stream never pays for the rest.
 //!
 //! The reader is `Sync`: `get`/`get_range` take `&self` and may be called
 //! from several trainer threads or `serve::Server` workers (the LRU sits
-//! behind a mutex; decoded shards are shared as `Arc<Shard>` so a hit never
+//! behind a mutex; resident shards are shared as `Arc`s so a hit never
 //! copies records). Concurrent misses on the *same* shard are single-flight
 //! coalesced: the first caller decodes, everyone else blocks on a condvar and
 //! shares the `Arc` — a cold shard is read from disk exactly once no matter
 //! how many threads race for it ([`CacheReader::coalesced_loads`] counts the
 //! piggybackers).
+//!
+//! Zero-copy reads (docs/CACHE_FORMAT.md §Mapped reads): in the default
+//! [`IoMode::Mapped`] a raw-codec shard is kept resident as its mmap'd file
+//! image plus a record-offset index ([`PackedShard`]), and `read_range_into`
+//! unpacks slots straight from the mapped pages into the caller's
+//! [`RangeBlock`] — zero heap allocations *and* zero payload byte copies per
+//! warm range ([`crate::util::bench::copy_count`] is the ledger). Compressed
+//! shards checksum + decompress once from the mapping at cold load and stay
+//! resident decoded. [`IoMode::Heap`] is the portable fallback: one counted
+//! copy per cold load, byte-identical decode results.
 
 use std::collections::hash_map::Entry;
 use std::collections::HashMap;
@@ -30,10 +40,41 @@ use crate::cache::codec::{CacheError, ShardCodec};
 use crate::cache::format::{
     self, CacheManifest, Shard, SparseTarget, INDEX_FILE, LEGACY_META_FILE,
 };
+use crate::cache::mapio::{self, IoMode, ShardBytes};
+use crate::cache::quant::{self, ProbCodec};
 use crate::util::json::Json;
 
-/// Default number of decoded shards kept resident.
+/// Default number of resident shards kept in the LRU.
 pub const DEFAULT_RESIDENT_SHARDS: usize = 16;
+
+/// Default byte budget for resident shards (mapped image or decoded records,
+/// whichever representation a shard is held in). The entry-count bound alone
+/// lets one directory of oversized shards blow the memory budget; the byte
+/// bound caps it regardless of shard geometry.
+pub const DEFAULT_RESIDENT_BYTES: usize = 256 << 20;
+
+/// Open-time knobs for [`CacheReader::open_with`]. `Default` matches
+/// [`CacheReader::open`]: 16 resident shards, a 256 MiB byte budget, and
+/// mmap-backed reads where the platform has them.
+#[derive(Clone, Copy, Debug)]
+pub struct ReadOptions {
+    /// Max resident shards (min 1).
+    pub capacity: usize,
+    /// Max resident bytes across all shards (min 1 shard always stays).
+    pub byte_budget: usize,
+    /// Mapped (zero-copy) or heap (portable fallback) shard I/O.
+    pub io: IoMode,
+}
+
+impl Default for ReadOptions {
+    fn default() -> ReadOptions {
+        ReadOptions {
+            capacity: DEFAULT_RESIDENT_SHARDS,
+            byte_budget: DEFAULT_RESIDENT_BYTES,
+            io: IoMode::auto(),
+        }
+    }
+}
 
 /// One shard's location in the stream-position space.
 #[derive(Clone, Debug)]
@@ -46,17 +87,155 @@ pub struct ShardEntry {
     pub count: u64,
 }
 
-/// Tiny LRU over decoded shards: MRU at the back. Capacity is small (tens),
-/// so a linear scan beats a hash map + intrusive list here.
+/// A raw-codec shard kept as its verbatim file image (mapped or heap) plus a
+/// per-record offset index — the zero-copy resident form: `decode_into`
+/// unpacks slots straight from the image into the consumer's block, so a
+/// warm read never touches an intermediate buffer. Built by a validating
+/// scan that bounds-checks every record against the image length up front
+/// (the explicit length check that makes a truncated mapping a typed
+/// [`CacheError::Truncated`], never a page fault).
+pub struct PackedShard {
+    codec: ProbCodec,
+    bytes: ShardBytes,
+    /// byte offset of each record's length byte within `bytes`
+    offsets: Vec<u64>,
+}
+
+impl PackedShard {
+    /// Scan and index the record body of a raw shard image. Errors mirror
+    /// the streaming decoder's (`Shard::read_body`) typed `Truncated` whats.
+    fn build(hdr: &format::ShardHeader, bytes: ShardBytes) -> std::io::Result<PackedShard> {
+        let b = bytes.as_slice();
+        let len = b.len();
+        let count = hdr.count as usize;
+        // capacity clamped like read_body: `count` in a v2 header is
+        // unchecksummed and must not turn into a giant allocation
+        let mut offsets = Vec::with_capacity(count.min(1 << 20));
+        let mut off = format::HEADER_BYTES;
+        for _ in 0..count {
+            if off >= len {
+                return Err(CacheError::Truncated { what: "record length byte" }.into());
+            }
+            let n = b[off] as usize;
+            if off + 1 + 3 * n > len {
+                return Err(CacheError::Truncated { what: "record slot" }.into());
+            }
+            offsets.push(off as u64);
+            off += 1 + 3 * n;
+        }
+        Ok(PackedShard { codec: hdr.codec, bytes, offsets })
+    }
+
+    fn record_count(&self) -> usize {
+        self.offsets.len()
+    }
+
+    fn is_mapped(&self) -> bool {
+        self.bytes.is_mapped()
+    }
+
+    /// Image + index bytes held resident by this shard.
+    fn resident_bytes(&self) -> usize {
+        self.bytes.len() + self.offsets.len() * std::mem::size_of::<u64>()
+    }
+
+    /// Append record `i` to the block, decoding straight out of the image.
+    /// Bit-identical to `Shard::decode_into` over the same record: both run
+    /// the same [`quant::ProbDecoder`] over the same codes in the same order.
+    fn decode_into(&self, i: usize, out: &mut RangeBlock) {
+        let off = self.offsets[i] as usize;
+        let b = self.bytes.as_slice();
+        let n = b[off] as usize;
+        let mut dec = quant::ProbDecoder::new(self.codec);
+        let mut p = off + 1;
+        for _ in 0..n {
+            let (id, code) = quant::unpack_slot([b[p], b[p + 1], b[p + 2]]);
+            out.ids.push(id);
+            out.probs.push(dec.next(code));
+            p += 3;
+        }
+        out.end_position();
+    }
+
+    fn decode(&self, i: usize) -> SparseTarget {
+        let mut block = RangeBlock::new();
+        self.decode_into(i, &mut block);
+        let (ids, probs) = block.get(0);
+        SparseTarget { ids: ids.to_vec(), probs: probs.to_vec() }
+    }
+}
+
+/// A resident shard in whichever representation its codec allows: raw shards
+/// stay packed (zero-copy decode from the file image), compressed shards are
+/// decoded once at load. Cheap to clone (`Arc`s).
+#[derive(Clone)]
+enum Resident {
+    Packed(Arc<PackedShard>),
+    Decoded(Arc<Shard>),
+}
+
+impl Resident {
+    fn decode_into(&self, i: usize, out: &mut RangeBlock) {
+        match self {
+            Resident::Packed(p) => p.decode_into(i, out),
+            Resident::Decoded(s) => s.decode_into(i, out),
+        }
+    }
+
+    fn decode(&self, i: usize) -> SparseTarget {
+        match self {
+            Resident::Packed(p) => p.decode(i),
+            Resident::Decoded(s) => s.decode(i),
+        }
+    }
+
+    fn record_count(&self) -> usize {
+        match self {
+            Resident::Packed(p) => p.record_count(),
+            Resident::Decoded(s) => s.records.len(),
+        }
+    }
+
+    fn is_mapped(&self) -> bool {
+        match self {
+            Resident::Packed(p) => p.is_mapped(),
+            Resident::Decoded(_) => false,
+        }
+    }
+
+    /// Approximate bytes this shard holds resident, charged against the
+    /// LRU's byte budget: the file image (+ offset index) for packed shards,
+    /// the decoded record layout for compressed ones.
+    fn resident_bytes(&self) -> usize {
+        match self {
+            Resident::Packed(p) => p.resident_bytes(),
+            Resident::Decoded(s) => {
+                s.records
+                    .iter()
+                    .map(|(ids, codes)| {
+                        ids.len() * std::mem::size_of::<u32>()
+                            + codes.len()
+                            + 2 * std::mem::size_of::<Vec<u8>>()
+                    })
+                    .sum::<usize>()
+            }
+        }
+    }
+}
+
+/// Tiny LRU over resident shards: MRU at the back. Capacity is small (tens),
+/// so a linear scan beats a hash map + intrusive list here. Evicts on both
+/// bounds: entry count *and* resident bytes.
 struct Lru {
-    slots: Vec<(usize, Arc<Shard>)>,
+    slots: Vec<(usize, Resident)>,
+    resident_bytes: usize,
 }
 
 /// One in-flight shard decode: the leader publishes the result here and
 /// notifies; followers wait instead of re-reading the file. `io::Error` is
 /// not `Clone`, so followers get the error's message re-wrapped.
 struct Flight {
-    result: Mutex<Option<Result<Arc<Shard>, String>>>,
+    result: Mutex<Option<Result<Resident, String>>>,
     cv: Condvar,
 }
 
@@ -66,6 +245,15 @@ pub struct CacheReader {
     starts: Vec<u64>,
     lru: Mutex<Lru>,
     capacity: usize,
+    /// resident-byte budget across all LRU slots (min 1 shard always stays)
+    byte_budget: usize,
+    /// shard byte I/O mode picked at open (mapped zero-copy vs heap)
+    io: IoMode,
+    /// one-slot readahead: the next sequential shard, pre-mapped and
+    /// `madvise(WILLNEED)`-hinted by the previous cold load so the kernel
+    /// faults its pages in while the current shard is still being consumed
+    /// (the trainer scans sequentially; the prefetcher asks for N+1)
+    readahead: Mutex<Option<(usize, mapio::Mapping)>>,
     /// in-flight decodes, keyed by shard index (single-flight coalescing)
     inflight: Mutex<HashMap<usize, Arc<Flight>>>,
     /// total shard decodes performed (reloads after eviction included)
@@ -94,14 +282,21 @@ pub struct CacheReader {
 }
 
 impl CacheReader {
-    /// Open with [`DEFAULT_RESIDENT_SHARDS`] resident decoded shards.
+    /// Open with default [`ReadOptions`] (mapped I/O where available).
     pub fn open(dir: &Path) -> std::io::Result<CacheReader> {
-        CacheReader::open_with_capacity(dir, DEFAULT_RESIDENT_SHARDS)
+        CacheReader::open_with(dir, ReadOptions::default())
     }
 
-    /// Open a cache directory, reading metadata only. `capacity` bounds how
-    /// many decoded shards stay resident at once (min 1).
+    /// Open bounding only the resident shard *count* (byte budget and I/O
+    /// mode stay at their defaults).
     pub fn open_with_capacity(dir: &Path, capacity: usize) -> std::io::Result<CacheReader> {
+        CacheReader::open_with(dir, ReadOptions { capacity, ..ReadOptions::default() })
+    }
+
+    /// Open a cache directory, reading metadata only. `opts` picks the
+    /// resident bounds (entry count and bytes, both min-1-shard) and whether
+    /// shard bytes are mmap'd or read to heap.
+    pub fn open_with(dir: &Path, opts: ReadOptions) -> std::io::Result<CacheReader> {
         let (version, positions, rounds, bytes, kind, shard_codec, mut entries) = if dir
             .join(INDEX_FILE)
             .exists()
@@ -128,11 +323,17 @@ impl CacheReader {
         };
         entries.sort_by_key(|e| e.start);
         let starts = entries.iter().map(|e| e.start).collect();
+        // mapped mode is only meaningful where mmap exists; degrade here so
+        // the per-load fallback never has to fire on non-unix targets
+        let io = if cfg!(unix) { opts.io } else { IoMode::Heap };
         Ok(CacheReader {
             entries,
             starts,
-            lru: Mutex::new(Lru { slots: Vec::new() }),
-            capacity: capacity.max(1),
+            lru: Mutex::new(Lru { slots: Vec::new(), resident_bytes: 0 }),
+            capacity: opts.capacity.max(1),
+            byte_budget: opts.byte_budget.max(1),
+            io,
+            readahead: Mutex::new(None),
             inflight: Mutex::new(HashMap::new()),
             loads: AtomicU64::new(0),
             coalesced: AtomicU64::new(0),
@@ -198,27 +399,37 @@ impl CacheReader {
     }
 
     /// LRU lookup, promoting a hit to MRU.
-    fn lru_hit(&self, idx: usize) -> Option<Arc<Shard>> {
+    fn lru_hit(&self, idx: usize) -> Option<Resident> {
         let mut lru = self.lru.lock().unwrap();
         let i = lru.slots.iter().position(|(k, _)| *k == idx)?;
         let hit = lru.slots.remove(i);
-        let shard = Arc::clone(&hit.1);
+        let shard = hit.1.clone();
         lru.slots.push(hit); // move to MRU
         Some(shard)
     }
 
-    fn lru_insert(&self, idx: usize, shard: &Arc<Shard>) {
+    fn lru_insert(&self, idx: usize, shard: &Resident) {
         let mut lru = self.lru.lock().unwrap();
         if !lru.slots.iter().any(|(k, _)| *k == idx) {
-            if lru.slots.len() >= self.capacity {
-                lru.slots.remove(0); // evict LRU
+            lru.resident_bytes += shard.resident_bytes();
+            lru.slots.push((idx, shard.clone()));
+            // evict from the cold end on either bound, but never the slot
+            // just inserted: one over-budget shard stays resident alone
+            // rather than thrash-reloading on every touch
+            while lru.slots.len() > 1
+                && (lru.slots.len() > self.capacity || lru.resident_bytes > self.byte_budget)
+            {
+                let (_, evicted) = lru.slots.remove(0);
+                lru.resident_bytes -= evicted.resident_bytes();
             }
-            lru.slots.push((idx, Arc::clone(shard)));
         }
     }
 
-    /// Decode shard `idx` from disk (no LRU interaction).
-    fn load_shard(&self, idx: usize) -> std::io::Result<Arc<Shard>> {
+    /// Load shard `idx` from disk into its resident form (no LRU
+    /// interaction): raw shards become a [`PackedShard`] over the file image
+    /// (mapped in [`IoMode::Mapped`]); compressed shards checksum and
+    /// decompress once from the image and stay decoded.
+    fn load_shard(&self, idx: usize) -> std::io::Result<Resident> {
         // cold decode time feeds the unified registry (one-time series
         // registration, lock-free recording afterwards)
         static DECODE_US: std::sync::OnceLock<crate::obs::Hist> = std::sync::OnceLock::new();
@@ -235,8 +446,30 @@ impl CacheReader {
         {
             return Err(Self::torn_read(&entry.path));
         }
-        let mut f = std::io::BufReader::new(std::fs::File::open(&entry.path)?);
-        let hdr = format::read_header(&mut f)?;
+        // consume the readahead stash if it pre-mapped exactly this shard;
+        // otherwise load fresh in the reader's I/O mode
+        let stashed = {
+            let mut ra = self.readahead.lock().unwrap();
+            match ra.take() {
+                Some((i, m)) if i == idx => Some(m),
+                other => {
+                    *ra = other;
+                    None
+                }
+            }
+        };
+        let bytes = match stashed {
+            Some(m) => {
+                mapio::note_mapped(m.as_slice().len());
+                ShardBytes::Mapped(m)
+            }
+            None => mapio::load_file(&entry.path, self.io)?,
+        };
+        let image = bytes.as_slice();
+        let hdr = {
+            let mut r = image;
+            format::read_header(&mut r)?
+        };
         // the manifest declares one codec for the whole directory; a shard
         // header disagreeing (stale index.json, files copied between
         // directories) must fail typed, not decode under the wrong scheme
@@ -247,17 +480,23 @@ impl CacheReader {
             }
             .into());
         }
-        let shard = Arc::new(Shard::read_body(&hdr, &mut f)?);
+        let shard = if hdr.shard_codec == ShardCodec::Raw {
+            Resident::Packed(Arc::new(PackedShard::build(&hdr, bytes)?))
+        } else {
+            let body = &image[format::HEADER_BYTES..];
+            let decoded = Shard::body_from_slice(&hdr, body)?;
+            Resident::Decoded(Arc::new(decoded))
+        };
         // positions are bounds-checked against the manifest's `count`, so a
         // shard holding fewer records than declared must fail here, cleanly,
         // not as an index panic inside decode()
-        if (shard.records.len() as u64) < entry.count {
+        if (shard.record_count() as u64) < entry.count {
             return Err(std::io::Error::new(
                 std::io::ErrorKind::InvalidData,
                 format!(
                     "corrupt cache: {} holds {} records but the manifest declares {}",
                     entry.path.display(),
-                    shard.records.len(),
+                    shard.record_count(),
                     entry.count
                 ),
             ));
@@ -266,7 +505,30 @@ impl CacheReader {
         DECODE_US
             .get_or_init(|| crate::obs::registry().hist("rskd_shard_decode_us", &[]))
             .record(t0.elapsed());
+        // sequential readahead: pre-map the next shard and hint WILLNEED so
+        // its pages fault in while this one is being consumed. Cold-load
+        // only — warm reads stay syscall- and allocation-free.
+        self.advise_next(idx);
         Ok(shard)
+    }
+
+    /// Pre-map shard `idx + 1` (if any) with a `MADV_WILLNEED` hint and
+    /// stash the mapping for the load that will consume it. No-op in heap
+    /// mode and when the stash already holds that shard. Best-effort: a
+    /// failed map just means the next cold load pays full latency.
+    fn advise_next(&self, idx: usize) {
+        if self.io != IoMode::Mapped {
+            return;
+        }
+        let next = idx + 1;
+        if next >= self.entries.len() {
+            return;
+        }
+        let mut ra = self.readahead.lock().unwrap();
+        if ra.as_ref().map(|(i, _)| *i == next).unwrap_or(false) {
+            return;
+        }
+        *ra = mapio::prefetch_file(&self.entries[next].path).map(|m| (next, m));
     }
 
     /// Decoded shard `idx`: LRU hit, or a single-flight decode. Exactly one
@@ -274,7 +536,7 @@ impl CacheReader {
     /// shard wait on the flight's condvar and share the leader's `Arc`. The
     /// leader inserts into the LRU *before* retiring the flight, so a caller
     /// arriving in between takes the LRU fast path rather than re-decoding.
-    fn shard(&self, idx: usize) -> std::io::Result<Arc<Shard>> {
+    fn shard(&self, idx: usize) -> std::io::Result<Resident> {
         if let Some(s) = self.lru_hit(idx) {
             return Ok(s);
         }
@@ -303,7 +565,7 @@ impl CacheReader {
                 self.lru_insert(idx, s);
             }
             let shared = match &res {
-                Ok(s) => Ok(Arc::clone(s)),
+                Ok(s) => Ok(s.clone()),
                 Err(e) => Err(e.to_string()),
             };
             *flight.result.lock().unwrap() = Some(shared);
@@ -317,7 +579,7 @@ impl CacheReader {
                 g = flight.cv.wait(g).unwrap();
             }
             match g.as_ref().unwrap() {
-                Ok(s) => Ok(Arc::clone(s)),
+                Ok(s) => Ok(s.clone()),
                 Err(msg) => {
                     Err(std::io::Error::new(std::io::ErrorKind::InvalidData, msg.clone()))
                 }
@@ -378,7 +640,7 @@ impl CacheReader {
             Err(0) => None,
             Err(i) => Some(i - 1),
         };
-        let mut cur: Option<(usize, Arc<Shard>)> = None;
+        let mut cur: Option<(usize, Resident)> = None;
         for off in 0..len as u64 {
             // positions past u64::MAX cannot exist: empty, not a debug panic
             // (`start` may come straight off the serving layer's wire)
@@ -423,9 +685,34 @@ impl CacheReader {
         &self.entries
     }
 
-    /// Decoded shards currently resident in the LRU.
+    /// Shards currently resident in the LRU.
     pub fn resident_shards(&self) -> usize {
         self.lru.lock().unwrap().slots.len()
+    }
+
+    /// Bytes currently held resident across all LRU slots (mapped images +
+    /// decoded records), the quantity bounded by [`ReadOptions::byte_budget`].
+    pub fn resident_bytes(&self) -> usize {
+        self.lru.lock().unwrap().resident_bytes
+    }
+
+    /// The shard I/O mode this reader actually runs with (`open` may have
+    /// degraded a requested `Mapped` on platforms without mmap).
+    pub fn io_mode(&self) -> IoMode {
+        self.io
+    }
+
+    /// Per-shard residency view for tooling (`cache_inspect --io`): `None`
+    /// for cold shards, else `(is_mapped, resident_bytes)`.
+    pub fn shard_io(&self) -> Vec<Option<(bool, usize)>> {
+        let lru = self.lru.lock().unwrap();
+        let mut out = vec![None; self.entries.len()];
+        for (idx, res) in &lru.slots {
+            if let Some(slot) = out.get_mut(*idx) {
+                *slot = Some((res.is_mapped(), res.resident_bytes()));
+            }
+        }
+        out
     }
 
     /// Total shard decodes so far (> `shard_count()` means eviction churn).
@@ -663,6 +950,152 @@ mod tests {
         // a later hit is a plain LRU hit, not a coalesce
         let _ = r.get(4).unwrap();
         assert_eq!(r.coalesced_loads(), coalesced);
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn byte_budget_bounds_resident_bytes() {
+        let dir = std::env::temp_dir().join(format!("rskd-budget-test-{}", std::process::id()));
+        build_cache(&dir, 96); // 6 shards of 16
+        for io in [IoMode::Mapped, IoMode::Heap] {
+            // budget sized to hold ~2 shards (16 records * (1 + 3*3) bytes
+            // + header + offset index), far below all 6
+            let r = CacheReader::open_with(
+                &dir,
+                ReadOptions { capacity: 100, byte_budget: 800, io },
+            )
+            .unwrap();
+            for round in 0..2 {
+                for pos in (0..96u64).step_by(16) {
+                    let t = r.get(pos + round).unwrap();
+                    assert_eq!(t.ids[0], (pos + round) as u32 % 100, "{io:?}");
+                    assert!(
+                        r.resident_bytes() <= 800 || r.resident_shards() == 1,
+                        "{io:?}: {} resident bytes across {} shards",
+                        r.resident_bytes(),
+                        r.resident_shards()
+                    );
+                }
+            }
+            assert!(
+                r.shard_loads() > 6,
+                "{io:?}: cycling 6 shards through a 2-shard byte budget must evict"
+            );
+            // an over-budget reader still keeps exactly the MRU shard
+            let tiny = CacheReader::open_with(
+                &dir,
+                ReadOptions { capacity: 100, byte_budget: 1, io },
+            )
+            .unwrap();
+            let _ = tiny.get(0).unwrap();
+            let _ = tiny.get(40).unwrap();
+            assert_eq!(tiny.resident_shards(), 1, "{io:?}");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn mapped_and_heap_modes_decode_bit_identically() {
+        let dir = std::env::temp_dir().join(format!("rskd-iomode-test-{}", std::process::id()));
+        build_cache(&dir, 40);
+        let mapped =
+            CacheReader::open_with(&dir, ReadOptions { io: IoMode::Mapped, ..Default::default() })
+                .unwrap();
+        let heap =
+            CacheReader::open_with(&dir, ReadOptions { io: IoMode::Heap, ..Default::default() })
+                .unwrap();
+        let (mut a, mut b) = (RangeBlock::new(), RangeBlock::new());
+        for start in [0u64, 3, 17, 35] {
+            mapped.read_range_into(start, 10, &mut a).unwrap();
+            heap.read_range_into(start, 10, &mut b).unwrap();
+            assert_eq!(a.ids, b.ids, "start {start}");
+            assert_eq!(a.offsets, b.offsets, "start {start}");
+            let pa: Vec<u32> = a.probs.iter().map(|p| p.to_bits()).collect();
+            let pb: Vec<u32> = b.probs.iter().map(|p| p.to_bits()).collect();
+            assert_eq!(pa, pb, "start {start}: probs must be bit-identical across io modes");
+        }
+        if cfg!(unix) {
+            assert!(
+                mapped.shard_io().iter().flatten().all(|(m, _)| *m),
+                "raw shards must be mapped-resident in Mapped mode"
+            );
+        }
+        assert!(heap.shard_io().iter().flatten().all(|(m, _)| !*m));
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn warm_mapped_reads_copy_zero_payload_bytes() {
+        use crate::util::bench::copy_count;
+        let dir = std::env::temp_dir().join(format!("rskd-zcopy-test-{}", std::process::id()));
+        build_cache(&dir, 40);
+        for io in [IoMode::Mapped, IoMode::Heap] {
+            let r = CacheReader::open_with(&dir, ReadOptions { io, ..Default::default() })
+                .unwrap();
+            let mut block = RangeBlock::new();
+            r.read_range_into(0, 40, &mut block).unwrap(); // cold: loads shards
+            let (copied, _) = copy_count::measure(|| {
+                r.read_range_into(0, 40, &mut block).unwrap();
+            });
+            assert_eq!(copied, 0, "{io:?}: warm raw range reads must copy zero payload bytes");
+        }
+        // and the cold mapped path itself is copy-free on unix
+        if cfg!(unix) {
+            let r = CacheReader::open_with(
+                &dir,
+                ReadOptions { io: IoMode::Mapped, ..Default::default() },
+            )
+            .unwrap();
+            let mut block = RangeBlock::new();
+            let (copied, _) = copy_count::measure(|| {
+                r.read_range_into(0, 40, &mut block).unwrap();
+            });
+            assert_eq!(copied, 0, "cold mapped raw loads must not stage through the heap");
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn truncated_raw_shard_fails_typed_on_mapped_and_heap_paths() {
+        use crate::cache::codec::cache_error_of;
+        let dir = std::env::temp_dir().join(format!("rskd-trunc-test-{}", std::process::id()));
+        build_cache(&dir, 16); // one shard
+        let path = dir.join("shard-00000000.slc");
+        let full = std::fs::read(&path).unwrap();
+        // cut mid-record: past the header and first record, inside a later slot
+        std::fs::write(&path, &full[..format::HEADER_BYTES + 15]).unwrap();
+        for io in [IoMode::Mapped, IoMode::Heap] {
+            let r = CacheReader::open_with(&dir, ReadOptions { io, ..Default::default() })
+                .unwrap();
+            let err = r.try_get(0).unwrap_err();
+            match cache_error_of(&err) {
+                Some(CacheError::Truncated { .. }) => {}
+                other => panic!("{io:?}: expected Truncated, got {other:?} ({err})"),
+            }
+        }
+        let _ = std::fs::remove_dir_all(&dir);
+    }
+
+    #[test]
+    fn sequential_scan_consumes_readahead() {
+        let dir = std::env::temp_dir().join(format!("rskd-ra-test-{}", std::process::id()));
+        build_cache(&dir, 96); // 6 shards of 16
+        let r = CacheReader::open_with(
+            &dir,
+            ReadOptions { io: IoMode::Mapped, ..Default::default() },
+        )
+        .unwrap();
+        let mut block = RangeBlock::new();
+        for start in (0..96u64).step_by(16) {
+            r.read_range_into(start, 16, &mut block).unwrap();
+            assert_eq!(block.len(), 16);
+        }
+        // every shard loaded exactly once; the readahead stash never caused
+        // double loads or skipped validation
+        assert_eq!(r.shard_loads(), 6);
+        let legacy = r.get_range(0, 96);
+        assert_eq!(legacy.len(), 96);
+        assert_eq!(legacy[95].ids[0], 95 % 100);
         let _ = std::fs::remove_dir_all(&dir);
     }
 

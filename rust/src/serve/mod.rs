@@ -157,6 +157,16 @@ impl Write for Stream {
         }
     }
 
+    // forward to the sockets' real `writev` — the default trait impl would
+    // collapse `Response::write_targets`'s scatter list into one-buffer
+    // writes and defeat the vectored serve path
+    fn write_vectored(&mut self, bufs: &[io::IoSlice<'_>]) -> io::Result<usize> {
+        match self {
+            Stream::Tcp(s) => s.write_vectored(bufs),
+            Stream::Unix(s) => s.write_vectored(bufs),
+        }
+    }
+
     fn flush(&mut self) -> io::Result<()> {
         match self {
             Stream::Tcp(s) => s.flush(),

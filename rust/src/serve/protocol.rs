@@ -31,7 +31,14 @@ use crate::serve::stats::{StatsSnapshot, HIST_BUCKETS};
 use crate::spec::{CacheKind, SpecError};
 
 /// Current wire protocol version; bumped on any incompatible change.
-/// v5 added deadline propagation (docs/RESILIENCE.md): a relative
+/// v6 flattened the `Targets` body into one CSR block — `count`, `slots`,
+/// then contiguous `ids | probs | offsets` arrays instead of per-position
+/// interleaved slots — so a server scatter-writes the frame with `writev`
+/// straight from its decoded [`RangeBlock`](crate::cache::RangeBlock)
+/// (zero payload-assembly copies; see [`Response::write_targets`]) and a
+/// client bulk-decodes the arrays; also appended the `responses_vectored`
+/// counter to `Stats`. v5 added deadline propagation
+/// (docs/RESILIENCE.md): a relative
 /// microsecond deadline budget on `GetRange` ([`NO_DEADLINE`] = unbounded),
 /// the `DeadlineExceeded` error code for jobs the server sheds because
 /// their budget expired in queue, and the `deadline_exceeded` counter on
@@ -44,7 +51,7 @@ use crate::spec::{CacheKind, SpecError};
 /// manifest exchange and the `WrongEpoch` frame (docs/SERVING.md §Cluster).
 /// v2 extended the `Stats` frame with the tiered-source counters
 /// (hits/misses/backfilled/origin_computes).
-pub const PROTOCOL_VERSION: u8 = 5;
+pub const PROTOCOL_VERSION: u8 = 6;
 
 /// Hard cap on a frame payload (16 MiB): a corrupt or hostile length prefix
 /// must not allocate unboundedly.
@@ -84,6 +91,13 @@ pub const NO_TRACE: u64 = 0;
 /// every `Targets` frame, and a `GetRange` carrying it skips the epoch
 /// check on cluster members (ownership is still enforced).
 pub const NO_EPOCH: u64 = 0;
+
+/// Fixed-size prefix of a scatter-written v6 `Targets` frame: the `u32`
+/// frame length, the 2-byte preamble, `epoch`, the 32-byte trace/timing
+/// echo, `count`, and `slots`. Everything after it is the block's own
+/// `ids | probs | offsets` arrays, which [`Response::write_targets`] hands
+/// to `write_vectored` without staging them in a payload buffer.
+pub const TARGETS_PREFIX_BYTES: usize = 4 + 2 + 8 + 32 + 4 + 4;
 
 /// The deadline value meaning "unbounded": a `GetRange` carrying it is
 /// never shed by the server's deadline check. Nonzero values are a
@@ -227,6 +241,58 @@ pub fn write_frame(w: &mut impl Write, payload: &[u8]) -> io::Result<()> {
     w.write_all(&(payload.len() as u32).to_le_bytes())?;
     w.write_all(payload)?;
     w.flush()
+}
+
+/// Raw little-endian byte view of a `u32` array — on little-endian hosts
+/// the in-memory layout *is* the wire layout, so the block's arrays go to
+/// `write_vectored` without per-element conversion or a staging copy.
+///
+/// SAFETY: `u8` has no alignment requirement; the view covers exactly
+/// `v.len() * 4` initialized bytes owned by `v`, and the shared borrow of
+/// `v` pins them (unaliased by any `&mut`) for the view's lifetime.
+#[cfg(target_endian = "little")]
+fn le_bytes_of_u32s(v: &[u32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// Raw little-endian byte view of an `f32` array (wire probabilities are
+/// raw `f32` bits, little-endian — same layout argument as
+/// [`le_bytes_of_u32s`]).
+#[cfg(target_endian = "little")]
+fn le_bytes_of_f32s(v: &[f32]) -> &[u8] {
+    unsafe { std::slice::from_raw_parts(v.as_ptr() as *const u8, v.len() * 4) }
+}
+
+/// `write_all` over four scatter segments: re-slices past whatever each
+/// `write_vectored` call consumed (Rust 1.70 has no stable
+/// `IoSlice::advance_slices`), so short vectored writes — and `Write`
+/// impls whose default `write_vectored` only consumes the first non-empty
+/// buffer — still complete the frame.
+#[cfg(target_endian = "little")]
+fn write_all_vectored4(w: &mut impl Write, bufs: [&[u8]; 4]) -> io::Result<()> {
+    let total: usize = bufs.iter().map(|b| b.len()).sum();
+    let mut written = 0usize;
+    while written < total {
+        let mut iov = [io::IoSlice::new(&[]); 4];
+        let mut n = 0;
+        let mut skip = written;
+        for b in bufs.iter() {
+            if skip >= b.len() {
+                skip -= b.len();
+                continue;
+            }
+            iov[n] = io::IoSlice::new(&b[skip..]);
+            skip = 0;
+            n += 1;
+        }
+        match w.write_vectored(&iov[..n]) {
+            Ok(0) => return Err(io::ErrorKind::WriteZero.into()),
+            Ok(k) => written += k,
+            Err(e) if e.kind() == io::ErrorKind::Interrupted => {}
+            Err(e) => return Err(e),
+        }
+    }
+    Ok(())
 }
 
 /// Read one frame's payload. `Ok(None)` is a clean EOF *at a frame
@@ -413,14 +479,24 @@ impl Response {
                 let mut p = preamble(OP_TARGETS);
                 p.extend_from_slice(&epoch.to_le_bytes());
                 put_trace_timing(&mut p, *trace, *timing);
+                let slots: usize = targets.iter().map(|t| t.ids.len()).sum();
                 p.extend_from_slice(&(targets.len() as u32).to_le_bytes());
+                p.extend_from_slice(&(slots as u32).to_le_bytes());
                 for t in targets {
-                    debug_assert!(t.ids.len() < u16::MAX as usize);
-                    p.extend_from_slice(&(t.ids.len() as u16).to_le_bytes());
-                    for (&id, &prob) in t.ids.iter().zip(t.probs.iter()) {
+                    for &id in &t.ids {
                         p.extend_from_slice(&id.to_le_bytes());
+                    }
+                }
+                for t in targets {
+                    for &prob in &t.probs {
                         p.extend_from_slice(&prob.to_bits().to_le_bytes());
                     }
+                }
+                let mut off = 0u32;
+                p.extend_from_slice(&off.to_le_bytes());
+                for t in targets {
+                    off += t.ids.len() as u32;
+                    p.extend_from_slice(&off.to_le_bytes());
                 }
                 p
             }
@@ -470,6 +546,7 @@ impl Response {
                 }
                 p.extend_from_slice(&s.hot_overflow.to_le_bytes());
                 p.extend_from_slice(&s.deadline_exceeded.to_le_bytes());
+                p.extend_from_slice(&s.responses_vectored.to_le_bytes());
                 p
             }
             Response::Cluster(m) => {
@@ -523,12 +600,15 @@ impl Response {
     }
 
     /// Encode an `OP_TARGETS` payload straight from a CSR block — the
-    /// server-side symmetric of [`Response::decode_targets_into`]: byte-
+    /// copy-form symmetric of [`Response::decode_targets_into`]: byte-
     /// identical to the equivalent `Response::Targets { .. }.encode()`
-    /// without materializing the per-position vectors. Server workers call
-    /// this with a reused block, so a served range costs one decode and one
-    /// encode, no intermediate `Vec<SparseTarget>`. `trace`/`timing` are the
-    /// v4 trace echo ([`NO_TRACE`] and zeros for untraced requests).
+    /// without materializing the per-position vectors. The server's hot
+    /// path uses [`Response::write_targets`] instead, which never stages
+    /// the array section at all; this form remains for big-endian hosts
+    /// and callers that need an owned payload, and it charges the staged
+    /// array bytes to the copy ledger (`rskd_io_bytes_copied_total`).
+    /// `trace`/`timing` are the v4 trace echo ([`NO_TRACE`] and zeros for
+    /// untraced requests).
     pub fn encode_targets(
         block: &crate::cache::RangeBlock,
         epoch: u64,
@@ -539,16 +619,77 @@ impl Response {
         p.extend_from_slice(&epoch.to_le_bytes());
         put_trace_timing(&mut p, trace, timing);
         p.extend_from_slice(&(block.len() as u32).to_le_bytes());
-        for i in 0..block.len() {
-            let (ids, probs) = block.get(i);
-            debug_assert!(ids.len() < u16::MAX as usize);
-            p.extend_from_slice(&(ids.len() as u16).to_le_bytes());
-            for (&id, &prob) in ids.iter().zip(probs.iter()) {
-                p.extend_from_slice(&id.to_le_bytes());
-                p.extend_from_slice(&prob.to_bits().to_le_bytes());
-            }
+        p.extend_from_slice(&(block.total_slots() as u32).to_le_bytes());
+        for &id in &block.ids {
+            p.extend_from_slice(&id.to_le_bytes());
         }
+        for &prob in &block.probs {
+            p.extend_from_slice(&prob.to_bits().to_le_bytes());
+        }
+        for &o in &block.offsets {
+            p.extend_from_slice(&o.to_le_bytes());
+        }
+        crate::cache::mapio::note_copied(
+            (8 * block.total_slots() + 4 * block.offsets.len()) as u64,
+        );
         p
+    }
+
+    /// Payload length (without the `u32` frame length prefix) of the
+    /// `Targets` frame [`Response::write_targets`] / `encode_targets`
+    /// produce for `block` — servers precheck it against [`MAX_FRAME`]
+    /// before committing any bytes to the connection.
+    pub fn targets_payload_len(block: &crate::cache::RangeBlock) -> usize {
+        TARGETS_PREFIX_BYTES - 4 + 8 * block.total_slots() + 4 * block.offsets.len()
+    }
+
+    /// Scatter-write one `Targets` frame: the length prefix and payload
+    /// head go in a [`TARGETS_PREFIX_BYTES`] stack buffer, then the
+    /// block's `ids`/`probs`/`offsets` arrays are handed to
+    /// `write_vectored` as raw little-endian byte views — the payload is
+    /// never assembled in an intermediate buffer, so serving a range moves
+    /// its bytes exactly once (block → socket). On the wire this is
+    /// byte-identical to `write_frame(w, &Response::encode_targets(..))`;
+    /// big-endian hosts fall back to exactly that copy path.
+    pub fn write_targets(
+        w: &mut impl Write,
+        block: &crate::cache::RangeBlock,
+        epoch: u64,
+        trace: u64,
+        timing: ServerTiming,
+    ) -> io::Result<()> {
+        let payload_len = Response::targets_payload_len(block);
+        if payload_len > MAX_FRAME {
+            return Err(bad(format!("frame payload {payload_len} exceeds MAX_FRAME")));
+        }
+        #[cfg(target_endian = "little")]
+        {
+            let mut head = [0u8; TARGETS_PREFIX_BYTES];
+            head[0..4].copy_from_slice(&(payload_len as u32).to_le_bytes());
+            head[4] = PROTOCOL_VERSION;
+            head[5] = OP_TARGETS;
+            head[6..14].copy_from_slice(&epoch.to_le_bytes());
+            head[14..22].copy_from_slice(&trace.to_le_bytes());
+            head[22..30].copy_from_slice(&timing.queue_ns.to_le_bytes());
+            head[30..38].copy_from_slice(&timing.decode_ns.to_le_bytes());
+            head[38..46].copy_from_slice(&timing.origin_ns.to_le_bytes());
+            head[46..50].copy_from_slice(&(block.len() as u32).to_le_bytes());
+            head[50..54].copy_from_slice(&(block.total_slots() as u32).to_le_bytes());
+            write_all_vectored4(
+                w,
+                [
+                    &head,
+                    le_bytes_of_u32s(&block.ids),
+                    le_bytes_of_f32s(&block.probs),
+                    le_bytes_of_u32s(&block.offsets),
+                ],
+            )?;
+            w.flush()
+        }
+        #[cfg(not(target_endian = "little"))]
+        {
+            write_frame(w, &Response::encode_targets(block, epoch, trace, timing))
+        }
     }
 
     /// Decode an `OP_TARGETS` frame straight into a caller-owned CSR block
@@ -570,16 +711,40 @@ impl Response {
         let epoch = c.u64()?;
         let (trace, timing) = get_trace_timing(&mut c)?;
         let count = c.u32()? as usize;
-        for _ in 0..count {
-            let k = c.u16()? as usize;
-            for _ in 0..k {
-                let id = c.u32()?;
-                let prob = f32::from_bits(c.u32()?);
-                out.push_slot(id, prob);
-            }
-            out.end_position();
-        }
+        let slots = c.u32()? as usize;
+        // saturating sizes: a hostile count/slots makes `take` fail on the
+        // (MAX_FRAME-bounded) body instead of overflowing the multiply
+        let ids_b = c.take(slots.saturating_mul(4))?;
+        let probs_b = c.take(slots.saturating_mul(4))?;
+        let offs_b = c.take(count.saturating_add(1).saturating_mul(4))?;
         c.done()?;
+        out.ids.extend(ids_b.chunks_exact(4).map(|b| u32::from_le_bytes(b.try_into().unwrap())));
+        out.probs.extend(
+            probs_b
+                .chunks_exact(4)
+                .map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().unwrap()))),
+        );
+        // validate the CSR invariants — first 0, non-decreasing, last ==
+        // slots — so a corrupt frame is a typed error, never a block that
+        // panics (or lies) on `get`
+        let mut prev = 0u32;
+        for (i, b) in offs_b.chunks_exact(4).enumerate() {
+            let o = u32::from_le_bytes(b.try_into().unwrap());
+            if i == 0 {
+                if o != 0 {
+                    return Err(bad("targets offsets must start at 0"));
+                }
+                continue; // out.clear() already seeded offsets[0] = 0
+            }
+            if o < prev || o as usize > slots {
+                return Err(bad("targets offsets must be non-decreasing and bounded by slots"));
+            }
+            out.offsets.push(o);
+            prev = o;
+        }
+        if prev as usize != slots {
+            return Err(bad("targets offsets must end at slots"));
+        }
         Ok(RangeFrame::Targets { epoch, trace, timing })
     }
 
@@ -590,15 +755,32 @@ impl Response {
                 let epoch = c.u64()?;
                 let (trace, timing) = get_trace_timing(&mut c)?;
                 let count = c.u32()? as usize;
+                let slots = c.u32()? as usize;
+                let ids_b = c.take(slots.saturating_mul(4))?;
+                let probs_b = c.take(slots.saturating_mul(4))?;
+                let offs_b = c.take(count.saturating_add(1).saturating_mul(4))?;
+                let off_at = |i: usize| {
+                    u32::from_le_bytes(offs_b[i * 4..i * 4 + 4].try_into().unwrap()) as usize
+                };
+                if off_at(0) != 0 || off_at(count) != slots {
+                    return Err(bad("targets offsets must start at 0 and end at slots"));
+                }
                 let mut targets = Vec::with_capacity(count.min(1 << 20));
-                for _ in 0..count {
-                    let k = c.u16()? as usize;
-                    let mut ids = Vec::with_capacity(k);
-                    let mut probs = Vec::with_capacity(k);
-                    for _ in 0..k {
-                        ids.push(c.u32()?);
-                        probs.push(f32::from_bits(c.u32()?));
+                for i in 0..count {
+                    let (lo, hi) = (off_at(i), off_at(i + 1));
+                    if lo > hi || hi > slots {
+                        return Err(bad(
+                            "targets offsets must be non-decreasing and bounded by slots",
+                        ));
                     }
+                    let ids = ids_b[lo * 4..hi * 4]
+                        .chunks_exact(4)
+                        .map(|b| u32::from_le_bytes(b.try_into().unwrap()))
+                        .collect();
+                    let probs = probs_b[lo * 4..hi * 4]
+                        .chunks_exact(4)
+                        .map(|b| f32::from_bits(u32::from_le_bytes(b.try_into().unwrap())))
+                        .collect();
                     targets.push(SparseTarget { ids, probs });
                 }
                 Response::Targets { epoch, trace, timing, targets }
@@ -661,6 +843,7 @@ impl Response {
                 }
                 let hot_overflow = c.u64()?;
                 let deadline_exceeded = c.u64()?;
+                let responses_vectored = c.u64()?;
                 Response::Stats(StatsSnapshot {
                     requests,
                     rejected,
@@ -674,6 +857,7 @@ impl Response {
                     hot,
                     hot_overflow,
                     deadline_exceeded,
+                    responses_vectored,
                 })
             }
             OP_CLUSTER => {
@@ -860,6 +1044,102 @@ mod tests {
         assert!(Response::decode_targets_into(&bad, &mut block).is_err());
     }
 
+    /// `Write` impl that accepts at most 3 bytes per call and never
+    /// overrides `write_vectored` — so the default single-buffer vectored
+    /// impl plus short writes exercise `write_all_vectored4`'s re-slicing.
+    struct TrickleWriter(Vec<u8>);
+
+    impl Write for TrickleWriter {
+        fn write(&mut self, buf: &[u8]) -> io::Result<usize> {
+            let n = buf.len().min(3);
+            self.0.extend_from_slice(&buf[..n]);
+            Ok(n)
+        }
+
+        fn flush(&mut self) -> io::Result<()> {
+            Ok(())
+        }
+    }
+
+    #[test]
+    fn write_targets_is_byte_identical_to_the_copy_path() {
+        use crate::cache::RangeBlock;
+        let mut block = RangeBlock::new();
+        for t in [
+            SparseTarget { ids: vec![1, 99_999, 131_000], probs: vec![0.4, 0.2, 1e-7] },
+            SparseTarget::default(),
+            SparseTarget { ids: vec![7], probs: vec![f32::MIN_POSITIVE] },
+        ] {
+            block.push_target(&t);
+        }
+        let timing = ServerTiming { queue_ns: 11, decode_ns: 22, origin_ns: 33 };
+        let mut want = Vec::new();
+        write_frame(&mut want, &Response::encode_targets(&block, 7, 0xABCD, timing)).unwrap();
+        // a well-behaved writer (Vec) and a pathological one (3 bytes per
+        // call, default write_vectored) must both produce the same stream
+        let mut got = Vec::new();
+        Response::write_targets(&mut got, &block, 7, 0xABCD, timing).unwrap();
+        assert_eq!(got, want);
+        let mut trickle = TrickleWriter(Vec::new());
+        Response::write_targets(&mut trickle, &block, 7, 0xABCD, timing).unwrap();
+        assert_eq!(trickle.0, want);
+        // empty block: frame is all prefix, still byte-identical
+        let empty = RangeBlock::new();
+        let mut want = Vec::new();
+        write_frame(
+            &mut want,
+            &Response::encode_targets(&empty, NO_EPOCH, NO_TRACE, ServerTiming::default()),
+        )
+        .unwrap();
+        let mut got = Vec::new();
+        Response::write_targets(&mut got, &empty, NO_EPOCH, NO_TRACE, ServerTiming::default())
+            .unwrap();
+        assert_eq!(got, want);
+        assert_eq!(got.len(), TARGETS_PREFIX_BYTES + 4, "prefix + the lone offsets[0] entry");
+    }
+
+    #[test]
+    fn targets_decode_rejects_broken_csr_offsets() {
+        use crate::cache::RangeBlock;
+        let mut block = RangeBlock::new();
+        block.push_slot(1, 0.5);
+        block.push_slot(2, 0.25);
+        block.end_position();
+        block.push_slot(3, 0.125);
+        block.end_position();
+        let good = Response::encode_targets(&block, 1, NO_TRACE, ServerTiming::default());
+        // offsets live in the last (count+1)*4 bytes; corrupt each entry in
+        // turn and expect a typed decode error from both decode paths
+        let offs_at = good.len() - 3 * 4;
+        let mut scratch = RangeBlock::new();
+        for (entry, val) in [(0usize, 1u32), (1, 9), (2, 1), (2, 9)] {
+            let mut bad = good.clone();
+            bad[offs_at + entry * 4..offs_at + entry * 4 + 4]
+                .copy_from_slice(&val.to_le_bytes());
+            assert!(
+                Response::decode(&bad).is_err(),
+                "decode accepted offsets[{entry}] = {val}"
+            );
+            assert!(
+                Response::decode_targets_into(&bad, &mut scratch).is_err(),
+                "decode_targets_into accepted offsets[{entry}] = {val}"
+            );
+        }
+        // a lying slots field shifts every section: typed error, not junk
+        let mut bad = good.clone();
+        bad[TARGETS_PREFIX_BYTES - 4..TARGETS_PREFIX_BYTES]
+            .copy_from_slice(&9u32.to_le_bytes());
+        assert!(Response::decode(&bad).is_err());
+        assert!(Response::decode_targets_into(&bad, &mut scratch).is_err());
+        // the good frame still decodes after all that
+        let RangeFrame::Targets { .. } =
+            Response::decode_targets_into(&good, &mut scratch).unwrap()
+        else {
+            panic!("expected Targets")
+        };
+        assert_eq!(scratch.to_targets(), block.to_targets());
+    }
+
     #[test]
     fn manifest_roundtrip_with_and_without_kind() {
         roundtrip_resp(Response::Manifest(RemoteManifest {
@@ -955,6 +1235,7 @@ mod tests {
             hot: vec![40, 0, 60],
             hot_overflow: 2,
             deadline_exceeded: 6,
+            responses_vectored: 93,
         }));
     }
 

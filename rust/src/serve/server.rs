@@ -10,11 +10,19 @@
 //!
 //! ```text
 //! conn thread:  read frame -> decode -> route by owning shard of `start`
-//!                 -> try_push onto worker queue (bounded)  --full--> Error{Overloaded}
-//!                 -> wait for the worker's reply -> write response frame
-//! worker i:     pop job -> source.read_range_into (reused RangeBlock)
-//!                 -> encode_targets straight from the block -> send payload
+//!                 -> loan its reused RangeBlock into the worker queue
+//!                    (bounded try_push)  --full--> Error{Overloaded}
+//!                 -> wait for the reply (block comes back filled)
+//!                 -> writev `prefix | ids | probs | offsets` from the block
+//! worker i:     pop job -> source.read_range_into (the connection's block)
+//!                 -> send the block back with the phase timing
 //! ```
+//!
+//! The `Targets` frame is scatter-written ([`Response::write_targets`]):
+//! the worker decodes into the connection's block and the connection thread
+//! hands that block's arrays to `writev` — a served range's payload bytes
+//! are moved exactly once (block → socket), never staged in an intermediate
+//! buffer. The `responses_vectored` stat counts these sends.
 //!
 //! * **Shard affinity.** A range request is routed to worker
 //!   `owning_shard(start) % workers`, so concurrent requests for the same
@@ -234,10 +242,12 @@ impl Default for ServeConfig {
     }
 }
 
-/// One queued range read; the connection thread blocks on `done`. The
-/// worker answers a fully encoded `Targets` payload (it decodes into a
-/// reused per-worker `RangeBlock` and encodes straight from it), so serving
-/// a range never materializes per-position `Vec<SparseTarget>`s.
+/// One queued range read; the connection thread blocks on `done`. The job
+/// carries the connection's reused `RangeBlock` on loan: the worker decodes
+/// into it and sends it back with the reply — even on error — so the
+/// connection thread scatter-writes the `Targets` frame straight from the
+/// block, and serving a range never materializes per-position
+/// `Vec<SparseTarget>`s or a staged payload buffer.
 struct Job {
     start: u64,
     len: usize,
@@ -255,7 +265,18 @@ struct Job {
     /// when the connection thread queued the job — the worker measures its
     /// queue-wait phase from this
     enqueued: Instant,
-    done: mpsc::SyncSender<Result<Vec<u8>, JobError>>,
+    /// the connection's reused decode buffer, loaned for this job's lifetime
+    block: RangeBlock,
+    done: mpsc::SyncSender<(RangeBlock, Result<ServerTiming, JobError>)>,
+}
+
+/// What a connection thread writes back for one request: an owned payload
+/// (every non-range exchange, and range errors), or the connection's own
+/// block — filled by a worker — to scatter-write as a `Targets` frame via
+/// [`Response::write_targets`].
+enum Reply {
+    Payload(Vec<u8>),
+    Targets { epoch: u64, trace: u64, timing: ServerTiming },
 }
 
 /// Why a worker could not answer a job — kept typed so the connection
@@ -461,6 +482,11 @@ fn register_collector(shared: &Arc<Shared>, endpoint: &Endpoint) {
             labels,
             s.deadline_exceeded.load(Ordering::Relaxed),
         );
+        c.counter(
+            "rskd_serve_responses_vectored_total",
+            labels,
+            s.responses_vectored.load(Ordering::Relaxed),
+        );
         c.gauge("rskd_serve_epoch", labels, epoch_of(&sh));
         let snap = sh.stats.snapshot_with(
             0,
@@ -506,19 +532,18 @@ fn accept_loop(listener: Listener, shared: &Arc<Shared>) {
 
 fn worker_loop(shared: &Arc<Shared>, idx: usize) {
     let queue = Arc::clone(&shared.queues[idx]);
-    // reused across jobs: steady-state range decodes allocate only the
-    // encoded payload (read_range_into clears the block, and a panicked
-    // decode leaves it in a state the next clear fixes)
-    let mut block = RangeBlock::new();
-    while let Some(job) = queue.pop() {
+    while let Some(mut job) = queue.pop() {
         let queue_wait = job.enqueued.elapsed();
+        // every exit below must hand the loaned block back with the reply:
+        // it is the connection's reusable buffer, not this job's payload
+        let mut block = std::mem::take(&mut job.block);
         // deadline admission at the worker: a job whose budget expired in
         // queue is shed typed, not served — the client's clock has already
         // moved on, and the cache read would be pure waste under overload
         if job.deadline_us != NO_DEADLINE
             && queue_wait >= Duration::from_micros(job.deadline_us as u64)
         {
-            let _ = job.done.send(Err(JobError::Deadline { waited: queue_wait }));
+            let _ = job.done.send((block, Err(JobError::Deadline { waited: queue_wait })));
             continue;
         }
         // chaos hook: per-request straggler injection (sleeps the rule's
@@ -537,26 +562,29 @@ fn worker_loop(shared: &Arc<Shared>, idx: usize) {
             ))
         })
         .map_err(|e| JobError::Internal(e.to_string()));
-        // a dead connection just drops the receiver; nothing to do
-        let _ = job.done.send(res);
+        // a dead connection just drops the receiver; nothing to do (the
+        // block goes down with the channel — the connection is gone too)
+        let _ = job.done.send((block, res));
     }
 }
 
-/// One range read on a worker: decode into the reused block, encode the
-/// `Targets` payload. A traced job additionally opens a `Server` span
-/// (back-dated over its queue wait), lets the tier stack credit origin
-/// compute via [`obs::phase_add`], attributes the rest of the read to
-/// `Decode`, and echoes the phase split on the wire so the client can
-/// derive its network share.
+/// One range read on a worker: decode into the job's loaned block and
+/// return the phase timing to echo on the wire (zeros when untraced) — the
+/// connection thread scatter-writes the frame straight from the block, so
+/// there is no payload to assemble here. A traced job additionally opens a
+/// `Server` span (back-dated over its queue wait), lets the tier stack
+/// credit origin compute via [`obs::phase_add`], attributes the rest of the
+/// read to `Decode`, and echoes the phase split so the client can derive
+/// its network share.
 fn serve_job(
     shared: &Shared,
     job: &Job,
     queue_wait: Duration,
     block: &mut RangeBlock,
-) -> std::io::Result<Vec<u8>> {
+) -> std::io::Result<ServerTiming> {
     if job.trace == NO_TRACE {
         shared.source.read_range_into(job.start, job.len, block)?;
-        return Ok(Response::encode_targets(block, job.epoch, NO_TRACE, ServerTiming::default()));
+        return Ok(ServerTiming::default());
     }
     let shard = shared.source.shard_index_of(job.start).map_or(u32::MAX, |s| s as u32);
     let mut scope = SpanScope::begin(
@@ -581,9 +609,8 @@ fn serve_job(
     res?; // a failed read still records its span via the scope's Drop
     let timing =
         ServerTiming { queue_ns: queue_wait.as_nanos() as u64, decode_ns, origin_ns };
-    let payload = Response::encode_targets(block, job.epoch, job.trace, timing);
     scope.finish();
-    Ok(payload)
+    Ok(timing)
 }
 
 /// Worker index for a range starting at `start`: the owning shard of the
@@ -597,6 +624,11 @@ fn route(source: &dyn ServeSource, start: u64, workers: usize) -> usize {
 }
 
 fn conn_loop(mut stream: Stream, shared: &Arc<Shared>) {
+    // the connection's reused decode buffer: loaned into the worker queue
+    // with each range job and returned with the reply, so once grown it
+    // makes the whole serve path — decode and scatter-write — allocation-
+    // and copy-free per request
+    let mut block = RangeBlock::new();
     loop {
         if shared.shutdown.load(Ordering::SeqCst) {
             return;
@@ -612,8 +644,8 @@ fn conn_loop(mut stream: Stream, shared: &Arc<Shared>) {
             }
             Err(_) => return,
         };
-        let resp = match Request::decode(&payload) {
-            Ok(req) => handle_request(req, shared),
+        let reply = match Request::decode(&payload) {
+            Ok(req) => handle_request(req, shared, &mut block),
             Err(e) => {
                 shared.stats.errors.fetch_add(1, Ordering::Relaxed);
                 // decide the code from the version byte itself, not from the
@@ -622,24 +654,31 @@ fn conn_loop(mut stream: Stream, shared: &Arc<Shared>) {
                     Some(v) if *v != PROTOCOL_VERSION => ErrCode::BadVersion,
                     _ => ErrCode::BadRequest,
                 };
-                Response::Error { code, msg: e.to_string() }.encode()
+                Reply::Payload(Response::Error { code, msg: e.to_string() }.encode())
             }
         };
-        let mut payload = resp;
-        if payload.len() > MAX_FRAME {
-            // a legal-but-huge range (misconfigured max_range vs dense
-            // targets) must answer a typed error frame, not die mid-write
+        // a legal-but-huge range (misconfigured max_range vs dense targets)
+        // must answer a typed error frame, not die mid-write — checked on
+        // the scatter form *before* any byte is committed to the stream
+        let payload_len = match &reply {
+            Reply::Payload(p) => p.len(),
+            Reply::Targets { .. } => Response::targets_payload_len(&block),
+        };
+        let reply = if payload_len > MAX_FRAME {
             shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-            payload = Response::Error {
-                code: ErrCode::RangeTooLarge,
-                msg: format!(
-                    "response of {} bytes exceeds the {MAX_FRAME}-byte frame limit; \
-                     request a smaller range",
-                    payload.len()
-                ),
-            }
-            .encode();
-        }
+            Reply::Payload(
+                Response::Error {
+                    code: ErrCode::RangeTooLarge,
+                    msg: format!(
+                        "response of {payload_len} bytes exceeds the {MAX_FRAME}-byte frame \
+                         limit; request a smaller range"
+                    ),
+                }
+                .encode(),
+            )
+        } else {
+            reply
+        };
         // fault sites (docs/RESILIENCE.md): one relaxed load each when no
         // plan is installed. A chaos plan can make this server hang up
         // before answering (conn drop) or emit a torn length prefix and
@@ -650,67 +689,88 @@ fn conn_loop(mut stream: Stream, shared: &Arc<Shared>) {
         }
         if fault::fires(FaultSite::ServerStallWrite) {
             use std::io::Write as _;
-            let prefix = (payload.len() as u32).to_le_bytes();
+            let n = match &reply {
+                Reply::Payload(p) => p.len(),
+                Reply::Targets { .. } => Response::targets_payload_len(&block),
+            };
+            let prefix = (n as u32).to_le_bytes();
             let _ = stream.write_all(&prefix[..2]);
             let _ = stream.flush();
             // the rule's configured delay was already slept inside fires();
             // dropping the connection now leaves the peer mid-frame
             return;
         }
-        if write_frame(&mut stream, &payload).is_err() {
+        let wrote = match &reply {
+            Reply::Payload(p) => write_frame(&mut stream, p).is_ok(),
+            Reply::Targets { epoch, trace, timing } => {
+                let ok =
+                    Response::write_targets(&mut stream, &block, *epoch, *trace, *timing).is_ok();
+                if ok && cfg!(target_endian = "little") {
+                    // big-endian hosts took the copy fallback inside
+                    // write_targets — not a vectored send
+                    shared.stats.responses_vectored.fetch_add(1, Ordering::Relaxed);
+                }
+                ok
+            }
+        };
+        if !wrote {
             return;
         }
     }
 }
 
-/// Answer one request with a fully encoded response payload (range reads
-/// come back pre-encoded from the worker pool, so the connection thread
-/// never re-materializes targets).
 /// The cluster epoch this server currently serves under (`NO_EPOCH` when
 /// standalone).
 fn epoch_of(shared: &Shared) -> u64 {
     shared.cluster.as_ref().map_or(NO_EPOCH, |c| c.epoch())
 }
 
-fn handle_request(req: Request, shared: &Arc<Shared>) -> Vec<u8> {
+/// Answer one request: range reads fill the connection's `block` through
+/// the worker pool and come back as [`Reply::Targets`] for the scatter
+/// write; everything else answers an owned, fully encoded payload.
+fn handle_request(req: Request, shared: &Arc<Shared>, block: &mut RangeBlock) -> Reply {
     match req {
-        Request::Ping => Response::Pong.encode(),
+        Request::Ping => Reply::Payload(Response::Pong.encode()),
         Request::GetManifest => {
             let mut m = shared.source.remote_manifest();
             // a cluster member advertises the epoch it serves under, so
             // manifest-level health checks can see a rebalance land
             m.epoch = epoch_of(shared);
-            Response::Manifest(m).encode()
+            Reply::Payload(Response::Manifest(m).encode())
         }
         Request::GetStats => {
             let (loads, coalesced) = shared.source.load_counters();
-            Response::Stats(shared.stats.snapshot_with(
-                loads,
-                coalesced,
-                shared.source.tier_counters(),
-                epoch_of(shared),
-            ))
-            .encode()
+            Reply::Payload(
+                Response::Stats(shared.stats.snapshot_with(
+                    loads,
+                    coalesced,
+                    shared.source.tier_counters(),
+                    epoch_of(shared),
+                ))
+                .encode(),
+            )
         }
         Request::GetMetrics => {
             // the process-wide registry: this server's collector plus every
             // other subsystem registered in-process
-            Response::Metrics(obs::render_global()).encode()
+            Reply::Payload(Response::Metrics(obs::render_global()).encode())
         }
-        Request::GetTrace => Response::Trace(obs::spans().drain_ordered()).encode(),
+        Request::GetTrace => Reply::Payload(Response::Trace(obs::spans().drain_ordered()).encode()),
         Request::GetCluster => match &shared.cluster {
-            Some(ctl) => Response::Cluster(ctl.manifest()).encode(),
+            Some(ctl) => Reply::Payload(Response::Cluster(ctl.manifest()).encode()),
             None => {
                 shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-                Response::Error {
-                    code: ErrCode::BadRequest,
-                    msg: "not a cluster member (standalone server)".into(),
-                }
-                .encode()
+                Reply::Payload(
+                    Response::Error {
+                        code: ErrCode::BadRequest,
+                        msg: "not a cluster member (standalone server)".into(),
+                    }
+                    .encode(),
+                )
             }
         },
         Request::GetRange { start, len, epoch, trace, deadline_us } => {
-            serve_range(shared, start, len as usize, epoch, trace, deadline_us)
+            serve_range(shared, start, len as usize, epoch, trace, deadline_us, block)
         }
     }
 }
@@ -722,23 +782,28 @@ fn serve_range(
     req_epoch: u64,
     trace: u64,
     deadline_us: u32,
-) -> Vec<u8> {
+    block: &mut RangeBlock,
+) -> Reply {
     if len > shared.cfg.max_range {
         shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-        return Response::Error {
-            code: ErrCode::RangeTooLarge,
-            msg: format!("len {len} exceeds max_range {}", shared.cfg.max_range),
-        }
-        .encode();
+        return Reply::Payload(
+            Response::Error {
+                code: ErrCode::RangeTooLarge,
+                msg: format!("len {len} exceeds max_range {}", shared.cfg.max_range),
+            }
+            .encode(),
+        );
     }
     // wire-controlled start: a range running past u64::MAX is malformed
     let Some(end) = start.checked_add(len as u64) else {
         shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-        return Response::Error {
-            code: ErrCode::BadRequest,
-            msg: format!("range [{start}, +{len}) overflows the position space"),
-        }
-        .encode();
+        return Reply::Payload(
+            Response::Error {
+                code: ErrCode::BadRequest,
+                msg: format!("range [{start}, +{len}) overflows the position space"),
+            }
+            .encode(),
+        );
     };
     // Cluster admission: refuse stale epoch pins and unowned ranges with a
     // typed WrongEpoch frame. The admitted epoch is stamped into the job
@@ -752,52 +817,72 @@ fn serve_range(
             Ok(current) => current,
             Err(current) => {
                 shared.stats.wrong_epoch.fetch_add(1, Ordering::Relaxed);
-                return Response::WrongEpoch { epoch: current }.encode();
+                return Reply::Payload(Response::WrongEpoch { epoch: current }.encode());
             }
         },
     };
     let t0 = Instant::now();
     let worker = route(&*shared.source, start, shared.queues.len());
     let (tx, rx) = mpsc::sync_channel(1);
-    let job = Job { start, len, epoch, trace, deadline_us, enqueued: t0, done: tx };
-    if shared.queues[worker].try_push(job).is_err() {
+    let job = Job {
+        start,
+        len,
+        epoch,
+        trace,
+        deadline_us,
+        enqueued: t0,
+        block: std::mem::take(block),
+        done: tx,
+    };
+    if let Err(job) = shared.queues[worker].try_push(job) {
+        // the bounced job hands the connection's loaned block straight back
+        *block = job.block;
         shared.stats.rejected.fetch_add(1, Ordering::Relaxed);
-        return Response::Error {
-            code: ErrCode::Overloaded,
-            msg: format!("worker {worker} queue full ({} slots)", shared.cfg.queue_cap),
-        }
-        .encode();
+        return Reply::Payload(
+            Response::Error {
+                code: ErrCode::Overloaded,
+                msg: format!("worker {worker} queue full ({} slots)", shared.cfg.queue_cap),
+            }
+            .encode(),
+        );
     }
     match rx.recv() {
-        Ok(Ok(payload)) => {
-            shared.stats.requests.fetch_add(1, Ordering::Relaxed);
-            shared.stats.hist.record(t0.elapsed());
-            // hot-shard accounting: every shard the range overlaps
-            shared
-                .source
-                .for_each_overlapping(start, end, &mut |i| shared.stats.touch_shard(i));
-            payload
-        }
-        Ok(Err(JobError::Deadline { waited })) => {
-            shared.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
-            Response::Error {
-                code: ErrCode::DeadlineExceeded,
-                msg: format!(
-                    "deadline budget of {deadline_us} µs expired after {} µs in queue",
-                    waited.as_micros()
-                ),
+        Ok((returned, res)) => {
+            *block = returned;
+            match res {
+                Ok(timing) => {
+                    shared.stats.requests.fetch_add(1, Ordering::Relaxed);
+                    shared.stats.hist.record(t0.elapsed());
+                    // hot-shard accounting: every shard the range overlaps
+                    shared
+                        .source
+                        .for_each_overlapping(start, end, &mut |i| shared.stats.touch_shard(i));
+                    Reply::Targets { epoch, trace, timing }
+                }
+                Err(JobError::Deadline { waited }) => {
+                    shared.stats.deadline_exceeded.fetch_add(1, Ordering::Relaxed);
+                    Reply::Payload(
+                        Response::Error {
+                            code: ErrCode::DeadlineExceeded,
+                            msg: format!(
+                                "deadline budget of {deadline_us} µs expired after {} µs in queue",
+                                waited.as_micros()
+                            ),
+                        }
+                        .encode(),
+                    )
+                }
+                Err(JobError::Internal(msg)) => {
+                    shared.stats.errors.fetch_add(1, Ordering::Relaxed);
+                    Reply::Payload(Response::Error { code: ErrCode::Internal, msg }.encode())
+                }
             }
-            .encode()
         }
-        Ok(Err(JobError::Internal(msg))) => {
-            shared.stats.errors.fetch_add(1, Ordering::Relaxed);
-            Response::Error { code: ErrCode::Internal, msg }.encode()
-        }
-        // the worker pool is shutting down and dropped the job
-        Err(_) => Response::Error {
-            code: ErrCode::Internal,
-            msg: "server shutting down".into(),
-        }
-        .encode(),
+        // the worker pool is shutting down and dropped the job (and the
+        // loaned block with it — this connection is about to die anyway)
+        Err(_) => Reply::Payload(
+            Response::Error { code: ErrCode::Internal, msg: "server shutting down".into() }
+                .encode(),
+        ),
     }
 }

@@ -65,6 +65,10 @@ pub struct ServeStats {
     /// requests shed with a `DeadlineExceeded` frame because their budget
     /// expired before a worker could answer (docs/RESILIENCE.md §Deadlines)
     pub deadline_exceeded: AtomicU64,
+    /// `Targets` frames scatter-written with `writev` straight from the
+    /// worker's block (the v6 zero-copy send path) — on little-endian hosts
+    /// this should track `requests`; a gap means the copy fallback ran
+    pub responses_vectored: AtomicU64,
     pub hist: LatencyHistogram,
     hot: Vec<AtomicU64>,
     /// `touch_shard` calls whose index fell outside the manifest-sized hot
@@ -83,6 +87,7 @@ impl ServeStats {
             errors: AtomicU64::new(0),
             wrong_epoch: AtomicU64::new(0),
             deadline_exceeded: AtomicU64::new(0),
+            responses_vectored: AtomicU64::new(0),
             hist: LatencyHistogram::default(),
             hot: (0..shard_count).map(|_| AtomicU64::new(0)).collect(),
             hot_overflow: AtomicU64::new(0),
@@ -121,6 +126,7 @@ impl ServeStats {
             hot: self.hot.iter().map(|h| h.load(Ordering::Relaxed)).collect(),
             hot_overflow: self.hot_overflow.load(Ordering::Relaxed),
             deadline_exceeded: self.deadline_exceeded.load(Ordering::Relaxed),
+            responses_vectored: self.responses_vectored.load(Ordering::Relaxed),
         }
     }
 }
@@ -156,6 +162,10 @@ pub struct StatsSnapshot {
     /// requests shed with a typed `DeadlineExceeded` frame because their
     /// v5 deadline budget expired in queue (docs/RESILIENCE.md §Deadlines)
     pub deadline_exceeded: u64,
+    /// `Targets` frames scatter-written with `writev` straight from the
+    /// worker's block instead of a staged payload buffer (v6 zero-copy
+    /// send path; docs/SERVING.md §Vectored writes)
+    pub responses_vectored: u64,
 }
 
 impl StatsSnapshot {

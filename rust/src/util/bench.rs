@@ -88,6 +88,49 @@ pub mod alloc_count {
     }
 }
 
+/// Bytes-copied ledger for the zero-copy hot-path claims — the byte-count
+/// sibling of [`alloc_count`].
+///
+/// A "copy" is a payload-sized move into an intermediate buffer that is
+/// neither the page cache nor the consumer's destination: a heap shard load
+/// (`fs::read` of a shard file), staging a compressed payload before decode,
+/// or assembling a response payload that a vectored write would have
+/// scattered directly from the decoded block. Decoding (unpacking slots into
+/// a `RangeBlock`, decompressing records) is a *transform* into the
+/// destination representation and is deliberately not counted; neither is
+/// the transport's frame buffer on the client side.
+///
+/// Unlike the allocator harness nothing needs installing: the I/O layer
+/// calls [`copy_count::add`] at every counted copy site unconditionally, so
+/// `measure` works in any test or bench. Counts are thread-local; the
+/// process-wide view is the `rskd_io_bytes_copied_total` obs counter bumped
+/// at the same sites (see `cache::mapio`).
+pub mod copy_count {
+    use std::cell::Cell;
+
+    thread_local! {
+        static BYTES: Cell<u64> = const { Cell::new(0) };
+    }
+
+    /// Record `n` payload bytes copied on this thread.
+    #[inline]
+    pub fn add(n: u64) {
+        let _ = BYTES.try_with(|c| c.set(c.get() + n));
+    }
+
+    /// Payload bytes copied on this thread so far.
+    pub fn thread_bytes() -> u64 {
+        BYTES.try_with(|c| c.get()).unwrap_or(0)
+    }
+
+    /// Payload bytes copied on this thread while `f` runs, plus its result.
+    pub fn measure<R>(f: impl FnOnce() -> R) -> (u64, R) {
+        let before = thread_bytes();
+        let r = f();
+        (thread_bytes() - before, r)
+    }
+}
+
 #[derive(Clone, Debug)]
 pub struct BenchStats {
     pub iters: usize,
@@ -260,6 +303,17 @@ mod tests {
         let s = stats_of(samples);
         assert_eq!(s.median, Duration::from_micros(51));
         assert_eq!(s.p10, Duration::from_micros(11));
+    }
+
+    #[test]
+    fn copy_ledger_is_additive_and_scoped_to_the_measurement() {
+        let (n, _) = copy_count::measure(|| {
+            copy_count::add(10);
+            copy_count::add(5);
+        });
+        assert_eq!(n, 15);
+        let (n, _) = copy_count::measure(|| {});
+        assert_eq!(n, 0);
     }
 
     #[test]

@@ -3,7 +3,11 @@
 //! corruption fuzz (truncations, bit flips, lying manifests) that must
 //! surface typed [`CacheError`]s and never silently decode wrong
 //! probabilities, golden v2/v3 byte fixtures under `rust/tests/fixtures/`,
-//! and served bit-exactness over raw vs compressed directories.
+//! and served bit-exactness over raw vs compressed directories. The
+//! corruption sweeps and serve exchange run under both reader I/O modes
+//! ([`IoMode::Mapped`] / [`IoMode::Heap`]) — the mmap'd fast path must
+//! reject torn files with the same typed errors as the heap fallback and
+//! never fault past a short mapping.
 //!
 //! Runs twice in CI: default features, and `--features zstd` to include
 //! [`ShardCodec::DeltaPackedZstd`].
@@ -13,8 +17,8 @@ use std::sync::Arc;
 
 use rskd::cache::format::{read_header, CacheManifest, Shard, FLAG_FULLY_COVERED};
 use rskd::cache::{
-    cache_error_of, CacheError, CacheReader, CacheWriter, ProbCodec, RangeBlock, ShardCodec,
-    SparseTarget,
+    cache_error_of, mapio, CacheError, CacheReader, CacheWriter, IoMode, ProbCodec, RangeBlock,
+    ReadOptions, ShardCodec, SparseTarget,
 };
 use rskd::serve::{Endpoint, ServeClient, ServeConfig, Server};
 use rskd::util::rng::Pcg;
@@ -258,18 +262,30 @@ fn interrupted_coded_build_resumes_byte_identical() {
 // corruption fuzz (satellite: truncations, bit flips, lying manifests)
 // ---------------------------------------------------------------------------
 
+/// The two reader I/O modes the corruption sweeps run under: the mmap'd
+/// fast path and the heap fallback must reject identical corruption with
+/// identical typed errors — and a truncated *mapped* shard must fail the
+/// pre-map length check, never SIGBUS past the end of a short mapping.
+const IO_MODES: [IoMode; 2] = [IoMode::Mapped, IoMode::Heap];
+
 /// Read the whole directory through a fresh reader (the LRU would otherwise
-/// hide on-disk corruption behind a cached shard).
-fn try_read_all(dir: &Path, n: usize) -> std::io::Result<RangeBlock> {
+/// hide on-disk corruption behind a cached shard) in the given I/O mode.
+fn try_read_all_io(dir: &Path, n: usize, io: IoMode) -> std::io::Result<RangeBlock> {
     let mut block = RangeBlock::new();
-    CacheReader::open(dir)?.read_range_into(0, n, &mut block)?;
+    CacheReader::open_with(dir, ReadOptions { io, ..ReadOptions::default() })?
+        .read_range_into(0, n, &mut block)?;
     Ok(block)
+}
+
+fn try_read_all(dir: &Path, n: usize) -> std::io::Result<RangeBlock> {
+    try_read_all_io(dir, n, IoMode::default())
 }
 
 /// Every truncation and every bit flip of a compressed shard file either
 /// fails with a *typed* [`CacheError`] or (never observed, but permitted)
 /// decodes bit-identically — wrong probabilities can never come out of a
-/// torn or flipped v3 shard, and nothing panics.
+/// torn or flipped v3 shard, and nothing panics, on the mapped path and
+/// the heap fallback alike.
 #[test]
 fn corruption_fuzz_compressed_shard_never_misdecodes() {
     let (n, pps) = (12u64, 16usize); // one shard, small enough to sweep
@@ -282,13 +298,17 @@ fn corruption_fuzz_compressed_shard_never_misdecodes() {
 
     let mut verdict = |bytes: &[u8], what: String| {
         std::fs::write(&shard_path, bytes).unwrap();
-        match try_read_all(&dir, n as usize) {
-            Ok(block) => assert_eq!(block, golden, "{what}: silently decoded wrong data"),
-            Err(e) => assert!(
-                cache_error_of(&e).is_some(),
-                "{what}: untyped error `{e}` (kind {:?})",
-                e.kind()
-            ),
+        for io in IO_MODES {
+            match try_read_all_io(&dir, n as usize, io) {
+                Ok(block) => {
+                    assert_eq!(block, golden, "{what} ({io:?}): silently decoded wrong data")
+                }
+                Err(e) => assert!(
+                    cache_error_of(&e).is_some(),
+                    "{what} ({io:?}): untyped error `{e}` (kind {:?})",
+                    e.kind()
+                ),
+            }
         }
     };
     // every truncation point
@@ -338,7 +358,10 @@ fn corruption_fuzz_compressed_shard_never_misdecodes() {
 }
 
 /// Raw v2 shards predate the CRC, but truncations must still surface as
-/// typed errors (never a panic or a short silent decode).
+/// typed errors (never a panic or a short silent decode) — and on the
+/// mapped path the in-place decoder's bounds checks against the fstat'd
+/// mapping length must catch every cut without touching a byte past the
+/// mapping (no SIGBUS).
 #[test]
 fn corruption_fuzz_raw_shard_truncations_are_typed() {
     let (n, pps) = (12u64, 16usize);
@@ -350,11 +373,13 @@ fn corruption_fuzz_raw_shard_truncations_are_typed() {
     let pristine = std::fs::read(&shard_path).unwrap();
     for cut in 0..pristine.len() {
         std::fs::write(&shard_path, &pristine[..cut]).unwrap();
-        let err = try_read_all(&dir, n as usize).unwrap_err();
-        assert!(
-            cache_error_of(&err).is_some() || err.kind() == std::io::ErrorKind::InvalidData,
-            "cut {cut}: untyped error `{err}`"
-        );
+        for io in IO_MODES {
+            let err = try_read_all_io(&dir, n as usize, io).unwrap_err();
+            assert!(
+                cache_error_of(&err).is_some() || err.kind() == std::io::ErrorKind::InvalidData,
+                "cut {cut} ({io:?}): untyped error `{err}`"
+            );
+        }
     }
     let _ = std::fs::remove_dir_all(&dir);
 }
@@ -396,12 +421,28 @@ fn check_fixture_decodes(bytes: &[u8], sc: ShardCodec) {
     assert_eq!(t.probs, exact, "Count{{50}} decode must be exact x/50");
 }
 
+/// An mmap'd image of a fixture file must be byte-identical to a heap load
+/// and decode to the same records — the golden bytes pin the mapped read
+/// path exactly as they pin the buffered one.
+fn check_fixture_mapped(path: &Path, want: &[u8]) {
+    let mapped = mapio::load_file(path, IoMode::Mapped).unwrap();
+    let heap = mapio::load_file(path, IoMode::Heap).unwrap();
+    assert!(mapped.is_mapped() || cfg!(not(unix)));
+    assert_eq!(mapped.as_slice(), want, "mapped image diverged from the golden bytes");
+    assert_eq!(heap.as_slice(), want, "heap image diverged from the golden bytes");
+    let a = Shard::read_from(&mut mapped.as_slice()).unwrap();
+    let b = Shard::read_from(&mut heap.as_slice()).unwrap();
+    assert_eq!(a.records, b.records, "mapped and heap decodes diverged");
+}
+
 /// The v2 fixture pins the legacy wire format: any byte drift in the raw
 /// record stream is a format break for every pre-v3 cache on disk.
 #[test]
 fn golden_v2_fixture_pinned() {
-    let bytes = std::fs::read(fixtures_dir().join("golden_v2_count50.slc")).unwrap();
+    let path = fixtures_dir().join("golden_v2_count50.slc");
+    let bytes = std::fs::read(&path).unwrap();
     check_fixture_decodes(&bytes, ShardCodec::Raw);
+    check_fixture_mapped(&path, &bytes);
     let mut re = Vec::new();
     golden_shard().write_to_flagged(&mut re, FLAG_FULLY_COVERED).unwrap();
     assert_eq!(re, bytes, "v2 encoder drifted from the golden bytes");
@@ -416,8 +457,10 @@ fn golden_v3_fixtures_pinned() {
         ("golden_v3_delta_packed.slc", ShardCodec::DeltaPacked),
         ("golden_v3_delta_packed_lz.slc", ShardCodec::DeltaPackedLz),
     ] {
-        let bytes = std::fs::read(fixtures_dir().join(file)).unwrap();
+        let path = fixtures_dir().join(file);
+        let bytes = std::fs::read(&path).unwrap();
         check_fixture_decodes(&bytes, sc);
+        check_fixture_mapped(&path, &bytes);
         let mut re = Vec::new();
         golden_shard().write_to_coded(&mut re, FLAG_FULLY_COVERED, sc).unwrap();
         assert_eq!(re, bytes, "{sc} encoder drifted from {file}");
@@ -463,10 +506,12 @@ fn golden_zstd_fixture_gated_by_feature() {
 // served bit-exactness (tentpole acceptance: the wire is codec-invisible)
 // ---------------------------------------------------------------------------
 
-/// `Response::encode_targets` / `decode_targets_into` stay bit-exact over
-/// compressed-origin shards: a server over a delta-packed-lz directory
-/// answers every range with exactly the bytes a raw-directory server (and a
-/// direct reader) produces.
+/// The scatter-written `Targets` frames (`Response::write_targets` /
+/// `decode_targets_into`) stay bit-exact over compressed-origin shards AND
+/// over both reader I/O modes: a server over a delta-packed-lz directory, a
+/// server over an mmap'd raw directory, and a server forced onto the heap
+/// fallback all answer every range with exactly the bytes a direct reader
+/// produces.
 #[test]
 fn served_ranges_bit_identical_over_raw_and_compressed_dirs() {
     let (n, pps) = (96u64, 16usize);
@@ -476,9 +521,18 @@ fn served_ranges_bit_identical_over_raw_and_compressed_dirs() {
     build_dir(&lz_dir, ShardCodec::DeltaPackedLz, n, pps);
     let direct = CacheReader::open(&raw_dir).unwrap();
 
+    let open_io = |dir: &Path, io| {
+        CacheReader::open_with(dir, ReadOptions { io, ..ReadOptions::default() }).unwrap()
+    };
     let tcp0 = || Endpoint::Tcp(std::net::SocketAddr::from(([127, 0, 0, 1], 0)));
     let raw_srv = Server::start(
-        Arc::new(CacheReader::open(&raw_dir).unwrap()),
+        Arc::new(open_io(&raw_dir, IoMode::Mapped)),
+        tcp0(),
+        ServeConfig::default(),
+    )
+    .unwrap();
+    let heap_srv = Server::start(
+        Arc::new(open_io(&raw_dir, IoMode::Heap)),
         tcp0(),
         ServeConfig::default(),
     )
@@ -490,17 +544,34 @@ fn served_ranges_bit_identical_over_raw_and_compressed_dirs() {
     )
     .unwrap();
     let mut raw_client = ServeClient::connect(raw_srv.endpoint()).unwrap();
+    let mut heap_client = ServeClient::connect(heap_srv.endpoint()).unwrap();
     let mut lz_client = ServeClient::connect(lz_srv.endpoint()).unwrap();
 
     // shard-interior, shard-spanning, past-the-end, and full-stream ranges
     for (start, len) in [(0u64, 10usize), (12, 40), (90, 16), (0, n as usize)] {
         let from_raw = raw_client.get_range(start, len).unwrap();
+        let from_heap = heap_client.get_range(start, len).unwrap();
         let from_lz = lz_client.get_range(start, len).unwrap();
         let local = direct.get_range(start, len);
         assert_eq!(from_lz, from_raw, "[{start}, +{len}): served bytes must match raw origin");
         assert_eq!(from_lz, local, "[{start}, +{len}): served bytes must match a direct read");
+        assert_eq!(
+            from_heap, from_raw,
+            "[{start}, +{len}): heap-fallback serve must match the mapped serve"
+        );
+    }
+    // the raw server's responses all went out on the writev scatter path
+    // (on little-endian hosts; big-endian takes the copy fallback)
+    if cfg!(target_endian = "little") {
+        let snap = raw_srv.stats_snapshot();
+        assert_eq!(
+            snap.responses_vectored, snap.requests,
+            "every Targets frame must be scatter-written"
+        );
+        assert!(snap.responses_vectored > 0);
     }
     drop(raw_srv);
+    drop(heap_srv);
     drop(lz_srv);
     let _ = std::fs::remove_dir_all(&raw_dir);
     let _ = std::fs::remove_dir_all(&lz_dir);
